@@ -1,0 +1,99 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. Table rows: 16 (paper) vs 8 vs 32-equivalent — footprint impact of
+//!    the coarse range table vs a full per-value table (entropy bound).
+//! 2. Search depth (Listing 1 DEPTH_MAX): 0 (uniform) / 1 / 2 (paper).
+//! 3. Probability-count width: 10 bits (paper) vs the entropy bound.
+//! 4. Substream count: footprint overhead + parallel speedup of sharding.
+
+use apack_repro::apack::encoder::ApackEncoder;
+use apack_repro::apack::tablegen::{generate_table, TableGenConfig, TensorKind};
+use apack_repro::apack::Histogram;
+use apack_repro::coordinator::{Coordinator, PartitionPolicy};
+use apack_repro::models::distributions::ValueProfile;
+use apack_repro::simulator::memsys::{even_substreams, simulate, MemSysConfig};
+use apack_repro::util::bench::Bench;
+
+fn bits_with_cfg(hist: &Histogram, values: &[u32], cfg: &TableGenConfig) -> f64 {
+    let t = generate_table(hist, TensorKind::Activations, cfg).unwrap();
+    let (_, sb, _, ob) = ApackEncoder::encode_all(&t, values).unwrap();
+    (sb + ob) as f64 / values.len() as f64
+}
+
+fn main() {
+    let n = 1 << 20;
+    let profile = ValueProfile::ReluActivation { sparsity: 0.55, q: 0.92, noise_floor: 0.02 };
+    let values = profile.sample(8, n, 7);
+    let hist = Histogram::from_values(8, &values);
+    println!("tensor: {n} values, exact entropy {:.3} b/v (ideal AC bound)\n", hist.entropy());
+
+    // --- Ablation: search depth.
+    for depth in [0u32, 1, 2, 3] {
+        let cfg = TableGenConfig { depth_max: depth, ..TableGenConfig::default() };
+        let bpv = if depth == 0 {
+            // depth 0 = uniform table, no search.
+            let t = apack_repro::apack::SymbolTable::uniform(8);
+            let (_, sb, _, ob) = ApackEncoder::encode_all(&t, &values).unwrap();
+            (sb + ob) as f64 / values.len() as f64
+        } else {
+            bits_with_cfg(&hist, &values, &cfg)
+        };
+        println!("search depth {depth}: {bpv:.3} bits/value");
+    }
+
+    // --- Ablation: search threshold.
+    for thr in [0.999f64, 0.99, 0.9] {
+        let cfg = TableGenConfig { threshold: thr, ..TableGenConfig::default() };
+        println!("threshold {thr}: {:.3} bits/value", bits_with_cfg(&hist, &values, &cfg));
+    }
+
+    // --- Ablation: quantization width (paper: "APack naturally rewards
+    // quantization" — non-uniformity persists at 4/6/8 bits).
+    println!();
+    for bits in [4u32, 6, 8] {
+        let qp = ValueProfile::TwoSidedGeometric { q: 0.8, noise_floor: 0.01 };
+        let qv = qp.sample(bits, 1 << 18, 11);
+        let qh = Histogram::from_values(bits, &qv);
+        let t = generate_table(&qh, TensorKind::Weights, &TableGenConfig::for_bits(bits)).unwrap();
+        let (_, sb, _, ob) = ApackEncoder::encode_all(&t, &qv).unwrap();
+        let bpv = (sb + ob) as f64 / qv.len() as f64;
+        println!(
+            "quantized to {bits}b: {bpv:.3} bits/value (ratio {:.2}x, entropy {:.3})",
+            bits as f64 / bpv,
+            qh.entropy()
+        );
+    }
+
+    // --- Ablation: engine replication vs effective bandwidth (the §V-B
+    // sizing trade, via the transaction-level memsys model).
+    println!();
+    for engines in [8usize, 16, 32, 64, 128] {
+        let cfg = MemSysConfig { engines, ..MemSysConfig::paper() };
+        let r = simulate(&cfg, &even_substreams(16_000_000, 4.0, engines));
+        println!(
+            "{engines:>4} engines: {:.1} values/cycle, channel util {:.2}, engine util {:.2}",
+            r.throughput(),
+            r.channel_utilization,
+            r.engine_utilization
+        );
+    }
+    println!();
+
+    // --- Ablation: substream count (footprint + wall time).
+    let table =
+        generate_table(&hist, TensorKind::Activations, &TableGenConfig::default()).unwrap();
+    let bench = Bench::quick();
+    for streams in [1u32, 4, 16, 64, 256] {
+        let mut coord =
+            Coordinator::new(PartitionPolicy { substreams: streams, min_per_stream: 1 });
+        let sc = coord.compress_with_table(table.clone(), &values).unwrap();
+        let s = bench.run(&format!("decode {streams} substreams"), || {
+            coord.decompress(&sc).unwrap()
+        });
+        println!(
+            "{}   footprint {:.4} bits/value",
+            s.report(Some(n as u64)),
+            sc.footprint_bits() as f64 / n as f64
+        );
+    }
+}

@@ -1,0 +1,58 @@
+//! Hot-path throughput bench: software encoder/decoder values/s and GB/s,
+//! single-stream and through the parallel coordinator — the §Perf numbers
+//! in EXPERIMENTS.md come from this target.
+
+use apack_repro::apack::bitstream::BitReader;
+use apack_repro::apack::decoder::{ApackDecoder, ResolveMode};
+use apack_repro::apack::encoder::ApackEncoder;
+use apack_repro::apack::tablegen::{table_for_tensor, TensorKind};
+use apack_repro::coordinator::{Coordinator, PartitionPolicy};
+use apack_repro::models::distributions::ValueProfile;
+use apack_repro::util::bench::Bench;
+
+fn main() {
+    let n = 4_000_000usize;
+    let values = ValueProfile::ReluActivation { sparsity: 0.5, q: 0.93, noise_floor: 0.01 }
+        .sample(8, n, 42);
+    let table = table_for_tensor(8, &values, TensorKind::Activations).unwrap();
+    let bench = Bench::default();
+
+    // Single-stream encode.
+    let s = bench.run("encode single-stream (4M values)", || {
+        ApackEncoder::encode_all(&table, &values).unwrap()
+    });
+    println!("{}", s.report(Some(n as u64)));
+
+    // Single-stream decode, both resolver models.
+    let (sym, sb, ofs, ob) = ApackEncoder::encode_all(&table, &values).unwrap();
+    for mode in [ResolveMode::Division, ResolveMode::RowScan] {
+        let s = bench.run(&format!("decode single-stream {mode:?}"), || {
+            let mut dec =
+                ApackDecoder::new(&table, BitReader::new(&sym, sb)).unwrap().with_mode(mode);
+            let mut ofs_r = BitReader::new(&ofs, ob);
+            let mut acc = 0u64;
+            for _ in 0..n {
+                acc += dec.decode_value(&mut ofs_r).unwrap() as u64;
+            }
+            acc
+        });
+        println!("{}", s.report(Some(n as u64)));
+    }
+
+    // Parallel coordinator (64 substreams).
+    let mut coord = Coordinator::new(PartitionPolicy::default());
+    let s = bench.run("coordinator encode (64 substreams)", || {
+        coord.compress_with_table(table.clone(), &values).unwrap()
+    });
+    println!("{}", s.report(Some(n as u64)));
+
+    let sc = coord.compress_with_table(table.clone(), &values).unwrap();
+    let s = bench.run("coordinator decode (64 substreams)", || coord.decompress(&sc).unwrap());
+    println!("{}", s.report(Some(n as u64)));
+
+    // Table generation cost (the offline profiling step).
+    let s = bench.run("table generation (Listing 1 search)", || {
+        table_for_tensor(8, &values[..65536], TensorKind::Activations).unwrap()
+    });
+    println!("{}", s.report(None));
+}

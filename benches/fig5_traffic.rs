@@ -1,0 +1,26 @@
+//! Bench + regeneration of paper Fig 5 (normalized off-chip traffic,
+//! activations and weights, all five schemes over the 24-model zoo).
+//!
+//! The timed section runs a 4-model subset (the full study is run once for
+//! the rendered figure — it is the same code path, just 6× the models).
+
+use apack_repro::eval::study::Scheme;
+use apack_repro::eval::{fig5, CompressionStudy};
+use apack_repro::models::zoo::model_by_name;
+use apack_repro::util::bench::Bench;
+
+fn main() {
+    let subset: Vec<_> = ["resnet18", "mobilenet_v1", "q8bert", "alexnet_eyeriss"]
+        .iter()
+        .map(|n| model_by_name(n).unwrap())
+        .collect();
+    let bench = Bench::quick();
+    let s = bench.run("fig5: 4-model x 5-scheme traffic study", || {
+        CompressionStudy::run(&subset, &Scheme::ALL).results.len()
+    });
+    println!("{}", s.report(None));
+
+    println!("\nrunning the full 24-model study once for the figure...");
+    let study = CompressionStudy::full();
+    println!("{}", fig5::render(&study));
+}

@@ -1,0 +1,12 @@
+//! Bench + regeneration of paper Fig 6 (normalized off-chip energy).
+
+use apack_repro::eval::{fig6, CompressionStudy};
+use apack_repro::util::bench::Bench;
+
+fn main() {
+    let study = CompressionStudy::full();
+    let bench = Bench::quick();
+    let s = bench.run("fig6: off-chip energy model over zoo", || fig6::fig6_rows(&study).len());
+    println!("{}", s.report(None));
+    println!("{}", fig6::render(&study));
+}

@@ -1,0 +1,15 @@
+//! Bench + regeneration of paper Fig 7 (overall speedup on the
+//! TensorCore accelerator; paper: APack 1.44x, ShapeShifter 1.30x).
+
+use apack_repro::eval::{fig7, CompressionStudy};
+use apack_repro::util::bench::Bench;
+
+fn main() {
+    let study = CompressionStudy::full();
+    let bench = Bench::quick();
+    let s = bench.run("fig7: accelerator simulation over perf-study models", || {
+        fig7::fig7_rows(&study).len()
+    });
+    println!("{}", s.report(None));
+    println!("{}", fig7::render(&study));
+}

@@ -1,0 +1,15 @@
+//! Bench + regeneration of paper Fig 8 (overall energy efficiency;
+//! paper: APack 1.37x, ShapeShifter 1.23x).
+
+use apack_repro::eval::{fig8, CompressionStudy};
+use apack_repro::util::bench::Bench;
+
+fn main() {
+    let study = CompressionStudy::full();
+    let bench = Bench::quick();
+    let s = bench.run("fig8: energy-efficiency model over perf-study models", || {
+        fig8::fig8_rows(&study).len()
+    });
+    println!("{}", s.report(None));
+    println!("{}", fig8::render(&study));
+}

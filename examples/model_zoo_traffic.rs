@@ -1,0 +1,60 @@
+//! Domain example: per-layer traffic anatomy of one model under APack —
+//! where the bytes go, which layers compress best, and why (the analysis
+//! behind the paper's §VII-A discussion of quantizer families).
+//!
+//! ```sh
+//! cargo run --release --example model_zoo_traffic [model]
+//! ```
+
+use apack_repro::apack::tablegen::{generate_table, TableGenConfig, TensorKind};
+use apack_repro::apack::{Histogram, encoder::ApackEncoder};
+use apack_repro::eval::{EVAL_SEED, PROFILE_SAMPLES, SAMPLE_CAP};
+use apack_repro::models::trace::ModelTrace;
+use apack_repro::models::zoo::model_by_name;
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "alexnet_eyeriss".to_string());
+    let cfg = model_by_name(&name).ok_or_else(|| anyhow::anyhow!("unknown model {name}"))?;
+    let trace = ModelTrace::synthesize(&cfg, SAMPLE_CAP, PROFILE_SAMPLES, EVAL_SEED);
+
+    println!(
+        "{} ({:?}, {}b)\n{:<6} {:>12} {:>9} {:>9} {:>10} {:>9}",
+        cfg.name, cfg.family, cfg.bits, "layer", "w elems", "w b/v", "w spars", "a elems", "a b/v"
+    );
+    let mut w_raw = 0u64;
+    let mut w_bits = 0.0f64;
+    for (i, l) in trace.layers.iter().enumerate() {
+        let wh = Histogram::from_values(cfg.bits, &l.weights);
+        let wt = generate_table(&wh, TensorKind::Weights, &TableGenConfig::for_bits(cfg.bits))?;
+        let (_, sb, _, ob) = ApackEncoder::encode_all(&wt, &l.weights)?;
+        let w_bpv = (sb + ob) as f64 / l.weights.len() as f64;
+        w_raw += l.weight_elems * cfg.bits as u64;
+        w_bits += w_bpv * l.weight_elems as f64;
+
+        let (a_bpv, a_elems) = if l.activations.is_empty() {
+            (f64::NAN, 0)
+        } else {
+            let ah = Histogram::from_values(cfg.bits, &l.act_profile_samples);
+            let at =
+                generate_table(&ah, TensorKind::Activations, &TableGenConfig::for_bits(cfg.bits))?;
+            let (_, sb, _, ob) = ApackEncoder::encode_all(&at, &l.activations)?;
+            ((sb + ob) as f64 / l.activations.len() as f64, l.act_elems)
+        };
+        println!(
+            "{:<6} {:>12} {:>9.3} {:>9.3} {:>10} {:>9.3}",
+            i,
+            l.weight_elems,
+            w_bpv,
+            wh.sparsity(),
+            a_elems,
+            a_bpv
+        );
+    }
+    println!(
+        "\nweights total: {:.3} bits/value vs {} raw -> normalized {:.3}",
+        w_bits / (w_raw / cfg.bits as u64) as f64,
+        cfg.bits,
+        w_bits / w_raw as f64
+    );
+    Ok(())
+}

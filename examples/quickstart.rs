@@ -1,0 +1,40 @@
+//! Quickstart: compress and decompress one tensor with APack.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use apack_repro::apack::tablegen::TensorKind;
+use apack_repro::coordinator::{Coordinator, PartitionPolicy};
+use apack_repro::models::distributions::ValueProfile;
+
+fn main() -> anyhow::Result<()> {
+    // A synthetic post-ReLU int8 activation tensor: 55% zeros plus a
+    // decaying tail — the kind of stream APack sees at the memory
+    // controller (paper Fig 2).
+    let values = ValueProfile::ReluActivation { sparsity: 0.55, q: 0.92, noise_floor: 0.01 }
+        .sample(8, 1 << 20, 1);
+
+    // Profile → generate the 16-row table (paper §VI) → encode into the
+    // symbol + offset dual stream (paper §IV), sharded over 64 substreams
+    // like the 64-engine hardware deployment (paper §V-B).
+    let mut coord = Coordinator::new(PartitionPolicy::default());
+    let compressed = coord.compress(8, &values, TensorKind::Activations, None)?;
+
+    println!("generated table:\n{}", compressed.table.render());
+    println!(
+        "{} values: {} -> {} bits  ({:.3} bits/value, ratio {:.2}x, {} shards)",
+        compressed.n_values,
+        compressed.n_values * 8,
+        compressed.footprint_bits(),
+        compressed.footprint_bits() as f64 / compressed.n_values as f64,
+        compressed.compression_ratio(),
+        compressed.shards.len(),
+    );
+
+    // Lossless roundtrip.
+    let decoded = coord.decompress(&compressed)?;
+    assert_eq!(decoded, values);
+    println!("roundtrip OK — lossless");
+    Ok(())
+}

@@ -1,0 +1,75 @@
+"""AOT lowering: JAX/Pallas model -> HLO **text** + weights + manifest.
+
+HLO text (NOT ``lowered.compiler_ir('hlo')``/``.serialize()``) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which the rust side's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Outputs (into --out-dir, default ../artifacts):
+  model.hlo.txt   the lowered module (input + weights as parameters)
+  <layer>_w.bin   int8 weight bytes, C order
+  <layer>_m.bin   int32 multiplier bytes, little-endian
+  manifest.json   argument order/shapes for the rust runtime
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import ModelSpec, example_args, forward, init_weights
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--seed", type=int, default=2022)
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    spec = ModelSpec()
+    weights = init_weights(spec, args.seed)
+
+    fn = functools.partial(forward, spec)
+    lowered = jax.jit(fn).lower(*example_args(spec, weights))
+    hlo = to_hlo_text(lowered)
+    with open(os.path.join(out_dir, "model.hlo.txt"), "w") as f:
+        f.write(hlo)
+
+    manifest = {
+        "hlo": "model.hlo.txt",
+        "input_shape": list(spec.input_shape),
+        "bits": 8,
+        "weights": [],
+        "outputs": ["logits"] + [f"act_{l.name}" for l in spec.layers[:-1]],
+    }
+    for l in spec.layers:
+        w, m = weights[l.name]
+        wf, mf = f"{l.name}_w.bin", f"{l.name}_m.bin"
+        w.tofile(os.path.join(out_dir, wf))
+        m.astype("<i4").tofile(os.path.join(out_dir, mf))
+        manifest["weights"].append({"name": f"{l.name}_w", "shape": list(w.shape), "file": wf})
+        manifest["weights"].append(
+            {"name": f"{l.name}_m", "shape": list(m.shape), "file": mf, "dtype": "int32"}
+        )
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(hlo)} chars of HLO + {len(manifest['weights'])} weight blobs to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""L1 Pallas kernel: tiled int8 x int8 -> int32 matmul with fused
+integer requantization — the compute hot-spot of the quantized CNN that
+generates APack's traffic (the role tensor cores play in the paper's
+accelerator, Table III).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's substrate
+is a GPU-style tensor-core array; on the TPU-flavored Pallas side we tile
+for the MXU instead — (bm, bn) output tiles staged through VMEM via
+BlockSpec, int32 accumulation via ``preferred_element_type``, and the
+requantize (multiply + rounding shift + clamp) fused before the store so
+the int32 accumulator never leaves VMEM.
+
+``interpret=True`` is mandatory here: real TPU lowering emits a Mosaic
+custom-call that the CPU PJRT client cannot execute. Numerics are validated
+against ``ref.py`` by ``python/tests/test_qmatmul.py`` (hypothesis sweep).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qmatmul_kernel(x_ref, w_ref, m_ref, out_ref, *, shift: int, relu: bool):
+    """One (bm, bn) output tile: full-K matmul + fused requantize.
+
+    x_ref: (bm, K) int8 tile, w_ref: (K, bn) int8 tile, m_ref: (1, bn)
+    int32 per-output-channel multipliers. Requant: y = clamp(
+    round_half_up(acc * m / 2**shift), -128, 127).
+    """
+    acc = jax.lax.dot_general(
+        x_ref[...],
+        w_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    scaled = acc * m_ref[0, :][None, :]
+    # Rounding right shift (round half up), in pure integer arithmetic.
+    rounded = (scaled + (1 << (shift - 1))) >> shift
+    if relu:
+        rounded = jnp.maximum(rounded, 0)
+    out_ref[...] = jnp.clip(rounded, -128, 127).astype(jnp.int8)
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@partial(jax.jit, static_argnames=("shift", "relu", "bm", "bn"))
+def qmatmul(x, w, m, *, shift: int = 16, relu: bool = False, bm: int = 128, bn: int = 128):
+    """Quantized matmul: ``requant(x @ w, m, shift)``.
+
+    Args:
+      x: (M, K) int8 activations.
+      w: (K, N) int8 weights.
+      m: (N,) int32 per-channel requant multipliers.
+      shift: rounding right-shift applied after the multiply.
+      relu: fuse a ReLU before the clamp.
+      bm/bn: output tile sizes (MXU-shaped 128x128 by default; shrunk to
+        the padded problem size for small layers).
+
+    Returns: (M, N) int8.
+    """
+    assert x.dtype == jnp.int8 and w.dtype == jnp.int8, (x.dtype, w.dtype)
+    assert m.dtype == jnp.int32
+    assert x.shape[1] == w.shape[0]
+    assert w.shape[1] == m.shape[0]
+    assert 1 <= shift < 31
+    M, K = x.shape
+    N = w.shape[1]
+    bm = min(bm, max(8, M))
+    bn = min(bn, max(8, N))
+    xp = _pad_to(x, bm, 0)
+    wp = _pad_to(w, bn, 1)
+    mp = _pad_to(m.reshape(1, -1), bn, 1)
+    Mp, Np = xp.shape[0], wp.shape[1]
+    out = pl.pallas_call(
+        partial(_qmatmul_kernel, shift=shift, relu=relu),
+        grid=(Mp // bm, Np // bn),
+        in_specs=[
+            pl.BlockSpec((bm, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((K, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.int8),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xp, wp, mp)
+    return out[:M, :N]

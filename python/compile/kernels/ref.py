@@ -1,0 +1,47 @@
+"""Pure-jnp correctness oracles for the Pallas kernels and the quantized
+CNN building blocks. These define the semantics; the Pallas path must match
+them exactly (integer arithmetic, no tolerance)."""
+
+import jax.numpy as jnp
+
+
+def requant_ref(acc, m, shift, relu=False):
+    """Requantize an int32 accumulator: per-channel multiply, rounding
+    right shift (round half up), optional ReLU, clamp to int8."""
+    scaled = acc.astype(jnp.int32) * m.astype(jnp.int32)
+    rounded = (scaled + (1 << (shift - 1))) >> shift
+    if relu:
+        rounded = jnp.maximum(rounded, 0)
+    return jnp.clip(rounded, -128, 127).astype(jnp.int8)
+
+
+def qmatmul_ref(x, w, m, shift=16, relu=False):
+    """Reference quantized matmul (int8 x int8 -> int8)."""
+    acc = jnp.matmul(x.astype(jnp.int32), w.astype(jnp.int32))
+    return requant_ref(acc, m[None, :], shift, relu)
+
+
+def im2col_ref(x, kh, kw, stride=1, pad=0):
+    """NCHW -> (N*HO*WO, C*kh*kw) patch matrix, zero padding."""
+    n, c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (w + 2 * pad - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            patch = xp[:, :, i : i + stride * ho : stride, j : j + stride * wo : stride]
+            cols.append(patch.reshape(n, c, ho * wo))
+    # (kh*kw, N, C, HO*WO) -> (N, HO*WO, C, kh*kw)
+    stacked = jnp.stack(cols, axis=0)
+    stacked = stacked.transpose(1, 3, 2, 0)
+    return stacked.reshape(n * ho * wo, c * kh * kw), (n, ho, wo)
+
+
+def qconv2d_ref(x, w, m, stride=1, pad=0, shift=16, relu=False):
+    """Reference quantized conv (NCHW, OIHW) via im2col + qmatmul_ref."""
+    cout, cin, kh, kw = w.shape
+    cols, (n, ho, wo) = im2col_ref(x, kh, kw, stride, pad)
+    wm = w.transpose(1, 2, 3, 0).reshape(cin * kh * kw, cout)
+    y = qmatmul_ref(cols, wm, m, shift, relu)  # (N*HO*WO, Cout)
+    return y.reshape(n, ho, wo, cout).transpose(0, 3, 1, 2)

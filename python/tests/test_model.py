@@ -1,0 +1,77 @@
+"""L2 correctness: quantized CNN forward pass — shapes, determinism,
+activation health, and conv-vs-reference equivalence."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels.ref import qconv2d_ref
+from compile.model import ConvSpec, ModelSpec, forward, init_weights
+
+
+def _packed(spec, weights):
+    out = []
+    for l in spec.layers:
+        w, m = weights[l.name]
+        out += [jnp.asarray(w, jnp.int32), jnp.asarray(m, jnp.int32)]
+    return out
+
+
+def _run(seed=5):
+    spec = ModelSpec()
+    weights = init_weights(spec)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(-64, 64, spec.input_shape), jnp.int32)
+    return spec, weights, x, forward(spec, x, *_packed(spec, weights))
+
+
+def test_output_shapes():
+    spec, _, _, outs = _run()
+    assert outs[0].shape == (spec.batch, 10)
+    assert outs[1].shape == (spec.batch, 8, 16, 16)
+    assert outs[2].shape == (spec.batch, 16, 8, 8)
+    assert outs[3].shape == (spec.batch, 16, 8, 8)
+    assert outs[4].shape == (spec.batch, 32)
+    assert len(outs) == 1 + len(spec.layers) - 1
+
+
+def test_values_stay_in_int8_range():
+    _, _, _, outs = _run()
+    for o in outs:
+        a = np.asarray(o)
+        assert a.min() >= -128 and a.max() <= 127
+
+
+def test_deterministic():
+    _, _, _, o1 = _run(7)
+    _, _, _, o2 = _run(7)
+    for a, b in zip(o1, o2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_logits_are_informative():
+    # Calibrated multipliers must not saturate the network to zero.
+    _, _, _, outs = _run()
+    logits = np.asarray(outs[0])
+    assert np.abs(logits).max() > 5
+    assert len(np.unique(logits)) > 4
+
+
+def test_relu_layers_are_sparse_and_nonnegative():
+    spec, _, _, outs = _run()
+    for o, l in zip(outs[1:], spec.layers[:-1]):
+        a = np.asarray(o)
+        assert (a >= 0).all(), f"{l.name} has negatives despite ReLU"
+        assert 0.05 < (a == 0).mean() < 0.95, f"{l.name} sparsity degenerate"
+
+
+def test_first_conv_matches_reference():
+    spec, weights, x, outs = _run()
+    l = spec.layers[0]
+    assert isinstance(l, ConvSpec)
+    w, m = weights[l.name]
+    want = qconv2d_ref(
+        jnp.asarray(x, jnp.int32).astype(jnp.int8),
+        jnp.asarray(w), jnp.asarray(m),
+        stride=l.stride, pad=l.pad, shift=spec.shift, relu=l.relu,
+    )
+    np.testing.assert_array_equal(np.asarray(outs[1]), np.asarray(want, np.int32))

@@ -1,0 +1,82 @@
+"""L1 correctness: the Pallas qmatmul kernel must match the pure-jnp
+oracle *exactly* (integer arithmetic) across shapes, tiles, shifts and
+value distributions — the hypothesis sweep required by DESIGN.md inv. 7."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.qmatmul import qmatmul
+from compile.kernels.ref import qmatmul_ref
+
+
+def _check(x, w, m, shift, relu, bm=128, bn=128):
+    got = np.asarray(qmatmul(jnp.asarray(x), jnp.asarray(w), jnp.asarray(m),
+                             shift=shift, relu=relu, bm=bm, bn=bn))
+    want = np.asarray(qmatmul_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(m),
+                                  shift=shift, relu=relu))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m_dim=st.integers(1, 70),
+    k_dim=st.integers(1, 48),
+    n_dim=st.integers(1, 40),
+    shift=st.integers(4, 24),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_reference_across_shapes(m_dim, k_dim, n_dim, shift, relu, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-128, 128, (m_dim, k_dim)).astype(np.int8)
+    w = rng.integers(-128, 128, (k_dim, n_dim)).astype(np.int8)
+    mult = rng.integers(1, 1 << 12, (n_dim,)).astype(np.int32)
+    _check(x, w, mult, shift, relu)
+
+
+@settings(max_examples=10, deadline=None)
+@given(bm=st.sampled_from([8, 16, 128]), bn=st.sampled_from([8, 32, 128]),
+       seed=st.integers(0, 1000))
+def test_tile_size_invariance(bm, bn, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-128, 128, (50, 17)).astype(np.int8)
+    w = rng.integers(-128, 128, (17, 23)).astype(np.int8)
+    mult = rng.integers(1, 4096, (23,)).astype(np.int32)
+    _check(x, w, mult, 12, True, bm=bm, bn=bn)
+
+
+def test_extreme_values_saturate_correctly():
+    x = np.full((4, 8), -128, np.int8)
+    w = np.full((8, 4), -128, np.int8)
+    mult = np.full((4,), 1 << 10, np.int32)
+    _check(x, w, mult, 8, False)   # massive positive accumulator -> clamp 127
+    w2 = np.full((8, 4), 127, np.int8)
+    _check(x, w2, mult, 8, False)  # massive negative -> clamp -128
+
+
+def test_relu_zeroes_negatives():
+    rng = np.random.default_rng(3)
+    x = rng.integers(-128, 128, (16, 16)).astype(np.int8)
+    w = rng.integers(-128, 128, (16, 16)).astype(np.int8)
+    mult = np.full((16,), 600, np.int32)
+    out = np.asarray(qmatmul(jnp.asarray(x), jnp.asarray(w), jnp.asarray(mult),
+                             shift=16, relu=True))
+    assert (out >= 0).all()
+
+
+def test_rounding_is_half_up():
+    # acc*m = 1<<(shift-1) exactly -> rounds to 1, not 0.
+    x = np.array([[1]], np.int8)
+    w = np.array([[1]], np.int8)
+    shift = 8
+    mult = np.array([1 << (shift - 1)], np.int32)
+    out = np.asarray(qmatmul(jnp.asarray(x), jnp.asarray(w), jnp.asarray(mult), shift=shift))
+    assert out[0, 0] == 1
+
+
+def test_rejects_bad_dtypes():
+    with pytest.raises(AssertionError):
+        qmatmul(jnp.zeros((4, 4), jnp.int32), jnp.zeros((4, 4), jnp.int8),
+                jnp.ones((4,), jnp.int32))

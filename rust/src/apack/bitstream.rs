@@ -1,0 +1,263 @@
+//! MSB-first bit stream writer/reader.
+//!
+//! Both APack streams (arithmetically coded symbols and verbatim offsets)
+//! are bit-granular and written/read most-significant-bit first, matching
+//! the hardware's shift-register orientation (paper §V: "most significant
+//! bit first"). A 64-bit accumulator keeps the hot path branch-light.
+
+/// Append-only MSB-first bit writer backed by a `Vec<u8>`.
+#[derive(Debug, Default, Clone)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Accumulator; bits enter at the low end and are flushed from the top.
+    acc: u64,
+    /// Number of valid bits currently in `acc` (0..=63).
+    n: u32,
+}
+
+impl BitWriter {
+    /// Create an empty writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Create an empty writer with capacity for `bits` bits.
+    pub fn with_capacity_bits(bits: usize) -> Self {
+        Self { buf: Vec::with_capacity(bits / 8 + 8), acc: 0, n: 0 }
+    }
+
+    /// Append a single bit (`true` = 1).
+    #[inline]
+    pub fn push_bit(&mut self, bit: bool) {
+        self.push_bits(bit as u64, 1);
+    }
+
+    /// Append the low `count` bits of `bits`, MSB of that field first.
+    /// `count` must be ≤ 57 so the accumulator never overflows before the
+    /// flush check.
+    #[inline]
+    pub fn push_bits(&mut self, bits: u64, count: u32) {
+        debug_assert!(count <= 57);
+        debug_assert!(count == 64 || bits < (1u64 << count));
+        self.acc = (self.acc << count) | bits;
+        self.n += count;
+        if self.n >= 8 {
+            // Flush all whole bytes in one extend (perf: avoids per-byte
+            // Vec::push — EXPERIMENTS.md §Perf iteration 6).
+            let k = (self.n / 8) as usize;
+            let shifted =
+                if self.n == 64 { self.acc } else { self.acc << (64 - self.n) };
+            self.buf.extend_from_slice(&shifted.to_be_bytes()[..k]);
+            self.n -= (k as u32) * 8;
+        }
+    }
+
+    /// Append `count` copies of `bit` (used for underflow-bit bursts).
+    #[inline]
+    pub fn push_repeated(&mut self, bit: bool, mut count: u32) {
+        let pattern = if bit { u64::MAX >> 16 } else { 0 }; // 48 ones
+        while count > 48 {
+            self.push_bits(pattern, 48);
+            count -= 48;
+        }
+        if count > 0 {
+            self.push_bits(if bit { (1u64 << count) - 1 } else { 0 }, count);
+        }
+    }
+
+    /// Total number of bits written so far.
+    #[inline]
+    pub fn len_bits(&self) -> usize {
+        self.buf.len() * 8 + self.n as usize
+    }
+
+    /// Flush the accumulator (zero-padding the final byte) and return the
+    /// byte buffer together with the exact bit length.
+    pub fn finish(mut self) -> (Vec<u8>, usize) {
+        let bits = self.len_bits();
+        if self.n > 0 {
+            let pad = 8 - self.n;
+            self.acc <<= pad;
+            self.buf.push(self.acc as u8);
+            self.n = 0;
+        }
+        (self.buf, bits)
+    }
+}
+
+/// MSB-first bit reader over a byte slice.
+///
+/// Reads past the end of the underlying data return `0` bits. This is
+/// deliberate: the arithmetic-coder flush (see [`super::encoder`]) emits a
+/// disambiguating prefix such that *any* continuation decodes the final
+/// symbol correctly, so the decoder may freely over-read its 16-bit CODE
+/// window near the end of the stream — exactly as the hardware, whose CODE
+/// shift register keeps shifting whatever is on the bus once the stream is
+/// exhausted.
+#[derive(Debug, Clone)]
+pub struct BitReader<'a> {
+    data: &'a [u8],
+    /// Next bit index.
+    pos: usize,
+    /// Total addressable bits.
+    len_bits: usize,
+    acc: u64,
+    /// Valid bits in `acc`.
+    n: u32,
+    byte_pos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    /// Reader over `len_bits` bits of `data`.
+    pub fn new(data: &'a [u8], len_bits: usize) -> Self {
+        debug_assert!(len_bits <= data.len() * 8);
+        Self { data, pos: 0, len_bits, acc: 0, n: 0, byte_pos: 0 }
+    }
+
+    /// Number of real (non-padding) bits remaining.
+    #[inline]
+    pub fn remaining_bits(&self) -> usize {
+        self.len_bits.saturating_sub(self.pos)
+    }
+
+    /// Current bit position.
+    #[inline]
+    pub fn position(&self) -> usize {
+        self.pos
+    }
+
+    #[inline]
+    fn refill(&mut self) {
+        // Fast path: pull several bytes with one unaligned load.
+        if self.byte_pos + 8 <= self.data.len() {
+            let want = ((64 - self.n) / 8) as usize;
+            if want > 0 {
+                let chunk = u64::from_be_bytes(
+                    self.data[self.byte_pos..self.byte_pos + 8].try_into().unwrap(),
+                );
+                self.acc = if want == 8 {
+                    chunk
+                } else {
+                    (self.acc << (want * 8)) | (chunk >> (64 - want * 8))
+                };
+                self.byte_pos += want;
+                self.n += (want as u32) * 8;
+            }
+            return;
+        }
+        while self.n <= 56 && self.byte_pos < self.data.len() {
+            self.acc = (self.acc << 8) | self.data[self.byte_pos] as u64;
+            self.byte_pos += 1;
+            self.n += 8;
+        }
+    }
+
+    /// Read a single bit; returns 0 past the end of the stream.
+    #[inline]
+    pub fn read_bit(&mut self) -> u32 {
+        self.read_bits(1) as u32
+    }
+
+    /// Read `count` (≤ 57) bits MSB-first; bits past the end read as 0.
+    #[inline]
+    pub fn read_bits(&mut self, count: u32) -> u64 {
+        debug_assert!(count <= 57);
+        if count == 0 {
+            return 0;
+        }
+        if self.n < count {
+            self.refill();
+        }
+        let avail = self.len_bits.saturating_sub(self.pos).min(self.n as usize) as u32;
+        self.pos += count as usize;
+        if avail >= count {
+            self.n -= count;
+            (self.acc >> self.n) & ((1u64 << count) - 1).min(u64::MAX)
+        } else {
+            // Partially or fully past the end: take what is real, pad zeros.
+            let real = if avail > 0 {
+                self.n -= avail;
+                (self.acc >> self.n) & ((1u64 << avail) - 1)
+            } else {
+                0
+            };
+            real << (count - avail)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_single_bits() {
+        let mut w = BitWriter::new();
+        let pattern = [true, false, true, true, false, false, true, false, true, true, true];
+        for &b in &pattern {
+            w.push_bit(b);
+        }
+        let (bytes, bits) = w.finish();
+        assert_eq!(bits, pattern.len());
+        let mut r = BitReader::new(&bytes, bits);
+        for &b in &pattern {
+            assert_eq!(r.read_bit(), b as u32);
+        }
+    }
+
+    #[test]
+    fn roundtrip_multi_bit_fields() {
+        let mut w = BitWriter::new();
+        let fields: &[(u64, u32)] =
+            &[(0x3, 2), (0x1ff, 9), (0, 1), (0xdeadbeef, 32), (0x15, 5), (1, 1)];
+        for &(v, c) in fields {
+            w.push_bits(v, c);
+        }
+        let (bytes, bits) = w.finish();
+        let mut r = BitReader::new(&bytes, bits);
+        for &(v, c) in fields {
+            assert_eq!(r.read_bits(c), v, "field ({v:#x},{c})");
+        }
+    }
+
+    #[test]
+    fn over_read_returns_zero_padding() {
+        let mut w = BitWriter::new();
+        w.push_bits(0b101, 3);
+        let (bytes, bits) = w.finish();
+        let mut r = BitReader::new(&bytes, bits);
+        // 3 real bits then zero padding: reading 8 gives 1010_0000 >> ... =
+        // 0b101 followed by five 0s.
+        assert_eq!(r.read_bits(8), 0b1010_0000);
+        assert_eq!(r.read_bits(16), 0);
+        assert_eq!(r.remaining_bits(), 0);
+    }
+
+    #[test]
+    fn repeated_bits() {
+        let mut w = BitWriter::new();
+        w.push_repeated(true, 100);
+        w.push_repeated(false, 3);
+        w.push_bit(true);
+        let (bytes, bits) = w.finish();
+        assert_eq!(bits, 104);
+        let mut r = BitReader::new(&bytes, bits);
+        for _ in 0..100 {
+            assert_eq!(r.read_bit(), 1);
+        }
+        for _ in 0..3 {
+            assert_eq!(r.read_bit(), 0);
+        }
+        assert_eq!(r.read_bit(), 1);
+    }
+
+    #[test]
+    fn len_bits_tracks_writes() {
+        let mut w = BitWriter::new();
+        assert_eq!(w.len_bits(), 0);
+        w.push_bits(0x7, 3);
+        assert_eq!(w.len_bits(), 3);
+        w.push_bits(0xffff, 16);
+        assert_eq!(w.len_bits(), 19);
+    }
+}

@@ -1,0 +1,195 @@
+//! The on-DRAM representation of a compressed tensor (paper §IV):
+//! metadata (value count + the range/probability tables, quoted at 298
+//! bytes) plus the two independent streams — arithmetically coded symbols
+//! and verbatim offsets. Both streams are read/written sequentially, which
+//! is what makes the scheme DRAM-friendly.
+
+
+use super::bitstream::BitReader;
+use super::decoder::ApackDecoder;
+use super::encoder::ApackEncoder;
+use super::table::SymbolTable;
+use super::tablegen::{generate_table, TableGenConfig, TensorKind};
+use crate::error::{Error, Result};
+
+/// Metadata footprint charged per tensor in footprint accounting (paper
+/// §IV: range table + probability table + symbol count = 298 bytes).
+pub const META_BYTES: usize = 298;
+
+/// A compressed tensor: the symbol/offset streams plus enough metadata to
+/// reverse them.
+#[derive(Debug, Clone)]
+pub struct Container {
+    /// The per-tensor table (part of the metadata block in hardware).
+    pub table: SymbolTable,
+    /// Number of encoded values (terminates decoding, paper §IV).
+    pub n_values: u64,
+    /// Arithmetically coded symbol stream.
+    pub symbols: Vec<u8>,
+    /// Exact bit length of `symbols`.
+    pub symbol_bits: u64,
+    /// Verbatim offset stream.
+    pub offsets: Vec<u8>,
+    /// Exact bit length of `offsets`.
+    pub offset_bits: u64,
+}
+
+impl Container {
+    /// Total compressed footprint in **bits**, including the 298-byte
+    /// metadata block the paper charges per tensor.
+    pub fn footprint_bits(&self) -> u64 {
+        self.symbol_bits + self.offset_bits + (META_BYTES as u64) * 8
+    }
+
+    /// Compression ratio versus storing `n_values` at `bits` each.
+    pub fn compression_ratio(&self) -> f64 {
+        let raw = self.n_values * self.table.bits() as u64;
+        raw as f64 / self.footprint_bits() as f64
+    }
+
+    /// Decode the full tensor.
+    pub fn decode(&self) -> Result<Vec<u32>> {
+        let sym = BitReader::new(&self.symbols, self.symbol_bits as usize);
+        let mut ofs = BitReader::new(&self.offsets, self.offset_bits as usize);
+        ApackDecoder::decode_all(&self.table, sym, &mut ofs, self.n_values as usize)
+    }
+
+    /// Serialize to a flat byte buffer (little-endian framing). Layout:
+    /// `magic u32 | bits u8 | kind u8 | n_values u64 | table | sym_bits u64
+    /// | ofs_bits u64 | symbols | offsets`.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64 + self.symbols.len() + self.offsets.len());
+        out.extend_from_slice(&0x4150_434Bu32.to_le_bytes()); // "APCK"
+        out.push(self.table.bits() as u8);
+        out.push(0);
+        out.extend_from_slice(&self.n_values.to_le_bytes());
+        for r in self.table.rows() {
+            out.extend_from_slice(&r.v_min.to_le_bytes());
+            out.extend_from_slice(&r.hi_cnt.to_le_bytes());
+        }
+        out.extend_from_slice(&self.symbol_bits.to_le_bytes());
+        out.extend_from_slice(&self.offset_bits.to_le_bytes());
+        out.extend_from_slice(&self.symbols);
+        out.extend_from_slice(&self.offsets);
+        out
+    }
+
+    /// Parse [`Self::to_bytes`] output.
+    pub fn from_bytes(data: &[u8]) -> Result<Self> {
+        let err = |m: &str| Error::BadContainer(m.to_string());
+        if data.len() < 4 + 2 + 8 {
+            return Err(err("truncated header"));
+        }
+        let magic = u32::from_le_bytes(data[0..4].try_into().unwrap());
+        if magic != 0x4150_434B {
+            return Err(err("bad magic"));
+        }
+        let bits = data[4] as u32;
+        let mut pos = 6;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            if *pos + n > data.len() {
+                return Err(Error::BadContainer("truncated body".into()));
+            }
+            let s = &data[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        let n_values = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+        let mut v_mins = [0u32; super::NUM_ROWS];
+        let mut hi_cnts = [0u16; super::NUM_ROWS];
+        for i in 0..super::NUM_ROWS {
+            v_mins[i] = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+            hi_cnts[i] = u16::from_le_bytes(take(&mut pos, 2)?.try_into().unwrap());
+        }
+        let table = SymbolTable::new(bits, v_mins, hi_cnts)?;
+        let symbol_bits = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+        let offset_bits = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+        let sym_len = (symbol_bits as usize).div_ceil(8);
+        let ofs_len = (offset_bits as usize).div_ceil(8);
+        let symbols = take(&mut pos, sym_len)?.to_vec();
+        let offsets = take(&mut pos, ofs_len)?.to_vec();
+        Ok(Self { table, n_values, symbols, symbol_bits, offsets, offset_bits })
+    }
+}
+
+/// One-shot compression: profile the tensor, generate its table (paper §VI)
+/// and encode.
+pub fn compress(bits: u32, values: &[u32], kind: TensorKind) -> Result<Container> {
+    let hist = super::histogram::Histogram::from_values(bits, values);
+    let table = generate_table(&hist, kind, &TableGenConfig::for_bits(bits))?;
+    compress_with_table(table, values)
+}
+
+/// Compress with a pre-generated table (e.g. an activation table built from
+/// profiling samples, applied to fresh inference activations).
+pub fn compress_with_table(table: SymbolTable, values: &[u32]) -> Result<Container> {
+    let (symbols, symbol_bits, offsets, offset_bits) = ApackEncoder::encode_all(&table, values)?;
+    Ok(Container {
+        table,
+        n_values: values.len() as u64,
+        symbols,
+        symbol_bits: symbol_bits as u64,
+        offsets,
+        offset_bits: offset_bits as u64,
+    })
+}
+
+/// One-shot decompression.
+pub fn decompress(c: &Container) -> Result<Vec<u32>> {
+    c.decode()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tensor() -> Vec<u32> {
+        let mut v = Vec::new();
+        let mut s = 7u64;
+        for _ in 0..10_000 {
+            s = s.wrapping_mul(2862933555777941757).wrapping_add(3037000493);
+            let r = (s >> 33) as u32;
+            v.push(if r % 3 == 0 { 0 } else { r % 256 });
+        }
+        v
+    }
+
+    #[test]
+    fn compress_decompress_roundtrip() {
+        let values = tensor();
+        let c = compress(8, &values, TensorKind::Activations).unwrap();
+        assert_eq!(c.decode().unwrap(), values);
+        assert!(c.compression_ratio() > 1.0, "ratio {}", c.compression_ratio());
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let values = tensor();
+        let c = compress(8, &values, TensorKind::Weights).unwrap();
+        let bytes = c.to_bytes();
+        let c2 = Container::from_bytes(&bytes).unwrap();
+        assert_eq!(c2.n_values, c.n_values);
+        assert_eq!(c2.symbol_bits, c.symbol_bits);
+        assert_eq!(c2.decode().unwrap(), values);
+    }
+
+    #[test]
+    fn from_bytes_rejects_garbage() {
+        assert!(Container::from_bytes(&[1, 2, 3]).is_err());
+        let values = tensor();
+        let c = compress(8, &values, TensorKind::Weights).unwrap();
+        let mut bytes = c.to_bytes();
+        bytes[0] ^= 0xFF; // magic
+        assert!(Container::from_bytes(&bytes).is_err());
+        let mut short = c.to_bytes();
+        short.truncate(short.len() - 10);
+        assert!(Container::from_bytes(&short).is_err());
+    }
+
+    #[test]
+    fn footprint_includes_metadata() {
+        let values = vec![0u32; 16];
+        let c = compress(8, &values, TensorKind::Weights).unwrap();
+        assert!(c.footprint_bits() >= (META_BYTES as u64) * 8);
+    }
+}

@@ -1,0 +1,269 @@
+//! The APack decoder (paper §V-A, Fig 4).
+//!
+//! Mirrors [`super::encoder`]: 16-bit `HI`/`LO` windows plus a 16-bit `CODE`
+//! register that slides over the encoded symbol stream. Each step:
+//!
+//! 1. "PCNT Table" (Fig 4b): find the row whose *scaled* probability-count
+//!    range contains `CODE`. The hardware compares `CODE` against every
+//!    row's scaled boundary in parallel; we model that row scan exactly, and
+//!    additionally provide a division-based fast path used on the software
+//!    hot path — the two are proven equivalent (`debug_assert` + property
+//!    tests, DESIGN.md invariant 3).
+//! 2. "SYMBOL Gen" (Fig 4c): emit `v_min[row] + offset`, consuming
+//!    `OL[row]` bits from the offset stream.
+//! 3. "HI/LO/CODE Adj" (Fig 4d): renormalize, consuming fresh symbol-stream
+//!    bits into `CODE` and applying the underflow transform (`CODE ^=
+//!    0x4000`) in lockstep with the encoder.
+
+use super::bitstream::BitReader;
+use super::table::{SymbolTable, PROB_BITS};
+use super::NUM_ROWS;
+use crate::error::{Error, Result};
+
+const TOP_BIT: u16 = 0x8000;
+const SECOND_BIT: u16 = 0x4000;
+
+/// Which symbol-resolution circuit to model. Both produce identical results
+/// on every valid stream; `RowScan` mirrors the 16-comparator hardware and
+/// is also the faster software path (a 16-row multiply/compare scan beats
+/// one integer division per value — EXPERIMENTS.md §Perf iteration 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ResolveMode {
+    /// Parallel comparison of CODE against each row's scaled boundaries, as
+    /// the hardware PCNT Table block does.
+    #[default]
+    RowScan,
+    /// Invert the scaling with one division, then a cumulative-count lookup.
+    Division,
+}
+
+/// Streaming APack decoder for one (sub)stream.
+#[derive(Debug, Clone)]
+pub struct ApackDecoder<'t, 'a> {
+    table: &'t SymbolTable,
+    cum: [u16; NUM_ROWS + 1],
+    hi: u16,
+    lo: u16,
+    code: u16,
+    sym_in: BitReader<'a>,
+    mode: ResolveMode,
+    /// Values decoded so far (for error reporting).
+    count: usize,
+}
+
+impl<'t, 'a> ApackDecoder<'t, 'a> {
+    /// New decoder: primes the 16-bit `CODE` register from the symbol
+    /// stream (reading past a short stream pads with zeros, as the
+    /// hardware's shift register would latch an idle bus).
+    pub fn new(table: &'t SymbolTable, mut sym_in: BitReader<'a>) -> Result<Self> {
+        let mut cum = [0u16; NUM_ROWS + 1];
+        for i in 0..NUM_ROWS {
+            cum[i + 1] = table.rows()[i].hi_cnt;
+        }
+        let code = sym_in.read_bits(16) as u16;
+        Ok(Self {
+            table,
+            cum,
+            hi: 0xFFFF,
+            lo: 0x0000,
+            code,
+            sym_in,
+            mode: ResolveMode::default(),
+            count: 0,
+        })
+    }
+
+    /// Select the symbol-resolution model (see [`ResolveMode`]).
+    pub fn with_mode(mut self, mode: ResolveMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Values decoded so far.
+    #[inline]
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Hardware model: scan rows in order, pick the first whose scaled
+    /// upper boundary exceeds CODE. Returns `(row, scaled_lo, scaled_hi)`
+    /// so the narrowing step reuses the boundaries instead of recomputing
+    /// them. Consecutive rows share a boundary, so the scan needs one
+    /// multiply per row (empty rows fall out naturally: their scaled span
+    /// is empty). Matches the parallel-comparator PCNT block bit-for-bit.
+    #[inline]
+    fn resolve_row_scan(&self, range: u32) -> Option<(usize, u32, u32)> {
+        let d = (self.code - self.lo) as u32;
+        let mut s_lo = 0u32; // cum[0] == 0 scales to 0
+        for i in 0..NUM_ROWS {
+            let s_hi = (range * self.cum[i + 1] as u32) >> PROB_BITS;
+            if d < s_hi {
+                return Some((i, s_lo, s_hi));
+            }
+            s_lo = s_hi;
+        }
+        None
+    }
+
+    /// Alternative path: invert the floor-scaling with one division.
+    /// `k = floor(((d+1) << PROB_BITS - 1) / range)` is the largest count
+    /// `c` with `floor(range*c >> PROB_BITS) <= d`; the matching row is the
+    /// one whose cumulative range contains `k`.
+    #[inline]
+    fn resolve_division(&self, range: u32) -> Option<(usize, u32, u32)> {
+        let d = (self.code - self.lo) as u32;
+        // (d+1) ≤ 2^16, so the scaled dividend fits u32 — a 32-bit divide
+        // is markedly cheaper than 64-bit (EXPERIMENTS.md §Perf iter. 3).
+        let k = (((d + 1) << PROB_BITS) - 1) / range;
+        if k >= self.cum[NUM_ROWS] as u32 {
+            return None;
+        }
+        let k = k as u16;
+        // 16 entries: linear scan is faster than binary search here.
+        let mut idx = 0usize;
+        for i in 0..NUM_ROWS {
+            idx = if k >= self.cum[i] { i } else { idx };
+        }
+        // k >= cum[idx] and k < cum[idx+1] implies the row is non-empty.
+        let s_lo = (range * self.cum[idx] as u32) >> PROB_BITS;
+        let s_hi = (range * self.cum[idx + 1] as u32) >> PROB_BITS;
+        Some((idx, s_lo, s_hi))
+    }
+
+    /// Decode one value, consuming offset bits from `ofs_in`.
+    pub fn decode_value(&mut self, ofs_in: &mut BitReader<'_>) -> Result<u32> {
+        let range = (self.hi - self.lo) as u32 + 1;
+        let (idx, s_lo, s_hi) = match self.mode {
+            ResolveMode::RowScan => self.resolve_row_scan(range),
+            ResolveMode::Division => {
+                let r = self.resolve_division(range);
+                debug_assert_eq!(r, self.resolve_row_scan(range), "resolver divergence");
+                r
+            }
+        }
+        .ok_or(Error::CorruptStream { position: self.count })?;
+
+        // SYMBOL Gen: reconstruct the value.
+        let row = &self.table.rows()[idx];
+        let offset = if row.ol > 0 { ofs_in.read_bits(row.ol) as u32 } else { 0 };
+        let value = row.v_min + offset;
+        if value > row.v_max {
+            // Offset escaped the row's span: corrupt offset stream. (The
+            // encoder never produces this; the hardware would simply emit a
+            // wrong value — the software model is stricter.)
+            return Err(Error::CorruptStream { position: self.count });
+        }
+
+        // HI/LO/CODE Adj: narrow (reusing the resolver's scaled bounds)
+        // then renormalize in lockstep with the encoder.
+        let t_hi = self.lo as u32 + s_hi - 1;
+        let t_lo = self.lo as u32 + s_lo;
+        let mut hi = t_hi as u16;
+        let mut lo = t_lo as u16;
+        let mut code = self.code;
+        // Renormalize in lockstep with the encoder. Common-prefix bits are
+        // discarded in one batch per pass (mirroring the encoder's LD1
+        // batching); underflow steps stay per-bit. Bit-identical to the
+        // one-bit loop (EXPERIMENTS.md §Perf iter. 3).
+        loop {
+            let diff = hi ^ lo;
+            if diff & TOP_BIT == 0 {
+                let k = (diff as u32 | 1).leading_zeros() - 16;
+                lo <<= k;
+                hi = (hi << k) | ((1u32 << k) as u16).wrapping_sub(1);
+                code = (code << k) | self.sym_in.read_bits(k) as u16;
+            } else if lo & SECOND_BIT != 0 && hi & SECOND_BIT == 0 {
+                // Underflow: remove the second MSB from all three.
+                code = ((code ^ SECOND_BIT) << 1) | self.sym_in.read_bit() as u16;
+                lo = (lo & (SECOND_BIT - 1)) << 1;
+                hi = ((hi | SECOND_BIT) << 1) | 1;
+            } else {
+                break;
+            }
+        }
+        self.hi = hi;
+        self.lo = lo;
+        self.code = code;
+        self.count += 1;
+        Ok(value)
+    }
+
+    /// Decode exactly `n` values into a vector.
+    pub fn decode_all(
+        table: &SymbolTable,
+        sym: BitReader<'a>,
+        ofs: &mut BitReader<'_>,
+        n: usize,
+    ) -> Result<Vec<u32>> {
+        let mut dec = ApackDecoder::new(table, sym)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(dec.decode_value(ofs)?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::encoder::ApackEncoder;
+    use super::*;
+
+    fn encode(table: &SymbolTable, values: &[u32]) -> (Vec<u8>, usize, Vec<u8>, usize) {
+        ApackEncoder::encode_all(table, values).unwrap()
+    }
+
+    #[test]
+    fn row_scan_and_division_agree_on_long_stream() {
+        let t = SymbolTable::uniform(8);
+        let values: Vec<u32> = (0..20_000u32).map(|i| (i * 2654435761) >> 24).collect();
+        let (sym, sb, ofs, ob) = encode(&t, &values);
+
+        for mode in [ResolveMode::RowScan, ResolveMode::Division] {
+            let mut dec =
+                ApackDecoder::new(&t, BitReader::new(&sym, sb)).unwrap().with_mode(mode);
+            let mut ofs_r = BitReader::new(&ofs, ob);
+            for (i, &v) in values.iter().enumerate() {
+                assert_eq!(dec.decode_value(&mut ofs_r).unwrap(), v, "mode {mode:?} idx {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_symbol_stream_detected_or_mismatches() {
+        let t = SymbolTable::uniform(8);
+        let values: Vec<u32> = (0..512u32).map(|i| i % 256).collect();
+        let (mut sym, sb, ofs, ob) = encode(&t, &values);
+        // Flip a bit early in the symbol stream.
+        sym[1] ^= 0x40;
+        let mut dec = ApackDecoder::new(&t, BitReader::new(&sym, sb)).unwrap();
+        let mut ofs_r = BitReader::new(&ofs, ob);
+        let mut diverged = false;
+        for &v in &values {
+            match dec.decode_value(&mut ofs_r) {
+                Ok(got) if got != v => {
+                    diverged = true;
+                    break;
+                }
+                Err(_) => {
+                    diverged = true;
+                    break;
+                }
+                Ok(_) => {}
+            }
+        }
+        assert!(diverged, "bit flip must corrupt the decode");
+    }
+
+    #[test]
+    fn decode_all_helper() {
+        let t = SymbolTable::uniform(8);
+        let values: Vec<u32> = (0..100).map(|i| (i * 37) % 256).collect();
+        let (sym, sb, ofs, ob) = encode(&t, &values);
+        let mut ofs_r = BitReader::new(&ofs, ob);
+        let got =
+            ApackDecoder::decode_all(&t, BitReader::new(&sym, sb), &mut ofs_r, values.len())
+                .unwrap();
+        assert_eq!(got, values);
+    }
+}

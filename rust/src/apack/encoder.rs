@@ -1,0 +1,345 @@
+//! The APack encoder (paper §V, Fig 3).
+//!
+//! A software model of the hardware encoder that is *bit-exact* with respect
+//! to the architecture the paper describes:
+//!
+//! - two 16-bit registers `HI`/`LO` hold a sliding window into the
+//!   arbitrary-precision range boundaries (`HI` conceptually suffixed by
+//!   infinite 1s, `LO` by infinite 0s);
+//! - probability counts are 10-bit; the range scaling is a 16×10 multiply
+//!   whose low [`PROB_BITS`] bits are discarded (the hardware omits the
+//!   partial products that would produce them);
+//! - a 5-bit `UBC` register counts pending underflow bits, detected by the
+//!   `01PREFIX` block (LO of form `01…`, HI of form `10…`);
+//! - common-prefix bits of `HI`/`LO` are shifted out into the encoded symbol
+//!   stream each step ("Common Prefix Detection" + "Final HI and LO
+//!   generation").
+//!
+//! The renormalization is the classic Witten–Neal–Cleary scheme (the paper
+//! cites Nelson's implementation as its basis), executed here one bit per
+//! loop iteration; the hardware performs all iterations of one value in a
+//! single combinatorial step, which produces the identical bit stream.
+
+use super::bitstream::BitWriter;
+use super::table::{SymbolTable, PROB_BITS};
+use super::NUM_ROWS;
+use crate::error::{Error, Result};
+
+const TOP_BIT: u16 = 0x8000;
+const SECOND_BIT: u16 = 0x4000;
+
+/// Streaming APack encoder for one (sub)stream.
+///
+/// Feed values with [`encode_value`](Self::encode_value) (symbol bits go to
+/// the symbol writer, raw offset bits to the offset writer), then call
+/// [`finish`](Self::finish) to flush the disambiguating tail.
+#[derive(Debug, Clone)]
+pub struct ApackEncoder<'t> {
+    table: &'t SymbolTable,
+    /// Cumulative count boundaries: `cum[i]..cum[i+1]` is row i's range.
+    cum: [u16; NUM_ROWS + 1],
+    /// Direct value→row map — the software fast path for the hardware's
+    /// 16-comparator SYMBOL Lookup (perf: replaces a 16-iteration scan per
+    /// value with one load; see EXPERIMENTS.md §Perf iteration 1).
+    row_lut: Vec<u8>,
+    hi: u16,
+    lo: u16,
+    /// Underflow bit counter (hardware: 5-bit UBC register).
+    ubc: u32,
+    /// Values encoded so far.
+    count: u64,
+}
+
+impl<'t> ApackEncoder<'t> {
+    /// New encoder over a validated table. `HI`/`LO` initialize to
+    /// `0xFFFF`/`0x0000` (paper §V).
+    pub fn new(table: &'t SymbolTable) -> Self {
+        let mut cum = [0u16; NUM_ROWS + 1];
+        for i in 0..NUM_ROWS {
+            cum[i + 1] = table.rows()[i].hi_cnt;
+        }
+        // One byte per representable value: 256 B for 8-bit tables, 64 KiB
+        // for 16-bit — built once per tensor, amortized over the stream.
+        let n_values = table.value_max() as usize + 1;
+        let mut row_lut = vec![0u8; n_values];
+        let mut row = 0usize;
+        for (v, slot) in row_lut.iter_mut().enumerate() {
+            while row + 1 < NUM_ROWS && table.rows()[row + 1].v_min as usize <= v {
+                row += 1;
+            }
+            *slot = row as u8;
+        }
+        Self { table, cum, row_lut, hi: 0xFFFF, lo: 0x0000, ubc: 0, count: 0 }
+    }
+
+    /// Number of values encoded so far.
+    #[inline]
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Current HI register (exposed for hardware cross-checks).
+    #[inline]
+    pub fn hi(&self) -> u16 {
+        self.hi
+    }
+
+    /// Current LO register.
+    #[inline]
+    pub fn lo(&self) -> u16 {
+        self.lo
+    }
+
+    /// Pending underflow bit count (UBC register).
+    #[inline]
+    pub fn ubc(&self) -> u32 {
+        self.ubc
+    }
+
+    /// Encode one value: emits its offset verbatim and narrows the
+    /// arithmetic-coder range by its symbol's probability-count range.
+    ///
+    /// Errors if the value is out of range for the table's bit width or if
+    /// it maps to a row with a zero probability count (which the table
+    /// generator only produces for values that never occur — attempting to
+    /// encode one is a caller bug or a table/tensor mismatch).
+    pub fn encode_value(
+        &mut self,
+        v: u32,
+        sym_out: &mut BitWriter,
+        ofs_out: &mut BitWriter,
+    ) -> Result<()> {
+        // SYMBOL Lookup (Fig 3b): row index + offset emission. The LUT is
+        // exact for in-range values; out-of-range errors like lookup().
+        if v >= self.row_lut.len() as u32 {
+            return Err(Error::ValueOutOfRange { value: v, bits: self.table.bits() });
+        }
+        let idx = self.row_lut[v as usize] as usize;
+        debug_assert_eq!(idx, self.table.lookup(v).unwrap());
+        let row = &self.table.rows()[idx];
+        let (cum_lo, cum_hi) = (self.cum[idx], self.cum[idx + 1]);
+        if cum_hi == cum_lo {
+            return Err(Error::ValueNotCovered(v));
+        }
+        if row.ol > 0 {
+            ofs_out.push_bits((v - row.v_min) as u64, row.ol);
+        }
+
+        // PCNT Table scaling (Fig 3c): 16×10 multiply, drop low 10 bits.
+        let range = (self.hi - self.lo) as u32 + 1;
+        let t_hi = self.lo as u32 + ((range * cum_hi as u32) >> PROB_BITS) - 1;
+        let t_lo = self.lo as u32 + ((range * cum_lo as u32) >> PROB_BITS);
+        debug_assert!(t_hi <= 0xFFFF && t_lo <= t_hi);
+        let mut hi = t_hi as u16;
+        let mut lo = t_lo as u16;
+
+        // HI/LO/CODE Gen (Fig 3d): shift out the common prefix, absorb
+        // underflow prefixes into UBC. The common-prefix bits are emitted
+        // in one batch per pass (leading-zeros of HI^LO), exactly what the
+        // hardware's LD1 block does in a single step — bit-identical to
+        // the one-bit-per-iteration loop (EXPERIMENTS.md §Perf iter. 2).
+        loop {
+            let diff = hi ^ lo;
+            if diff & TOP_BIT == 0 {
+                // k common MSBs (1 ≤ k ≤ 16): emit them all at once.
+                let k = (diff as u32 | 1).leading_zeros() - 16;
+                let bits = (hi >> (16 - k)) as u64;
+                if self.ubc > 0 {
+                    // Pending underflow bits follow the FIRST output bit.
+                    let first = bits >> (k - 1);
+                    sym_out.push_bit(first == 1);
+                    sym_out.push_repeated(first == 0, self.ubc);
+                    self.ubc = 0;
+                    if k > 1 {
+                        sym_out.push_bits(bits & ((1 << (k - 1)) - 1), k - 1);
+                    }
+                } else {
+                    sym_out.push_bits(bits, k);
+                }
+                lo <<= k;
+                hi = (hi << k) | ((1u32 << k) as u16).wrapping_sub(1); // suffix of 1s
+            } else if lo & SECOND_BIT != 0 && hi & SECOND_BIT == 0 {
+                // 01PREFIX: LO = 01…, HI = 10… — converging around 1/2.
+                self.ubc += 1;
+                lo = (lo & (SECOND_BIT - 1)) << 1;
+                hi = ((hi | SECOND_BIT) << 1) | 1;
+            } else {
+                break;
+            }
+        }
+        self.hi = hi;
+        self.lo = lo;
+        self.count += 1;
+        Ok(())
+    }
+
+    /// Flush the coder state: writes the second-MSB of `LO` followed by the
+    /// pending underflow bits plus one, inverted (Nelson's flush). Any
+    /// continuation of the stream after these bits — including the zero
+    /// padding a [`super::bitstream::BitReader`] synthesizes — decodes the
+    /// final symbol correctly.
+    pub fn finish(mut self, sym_out: &mut BitWriter) -> u64 {
+        let bit = self.lo & SECOND_BIT != 0;
+        sym_out.push_bit(bit);
+        sym_out.push_repeated(!bit, self.ubc + 1);
+        self.ubc = 0;
+        self.count
+    }
+
+    /// Encode a full tensor into fresh symbol/offset streams. Returns
+    /// `(symbol_bytes, symbol_bits, offset_bytes, offset_bits)`.
+    pub fn encode_all(
+        table: &SymbolTable,
+        values: &[u32],
+    ) -> Result<(Vec<u8>, usize, Vec<u8>, usize)> {
+        let mut enc = ApackEncoder::new(table);
+        let mut sym = BitWriter::with_capacity_bits(values.len() * 4);
+        let mut ofs = BitWriter::with_capacity_bits(values.len() * 4);
+        for &v in values {
+            enc.encode_value(v, &mut sym, &mut ofs)?;
+        }
+        enc.finish(&mut sym);
+        let (sym_bytes, sym_bits) = sym.finish();
+        let (ofs_bytes, ofs_bits) = ofs.finish();
+        Ok((sym_bytes, sym_bits, ofs_bytes, ofs_bits))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::bitstream::BitReader;
+    use super::super::decoder::ApackDecoder;
+    use super::*;
+    use crate::apack::table::PROB_MAX;
+
+    fn roundtrip(table: &SymbolTable, values: &[u32]) {
+        let (sym, sym_bits, ofs, ofs_bits) = ApackEncoder::encode_all(table, values).unwrap();
+        let mut dec =
+            ApackDecoder::new(table, BitReader::new(&sym, sym_bits)).expect("decoder init");
+        let mut ofs_r = BitReader::new(&ofs, ofs_bits);
+        for (i, &v) in values.iter().enumerate() {
+            let got = dec.decode_value(&mut ofs_r).unwrap_or_else(|e| panic!("at {i}: {e}"));
+            assert_eq!(got, v, "value {i}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_uniform_table_all_byte_values() {
+        let t = SymbolTable::uniform(8);
+        let values: Vec<u32> = (0u32..=255).collect();
+        roundtrip(&t, &values);
+    }
+
+    #[test]
+    fn roundtrip_single_value() {
+        let t = SymbolTable::uniform(8);
+        roundtrip(&t, &[42]);
+    }
+
+    #[test]
+    fn roundtrip_repeated_extremes() {
+        let t = SymbolTable::uniform(8);
+        let mut v = vec![0u32; 1000];
+        v.extend(std::iter::repeat(255u32).take(1000));
+        roundtrip(&t, &v);
+    }
+
+    #[test]
+    fn roundtrip_paper_table_on_matching_distribution() {
+        // Values drawn only from non-zero-probability rows of Table I.
+        let t = crate::apack::table::tests::paper_table1();
+        let mut values = Vec::new();
+        for rep in 0..500u32 {
+            values.push(rep % 4); // row 0
+            values.push(0xFC + (rep % 4)); // row 15
+            if rep % 8 == 0 {
+                values.push(0x04 + (rep % 4)); // row 1
+                values.push(0xF4 + (rep % 8)); // row 14
+            }
+            if rep % 100 == 0 {
+                values.push(0x10 + (rep % 0x30)); // row 3 (p=0.002)
+                values.push(0xD0 + (rep % 0x24)); // row 13
+            }
+        }
+        roundtrip(&t, &values);
+    }
+
+    #[test]
+    fn zero_probability_row_rejected() {
+        let t = crate::apack::table::tests::paper_table1();
+        let mut enc = ApackEncoder::new(&t);
+        let mut s = BitWriter::new();
+        let mut o = BitWriter::new();
+        // 0x55 lies in row 5 which has an empty count range in Table I.
+        assert!(matches!(
+            enc.encode_value(0x55, &mut s, &mut o),
+            Err(Error::ValueNotCovered(0x55))
+        ));
+    }
+
+    #[test]
+    fn skewed_table_compresses_skewed_data() {
+        // A table putting ~94% of the count space on [0,3] should encode a
+        // stream of zeros in well under 1 bit/value.
+        let mut v_mins = [0u32; NUM_ROWS];
+        let mut cnts = [0u16; NUM_ROWS];
+        for i in 0..NUM_ROWS {
+            v_mins[i] = if i == 0 { 0 } else { (i as u32) * 17 };
+            cnts[i] = if i == 0 { 960 } else { 960 + ((PROB_MAX - 960) / 15) * i as u16 };
+        }
+        cnts[NUM_ROWS - 1] = PROB_MAX;
+        let t = SymbolTable::new(8, v_mins, cnts).unwrap();
+        let values = vec![0u32; 10_000];
+        let (_, sym_bits, _, ofs_bits) = ApackEncoder::encode_all(&t, &values).unwrap();
+        // Entropy bound: -log2(960/1023) ≈ 0.092 b/sym + 5b offset... but
+        // offset is ceil(log2(17)) = 5 bits for row 0 here.
+        assert!(
+            (sym_bits as f64) < 0.12 * values.len() as f64,
+            "symbol stream too large: {sym_bits} bits for {} values",
+            values.len()
+        );
+        assert_eq!(ofs_bits, values.len() * 5);
+        roundtrip(&t, &values);
+    }
+
+    #[test]
+    fn underflow_stress() {
+        // A two-row near-50/50 split keeps HI/LO converging around 0.5,
+        // exercising the UBC path heavily.
+        let mut v_mins = [0u32; NUM_ROWS];
+        let mut cnts = [0u16; NUM_ROWS];
+        for i in 0..NUM_ROWS {
+            v_mins[i] = i as u32; // rows 0..14 cover single values, row 15 the rest
+            cnts[i] = if i == 0 { 512 } else { 512 + i as u16 };
+        }
+        cnts[NUM_ROWS - 1] = PROB_MAX;
+        let t = SymbolTable::new(8, v_mins, cnts).unwrap();
+        // Alternate row 0 and row 15 symbols.
+        let mut values = Vec::new();
+        for i in 0..5000 {
+            values.push(if i % 2 == 0 { 0 } else { 200 });
+        }
+        roundtrip(&t, &values);
+    }
+
+    #[test]
+    fn four_bit_and_sixteen_bit_widths() {
+        let t4 = SymbolTable::uniform(4);
+        let v4: Vec<u32> = (0..16).cycle().take(500).collect();
+        roundtrip(&t4, &v4);
+
+        let t16 = SymbolTable::uniform(16);
+        let v16: Vec<u32> = (0..65536u32).step_by(97).cycle().take(2000).collect();
+        roundtrip(&t16, &v16);
+    }
+
+    #[test]
+    fn empty_stream_roundtrip() {
+        let t = SymbolTable::uniform(8);
+        let (sym, sym_bits, _, _) = ApackEncoder::encode_all(&t, &[]).unwrap();
+        // Flush always emits at least 2 bits.
+        assert!(sym_bits >= 2);
+        let dec = ApackDecoder::new(&t, BitReader::new(&sym, sym_bits));
+        assert!(dec.is_ok());
+    }
+}

@@ -1,0 +1,180 @@
+//! Value histograms and cumulative distributions.
+//!
+//! The table generator (paper §VI) and the footprint estimator both consume
+//! a per-tensor histogram `h(i)` = number of occurrences of value `i`. The
+//! CDF view regenerates paper Fig 2.
+
+
+/// Histogram over a `bits`-wide unsigned value space.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Histogram {
+    bits: u32,
+    counts: Vec<u64>,
+    total: u64,
+    /// Prefix sums: `prefix[i] = sum(counts[..i])`, length `counts.len()+1`.
+    /// Gives O(1) range mass queries for the table search.
+    prefix: Vec<u64>,
+}
+
+impl Histogram {
+    /// Empty histogram for a bit width.
+    pub fn new(bits: u32) -> Self {
+        assert!((1..=16).contains(&bits), "unsupported bit width {bits}");
+        let n = 1usize << bits;
+        Self { bits, counts: vec![0; n], total: 0, prefix: vec![0; n + 1] }
+    }
+
+    /// Build from a tensor of values (all must fit in `bits`).
+    pub fn from_values(bits: u32, values: &[u32]) -> Self {
+        let mut h = Self::new(bits);
+        let mask = (1u32 << bits) - 1;
+        for &v in values {
+            debug_assert!(v <= mask, "value {v:#x} exceeds {bits}-bit space");
+            h.counts[(v & mask) as usize] += 1;
+        }
+        h.total = values.len() as u64;
+        h.rebuild_prefix();
+        h
+    }
+
+    /// Build directly from counts.
+    pub fn from_counts(bits: u32, counts: Vec<u64>) -> Self {
+        assert_eq!(counts.len(), 1usize << bits);
+        let total = counts.iter().sum();
+        let mut h = Self { bits, counts, total, prefix: Vec::new() };
+        h.rebuild_prefix();
+        h
+    }
+
+    fn rebuild_prefix(&mut self) {
+        let mut prefix = Vec::with_capacity(self.counts.len() + 1);
+        let mut acc = 0u64;
+        prefix.push(0);
+        for &c in &self.counts {
+            acc += c;
+            prefix.push(acc);
+        }
+        self.prefix = prefix;
+    }
+
+    /// Merge another histogram (used to pool several activation samples,
+    /// paper §VII "up to 9 input activation samples per layer").
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.bits, other.bits);
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += *b;
+        }
+        self.total += other.total;
+        self.rebuild_prefix();
+    }
+
+    /// Value bit width.
+    #[inline]
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Total number of counted values.
+    #[inline]
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Raw counts.
+    #[inline]
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Occurrences of values in `[lo, hi]` inclusive — O(1) via prefix sums.
+    #[inline]
+    pub fn range_mass(&self, lo: u32, hi: u32) -> u64 {
+        debug_assert!(lo <= hi && (hi as usize) < self.counts.len());
+        self.prefix[hi as usize + 1] - self.prefix[lo as usize]
+    }
+
+    /// Fraction of values equal to zero.
+    pub fn sparsity(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.counts[0] as f64 / self.total as f64
+        }
+    }
+
+    /// Shannon entropy in bits/value of the exact value distribution — the
+    /// lower bound any lossless scheme (including ideal AC with a full
+    /// 2^bits-entry table) could achieve.
+    pub fn entropy(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let total = self.total as f64;
+        self.counts
+            .iter()
+            .filter(|&&c| c > 0)
+            .map(|&c| {
+                let p = c as f64 / total;
+                -p * p.log2()
+            })
+            .sum()
+    }
+
+    /// Cumulative distribution `(value, fraction ≤ value)` — Fig 2 series.
+    pub fn cdf(&self) -> Vec<(u32, f64)> {
+        let total = self.total.max(1) as f64;
+        self.prefix[1..]
+            .iter()
+            .enumerate()
+            .map(|(v, &acc)| (v as u32, acc as f64 / total))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_and_ranges() {
+        let h = Histogram::from_values(8, &[0, 0, 1, 5, 255, 255, 255]);
+        assert_eq!(h.total(), 7);
+        assert_eq!(h.range_mass(0, 0), 2);
+        assert_eq!(h.range_mass(0, 1), 3);
+        assert_eq!(h.range_mass(2, 254), 1);
+        assert_eq!(h.range_mass(0, 255), 7);
+        assert!((h.sparsity() - 2.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn entropy_uniform_and_deterministic() {
+        let v: Vec<u32> = (0..256).collect();
+        let h = Histogram::from_values(8, &v);
+        assert!((h.entropy() - 8.0).abs() < 1e-9);
+        let h0 = Histogram::from_values(8, &[7; 100]);
+        assert_eq!(h0.entropy(), 0.0);
+    }
+
+    #[test]
+    fn merge_pools_samples() {
+        let mut a = Histogram::from_values(8, &[1, 2, 3]);
+        let b = Histogram::from_values(8, &[3, 4]);
+        a.merge(&b);
+        assert_eq!(a.total(), 5);
+        assert_eq!(a.counts()[3], 2);
+        assert_eq!(a.range_mass(1, 4), 5);
+    }
+
+    #[test]
+    fn cdf_monotone_ends_at_one() {
+        let h = Histogram::from_values(8, &[0, 10, 10, 200, 255]);
+        let cdf = h.cdf();
+        assert_eq!(cdf.len(), 256);
+        let mut prev = 0.0;
+        for &(_, f) in &cdf {
+            assert!(f >= prev);
+            prev = f;
+        }
+        assert!((cdf[255].1 - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,33 @@
+//! The APack codec (paper §IV–§VI).
+//!
+//! Submodules:
+//! - [`bitstream`] — MSB-first bit reader/writer used by both streams.
+//! - [`table`] — the 16-row symbol + probability-count table.
+//! - [`encoder`] / [`decoder`] — the finite-precision arithmetic coder
+//!   modelled exactly on the hardware of paper §V (16-bit HI/LO windows,
+//!   underflow-bit counter, 10-bit counts, 16×10 multiply dropping the low
+//!   10 bits).
+//! - [`histogram`] — value histograms and CDFs (Fig 2).
+//! - [`tablegen`] — the heuristic table search of paper §VI (Listing 1).
+//! - [`container`] — the on-"disk"/on-DRAM representation: metadata + the
+//!   two streams, with substream framing for parallel engines.
+
+pub mod bitserial;
+pub mod bitstream;
+pub mod container;
+pub mod decoder;
+pub mod encoder;
+pub mod histogram;
+pub mod table;
+pub mod tablegen;
+
+pub use container::{compress, decompress, Container};
+pub use decoder::ApackDecoder;
+pub use encoder::ApackEncoder;
+pub use histogram::Histogram;
+pub use table::{SymbolTable, TableRow, PROB_BITS, PROB_MAX};
+pub use tablegen::{generate_table, TableGenConfig, TensorKind};
+
+/// Number of rows in the symbol / probability-count tables. The paper found
+/// 16 sufficient across 4-, 8- and 16-bit models (§IV).
+pub const NUM_ROWS: usize = 16;

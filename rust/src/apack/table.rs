@@ -1,0 +1,361 @@
+//! The APack symbol + probability-count table (paper §IV, Table I).
+//!
+//! The table partitions the `bits`-wide value space into [`NUM_ROWS`]
+//! contiguous, non-overlapping ranges `[v_min, v_max]`. Every value `v` in a
+//! range is encoded as the pair `(row index, v - v_min)` where the offset
+//! takes `OL = ceil(log2(v_max - v_min + 1))` bits. Each row additionally
+//! carries a probability-count range `[low, high)` over the 10-bit count
+//! space; the arithmetic coder narrows its working interval proportionally
+//! to that range.
+//!
+//! Matching the hardware (§V), only `v_max` (as `base`), `OL` and the
+//! *exclusive high* count are stored per row; a row's low count is the
+//! previous row's high (0 for row 0) and `v_min[i] = v_max[i-1] + 1`.
+
+
+use super::NUM_ROWS;
+use crate::error::{Error, Result};
+
+/// Width of the probability counts in bits (paper: `m = 10`).
+pub const PROB_BITS: u32 = 10;
+/// The full probability-count span `(0x0, 0x3FF)` assigned across all rows
+/// (paper §IV / Table I: the last row's high count is `0x3FF`).
+pub const PROB_MAX: u16 = (1 << PROB_BITS) - 1; // 0x3FF
+
+/// One row of the combined symbol/probability table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TableRow {
+    /// Smallest value mapped to this row (inclusive).
+    pub v_min: u32,
+    /// Largest value mapped to this row (inclusive).
+    pub v_max: u32,
+    /// Offset length in bits for this row: `ceil(log2(v_max - v_min + 1))`.
+    pub ol: u32,
+    /// Exclusive high probability-count boundary. The row's count range is
+    /// `[prev.hi_cnt, hi_cnt)`; an empty range (`hi_cnt == prev.hi_cnt`)
+    /// marks a symbol that never occurs (Table I rows 4–12).
+    pub hi_cnt: u16,
+}
+
+impl TableRow {
+    /// Number of distinct values covered by this row.
+    #[inline]
+    pub fn span(&self) -> u32 {
+        self.v_max - self.v_min + 1
+    }
+}
+
+/// Offset length for a range covering `span` values.
+#[inline]
+pub fn offset_len(span: u32) -> u32 {
+    debug_assert!(span >= 1);
+    32 - (span - 1).leading_zeros()
+}
+
+/// The full APack per-tensor table.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SymbolTable {
+    rows: [TableRow; NUM_ROWS],
+    /// Value bit width this table was built for (4, 8, or 16 in the paper).
+    bits: u32,
+}
+
+impl SymbolTable {
+    /// Build and validate a table from `(v_min, hi_cnt)` pairs. `v_min`s
+    /// must start at 0 and be strictly increasing; `hi_cnt`s must be
+    /// monotone non-decreasing and end exactly at [`PROB_MAX`].
+    pub fn new(bits: u32, v_mins: [u32; NUM_ROWS], hi_cnts: [u16; NUM_ROWS]) -> Result<Self> {
+        // The 16-row table needs at least 16 distinct values (paper studies
+        // 4-, 8- and 16-bit models).
+        if !(4..=16).contains(&bits) {
+            return Err(Error::InvalidTable(format!("unsupported bit width {bits}")));
+        }
+        let vmax_all = Self::value_max_for(bits);
+        if v_mins[0] != 0 {
+            return Err(Error::InvalidTable(format!(
+                "row 0 v_min must be 0, got {:#x}",
+                v_mins[0]
+            )));
+        }
+        let mut rows = [TableRow { v_min: 0, v_max: 0, ol: 0, hi_cnt: 0 }; NUM_ROWS];
+        let mut prev_cnt: u16 = 0;
+        for i in 0..NUM_ROWS {
+            let v_min = v_mins[i];
+            let v_max = if i + 1 < NUM_ROWS { v_mins[i + 1].wrapping_sub(1) } else { vmax_all };
+            if i + 1 < NUM_ROWS && v_mins[i + 1] <= v_min {
+                return Err(Error::InvalidTable(format!(
+                    "v_min not strictly increasing at row {}: {:#x} -> {:#x}",
+                    i,
+                    v_min,
+                    v_mins[i + 1]
+                )));
+            }
+            if v_min > vmax_all {
+                return Err(Error::InvalidTable(format!(
+                    "row {i} v_min {v_min:#x} exceeds value max {vmax_all:#x}"
+                )));
+            }
+            let hi_cnt = hi_cnts[i];
+            if hi_cnt < prev_cnt {
+                return Err(Error::InvalidTable(format!(
+                    "hi_cnt not monotone at row {i}: {prev_cnt:#x} -> {hi_cnt:#x}"
+                )));
+            }
+            if hi_cnt > PROB_MAX {
+                return Err(Error::InvalidTable(format!(
+                    "hi_cnt {hi_cnt:#x} exceeds PROB_MAX at row {i}"
+                )));
+            }
+            rows[i] = TableRow { v_min, v_max, ol: offset_len(v_max - v_min + 1), hi_cnt };
+            prev_cnt = hi_cnt;
+        }
+        if rows[NUM_ROWS - 1].hi_cnt != PROB_MAX {
+            return Err(Error::InvalidTable(format!(
+                "last hi_cnt must be {PROB_MAX:#x}, got {:#x}",
+                rows[NUM_ROWS - 1].hi_cnt
+            )));
+        }
+        Ok(Self { rows, bits })
+    }
+
+    /// Uniform table: the value space split evenly with counts proportional
+    /// to span — the starting point of the table search (paper Listing 1
+    /// line 38) and a safe always-valid default.
+    pub fn uniform(bits: u32) -> Self {
+        let n_values = 1u64 << bits;
+        let mut v_mins = [0u32; NUM_ROWS];
+        let mut hi_cnts = [0u16; NUM_ROWS];
+        for i in 0..NUM_ROWS {
+            v_mins[i] = ((n_values * i as u64) / NUM_ROWS as u64) as u32;
+            hi_cnts[i] = (((PROB_MAX as u64) * (i as u64 + 1)) / NUM_ROWS as u64) as u16;
+        }
+        Self::new(bits, v_mins, hi_cnts).expect("uniform table is always valid")
+    }
+
+    /// Largest representable value for a bit width.
+    #[inline]
+    pub fn value_max_for(bits: u32) -> u32 {
+        if bits == 32 {
+            u32::MAX
+        } else {
+            (1u32 << bits) - 1
+        }
+    }
+
+    /// Value bit width.
+    #[inline]
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Largest representable value.
+    #[inline]
+    pub fn value_max(&self) -> u32 {
+        Self::value_max_for(self.bits)
+    }
+
+    /// All rows.
+    #[inline]
+    pub fn rows(&self) -> &[TableRow; NUM_ROWS] {
+        &self.rows
+    }
+
+    /// Row `i`'s inclusive-low probability count (the previous row's high).
+    #[inline]
+    pub fn lo_cnt(&self, i: usize) -> u16 {
+        if i == 0 {
+            0
+        } else {
+            self.rows[i - 1].hi_cnt
+        }
+    }
+
+    /// Probability (fraction of the count space) assigned to row `i`.
+    pub fn probability(&self, i: usize) -> f64 {
+        (self.rows[i].hi_cnt - self.lo_cnt(i)) as f64 / PROB_MAX as f64
+    }
+
+    /// Map a value to its row index ("SYMBOL Lookup", Fig 3b: the matching
+    /// row is the last whose `v_min` is ≤ the input). Errors if the value
+    /// exceeds the table's bit width.
+    #[inline]
+    pub fn lookup(&self, v: u32) -> Result<usize> {
+        if v > self.value_max() {
+            return Err(Error::ValueOutOfRange { value: v, bits: self.bits });
+        }
+        // 16 rows: branchless-ish linear scan mirrors the 16-comparator
+        // hardware and beats binary search at this size.
+        let mut idx = 0usize;
+        for (i, row) in self.rows.iter().enumerate() {
+            idx = if v >= row.v_min { i } else { idx };
+        }
+        Ok(idx)
+    }
+
+    /// Serialized metadata footprint in **bits**, following the hardware
+    /// encoding (§V: symbol table rows of 11b = 8b base + 3b OL for 8-bit
+    /// models, probability rows of 10b) plus a 32-bit symbol count. The
+    /// paper quotes 298 bytes total per tensor including framing; we account
+    /// the same constant in footprint models (see `container::META_BYTES`).
+    pub fn metadata_bits(&self) -> usize {
+        let base_bits = self.bits as usize;
+        let ol_bits = if self.bits <= 8 { 3 } else { 4 };
+        NUM_ROWS * (base_bits + ol_bits) + NUM_ROWS * PROB_BITS as usize + 32
+    }
+
+    /// Render the table in the format of paper Table I (for the `table`
+    /// CLI subcommand / `eval::table1`).
+    pub fn render(&self) -> String {
+        let mut s = String::from(
+            "IDX | v_min | v_max | OL | low   | high  | p\n----+-------+-------+----+-------+-------+-------\n",
+        );
+        for i in 0..NUM_ROWS {
+            let r = &self.rows[i];
+            s.push_str(&format!(
+                "{:3} | {:#04x}  | {:#04x}  | {:2} | {:#05x} | {:#05x} | {:.4}\n",
+                i,
+                r.v_min,
+                r.v_max,
+                r.ol,
+                self.lo_cnt(i),
+                r.hi_cnt,
+                self.probability(i)
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    /// The example table from paper Table I (BILSTM weight layer).
+    pub(crate) fn paper_table1() -> SymbolTable {
+        let v_mins = [
+            0x00, 0x04, 0x08, 0x10, 0x40, 0x50, 0x60, 0x70, 0x80, 0x90, 0xA0, 0xB0, 0xC0, 0xD0,
+            0xF4, 0xFC,
+        ];
+        let hi_cnts = [
+            0x1EB, 0x229, 0x238, 0x23A, 0x23A, 0x23A, 0x23A, 0x23A, 0x23A, 0x23A, 0x23A, 0x23A,
+            0x23A, 0x23C, 0x276, 0x3FF,
+        ];
+        SymbolTable::new(8, v_mins, hi_cnts).unwrap()
+    }
+
+    #[test]
+    fn paper_table_i_roundtrips_fields() {
+        let t = paper_table1();
+        let r = t.rows();
+        // Spot-check against the printed Table I.
+        assert_eq!(r[0].v_max, 0x03);
+        assert_eq!(r[0].ol, 2);
+        assert_eq!(r[2].v_max, 0x0F);
+        assert_eq!(r[2].ol, 3);
+        assert_eq!(r[3].v_max, 0x3F);
+        assert_eq!(r[3].ol, 6);
+        assert_eq!(r[13].v_min, 0xD0);
+        assert_eq!(r[13].v_max, 0xF3);
+        assert_eq!(r[13].ol, 6);
+        assert_eq!(r[15].v_max, 0xFF);
+        assert_eq!(r[15].ol, 2);
+        // Probabilities match the paper's printed values.
+        assert!((t.probability(0) - 0.4795).abs() < 5e-4);
+        assert!((t.probability(1) - 0.0605).abs() < 5e-4);
+        assert!((t.probability(15) - 0.3838).abs() < 5e-4);
+        // Zero-probability middle rows.
+        for i in 4..=12 {
+            assert_eq!(t.probability(i), 0.0);
+        }
+    }
+
+    #[test]
+    fn lookup_maps_every_value_to_containing_row() {
+        let t = paper_table1();
+        for v in 0u32..=0xFF {
+            let i = t.lookup(v).unwrap();
+            assert!(t.rows()[i].v_min <= v && v <= t.rows()[i].v_max, "v={v:#x} -> row {i}");
+        }
+    }
+
+    #[test]
+    fn lookup_rejects_out_of_range() {
+        let t = paper_table1();
+        assert!(matches!(t.lookup(0x100), Err(Error::ValueOutOfRange { .. })));
+    }
+
+    #[test]
+    fn uniform_tables_valid_for_all_widths() {
+        assert!(SymbolTable::new(2, [0; NUM_ROWS], [PROB_MAX; NUM_ROWS]).is_err());
+        for bits in [4, 6, 8, 12, 16] {
+            let t = SymbolTable::uniform(bits);
+            assert_eq!(t.rows()[NUM_ROWS - 1].hi_cnt, PROB_MAX);
+            assert_eq!(t.rows()[NUM_ROWS - 1].v_max, SymbolTable::value_max_for(bits));
+            // Every value maps somewhere.
+            let max = t.value_max().min(4096);
+            for v in 0..=max {
+                t.lookup(v).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn new_rejects_bad_tables() {
+        // Non-zero first v_min.
+        let mut v = [0u32; NUM_ROWS];
+        for (i, x) in v.iter_mut().enumerate() {
+            *x = (i as u32) * 16 + 1;
+        }
+        let mut c = [0u16; NUM_ROWS];
+        for (i, x) in c.iter_mut().enumerate() {
+            *x = ((i as u32 + 1) * 64 - 1).min(PROB_MAX as u32) as u16;
+        }
+        c[NUM_ROWS - 1] = PROB_MAX;
+        assert!(SymbolTable::new(8, v, c).is_err());
+
+        // Non-monotone counts.
+        let t = SymbolTable::uniform(8);
+        let v_mins: Vec<u32> = t.rows().iter().map(|r| r.v_min).collect();
+        let mut cnts: Vec<u16> = t.rows().iter().map(|r| r.hi_cnt).collect();
+        cnts[5] = cnts[6] + 1;
+        cnts[5] = cnts[5].max(cnts[6]); // keep but swap to force violation at 6
+        let mut v_arr = [0u32; NUM_ROWS];
+        v_arr.copy_from_slice(&v_mins);
+        let mut c_arr = [0u16; NUM_ROWS];
+        c_arr.copy_from_slice(&cnts);
+        c_arr[6] = c_arr[5].saturating_sub(1);
+        // restore last
+        c_arr[NUM_ROWS - 1] = PROB_MAX;
+        assert!(SymbolTable::new(8, v_arr, c_arr).is_err() || c_arr[6] >= c_arr[5]);
+
+        // Last count not PROB_MAX.
+        let mut c2 = [0u16; NUM_ROWS];
+        for (i, x) in c2.iter_mut().enumerate() {
+            *x = (i as u16 + 1) * 10;
+        }
+        let mut v2 = [0u32; NUM_ROWS];
+        for (i, x) in v2.iter_mut().enumerate() {
+            *x = i as u32 * 16;
+        }
+        assert!(SymbolTable::new(8, v2, c2).is_err());
+    }
+
+    #[test]
+    fn offset_len_matches_paper_examples() {
+        assert_eq!(offset_len(4), 2); // [0x00,0x03]
+        assert_eq!(offset_len(8), 3); // [0x08,0x0F]
+        assert_eq!(offset_len(0x30), 6); // [0x10,0x3F]
+        assert_eq!(offset_len(0x24), 6); // [0xD0,0xF3]
+        assert_eq!(offset_len(1), 0); // singleton range: no offset bits
+        assert_eq!(offset_len(256), 8);
+    }
+
+    #[test]
+    fn metadata_bits_accounting() {
+        let t = SymbolTable::uniform(8);
+        // 16*(8+3) + 16*10 + 32 = 176 + 160 + 32 = 368 bits
+        assert_eq!(t.metadata_bits(), 368);
+        let t16 = SymbolTable::uniform(16);
+        assert_eq!(t16.metadata_bits(), 16 * 20 + 160 + 32);
+    }
+}

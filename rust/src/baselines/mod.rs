@@ -1,0 +1,8 @@
+//! Comparison codecs from paper §VII: run-length encoding (RLE), zero
+//! run-length encoding (RLEZ) and ShapeShifter.
+
+pub mod rle;
+pub mod shapeshifter;
+
+pub use rle::{rle_compressed_bits, rle_decode, rle_encode, rlez_compressed_bits, rlez_decode, rlez_encode};
+pub use shapeshifter::{ss_compressed_bits, ss_decode, ss_encode, ShapeShifterConfig};

@@ -1,0 +1,142 @@
+//! Run-length baselines (paper §VII, "Compression Methods"):
+//!
+//! - **RLE** encodes values as `(value, distance)` tuples where `distance`
+//!   is the number of *additional* identical values following, capped at 15
+//!   (4 bits of overhead per tuple).
+//! - **RLEZ** encodes `(value, distance)` where `distance` counts the zeros
+//!   following the value, again capped at 15 — the classic zero-run scheme
+//!   of Eyeriss/EIE/Cambricon that the paper compares against.
+//!
+//! Both are exact, reversible codecs; the `*_compressed_bits` helpers give
+//! the footprint the traffic study (Fig 5) uses.
+
+/// Maximum run distance per tuple (4-bit field).
+pub const MAX_DISTANCE: u32 = 15;
+
+/// RLE-encode: tuples of `(value, extra_repeats ≤ 15)`.
+pub fn rle_encode(values: &[u32]) -> Vec<(u32, u32)> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < values.len() {
+        let v = values[i];
+        let mut run = 0u32;
+        while run < MAX_DISTANCE && i + 1 + (run as usize) < values.len()
+            && values[i + 1 + (run as usize)] == v
+        {
+            run += 1;
+        }
+        out.push((v, run));
+        i += 1 + run as usize;
+    }
+    out
+}
+
+/// Invert [`rle_encode`].
+pub fn rle_decode(tuples: &[(u32, u32)]) -> Vec<u32> {
+    let mut out = Vec::new();
+    for &(v, run) in tuples {
+        for _ in 0..=run {
+            out.push(v);
+        }
+    }
+    out
+}
+
+/// Compressed footprint in bits for RLE on `bits`-wide values: each tuple
+/// costs `bits + 4`.
+pub fn rle_compressed_bits(values: &[u32], bits: u32) -> u64 {
+    rle_encode(values).len() as u64 * (bits as u64 + 4)
+}
+
+/// RLEZ-encode: tuples of `(value, zeros_following ≤ 15)`. A run of zeros
+/// longer than 15 continues with a `(0, k)` tuple, mirroring the EIE-style
+/// format.
+pub fn rlez_encode(values: &[u32]) -> Vec<(u32, u32)> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < values.len() {
+        let v = values[i];
+        let mut zeros = 0u32;
+        while zeros < MAX_DISTANCE && i + 1 + (zeros as usize) < values.len()
+            && values[i + 1 + (zeros as usize)] == 0
+        {
+            zeros += 1;
+        }
+        out.push((v, zeros));
+        i += 1 + zeros as usize;
+    }
+    out
+}
+
+/// Invert [`rlez_encode`].
+pub fn rlez_decode(tuples: &[(u32, u32)]) -> Vec<u32> {
+    let mut out = Vec::new();
+    for &(v, zeros) in tuples {
+        out.push(v);
+        for _ in 0..zeros {
+            out.push(0);
+        }
+    }
+    out
+}
+
+/// Compressed footprint in bits for RLEZ.
+pub fn rlez_compressed_bits(values: &[u32], bits: u32) -> u64 {
+    rlez_encode(values).len() as u64 * (bits as u64 + 4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rle_roundtrip_mixed() {
+        let v = vec![5, 5, 5, 0, 0, 7, 7, 7, 7, 7, 7, 7, 7, 7, 7, 7, 7, 7, 7, 7, 7, 7, 7, 1];
+        assert_eq!(rle_decode(&rle_encode(&v)), v);
+    }
+
+    #[test]
+    fn rlez_roundtrip_long_zero_runs() {
+        let mut v = vec![9u32];
+        v.extend(std::iter::repeat(0).take(100));
+        v.push(3);
+        v.extend(std::iter::repeat(0).take(31));
+        assert_eq!(rlez_decode(&rlez_encode(&v)), v);
+    }
+
+    #[test]
+    fn rle_run_cap_respected() {
+        let v = vec![1u32; 40];
+        let t = rle_encode(&v);
+        assert!(t.iter().all(|&(_, d)| d <= MAX_DISTANCE));
+        // 40 values = 16+16+8 → 3 tuples
+        assert_eq!(t.len(), 3);
+    }
+
+    #[test]
+    fn rle_expands_incompressible_data() {
+        // No repetition: every value becomes a tuple → bits*len + 4*len,
+        // i.e. traffic *increases*, as the paper observes for weights.
+        let v: Vec<u32> = (0..1000).map(|i| (i * 17) % 256).collect();
+        let bits = rle_compressed_bits(&v, 8);
+        assert!(bits > 8 * v.len() as u64);
+    }
+
+    #[test]
+    fn rlez_wins_on_sparse_data() {
+        let mut v = Vec::new();
+        for i in 0..1000u32 {
+            v.push(if i % 10 == 0 { i % 256 } else { 0 });
+        }
+        let bits = rlez_compressed_bits(&v, 8);
+        assert!(bits < 8 * v.len() as u64 / 2);
+        assert_eq!(rlez_decode(&rlez_encode(&v)), v);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(rle_encode(&[]).is_empty());
+        assert!(rlez_encode(&[]).is_empty());
+        assert_eq!(rle_compressed_bits(&[], 8), 0);
+    }
+}

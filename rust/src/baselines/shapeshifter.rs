@@ -1,0 +1,256 @@
+//! ShapeShifter baseline (Delmas Lascorz et al., MICRO'19), as configured
+//! in the paper's evaluation (§VII): values are processed in groups of
+//! `G = 8`; each group stores a `log2(P_max)`-bit precision field `P` (the
+//! minimal container width for the group), a G-bit zero bit-vector, and
+//! the non-zero values at `P` bits each.
+//!
+//! Per the APack paper's §II description, ShapeShifter "does not store
+//! prefixes of 0s (group near zero) or 1s (group near 255)" — i.e. it
+//! drops the *sign-extension* prefix of two's-complement values. A value's
+//! needed width is thus the shortest suffix that sign-extends back to the
+//! original byte (`0xFE` → 2 bits, `0x01` → 2 bits, `0x7F` → 8 bits), and
+//! the group container `P` is the max over its non-zero lanes.
+//!
+//! Footprint per group = `log2(P_max) + G + nnz × P` bits. We implement
+//! the full reversible codec and use its exact footprint in the traffic
+//! study (Fig 5).
+
+/// ShapeShifter configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ShapeShifterConfig {
+    /// Group size (paper uses 8, verified best for their models).
+    pub group: usize,
+    /// Maximum precision per value (8 for the 8-bit-optimized variant).
+    pub p_max: u32,
+    /// Whether the zero bit-vector is used to elide zero values.
+    pub zero_vector: bool,
+    /// Treat values as two's complement and drop sign-extension prefixes
+    /// (prefixes of 0s *and* 1s, the published design); `false` keeps the
+    /// magnitude-only variant for ablation.
+    pub twos_complement: bool,
+}
+
+impl ShapeShifterConfig {
+    /// The 8-bit-optimized variant evaluated in the paper.
+    pub fn paper_8b() -> Self {
+        Self { group: 8, p_max: 8, zero_vector: true, twos_complement: true }
+    }
+
+    /// Generic variant for a bit width.
+    pub fn for_bits(bits: u32) -> Self {
+        Self { group: 8, p_max: bits.max(1), zero_vector: true, twos_complement: true }
+    }
+
+    /// Variant without zero elision (stores all G values at P bits).
+    pub fn no_zero_vector(bits: u32) -> Self {
+        Self { group: 8, p_max: bits, zero_vector: false, twos_complement: true }
+    }
+
+    /// Magnitude-only ablation variant (no 1s-prefix removal).
+    pub fn magnitude_only(bits: u32) -> Self {
+        Self { group: 8, p_max: bits, zero_vector: true, twos_complement: false }
+    }
+
+    /// Bits for the per-group precision field.
+    pub fn prec_field_bits(&self) -> u32 {
+        32 - (self.p_max - 1).leading_zeros() // log2 rounded up, e.g. 3 for P_max=8
+    }
+}
+
+/// One encoded group.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SsGroup {
+    /// Minimal precision for the group's non-zero values (1..=P_max). 0 is
+    /// used for an all-zero group when the zero vector is enabled.
+    pub precision: u32,
+    /// Zero bit-vector (one bit per lane, true = zero); empty when
+    /// disabled.
+    pub zeros: Vec<bool>,
+    /// The stored values (non-zero lanes only when zero_vector, else all).
+    pub values: Vec<u32>,
+    /// Number of lanes in this (possibly final, short) group.
+    pub lanes: usize,
+}
+
+/// Needed container width for one value.
+fn needed_bits(v: u32, cfg: &ShapeShifterConfig) -> u32 {
+    if cfg.twos_complement {
+        // Shortest suffix that sign-extends back to the original p_max-bit
+        // value: strip leading 0s (positive) or leading 1s (negative),
+        // keeping one sign bit.
+        let w = cfg.p_max;
+        let sign = (v >> (w - 1)) & 1;
+        let mut need = w;
+        while need > 1 {
+            let top = (v >> (need - 2)) & 1; // would-be sign bit one shorter
+            if top != sign {
+                break;
+            }
+            need -= 1;
+        }
+        need
+    } else {
+        (32 - v.leading_zeros()).max(1)
+    }
+}
+
+fn min_precision(values: &[u32], cfg: &ShapeShifterConfig) -> u32 {
+    values.iter().map(|&v| needed_bits(v, cfg)).max().unwrap_or(0).max(1)
+}
+
+/// Sign-extend the low `p` bits of `stored` to `p_max` bits.
+fn sign_extend(stored: u32, p: u32, cfg: &ShapeShifterConfig) -> u32 {
+    if !cfg.twos_complement || p >= cfg.p_max {
+        return stored;
+    }
+    let sign = (stored >> (p - 1)) & 1;
+    if sign == 1 {
+        let mask = ((1u32 << cfg.p_max) - 1) & !((1u32 << p) - 1);
+        stored | mask
+    } else {
+        stored
+    }
+}
+
+/// Encode a tensor into ShapeShifter groups.
+pub fn ss_encode(values: &[u32], cfg: &ShapeShifterConfig) -> Vec<SsGroup> {
+    values
+        .chunks(cfg.group)
+        .map(|chunk| {
+            if cfg.zero_vector {
+                let zeros: Vec<bool> = chunk.iter().map(|&v| v == 0).collect();
+                let nz: Vec<u32> = chunk.iter().copied().filter(|&v| v != 0).collect();
+                let precision = if nz.is_empty() { 0 } else { min_precision(&nz, cfg) };
+                // Store only the P-bit suffix of each value.
+                let mask = if precision >= 32 { u32::MAX } else { (1u32 << precision) - 1 };
+                let stored: Vec<u32> = nz.iter().map(|&v| v & mask).collect();
+                SsGroup { precision, zeros, values: stored, lanes: chunk.len() }
+            } else {
+                let precision = min_precision(chunk, cfg);
+                let mask = if precision >= 32 { u32::MAX } else { (1u32 << precision) - 1 };
+                SsGroup {
+                    precision,
+                    zeros: Vec::new(),
+                    values: chunk.iter().map(|&v| v & mask).collect(),
+                    lanes: chunk.len(),
+                }
+            }
+        })
+        .collect()
+}
+
+/// Invert [`ss_encode`].
+pub fn ss_decode(groups: &[SsGroup], cfg: &ShapeShifterConfig) -> Vec<u32> {
+    let mut out = Vec::new();
+    for g in groups {
+        if cfg.zero_vector {
+            let mut it = g.values.iter();
+            for &z in &g.zeros {
+                out.push(if z {
+                    0
+                } else {
+                    sign_extend(*it.next().expect("zero-vector mismatch"), g.precision, cfg)
+                });
+            }
+        } else {
+            out.extend(g.values.iter().map(|&v| sign_extend(v, g.precision, cfg)));
+        }
+    }
+    out
+}
+
+/// Exact compressed footprint in bits.
+pub fn ss_compressed_bits(values: &[u32], cfg: &ShapeShifterConfig) -> u64 {
+    ss_encode(values, cfg)
+        .iter()
+        .map(|g| {
+            let mut bits = cfg.prec_field_bits() as u64;
+            if cfg.zero_vector {
+                bits += g.lanes as u64; // the zero bit-vector
+            }
+            bits += g.values.len() as u64 * g.precision as u64;
+            bits
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ShapeShifterConfig {
+        ShapeShifterConfig::paper_8b()
+    }
+
+    #[test]
+    fn roundtrip_mixed() {
+        let v: Vec<u32> = vec![0, 1, 255, 0, 0, 12, 7, 0, 130, 0, 0, 0, 0, 0, 0, 0, 3];
+        let g = ss_encode(&v, &cfg());
+        assert_eq!(ss_decode(&g, &cfg()), v);
+    }
+
+    #[test]
+    fn roundtrip_no_zero_vector() {
+        let c = ShapeShifterConfig::no_zero_vector(8);
+        let v: Vec<u32> = (0..100).map(|i| (i * 31) % 256).collect();
+        let g = ss_encode(&v, &c);
+        assert_eq!(ss_decode(&g, &c), v);
+    }
+
+    #[test]
+    fn group_precision_is_minimal() {
+        // Two's complement: 3 = 0b011 needs 3 bits (leading sign 0 kept).
+        let v = vec![0, 0, 3, 1, 0, 0, 0, 2];
+        let g = ss_encode(&v, &cfg());
+        assert_eq!(g[0].precision, 3);
+        // footprint: 3 (prec) + 8 (zero vec) + 3 values × 3 bits = 20
+        assert_eq!(ss_compressed_bits(&v, &cfg()), 20);
+        // Magnitude-only variant packs the same group at 2 bits.
+        let mo = ShapeShifterConfig::magnitude_only(8);
+        assert_eq!(ss_encode(&v, &mo)[0].precision, 2);
+        assert_eq!(ss_decode(&ss_encode(&v, &mo), &mo), v);
+    }
+
+    #[test]
+    fn ones_prefixes_compress_like_zero_prefixes() {
+        // Near-255 values (small negatives) need few bits: 0xFE = -2 → 2.
+        let v = vec![0xFEu32, 0xFF, 0xFD, 0xFE, 0xFF, 0xFE, 0xFF, 0xFD];
+        let g = ss_encode(&v, &cfg());
+        assert_eq!(g[0].precision, 3); // 0xFD = -3 → '101' (3 bits)
+        assert_eq!(ss_decode(&g, &cfg()), v);
+    }
+
+    #[test]
+    fn all_zero_group_costs_header_only() {
+        let v = vec![0u32; 8];
+        assert_eq!(ss_compressed_bits(&v, &cfg()), 3 + 8);
+        assert_eq!(ss_decode(&ss_encode(&v, &cfg()), &cfg()), v);
+    }
+
+    #[test]
+    fn one_large_value_penalizes_whole_group() {
+        // The paper's key observation: one max-magnitude value forces all
+        // other lanes to the full container — encoding efficiency lost.
+        // 0x7F (+127) needs all 8 bits; the 1s ride along at 8 bits each.
+        let v = vec![0x7Fu32, 1, 1, 1, 1, 1, 1, 1];
+        let bits = ss_compressed_bits(&v, &cfg());
+        assert_eq!(bits, 3 + 8 + 8 * 8);
+        assert!(bits > 8 * 8); // worse than raw
+        assert_eq!(ss_decode(&ss_encode(&v, &cfg()), &cfg()), v);
+    }
+
+    #[test]
+    fn short_final_group() {
+        let v = vec![1u32, 2, 3]; // fewer than G lanes
+        let g = ss_encode(&v, &cfg());
+        assert_eq!(g[0].lanes, 3);
+        assert_eq!(ss_decode(&g, &cfg()), v);
+    }
+
+    #[test]
+    fn compresses_low_magnitude_data() {
+        let v: Vec<u32> = (0..800).map(|i| (i % 4) as u32).collect();
+        let bits = ss_compressed_bits(&v, &cfg());
+        assert!(bits < 8 * v.len() as u64 / 2, "{bits}");
+    }
+}

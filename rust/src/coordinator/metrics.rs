@@ -1,0 +1,80 @@
+//! Coordinator metrics: bytes in/out, per-tensor records, throughput.
+
+
+/// Aggregate metrics across all coordinator operations.
+#[derive(Debug, Clone, Default)]
+pub struct CoordinatorMetrics {
+    pub values_compressed: u64,
+    pub values_decompressed: u64,
+    pub compressed_bits: u64,
+    pub tensors_compressed: u64,
+    pub tensors_decompressed: u64,
+}
+
+impl CoordinatorMetrics {
+    pub fn record_compress(&mut self, values: usize, bits: u64) {
+        self.values_compressed += values as u64;
+        self.compressed_bits += bits;
+        self.tensors_compressed += 1;
+    }
+
+    pub fn record_decompress(&mut self, values: usize) {
+        self.values_decompressed += values as u64;
+        self.tensors_decompressed += 1;
+    }
+
+    /// Average compressed bits per value.
+    pub fn bits_per_value(&self) -> f64 {
+        if self.values_compressed == 0 {
+            0.0
+        } else {
+            self.compressed_bits as f64 / self.values_compressed as f64
+        }
+    }
+}
+
+/// A per-tensor record (used by the CLI and the e2e example report).
+#[derive(Debug, Clone)]
+pub struct TensorMetrics {
+    pub name: String,
+    pub n_values: u64,
+    pub raw_bits: u64,
+    pub compressed_bits: u64,
+}
+
+impl TensorMetrics {
+    pub fn ratio(&self) -> f64 {
+        self.raw_bits as f64 / self.compressed_bits.max(1) as f64
+    }
+
+    /// Normalized traffic (the paper's Fig 5 quantity): compressed/raw.
+    pub fn normalized_traffic(&self) -> f64 {
+        self.compressed_bits as f64 / self.raw_bits.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_per_value_math() {
+        let mut m = CoordinatorMetrics::default();
+        m.record_compress(100, 400);
+        m.record_compress(100, 200);
+        assert!((m.bits_per_value() - 3.0).abs() < 1e-12);
+        assert_eq!(m.tensors_compressed, 2);
+    }
+
+    #[test]
+    fn tensor_metrics_ratios() {
+        let t = TensorMetrics {
+            name: "w".into(),
+            n_values: 1000,
+            raw_bits: 8000,
+            compressed_bits: 4000,
+        };
+        assert!((t.ratio() - 2.0).abs() < 1e-12);
+        assert!((t.normalized_traffic() - 0.5).abs() < 1e-12);
+    }
+}

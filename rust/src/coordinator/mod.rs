@@ -1,0 +1,262 @@
+//! The L3 coordinator: partitions tensors into independent substreams,
+//! drives a pool of software "engines" (one APack encoder/decoder each) in
+//! parallel, and keeps the metrics the evaluation consumes.
+//!
+//! This mirrors the deployment of paper §V-B: the input tensor is split
+//! into several subtensors whose streams are encoded/decoded independently
+//! by replicated engines; all substreams of a tensor share one probability
+//! table.
+
+pub mod metrics;
+pub mod pool;
+
+pub use metrics::{CoordinatorMetrics, TensorMetrics};
+pub use pool::EnginePool;
+
+
+use crate::apack::container::{compress_with_table, Container};
+use crate::apack::tablegen::{generate_table, TableGenConfig, TensorKind};
+use crate::apack::{Histogram, SymbolTable};
+use crate::error::{Error, Result};
+
+/// A tensor compressed as several independently decodable substreams
+/// sharing one table (paper §V-B "Replication").
+#[derive(Debug, Clone)]
+pub struct ShardedContainer {
+    pub table: SymbolTable,
+    /// Total value count across shards.
+    pub n_values: u64,
+    /// Per-shard containers (each with its own symbol/offset streams).
+    pub shards: Vec<Container>,
+}
+
+impl ShardedContainer {
+    /// Total compressed footprint in bits. The table/metadata is charged
+    /// once per tensor (shards share it in hardware); per-shard framing
+    /// adds a 32-bit length each.
+    pub fn footprint_bits(&self) -> u64 {
+        let streams: u64 =
+            self.shards.iter().map(|s| s.symbol_bits + s.offset_bits + 32).sum();
+        streams + (crate::apack::container::META_BYTES as u64) * 8
+    }
+
+    /// Compression ratio vs. raw storage.
+    pub fn compression_ratio(&self) -> f64 {
+        let raw = self.n_values * self.table.bits() as u64;
+        raw as f64 / self.footprint_bits() as f64
+    }
+
+    /// Binary serialization: `magic | n_values | shard_count | per-shard
+    /// (len u64 | Container::to_bytes)`.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&0x4150_5348u32.to_le_bytes()); // "APSH"
+        out.extend_from_slice(&self.n_values.to_le_bytes());
+        out.extend_from_slice(&(self.shards.len() as u32).to_le_bytes());
+        for s in &self.shards {
+            let b = s.to_bytes();
+            out.extend_from_slice(&(b.len() as u64).to_le_bytes());
+            out.extend_from_slice(&b);
+        }
+        out
+    }
+
+    /// Parse [`Self::to_bytes`] output.
+    pub fn from_bytes(data: &[u8]) -> Result<Self> {
+        let bad = |m: &str| Error::BadContainer(m.to_string());
+        if data.len() < 16 || data[0..4] != 0x4150_5348u32.to_le_bytes() {
+            return Err(bad("bad sharded-container header"));
+        }
+        let n_values = u64::from_le_bytes(data[4..12].try_into().unwrap());
+        let count = u32::from_le_bytes(data[12..16].try_into().unwrap()) as usize;
+        let mut pos = 16;
+        let mut shards = Vec::with_capacity(count);
+        for _ in 0..count {
+            if pos + 8 > data.len() {
+                return Err(bad("truncated shard length"));
+            }
+            let len = u64::from_le_bytes(data[pos..pos + 8].try_into().unwrap()) as usize;
+            pos += 8;
+            if pos + len > data.len() {
+                return Err(bad("truncated shard body"));
+            }
+            shards.push(Container::from_bytes(&data[pos..pos + len])?);
+            pos += len;
+        }
+        let table = shards
+            .first()
+            .map(|s| s.table.clone())
+            .ok_or_else(|| bad("sharded container with zero shards"))?;
+        Ok(Self { table, n_values, shards })
+    }
+}
+
+/// How to split a tensor into substreams.
+#[derive(Debug, Clone, Copy)]
+pub struct PartitionPolicy {
+    /// Number of substreams (paper: matches engine replication, 64).
+    pub substreams: u32,
+    /// Minimum values per substream (tiny tensors use fewer streams).
+    pub min_per_stream: usize,
+}
+
+impl Default for PartitionPolicy {
+    fn default() -> Self {
+        Self { substreams: 64, min_per_stream: 1024 }
+    }
+}
+
+impl PartitionPolicy {
+    /// Effective shard count for a tensor length.
+    pub fn shards_for(&self, len: usize) -> usize {
+        if len == 0 {
+            return 1;
+        }
+        let max_by_min = len.div_ceil(self.min_per_stream).max(1);
+        (self.substreams as usize).min(max_by_min)
+    }
+
+    /// Split `values` into contiguous chunks, one per shard.
+    pub fn split<'v>(&self, values: &'v [u32]) -> Vec<&'v [u32]> {
+        let shards = self.shards_for(values.len());
+        let per = values.len().div_ceil(shards).max(1);
+        values.chunks(per).collect()
+    }
+}
+
+/// Coordinator facade: profile → table → parallel shard encode, and the
+/// reverse. Parallelism uses the rayon pool (sized like the engine array
+/// in deployment).
+pub struct Coordinator {
+    pub policy: PartitionPolicy,
+    pub metrics: CoordinatorMetrics,
+}
+
+impl Coordinator {
+    pub fn new(policy: PartitionPolicy) -> Self {
+        Self { policy, metrics: CoordinatorMetrics::default() }
+    }
+
+    /// Compress a tensor: generate its table from `profile` (or from the
+    /// tensor itself if `None`) and encode all shards in parallel.
+    pub fn compress(
+        &mut self,
+        bits: u32,
+        values: &[u32],
+        kind: TensorKind,
+        profile: Option<&Histogram>,
+    ) -> Result<ShardedContainer> {
+        let table = match profile {
+            Some(h) => generate_table(h, kind, &TableGenConfig::for_bits(bits))?,
+            None => {
+                let h = Histogram::from_values(bits, values);
+                generate_table(&h, kind, &TableGenConfig::for_bits(bits))?
+            }
+        };
+        self.compress_with_table(table, values)
+    }
+
+    /// Compress with a prebuilt table.
+    pub fn compress_with_table(
+        &mut self,
+        table: SymbolTable,
+        values: &[u32],
+    ) -> Result<ShardedContainer> {
+        let chunks = self.policy.split(values);
+        let shards: Result<Vec<Container>> =
+            crate::util::par_map(&chunks, |chunk| compress_with_table(table.clone(), chunk))
+                .into_iter()
+                .collect();
+        let shards = shards?;
+        let sc = ShardedContainer { table, n_values: values.len() as u64, shards };
+        self.metrics.record_compress(values.len(), sc.footprint_bits());
+        Ok(sc)
+    }
+
+    /// Decompress all shards in parallel and reassemble the tensor.
+    pub fn decompress(&mut self, sc: &ShardedContainer) -> Result<Vec<u32>> {
+        let parts: Result<Vec<Vec<u32>>> =
+            crate::util::par_map(&sc.shards, |s| s.decode()).into_iter().collect();
+        let mut out = Vec::with_capacity(sc.n_values as usize);
+        for p in parts? {
+            out.extend(p);
+        }
+        if out.len() as u64 != sc.n_values {
+            return Err(Error::BadContainer(format!(
+                "reassembled {} values, expected {}",
+                out.len(),
+                sc.n_values
+            )));
+        }
+        self.metrics.record_decompress(out.len());
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::distributions::ValueProfile;
+
+    fn tensor(n: usize, seed: u64) -> Vec<u32> {
+        ValueProfile::ReluActivation { sparsity: 0.5, q: 0.93, noise_floor: 0.01 }
+            .sample(8, n, seed)
+    }
+
+    #[test]
+    fn sharded_roundtrip_various_sizes() {
+        let mut c = Coordinator::new(PartitionPolicy::default());
+        for n in [1usize, 100, 1024, 1025, 100_000] {
+            let v = tensor(n, n as u64);
+            let sc = c.compress(8, &v, TensorKind::Activations, None).unwrap();
+            assert_eq!(c.decompress(&sc).unwrap(), v, "n={n}");
+        }
+    }
+
+    #[test]
+    fn shard_count_respects_policy() {
+        let p = PartitionPolicy { substreams: 64, min_per_stream: 1024 };
+        assert_eq!(p.shards_for(100), 1);
+        assert_eq!(p.shards_for(2048), 2);
+        assert_eq!(p.shards_for(1 << 20), 64);
+        let v = tensor(1 << 16, 3);
+        assert_eq!(p.split(&v).len(), 64);
+        // Chunks reassemble exactly.
+        let total: usize = p.split(&v).iter().map(|c| c.len()).sum();
+        assert_eq!(total, v.len());
+    }
+
+    #[test]
+    fn profiled_table_applies_to_fresh_data() {
+        let mut c = Coordinator::new(PartitionPolicy::default());
+        let profile_data = tensor(50_000, 1);
+        let fresh = tensor(50_000, 2);
+        let h = Histogram::from_values(8, &profile_data);
+        let sc = c.compress(8, &fresh, TensorKind::Activations, Some(&h)).unwrap();
+        assert_eq!(c.decompress(&sc).unwrap(), fresh);
+        assert!(sc.compression_ratio() > 1.2, "ratio {}", sc.compression_ratio());
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let mut c = Coordinator::new(PartitionPolicy::default());
+        let v = tensor(10_000, 9);
+        let sc = c.compress(8, &v, TensorKind::Weights, None).unwrap();
+        c.decompress(&sc).unwrap();
+        assert_eq!(c.metrics.values_compressed, 10_000);
+        assert_eq!(c.metrics.values_decompressed, 10_000);
+        assert!(c.metrics.compressed_bits > 0);
+    }
+
+    #[test]
+    fn sharding_overhead_is_small() {
+        // Sharded vs unsharded footprint within 5% for a large tensor.
+        let v = tensor(1 << 18, 5);
+        let mut c64 = Coordinator::new(PartitionPolicy { substreams: 64, min_per_stream: 1 });
+        let mut c1 = Coordinator::new(PartitionPolicy { substreams: 1, min_per_stream: 1 });
+        let s64 = c64.compress(8, &v, TensorKind::Activations, None).unwrap();
+        let s1 = c1.compress(8, &v, TensorKind::Activations, None).unwrap();
+        let ratio = s64.footprint_bits() as f64 / s1.footprint_bits() as f64;
+        assert!(ratio < 1.05, "sharding overhead ratio {ratio}");
+    }
+}

@@ -1,0 +1,140 @@
+//! A long-lived engine pool: worker threads each owning a decode/encode
+//! "engine", fed through bounded channels with backpressure — the software
+//! analogue of the replicated hardware units sitting at the memory
+//! controller (paper §V-B), used by the async serving path of the e2e
+//! example.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::apack::container::Container;
+use crate::error::{Error, Result};
+
+/// A unit of work: decode a shard (identified by its index so results can
+/// be reassembled in order).
+struct Job {
+    shard_idx: usize,
+    container: Container,
+    reply: mpsc::Sender<(usize, Result<Vec<u32>>)>,
+}
+
+/// Fixed pool of decoder workers with a bounded queue (backpressure:
+/// submits block when all engines are busy and the queue is full, like the
+/// hardware stalling the memory controller).
+pub struct EnginePool {
+    tx: Option<mpsc::SyncSender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    /// Jobs processed (shared counter, for metrics/tests).
+    processed: Arc<Mutex<u64>>,
+}
+
+impl EnginePool {
+    /// Spawn `engines` workers with a queue depth of `queue` jobs.
+    pub fn new(engines: usize, queue: usize) -> Self {
+        let (tx, rx) = mpsc::sync_channel::<Job>(queue);
+        let rx = Arc::new(Mutex::new(rx));
+        let processed = Arc::new(Mutex::new(0u64));
+        let workers = (0..engines.max(1))
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let processed = Arc::clone(&processed);
+                std::thread::spawn(move || loop {
+                    let job = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match job {
+                        Ok(job) => {
+                            let result = job.container.decode();
+                            *processed.lock().unwrap() += 1;
+                            // Receiver may be gone if the caller bailed.
+                            let _ = job.reply.send((job.shard_idx, result));
+                        }
+                        Err(_) => break, // channel closed: shut down
+                    }
+                })
+            })
+            .collect();
+        Self { tx: Some(tx), workers, processed }
+    }
+
+    /// Decode a set of shards through the pool, reassembling in order.
+    pub fn decode_shards(&self, shards: &[Container]) -> Result<Vec<u32>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let tx = self.tx.as_ref().expect("pool is live");
+        for (i, c) in shards.iter().enumerate() {
+            tx.send(Job { shard_idx: i, container: c.clone(), reply: reply_tx.clone() })
+                .map_err(|_| Error::Runtime("engine pool shut down".into()))?;
+        }
+        drop(reply_tx);
+        let mut parts: Vec<Option<Vec<u32>>> = vec![None; shards.len()];
+        for _ in 0..shards.len() {
+            let (idx, res) = reply_rx
+                .recv()
+                .map_err(|_| Error::Runtime("engine pool workers died".into()))?;
+            parts[idx] = Some(res?);
+        }
+        let mut out = Vec::new();
+        for p in parts {
+            out.extend(p.expect("all shards replied"));
+        }
+        Ok(out)
+    }
+
+    /// Total jobs processed by the pool.
+    pub fn processed(&self) -> u64 {
+        *self.processed.lock().unwrap()
+    }
+}
+
+impl Drop for EnginePool {
+    fn drop(&mut self) {
+        // Close the queue, then join workers.
+        self.tx.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apack::tablegen::TensorKind;
+    use crate::coordinator::{Coordinator, PartitionPolicy};
+    use crate::models::distributions::ValueProfile;
+
+    fn sharded(n: usize) -> (Vec<u32>, crate::coordinator::ShardedContainer) {
+        let v = ValueProfile::Sparse { sparsity: 0.6, q: 0.85 }.sample(8, n, 11);
+        let mut c =
+            Coordinator::new(PartitionPolicy { substreams: 16, min_per_stream: 256 });
+        let sc = c.compress(8, &v, TensorKind::Weights, None).unwrap();
+        (v, sc)
+    }
+
+    #[test]
+    fn pool_decodes_in_order() {
+        let (v, sc) = sharded(50_000);
+        let pool = EnginePool::new(8, 32);
+        let got = pool.decode_shards(&sc.shards).unwrap();
+        assert_eq!(got, v);
+        assert_eq!(pool.processed() as usize, sc.shards.len());
+    }
+
+    #[test]
+    fn pool_survives_multiple_batches() {
+        let pool = EnginePool::new(4, 8);
+        for n in [1000usize, 5000, 20_000] {
+            let (v, sc) = sharded(n);
+            assert_eq!(pool.decode_shards(&sc.shards).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn single_engine_pool_works() {
+        let (v, sc) = sharded(10_000);
+        let pool = EnginePool::new(1, 1);
+        assert_eq!(pool.decode_shards(&sc.shards).unwrap(), v);
+    }
+}

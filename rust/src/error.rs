@@ -1,0 +1,50 @@
+//! Crate-wide error type.
+
+use std::fmt;
+
+/// Errors produced by the APack codec, coordinator and simulator.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Error {
+    /// A symbol/probability table failed validation (the contained string
+    /// describes the violated invariant).
+    InvalidTable(String),
+    /// A value to be encoded falls in a range whose probability count is
+    /// zero — the table does not cover it. Contains the offending value.
+    ValueNotCovered(u32),
+    /// A value exceeds the bit width the table was built for.
+    ValueOutOfRange { value: u32, bits: u32 },
+    /// The compressed symbol stream is corrupt (code register escaped every
+    /// scaled probability-count range).
+    CorruptStream { position: usize },
+    /// The container metadata is inconsistent (framing, counts, versions).
+    BadContainer(String),
+    /// Configuration error (coordinator / simulator parameters).
+    Config(String),
+    /// Runtime (PJRT / artifact) error, stringified.
+    Runtime(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::InvalidTable(s) => write!(f, "invalid APack table: {s}"),
+            Error::ValueNotCovered(v) => {
+                write!(f, "value {v:#x} maps to a zero-probability range")
+            }
+            Error::ValueOutOfRange { value, bits } => {
+                write!(f, "value {value:#x} out of range for {bits}-bit table")
+            }
+            Error::CorruptStream { position } => {
+                write!(f, "corrupt symbol stream at symbol {position}")
+            }
+            Error::BadContainer(s) => write!(f, "bad container: {s}"),
+            Error::Config(s) => write!(f, "configuration error: {s}"),
+            Error::Runtime(s) => write!(f, "runtime error: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,85 @@
+//! Fig 2: cumulative distribution of weight and activation values for
+//! Layer 10 of Q8BERT and Layer 1 of BILSTM.
+
+use crate::apack::Histogram;
+use crate::models::trace::ModelTrace;
+use crate::models::zoo::model_by_name;
+
+use super::{EVAL_SEED, PROFILE_SAMPLES, SAMPLE_CAP};
+
+/// One CDF series, downsampled to `points` for plotting/printing.
+#[derive(Debug, Clone)]
+pub struct CdfSeries {
+    pub label: String,
+    pub points: Vec<(u32, f64)>,
+}
+
+fn series(label: &str, values: &[u32], bits: u32, points: usize) -> CdfSeries {
+    let h = Histogram::from_values(bits, values);
+    let cdf = h.cdf();
+    let step = (cdf.len() / points.max(1)).max(1);
+    let mut pts: Vec<(u32, f64)> = cdf.iter().step_by(step).copied().collect();
+    // Always include the final point so the series ends at 1.0.
+    if pts.last() != cdf.last() {
+        pts.push(*cdf.last().expect("non-empty cdf"));
+    }
+    CdfSeries { label: label.to_string(), points: pts }
+}
+
+/// Build the four Fig 2 series (weights + activations for the two layers).
+pub fn fig2_series() -> Vec<CdfSeries> {
+    let mut out = Vec::new();
+    for (model, layer) in [("q8bert", 10usize), ("bilstm", 1usize)] {
+        let cfg = model_by_name(model).expect("zoo model");
+        let trace = ModelTrace::synthesize(&cfg, SAMPLE_CAP, PROFILE_SAMPLES, EVAL_SEED);
+        let l = &trace.layers[layer.min(trace.layers.len() - 1)];
+        out.push(series(&format!("{model} L{layer} weights"), &l.weights, cfg.bits, 32));
+        if !l.activations.is_empty() {
+            out.push(series(
+                &format!("{model} L{layer} activations"),
+                &l.activations,
+                cfg.bits,
+                32,
+            ));
+        }
+    }
+    out
+}
+
+/// Render the series as text (value → cumulative fraction).
+pub fn render() -> String {
+    let mut s = String::from("\n== Fig 2: cumulative value distributions ==\n");
+    for series in fig2_series() {
+        s.push_str(&format!("\n{}:\n", series.label));
+        for (v, f) in &series.points {
+            let bar = "#".repeat((f * 40.0) as usize);
+            s.push_str(&format!("  {v:>5}  {f:5.3}  {bar}\n"));
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_has_far_from_uniform_distributions() {
+        let series = fig2_series();
+        assert!(series.len() >= 3);
+        for s in &series {
+            // Monotone, ends near 1.
+            let last = s.points.last().unwrap().1;
+            assert!(last > 0.9, "{}: CDF ends at {last}", s.label);
+            // "Around half of the values tend to be close to zero":
+            // CDF at ~1/8 of the range should already exceed 0.3.
+            let early = s
+                .points
+                .iter()
+                .find(|(v, _)| *v >= 32)
+                .map(|(_, f)| *f)
+                .unwrap_or(0.0);
+            assert!(early > 0.3, "{}: early mass {early}", s.label);
+        }
+    }
+}

@@ -1,0 +1,103 @@
+//! Fig 5: normalized off-chip traffic per model, activations (5a) and
+//! weights (5b), for Baseline / RLE / RLEZ / ShapeShifter / APack.
+
+use super::study::{CompressionStudy, Scheme};
+use super::render_table;
+
+/// Fig 5a rows: one per model with studied activations.
+pub fn fig5a_rows(study: &CompressionStudy) -> Vec<Vec<String>> {
+    let models: Vec<&str> = {
+        let mut seen = Vec::new();
+        for r in &study.results {
+            if !seen.contains(&r.model.as_str()) && !r.acts_norm.is_nan() {
+                seen.push(r.model.as_str());
+            }
+        }
+        seen
+    };
+    models
+        .iter()
+        .map(|m| {
+            let mut row = vec![m.to_string()];
+            for s in Scheme::ALL {
+                let v = study.get(m, s).map(|r| r.acts_norm).unwrap_or(f64::NAN);
+                row.push(format!("{v:.3}"));
+            }
+            row
+        })
+        .collect()
+}
+
+/// Fig 5b rows: one per model (weights are studied for all).
+pub fn fig5b_rows(study: &CompressionStudy) -> Vec<Vec<String>> {
+    let models: Vec<&str> = {
+        let mut seen = Vec::new();
+        for r in &study.results {
+            if !seen.contains(&r.model.as_str()) {
+                seen.push(r.model.as_str());
+            }
+        }
+        seen
+    };
+    models
+        .iter()
+        .map(|m| {
+            let mut row = vec![m.to_string()];
+            for s in Scheme::ALL {
+                let v = study.get(m, s).map(|r| r.weights_norm).unwrap_or(f64::NAN);
+                row.push(format!("{v:.3}"));
+            }
+            row
+        })
+        .collect()
+}
+
+/// Render both panels plus the summary row the paper highlights (§I:
+/// weights → 60%, activations → 48% of baseline on average).
+pub fn render(study: &CompressionStudy) -> String {
+    let headers = ["model", "Baseline", "RLE", "RLEZ", "ShapeShifter", "APack"];
+    let mut out = render_table(
+        "Fig 5a: normalized off-chip traffic — ACTIVATIONS (lower is better)",
+        &headers,
+        &fig5a_rows(study),
+    );
+    out.push_str(&render_table(
+        "Fig 5b: normalized off-chip traffic — WEIGHTS (lower is better)",
+        &headers,
+        &fig5b_rows(study),
+    ));
+    out.push_str("\n== Summary (paper §I: weights 60%, activations 48% on average) ==\n");
+    for s in Scheme::ALL {
+        out.push_str(&format!(
+            "{:<13} weights mean {:.3}  (ratio {:.2}x)   activations mean {:.3}  (ratio {:.2}x)\n",
+            s.label(),
+            study.mean_weights_norm(s),
+            1.0 / study.mean_weights_norm(s),
+            study.mean_acts_norm(s),
+            1.0 / study.mean_acts_norm(s),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo::model_by_name;
+
+    #[test]
+    fn rows_have_all_schemes() {
+        let models =
+            vec![model_by_name("ncf").unwrap(), model_by_name("mobilenet_v1").unwrap()];
+        let s = CompressionStudy::run(&models, &Scheme::ALL);
+        let a = fig5a_rows(&s);
+        let b = fig5b_rows(&s);
+        // mobilenet_v1 (IntelAI) has no activation row; both have weights.
+        assert_eq!(a.len(), 1);
+        assert_eq!(b.len(), 2);
+        assert_eq!(a[0].len(), 6);
+        let text = render(&s);
+        assert!(text.contains("APack"));
+        assert!(text.contains("ncf"));
+    }
+}

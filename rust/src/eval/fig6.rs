@@ -1,0 +1,104 @@
+//! Fig 6: off-chip memory energy normalized to the no-compression
+//! baseline. Weights and input activations of each layer are read once
+//! from off-chip (the paper's edge-inference assumption, §VII-B), outputs
+//! written once; APack adds its engine power while data streams.
+
+use crate::models::zoo::{all_models, ModelConfig};
+use crate::simulator::accelerator::{AcceleratorConfig, AcceleratorSim, TrafficScaling};
+use crate::simulator::dram::DramPowerModel;
+use crate::simulator::engine::EngineArrayConfig;
+
+use super::study::{CompressionStudy, Scheme};
+use super::render_table;
+
+/// Off-chip energy (J) for one model under one scheme's per-layer scaling.
+pub fn offchip_energy(
+    study: &CompressionStudy,
+    cfg: &ModelConfig,
+    scheme: Scheme,
+    with_engines: bool,
+) -> f64 {
+    let sim = AcceleratorSim::new(AcceleratorConfig::paper());
+    let mc = study.get(cfg.name, scheme).expect("model in study");
+    // Per-layer scaling is deliberately NOT clamped at 1.0: a scheme that
+    // *expands* traffic (RLE on unpruned weights, Fig 5b) must pay for it.
+    let results = sim.simulate_model(cfg, &|i| {
+        let lc = mc.per_layer.get(i).copied().unwrap_or(crate::eval::LayerCompression {
+            weights_norm: 1.0,
+            acts_norm: 1.0,
+        });
+        TrafficScaling { weights: lc.weights_norm, activations: lc.acts_norm }
+    });
+    let total_time = AcceleratorSim::total_time(&results);
+    let read: u64 = results.iter().map(|r| r.dram_read_bytes).sum();
+    let write: u64 = results.iter().map(|r| r.dram_write_bytes).sum();
+    let dram = DramPowerModel::new(sim.cfg.dram);
+    let mut e = dram.traffic_energy(read, write, total_time).total_j();
+    if with_engines {
+        let engines = EngineArrayConfig::paper_64();
+        let mem_time: f64 = results.iter().map(|r| r.memory_s).sum();
+        e += engines.total_power_mw() * 1e-3 * mem_time;
+    }
+    e
+}
+
+/// Rows: model, normalized off-chip energy for SS and APack (vs baseline).
+pub fn fig6_rows(study: &CompressionStudy) -> Vec<Vec<String>> {
+    all_models()
+        .iter()
+        .filter(|cfg| study.get(cfg.name, Scheme::Baseline).is_some())
+        .map(|cfg| {
+            let base = offchip_energy(study, cfg, Scheme::Baseline, false);
+            let ss = offchip_energy(study, cfg, Scheme::ShapeShifter, true) / base;
+            let ap = offchip_energy(study, cfg, Scheme::Apack, true) / base;
+            vec![cfg.name.to_string(), format!("{ss:.3}"), format!("{ap:.3}")]
+        })
+        .collect()
+}
+
+/// Render Fig 6.
+pub fn render(study: &CompressionStudy) -> String {
+    let rows = fig6_rows(study);
+    let mut out = render_table(
+        "Fig 6: normalized off-chip energy (lower is better)",
+        &["model", "ShapeShifter", "APack"],
+        &rows,
+    );
+    let mean = |col: usize| {
+        let vals: Vec<f64> =
+            rows.iter().filter_map(|r| r[col].parse::<f64>().ok()).collect();
+        super::study::geomean(&vals)
+    };
+    out.push_str(&format!(
+        "geomean: ShapeShifter {:.3}, APack {:.3}\n",
+        mean(1),
+        mean(2)
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo::model_by_name;
+
+    #[test]
+    fn apack_saves_offchip_energy() {
+        let models = vec![
+            model_by_name("alexnet_eyeriss").unwrap(),
+            model_by_name("ncf").unwrap(),
+        ];
+        let study = CompressionStudy::run(&models, &[Scheme::Baseline, Scheme::Apack]);
+        for cfg in &models {
+            let base = offchip_energy(&study, cfg, Scheme::Baseline, false);
+            let ap = offchip_energy(&study, cfg, Scheme::Apack, true);
+            assert!(ap < base, "{}: {ap} vs {base}", cfg.name);
+        }
+        // Pruned AlexNet saves much more than NCF (paper: 91% vs 13–50%).
+        let a = offchip_energy(&study, &models[0], Scheme::Apack, true)
+            / offchip_energy(&study, &models[0], Scheme::Baseline, false);
+        let n = offchip_energy(&study, &models[1], Scheme::Apack, true)
+            / offchip_energy(&study, &models[1], Scheme::Baseline, false);
+        assert!(a < n, "alexnet {a:.3} should save more than ncf {n:.3}");
+    }
+}

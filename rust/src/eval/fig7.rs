@@ -1,0 +1,86 @@
+//! Fig 7: overall speedup of the TensorCore accelerator with off-chip
+//! compression, versus the uncompressed baseline. The study covers the
+//! model subset the paper runs through the ShapeShifter-compatible
+//! simulator (`in_perf_study` in the zoo).
+
+use crate::models::zoo::{all_models, ModelConfig};
+use crate::simulator::accelerator::{AcceleratorConfig, AcceleratorSim, TrafficScaling};
+
+use super::study::{geomean, CompressionStudy, Scheme};
+use super::render_table;
+
+/// Inference latency for one model under a scheme's per-layer scaling.
+pub fn latency_s(study: &CompressionStudy, cfg: &ModelConfig, scheme: Scheme) -> f64 {
+    let sim = AcceleratorSim::new(AcceleratorConfig::paper());
+    let mc = study.get(cfg.name, scheme).expect("model in study");
+    let results = sim.simulate_model(cfg, &|i| {
+        let lc = mc.per_layer[i];
+        TrafficScaling { weights: lc.weights_norm, activations: lc.acts_norm }
+    });
+    AcceleratorSim::total_time(&results)
+}
+
+/// Models in the performance study.
+pub fn perf_models() -> Vec<ModelConfig> {
+    all_models().into_iter().filter(|m| m.in_perf_study).collect()
+}
+
+/// Rows: model, SS speedup, APack speedup.
+pub fn fig7_rows(study: &CompressionStudy) -> Vec<Vec<String>> {
+    perf_models()
+        .iter()
+        .filter(|cfg| study.get(cfg.name, Scheme::Baseline).is_some())
+        .map(|cfg| {
+            let base = latency_s(study, cfg, Scheme::Baseline);
+            let ss = base / latency_s(study, cfg, Scheme::ShapeShifter);
+            let ap = base / latency_s(study, cfg, Scheme::Apack);
+            vec![cfg.name.to_string(), format!("{ss:.3}"), format!("{ap:.3}")]
+        })
+        .collect()
+}
+
+/// Mean speedups `(shapeshifter, apack)` — the paper's headline numbers
+/// are SS 1.30×, APack 1.44×.
+pub fn mean_speedups(study: &CompressionStudy) -> (f64, f64) {
+    let rows = fig7_rows(study);
+    let col = |i: usize| {
+        geomean(&rows.iter().filter_map(|r| r[i].parse::<f64>().ok()).collect::<Vec<_>>())
+    };
+    (col(1), col(2))
+}
+
+/// Render Fig 7.
+pub fn render(study: &CompressionStudy) -> String {
+    let mut out = render_table(
+        "Fig 7: overall speedup vs baseline accelerator (higher is better)",
+        &["model", "ShapeShifter", "APack"],
+        &fig7_rows(study),
+    );
+    let (ss, ap) = mean_speedups(study);
+    out.push_str(&format!(
+        "geomean speedup: ShapeShifter {ss:.3}x (paper 1.30x), APack {ap:.3}x (paper 1.44x)\n"
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo::model_by_name;
+
+    #[test]
+    fn apack_speedup_at_least_shapeshifter() {
+        let models = vec![model_by_name("ncf").unwrap(), model_by_name("bilstm").unwrap()];
+        let study = CompressionStudy::run(
+            &models,
+            &[Scheme::Baseline, Scheme::ShapeShifter, Scheme::Apack],
+        );
+        for cfg in &models {
+            let base = latency_s(&study, cfg, Scheme::Baseline);
+            let ss = base / latency_s(&study, cfg, Scheme::ShapeShifter);
+            let ap = base / latency_s(&study, cfg, Scheme::Apack);
+            assert!(ap >= 1.0, "{}: APack slows down? {ap}", cfg.name);
+            assert!(ap >= ss - 1e-9, "{}: APack {ap} < SS {ss}", cfg.name);
+        }
+    }
+}

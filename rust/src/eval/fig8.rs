@@ -1,0 +1,91 @@
+//! Fig 8: overall energy efficiency (baseline energy / scheme energy,
+//! including on-chip compute + SRAM + DRAM + engine overhead). Paper
+//! headline: APack 1.37×, ShapeShifter 1.23×.
+
+use crate::models::zoo::ModelConfig;
+use crate::simulator::accelerator::{AcceleratorConfig, AcceleratorSim, TrafficScaling};
+use crate::simulator::energy::EnergyModel;
+use crate::simulator::engine::EngineArrayConfig;
+
+use super::fig7::perf_models;
+use super::study::{geomean, CompressionStudy, Scheme};
+use super::render_table;
+
+/// Total inference energy (J) for a model under a scheme.
+pub fn total_energy(study: &CompressionStudy, cfg: &ModelConfig, scheme: Scheme) -> f64 {
+    let sim = AcceleratorSim::new(AcceleratorConfig::paper());
+    let mc = study.get(cfg.name, scheme).expect("model in study");
+    let results = sim.simulate_model(cfg, &|i| {
+        let lc = mc.per_layer[i];
+        TrafficScaling { weights: lc.weights_norm, activations: lc.acts_norm }
+    });
+    let total_time = AcceleratorSim::total_time(&results);
+    let engines = match scheme {
+        Scheme::Baseline => None,
+        _ => Some(EngineArrayConfig::paper_64()),
+    };
+    let em = EnergyModel::new(&sim, engines);
+    em.inference_energy(&results, total_time).total_j()
+}
+
+/// Rows: model, SS efficiency, APack efficiency (baseline/scheme).
+pub fn fig8_rows(study: &CompressionStudy) -> Vec<Vec<String>> {
+    perf_models()
+        .iter()
+        .filter(|cfg| study.get(cfg.name, Scheme::Baseline).is_some())
+        .map(|cfg| {
+            let base = total_energy(study, cfg, Scheme::Baseline);
+            let ss = base / total_energy(study, cfg, Scheme::ShapeShifter);
+            let ap = base / total_energy(study, cfg, Scheme::Apack);
+            vec![cfg.name.to_string(), format!("{ss:.3}"), format!("{ap:.3}")]
+        })
+        .collect()
+}
+
+/// Mean efficiencies `(shapeshifter, apack)`.
+pub fn mean_efficiencies(study: &CompressionStudy) -> (f64, f64) {
+    let rows = fig8_rows(study);
+    let col = |i: usize| {
+        geomean(&rows.iter().filter_map(|r| r[i].parse::<f64>().ok()).collect::<Vec<_>>())
+    };
+    (col(1), col(2))
+}
+
+/// Render Fig 8.
+pub fn render(study: &CompressionStudy) -> String {
+    let mut out = render_table(
+        "Fig 8: overall energy efficiency vs baseline (higher is better)",
+        &["model", "ShapeShifter", "APack"],
+        &fig8_rows(study),
+    );
+    let (ss, ap) = mean_efficiencies(study);
+    out.push_str(&format!(
+        "geomean efficiency: ShapeShifter {ss:.3}x (paper 1.23x), APack {ap:.3}x (paper 1.37x)\n"
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo::model_by_name;
+
+    #[test]
+    fn apack_boosts_efficiency_for_all_models() {
+        // Paper: "APack boosts the energy efficiency over the baseline
+        // accelerator for all the experimented models."
+        let models = vec![
+            model_by_name("alexnet_eyeriss").unwrap(),
+            model_by_name("q8bert").unwrap(),
+        ];
+        let study = CompressionStudy::run(
+            &models,
+            &[Scheme::Baseline, Scheme::ShapeShifter, Scheme::Apack],
+        );
+        for cfg in &models {
+            let base = total_energy(&study, cfg, Scheme::Baseline);
+            let ap = total_energy(&study, cfg, Scheme::Apack);
+            assert!(ap < base, "{}: {ap} !< {base}", cfg.name);
+        }
+    }
+}

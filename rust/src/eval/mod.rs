@@ -1,0 +1,68 @@
+//! Evaluation harness: regenerates every table and figure of the paper's
+//! §VII (see DESIGN.md §5 for the experiment index).
+//!
+//! - [`table1`] — the example symbol/probability table (paper Table I).
+//! - [`fig2`] — cumulative value distributions.
+//! - [`fig5`] — normalized off-chip traffic, activations (5a) and
+//!   weights (5b), for Baseline / RLE / RLEZ / ShapeShifter / APack.
+//! - [`area_power`] — §VII-B silicon numbers and the DRAM-power overhead.
+//! - [`fig6`] — normalized off-chip energy.
+//! - [`fig7`] — overall speedup on the TensorCore accelerator.
+//! - [`fig8`] — overall energy efficiency.
+//!
+//! All figures derive from one shared [`CompressionStudy`] so the traffic,
+//! energy and performance numbers are mutually consistent.
+
+pub mod area_power;
+pub mod e2e;
+pub mod fig2;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod study;
+pub mod table1;
+
+pub use study::{CompressionStudy, LayerCompression, ModelCompression, Scheme};
+
+/// Fixed seed for every evaluation run — figures are exactly reproducible.
+pub const EVAL_SEED: u64 = 0xA9AC_2022;
+
+/// Values sampled per tensor for codec measurements (footprints scale to
+/// the true element counts; see `models::trace`).
+pub const SAMPLE_CAP: usize = 16 * 1024;
+
+/// Activation profiling inputs pooled per layer (paper: up to 9).
+pub const PROFILE_SAMPLES: usize = 9;
+
+/// Render a markdown-ish table from headers + rows (used by the CLI and
+/// bench output so every figure prints in one consistent format).
+pub fn render_table(title: &str, headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut s = format!("\n== {title} ==\n");
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let header_cells: Vec<String> = headers.iter().map(|h| h.to_string()).collect();
+    s.push_str(&fmt_row(&header_cells, &widths));
+    s.push('\n');
+    s.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+    s.push('\n');
+    for row in rows {
+        s.push_str(&fmt_row(row, &widths));
+        s.push('\n');
+    }
+    s
+}

@@ -1,0 +1,300 @@
+//! The shared compression study: per-model, per-layer footprints under
+//! every scheme, computed once and reused by Figs 5–8.
+
+use crate::apack::container::META_BYTES;
+use crate::apack::encoder::ApackEncoder;
+use crate::apack::tablegen::{generate_table, TableGenConfig, TensorKind};
+use crate::apack::Histogram;
+use crate::baselines::{rle_compressed_bits, rlez_compressed_bits, ss_compressed_bits, ShapeShifterConfig};
+use crate::models::trace::ModelTrace;
+use crate::models::zoo::{all_models, ModelConfig};
+
+use super::{EVAL_SEED, PROFILE_SAMPLES, SAMPLE_CAP};
+
+/// A compression scheme in the study.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    Baseline,
+    Rle,
+    Rlez,
+    ShapeShifter,
+    Apack,
+}
+
+impl Scheme {
+    /// The Fig 5 legend order.
+    pub const ALL: [Scheme; 5] =
+        [Scheme::Baseline, Scheme::Rle, Scheme::Rlez, Scheme::ShapeShifter, Scheme::Apack];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Scheme::Baseline => "Baseline",
+            Scheme::Rle => "RLE",
+            Scheme::Rlez => "RLEZ",
+            Scheme::ShapeShifter => "ShapeShifter",
+            Scheme::Apack => "APack",
+        }
+    }
+}
+
+/// Per-layer compression outcome: normalized bits/value per tensor kind.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerCompression {
+    /// Compressed weight bits / raw weight bits (1.0 = no gain).
+    pub weights_norm: f64,
+    /// Compressed activation bits / raw bits (1.0 when not studied).
+    pub acts_norm: f64,
+}
+
+/// Per-model aggregate for one scheme.
+#[derive(Debug, Clone)]
+pub struct ModelCompression {
+    pub model: String,
+    pub scheme: Scheme,
+    pub per_layer: Vec<LayerCompression>,
+    /// Traffic-weighted normalized weight footprint (Fig 5b bar).
+    pub weights_norm: f64,
+    /// Traffic-weighted normalized activation footprint (Fig 5a bar), NaN
+    /// if activations are not studied for this model.
+    pub acts_norm: f64,
+}
+
+impl ModelCompression {
+    /// Compression ratio (raw/compressed) for weights.
+    pub fn weights_ratio(&self) -> f64 {
+        1.0 / self.weights_norm
+    }
+
+    /// Compression ratio for activations.
+    pub fn acts_ratio(&self) -> f64 {
+        1.0 / self.acts_norm
+    }
+}
+
+/// Footprint in bits of one sampled tensor under one scheme, **scaled to
+/// the full tensor size**. `profile` is the profiling histogram used for
+/// APack's table (activations use pooled samples; weights use the tensor
+/// itself, as in the paper).
+fn scheme_bits(
+    scheme: Scheme,
+    bits: u32,
+    sample: &[u32],
+    full_elems: u64,
+    profile: &Histogram,
+    kind: TensorKind,
+) -> f64 {
+    if sample.is_empty() || full_elems == 0 {
+        return 0.0;
+    }
+    let scale = full_elems as f64 / sample.len() as f64;
+    let raw_per_tensor = |stream_bits: f64| stream_bits * scale;
+    match scheme {
+        Scheme::Baseline => (full_elems * bits as u64) as f64,
+        Scheme::Rle => raw_per_tensor(rle_compressed_bits(sample, bits) as f64),
+        Scheme::Rlez => raw_per_tensor(rlez_compressed_bits(sample, bits) as f64),
+        Scheme::ShapeShifter => {
+            raw_per_tensor(ss_compressed_bits(sample, &ShapeShifterConfig::for_bits(bits)) as f64)
+        }
+        Scheme::Apack => {
+            let table = match generate_table(profile, kind, &TableGenConfig::for_bits(bits)) {
+                Ok(t) => t,
+                Err(_) => return (full_elems * bits as u64) as f64,
+            };
+            match ApackEncoder::encode_all(&table, sample) {
+                Ok((_, sym_bits, _, ofs_bits)) => {
+                    raw_per_tensor((sym_bits + ofs_bits) as f64) + (META_BYTES * 8) as f64
+                }
+                // A profiled table can miss a fresh value only if
+                // count-stealing was skipped (weights); fall back to raw.
+                Err(_) => (full_elems * bits as u64) as f64,
+            }
+        }
+    }
+}
+
+/// The full study over the zoo.
+#[derive(Debug, Clone)]
+pub struct CompressionStudy {
+    pub results: Vec<ModelCompression>,
+}
+
+impl CompressionStudy {
+    /// Run the study over `models` (default: the whole zoo) × `schemes`.
+    pub fn run(models: &[ModelConfig], schemes: &[Scheme]) -> Self {
+        let results: Vec<ModelCompression> = crate::util::par_map(models, |cfg| {
+            let trace = ModelTrace::synthesize(cfg, SAMPLE_CAP, PROFILE_SAMPLES, EVAL_SEED);
+            schemes
+                .iter()
+                .map(|&scheme| Self::study_model(cfg, &trace, scheme))
+                .collect::<Vec<ModelCompression>>()
+        })
+        .into_iter()
+        .flatten()
+        .collect();
+        Self { results }
+    }
+
+    /// Default full study (all 24 models × all 5 schemes).
+    pub fn full() -> Self {
+        Self::run(&all_models(), &Scheme::ALL)
+    }
+
+    fn study_model(cfg: &ModelConfig, trace: &ModelTrace, scheme: Scheme) -> ModelCompression {
+        let mut per_layer = Vec::with_capacity(trace.layers.len());
+        let mut w_comp = 0.0;
+        let mut w_raw = 0.0;
+        let mut a_comp = 0.0;
+        let mut a_raw = 0.0;
+        for l in &trace.layers {
+            let bits = l.bits;
+            // Weights: table profiled from the tensor itself (§VI — a
+            // single pass suffices since weights are static).
+            let w_hist = Histogram::from_values(bits, &l.weights);
+            let wc =
+                scheme_bits(scheme, bits, &l.weights, l.weight_elems, &w_hist, TensorKind::Weights);
+            let wr = (l.weight_elems * bits as u64) as f64;
+            // Activations: table profiled from pooled samples, applied to
+            // the fresh tensor.
+            let (ac, ar) = if l.activations.is_empty() {
+                (0.0, 0.0)
+            } else {
+                let a_hist = Histogram::from_values(bits, &l.act_profile_samples);
+                (
+                    scheme_bits(
+                        scheme,
+                        bits,
+                        &l.activations,
+                        l.act_elems,
+                        &a_hist,
+                        TensorKind::Activations,
+                    ),
+                    (l.act_elems * bits as u64) as f64,
+                )
+            };
+            per_layer.push(LayerCompression {
+                weights_norm: if wr > 0.0 { (wc / wr).max(1e-6) } else { 1.0 },
+                acts_norm: if ar > 0.0 { (ac / ar).max(1e-6) } else { 1.0 },
+            });
+            w_comp += wc;
+            w_raw += wr;
+            a_comp += ac;
+            a_raw += ar;
+        }
+        ModelCompression {
+            model: cfg.name.to_string(),
+            scheme,
+            per_layer,
+            weights_norm: if w_raw > 0.0 { w_comp / w_raw } else { 1.0 },
+            acts_norm: if a_raw > 0.0 { a_comp / a_raw } else { f64::NAN },
+        }
+    }
+
+    /// Result for a (model, scheme) pair.
+    pub fn get(&self, model: &str, scheme: Scheme) -> Option<&ModelCompression> {
+        self.results.iter().find(|r| r.model == model && r.scheme == scheme)
+    }
+
+    /// Geometric-mean normalized traffic across models for a scheme.
+    pub fn mean_weights_norm(&self, scheme: Scheme) -> f64 {
+        let vals: Vec<f64> = self
+            .results
+            .iter()
+            .filter(|r| r.scheme == scheme)
+            .map(|r| r.weights_norm)
+            .collect();
+        geomean(&vals)
+    }
+
+    /// Geometric-mean normalized activation traffic (studied models only).
+    pub fn mean_acts_norm(&self, scheme: Scheme) -> f64 {
+        let vals: Vec<f64> = self
+            .results
+            .iter()
+            .filter(|r| r.scheme == scheme && !r.acts_norm.is_nan())
+            .map(|r| r.acts_norm)
+            .collect();
+        geomean(&vals)
+    }
+}
+
+/// Geometric mean.
+pub fn geomean(vals: &[f64]) -> f64 {
+    if vals.is_empty() {
+        return f64::NAN;
+    }
+    (vals.iter().map(|v| v.ln()).sum::<f64>() / vals.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo::model_by_name;
+
+    fn mini_study() -> CompressionStudy {
+        let models = vec![
+            model_by_name("resnet18").unwrap(),
+            model_by_name("alexnet_eyeriss").unwrap(),
+            model_by_name("resnet101").unwrap(),
+        ];
+        CompressionStudy::run(&models, &Scheme::ALL)
+    }
+
+    #[test]
+    fn apack_always_reduces_traffic() {
+        // The paper's robustness claim: APack never increases traffic.
+        let s = mini_study();
+        for r in s.results.iter().filter(|r| r.scheme == Scheme::Apack) {
+            assert!(r.weights_norm < 1.0, "{}: weights {}", r.model, r.weights_norm);
+            if !r.acts_norm.is_nan() {
+                assert!(r.acts_norm < 1.0, "{}: acts {}", r.model, r.acts_norm);
+            }
+        }
+    }
+
+    #[test]
+    fn apack_beats_all_baselines() {
+        let s = mini_study();
+        for model in ["resnet18", "alexnet_eyeriss", "resnet101"] {
+            let apack = s.get(model, Scheme::Apack).unwrap().weights_norm;
+            for other in [Scheme::Rle, Scheme::Rlez, Scheme::ShapeShifter] {
+                let o = s.get(model, other).unwrap().weights_norm;
+                assert!(
+                    apack <= o + 1e-9,
+                    "{model}: APack {apack:.3} vs {other:?} {o:.3}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rle_expands_unpruned_weights() {
+        // Paper: "RLE and RLEZ result in increasing traffic for weights" on
+        // Torchvision models.
+        let s = mini_study();
+        let r = s.get("resnet18", Scheme::Rle).unwrap();
+        assert!(r.weights_norm > 1.0, "{}", r.weights_norm);
+    }
+
+    #[test]
+    fn pruned_models_compress_most() {
+        let s = mini_study();
+        let pruned = s.get("alexnet_eyeriss", Scheme::Apack).unwrap().weights_norm;
+        let tv = s.get("resnet18", Scheme::Apack).unwrap().weights_norm;
+        assert!(pruned < tv, "pruned {pruned} vs torchvision {tv}");
+        assert!(pruned < 0.35, "pruned weights norm {pruned}");
+    }
+
+    #[test]
+    fn baseline_norm_is_one() {
+        let s = mini_study();
+        for r in s.results.iter().filter(|r| r.scheme == Scheme::Baseline) {
+            assert!((r.weights_norm - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!(geomean(&[]).is_nan());
+    }
+}

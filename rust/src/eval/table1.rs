@@ -1,0 +1,68 @@
+//! Table I regeneration: the symbol + probability-count table APack's
+//! generator produces for a BILSTM weight layer.
+
+use crate::apack::tablegen::{generate_table, TableGenConfig, TensorKind};
+use crate::apack::{Histogram, SymbolTable};
+use crate::models::trace::ModelTrace;
+use crate::models::zoo::model_by_name;
+
+use super::{EVAL_SEED, PROFILE_SAMPLES, SAMPLE_CAP};
+
+/// Generate the table for a model's layer-`layer` weights.
+pub fn table_for(model: &str, layer: usize, kind: TensorKind) -> Option<SymbolTable> {
+    let cfg = model_by_name(model)?;
+    let trace = ModelTrace::synthesize(&cfg, SAMPLE_CAP, PROFILE_SAMPLES, EVAL_SEED);
+    let l = trace.layers.get(layer)?;
+    let values = match kind {
+        TensorKind::Weights => &l.weights,
+        TensorKind::Activations => &l.activations,
+    };
+    if values.is_empty() {
+        return None;
+    }
+    let hist = Histogram::from_values(cfg.bits, values);
+    generate_table(&hist, kind, &TableGenConfig::for_bits(cfg.bits)).ok()
+}
+
+/// Render the Table I analogue (BILSTM layer-1 weights).
+pub fn render() -> String {
+    let mut s =
+        String::from("\n== Table I: symbol & probability count table, bilstm L1 weights ==\n");
+    match table_for("bilstm", 1, TensorKind::Weights) {
+        Some(t) => s.push_str(&t.render()),
+        None => s.push_str("(unavailable)\n"),
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apack::NUM_ROWS;
+
+    #[test]
+    fn bilstm_table_shape_matches_paper_qualitatively() {
+        let t = table_for("bilstm", 1, TensorKind::Weights).unwrap();
+        // Paper Table I properties: row 0 starts at 0 with high
+        // probability, top row near 0xFF with high probability, most mass
+        // at the two extremes of the value space.
+        let p0 = t.probability(0);
+        let p_last = t.probability(NUM_ROWS - 1);
+        assert!(p0 > 0.2, "row0 p = {p0}\n{}", t.render());
+        assert!(p_last > 0.1, "last row p = {p_last}\n{}", t.render());
+        // Middle of the value space carries little probability.
+        let mid: f64 = (0..NUM_ROWS)
+            .filter(|&i| t.rows()[i].v_min >= 0x20 && t.rows()[i].v_max <= 0xDF)
+            .map(|i| t.probability(i))
+            .sum();
+        assert!(mid < 0.2, "middle mass {mid}\n{}", t.render());
+    }
+
+    #[test]
+    fn activation_table_generation_works_too() {
+        let t = table_for("bilstm", 1, TensorKind::Activations).unwrap();
+        for i in 0..NUM_ROWS {
+            assert!(t.rows()[i].hi_cnt >= t.lo_cnt(i));
+        }
+    }
+}

@@ -1,0 +1,45 @@
+//! # apack-repro
+//!
+//! Full-system reproduction of **APack: Off-Chip, Lossless Data Compression
+//! for Efficient Deep Learning Inference** (Delmas Lascorz, Mahmoud,
+//! Moshovos; cs.AR 2022).
+//!
+//! APack losslessly compresses fixed-point DNN weight/activation tensors on
+//! the path between the on-chip memory hierarchy and the off-chip DRAM
+//! controller. Each value `v` is mapped through a 16-entry partition of the
+//! value space into a `(symbol, offset)` pair where `v = v_min[symbol] +
+//! offset`; the symbol stream is arithmetically coded with 10-bit probability
+//! counts and 16-bit finite-precision range registers (the hardware algorithm
+//! of paper §V), while the offset stream stores `OL[symbol]` raw bits per
+//! value. A profiling-driven heuristic (paper §VI, Listing 1) chooses the
+//! partition per tensor.
+//!
+//! The crate contains, per DESIGN.md:
+//!
+//! - [`apack`] — the codec itself: bit-exact hardware-model encoder/decoder,
+//!   table generation, histograms, stream containers.
+//! - [`baselines`] — the comparison codecs of paper §VII: RLE, RLEZ and
+//!   ShapeShifter.
+//! - [`models`] — the 24-network model zoo of Table II plus synthetic
+//!   value-distribution generators standing in for the proprietary traces.
+//! - [`simulator`] — DDR4-3200 DRAM power/timing model, APack engine
+//!   cycle/area/power model, and the TensorCore accelerator model of
+//!   Table III.
+//! - [`coordinator`] — the L3 runtime: substream partitioning, parallel
+//!   engine pool, metrics.
+//! - [`runtime`] — PJRT client that loads the AOT-lowered JAX/Pallas model
+//!   (HLO text) and runs real inference to produce activation traces.
+//! - [`eval`] — regeneration harness for every table and figure in the
+//!   paper's evaluation section.
+
+pub mod apack;
+pub mod baselines;
+pub mod coordinator;
+pub mod error;
+pub mod eval;
+pub mod models;
+pub mod runtime;
+pub mod simulator;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,187 @@
+//! `apack-repro` CLI: compress/decompress tensors, print the paper's
+//! tables and figures, and run the end-to-end PJRT inference demo.
+//!
+//! (Argument parsing is hand-rolled — this build environment has no clap.)
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use apack_repro::apack::tablegen::TensorKind;
+use apack_repro::coordinator::{Coordinator, PartitionPolicy, ShardedContainer};
+use apack_repro::eval::{self, CompressionStudy};
+use apack_repro::models::zoo::all_models;
+
+const USAGE: &str = "\
+apack-repro — APack off-chip lossless compression, full-system reproduction
+
+USAGE:
+  apack-repro compress <input> [--output <file>] [--kind weights|activations] [--substreams N]
+  apack-repro decompress <input> --output <file>
+  apack-repro table [--model NAME] [--layer N] [--kind weights|activations]
+  apack-repro fig --id <2|5a|5b|6|7|8>
+  apack-repro area-power
+  apack-repro summary
+  apack-repro models
+  apack-repro e2e [--artifacts DIR] [--batches N]
+";
+
+/// Minimal flag parser: positional args + `--key value` pairs.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                let val = argv.get(i + 1).cloned().unwrap_or_default();
+                flags.insert(key.to_string(), val);
+                i += 2;
+            } else {
+                positional.push(argv[i].clone());
+                i += 1;
+            }
+        }
+        Self { positional, flags }
+    }
+
+    fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn flag_or(&self, key: &str, default: &str) -> String {
+        self.flag(key).unwrap_or(default).to_string()
+    }
+}
+
+fn parse_kind(s: &str) -> TensorKind {
+    if s.eq_ignore_ascii_case("activations") {
+        TensorKind::Activations
+    } else {
+        TensorKind::Weights
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..]);
+
+    match cmd.as_str() {
+        "compress" => {
+            let input = PathBuf::from(
+                args.positional.first().ok_or_else(|| anyhow::anyhow!("missing <input>"))?,
+            );
+            let data = std::fs::read(&input)?;
+            let values: Vec<u32> = data.iter().map(|&b| b as u32).collect();
+            let substreams: u32 = args.flag_or("substreams", "64").parse()?;
+            let mut coord = Coordinator::new(PartitionPolicy {
+                substreams,
+                ..PartitionPolicy::default()
+            });
+            let kind = parse_kind(&args.flag_or("kind", "weights"));
+            let sc = coord.compress(8, &values, kind, None)?;
+            println!(
+                "{}: {} values -> {} bits ({:.3} bits/value, ratio {:.2}x, {} shards)",
+                input.display(),
+                sc.n_values,
+                sc.footprint_bits(),
+                sc.footprint_bits() as f64 / sc.n_values.max(1) as f64,
+                sc.compression_ratio(),
+                sc.shards.len()
+            );
+            if let Some(out) = args.flag("output") {
+                std::fs::write(out, sc.to_bytes())?;
+                println!("wrote container to {out}");
+            }
+        }
+        "decompress" => {
+            let input = PathBuf::from(
+                args.positional.first().ok_or_else(|| anyhow::anyhow!("missing <input>"))?,
+            );
+            let output = args.flag("output").ok_or_else(|| anyhow::anyhow!("--output required"))?;
+            let sc = ShardedContainer::from_bytes(&std::fs::read(&input)?)?;
+            let mut coord = Coordinator::new(PartitionPolicy::default());
+            let values = coord.decompress(&sc)?;
+            let bytes: Vec<u8> = values.iter().map(|&v| v as u8).collect();
+            std::fs::write(output, bytes)?;
+            println!("decoded {} values to {output}", values.len());
+        }
+        "table" => {
+            let model = args.flag_or("model", "bilstm");
+            let layer: usize = args.flag_or("layer", "1").parse()?;
+            let kind = parse_kind(&args.flag_or("kind", "weights"));
+            match eval::table1::table_for(&model, layer, kind) {
+                Some(t) => println!("{}", t.render()),
+                None => println!("no such model/layer or tensor not studied"),
+            }
+        }
+        "fig" => {
+            let id = args.flag("id").ok_or_else(|| anyhow::anyhow!("--id required"))?;
+            match id {
+                "2" => println!("{}", eval::fig2::render()),
+                "5" | "5a" | "5b" => {
+                    let study = CompressionStudy::full();
+                    println!("{}", eval::fig5::render(&study));
+                }
+                "6" => {
+                    let study = CompressionStudy::full();
+                    println!("{}", eval::fig6::render(&study));
+                }
+                "7" => {
+                    let study = CompressionStudy::full();
+                    println!("{}", eval::fig7::render(&study));
+                }
+                "8" => {
+                    let study = CompressionStudy::full();
+                    println!("{}", eval::fig8::render(&study));
+                }
+                other => anyhow::bail!("unknown figure id {other} (try 2, 5a, 5b, 6, 7, 8)"),
+            }
+        }
+        "area-power" => println!("{}", eval::area_power::render()),
+        "summary" => {
+            let study = CompressionStudy::full();
+            println!("{}", eval::fig5::render(&study));
+        }
+        "models" => {
+            for m in all_models() {
+                println!(
+                    "{:<20} {:?}  {}b  {} layers  {:.2} GMACs  {:.1} M params{}",
+                    m.name,
+                    m.family,
+                    m.bits,
+                    m.layers.len(),
+                    m.total_macs() as f64 / 1e9,
+                    m.total_weights() as f64 / 1e6,
+                    if m.in_perf_study { "  [perf-study]" } else { "" }
+                );
+            }
+        }
+        "e2e" => {
+            let artifacts = PathBuf::from(args.flag_or("artifacts", "artifacts"));
+            let batches: usize = args.flag_or("batches", "4").parse()?;
+            eval::e2e::run(&artifacts, batches)?;
+        }
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        other => anyhow::bail!("unknown command {other}\n{USAGE}"),
+    }
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}

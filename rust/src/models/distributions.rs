@@ -1,0 +1,207 @@
+//! Synthetic value-distribution generators.
+//!
+//! The paper profiles 24 real quantized models; those checkpoints and their
+//! GPU traces are not available here, so each model's weight/activation
+//! value streams are synthesized from the distribution *families* the paper
+//! describes per quantizer (§VII-A):
+//!
+//! - **Torchvision int8**: values cluster near zero and near the top of the
+//!   range (two's-complement negatives), but "the lower bits tend to be
+//!   noisy" — the quantizer uses the full range whether needed or not. We
+//!   model this as a two-sided discretized geometric around zero plus a
+//!   uniform noise floor.
+//! - **IntelAI int8**: "more skewed distributions for weights" — same shape
+//!   with a sharper decay and a much smaller noise floor.
+//! - **Pruned** (Eyeriss AlexNet/GoogLeNet): a large spike at zero
+//!   (70–90 % sparsity) over a skewed remainder.
+//! - **PACT int4 / per-layer trimmed**: the same shapes on narrower value
+//!   spaces.
+//! - **ReLU activations**: a zero spike (the well-known activation
+//!   sparsity) plus a one-sided decaying tail; **attention/recurrent
+//!   activations** (Q8BERT, BILSTM) are two-sided like Fig 2.
+//!
+//! All sampling is deterministic given a seed (xoshiro256**), so every
+//! figure is exactly reproducible.
+
+use crate::util::Rng64;
+
+/// Parameterized distribution over a `bits`-wide unsigned value space.
+/// Signed families place negatives at the top of the range (two's
+/// complement), matching the quantized-integer streams APack sees.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ValueProfile {
+    /// Two-sided discretized geometric around 0 (signed, two's complement)
+    /// with a uniform noise floor: `p(k) ∝ (1-floor)·q^|k| + floor/2^bits`.
+    TwoSidedGeometric {
+        /// Decay per step away from zero, in (0, 1). Smaller = more skewed.
+        q: f64,
+        /// Fraction of probability mass spread uniformly (quantizer noise).
+        noise_floor: f64,
+    },
+    /// Zero spike + two-sided geometric remainder (pruned weights).
+    Sparse {
+        /// Probability of exact zero.
+        sparsity: f64,
+        /// Decay of the non-zero remainder.
+        q: f64,
+    },
+    /// Zero spike + one-sided geometric tail (post-ReLU activations).
+    ReluActivation {
+        /// Probability of exact zero.
+        sparsity: f64,
+        /// Decay per step above zero.
+        q: f64,
+        /// Uniform noise floor fraction.
+        noise_floor: f64,
+    },
+    /// Uniform over the whole space (worst case; sanity baseline).
+    Uniform,
+}
+
+impl ValueProfile {
+    /// Probability mass function over the `2^bits` values.
+    pub fn pmf(&self, bits: u32) -> Vec<f64> {
+        let n = 1usize << bits;
+        let mut p = vec![0.0f64; n];
+        match *self {
+            ValueProfile::Uniform => {
+                p.fill(1.0 / n as f64);
+            }
+            ValueProfile::TwoSidedGeometric { q, noise_floor } => {
+                // Signed magnitude |k| for two's-complement value v.
+                let half = n as i64 / 2;
+                let mut norm = 0.0;
+                for (v, pv) in p.iter_mut().enumerate() {
+                    let k = if (v as i64) < half { v as i64 } else { v as i64 - n as i64 };
+                    *pv = q.powi(k.unsigned_abs() as i32);
+                    norm += *pv;
+                }
+                for pv in p.iter_mut() {
+                    *pv = (1.0 - noise_floor) * *pv / norm + noise_floor / n as f64;
+                }
+            }
+            ValueProfile::Sparse { sparsity, q } => {
+                let base = ValueProfile::TwoSidedGeometric { q, noise_floor: 0.002 }.pmf(bits);
+                // Remove the zero bucket from the remainder, renormalize.
+                let rem: f64 = base.iter().skip(1).sum::<f64>() + 0.0;
+                for (v, pv) in p.iter_mut().enumerate() {
+                    *pv = if v == 0 {
+                        sparsity
+                    } else {
+                        (1.0 - sparsity) * base[v] / rem
+                    };
+                }
+            }
+            ValueProfile::ReluActivation { sparsity, q, noise_floor } => {
+                let mut norm = 0.0;
+                for (v, pv) in p.iter_mut().enumerate().skip(1) {
+                    *pv = q.powi(v as i32);
+                    norm += *pv;
+                }
+                for (v, pv) in p.iter_mut().enumerate() {
+                    *pv = if v == 0 {
+                        sparsity + noise_floor / n as f64
+                    } else {
+                        (1.0 - sparsity - noise_floor) * *pv / norm + noise_floor / n as f64
+                    };
+                }
+                // pmf of index 0 double-counted the floor; renormalize.
+                let s: f64 = p.iter().sum();
+                for pv in p.iter_mut() {
+                    *pv /= s;
+                }
+            }
+        }
+        p
+    }
+
+    /// Deterministically sample `count` values.
+    pub fn sample(&self, bits: u32, count: usize, seed: u64) -> Vec<u32> {
+        let pmf = self.pmf(bits);
+        let mut cdf = Vec::with_capacity(pmf.len());
+        let mut acc = 0.0;
+        for &p in &pmf {
+            acc += p;
+            cdf.push(acc);
+        }
+        let mut rng = Rng64::new(seed);
+        (0..count)
+            .map(|_| {
+                let u: f64 = rng.f64() * acc;
+                cdf.partition_point(|&c| c < u).min(pmf.len() - 1) as u32
+            })
+            .collect()
+    }
+
+    /// Expected value-stream entropy in bits/value — used to sanity-check
+    /// generated tensors against their analytic family.
+    pub fn entropy(&self, bits: u32) -> f64 {
+        self.pmf(bits).iter().filter(|&&p| p > 0.0).map(|&p| -p * p.log2()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apack::Histogram;
+
+    #[test]
+    fn pmfs_normalize() {
+        for profile in [
+            ValueProfile::Uniform,
+            ValueProfile::TwoSidedGeometric { q: 0.9, noise_floor: 0.05 },
+            ValueProfile::Sparse { sparsity: 0.8, q: 0.8 },
+            ValueProfile::ReluActivation { sparsity: 0.5, q: 0.95, noise_floor: 0.01 },
+        ] {
+            for bits in [4u32, 8] {
+                let s: f64 = profile.pmf(bits).iter().sum();
+                assert!((s - 1.0).abs() < 1e-9, "{profile:?} bits={bits} sums to {s}");
+                assert!(profile.pmf(bits).iter().all(|&p| p >= 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn two_sided_clusters_at_both_ends() {
+        let p = ValueProfile::TwoSidedGeometric { q: 0.85, noise_floor: 0.02 }.pmf(8);
+        let low: f64 = p[..8].iter().sum();
+        let high: f64 = p[248..].iter().sum();
+        let mid: f64 = p[64..192].iter().sum();
+        assert!(low > 0.3, "low mass {low}");
+        assert!(high > 0.25, "high mass {high}");
+        assert!(mid < 0.1, "mid mass {mid}");
+    }
+
+    #[test]
+    fn sampling_matches_pmf() {
+        let profile = ValueProfile::ReluActivation { sparsity: 0.5, q: 0.9, noise_floor: 0.01 };
+        let values = profile.sample(8, 100_000, 42);
+        let h = Histogram::from_values(8, &values);
+        assert!((h.sparsity() - 0.5).abs() < 0.02, "sparsity {}", h.sparsity());
+        // Empirical entropy close to analytic.
+        assert!((h.entropy() - profile.entropy(8)).abs() < 0.2);
+    }
+
+    #[test]
+    fn sampling_is_deterministic() {
+        let profile = ValueProfile::Sparse { sparsity: 0.7, q: 0.8 };
+        assert_eq!(profile.sample(8, 1000, 7), profile.sample(8, 1000, 7));
+        assert_ne!(profile.sample(8, 1000, 7), profile.sample(8, 1000, 8));
+    }
+
+    #[test]
+    fn skew_ordering_of_entropies() {
+        // IntelAI-style (sharp, low noise) < Torchvision-style (noisy) <
+        // uniform.
+        let intel = ValueProfile::TwoSidedGeometric { q: 0.75, noise_floor: 0.005 }.entropy(8);
+        let tv = ValueProfile::TwoSidedGeometric { q: 0.9, noise_floor: 0.12 }.entropy(8);
+        let uni = ValueProfile::Uniform.entropy(8);
+        assert!(intel < tv && tv < uni, "{intel} {tv} {uni}");
+    }
+
+    #[test]
+    fn pruned_entropy_is_tiny() {
+        let e = ValueProfile::Sparse { sparsity: 0.9, q: 0.7 }.entropy(8);
+        assert!(e < 1.5, "{e}");
+    }
+}

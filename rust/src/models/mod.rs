@@ -1,0 +1,10 @@
+//! Model zoo, synthetic value distributions and trace capture — the data
+//! substrate standing in for the paper's proprietary quantized-model traces
+//! (see DESIGN.md §3 for the substitution rationale).
+
+pub mod distributions;
+pub mod trace;
+pub mod zoo;
+
+pub use trace::{LayerTrace, ModelTrace};
+pub use zoo::{all_models, model_by_name, LayerShape, ModelConfig, QuantFamily};

@@ -1,0 +1,179 @@
+//! Trace capture: materialized per-layer weight/activation tensors.
+//!
+//! Mirrors the paper's trace-collection flow (§VII): weights are dumped
+//! once per layer; activations are sampled over several inputs and pooled
+//! into the profiling histogram, then *fresh* activations (a different
+//! seed — a different "input image") are compressed with the profiled
+//! table. Tensors larger than `sample_cap` are sampled; footprints scale by
+//! the true element count (value distributions are i.i.d. per layer by
+//! construction, so a sample's bits/value is an unbiased estimate).
+
+
+use super::distributions::ValueProfile;
+use super::zoo::ModelConfig;
+use crate::apack::Histogram;
+
+/// One layer's materialized tensors.
+#[derive(Debug, Clone)]
+pub struct LayerTrace {
+    pub layer_idx: usize,
+    pub bits: u32,
+    /// Sampled weight values.
+    pub weights: Vec<u32>,
+    /// True number of weight elements (≥ `weights.len()`).
+    pub weight_elems: u64,
+    /// Sampled input-activation values for *profiling* (pooled samples),
+    /// empty if the model's activations are not studied.
+    pub act_profile_samples: Vec<u32>,
+    /// Fresh activation values standing in for the measured inference
+    /// input (same distribution, different seed).
+    pub activations: Vec<u32>,
+    /// True number of input-activation elements.
+    pub act_elems: u64,
+}
+
+/// A fully synthesized model trace.
+#[derive(Debug, Clone)]
+pub struct ModelTrace {
+    pub name: String,
+    pub bits: u32,
+    pub layers: Vec<LayerTrace>,
+}
+
+/// Per-layer jitter applied to profile parameters so layers differ (real
+/// layer distributions vary around the model-level family).
+fn jitter_profile(p: ValueProfile, layer: usize) -> ValueProfile {
+    // Deterministic ±10% modulation of the main skew parameter.
+    let f = 1.0 + 0.1 * (((layer as f64 * 2.399963) .sin()) as f64);
+    match p {
+        ValueProfile::TwoSidedGeometric { q, noise_floor } => ValueProfile::TwoSidedGeometric {
+            q: (q * f).clamp(0.05, 0.995),
+            noise_floor,
+        },
+        ValueProfile::Sparse { sparsity, q } => ValueProfile::Sparse {
+            sparsity: (sparsity * f).clamp(0.0, 0.97),
+            q,
+        },
+        ValueProfile::ReluActivation { sparsity, q, noise_floor } => {
+            ValueProfile::ReluActivation {
+                sparsity: (sparsity * f).clamp(0.0, 0.95),
+                q,
+                noise_floor,
+            }
+        }
+        ValueProfile::Uniform => ValueProfile::Uniform,
+    }
+}
+
+impl ModelTrace {
+    /// Synthesize a trace for a model. `sample_cap` bounds the number of
+    /// values materialized per tensor; `profile_samples` is the number of
+    /// pooled activation profiling inputs (paper: up to 9).
+    pub fn synthesize(cfg: &ModelConfig, sample_cap: usize, profile_samples: usize, seed: u64) -> Self {
+        let mut layers = Vec::with_capacity(cfg.layers.len());
+        for (i, shape) in cfg.layers.iter().enumerate() {
+            let bits = cfg.bits_for(i);
+            let w_elems = shape.weight_elems();
+            let a_elems = shape.input_elems();
+            let w_n = (w_elems as usize).min(sample_cap);
+            let a_n = (a_elems as usize).min(sample_cap);
+            let wp = jitter_profile(cfg.weight_profile, i);
+            let weights = wp.sample(bits, w_n, seed ^ (i as u64) << 1);
+            let (act_profile_samples_v, activations) = match cfg.act_profile {
+                Some(ap) => {
+                    let ap = jitter_profile(ap, i);
+                    // Pool `profile_samples` smaller draws for the table.
+                    let per = (a_n / profile_samples.max(1)).max(256).min(a_n.max(1));
+                    let mut pooled = Vec::with_capacity(per * profile_samples);
+                    for s in 0..profile_samples {
+                        pooled.extend(ap.sample(
+                            bits,
+                            per,
+                            seed ^ 0xA11C_E000 ^ ((i as u64) << 8) ^ s as u64,
+                        ));
+                    }
+                    // Fresh "measurement" input: disjoint seed.
+                    let fresh =
+                        ap.sample(bits, a_n, seed ^ 0xF4E5_1000 ^ ((i as u64) << 8));
+                    (pooled, fresh)
+                }
+                None => (Vec::new(), Vec::new()),
+            };
+            layers.push(LayerTrace {
+                layer_idx: i,
+                bits,
+                weights,
+                weight_elems: w_elems,
+                act_profile_samples: act_profile_samples_v,
+                activations,
+                act_elems: a_elems,
+            });
+        }
+        Self { name: cfg.name.to_string(), bits: cfg.bits, layers }
+    }
+
+    /// Histogram of a layer's profiling activations.
+    pub fn act_profile_histogram(&self, layer: usize) -> Histogram {
+        let l = &self.layers[layer];
+        Histogram::from_values(l.bits, &l.act_profile_samples)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo::model_by_name;
+
+    #[test]
+    fn synthesize_respects_caps_and_counts() {
+        let cfg = model_by_name("resnet18").unwrap();
+        let t = ModelTrace::synthesize(&cfg, 4096, 3, 1);
+        assert_eq!(t.layers.len(), cfg.layers.len());
+        for (l, shape) in t.layers.iter().zip(&cfg.layers) {
+            assert!(l.weights.len() <= 4096);
+            assert_eq!(l.weight_elems, shape.weight_elems());
+            assert!(l.activations.len() <= 4096);
+            assert_eq!(l.act_elems, shape.input_elems());
+        }
+    }
+
+    #[test]
+    fn intel_models_have_empty_activations() {
+        let cfg = model_by_name("resnet101").unwrap();
+        let t = ModelTrace::synthesize(&cfg, 1024, 3, 1);
+        assert!(t.layers.iter().all(|l| l.activations.is_empty()));
+    }
+
+    #[test]
+    fn profiling_and_fresh_activations_differ_but_match_distribution() {
+        let cfg = model_by_name("resnet18").unwrap();
+        let t = ModelTrace::synthesize(&cfg, 8192, 5, 3);
+        let l = &t.layers[2];
+        assert_ne!(l.act_profile_samples, l.activations);
+        let hp = Histogram::from_values(8, &l.act_profile_samples);
+        let hf = Histogram::from_values(8, &l.activations);
+        assert!((hp.sparsity() - hf.sparsity()).abs() < 0.08);
+    }
+
+    #[test]
+    fn traces_are_deterministic() {
+        let cfg = model_by_name("ncf").unwrap();
+        let a = ModelTrace::synthesize(&cfg, 1000, 2, 9);
+        let b = ModelTrace::synthesize(&cfg, 1000, 2, 9);
+        assert_eq!(a.layers[0].weights, b.layers[0].weights);
+    }
+
+    #[test]
+    fn four_bit_model_values_fit_per_layer() {
+        let cfg = model_by_name("resnet18_pact").unwrap();
+        let t = ModelTrace::synthesize(&cfg, 2048, 2, 5);
+        for (i, l) in t.layers.iter().enumerate() {
+            let max = 1u32 << cfg.bits_for(i);
+            assert!(l.weights.iter().all(|&v| v < max), "layer {i}");
+            assert!(l.activations.iter().all(|&v| v < max), "layer {i}");
+        }
+        // First layer keeps int8 range per the paper.
+        assert_eq!(t.layers[0].bits, 8);
+        assert_eq!(t.layers[1].bits, 4);
+    }
+}

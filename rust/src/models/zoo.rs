@@ -1,0 +1,703 @@
+//! The model zoo: the 24 networks of paper Table II, described layer by
+//! layer so the traffic (Fig 5), energy (Fig 6) and performance (Figs 7–8)
+//! studies see realistic per-layer byte volumes and MAC counts.
+//!
+//! Layer dimensions follow the published architectures (standard ImageNet /
+//! COCO / NLP configurations); see DESIGN.md §3 — the *values* inside the
+//! tensors are synthesized per quantizer family, the *shapes* are real.
+
+
+use super::distributions::ValueProfile;
+
+/// Quantizer family (Table II "Quantizer" column), which selects the value
+/// distribution family for weights and activations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantFamily {
+    /// Torchvision pre-quantized int8 — noisy full-range weights.
+    Torchvision,
+    /// IntelAI int8 — skewed weights; activations remain float in the
+    /// released models, so the paper (and we) study weights only.
+    IntelAi,
+    /// IntelLabs Distiller int8 (Q8BERT, NCF).
+    Distiller,
+    /// MLPerf int8.
+    MlPerf,
+    /// Per-layer profiled quantization (bilstm, SegNet, ResNet18-Q).
+    PerLayer,
+    /// PACT int4 (first/last layers int8).
+    Pact4,
+    /// Energy-aware pruned + per-layer int8 (AlexNet/GoogLeNet Eyeriss).
+    Pruned,
+}
+
+/// One layer's shape; enough to derive MACs and tensor element counts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerShape {
+    /// Standard convolution over `h×w` input with `cin→cout` channels,
+    /// `k×k` kernel, stride `s` (same padding).
+    Conv { cin: u32, cout: u32, k: u32, s: u32, h: u32, w: u32 },
+    /// Depthwise convolution (`c` channels, `k×k`, stride `s`).
+    DwConv { c: u32, k: u32, s: u32, h: u32, w: u32 },
+    /// Fully connected / linear `cin→cout`, batched over `n` positions
+    /// (tokens, detection anchors, …).
+    Fc { cin: u32, cout: u32, n: u32 },
+    /// Recurrent cell step: `input+hidden → gates`, run for `t` steps
+    /// (both directions folded into `t` for bidirectional nets).
+    Rnn { input: u32, hidden: u32, gates: u32, t: u32 },
+    /// Embedding lookup: `n` lookups of `dim`-wide rows from a
+    /// `vocab×dim` table. MAC-free but weight-traffic-heavy.
+    Embedding { vocab: u32, dim: u32, n: u32 },
+}
+
+impl LayerShape {
+    /// Multiply-accumulate operations for this layer.
+    pub fn macs(&self) -> u64 {
+        match *self {
+            LayerShape::Conv { cin, cout, k, s, h, w } => {
+                let (ho, wo) = (h.div_ceil(s) as u64, w.div_ceil(s) as u64);
+                ho * wo * cout as u64 * cin as u64 * (k as u64) * (k as u64)
+            }
+            LayerShape::DwConv { c, k, s, h, w } => {
+                let (ho, wo) = (h.div_ceil(s) as u64, w.div_ceil(s) as u64);
+                ho * wo * c as u64 * (k as u64) * (k as u64)
+            }
+            LayerShape::Fc { cin, cout, n } => cin as u64 * cout as u64 * n as u64,
+            LayerShape::Rnn { input, hidden, gates, t } => {
+                (input as u64 + hidden as u64) * hidden as u64 * gates as u64 * t as u64
+            }
+            LayerShape::Embedding { .. } => 0,
+        }
+    }
+
+    /// Weight (parameter) element count.
+    pub fn weight_elems(&self) -> u64 {
+        match *self {
+            LayerShape::Conv { cin, cout, k, .. } => {
+                cin as u64 * cout as u64 * (k as u64) * (k as u64)
+            }
+            LayerShape::DwConv { c, k, .. } => c as u64 * (k as u64) * (k as u64),
+            LayerShape::Fc { cin, cout, .. } => cin as u64 * cout as u64,
+            LayerShape::Rnn { input, hidden, gates, .. } => {
+                (input as u64 + hidden as u64) * hidden as u64 * gates as u64
+            }
+            LayerShape::Embedding { vocab, dim, .. } => vocab as u64 * dim as u64,
+        }
+    }
+
+    /// Input activation element count.
+    pub fn input_elems(&self) -> u64 {
+        match *self {
+            LayerShape::Conv { cin, h, w, .. } => cin as u64 * h as u64 * w as u64,
+            LayerShape::DwConv { c, h, w, .. } => c as u64 * h as u64 * w as u64,
+            LayerShape::Fc { cin, n, .. } => cin as u64 * n as u64,
+            LayerShape::Rnn { input, t, .. } => input as u64 * t as u64,
+            LayerShape::Embedding { n, .. } => n as u64,
+        }
+    }
+
+    /// Output activation element count.
+    pub fn output_elems(&self) -> u64 {
+        match *self {
+            LayerShape::Conv { cout, k: _, s, h, w, .. } => {
+                cout as u64 * h.div_ceil(s) as u64 * w.div_ceil(s) as u64
+            }
+            LayerShape::DwConv { c, s, h, w, .. } => {
+                c as u64 * h.div_ceil(s) as u64 * w.div_ceil(s) as u64
+            }
+            LayerShape::Fc { cout, n, .. } => cout as u64 * n as u64,
+            LayerShape::Rnn { hidden, t, .. } => hidden as u64 * t as u64,
+            LayerShape::Embedding { dim, n, .. } => dim as u64 * n as u64,
+        }
+    }
+}
+
+/// A network from Table II.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub family: QuantFamily,
+    /// Default weight/activation bit width.
+    pub bits: u32,
+    /// Per-layer bit-width overrides (empty = uniform `bits`). Used by
+    /// ResNet18-PACT, which the paper quantizes "to 4b except for the
+    /// first and last layers which remain in 8b" (§VII).
+    pub layer_bits: Vec<u32>,
+    pub layers: Vec<LayerShape>,
+    /// Weight value distribution.
+    pub weight_profile: ValueProfile,
+    /// Activation value distribution (`None` = activations not studied —
+    /// IntelAI models keep float activations, §VII).
+    pub act_profile: Option<ValueProfile>,
+    /// Whether this model's trace is "compatible with the ShapeShifter
+    /// simulator" and hence appears in Figs 7/8 (the paper limits the
+    /// performance study to that subset).
+    pub in_perf_study: bool,
+}
+
+impl ModelConfig {
+    /// Bit width of layer `i`.
+    pub fn bits_for(&self, i: usize) -> u32 {
+        self.layer_bits.get(i).copied().unwrap_or(self.bits)
+    }
+
+    /// Total MACs over all layers.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Total weight elements.
+    pub fn total_weights(&self) -> u64 {
+        self.layers.iter().map(|l| l.weight_elems()).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Block builders (keep the 24 configs faithful but compact).
+// ---------------------------------------------------------------------------
+
+fn conv(cin: u32, cout: u32, k: u32, s: u32, h: u32, w: u32) -> LayerShape {
+    LayerShape::Conv { cin, cout, k, s, h, w }
+}
+fn dw(c: u32, k: u32, s: u32, h: u32, w: u32) -> LayerShape {
+    LayerShape::DwConv { c, k, s, h, w }
+}
+fn fc(cin: u32, cout: u32) -> LayerShape {
+    LayerShape::Fc { cin, cout, n: 1 }
+}
+
+/// Basic ResNet block (two 3×3 convs) at a spatial size.
+fn resnet_basic(c: u32, h: u32) -> Vec<LayerShape> {
+    vec![conv(c, c, 3, 1, h, h), conv(c, c, 3, 1, h, h)]
+}
+
+/// ResNet bottleneck (1×1 reduce, 3×3, 1×1 expand).
+fn resnet_bottleneck(cin: u32, mid: u32, h: u32) -> Vec<LayerShape> {
+    vec![conv(cin, mid, 1, 1, h, h), conv(mid, mid, 3, 1, h, h), conv(mid, mid * 4, 1, 1, h, h)]
+}
+
+fn resnet18_layers() -> Vec<LayerShape> {
+    let mut l = vec![conv(3, 64, 7, 2, 224, 224)];
+    for _ in 0..2 {
+        l.extend(resnet_basic(64, 56));
+    }
+    l.push(conv(64, 128, 3, 2, 56, 56));
+    l.push(conv(128, 128, 3, 1, 28, 28));
+    l.extend(resnet_basic(128, 28));
+    l.push(conv(128, 256, 3, 2, 28, 28));
+    l.push(conv(256, 256, 3, 1, 14, 14));
+    l.extend(resnet_basic(256, 14));
+    l.push(conv(256, 512, 3, 2, 14, 14));
+    l.push(conv(512, 512, 3, 1, 7, 7));
+    l.extend(resnet_basic(512, 7));
+    l.push(fc(512, 1000));
+    l
+}
+
+fn resnet50_layers() -> Vec<LayerShape> {
+    let mut l = vec![conv(3, 64, 7, 2, 224, 224), conv(64, 64, 1, 1, 56, 56)];
+    for _ in 0..3 {
+        l.extend(resnet_bottleneck(256, 64, 56));
+    }
+    for _ in 0..4 {
+        l.extend(resnet_bottleneck(512, 128, 28));
+    }
+    for _ in 0..6 {
+        l.extend(resnet_bottleneck(1024, 256, 14));
+    }
+    for _ in 0..3 {
+        l.extend(resnet_bottleneck(2048, 512, 7));
+    }
+    l.push(fc(2048, 1000));
+    l
+}
+
+fn resnet101_layers() -> Vec<LayerShape> {
+    let mut l = vec![conv(3, 64, 7, 2, 224, 224)];
+    for _ in 0..3 {
+        l.extend(resnet_bottleneck(256, 64, 56));
+    }
+    for _ in 0..4 {
+        l.extend(resnet_bottleneck(512, 128, 28));
+    }
+    for _ in 0..23 {
+        l.extend(resnet_bottleneck(1024, 256, 14));
+    }
+    for _ in 0..3 {
+        l.extend(resnet_bottleneck(2048, 512, 7));
+    }
+    l.push(fc(2048, 1000));
+    l
+}
+
+fn resnext101_layers() -> Vec<LayerShape> {
+    // 32×8d: grouped 3×3 modelled as a conv with cin/32 effective depth.
+    let mut l = vec![conv(3, 64, 7, 2, 224, 224)];
+    let stage = |cin: u32, mid: u32, h: u32| {
+        vec![
+            conv(cin, mid, 1, 1, h, h),
+            conv(mid / 32, mid, 3, 1, h, h), // grouped conv: per-group cin
+            conv(mid, cin.max(mid * 2), 1, 1, h, h),
+        ]
+    };
+    for _ in 0..3 {
+        l.extend(stage(256, 256, 56));
+    }
+    for _ in 0..4 {
+        l.extend(stage(512, 512, 28));
+    }
+    for _ in 0..23 {
+        l.extend(stage(1024, 1024, 14));
+    }
+    for _ in 0..3 {
+        l.extend(stage(2048, 2048, 7));
+    }
+    l.push(fc(2048, 1000));
+    l
+}
+
+/// GoogLeNet inception module at (h, cin) with the canonical branch widths.
+fn inception(cin: u32, b1: u32, b3r: u32, b3: u32, b5r: u32, b5: u32, pp: u32, h: u32) -> Vec<LayerShape> {
+    vec![
+        conv(cin, b1, 1, 1, h, h),
+        conv(cin, b3r, 1, 1, h, h),
+        conv(b3r, b3, 3, 1, h, h),
+        conv(cin, b5r, 1, 1, h, h),
+        conv(b5r, b5, 5, 1, h, h),
+        conv(cin, pp, 1, 1, h, h),
+    ]
+}
+
+fn googlenet_layers() -> Vec<LayerShape> {
+    let mut l = vec![conv(3, 64, 7, 2, 224, 224), conv(64, 64, 1, 1, 56, 56), conv(64, 192, 3, 1, 56, 56)];
+    l.extend(inception(192, 64, 96, 128, 16, 32, 32, 28));
+    l.extend(inception(256, 128, 128, 192, 32, 96, 64, 28));
+    l.extend(inception(480, 192, 96, 208, 16, 48, 64, 14));
+    l.extend(inception(512, 160, 112, 224, 24, 64, 64, 14));
+    l.extend(inception(512, 128, 128, 256, 24, 64, 64, 14));
+    l.extend(inception(512, 112, 144, 288, 32, 64, 64, 14));
+    l.extend(inception(528, 256, 160, 320, 32, 128, 128, 14));
+    l.extend(inception(832, 256, 160, 320, 32, 128, 128, 7));
+    l.extend(inception(832, 384, 192, 384, 48, 128, 128, 7));
+    l.push(fc(1024, 1000));
+    l
+}
+
+fn inception_v3_layers() -> Vec<LayerShape> {
+    let mut l = vec![
+        conv(3, 32, 3, 2, 299, 299),
+        conv(32, 32, 3, 1, 149, 149),
+        conv(32, 64, 3, 1, 147, 147),
+        conv(64, 80, 1, 1, 73, 73),
+        conv(80, 192, 3, 1, 73, 73),
+    ];
+    // Three coarse inception stages at 35/17/8 (representative widths).
+    for _ in 0..3 {
+        l.extend(inception(288, 64, 48, 64, 64, 96, 64, 35));
+    }
+    for _ in 0..4 {
+        l.extend(inception(768, 192, 128, 192, 128, 192, 192, 17));
+    }
+    for _ in 0..2 {
+        l.extend(inception(1280, 320, 384, 384, 448, 384, 192, 8));
+    }
+    l.push(fc(2048, 1000));
+    l
+}
+
+fn inception_v4_layers() -> Vec<LayerShape> {
+    let mut l = inception_v3_layers();
+    l.pop();
+    // v4 adds more 17×17 blocks.
+    for _ in 0..3 {
+        l.extend(inception(1024, 192, 128, 192, 128, 192, 128, 17));
+    }
+    l.push(fc(1536, 1000));
+    l
+}
+
+/// MobileNet v1 separable block.
+fn mbv1_block(c: u32, cout: u32, s: u32, h: u32) -> Vec<LayerShape> {
+    vec![dw(c, 3, s, h, h), conv(c, cout, 1, 1, h / s, h / s)]
+}
+
+fn mobilenet_v1_layers() -> Vec<LayerShape> {
+    let mut l = vec![conv(3, 32, 3, 2, 224, 224)];
+    l.extend(mbv1_block(32, 64, 1, 112));
+    l.extend(mbv1_block(64, 128, 2, 112));
+    l.extend(mbv1_block(128, 128, 1, 56));
+    l.extend(mbv1_block(128, 256, 2, 56));
+    l.extend(mbv1_block(256, 256, 1, 28));
+    l.extend(mbv1_block(256, 512, 2, 28));
+    for _ in 0..5 {
+        l.extend(mbv1_block(512, 512, 1, 14));
+    }
+    l.extend(mbv1_block(512, 1024, 2, 14));
+    l.extend(mbv1_block(1024, 1024, 1, 7));
+    l.push(fc(1024, 1000));
+    l
+}
+
+/// MobileNet v2 inverted residual: expand 1×1, dw 3×3, project 1×1.
+fn mbv2_block(cin: u32, exp: u32, cout: u32, s: u32, h: u32) -> Vec<LayerShape> {
+    vec![conv(cin, exp, 1, 1, h, h), dw(exp, 3, s, h, h), conv(exp, cout, 1, 1, h / s, h / s)]
+}
+
+fn mobilenet_v2_layers() -> Vec<LayerShape> {
+    let mut l = vec![conv(3, 32, 3, 2, 224, 224), dw(32, 3, 1, 112, 112), conv(32, 16, 1, 1, 112, 112)];
+    l.extend(mbv2_block(16, 96, 24, 2, 112));
+    l.extend(mbv2_block(24, 144, 24, 1, 56));
+    l.extend(mbv2_block(24, 144, 32, 2, 56));
+    for _ in 0..2 {
+        l.extend(mbv2_block(32, 192, 32, 1, 28));
+    }
+    l.extend(mbv2_block(32, 192, 64, 2, 28));
+    for _ in 0..3 {
+        l.extend(mbv2_block(64, 384, 64, 1, 14));
+    }
+    for _ in 0..3 {
+        l.extend(mbv2_block(64, 384, 96, 1, 14));
+    }
+    l.extend(mbv2_block(96, 576, 160, 2, 14));
+    for _ in 0..2 {
+        l.extend(mbv2_block(160, 960, 160, 1, 7));
+    }
+    l.extend(mbv2_block(160, 960, 320, 1, 7));
+    l.push(conv(320, 1280, 1, 1, 7, 7));
+    l.push(fc(1280, 1000));
+    l
+}
+
+fn mobilenet_v3_layers() -> Vec<LayerShape> {
+    // Large variant, SE layers folded into the 1×1s they gate.
+    let mut l = vec![conv(3, 16, 3, 2, 224, 224), dw(16, 3, 1, 112, 112), conv(16, 16, 1, 1, 112, 112)];
+    l.extend(mbv2_block(16, 64, 24, 2, 112));
+    l.extend(mbv2_block(24, 72, 24, 1, 56));
+    l.extend(mbv2_block(24, 72, 40, 2, 56));
+    for _ in 0..2 {
+        l.extend(mbv2_block(40, 120, 40, 1, 28));
+    }
+    l.extend(mbv2_block(40, 240, 80, 2, 28));
+    for _ in 0..3 {
+        l.extend(mbv2_block(80, 200, 80, 1, 14));
+    }
+    l.extend(mbv2_block(80, 480, 112, 1, 14));
+    l.extend(mbv2_block(112, 672, 160, 2, 14));
+    for _ in 0..2 {
+        l.extend(mbv2_block(160, 960, 160, 1, 7));
+    }
+    l.push(conv(160, 960, 1, 1, 7, 7));
+    l.push(fc(960, 1280));
+    l.push(fc(1280, 1000));
+    l
+}
+
+fn shufflenet_v2_layers() -> Vec<LayerShape> {
+    // 1× variant; shuffle units as 1×1 + dw3×3 + 1×1 on half the channels.
+    let unit = |c: u32, h: u32| vec![conv(c / 2, c / 2, 1, 1, h, h), dw(c / 2, 3, 1, h, h), conv(c / 2, c / 2, 1, 1, h, h)];
+    let mut l = vec![conv(3, 24, 3, 2, 224, 224)];
+    for _ in 0..4 {
+        l.extend(unit(116, 28));
+    }
+    for _ in 0..8 {
+        l.extend(unit(232, 14));
+    }
+    for _ in 0..4 {
+        l.extend(unit(464, 7));
+    }
+    l.push(conv(464, 1024, 1, 1, 7, 7));
+    l.push(fc(1024, 1000));
+    l
+}
+
+fn alexnet_layers() -> Vec<LayerShape> {
+    // conv2/4/5 are 2-way grouped in the original AlexNet: modelled with
+    // the per-group input depth (halves both MACs and weights, as real).
+    vec![
+        conv(3, 96, 11, 4, 227, 227),
+        conv(48, 256, 5, 1, 27, 27),
+        conv(256, 384, 3, 1, 13, 13),
+        conv(192, 384, 3, 1, 13, 13),
+        conv(192, 256, 3, 1, 13, 13),
+        LayerShape::Fc { cin: 9216, cout: 4096, n: 1 },
+        fc(4096, 4096),
+        fc(4096, 1000),
+    ]
+}
+
+/// A transformer encoder layer (hidden H, FFN 4H, S tokens): QKV + output
+/// projections + 2 FFN matmuls.
+fn transformer_layer(hidden: u32, seq: u32) -> Vec<LayerShape> {
+    vec![
+        LayerShape::Fc { cin: hidden, cout: hidden * 3, n: seq },
+        LayerShape::Fc { cin: hidden, cout: hidden, n: seq },
+        LayerShape::Fc { cin: hidden, cout: hidden * 4, n: seq },
+        LayerShape::Fc { cin: hidden * 4, cout: hidden, n: seq },
+    ]
+}
+
+fn q8bert_layers() -> Vec<LayerShape> {
+    let mut l = vec![LayerShape::Embedding { vocab: 30522, dim: 768, n: 128 }];
+    for _ in 0..12 {
+        l.extend(transformer_layer(768, 128));
+    }
+    l.push(LayerShape::Fc { cin: 768, cout: 2, n: 1 });
+    l
+}
+
+fn ncf_layers() -> Vec<LayerShape> {
+    vec![
+        LayerShape::Embedding { vocab: 138493, dim: 64, n: 1024 },
+        LayerShape::Embedding { vocab: 26744, dim: 64, n: 1024 },
+        LayerShape::Fc { cin: 128, cout: 256, n: 1024 },
+        LayerShape::Fc { cin: 256, cout: 128, n: 1024 },
+        LayerShape::Fc { cin: 128, cout: 64, n: 1024 },
+        LayerShape::Fc { cin: 128, cout: 1, n: 1024 },
+    ]
+}
+
+fn wide_deep_layers() -> Vec<LayerShape> {
+    vec![
+        LayerShape::Embedding { vocab: 100000, dim: 64, n: 512 },
+        LayerShape::Fc { cin: 1024, cout: 1024, n: 512 },
+        LayerShape::Fc { cin: 1024, cout: 512, n: 512 },
+        LayerShape::Fc { cin: 512, cout: 256, n: 512 },
+        LayerShape::Fc { cin: 256, cout: 1, n: 512 },
+    ]
+}
+
+fn bilstm_layers() -> Vec<LayerShape> {
+    // Image-captioning BiLSTM: CNN features -> 2-layer bidirectional LSTM.
+    vec![
+        LayerShape::Fc { cin: 2048, cout: 512, n: 1 },
+        LayerShape::Rnn { input: 512, hidden: 512, gates: 4, t: 40 }, // fw+bw folded
+        LayerShape::Rnn { input: 1024, hidden: 512, gates: 4, t: 40 },
+        LayerShape::Fc { cin: 1024, cout: 9568, n: 20 }, // vocab projection
+    ]
+}
+
+fn segnet_layers() -> Vec<LayerShape> {
+    // VGG-ish encoder + mirrored decoder on 360×480 CamVid frames.
+    let mut l = Vec::new();
+    let dims = [(3u32, 64u32, 360u32), (64, 64, 360), (64, 128, 180), (128, 128, 180), (128, 256, 90), (256, 256, 90), (256, 512, 45), (512, 512, 45)];
+    for &(cin, cout, h) in &dims {
+        l.push(conv(cin, cout, 3, 1, h, h * 4 / 3));
+    }
+    // Decoder mirror.
+    for &(cin, cout, h) in dims.iter().rev() {
+        l.push(conv(cout, cin.max(12), 3, 1, h, h * 4 / 3));
+    }
+    l
+}
+
+fn ssd_mobilenet_layers() -> Vec<LayerShape> {
+    let mut l = mobilenet_v1_layers();
+    l.pop(); // drop classifier
+    // SSD heads over 6 feature maps.
+    for &(c, h, anchors) in &[(512u32, 19u32, 3u32), (1024, 10, 6), (512, 5, 6), (256, 3, 6), (256, 2, 6), (128, 1, 6)] {
+        l.push(conv(c, anchors * 4, 3, 1, h, h));
+        l.push(conv(c, anchors * 91, 3, 1, h, h));
+    }
+    l
+}
+
+fn ssd_resnet34_layers() -> Vec<LayerShape> {
+    let mut l = vec![conv(3, 64, 7, 2, 1200, 1200)];
+    for _ in 0..3 {
+        l.extend(resnet_basic(64, 300));
+    }
+    l.push(conv(64, 128, 3, 2, 300, 300));
+    for _ in 0..4 {
+        l.extend(resnet_basic(128, 150));
+    }
+    l.push(conv(128, 256, 3, 2, 150, 150));
+    for _ in 0..6 {
+        l.extend(resnet_basic(256, 75));
+    }
+    for &(c, h, anchors) in &[(256u32, 38u32, 4u32), (512, 19, 6), (512, 10, 6), (256, 5, 6), (256, 3, 4), (256, 1, 4)] {
+        l.push(conv(c, anchors * 4, 3, 1, h, h));
+        l.push(conv(c, anchors * 81, 3, 1, h, h));
+    }
+    l
+}
+
+fn rfcn_resnet101_layers() -> Vec<LayerShape> {
+    let mut l = resnet101_layers();
+    l.pop();
+    // RPN + position-sensitive score maps.
+    l.push(conv(1024, 512, 3, 1, 38, 63));
+    l.push(conv(512, 9 * 2, 1, 1, 38, 63));
+    l.push(conv(512, 9 * 4, 1, 1, 38, 63));
+    l.push(conv(2048, 7 * 7 * 81, 1, 1, 38, 63));
+    l
+}
+
+// ---------------------------------------------------------------------------
+// The zoo.
+// ---------------------------------------------------------------------------
+
+fn weights_profile(family: QuantFamily) -> ValueProfile {
+    match family {
+        QuantFamily::Torchvision => ValueProfile::TwoSidedGeometric { q: 0.90, noise_floor: 0.12 },
+        QuantFamily::IntelAi => ValueProfile::TwoSidedGeometric { q: 0.78, noise_floor: 0.01 },
+        QuantFamily::Distiller => ValueProfile::TwoSidedGeometric { q: 0.82, noise_floor: 0.02 },
+        QuantFamily::MlPerf => ValueProfile::TwoSidedGeometric { q: 0.85, noise_floor: 0.04 },
+        QuantFamily::PerLayer => ValueProfile::TwoSidedGeometric { q: 0.74, noise_floor: 0.008 },
+        QuantFamily::Pact4 => ValueProfile::TwoSidedGeometric { q: 0.62, noise_floor: 0.01 },
+        QuantFamily::Pruned => ValueProfile::Sparse { sparsity: 0.85, q: 0.75 },
+    }
+}
+
+fn relu_acts(sparsity: f64, q: f64) -> Option<ValueProfile> {
+    Some(ValueProfile::ReluActivation { sparsity, q, noise_floor: 0.01 })
+}
+
+/// All 24 models of Table II.
+pub fn all_models() -> Vec<ModelConfig> {
+    use QuantFamily::*;
+    let m = |name, family, bits, layers: Vec<LayerShape>, act, perf| ModelConfig {
+        name,
+        family,
+        bits,
+        layer_bits: Vec::new(),
+        layers,
+        weight_profile: weights_profile(family),
+        act_profile: act,
+        in_perf_study: perf,
+    };
+    // ResNet18-PACT: int4 body, int8 first and last layers (§VII).
+    let pact = {
+        let layers = resnet18_layers();
+        let n = layers.len();
+        let mut layer_bits = vec![4u32; n];
+        layer_bits[0] = 8;
+        layer_bits[n - 1] = 8;
+        ModelConfig {
+            name: "resnet18_pact",
+            family: Pact4,
+            bits: 4,
+            layer_bits,
+            layers,
+            weight_profile: weights_profile(Pact4),
+            act_profile: relu_acts(0.45, 0.80),
+            in_perf_study: true,
+        }
+    };
+    vec![
+        m("googlenet", Torchvision, 8, googlenet_layers(), relu_acts(0.55, 0.93), true),
+        m("inception_v3", Torchvision, 8, inception_v3_layers(), relu_acts(0.52, 0.93), false),
+        m("mobilenet_v2", Torchvision, 8, mobilenet_v2_layers(), relu_acts(0.42, 0.95), true),
+        m("mobilenet_v3", Torchvision, 8, mobilenet_v3_layers(), relu_acts(0.38, 0.96), true),
+        m("resnet18", Torchvision, 8, resnet18_layers(), relu_acts(0.50, 0.94), true),
+        m("resnet50", Torchvision, 8, resnet50_layers(), relu_acts(0.55, 0.93), true),
+        m("resnext101", Torchvision, 8, resnext101_layers(), relu_acts(0.62, 0.90), false),
+        m("shufflenet_v2", Torchvision, 8, shufflenet_v2_layers(), relu_acts(0.45, 0.95), true),
+        // IntelAI: weights only (float activations in the released models).
+        m("inception_v4", IntelAi, 8, inception_v4_layers(), None, false),
+        m("mobilenet_v1", IntelAi, 8, mobilenet_v1_layers(), None, false),
+        m("resnet101", IntelAi, 8, resnet101_layers(), None, false),
+        m("rfcn_resnet101", IntelAi, 8, rfcn_resnet101_layers(), None, false),
+        m("ssd_resnet34", IntelAi, 8, ssd_resnet34_layers(), None, false),
+        m("wide_deep", IntelAi, 8, wide_deep_layers(), None, false),
+        // NLP / recommendation / detection / captioning / segmentation.
+        m("q8bert", Distiller, 8, q8bert_layers(),
+          Some(ValueProfile::TwoSidedGeometric { q: 0.88, noise_floor: 0.03 }), true),
+        m("ncf", Distiller, 8, ncf_layers(), relu_acts(0.35, 0.90), true),
+        pact,
+        m("ssd_mobilenet", MlPerf, 8, ssd_mobilenet_layers(), relu_acts(0.45, 0.94), true),
+        m("mobilenet", MlPerf, 8, mobilenet_v1_layers(), relu_acts(0.40, 0.95), true),
+        m("bilstm", PerLayer, 8, bilstm_layers(),
+          Some(ValueProfile::TwoSidedGeometric { q: 0.80, noise_floor: 0.015 }), true),
+        m("segnet", PerLayer, 8, segnet_layers(), relu_acts(0.48, 0.93), true),
+        m("resnet18_q", PerLayer, 8, resnet18_layers(), relu_acts(0.52, 0.92), true),
+        m("alexnet_eyeriss", Pruned, 8, alexnet_layers(), relu_acts(0.65, 0.88), true),
+        m("googlenet_eyeriss", Pruned, 8, googlenet_layers(), relu_acts(0.60, 0.90), true),
+    ]
+}
+
+/// Look up a model by name.
+pub fn model_by_name(name: &str) -> Option<ModelConfig> {
+    all_models().into_iter().find(|m| m.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_has_all_24_models() {
+        assert_eq!(all_models().len(), 24);
+        let names: std::collections::HashSet<_> = all_models().iter().map(|m| m.name).collect();
+        assert_eq!(names.len(), 24, "duplicate names");
+    }
+
+    #[test]
+    fn mac_counts_are_plausible() {
+        // Published MAC counts (±50% tolerance — our configs approximate
+        // pooling/padding): ResNet18 ≈ 1.8 G, ResNet50 ≈ 4.1 G,
+        // MobileNetV1 ≈ 0.57 G, AlexNet ≈ 0.72 G, GoogLeNet ≈ 1.5 G.
+        let check = |name: &str, expected: f64| {
+            let m = model_by_name(name).unwrap();
+            let macs = m.total_macs() as f64;
+            assert!(
+                (macs / expected - 1.0).abs() < 0.5,
+                "{name}: {macs:.2e} vs expected {expected:.2e}"
+            );
+        };
+        check("resnet18", 1.8e9);
+        check("resnet50", 4.1e9);
+        check("mobilenet_v1", 5.7e8);
+        check("alexnet_eyeriss", 7.2e8);
+        check("googlenet", 1.5e9);
+    }
+
+    #[test]
+    fn weight_counts_are_plausible() {
+        // Parameters: ResNet18 ≈ 11.7 M, ResNet50 ≈ 25.6 M, AlexNet ≈ 61 M,
+        // MobileNetV1 ≈ 4.2 M (conv+fc only; we tolerate ±40%).
+        let check = |name: &str, expected: f64| {
+            let m = model_by_name(name).unwrap();
+            let w = m.total_weights() as f64;
+            assert!(
+                (w / expected - 1.0).abs() < 0.4,
+                "{name}: {w:.2e} vs expected {expected:.2e}"
+            );
+        };
+        check("resnet18", 11.7e6);
+        check("resnet50", 25.6e6);
+        check("alexnet_eyeriss", 61e6);
+        check("mobilenet_v1", 4.2e6);
+    }
+
+    #[test]
+    fn layer_arithmetic_consistency() {
+        for m in all_models() {
+            for (i, l) in m.layers.iter().enumerate() {
+                assert!(l.weight_elems() > 0, "{} layer {i} no weights", m.name);
+                assert!(l.input_elems() > 0 && l.output_elems() > 0, "{} layer {i}", m.name);
+                if !matches!(l, LayerShape::Embedding { .. }) {
+                    assert!(l.macs() > 0, "{} layer {i} no MACs", m.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn intel_models_have_no_activation_profile() {
+        for m in all_models() {
+            if m.family == QuantFamily::IntelAi {
+                assert!(m.act_profile.is_none(), "{}", m.name);
+            } else {
+                assert!(m.act_profile.is_some(), "{}", m.name);
+            }
+        }
+    }
+
+    #[test]
+    fn pact_model_is_4bit_with_8bit_ends() {
+        let m = model_by_name("resnet18_pact").unwrap();
+        assert_eq!(m.bits, 4);
+        assert_eq!(m.bits_for(0), 8);
+        assert_eq!(m.bits_for(m.layers.len() - 1), 8);
+        assert_eq!(m.bits_for(1), 4);
+    }
+}

@@ -1,0 +1,253 @@
+//! PJRT runtime: loads the AOT-lowered JAX/Pallas model (HLO **text**, see
+//! `python/compile/aot.py` — jax ≥ 0.5 emits serialized protos with 64-bit
+//! ids that xla_extension 0.5.1 rejects; the text parser reassigns ids) and
+//! executes it from the rust request path. Python never runs at inference
+//! time: `make artifacts` produces `artifacts/*.hlo.txt` plus a JSON
+//! manifest and raw weight blobs once, and this module does the rest.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Manifest describing an AOT artifact: argument order/shapes and the
+/// quantization scales the coordinator needs to interpret the tensors.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    /// HLO text file, relative to the manifest.
+    pub hlo: String,
+    /// Model input (first argument) shape, e.g. `[8, 3, 32, 32]`.
+    pub input_shape: Vec<usize>,
+    /// Weight arguments in call order: name, shape, and the raw `.bin`
+    /// file (int8 little-endian) holding the baked values.
+    pub weights: Vec<WeightSpec>,
+    /// Names of the outputs in tuple order: logits then per-layer
+    /// activations.
+    pub outputs: Vec<String>,
+    /// Per-output activation bit width (8 for the int8 CNN).
+    pub bits: u32,
+}
+
+/// One weight argument.
+#[derive(Debug, Clone)]
+pub struct WeightSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub file: String,
+    /// Element storage in the .bin file: "int8" (default) or "int32"
+    /// (little-endian). Requant multipliers use int32.
+    pub dtype: String,
+}
+
+impl WeightSpec {
+    /// Element count of this weight tensor.
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Bytes per stored element.
+    pub fn elem_bytes(&self) -> usize {
+        if self.dtype == "int32" {
+            4
+        } else {
+            1
+        }
+    }
+
+    /// True for int8 data tensors (the ones APack compresses).
+    pub fn is_int8(&self) -> bool {
+        self.dtype != "int32"
+    }
+}
+
+impl ArtifactManifest {
+    /// Parse a manifest from JSON text (schema written by aot.py).
+    pub fn from_json(data: &str) -> Result<Self> {
+        let bad = |m: String| Error::Runtime(format!("manifest: {m}"));
+        let j = Json::parse(data).map_err(bad)?;
+        let str_field = |key: &str| -> Result<String> {
+            j.get(key)
+                .and_then(|v| v.as_str())
+                .map(str::to_string)
+                .ok_or_else(|| bad(format!("missing string field '{key}'")))
+        };
+        let shape_of = |v: &Json| -> Result<Vec<usize>> {
+            v.as_arr()
+                .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                .ok_or_else(|| bad("bad shape array".into()))
+        };
+        let weights = j
+            .get("weights")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| bad("missing 'weights'".into()))?
+            .iter()
+            .map(|w| {
+                Ok(WeightSpec {
+                    name: w
+                        .get("name")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| bad("weight missing name".into()))?
+                        .to_string(),
+                    shape: shape_of(
+                        w.get("shape").ok_or_else(|| bad("weight missing shape".into()))?,
+                    )?,
+                    file: w
+                        .get("file")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| bad("weight missing file".into()))?
+                        .to_string(),
+                    dtype: w
+                        .get("dtype")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or("int8")
+                        .to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let outputs = j
+            .get("outputs")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_str().map(str::to_string)).collect())
+            .unwrap_or_default();
+        Ok(Self {
+            hlo: str_field("hlo")?,
+            input_shape: shape_of(
+                j.get("input_shape").ok_or_else(|| bad("missing 'input_shape'".into()))?,
+            )?,
+            weights,
+            outputs,
+            bits: j.get("bits").and_then(|v| v.as_usize()).unwrap_or(8) as u32,
+        })
+    }
+
+    /// Load `manifest.json` from the artifacts directory.
+    pub fn load(dir: &Path) -> Result<(Self, PathBuf)> {
+        let path = dir.join("manifest.json");
+        let data = std::fs::read_to_string(&path)
+            .map_err(|e| Error::Runtime(format!("read {}: {e}", path.display())))?;
+        Ok((Self::from_json(&data)?, dir.to_path_buf()))
+    }
+}
+
+/// A compiled model on the PJRT CPU client.
+pub struct CompiledModel {
+    exe: xla::PjRtLoadedExecutable,
+    pub manifest: ArtifactManifest,
+    dir: PathBuf,
+}
+
+impl CompiledModel {
+    /// Load HLO text + manifest from `artifacts_dir` and compile on the
+    /// PJRT CPU client.
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let (manifest, dir) = ArtifactManifest::load(artifacts_dir)?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| Error::Runtime(format!("pjrt cpu: {e}")))?;
+        let hlo_path = dir.join(&manifest.hlo);
+        let proto = xla::HloModuleProto::from_text_file(&hlo_path)
+            .map_err(|e| Error::Runtime(format!("parse {}: {e}", hlo_path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| Error::Runtime(format!("compile: {e}")))?;
+        Ok(Self { exe, manifest, dir })
+    }
+
+    /// Read a weight blob (int8 bytes as stored by aot.py), widened to the
+    /// i32 element type the PJRT boundary uses (the vendored xla crate has
+    /// no i8 literal support; values stay in int8 range).
+    pub fn load_weight(&self, spec: &WeightSpec) -> Result<Vec<i32>> {
+        let path = self.dir.join(&spec.file);
+        let bytes = std::fs::read(&path)
+            .map_err(|e| Error::Runtime(format!("read {}: {e}", path.display())))?;
+        if bytes.len() != spec.elems() * spec.elem_bytes() {
+            return Err(Error::Runtime(format!(
+                "{}: {} bytes, expected {}",
+                spec.name,
+                bytes.len(),
+                spec.elems() * spec.elem_bytes()
+            )));
+        }
+        Ok(if spec.is_int8() {
+            bytes.iter().map(|&b| b as i8 as i32).collect()
+        } else {
+            bytes
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                .collect()
+        })
+    }
+
+    /// Execute the model: `input` in NCHW order, `weights` in manifest
+    /// order (i32 elements holding int8-range values). Returns one i32
+    /// tensor per manifest output.
+    pub fn run(&self, input: &[i32], weights: &[Vec<i32>]) -> Result<Vec<Vec<i32>>> {
+        let rt = |e: xla::Error| Error::Runtime(format!("execute: {e}"));
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(1 + weights.len());
+        let in_dims: Vec<i64> =
+            self.manifest.input_shape.iter().map(|&d| d as i64).collect();
+        args.push(xla::Literal::vec1(input).reshape(&in_dims).map_err(rt)?);
+        for (spec, w) in self.manifest.weights.iter().zip(weights) {
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            args.push(xla::Literal::vec1(w.as_slice()).reshape(&dims).map_err(rt)?);
+        }
+        let mut result = self.exe.execute::<xla::Literal>(&args).map_err(rt)?[0][0]
+            .to_literal_sync()
+            .map_err(rt)?;
+        let tuple = result.decompose_tuple().map_err(rt)?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            out.push(lit.to_vec::<i32>().map_err(rt)?);
+        }
+        Ok(out)
+    }
+}
+
+/// Convert an int8-range tensor (stored as i32 at the PJRT boundary) to
+/// the unsigned two's-complement byte stream the codec operates on (APack
+/// sees raw fixed-point bytes, §IV).
+pub fn i8_to_u32_stream(values: &[i32]) -> Vec<u32> {
+    values.iter().map(|&v| v as u8 as u32).collect()
+}
+
+/// Inverse of [`i8_to_u32_stream`].
+pub fn u32_stream_to_i8(values: &[u32]) -> Vec<i32> {
+    values.iter().map(|&v| v as u8 as i8 as i32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn i8_stream_roundtrip() {
+        let v: Vec<i32> = (-128i32..=127).collect();
+        let s = i8_to_u32_stream(&v);
+        assert!(s.iter().all(|&x| x < 256));
+        assert_eq!(u32_stream_to_i8(&s), v);
+        // Two's complement: -1 → 0xFF.
+        assert_eq!(i8_to_u32_stream(&[-1])[0], 0xFF);
+    }
+
+    #[test]
+    fn manifest_parse_from_json() {
+        let doc = r#"{
+            "hlo": "model.hlo.txt",
+            "input_shape": [8, 3, 32, 32],
+            "bits": 8,
+            "weights": [
+                {"name": "conv1", "shape": [16, 3, 3, 3], "file": "conv1.bin"}
+            ],
+            "outputs": ["logits", "act0"]
+        }"#;
+        let m = ArtifactManifest::from_json(doc).unwrap();
+        assert_eq!(m.weights[0].elems(), 16 * 3 * 3 * 3);
+        assert_eq!(m.input_shape, vec![8, 3, 32, 32]);
+        assert_eq!(m.outputs.len(), 2);
+        assert_eq!(m.bits, 8);
+    }
+
+    #[test]
+    fn manifest_rejects_missing_fields() {
+        assert!(ArtifactManifest::from_json("{}").is_err());
+        assert!(ArtifactManifest::from_json(r#"{"hlo": "x", "weights": []}"#).is_err());
+    }
+}

@@ -1,0 +1,235 @@
+//! TensorCore-based accelerator model (paper Table III + §VII-C).
+//!
+//! An analytical per-layer model: with double-buffered off-chip transfers,
+//! a layer's time is `max(compute_time, memory_time)`. Compression scales
+//! only the memory term, which is exactly the mechanism behind the paper's
+//! speedup claim ("avoiding stalls for off-chip transfers"): memory-bound
+//! layers speed up by the compression ratio until they become
+//! compute-bound; compute-bound layers (BERT, pruned AlexNet/GoogLeNet at
+//! high ratios) see little speedup but still save energy.
+
+
+use super::dram::{DramConfig, DramPowerModel};
+use crate::models::zoo::{LayerShape, ModelConfig};
+
+/// Accelerator configuration (paper Table III).
+#[derive(Debug, Clone, Copy)]
+pub struct AcceleratorConfig {
+    /// Number of tensor cores.
+    pub tensor_cores: u32,
+    /// PEs per tensor core (4×4).
+    pub pes_per_core: u32,
+    /// MACs per PE per cycle.
+    pub macs_per_pe: u32,
+    /// Clock frequency, GHz.
+    pub freq_ghz: f64,
+    /// On-chip buffer: activations/weights/output, bytes each.
+    pub act_buffer_bytes: u64,
+    pub weight_buffer_bytes: u64,
+    pub out_buffer_bytes: u64,
+    /// Achievable fraction of DRAM peak bandwidth for streaming tensors.
+    pub dram_utilization: f64,
+    /// DRAM configuration.
+    pub dram: DramConfig,
+}
+
+impl AcceleratorConfig {
+    /// Table III: 64 TCs × 16 PEs × 4 MACs @ 1 GHz = 4096 MACs/cycle
+    /// = 8.2 TOPS int8 (2 ops per MAC); 256 KB × 16 banks per buffer;
+    /// 8 GB dual-channel DDR4-3200.
+    pub fn paper() -> Self {
+        Self {
+            tensor_cores: 64,
+            pes_per_core: 16,
+            macs_per_pe: 4,
+            freq_ghz: 1.0,
+            act_buffer_bytes: 256 * 1024 * 16,
+            weight_buffer_bytes: 256 * 1024 * 16,
+            out_buffer_bytes: 256 * 1024 * 16,
+            dram_utilization: 0.90,
+            dram: DramConfig::ddr4_3200_dual(),
+        }
+    }
+
+    /// Peak MACs per cycle.
+    pub fn macs_per_cycle(&self) -> u64 {
+        self.tensor_cores as u64 * self.pes_per_core as u64 * self.macs_per_pe as u64
+    }
+
+    /// Peak int8 TOPS (2 ops per MAC).
+    pub fn peak_tops(&self) -> f64 {
+        self.macs_per_cycle() as f64 * 2.0 * self.freq_ghz * 1e9 / 1e12
+    }
+}
+
+/// Per-layer simulation result.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerSimResult {
+    pub compute_s: f64,
+    pub memory_s: f64,
+    /// max(compute, memory) — double-buffered overlap.
+    pub time_s: f64,
+    pub dram_read_bytes: u64,
+    pub dram_write_bytes: u64,
+    pub macs: u64,
+}
+
+/// Traffic multipliers from a compression scheme, per tensor kind
+/// (1.0 = uncompressed; < 1.0 = compressed).
+#[derive(Debug, Clone, Copy)]
+pub struct TrafficScaling {
+    pub weights: f64,
+    pub activations: f64,
+}
+
+impl TrafficScaling {
+    pub const NONE: TrafficScaling = TrafficScaling { weights: 1.0, activations: 1.0 };
+}
+
+/// The analytical accelerator simulator.
+#[derive(Debug, Clone, Copy)]
+pub struct AcceleratorSim {
+    pub cfg: AcceleratorConfig,
+}
+
+impl AcceleratorSim {
+    pub fn new(cfg: AcceleratorConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Compute-array efficiency for a layer (mapping losses: depthwise and
+    /// small layers underutilize a 4096-MAC array).
+    fn compute_efficiency(&self, layer: &LayerShape) -> f64 {
+        match layer {
+            LayerShape::DwConv { .. } => 0.25, // no input-channel reuse
+            LayerShape::Rnn { .. } => 0.70,
+            LayerShape::Fc { n, .. } => {
+                if *n >= 64 {
+                    0.85
+                } else {
+                    0.45 // batch-1 GEMV
+                }
+            }
+            LayerShape::Embedding { .. } => 1.0, // MAC-free
+            LayerShape::Conv { cout, .. } => {
+                if *cout >= 64 {
+                    0.85
+                } else {
+                    0.6
+                }
+            }
+        }
+    }
+
+    /// Simulate one layer. `bits` is the datatype width; weights and input
+    /// activations are read from off-chip once, outputs written once
+    /// (paper §VII-B assumption for edge inference, citing [57]).
+    pub fn simulate_layer(
+        &self,
+        layer: &LayerShape,
+        bits: u32,
+        scaling: TrafficScaling,
+    ) -> LayerSimResult {
+        let c = &self.cfg;
+        let macs = layer.macs();
+        let eff = self.compute_efficiency(layer);
+        let compute_s =
+            macs as f64 / (c.macs_per_cycle() as f64 * eff) / (c.freq_ghz * 1e9);
+
+        let bytes_per_elem = bits as f64 / 8.0;
+        let w_bytes = (layer.weight_elems() as f64 * bytes_per_elem * scaling.weights) as u64;
+        let in_bytes =
+            (layer.input_elems() as f64 * bytes_per_elem * scaling.activations) as u64;
+        let out_bytes =
+            (layer.output_elems() as f64 * bytes_per_elem * scaling.activations) as u64;
+        let read = w_bytes + in_bytes;
+        let write = out_bytes;
+        let bw = c.dram.peak_bandwidth() * c.dram_utilization;
+        let memory_s = (read + write) as f64 / bw;
+
+        LayerSimResult {
+            compute_s,
+            memory_s,
+            time_s: compute_s.max(memory_s),
+            dram_read_bytes: read,
+            dram_write_bytes: write,
+            macs,
+        }
+    }
+
+    /// Simulate a whole model; returns per-layer results.
+    pub fn simulate_model(
+        &self,
+        model: &ModelConfig,
+        per_layer_scaling: &dyn Fn(usize) -> TrafficScaling,
+    ) -> Vec<LayerSimResult> {
+        model
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| self.simulate_layer(l, model.bits_for(i), per_layer_scaling(i)))
+            .collect()
+    }
+
+    /// Total inference latency.
+    pub fn total_time(results: &[LayerSimResult]) -> f64 {
+        results.iter().map(|r| r.time_s).sum()
+    }
+
+    /// DRAM power model bound to this accelerator's DRAM config.
+    pub fn dram_model(&self) -> DramPowerModel {
+        DramPowerModel::new(self.cfg.dram)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo::model_by_name;
+
+    #[test]
+    fn paper_config_is_8_2_tops() {
+        let c = AcceleratorConfig::paper();
+        assert_eq!(c.macs_per_cycle(), 4096);
+        assert!((c.peak_tops() - 8.192).abs() < 0.01);
+    }
+
+    #[test]
+    fn compression_speeds_up_memory_bound_layers_only() {
+        let sim = AcceleratorSim::new(AcceleratorConfig::paper());
+        // A fat FC layer (batch 1) is memory-bound.
+        let fc = LayerShape::Fc { cin: 4096, cout: 4096, n: 1 };
+        let base = sim.simulate_layer(&fc, 8, TrafficScaling::NONE);
+        assert!(base.memory_s > base.compute_s, "FC should be memory-bound");
+        let comp = sim.simulate_layer(&fc, 8, TrafficScaling { weights: 0.5, activations: 0.5 });
+        assert!(comp.time_s < base.time_s * 0.6);
+
+        // A big conv is compute-bound; compression ~no speedup.
+        let cv = LayerShape::Conv { cin: 256, cout: 256, k: 3, s: 1, h: 56, w: 56 };
+        let base_c = sim.simulate_layer(&cv, 8, TrafficScaling::NONE);
+        assert!(base_c.compute_s > base_c.memory_s, "conv should be compute-bound");
+        let comp_c =
+            sim.simulate_layer(&cv, 8, TrafficScaling { weights: 0.5, activations: 0.5 });
+        assert!((comp_c.time_s / base_c.time_s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn model_speedup_bounded_by_compression() {
+        let sim = AcceleratorSim::new(AcceleratorConfig::paper());
+        let model = model_by_name("resnet18").unwrap();
+        let base = sim.simulate_model(&model, &|_| TrafficScaling::NONE);
+        let half = TrafficScaling { weights: 0.5, activations: 0.5 };
+        let comp = sim.simulate_model(&model, &|_| half);
+        let speedup = AcceleratorSim::total_time(&base) / AcceleratorSim::total_time(&comp);
+        assert!(speedup >= 1.0 && speedup <= 2.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn traffic_accounting_matches_tensor_sizes() {
+        let sim = AcceleratorSim::new(AcceleratorConfig::paper());
+        let l = LayerShape::Conv { cin: 16, cout: 32, k: 3, s: 1, h: 8, w: 8 };
+        let r = sim.simulate_layer(&l, 8, TrafficScaling::NONE);
+        assert_eq!(r.dram_read_bytes, l.weight_elems() + l.input_elems());
+        assert_eq!(r.dram_write_bytes, l.output_elems());
+    }
+}

@@ -1,0 +1,282 @@
+//! Transaction-level co-simulation of the Fig 1 deployment: DRAM channels
+//! serving 64-byte bursts of compressed streams to a replicated decoder
+//! array that feeds the accelerator's on-chip buffers.
+//!
+//! The analytical model in [`super::accelerator`] assumes perfect overlap;
+//! this event-driven model resolves the actual interleaving — DRAM busy
+//! time per channel, decoder pipeline occupancy, and the backpressure
+//! between them — so the engine-count and burst-size design choices can be
+//! ablated (paper §V-B sizes 64 engines against a dual-channel DDR4-3200
+//! interface; this model shows where fewer engines start to throttle the
+//! memory system).
+
+/// One decode job: a substream of `values` values stored at
+/// `bits_per_value` compressed bits (fractional — the measured stream
+/// rate), resident on DRAM channel `channel`.
+#[derive(Debug, Clone, Copy)]
+pub struct Substream {
+    pub values: u64,
+    pub bits_per_value: f64,
+    pub channel: usize,
+}
+
+/// Configuration of the transaction-level model.
+#[derive(Debug, Clone, Copy)]
+pub struct MemSysConfig {
+    /// DRAM channels.
+    pub channels: usize,
+    /// Sustained bytes per engine-clock cycle per channel (DDR4-3200 x64 at
+    /// a 1 GHz engine clock: 25.6 B/cycle × utilization).
+    pub channel_bytes_per_cycle: f64,
+    /// Burst (transaction) size in bytes.
+    pub burst_bytes: u64,
+    /// Number of decoder engines.
+    pub engines: usize,
+    /// Pipeline fill latency per engine, cycles.
+    pub pipeline_fill: u64,
+    /// Values per cycle per engine in steady state.
+    pub values_per_cycle: f64,
+}
+
+impl MemSysConfig {
+    /// The paper's deployment: 64 engines, 2 channels, 64 B bursts, 1 GHz.
+    pub fn paper() -> Self {
+        Self {
+            channels: 2,
+            channel_bytes_per_cycle: 25.6 * 0.9,
+            burst_bytes: 64,
+            engines: 64,
+            pipeline_fill: 3,
+            values_per_cycle: 1.0,
+        }
+    }
+}
+
+/// Simulation outcome.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MemSysResult {
+    /// Makespan in engine cycles.
+    pub cycles: u64,
+    /// Total values decoded.
+    pub values: u64,
+    /// Fraction of cycles each channel was busy (mean over channels).
+    pub channel_utilization: f64,
+    /// Fraction of engine-cycles doing useful decode work.
+    pub engine_utilization: f64,
+    /// Cycles engines spent stalled waiting for DRAM bursts.
+    pub engine_stall_cycles: u64,
+}
+
+impl MemSysResult {
+    /// Effective decoded-value throughput, values/cycle.
+    pub fn throughput(&self) -> f64 {
+        self.values as f64 / self.cycles.max(1) as f64
+    }
+}
+
+/// Run the transaction-level simulation.
+///
+/// Event-driven model: substreams are assigned round-robin to engines;
+/// each engine processes its queue sequentially, double-buffering bursts
+/// (the request for burst *k+1* issues when decode of burst *k* starts).
+/// A global event loop orders burst requests across engines in time, so
+/// channels serve them FCFS by actual request time; a channel clock
+/// (`free_at`) serializes its bursts. An engine stalls only when its
+/// channel is the bottleneck.
+pub fn simulate(cfg: &MemSysConfig, substreams: &[Substream]) -> MemSysResult {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    assert!(cfg.channels >= 1 && cfg.engines >= 1);
+    let burst_cycles = (cfg.burst_bytes as f64 / cfg.channel_bytes_per_cycle).max(1e-9);
+
+    // Per-engine substream queues.
+    let mut queues: Vec<Vec<usize>> = vec![Vec::new(); cfg.engines];
+    for (si, _) in substreams.iter().enumerate() {
+        queues[si % cfg.engines].push(si);
+    }
+
+    /// Engine progress through its queue.
+    struct Eng {
+        queue_pos: usize,
+        bursts_left: u64,
+        decode_cycles: f64,
+        channel: usize,
+        decode_ready: f64,
+    }
+    let mut engines: Vec<Eng> = Vec::with_capacity(cfg.engines);
+    // Event heap: (next burst-request time in fixed-point, engine id).
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+    let fx = |t: f64| (t * 1024.0) as u64; // stable ordering key
+
+    let mut total_values = 0u64;
+    let stream_params = |s: &Substream| {
+        let total_bits = s.values as f64 * s.bits_per_value;
+        let bursts = ((total_bits / 8.0) / cfg.burst_bytes as f64).ceil().max(1.0) as u64;
+        let decode_cycles = s.values as f64 / bursts as f64 / cfg.values_per_cycle;
+        (bursts, decode_cycles)
+    };
+    for (e, q) in queues.iter().enumerate() {
+        if let Some(&si) = q.first() {
+            let s = &substreams[si];
+            let (bursts, decode_cycles) = stream_params(s);
+            let start = cfg.pipeline_fill as f64;
+            engines.push(Eng {
+                queue_pos: 0,
+                bursts_left: bursts,
+                decode_cycles,
+                channel: s.channel % cfg.channels,
+                decode_ready: start,
+            });
+            heap.push(Reverse((fx(start), e)));
+        } else {
+            engines.push(Eng {
+                queue_pos: 0,
+                bursts_left: 0,
+                decode_cycles: 0.0,
+                channel: 0,
+                decode_ready: 0.0,
+            });
+        }
+    }
+    for s in substreams {
+        total_values += s.values;
+    }
+
+    let mut channel_free = vec![0f64; cfg.channels];
+    let mut channel_busy = vec![0f64; cfg.channels];
+    let mut engine_busy = vec![0f64; cfg.engines];
+    let mut engine_stall = 0f64;
+    let mut makespan = 0f64;
+
+    while let Some(Reverse((req_fx, e))) = heap.pop() {
+        let req = req_fx as f64 / 1024.0;
+        let (ch, decode_cycles) = (engines[e].channel, engines[e].decode_cycles);
+        // Serve the burst.
+        let fetch_start = channel_free[ch].max(req);
+        let fetch_done = fetch_start + burst_cycles;
+        channel_free[ch] = fetch_done;
+        channel_busy[ch] += burst_cycles;
+        // Decode starts when data arrived and previous decode finished.
+        let start = fetch_done.max(engines[e].decode_ready);
+        engine_stall += (start - engines[e].decode_ready).max(0.0);
+        engines[e].decode_ready = start + decode_cycles;
+        engine_busy[e] += decode_cycles;
+        makespan = makespan.max(engines[e].decode_ready);
+        engines[e].bursts_left -= 1;
+
+        if engines[e].bursts_left > 0 {
+            // Double buffering: next request when this decode starts.
+            heap.push(Reverse((fx(start), e)));
+        } else {
+            // Advance to the next substream in this engine's queue.
+            engines[e].queue_pos += 1;
+            if let Some(&si) = queues[e].get(engines[e].queue_pos) {
+                let s = &substreams[si];
+                let (bursts, decode_cycles) = stream_params(s);
+                engines[e].bursts_left = bursts;
+                engines[e].decode_cycles = decode_cycles;
+                engines[e].channel = s.channel % cfg.channels;
+                let next = engines[e].decode_ready + cfg.pipeline_fill as f64;
+                engines[e].decode_ready = next;
+                heap.push(Reverse((fx(next), e)));
+            }
+        }
+    }
+    let cycles = makespan.ceil() as u64;
+    let channel_utilization = channel_busy.iter().sum::<f64>()
+        / (cfg.channels as f64 * makespan.max(1e-9));
+    let engine_utilization =
+        engine_busy.iter().sum::<f64>() / (cfg.engines as f64 * makespan.max(1e-9));
+    MemSysResult {
+        cycles,
+        values: total_values,
+        channel_utilization,
+        engine_utilization,
+        engine_stall_cycles: engine_stall.ceil() as u64,
+    }
+}
+
+/// Convenience: a tensor of `values` values at `bits_per_value`, split
+/// evenly into `n` substreams alternating across channels.
+pub fn even_substreams(values: u64, bits_per_value: f64, n: usize) -> Vec<Substream> {
+    let per = values / n as u64;
+    (0..n)
+        .map(|i| Substream {
+            values: if i == n - 1 { values - per * (n as u64 - 1) } else { per },
+            bits_per_value,
+            channel: i % 2,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_config_is_dram_bound_at_full_replication() {
+        // 64 engines decode 64 values/cycle = 64 B/cycle of *decoded* data;
+        // 2 channels deliver 46 B/cycle of *compressed* data. At 8 bits/
+        // value compressed (no compression), DRAM is the bottleneck.
+        let cfg = MemSysConfig::paper();
+        let r = simulate(&cfg, &even_substreams(64_000_000, 8.0, 64));
+        assert!(r.channel_utilization > 0.95, "{r:?}");
+        assert!(r.engine_utilization < 0.95);
+    }
+
+    #[test]
+    fn compression_amplifies_bandwidth_until_engines_cap() {
+        // At 4 bits/value DRAM could feed 2× the values/cycle, but the 64
+        // engines cap aggregate decode at 64 values/cycle — so the speedup
+        // is min(2.0, 64 / 46.08) ≈ 1.39. (This is exactly the §V-B sizing
+        // trade the event model exists to expose; with 128 engines the
+        // full 2× materializes.)
+        let cfg = MemSysConfig::paper();
+        let raw = simulate(&cfg, &even_substreams(16_000_000, 8.0, 64));
+        let comp = simulate(&cfg, &even_substreams(16_000_000, 4.0, 64));
+        let speedup = raw.cycles as f64 / comp.cycles as f64;
+        let cap = 64.0 / (2.0 * 25.6 * 0.9 / 1.0);
+        assert!((speedup - cap).abs() < 0.1, "speedup {speedup}, cap {cap}");
+
+        let wide = MemSysConfig { engines: 128, ..cfg };
+        let raw_w = simulate(&wide, &even_substreams(16_000_000, 8.0, 128));
+        let comp_w = simulate(&wide, &even_substreams(16_000_000, 4.0, 128));
+        let speedup_w = raw_w.cycles as f64 / comp_w.cycles as f64;
+        assert!((speedup_w - 2.0).abs() < 0.15, "wide speedup {speedup_w}");
+    }
+
+    #[test]
+    fn too_few_engines_throttle_the_channels() {
+        // With 4 engines the decode rate (4 values/cycle = 4 B/cycle)
+        // cannot keep up with 46 B/cycle of DRAM: engines saturate, DRAM
+        // idles.
+        let cfg = MemSysConfig { engines: 4, ..MemSysConfig::paper() };
+        let r = simulate(&cfg, &even_substreams(4_000_000, 8.0, 4));
+        assert!(r.engine_utilization > 0.9, "{r:?}");
+        assert!(r.channel_utilization < 0.5, "{r:?}");
+    }
+
+    #[test]
+    fn engine_count_sweep_is_monotone() {
+        let mut last = u64::MAX;
+        for engines in [1usize, 4, 16, 64] {
+            let cfg = MemSysConfig { engines, ..MemSysConfig::paper() };
+            let r = simulate(&cfg, &even_substreams(1_000_000, 6.0, engines.max(1)));
+            assert!(r.cycles <= last, "{engines} engines: {} > {last}", r.cycles);
+            last = r.cycles;
+        }
+    }
+
+    #[test]
+    fn value_conservation_and_sane_utilizations() {
+        let cfg = MemSysConfig::paper();
+        let subs = even_substreams(1_234_567, 5.3, 17);
+        let total: u64 = subs.iter().map(|s| s.values).sum();
+        assert_eq!(total, 1_234_567);
+        let r = simulate(&cfg, &subs);
+        assert_eq!(r.values, 1_234_567);
+        assert!(r.channel_utilization <= 1.0 + 1e-9);
+        assert!(r.engine_utilization <= 1.0 + 1e-9);
+    }
+}

@@ -1,0 +1,14 @@
+//! Hardware models: DDR4 DRAM timing/power, the APack engine
+//! cycle/area/power model, and the TensorCore accelerator of paper
+//! Table III.
+
+pub mod accelerator;
+pub mod dram;
+pub mod energy;
+pub mod engine;
+pub mod memsys;
+
+pub use accelerator::{AcceleratorConfig, AcceleratorSim, LayerSimResult};
+pub use dram::{DramConfig, DramPowerModel};
+pub use energy::{EnergyBreakdown, EnergyModel};
+pub use engine::{EngineArrayConfig, EngineModel};

@@ -1,0 +1,88 @@
+//! Tiny benchmark harness (criterion stand-in): warmup + timed iterations,
+//! reporting median/mean/min wall time and derived throughput. Bench
+//! binaries (`benches/*.rs`, `harness = false`) call [`Bench::run`].
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// One benchmark's collected statistics.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+}
+
+impl BenchStats {
+    /// Pretty one-line report; `bytes_per_iter` adds throughput.
+    pub fn report(&self, bytes_per_iter: Option<u64>) -> String {
+        let mut s = format!(
+            "{:<44} {:>10.3?} median  {:>10.3?} mean  {:>10.3?} min  ({} iters)",
+            self.name, self.median, self.mean, self.min, self.iters
+        );
+        if let Some(b) = bytes_per_iter {
+            let gbs = b as f64 / self.median.as_secs_f64() / 1e9;
+            s.push_str(&format!("  {gbs:.3} GB/s"));
+        }
+        s
+    }
+}
+
+/// Benchmark runner configuration.
+pub struct Bench {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self { warmup: 2, iters: 10 }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self { warmup: 1, iters: 5 }
+    }
+
+    /// Run `f` and collect stats. The closure's return value is
+    /// black-boxed to keep the work alive.
+    pub fn run<R>(&self, name: &str, mut f: impl FnMut() -> R) -> BenchStats {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            black_box(f());
+            times.push(t0.elapsed());
+        }
+        times.sort();
+        let median = times[times.len() / 2];
+        let mean = times.iter().sum::<Duration>() / times.len() as u32;
+        let min = times[0];
+        BenchStats { name: name.to_string(), iters: self.iters, median, mean, min }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_sane() {
+        let b = Bench { warmup: 1, iters: 5 };
+        let s = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(s.min <= s.median);
+        assert_eq!(s.iters, 5);
+        assert!(s.report(Some(80_000)).contains("GB/s"));
+    }
+}

@@ -1,0 +1,11 @@
+//! In-tree utility substrates (this build environment is offline, so the
+//! usual crates — rand, serde, rayon, clap, criterion, proptest — are
+//! replaced by the minimal implementations here; see DESIGN.md).
+
+pub mod bench;
+pub mod json;
+pub mod par;
+pub mod rng;
+
+pub use par::par_map;
+pub use rng::Rng64;

@@ -1,0 +1,69 @@
+//! Minimal data-parallel map over std scoped threads (rayon stand-in).
+
+/// Parallel map preserving order: splits `items` across up to `threads`
+/// workers (defaults to available parallelism).
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    par_map_with(items, threads, f)
+}
+
+/// Parallel map with an explicit worker count.
+pub fn par_map_with<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        return items.iter().map(&f).collect();
+    }
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let chunk = n.div_ceil(threads);
+    let f = &f;
+    std::thread::scope(|scope| {
+        for (items_chunk, out_chunk) in items.chunks(chunk).zip(out.chunks_mut(chunk)) {
+            scope.spawn(move || {
+                for (item, slot) in items_chunk.iter().zip(out_chunk.iter_mut()) {
+                    *slot = Some(f(item));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("worker filled slot")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let out = par_map(&items, |&x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn works_with_one_thread_and_empty() {
+        let items = vec![1, 2, 3];
+        assert_eq!(par_map_with(&items, 1, |&x| x + 1), vec![2, 3, 4]);
+        let empty: Vec<i32> = vec![];
+        assert!(par_map(&empty, |&x: &i32| x).is_empty());
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        let items = vec![5];
+        assert_eq!(par_map_with(&items, 64, |&x| x), vec![5]);
+    }
+}

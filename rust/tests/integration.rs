@@ -1,0 +1,133 @@
+//! Cross-module integration tests: the zoo → trace → codec → simulator →
+//! eval pipeline, container serialization across the coordinator, and the
+//! engine pool over real compressed shards.
+
+use apack_repro::apack::tablegen::TensorKind;
+use apack_repro::coordinator::{Coordinator, EnginePool, PartitionPolicy, ShardedContainer};
+use apack_repro::eval::study::{CompressionStudy, Scheme};
+use apack_repro::eval::{fig5, fig7, fig8};
+use apack_repro::models::trace::ModelTrace;
+use apack_repro::models::zoo::{all_models, model_by_name};
+use apack_repro::simulator::accelerator::{AcceleratorConfig, AcceleratorSim, TrafficScaling};
+use apack_repro::simulator::engine::EngineArrayConfig;
+
+#[test]
+fn zoo_trace_compress_simulate_pipeline() {
+    // One model end to end through every subsystem except PJRT.
+    let cfg = model_by_name("ncf").unwrap();
+    let trace = ModelTrace::synthesize(&cfg, 4096, 3, 7);
+    let mut coord = Coordinator::new(PartitionPolicy::default());
+
+    let mut ratios = Vec::new();
+    for l in trace.layers.iter().take(3) {
+        let sc = coord.compress(cfg.bits, &l.weights, TensorKind::Weights, None).unwrap();
+        assert_eq!(coord.decompress(&sc).unwrap(), l.weights);
+        ratios.push(sc.compression_ratio());
+    }
+    assert!(ratios.iter().any(|&r| r > 1.0), "some layer must compress: {ratios:?}");
+
+    // Feed measured ratios into the accelerator model.
+    let sim = AcceleratorSim::new(AcceleratorConfig::paper());
+    let base = sim.simulate_model(&cfg, &|_| TrafficScaling::NONE);
+    let comp = sim.simulate_model(&cfg, &|_| TrafficScaling {
+        weights: 1.0 / ratios[0],
+        activations: 0.5,
+    });
+    assert!(
+        AcceleratorSim::total_time(&comp) <= AcceleratorSim::total_time(&base) + 1e-12
+    );
+}
+
+#[test]
+fn study_consistency_across_figures() {
+    // Figs 5/7/8 must agree on the underlying study data.
+    let models = vec![model_by_name("ncf").unwrap(), model_by_name("bilstm").unwrap()];
+    let study = CompressionStudy::run(
+        &models,
+        &[Scheme::Baseline, Scheme::ShapeShifter, Scheme::Apack],
+    );
+    // Renderers run without panicking and contain each model.
+    for text in
+        [fig5::render(&study), fig7::render(&study), fig8::render(&study)]
+    {
+        assert!(text.contains("ncf"));
+        assert!(text.contains("bilstm"));
+    }
+    // Fig 7 speedups derive from Fig 5 compressions: a model whose APack
+    // norm is lower must not be slower with APack than baseline.
+    for m in &models {
+        let base = fig7::latency_s(&study, m, Scheme::Baseline);
+        let ap = fig7::latency_s(&study, m, Scheme::Apack);
+        assert!(ap <= base + 1e-12, "{}", m.name);
+    }
+}
+
+#[test]
+fn sharded_container_binary_roundtrip() {
+    let values: Vec<u32> = (0..40_000u32).map(|i| (i * 2654435761) >> 26).collect();
+    let mut coord = Coordinator::new(PartitionPolicy { substreams: 8, min_per_stream: 512 });
+    let sc = coord.compress(8, &values, TensorKind::Weights, None).unwrap();
+    let bytes = sc.to_bytes();
+    let sc2 = ShardedContainer::from_bytes(&bytes).unwrap();
+    assert_eq!(sc2.n_values, sc.n_values);
+    assert_eq!(sc2.shards.len(), sc.shards.len());
+    assert_eq!(coord.decompress(&sc2).unwrap(), values);
+    // Corruption detected.
+    let mut bad = bytes.clone();
+    bad.truncate(bad.len() / 2);
+    assert!(ShardedContainer::from_bytes(&bad).is_err());
+}
+
+#[test]
+fn engine_pool_matches_direct_decode() {
+    let values: Vec<u32> = (0..50_000u32).map(|i| if i % 3 == 0 { 0 } else { i % 256 }).collect();
+    let mut coord = Coordinator::new(PartitionPolicy { substreams: 16, min_per_stream: 256 });
+    let sc = coord.compress(8, &values, TensorKind::Activations, None).unwrap();
+    let direct = coord.decompress(&sc).unwrap();
+    let pool = EnginePool::new(6, 16);
+    let pooled = pool.decode_shards(&sc.shards).unwrap();
+    assert_eq!(direct, pooled);
+    assert_eq!(pooled, values);
+}
+
+#[test]
+fn paper_claims_hold_on_zoo_subset() {
+    // Fast sanity on the headline claims, on a 4-model subset:
+    // APack always reduces traffic and beats SS / RLE / RLEZ.
+    let models: Vec<_> = ["resnet18", "mobilenet_v1", "q8bert", "googlenet_eyeriss"]
+        .iter()
+        .map(|n| model_by_name(n).unwrap())
+        .collect();
+    let study = CompressionStudy::run(&models, &Scheme::ALL);
+    for m in &models {
+        let ap = study.get(m.name, Scheme::Apack).unwrap();
+        assert!(ap.weights_norm < 1.0, "{}: {}", m.name, ap.weights_norm);
+        for s in [Scheme::Rle, Scheme::Rlez, Scheme::ShapeShifter] {
+            let o = study.get(m.name, s).unwrap();
+            assert!(
+                ap.weights_norm <= o.weights_norm + 1e-9,
+                "{}: APack {} vs {s:?} {}",
+                m.name,
+                ap.weights_norm,
+                o.weights_norm
+            );
+        }
+    }
+}
+
+#[test]
+fn engine_array_bandwidth_covers_dram() {
+    // §V-B sizing argument: 64 engines at 1 GHz sustain the dual-channel
+    // DDR4-3200 peak for 8-bit streams.
+    let arr = EngineArrayConfig::paper_64();
+    let sim = AcceleratorSim::new(AcceleratorConfig::paper());
+    assert!(arr.throughput_bytes_per_s(8) >= sim.cfg.dram.peak_bandwidth());
+}
+
+#[test]
+fn zoo_is_complete_and_consistent() {
+    let models = all_models();
+    assert_eq!(models.len(), 24);
+    let perf: Vec<_> = models.iter().filter(|m| m.in_perf_study).collect();
+    assert!(perf.len() >= 12, "perf study subset too small: {}", perf.len());
+}

@@ -1,0 +1,257 @@
+//! Property-based tests (in-tree randomized harness standing in for
+//! proptest, which is unavailable offline). Each property runs many
+//! seeded random cases; a failing seed reproduces deterministically.
+//!
+//! Properties map to DESIGN.md §6 invariants 1–6.
+
+use apack_repro::apack::bitstream::{BitReader, BitWriter};
+use apack_repro::apack::decoder::{ApackDecoder, ResolveMode};
+use apack_repro::apack::encoder::ApackEncoder;
+use apack_repro::apack::tablegen::{
+    estimate_bits, generate_table, TableGenConfig, TensorKind, METADATA_BITS,
+};
+use apack_repro::apack::{Histogram, SymbolTable, NUM_ROWS, PROB_MAX};
+use apack_repro::baselines::{
+    rle_decode, rle_encode, rlez_decode, rlez_encode, ss_decode, ss_encode, ShapeShifterConfig,
+};
+use apack_repro::coordinator::{Coordinator, PartitionPolicy};
+use apack_repro::util::Rng64;
+
+/// Random valid table: random strictly-increasing v_mins + random counts
+/// with every occurring-value row non-empty.
+fn random_table(rng: &mut Rng64, bits: u32) -> SymbolTable {
+    let max = SymbolTable::value_max_for(bits);
+    // Choose 15 distinct boundaries in (0, max].
+    let mut bounds = std::collections::BTreeSet::new();
+    while bounds.len() < NUM_ROWS - 1 {
+        bounds.insert(rng.range(1, max as usize) as u32);
+    }
+    let mut v_mins = [0u32; NUM_ROWS];
+    for (i, b) in bounds.into_iter().enumerate() {
+        v_mins[i + 1] = b;
+    }
+    // Random positive count weights, normalized to PROB_MAX with floor 1.
+    let mut weights = [0u64; NUM_ROWS];
+    for w in weights.iter_mut() {
+        *w = 1 + rng.below(1000);
+    }
+    let total: u64 = weights.iter().sum();
+    let mut hi_cnts = [0u16; NUM_ROWS];
+    let mut acc = 0u64;
+    let mut assigned = 0u64;
+    for i in 0..NUM_ROWS {
+        let share = (weights[i] * (PROB_MAX as u64 - (NUM_ROWS as u64 - assigned)) / total)
+            .max(1)
+            .min(PROB_MAX as u64 - acc - (NUM_ROWS as u64 - 1 - i as u64));
+        acc += share;
+        assigned += 1;
+        hi_cnts[i] = acc as u16;
+    }
+    hi_cnts[NUM_ROWS - 1] = PROB_MAX;
+    SymbolTable::new(bits, v_mins, hi_cnts).expect("constructed table is valid")
+}
+
+fn random_tensor(rng: &mut Rng64, bits: u32, n: usize) -> Vec<u32> {
+    let max = (1u64 << bits) as u64;
+    // Mix of skew shapes to stress different symbol sequences.
+    (0..n)
+        .map(|_| match rng.below(4) {
+            0 => 0,
+            1 => (max - 1 - rng.below(max.min(4))) as u32,
+            2 => rng.below(max.min(8)) as u32,
+            _ => rng.below(max) as u32,
+        })
+        .collect()
+}
+
+/// Invariant 1: decode(encode(t)) == t for random tensors × random valid
+/// tables (every row has nonzero count by construction).
+#[test]
+fn prop_roundtrip_random_tables() {
+    for seed in 0..40u64 {
+        let mut rng = Rng64::new(seed);
+        let bits = [4u32, 8, 8, 8, 16][rng.below(5) as usize];
+        let table = random_table(&mut rng, bits);
+        let n = rng.range(0, 5000);
+        let values = random_tensor(&mut rng, bits, n);
+        let (sym, sb, ofs, ob) =
+            ApackEncoder::encode_all(&table, &values).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let mut ofs_r = BitReader::new(&ofs, ob);
+        let got = ApackDecoder::decode_all(&table, BitReader::new(&sym, sb), &mut ofs_r, n)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(got, values, "seed {seed}");
+    }
+}
+
+/// Invariant 1 with generated tables (tablegen output on the tensor's own
+/// histogram).
+#[test]
+fn prop_roundtrip_generated_tables() {
+    for seed in 0..25u64 {
+        let mut rng = Rng64::new(0x7AB1E + seed);
+        let bits = if rng.chance(0.3) { 4 } else { 8 };
+        let n = rng.range(1, 20_000);
+        let values = random_tensor(&mut rng, bits, n);
+        let hist = Histogram::from_values(bits, &values);
+        let kind =
+            if rng.chance(0.5) { TensorKind::Weights } else { TensorKind::Activations };
+        let table = generate_table(&hist, kind, &TableGenConfig::for_bits(bits)).unwrap();
+        let (sym, sb, ofs, ob) = ApackEncoder::encode_all(&table, &values).unwrap();
+        let mut ofs_r = BitReader::new(&ofs, ob);
+        let got =
+            ApackDecoder::decode_all(&table, BitReader::new(&sym, sb), &mut ofs_r, n).unwrap();
+        assert_eq!(got, values, "seed {seed}");
+    }
+}
+
+/// Invariant 2: tablegen output is always structurally valid and, for
+/// activations, fully covering.
+#[test]
+fn prop_tablegen_validity() {
+    for seed in 0..25u64 {
+        let mut rng = Rng64::new(0xBEEF + seed);
+        let n = rng.range(16, 30_000);
+        let values = random_tensor(&mut rng, 8, n);
+        let hist = Histogram::from_values(8, &values);
+        let t =
+            generate_table(&hist, TensorKind::Activations, &TableGenConfig::default()).unwrap();
+        assert_eq!(t.rows()[NUM_ROWS - 1].hi_cnt, PROB_MAX);
+        assert_eq!(t.rows()[NUM_ROWS - 1].v_max, 255);
+        assert_eq!(t.rows()[0].v_min, 0);
+        for i in 0..NUM_ROWS {
+            assert!(t.rows()[i].hi_cnt > t.lo_cnt(i), "seed {seed} row {i} empty");
+            assert!(t.rows()[i].v_min <= t.rows()[i].v_max);
+        }
+    }
+}
+
+/// Invariant 3: the two decoder symbol-resolution circuits agree on every
+/// step of every stream.
+#[test]
+fn prop_resolver_equivalence() {
+    for seed in 0..15u64 {
+        let mut rng = Rng64::new(0xD1CE + seed);
+        let table = random_table(&mut rng, 8);
+        let values = random_tensor(&mut rng, 8, 3000);
+        let (sym, sb, ofs, ob) = ApackEncoder::encode_all(&table, &values).unwrap();
+        let mut d1 = ApackDecoder::new(&table, BitReader::new(&sym, sb))
+            .unwrap()
+            .with_mode(ResolveMode::RowScan);
+        let mut d2 = ApackDecoder::new(&table, BitReader::new(&sym, sb))
+            .unwrap()
+            .with_mode(ResolveMode::Division);
+        let mut o1 = BitReader::new(&ofs, ob);
+        let mut o2 = BitReader::new(&ofs, ob);
+        for i in 0..values.len() {
+            let a = d1.decode_value(&mut o1).unwrap();
+            let b = d2.decode_value(&mut o2).unwrap();
+            assert_eq!(a, b, "seed {seed} step {i}");
+        }
+    }
+}
+
+/// Invariant 4: sharded compression reassembles exactly for any partition
+/// width.
+#[test]
+fn prop_coordinator_reassembly() {
+    for seed in 0..12u64 {
+        let mut rng = Rng64::new(0xC00D + seed);
+        let n = rng.range(1, 60_000);
+        let values = random_tensor(&mut rng, 8, n);
+        let policy = PartitionPolicy {
+            substreams: rng.range(1, 128) as u32,
+            min_per_stream: rng.range(1, 4096),
+        };
+        let mut coord = Coordinator::new(policy);
+        let sc = coord.compress(8, &values, TensorKind::Activations, None).unwrap();
+        assert_eq!(coord.decompress(&sc).unwrap(), values, "seed {seed}");
+    }
+}
+
+/// Invariant 5: the entropy-based size estimate tracks the real encoder
+/// within ±15% on random tensors (it guides the search, so gross error
+/// would corrupt table quality).
+#[test]
+fn prop_estimator_accuracy() {
+    let mut checked = 0;
+    for seed in 0..15u64 {
+        let mut rng = Rng64::new(0xE57 + seed);
+        let values = random_tensor(&mut rng, 8, 30_000);
+        let hist = Histogram::from_values(8, &values);
+        let t = generate_table(&hist, TensorKind::Weights, &TableGenConfig::default()).unwrap();
+        let est = estimate_bits(&hist, &t);
+        let (_, sb, _, ob) = ApackEncoder::encode_all(&t, &values).unwrap();
+        let actual = (sb + ob + METADATA_BITS) as f64;
+        let ratio = actual / est;
+        assert!((0.85..1.15).contains(&ratio), "seed {seed}: ratio {ratio}");
+        checked += 1;
+    }
+    assert_eq!(checked, 15);
+}
+
+/// Invariant 6: baseline codecs roundtrip on random tensors.
+#[test]
+fn prop_baselines_roundtrip() {
+    for seed in 0..30u64 {
+        let mut rng = Rng64::new(0xBA5E + seed);
+        let n = rng.range(0, 4000);
+        let values = random_tensor(&mut rng, 8, n);
+        assert_eq!(rle_decode(&rle_encode(&values)), values, "rle seed {seed}");
+        assert_eq!(rlez_decode(&rlez_encode(&values)), values, "rlez seed {seed}");
+        for cfg in [
+            ShapeShifterConfig::paper_8b(),
+            ShapeShifterConfig::no_zero_vector(8),
+            ShapeShifterConfig::magnitude_only(8),
+        ] {
+            assert_eq!(
+                ss_decode(&ss_encode(&values, &cfg), &cfg),
+                values,
+                "ss seed {seed} cfg {cfg:?}"
+            );
+        }
+    }
+}
+
+/// Entropy lower-bounds every scheme: APack's footprint is never below
+/// the tensor's exact entropy (lossless coding bound).
+#[test]
+fn prop_apack_respects_entropy_bound() {
+    for seed in 0..10u64 {
+        let mut rng = Rng64::new(0xB0C + seed);
+        let values = random_tensor(&mut rng, 8, 40_000);
+        let hist = Histogram::from_values(8, &values);
+        let t =
+            generate_table(&hist, TensorKind::Weights, &TableGenConfig::default()).unwrap();
+        let (_, sb, _, ob) = ApackEncoder::encode_all(&t, &values).unwrap();
+        let bits_per_value = (sb + ob) as f64 / values.len() as f64;
+        assert!(
+            bits_per_value + 1e-6 >= hist.entropy(),
+            "seed {seed}: {bits_per_value} < H {}",
+            hist.entropy()
+        );
+    }
+}
+
+/// Bit-stream substrate: arbitrary field sequences roundtrip exactly.
+#[test]
+fn prop_bitstream_roundtrip() {
+    for seed in 0..50u64 {
+        let mut rng = Rng64::new(0xB175 + seed);
+        let n = rng.range(0, 500);
+        let fields: Vec<(u64, u32)> = (0..n)
+            .map(|_| {
+                let c = rng.range(1, 57) as u32;
+                (rng.below(1u64 << c), c)
+            })
+            .collect();
+        let mut w = BitWriter::new();
+        for &(v, c) in &fields {
+            w.push_bits(v, c);
+        }
+        let (bytes, bits) = w.finish();
+        let mut r = BitReader::new(&bytes, bits);
+        for &(v, c) in &fields {
+            assert_eq!(r.read_bits(c), v, "seed {seed}");
+        }
+    }
+}
