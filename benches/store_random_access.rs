@@ -1,0 +1,115 @@
+//! APackStore hot-path bench: random access into a packed store — full
+//! tensor decode, uncached vs. cached chunk reads, and cross-chunk range
+//! reads. The cached/uncached split shows what the LRU buys on the serving
+//! path (repeat reads skip both disk and the arithmetic decoder).
+
+use apack_repro::apack::tablegen::TensorKind;
+use apack_repro::coordinator::PartitionPolicy;
+use apack_repro::models::distributions::ValueProfile;
+use apack_repro::store::{StoreReader, StoreWriter};
+use apack_repro::util::bench::Bench;
+use apack_repro::util::Rng64;
+
+fn main() {
+    let path = std::env::temp_dir()
+        .join(format!("apack_bench_store_{}.apackstore", std::process::id()));
+    let n_tensors = 8usize;
+    let n_values = 1_000_000usize;
+    let policy = PartitionPolicy::default(); // 64 chunks per tensor
+
+    // Build the store once: 8 × 1M-value activation tensors.
+    let mut writer = StoreWriter::create(&path, policy).expect("create store");
+    for i in 0..n_tensors {
+        let values =
+            ValueProfile::ReluActivation { sparsity: 0.5, q: 0.93, noise_floor: 0.01 }
+                .sample(8, n_values, 1000 + i as u64);
+        writer
+            .add_tensor(&format!("tensor{i}"), 8, &values, TensorKind::Activations)
+            .expect("add tensor");
+    }
+    let summary = writer.finish().expect("finish store");
+    println!(
+        "store: {} tensors, {} chunks, {:.1} MiB on disk ({:.2}x vs raw)\n",
+        summary.tensors,
+        summary.chunks,
+        summary.file_bytes as f64 / (1 << 20) as f64,
+        summary.compression_ratio()
+    );
+
+    let reader = StoreReader::open(&path).expect("open store");
+    let meta = reader.meta("tensor0").expect("meta");
+    let chunks_per_tensor = meta.chunks.len();
+    let per_chunk = meta.values_per_chunk;
+    let bench = Bench::default();
+
+    // Full-tensor decode, cold cache (all 64 chunks from disk, parallel).
+    let s = bench.run("store get_tensor 1M values (cold cache)", || {
+        reader.clear_cache();
+        reader.get_tensor("tensor0").unwrap()
+    });
+    println!("{}", s.report(Some(n_values as u64)));
+
+    // Random single-chunk reads, uncached: every read hits disk + decoder.
+    let reads = 64usize;
+    let mut rng = Rng64::new(7);
+    let uncached_keys: Vec<(String, usize)> = (0..reads)
+        .map(|_| {
+            (
+                format!("tensor{}", rng.below(n_tensors as u64)),
+                rng.below(chunks_per_tensor as u64) as usize,
+            )
+        })
+        .collect();
+    let s = bench.run("store get_chunk ×64 random (uncached)", || {
+        reader.clear_cache();
+        let mut acc = 0u64;
+        for (name, ci) in &uncached_keys {
+            acc += reader.get_chunk(name, *ci).unwrap().len() as u64;
+        }
+        acc
+    });
+    println!("{}", s.report(Some((reads as u64) * per_chunk)));
+
+    // The same reads, cache warm: pure LRU hits.
+    for (name, ci) in &uncached_keys {
+        reader.get_chunk(name, *ci).unwrap();
+    }
+    let s = bench.run("store get_chunk ×64 random (cached)", || {
+        let mut acc = 0u64;
+        for (name, ci) in &uncached_keys {
+            acc += reader.get_chunk(name, *ci).unwrap().len() as u64;
+        }
+        acc
+    });
+    println!("{}", s.report(Some((reads as u64) * per_chunk)));
+
+    // Cross-chunk range reads (4 chunks per read), uncached.
+    let span = 4 * per_chunk;
+    let ranges: Vec<(String, u64)> = (0..16)
+        .map(|_| {
+            let name = format!("tensor{}", rng.below(n_tensors as u64));
+            let lo = rng.below((n_values as u64) - span);
+            (name, lo)
+        })
+        .collect();
+    let s = bench.run("store get_range 4-chunk span ×16 (uncached)", || {
+        reader.clear_cache();
+        let mut acc = 0u64;
+        for (name, lo) in &ranges {
+            acc += reader.get_range(name, *lo..*lo + span).unwrap().len() as u64;
+        }
+        acc
+    });
+    println!("{}", s.report(Some(16 * span)));
+
+    let stats = reader.stats();
+    println!(
+        "\ncumulative: {:.1} MiB compressed read, {} chunks decoded, {} cache hits / {} misses",
+        stats.bytes_read as f64 / (1 << 20) as f64,
+        stats.chunks_decoded,
+        stats.cache_hits,
+        stats.cache_misses
+    );
+    drop(reader);
+    std::fs::remove_file(&path).ok();
+}

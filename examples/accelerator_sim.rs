@@ -16,10 +16,9 @@ use apack_repro::simulator::accelerator::{AcceleratorConfig, AcceleratorSim, Tra
 use apack_repro::simulator::energy::EnergyModel;
 use apack_repro::simulator::engine::EngineArrayConfig;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let name = std::env::args().nth(1).unwrap_or_else(|| "resnet18".to_string());
-    let model =
-        model_by_name(&name).ok_or_else(|| anyhow::anyhow!("unknown model {name}"))?;
+    let model = model_by_name(&name).ok_or_else(|| format!("unknown model {name}"))?;
     println!("model: {} ({:.2} GMACs)", model.name, model.total_macs() as f64 / 1e9);
 
     // Per-layer compression from the shared study (APack scheme).

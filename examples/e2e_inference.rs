@@ -12,7 +12,7 @@
 
 use std::path::PathBuf;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let artifacts = std::env::args()
         .nth(1)
         .map(PathBuf::from)

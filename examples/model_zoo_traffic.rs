@@ -12,9 +12,9 @@ use apack_repro::eval::{EVAL_SEED, PROFILE_SAMPLES, SAMPLE_CAP};
 use apack_repro::models::trace::ModelTrace;
 use apack_repro::models::zoo::model_by_name;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let name = std::env::args().nth(1).unwrap_or_else(|| "alexnet_eyeriss".to_string());
-    let cfg = model_by_name(&name).ok_or_else(|| anyhow::anyhow!("unknown model {name}"))?;
+    let cfg = model_by_name(&name).ok_or_else(|| format!("unknown model {name}"))?;
     let trace = ModelTrace::synthesize(&cfg, SAMPLE_CAP, PROFILE_SAMPLES, EVAL_SEED);
 
     println!(

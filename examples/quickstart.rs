@@ -8,7 +8,7 @@ use apack_repro::apack::tablegen::TensorKind;
 use apack_repro::coordinator::{Coordinator, PartitionPolicy};
 use apack_repro::models::distributions::ValueProfile;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // A synthetic post-ReLU int8 activation tensor: 55% zeros plus a
     // decaying tail — the kind of stream APack sees at the memory
     // controller (paper Fig 2).

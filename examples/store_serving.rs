@@ -1,0 +1,125 @@
+//! Domain example: serve tensors to many concurrent readers straight from
+//! a compressed APackStore — the deployment APack targets (paper §V: data
+//! stays compressed at rest, decode happens on demand on the memory path;
+//! cf. EIE serving inference from a compressed weight store).
+//!
+//! Packs a zoo subset into one store file, then hammers it from several
+//! threads doing random `get_range` / `get_chunk` reads, verifying every
+//! result against a reference decode.
+//!
+//! ```sh
+//! cargo run --release --example store_serving [threads] [reads-per-thread]
+//! ```
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use apack_repro::coordinator::PartitionPolicy;
+use apack_repro::models::zoo::model_by_name;
+use apack_repro::store::{pack_model_zoo, StoreReader};
+use apack_repro::util::Rng64;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let threads: usize =
+        std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(8);
+    let reads_per_thread: usize =
+        std::env::args().nth(2).map(|s| s.parse()).transpose()?.unwrap_or(400);
+
+    let path = std::env::temp_dir()
+        .join(format!("apack_store_serving_{}.apackstore", std::process::id()));
+    let models: Vec<_> = ["resnet18", "ncf", "bilstm", "alexnet_eyeriss"]
+        .iter()
+        .map(|n| model_by_name(n).expect("zoo model"))
+        .collect();
+    let policy = PartitionPolicy { substreams: 16, min_per_stream: 512 };
+    let summary = pack_model_zoo(&path, &models, 8192, policy)?;
+    println!(
+        "packed {} tensors / {} chunks into {:.1} KiB ({:.2}x vs raw)",
+        summary.tensors,
+        summary.chunks,
+        summary.file_bytes as f64 / 1024.0,
+        summary.compression_ratio()
+    );
+
+    let reader = Arc::new(StoreReader::open(&path)?);
+    let names: Vec<String> =
+        reader.tensor_names().into_iter().map(str::to_string).collect();
+
+    // Reference decode of every tensor (also warms nothing: fresh reader).
+    let reference: HashMap<String, Vec<u32>> = {
+        let check = StoreReader::open(&path)?;
+        names.iter().map(|n| (n.clone(), check.get_tensor(n).unwrap())).collect()
+    };
+    let reference = Arc::new(reference);
+
+    let t0 = Instant::now();
+    let mut served_values = 0u64;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for tid in 0..threads {
+            let reader = Arc::clone(&reader);
+            let reference = Arc::clone(&reference);
+            let names = &names;
+            handles.push(scope.spawn(move || {
+                let mut rng = Rng64::new(0x5E17E + tid as u64);
+                let mut served = 0u64;
+                for _ in 0..reads_per_thread {
+                    let name = &names[rng.below(names.len() as u64) as usize];
+                    let expect = &reference[name];
+                    let meta = reader.meta(name).unwrap();
+                    if meta.chunks.is_empty() {
+                        continue;
+                    }
+                    if rng.chance(0.5) {
+                        // Random range read (a slice of a layer's weights,
+                        // as a sharded inference server would fetch).
+                        let n = meta.n_values;
+                        let lo = rng.below(n);
+                        let hi = (lo + 1 + rng.below(n - lo)).min(n);
+                        let got = reader.get_range(name, lo..hi).unwrap();
+                        assert_eq!(got, expect[lo as usize..hi as usize], "{name} {lo}..{hi}");
+                        served += hi - lo;
+                    } else {
+                        let ci = rng.below(meta.chunks.len() as u64) as usize;
+                        let covered = meta.chunk_value_range(ci);
+                        let got = reader.get_chunk(name, ci).unwrap();
+                        assert_eq!(
+                            got.as_slice(),
+                            &expect[covered.start as usize..covered.end as usize],
+                            "{name} chunk {ci}"
+                        );
+                        served += covered.end - covered.start;
+                    }
+                }
+                served
+            }));
+        }
+        for h in handles {
+            served_values += h.join().expect("reader thread");
+        }
+    });
+    let dt = t0.elapsed();
+
+    let stats = reader.stats();
+    let total_reads = (threads * reads_per_thread) as f64;
+    println!(
+        "{threads} threads × {reads_per_thread} reads: {served_values} values served in {dt:?} \
+         ({:.0} reads/s, {:.1} Mvalues/s)",
+        total_reads / dt.as_secs_f64(),
+        served_values as f64 / dt.as_secs_f64() / 1e6
+    );
+    println!(
+        "cache: {} hits / {} misses ({:.0}% hit rate); {:.2} MiB compressed read, \
+         {} chunks decoded",
+        stats.cache_hits,
+        stats.cache_misses,
+        100.0 * stats.cache_hits as f64 / (stats.cache_hits + stats.cache_misses).max(1) as f64,
+        stats.bytes_read as f64 / (1 << 20) as f64,
+        stats.chunks_decoded
+    );
+    println!("all reads verified against reference decode — serving is lossless");
+    drop(reader);
+    std::fs::remove_file(&path).ok();
+    Ok(())
+}

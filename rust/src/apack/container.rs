@@ -55,18 +55,39 @@ impl Container {
     }
 
     /// Serialize to a flat byte buffer (little-endian framing). Layout:
-    /// `magic u32 | bits u8 | kind u8 | n_values u64 | table | sym_bits u64
-    /// | ofs_bits u64 | symbols | offsets`.
+    /// `magic u32 | table (SymbolTable::to_bytes) | body (body_to_bytes)`.
     pub fn to_bytes(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(64 + self.symbols.len() + self.offsets.len());
+        let mut out = Vec::with_capacity(
+            4 + SymbolTable::SERIALIZED_BYTES + 24 + self.symbols.len() + self.offsets.len(),
+        );
         out.extend_from_slice(&0x4150_434Bu32.to_le_bytes()); // "APCK"
-        out.push(self.table.bits() as u8);
-        out.push(0);
-        out.extend_from_slice(&self.n_values.to_le_bytes());
-        for r in self.table.rows() {
-            out.extend_from_slice(&r.v_min.to_le_bytes());
-            out.extend_from_slice(&r.hi_cnt.to_le_bytes());
+        out.extend_from_slice(&self.table.to_bytes());
+        out.extend_from_slice(&self.body_to_bytes());
+        out
+    }
+
+    /// Parse [`Self::to_bytes`] output.
+    pub fn from_bytes(data: &[u8]) -> Result<Self> {
+        let err = |m: &str| Error::BadContainer(m.to_string());
+        if data.len() < 4 + SymbolTable::SERIALIZED_BYTES {
+            return Err(err("truncated header"));
         }
+        let magic = u32::from_le_bytes(data[0..4].try_into().unwrap());
+        if magic != 0x4150_434B {
+            return Err(err("bad magic"));
+        }
+        let table = SymbolTable::from_bytes(&data[4..])?;
+        Self::body_from_bytes(table, &data[4 + SymbolTable::SERIALIZED_BYTES..])
+    }
+
+    /// Serialize only the table-independent part: `n_values u64 |
+    /// sym_bits u64 | ofs_bits u64 | symbols | offsets`. This is the
+    /// per-shard/per-chunk record used where many streams share one table
+    /// ([`crate::coordinator::ShardedContainer`], [`crate::store`]) so the
+    /// table is not duplicated into every shard.
+    pub fn body_to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(24 + self.symbols.len() + self.offsets.len());
+        out.extend_from_slice(&self.n_values.to_le_bytes());
         out.extend_from_slice(&self.symbol_bits.to_le_bytes());
         out.extend_from_slice(&self.offset_bits.to_le_bytes());
         out.extend_from_slice(&self.symbols);
@@ -74,40 +95,31 @@ impl Container {
         out
     }
 
-    /// Parse [`Self::to_bytes`] output.
-    pub fn from_bytes(data: &[u8]) -> Result<Self> {
+    /// Parse [`Self::body_to_bytes`] output against a shared `table`.
+    /// Rejects both truncated and over-long input — chunk records are
+    /// exact-length so byte-level corruption cannot hide in slack space.
+    pub fn body_from_bytes(table: SymbolTable, data: &[u8]) -> Result<Self> {
         let err = |m: &str| Error::BadContainer(m.to_string());
-        if data.len() < 4 + 2 + 8 {
-            return Err(err("truncated header"));
+        if data.len() < 24 {
+            return Err(err("truncated shard body header"));
         }
-        let magic = u32::from_le_bytes(data[0..4].try_into().unwrap());
-        if magic != 0x4150_434B {
-            return Err(err("bad magic"));
-        }
-        let bits = data[4] as u32;
-        let mut pos = 6;
-        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
-            if *pos + n > data.len() {
-                return Err(Error::BadContainer("truncated body".into()));
-            }
-            let s = &data[*pos..*pos + n];
-            *pos += n;
-            Ok(s)
-        };
-        let n_values = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
-        let mut v_mins = [0u32; super::NUM_ROWS];
-        let mut hi_cnts = [0u16; super::NUM_ROWS];
-        for i in 0..super::NUM_ROWS {
-            v_mins[i] = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
-            hi_cnts[i] = u16::from_le_bytes(take(&mut pos, 2)?.try_into().unwrap());
-        }
-        let table = SymbolTable::new(bits, v_mins, hi_cnts)?;
-        let symbol_bits = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
-        let offset_bits = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+        let n_values = u64::from_le_bytes(data[0..8].try_into().unwrap());
+        let symbol_bits = u64::from_le_bytes(data[8..16].try_into().unwrap());
+        let offset_bits = u64::from_le_bytes(data[16..24].try_into().unwrap());
         let sym_len = (symbol_bits as usize).div_ceil(8);
         let ofs_len = (offset_bits as usize).div_ceil(8);
-        let symbols = take(&mut pos, sym_len)?.to_vec();
-        let offsets = take(&mut pos, ofs_len)?.to_vec();
+        let expected = 24usize
+            .checked_add(sym_len)
+            .and_then(|n| n.checked_add(ofs_len))
+            .ok_or_else(|| err("shard body stream lengths overflow"))?;
+        if data.len() != expected {
+            return Err(err(&format!(
+                "shard body length mismatch: {} bytes, expected {expected}",
+                data.len()
+            )));
+        }
+        let symbols = data[24..24 + sym_len].to_vec();
+        let offsets = data[24 + sym_len..].to_vec();
         Ok(Self { table, n_values, symbols, symbol_bits, offsets, offset_bits })
     }
 }
@@ -184,6 +196,20 @@ mod tests {
         let mut short = c.to_bytes();
         short.truncate(short.len() - 10);
         assert!(Container::from_bytes(&short).is_err());
+    }
+
+    #[test]
+    fn body_roundtrip_shares_table() {
+        let values = tensor();
+        let c = compress(8, &values, TensorKind::Activations).unwrap();
+        let body = c.body_to_bytes();
+        let c2 = Container::body_from_bytes(c.table.clone(), &body).unwrap();
+        assert_eq!(c2.decode().unwrap(), values);
+        // Exact-length framing: slack or truncation is rejected.
+        let mut long = body.clone();
+        long.push(0);
+        assert!(Container::body_from_bytes(c.table.clone(), &long).is_err());
+        assert!(Container::body_from_bytes(c.table.clone(), &body[..body.len() - 1]).is_err());
     }
 
     #[test]

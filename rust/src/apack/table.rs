@@ -192,6 +192,46 @@ impl SymbolTable {
         Ok(idx)
     }
 
+    /// Byte length of [`Self::to_bytes`] output: one bit-width byte plus
+    /// `NUM_ROWS × (v_min u32 + hi_cnt u16)`.
+    pub const SERIALIZED_BYTES: usize = 1 + NUM_ROWS * 6;
+
+    /// Serialize the table to its canonical byte form (little-endian):
+    /// `bits u8 | NUM_ROWS × (v_min u32, hi_cnt u16)`. This is the single
+    /// shared-table record used by [`crate::coordinator::ShardedContainer`]
+    /// and the [`crate::store`] footer, so a tensor's table is stored
+    /// exactly once no matter how many shards/chunks reference it.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(Self::SERIALIZED_BYTES);
+        out.push(self.bits as u8);
+        for r in &self.rows {
+            out.extend_from_slice(&r.v_min.to_le_bytes());
+            out.extend_from_slice(&r.hi_cnt.to_le_bytes());
+        }
+        out
+    }
+
+    /// Parse a table from the first [`Self::SERIALIZED_BYTES`] bytes of
+    /// `data`, running full [`Self::new`] validation.
+    pub fn from_bytes(data: &[u8]) -> Result<Self> {
+        if data.len() < Self::SERIALIZED_BYTES {
+            return Err(Error::InvalidTable(format!(
+                "serialized table needs {} bytes, got {}",
+                Self::SERIALIZED_BYTES,
+                data.len()
+            )));
+        }
+        let bits = data[0] as u32;
+        let mut v_mins = [0u32; NUM_ROWS];
+        let mut hi_cnts = [0u16; NUM_ROWS];
+        for i in 0..NUM_ROWS {
+            let at = 1 + i * 6;
+            v_mins[i] = u32::from_le_bytes(data[at..at + 4].try_into().unwrap());
+            hi_cnts[i] = u16::from_le_bytes(data[at + 4..at + 6].try_into().unwrap());
+        }
+        Self::new(bits, v_mins, hi_cnts)
+    }
+
     /// Serialized metadata footprint in **bits**, following the hardware
     /// encoding (§V: symbol table rows of 11b = 8b base + 3b OL for 8-bit
     /// models, probability rows of 10b) plus a 32-bit symbol count. The
@@ -338,6 +378,21 @@ pub(crate) mod tests {
             *x = i as u32 * 16;
         }
         assert!(SymbolTable::new(8, v2, c2).is_err());
+    }
+
+    #[test]
+    fn serialization_roundtrips_and_validates() {
+        let t = paper_table1();
+        let bytes = t.to_bytes();
+        assert_eq!(bytes.len(), SymbolTable::SERIALIZED_BYTES);
+        assert_eq!(SymbolTable::from_bytes(&bytes).unwrap(), t);
+        // Truncated input is rejected.
+        assert!(SymbolTable::from_bytes(&bytes[..bytes.len() - 1]).is_err());
+        // Corrupted counts fail validation (force non-monotone hi_cnt).
+        let mut bad = bytes.clone();
+        bad[1 + 4] = 0xFF;
+        bad[1 + 5] = 0x03; // row 0 hi_cnt = PROB_MAX, row 1 smaller -> invalid
+        assert!(SymbolTable::from_bytes(&bad).is_err());
     }
 
     #[test]

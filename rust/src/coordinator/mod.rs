@@ -46,15 +46,21 @@ impl ShardedContainer {
         raw as f64 / self.footprint_bits() as f64
     }
 
-    /// Binary serialization: `magic | n_values | shard_count | per-shard
-    /// (len u64 | Container::to_bytes)`.
+    /// Binary serialization: `magic | n_values | shard_count | table
+    /// (SymbolTable::to_bytes, stored once) | per-shard (len u64 |
+    /// Container::body_to_bytes)`.
+    ///
+    /// The shared table is written exactly once at the sharded level —
+    /// matching [`Self::footprint_bits`], which charges the metadata block
+    /// once per tensor — instead of duplicating it into every shard.
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::new();
-        out.extend_from_slice(&0x4150_5348u32.to_le_bytes()); // "APSH"
+        out.extend_from_slice(&0x4150_5332u32.to_le_bytes()); // "APS2"
         out.extend_from_slice(&self.n_values.to_le_bytes());
         out.extend_from_slice(&(self.shards.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.table.to_bytes());
         for s in &self.shards {
-            let b = s.to_bytes();
+            let b = s.body_to_bytes();
             out.extend_from_slice(&(b.len() as u64).to_le_bytes());
             out.extend_from_slice(&b);
         }
@@ -64,13 +70,15 @@ impl ShardedContainer {
     /// Parse [`Self::to_bytes`] output.
     pub fn from_bytes(data: &[u8]) -> Result<Self> {
         let bad = |m: &str| Error::BadContainer(m.to_string());
-        if data.len() < 16 || data[0..4] != 0x4150_5348u32.to_le_bytes() {
+        let header = 16 + SymbolTable::SERIALIZED_BYTES;
+        if data.len() < header || data[0..4] != 0x4150_5332u32.to_le_bytes() {
             return Err(bad("bad sharded-container header"));
         }
         let n_values = u64::from_le_bytes(data[4..12].try_into().unwrap());
         let count = u32::from_le_bytes(data[12..16].try_into().unwrap()) as usize;
-        let mut pos = 16;
-        let mut shards = Vec::with_capacity(count);
+        let table = SymbolTable::from_bytes(&data[16..])?;
+        let mut pos = header;
+        let mut shards = Vec::with_capacity(count.min(1 << 20));
         for _ in 0..count {
             if pos + 8 > data.len() {
                 return Err(bad("truncated shard length"));
@@ -80,13 +88,19 @@ impl ShardedContainer {
             if pos + len > data.len() {
                 return Err(bad("truncated shard body"));
             }
-            shards.push(Container::from_bytes(&data[pos..pos + len])?);
+            shards.push(Container::body_from_bytes(table.clone(), &data[pos..pos + len])?);
             pos += len;
         }
-        let table = shards
-            .first()
-            .map(|s| s.table.clone())
-            .ok_or_else(|| bad("sharded container with zero shards"))?;
+        if pos != data.len() {
+            return Err(bad(&format!(
+                "{} trailing bytes after last shard",
+                data.len() - pos
+            )));
+        }
+        let total: u64 = shards.iter().map(|s| s.n_values).sum();
+        if total != n_values {
+            return Err(bad(&format!("shard value counts sum to {total}, expected {n_values}")));
+        }
         Ok(Self { table, n_values, shards })
     }
 }
@@ -246,6 +260,54 @@ mod tests {
         assert_eq!(c.metrics.values_compressed, 10_000);
         assert_eq!(c.metrics.values_decompressed, 10_000);
         assert!(c.metrics.compressed_bits > 0);
+    }
+
+    #[test]
+    fn serialization_stores_table_once() {
+        let v = tensor(1 << 17, 11);
+        let mut c = Coordinator::new(PartitionPolicy { substreams: 64, min_per_stream: 1 });
+        let sc = c.compress(8, &v, TensorKind::Activations, None).unwrap();
+        assert_eq!(sc.shards.len(), 64);
+        let bytes = sc.to_bytes();
+
+        // The serialized form now agrees with the footprint model (which
+        // charges the table/metadata once per tensor): streams + one table
+        // + per-shard framing, NOT 64 copies of the table.
+        let stream_bytes: usize =
+            sc.shards.iter().map(|s| s.symbols.len() + s.offsets.len()).sum();
+        let framing = 16 + SymbolTable::SERIALIZED_BYTES + 32 * sc.shards.len();
+        assert_eq!(bytes.len(), stream_bytes + framing);
+
+        // And it is strictly smaller than serializing every shard as a
+        // standalone container (the old, table-duplicating layout): the
+        // saving is at least one table record per extra shard.
+        let duplicated: usize = sc.shards.iter().map(|s| s.to_bytes().len()).sum();
+        assert!(
+            duplicated - bytes.len()
+                >= (sc.shards.len() - 1) * (SymbolTable::SERIALIZED_BYTES - 8),
+            "serialized {} vs duplicated {duplicated}",
+            bytes.len()
+        );
+
+        // Footprint model and serialized size stay within the per-shard
+        // framing slack (footprint charges 32 bits/shard vs 32 bytes here).
+        let footprint_bytes = (sc.footprint_bits() / 8) as usize;
+        let slack = 32 * sc.shards.len() + crate::apack::container::META_BYTES + 64;
+        assert!(
+            bytes.len().abs_diff(footprint_bytes) <= slack,
+            "serialized {} vs footprint {footprint_bytes} (slack {slack})",
+            bytes.len()
+        );
+
+        let rt = ShardedContainer::from_bytes(&bytes).unwrap();
+        let mut c2 = Coordinator::new(PartitionPolicy::default());
+        assert_eq!(c2.decompress(&rt).unwrap(), v);
+
+        // Exact-length framing: trailing garbage after the last shard is
+        // rejected, same as the body/footer parsers.
+        let mut slack = bytes.clone();
+        slack.extend_from_slice(&[0u8; 7]);
+        assert!(ShardedContainer::from_bytes(&slack).is_err());
     }
 
     #[test]

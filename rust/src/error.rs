@@ -18,6 +18,11 @@ pub enum Error {
     CorruptStream { position: usize },
     /// The container metadata is inconsistent (framing, counts, versions).
     BadContainer(String),
+    /// An APackStore file is malformed or fails an integrity check
+    /// (truncated footer, CRC mismatch, index pointing past EOF, …).
+    Store(String),
+    /// Underlying I/O failure, stringified (keeps the error type `Eq`).
+    Io(String),
     /// Configuration error (coordinator / simulator parameters).
     Config(String),
     /// Runtime (PJRT / artifact) error, stringified.
@@ -38,6 +43,8 @@ impl fmt::Display for Error {
                 write!(f, "corrupt symbol stream at symbol {position}")
             }
             Error::BadContainer(s) => write!(f, "bad container: {s}"),
+            Error::Store(s) => write!(f, "bad store: {s}"),
+            Error::Io(s) => write!(f, "i/o error: {s}"),
             Error::Config(s) => write!(f, "configuration error: {s}"),
             Error::Runtime(s) => write!(f, "runtime error: {s}"),
         }
@@ -45,6 +52,12 @@ impl fmt::Display for Error {
 }
 
 impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e.to_string())
+    }
+}
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;

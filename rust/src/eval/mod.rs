@@ -10,6 +10,9 @@
 //! - [`fig7`] — overall speedup on the TensorCore accelerator.
 //! - [`fig8`] — overall energy efficiency.
 //!
+//! - [`store_report`] — APackStore footprint vs. raw per model: what the
+//!   zoo weighs at rest when packed into one compressed store file.
+//!
 //! All figures derive from one shared [`CompressionStudy`] so the traffic,
 //! energy and performance numbers are mutually consistent.
 
@@ -20,6 +23,7 @@ pub mod fig5;
 pub mod fig6;
 pub mod fig7;
 pub mod fig8;
+pub mod store_report;
 pub mod study;
 pub mod table1;
 

@@ -1,0 +1,133 @@
+//! Evaluation hook for the APackStore: per-model store footprint vs. raw
+//! size. Packs the zoo (synthesized traces, same sampling as the Fig 5
+//! study) into one store file, reads the footer back, and reports what a
+//! deployment would actually hold at rest — compressed payload, index
+//! overhead, and the end-to-end ratio per model.
+
+use std::path::Path;
+
+use crate::coordinator::PartitionPolicy;
+use crate::error::Result;
+use crate::eval::study::geomean;
+use crate::models::zoo::{all_models, ModelConfig};
+use crate::store::{pack_model_zoo, StoreReader};
+
+use super::render_table;
+
+/// Per-model rollup extracted from a packed store.
+#[derive(Debug, Clone)]
+pub struct ModelStoreFootprint {
+    pub model: String,
+    pub tensors: usize,
+    pub chunks: usize,
+    /// Raw (uncompressed) bits of every stored tensor.
+    pub raw_bits: u64,
+    /// Compressed chunk payload bytes on disk.
+    pub stored_bytes: u64,
+}
+
+impl ModelStoreFootprint {
+    /// Raw size / stored size.
+    pub fn ratio(&self) -> f64 {
+        self.raw_bits as f64 / (self.stored_bytes as f64 * 8.0)
+    }
+}
+
+/// Group a packed store's tensors by their `"{model}/..."` name prefix.
+pub fn footprints_from_store(reader: &StoreReader) -> Vec<ModelStoreFootprint> {
+    let mut out: Vec<ModelStoreFootprint> = Vec::new();
+    for t in &reader.index().tensors {
+        let model = t.name.split('/').next().unwrap_or(&t.name).to_string();
+        let idx = match out.iter().position(|f| f.model == model) {
+            Some(i) => i,
+            None => {
+                out.push(ModelStoreFootprint {
+                    model,
+                    tensors: 0,
+                    chunks: 0,
+                    raw_bits: 0,
+                    stored_bytes: 0,
+                });
+                out.len() - 1
+            }
+        };
+        let entry = &mut out[idx];
+        entry.tensors += 1;
+        entry.chunks += t.chunks.len();
+        entry.raw_bits += t.raw_bits();
+        entry.stored_bytes += t.compressed_bytes();
+    }
+    out
+}
+
+/// Pack `models` into a store at `path` and render the footprint report.
+pub fn report_at(path: &Path, models: &[ModelConfig], sample_cap: usize) -> Result<String> {
+    let summary = pack_model_zoo(path, models, sample_cap, PartitionPolicy::default())?;
+    let reader = StoreReader::open(path)?;
+    let footprints = footprints_from_store(&reader);
+
+    let rows: Vec<Vec<String>> = footprints
+        .iter()
+        .map(|f| {
+            vec![
+                f.model.clone(),
+                f.tensors.to_string(),
+                f.chunks.to_string(),
+                format!("{:.1}", f.raw_bits as f64 / 8.0 / 1024.0),
+                format!("{:.1}", f.stored_bytes as f64 / 1024.0),
+                format!("{:.2}x", f.ratio()),
+            ]
+        })
+        .collect();
+    let mut s = render_table(
+        "Store footprint vs raw per model (sampled tensors)",
+        &["model", "tensors", "chunks", "raw KiB", "stored KiB", "ratio"],
+        &rows,
+    );
+    let ratios: Vec<f64> = footprints.iter().map(|f| f.ratio()).collect();
+    s.push_str(&format!(
+        "\nstore file: {} tensors, {} chunks, {:.1} KiB total ({:.2}x vs raw; \
+         geomean per-model ratio {:.2}x)\n",
+        summary.tensors,
+        summary.chunks,
+        summary.file_bytes as f64 / 1024.0,
+        summary.compression_ratio(),
+        geomean(&ratios),
+    ));
+    Ok(s)
+}
+
+/// Pack the full 24-model zoo into a temp file, render, clean up.
+pub fn render(sample_cap: usize) -> Result<String> {
+    let path = std::env::temp_dir()
+        .join(format!("apack_store_report_{}.apackstore", std::process::id()));
+    let result = report_at(&path, &all_models(), sample_cap);
+    std::fs::remove_file(&path).ok();
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo::model_by_name;
+
+    #[test]
+    fn report_covers_models_and_compresses() {
+        let path = std::env::temp_dir()
+            .join(format!("apack_store_report_test_{}.apackstore", std::process::id()));
+        let models = vec![model_by_name("ncf").unwrap(), model_by_name("bilstm").unwrap()];
+        let text = report_at(&path, &models, 2048).unwrap();
+        assert!(text.contains("ncf"));
+        assert!(text.contains("bilstm"));
+
+        let reader = StoreReader::open(&path).unwrap();
+        let fps = footprints_from_store(&reader);
+        assert_eq!(fps.len(), 2);
+        for f in &fps {
+            assert!(f.raw_bits > 0 && f.stored_bytes > 0);
+            assert!(f.ratio() > 1.0, "{}: ratio {}", f.model, f.ratio());
+        }
+        drop(reader);
+        std::fs::remove_file(&path).ok();
+    }
+}

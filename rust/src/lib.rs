@@ -27,6 +27,10 @@
 //!   Table III.
 //! - [`coordinator`] — the L3 runtime: substream partitioning, parallel
 //!   engine pool, metrics.
+//! - [`store`] — APackStore: a persistent, random-access compressed tensor
+//!   store. Named tensors in one file, independently decodable CRC-checked
+//!   chunks, one shared table per tensor, O(1) `get_tensor` /
+//!   `get_chunk` / `get_range` with an LRU chunk cache.
 //! - [`runtime`] — PJRT client that loads the AOT-lowered JAX/Pallas model
 //!   (HLO text) and runs real inference to produce activation traces.
 //! - [`eval`] — regeneration harness for every table and figure in the
@@ -40,6 +44,7 @@ pub mod eval;
 pub mod models;
 pub mod runtime;
 pub mod simulator;
+pub mod store;
 pub mod util;
 
 pub use error::{Error, Result};

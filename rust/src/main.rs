@@ -1,15 +1,19 @@
-//! `apack-repro` CLI: compress/decompress tensors, print the paper's
-//! tables and figures, and run the end-to-end PJRT inference demo.
+//! `apack-repro` CLI: compress/decompress tensors, pack and serve
+//! APackStore files, print the paper's tables and figures, and run the
+//! end-to-end PJRT inference demo.
 //!
-//! (Argument parsing is hand-rolled — this build environment has no clap.)
+//! (Argument parsing is hand-rolled — this build environment has no clap;
+//! errors are plain `Box<dyn Error>` for the same reason.)
 
-use std::path::PathBuf;
+use std::error::Error;
+use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
 use apack_repro::apack::tablegen::TensorKind;
 use apack_repro::coordinator::{Coordinator, PartitionPolicy, ShardedContainer};
 use apack_repro::eval::{self, CompressionStudy};
-use apack_repro::models::zoo::all_models;
+use apack_repro::models::zoo::{all_models, model_by_name};
+use apack_repro::store::{pack_model_zoo, StoreReader};
 
 const USAGE: &str = "\
 apack-repro — APack off-chip lossless compression, full-system reproduction
@@ -17,6 +21,11 @@ apack-repro — APack off-chip lossless compression, full-system reproduction
 USAGE:
   apack-repro compress <input> [--output <file>] [--kind weights|activations] [--substreams N]
   apack-repro decompress <input> --output <file>
+  apack-repro store pack <output> [--models a,b|all] [--sample-cap N] [--substreams N] [--min-per-stream N]
+  apack-repro store get <store> --tensor NAME [--chunk I | --range LO..HI] [--output <file>]
+  apack-repro store stats <store>
+  apack-repro store verify <store>
+  apack-repro store report [--sample-cap N]
   apack-repro table [--model NAME] [--layer N] [--kind weights|activations]
   apack-repro fig --id <2|5a|5b|6|7|8>
   apack-repro area-power
@@ -66,7 +75,7 @@ fn parse_kind(s: &str) -> TensorKind {
     }
 }
 
-fn run() -> anyhow::Result<()> {
+fn run() -> Result<(), Box<dyn Error>> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first().cloned() else {
         print!("{USAGE}");
@@ -76,9 +85,8 @@ fn run() -> anyhow::Result<()> {
 
     match cmd.as_str() {
         "compress" => {
-            let input = PathBuf::from(
-                args.positional.first().ok_or_else(|| anyhow::anyhow!("missing <input>"))?,
-            );
+            let input =
+                PathBuf::from(args.positional.first().ok_or("missing <input>")?);
             let data = std::fs::read(&input)?;
             let values: Vec<u32> = data.iter().map(|&b| b as u32).collect();
             let substreams: u32 = args.flag_or("substreams", "64").parse()?;
@@ -103,10 +111,9 @@ fn run() -> anyhow::Result<()> {
             }
         }
         "decompress" => {
-            let input = PathBuf::from(
-                args.positional.first().ok_or_else(|| anyhow::anyhow!("missing <input>"))?,
-            );
-            let output = args.flag("output").ok_or_else(|| anyhow::anyhow!("--output required"))?;
+            let input =
+                PathBuf::from(args.positional.first().ok_or("missing <input>")?);
+            let output = args.flag("output").ok_or("--output required")?;
             let sc = ShardedContainer::from_bytes(&std::fs::read(&input)?)?;
             let mut coord = Coordinator::new(PartitionPolicy::default());
             let values = coord.decompress(&sc)?;
@@ -123,8 +130,9 @@ fn run() -> anyhow::Result<()> {
                 None => println!("no such model/layer or tensor not studied"),
             }
         }
+        "store" => run_store(&args)?,
         "fig" => {
-            let id = args.flag("id").ok_or_else(|| anyhow::anyhow!("--id required"))?;
+            let id = args.flag("id").ok_or("--id required")?;
             match id {
                 "2" => println!("{}", eval::fig2::render()),
                 "5" | "5a" | "5b" => {
@@ -143,7 +151,9 @@ fn run() -> anyhow::Result<()> {
                     let study = CompressionStudy::full();
                     println!("{}", eval::fig8::render(&study));
                 }
-                other => anyhow::bail!("unknown figure id {other} (try 2, 5a, 5b, 6, 7, 8)"),
+                other => {
+                    return Err(format!("unknown figure id {other} (try 2, 5a, 5b, 6, 7, 8)").into())
+                }
             }
         }
         "area-power" => println!("{}", eval::area_power::render()),
@@ -171,7 +181,130 @@ fn run() -> anyhow::Result<()> {
             eval::e2e::run(&artifacts, batches)?;
         }
         "help" | "--help" | "-h" => print!("{USAGE}"),
-        other => anyhow::bail!("unknown command {other}\n{USAGE}"),
+        other => return Err(format!("unknown command {other}\n{USAGE}").into()),
+    }
+    Ok(())
+}
+
+/// `store pack | get | stats | verify | report` — the APackStore CLI.
+fn run_store(args: &Args) -> Result<(), Box<dyn Error>> {
+    let action = args.positional.first().map(String::as_str).unwrap_or("");
+    match action {
+        "pack" => {
+            let out = args.positional.get(1).ok_or("missing <output> store path")?;
+            let models = match args.flag("models").unwrap_or("all") {
+                "all" => all_models(),
+                list => list
+                    .split(',')
+                    .map(|n| {
+                        model_by_name(n.trim())
+                            .ok_or_else(|| format!("unknown model {}", n.trim()))
+                    })
+                    .collect::<Result<Vec<_>, _>>()?,
+            };
+            let sample_cap: usize = args.flag_or("sample-cap", "16384").parse()?;
+            let substreams: u32 = args.flag_or("substreams", "64").parse()?;
+            let min_per_stream: usize = args.flag_or("min-per-stream", "1024").parse()?;
+            let policy = PartitionPolicy { substreams, min_per_stream };
+            let summary = pack_model_zoo(Path::new(out), &models, sample_cap, policy)?;
+            println!(
+                "packed {} models into {out}: {} tensors, {} chunks, {:.1} KiB \
+                 ({:.2}x vs raw sampled values)",
+                models.len(),
+                summary.tensors,
+                summary.chunks,
+                summary.file_bytes as f64 / 1024.0,
+                summary.compression_ratio()
+            );
+        }
+        "get" => {
+            let input = Path::new(args.positional.get(1).ok_or("missing <store> path")?);
+            let reader = StoreReader::open(input)?;
+            let name = args.flag("tensor").ok_or("--tensor required")?;
+            let values = if let Some(ci) = args.flag("chunk") {
+                reader.get_chunk(name, ci.parse()?)?.to_vec()
+            } else if let Some(range) = args.flag("range") {
+                let (lo, hi) = range
+                    .split_once("..")
+                    .ok_or("--range must look like LO..HI")?;
+                reader.get_range(name, lo.trim().parse()?..hi.trim().parse()?)?
+            } else {
+                reader.get_tensor(name)?
+            };
+            let stats = reader.stats();
+            println!(
+                "{name}: {} values decoded ({} compressed bytes read, {} chunks)",
+                values.len(),
+                stats.bytes_read,
+                stats.chunks_decoded
+            );
+            if let Some(out) = args.flag("output") {
+                let mut bytes = Vec::with_capacity(values.len() * 4);
+                for v in &values {
+                    bytes.extend_from_slice(&v.to_le_bytes());
+                }
+                std::fs::write(out, bytes)?;
+                println!("wrote little-endian u32 values to {out}");
+            } else {
+                let head: Vec<String> =
+                    values.iter().take(16).map(|v| format!("{v:#x}")).collect();
+                let more = if values.len() > 16 { ", …" } else { "" };
+                println!("head: [{}{more}]", head.join(", "));
+            }
+        }
+        "stats" => {
+            let input = Path::new(args.positional.get(1).ok_or("missing <store> path")?);
+            let reader = StoreReader::open(input)?;
+            let rows: Vec<Vec<String>> = reader
+                .index()
+                .tensors
+                .iter()
+                .map(|t| {
+                    vec![
+                        t.name.clone(),
+                        format!("{}b", t.bits),
+                        format!("{:?}", t.kind),
+                        t.n_values.to_string(),
+                        t.chunks.len().to_string(),
+                        t.compressed_bytes().to_string(),
+                        format!(
+                            "{:.2}x",
+                            t.raw_bits() as f64 / (t.compressed_bytes().max(1) * 8) as f64
+                        ),
+                    ]
+                })
+                .collect();
+            println!(
+                "{}",
+                eval::render_table(
+                    &format!("{} — {} tensors", input.display(), reader.tensor_count()),
+                    &["tensor", "bits", "kind", "values", "chunks", "bytes", "ratio"],
+                    &rows
+                )
+            );
+        }
+        "verify" => {
+            let input = Path::new(args.positional.get(1).ok_or("missing <store> path")?);
+            let reader = StoreReader::open(input)?;
+            let report = reader.verify()?;
+            println!(
+                "{}: OK — {} tensors, {} chunks, {} compressed bytes all pass CRC + decode",
+                input.display(),
+                report.tensors,
+                report.chunks,
+                report.bytes
+            );
+        }
+        "report" => {
+            let sample_cap: usize = args.flag_or("sample-cap", "8192").parse()?;
+            println!("{}", eval::store_report::render(sample_cap)?);
+        }
+        other => {
+            return Err(
+                format!("unknown store action {other:?} (try pack, get, stats, verify, report)")
+                    .into(),
+            )
+        }
     }
     Ok(())
 }

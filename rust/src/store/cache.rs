@@ -1,0 +1,153 @@
+//! Bounded LRU cache of decompressed chunks.
+//!
+//! The reader's hot path (paper §V: decode on the DRAM path, serve from
+//! on-chip storage) keeps recently decoded chunks resident so repeated
+//! `get_chunk`/`get_range` hits skip both the file read and the arithmetic
+//! decode. Capacity is budgeted in **values** (4 bytes each), not entries,
+//! so one huge chunk cannot silently blow the memory bound that dozens of
+//! small chunks were sized for.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Cache key: (tensor index in the store, chunk index in the tensor).
+pub type ChunkKey = (u32, u32);
+
+struct Entry {
+    data: Arc<Vec<u32>>,
+    /// Logical clock at last touch; smallest = least recently used.
+    last_used: u64,
+}
+
+/// A bounded LRU keyed by [`ChunkKey`]. Entries are `Arc`s, so an evicted
+/// chunk stays alive for any reader still holding it.
+pub struct ChunkCache {
+    map: HashMap<ChunkKey, Entry>,
+    capacity_values: usize,
+    used_values: usize,
+    tick: u64,
+}
+
+impl ChunkCache {
+    /// Cache budgeting at most `capacity_values` decoded values (0
+    /// disables caching entirely).
+    pub fn new(capacity_values: usize) -> Self {
+        Self { map: HashMap::new(), capacity_values, used_values: 0, tick: 0 }
+    }
+
+    /// Look up a chunk, refreshing its recency on hit.
+    pub fn get(&mut self, key: ChunkKey) -> Option<Arc<Vec<u32>>> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.map.get_mut(&key).map(|e| {
+            e.last_used = tick;
+            Arc::clone(&e.data)
+        })
+    }
+
+    /// Insert a decoded chunk, evicting least-recently-used entries until
+    /// the value budget holds. Chunks larger than the whole budget are not
+    /// cached (they would evict everything for a single-use entry).
+    pub fn insert(&mut self, key: ChunkKey, data: Arc<Vec<u32>>) {
+        let size = data.len();
+        if size > self.capacity_values {
+            return;
+        }
+        self.tick += 1;
+        if let Some(old) = self.map.insert(key, Entry { data, last_used: self.tick }) {
+            self.used_values -= old.data.len();
+        }
+        self.used_values += size;
+        while self.used_values > self.capacity_values {
+            // O(n) LRU scan: the cache holds at most a few hundred chunks,
+            // so a scan beats the bookkeeping of an intrusive list here.
+            let lru = self
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k)
+                .expect("used_values > 0 implies non-empty map");
+            if let Some(e) = self.map.remove(&lru) {
+                self.used_values -= e.data.len();
+            }
+        }
+    }
+
+    /// Drop every entry (used by benches to measure the cold path).
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.used_values = 0;
+    }
+
+    /// Number of resident chunks.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Values currently resident.
+    pub fn used_values(&self) -> usize {
+        self.used_values
+    }
+
+    /// Configured budget in values.
+    pub fn capacity_values(&self) -> usize {
+        self.capacity_values
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chunk(n: usize, fill: u32) -> Arc<Vec<u32>> {
+        Arc::new(vec![fill; n])
+    }
+
+    #[test]
+    fn hit_miss_and_budget() {
+        let mut c = ChunkCache::new(100);
+        assert!(c.get((0, 0)).is_none());
+        c.insert((0, 0), chunk(60, 1));
+        c.insert((0, 1), chunk(60, 2));
+        // 120 > 100: (0,0) is LRU and must be gone.
+        assert!(c.get((0, 0)).is_none());
+        assert_eq!(c.get((0, 1)).unwrap()[0], 2);
+        assert!(c.used_values() <= 100);
+    }
+
+    #[test]
+    fn get_refreshes_recency() {
+        let mut c = ChunkCache::new(100);
+        c.insert((0, 0), chunk(40, 1));
+        c.insert((0, 1), chunk(40, 2));
+        assert!(c.get((0, 0)).is_some()); // (0,1) is now LRU
+        c.insert((0, 2), chunk(40, 3)); // evicts (0,1)
+        assert!(c.get((0, 0)).is_some());
+        assert!(c.get((0, 1)).is_none());
+        assert!(c.get((0, 2)).is_some());
+    }
+
+    #[test]
+    fn oversized_and_zero_capacity() {
+        let mut c = ChunkCache::new(10);
+        c.insert((0, 0), chunk(11, 1)); // larger than budget: not cached
+        assert!(c.is_empty());
+        let mut off = ChunkCache::new(0);
+        off.insert((0, 0), chunk(1, 1));
+        assert!(off.get((0, 0)).is_none());
+    }
+
+    #[test]
+    fn reinsert_same_key_accounts_once() {
+        let mut c = ChunkCache::new(100);
+        c.insert((0, 0), chunk(30, 1));
+        c.insert((0, 0), chunk(50, 2));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.used_values(), 50);
+        assert_eq!(c.get((0, 0)).unwrap()[0], 2);
+    }
+}

@@ -1,0 +1,492 @@
+//! The APackStore on-disk format: a single file holding many named
+//! compressed tensors with O(1) random access into any chunk.
+//!
+//! # File layout
+//!
+//! ```text
+//! offset 0         magic, 8 bytes: "APACKST1"
+//! offset 8         chunk blobs, concatenated in write order. Each blob is
+//!                  a table-less `Container` body
+//!                  (`Container::body_to_bytes`):
+//!                    n_values u64 | sym_bits u64 | ofs_bits u64
+//!                    | symbol stream | offset stream
+//! footer_offset    footer: `StoreIndex::to_bytes`, per tensor:
+//!                    name_len u16 | name UTF-8 | bits u8 | kind u8
+//!                    | n_values u64 | values_per_chunk u64
+//!                    | shared SymbolTable (97 bytes, stored exactly once)
+//!                    | chunk_count u32
+//!                    | chunk_count × (offset u64 | len u64 | n_values u64
+//!                                     | crc32 u32)
+//! EOF - 28         trailer, fixed 28 bytes:
+//!                    footer_offset u64 | footer_len u64 | footer_crc u32
+//!                    | tensor_count u32 | trailer magic "APFT" u32
+//! ```
+//!
+//! All integers are little-endian. Design properties:
+//!
+//! - **Single shared table per tensor.** Chunks carry only their streams;
+//!   the 16-row symbol/probability table (paper §IV) lives once in the
+//!   footer, mirroring the hardware where all substreams of a tensor share
+//!   one table (§V-B).
+//! - **Independently decodable chunks.** Tensors are split into
+//!   fixed-value-count chunks by [`crate::coordinator::PartitionPolicy`];
+//!   value index `i` lives in chunk `i / values_per_chunk`, so
+//!   `get_chunk`/`get_range` touch only the bytes they need — the
+//!   fine-grained random access a compression-aware memory path requires.
+//! - **Corruption detection everywhere.** Every chunk carries a CRC32
+//!   checked on read; the footer carries its own CRC checked on open; all
+//!   offsets are bounds-checked against the chunk region before any I/O.
+//! - **Appendable.** The index lives at the tail, so writers stream chunk
+//!   blobs and seal the file with footer + trailer in one pass.
+
+use std::collections::BTreeMap;
+use std::ops::Range;
+
+use crate::apack::container::META_BYTES;
+use crate::apack::tablegen::TensorKind;
+use crate::apack::SymbolTable;
+use crate::error::{Error, Result};
+
+/// Leading file magic ("APACKST" + format version digit).
+pub const STORE_MAGIC: [u8; 8] = *b"APACKST1";
+
+/// Trailer magic ("APFT", little-endian u32 at EOF-4).
+pub const FOOTER_MAGIC: u32 = 0x4150_4654;
+
+/// Fixed trailer size at EOF: `footer_offset u64 | footer_len u64 |
+/// footer_crc u32 | tensor_count u32 | magic u32`.
+pub const TRAILER_BYTES: usize = 8 + 8 + 4 + 4 + 4;
+
+// ---------------------------------------------------------------------------
+// CRC32 (IEEE 802.3, the zlib polynomial) — table-driven, built at compile
+// time; no external crates in this offline build.
+// ---------------------------------------------------------------------------
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+const CRC32_TABLE: [u32; 256] = crc32_table();
+
+/// CRC32 (IEEE) of `data` — the per-chunk and footer integrity check.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = !0u32;
+    for &b in data {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+// ---------------------------------------------------------------------------
+// Index records.
+// ---------------------------------------------------------------------------
+
+/// One chunk's location and integrity record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkMeta {
+    /// Absolute file offset of the chunk blob.
+    pub offset: u64,
+    /// Blob length in bytes.
+    pub len: u64,
+    /// Values encoded in this chunk.
+    pub n_values: u64,
+    /// CRC32 of the blob bytes.
+    pub crc32: u32,
+}
+
+/// One tensor's footer entry: identity, shared table, chunk directory.
+#[derive(Debug, Clone)]
+pub struct TensorMeta {
+    pub name: String,
+    /// Value bit width (4–16).
+    pub bits: u32,
+    pub kind: TensorKind,
+    /// Total values across chunks.
+    pub n_values: u64,
+    /// Fixed values per chunk (the last chunk may be shorter). Always ≥ 1.
+    pub values_per_chunk: u64,
+    /// The tensor's shared symbol/probability table, stored exactly once.
+    pub table: SymbolTable,
+    pub chunks: Vec<ChunkMeta>,
+}
+
+impl TensorMeta {
+    /// Chunk index holding value `idx` (caller checks `idx < n_values`).
+    #[inline]
+    pub fn chunk_for_value(&self, idx: u64) -> usize {
+        (idx / self.values_per_chunk) as usize
+    }
+
+    /// Global value-index range `[lo, hi)` covered by chunk `ci`.
+    pub fn chunk_value_range(&self, ci: usize) -> Range<u64> {
+        let lo = ci as u64 * self.values_per_chunk;
+        let hi = (lo + self.chunks[ci].n_values).min(self.n_values);
+        lo..hi
+    }
+
+    /// Total compressed payload bytes (chunk blobs only).
+    pub fn compressed_bytes(&self) -> u64 {
+        self.chunks.iter().map(|c| c.len).sum()
+    }
+
+    /// Raw (uncompressed) size in bits at this tensor's bit width.
+    pub fn raw_bits(&self) -> u64 {
+        self.n_values * self.bits as u64
+    }
+
+    /// Compressed footprint in bits under the paper's accounting: streams
+    /// plus one `META_BYTES` metadata block per tensor.
+    pub fn footprint_bits(&self) -> u64 {
+        self.compressed_bytes() * 8 + (META_BYTES as u64) * 8
+    }
+}
+
+fn kind_to_byte(kind: TensorKind) -> u8 {
+    match kind {
+        TensorKind::Weights => 0,
+        TensorKind::Activations => 1,
+    }
+}
+
+fn kind_from_byte(b: u8) -> Result<TensorKind> {
+    match b {
+        0 => Ok(TensorKind::Weights),
+        1 => Ok(TensorKind::Activations),
+        other => Err(Error::Store(format!("unknown tensor kind byte {other:#x}"))),
+    }
+}
+
+/// The parsed footer: every tensor's metadata plus a name lookup.
+#[derive(Debug, Clone, Default)]
+pub struct StoreIndex {
+    pub tensors: Vec<TensorMeta>,
+    by_name: BTreeMap<String, usize>,
+}
+
+impl StoreIndex {
+    pub fn new(tensors: Vec<TensorMeta>) -> Self {
+        let by_name =
+            tensors.iter().enumerate().map(|(i, t)| (t.name.clone(), i)).collect();
+        Self { tensors, by_name }
+    }
+
+    /// Index of a tensor by name.
+    pub fn position(&self, name: &str) -> Option<usize> {
+        self.by_name.get(name).copied()
+    }
+
+    /// Tensor metadata by name.
+    pub fn get(&self, name: &str) -> Option<&TensorMeta> {
+        self.position(name).map(|i| &self.tensors[i])
+    }
+
+    /// Serialize the footer (without its CRC — the trailer carries that).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        for t in &self.tensors {
+            let name = t.name.as_bytes();
+            out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            out.extend_from_slice(name);
+            out.push(t.bits as u8);
+            out.push(kind_to_byte(t.kind));
+            out.extend_from_slice(&t.n_values.to_le_bytes());
+            out.extend_from_slice(&t.values_per_chunk.to_le_bytes());
+            out.extend_from_slice(&t.table.to_bytes());
+            out.extend_from_slice(&(t.chunks.len() as u32).to_le_bytes());
+            for c in &t.chunks {
+                out.extend_from_slice(&c.offset.to_le_bytes());
+                out.extend_from_slice(&c.len.to_le_bytes());
+                out.extend_from_slice(&c.n_values.to_le_bytes());
+                out.extend_from_slice(&c.crc32.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Parse a footer holding `tensor_count` entries, validating every
+    /// record (bounds, table invariants, per-tensor value accounting).
+    pub fn from_bytes(data: &[u8], tensor_count: usize) -> Result<Self> {
+        let bad = |m: String| Error::Store(m);
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            if *pos + n > data.len() {
+                return Err(Error::Store(format!(
+                    "truncated footer: need {} bytes at {}, have {}",
+                    n,
+                    *pos,
+                    data.len()
+                )));
+            }
+            let s = &data[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        let mut tensors = Vec::with_capacity(tensor_count.min(1 << 16));
+        for _ in 0..tensor_count {
+            let name_len =
+                u16::from_le_bytes(take(&mut pos, 2)?.try_into().unwrap()) as usize;
+            let name = std::str::from_utf8(take(&mut pos, name_len)?)
+                .map_err(|_| bad("tensor name is not UTF-8".into()))?
+                .to_string();
+            let bits = take(&mut pos, 1)?[0] as u32;
+            let kind = kind_from_byte(take(&mut pos, 1)?[0])?;
+            let n_values = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+            let values_per_chunk =
+                u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+            if values_per_chunk == 0 {
+                return Err(bad(format!("tensor {name}: values_per_chunk is zero")));
+            }
+            let table = SymbolTable::from_bytes(take(&mut pos, SymbolTable::SERIALIZED_BYTES)?)?;
+            if table.bits() != bits {
+                return Err(bad(format!(
+                    "tensor {name}: table bit width {} != declared {bits}",
+                    table.bits()
+                )));
+            }
+            let chunk_count =
+                u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+            let mut chunks = Vec::with_capacity(chunk_count.min(1 << 20));
+            let mut total = 0u64;
+            for ci in 0..chunk_count {
+                let offset = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+                let len = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+                let c_values = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+                let crc = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+                // Non-last chunks hold exactly `values_per_chunk`; the
+                // last at most that. Both bounds matter: `chunk_for_value`
+                // divides by `values_per_chunk`, so an oversized chunk
+                // would send reads past the chunk directory.
+                if ci + 1 < chunk_count && c_values != values_per_chunk {
+                    return Err(bad(format!(
+                        "tensor {name}: chunk {ci} holds {c_values} values, \
+                         expected fixed {values_per_chunk}"
+                    )));
+                }
+                if c_values > values_per_chunk {
+                    return Err(bad(format!(
+                        "tensor {name}: last chunk holds {c_values} values, \
+                         more than values_per_chunk {values_per_chunk}"
+                    )));
+                }
+                total = total
+                    .checked_add(c_values)
+                    .ok_or_else(|| bad(format!("tensor {name}: value count overflow")))?;
+                chunks.push(ChunkMeta { offset, len, n_values: c_values, crc32: crc });
+            }
+            if total != n_values {
+                return Err(bad(format!(
+                    "tensor {name}: chunks hold {total} values, header says {n_values}"
+                )));
+            }
+            tensors.push(TensorMeta {
+                name,
+                bits,
+                kind,
+                n_values,
+                values_per_chunk,
+                table,
+                chunks,
+            });
+        }
+        if pos != data.len() {
+            return Err(bad(format!(
+                "footer has {} trailing bytes after {tensor_count} tensors",
+                data.len() - pos
+            )));
+        }
+        let idx = Self::new(tensors);
+        if idx.by_name.len() != idx.tensors.len() {
+            return Err(bad("duplicate tensor names in footer".into()));
+        }
+        Ok(idx)
+    }
+}
+
+/// Build the fixed-size trailer record.
+pub fn trailer_bytes(
+    footer_offset: u64,
+    footer_len: u64,
+    footer_crc: u32,
+    tensor_count: u32,
+) -> [u8; TRAILER_BYTES] {
+    let mut out = [0u8; TRAILER_BYTES];
+    out[0..8].copy_from_slice(&footer_offset.to_le_bytes());
+    out[8..16].copy_from_slice(&footer_len.to_le_bytes());
+    out[16..20].copy_from_slice(&footer_crc.to_le_bytes());
+    out[20..24].copy_from_slice(&tensor_count.to_le_bytes());
+    out[24..28].copy_from_slice(&FOOTER_MAGIC.to_le_bytes());
+    out
+}
+
+/// Parsed trailer fields.
+#[derive(Debug, Clone, Copy)]
+pub struct Trailer {
+    pub footer_offset: u64,
+    pub footer_len: u64,
+    pub footer_crc: u32,
+    pub tensor_count: u32,
+}
+
+/// Parse a trailer record (the last [`TRAILER_BYTES`] of the file).
+pub fn parse_trailer(data: &[u8]) -> Result<Trailer> {
+    if data.len() != TRAILER_BYTES {
+        return Err(Error::Store(format!(
+            "trailer must be {TRAILER_BYTES} bytes, got {}",
+            data.len()
+        )));
+    }
+    let magic = u32::from_le_bytes(data[24..28].try_into().unwrap());
+    if magic != FOOTER_MAGIC {
+        return Err(Error::Store(format!("bad trailer magic {magic:#010x}")));
+    }
+    Ok(Trailer {
+        footer_offset: u64::from_le_bytes(data[0..8].try_into().unwrap()),
+        footer_len: u64::from_le_bytes(data[8..16].try_into().unwrap()),
+        footer_crc: u32::from_le_bytes(data[16..20].try_into().unwrap()),
+        tensor_count: u32::from_le_bytes(data[20..24].try_into().unwrap()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // Standard IEEE CRC32 check values.
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn crc32_detects_single_byte_change() {
+        let a = b"hello apack store".to_vec();
+        let base = crc32(&a);
+        for i in 0..a.len() {
+            let mut b = a.clone();
+            b[i] ^= 0x01;
+            assert_ne!(crc32(&b), base, "flip at {i}");
+        }
+    }
+
+    fn sample_index() -> StoreIndex {
+        let table = SymbolTable::uniform(8);
+        StoreIndex::new(vec![
+            TensorMeta {
+                name: "m/layer000/weights".into(),
+                bits: 8,
+                kind: TensorKind::Weights,
+                n_values: 2500,
+                values_per_chunk: 1000,
+                table: table.clone(),
+                chunks: vec![
+                    ChunkMeta { offset: 8, len: 700, n_values: 1000, crc32: 1 },
+                    ChunkMeta { offset: 708, len: 650, n_values: 1000, crc32: 2 },
+                    ChunkMeta { offset: 1358, len: 380, n_values: 500, crc32: 3 },
+                ],
+            },
+            TensorMeta {
+                name: "m/layer000/activations".into(),
+                bits: 8,
+                kind: TensorKind::Activations,
+                n_values: 10,
+                values_per_chunk: 10,
+                table,
+                chunks: vec![ChunkMeta { offset: 1738, len: 40, n_values: 10, crc32: 4 }],
+            },
+        ])
+    }
+
+    #[test]
+    fn index_roundtrip() {
+        let idx = sample_index();
+        let bytes = idx.to_bytes();
+        let parsed = StoreIndex::from_bytes(&bytes, idx.tensors.len()).unwrap();
+        assert_eq!(parsed.tensors.len(), 2);
+        let t = parsed.get("m/layer000/weights").unwrap();
+        assert_eq!(t.n_values, 2500);
+        assert_eq!(t.chunks.len(), 3);
+        assert_eq!(t.chunks[1].offset, 708);
+        assert_eq!(t.kind, TensorKind::Weights);
+        assert!(parsed.get("nope").is_none());
+    }
+
+    #[test]
+    fn index_rejects_corruption() {
+        let idx = sample_index();
+        let bytes = idx.to_bytes();
+        // Truncation at every prefix either errors or never panics.
+        for keep in [0, 1, 5, bytes.len() / 2, bytes.len() - 1] {
+            assert!(
+                StoreIndex::from_bytes(&bytes[..keep], idx.tensors.len()).is_err(),
+                "keep={keep}"
+            );
+        }
+        // Wrong tensor count: too many -> truncated; too few -> trailing.
+        assert!(StoreIndex::from_bytes(&bytes, 3).is_err());
+        assert!(StoreIndex::from_bytes(&bytes, 1).is_err());
+    }
+
+    #[test]
+    fn index_rejects_oversized_last_chunk() {
+        // A CRC-valid hostile footer whose last chunk exceeds
+        // values_per_chunk would send chunk_for_value past the chunk
+        // directory — must be rejected at parse time, not panic on read.
+        let table = SymbolTable::uniform(8);
+        let hostile = StoreIndex::new(vec![TensorMeta {
+            name: "t".into(),
+            bits: 8,
+            kind: TensorKind::Weights,
+            n_values: 35,
+            values_per_chunk: 10,
+            table,
+            chunks: vec![
+                ChunkMeta { offset: 8, len: 10, n_values: 10, crc32: 0 },
+                ChunkMeta { offset: 18, len: 10, n_values: 25, crc32: 0 },
+            ],
+        }]);
+        let err = StoreIndex::from_bytes(&hostile.to_bytes(), 1);
+        assert!(err.is_err(), "oversized last chunk must not parse");
+    }
+
+    #[test]
+    fn chunk_value_mapping() {
+        let idx = sample_index();
+        let t = idx.get("m/layer000/weights").unwrap();
+        assert_eq!(t.chunk_for_value(0), 0);
+        assert_eq!(t.chunk_for_value(999), 0);
+        assert_eq!(t.chunk_for_value(1000), 1);
+        assert_eq!(t.chunk_for_value(2499), 2);
+        assert_eq!(t.chunk_value_range(0), 0..1000);
+        assert_eq!(t.chunk_value_range(2), 2000..2500);
+        assert_eq!(t.compressed_bytes(), 700 + 650 + 380);
+        assert_eq!(t.raw_bits(), 2500 * 8);
+    }
+
+    #[test]
+    fn trailer_roundtrip() {
+        let t = trailer_bytes(1234, 567, 0xDEAD_BEEF, 24);
+        let p = parse_trailer(&t).unwrap();
+        assert_eq!(p.footer_offset, 1234);
+        assert_eq!(p.footer_len, 567);
+        assert_eq!(p.footer_crc, 0xDEAD_BEEF);
+        assert_eq!(p.tensor_count, 24);
+        let mut bad = t;
+        bad[27] ^= 0xFF;
+        assert!(parse_trailer(&bad).is_err());
+        assert!(parse_trailer(&t[..20]).is_err());
+    }
+}

@@ -1,0 +1,31 @@
+//! **APackStore** — a persistent, random-access compressed tensor store.
+//!
+//! APack's premise is that compressed tensors live *at rest* and are
+//! decoded on demand on the DRAM path (paper §V). This module turns the
+//! codec into that servable artifact: one file holds many named tensors,
+//! each split into independently decodable fixed-value-count chunks
+//! (sharded by [`crate::coordinator::PartitionPolicy`], like the
+//! substreams the replicated hardware engines consume) with one shared
+//! [`crate::apack::SymbolTable`] per tensor stored exactly once in the
+//! footer index.
+//!
+//! - [`format`] — the on-disk layout: magic, chunk blobs, footer index
+//!   with per-chunk CRC32s, fixed trailer. See its module docs for the
+//!   byte-level specification.
+//! - [`writer`] — [`StoreWriter`] (streaming, parallel chunk encode) and
+//!   [`pack_model_zoo`] (the 24 Table-II models into one store).
+//! - [`reader`] — [`StoreReader`]: `get_tensor` / `get_chunk` /
+//!   `get_range` decode only the chunks they touch, in parallel, with
+//!   corruption detection on every read and byte-accounted I/O stats.
+//! - [`cache`] — [`ChunkCache`], the bounded LRU of decoded chunks behind
+//!   the reader's hot path.
+
+pub mod cache;
+pub mod format;
+pub mod reader;
+pub mod writer;
+
+pub use cache::ChunkCache;
+pub use format::{crc32, ChunkMeta, StoreIndex, TensorMeta};
+pub use reader::{ReadStats, StoreReader, VerifyReport, DEFAULT_CACHE_VALUES};
+pub use writer::{pack_model_zoo, StoreSummary, StoreWriter};

@@ -1,0 +1,432 @@
+//! Random-access APackStore reader.
+//!
+//! `get_tensor`, `get_chunk` and `get_range` decode **only the chunks they
+//! touch**: the footer index maps a value range to chunk indices in O(1)
+//! (fixed values per chunk), each chunk blob is read with one positioned
+//! read and CRC-checked, and decompression fans out over
+//! [`crate::util::par_map`] — the software mirror of the replicated
+//! decode engines on the DRAM path (paper §V-B). A bounded LRU
+//! ([`super::ChunkCache`]) keeps hot decoded chunks resident.
+//!
+//! The reader is `Sync`: file I/O goes through a mutex (positioned reads
+//! are short; the arithmetic decode outside the lock dominates), so many
+//! threads can serve requests from one open store.
+
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom};
+use std::ops::Range;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::apack::container::Container;
+use crate::error::{Error, Result};
+use crate::util::par_map;
+
+use super::cache::{ChunkCache, ChunkKey};
+use super::format::{
+    crc32, parse_trailer, StoreIndex, TensorMeta, STORE_MAGIC, TRAILER_BYTES,
+};
+
+/// Default cache budget: 4M values (16 MiB of decoded u32s).
+pub const DEFAULT_CACHE_VALUES: usize = 4 << 20;
+
+/// Cumulative read-path counters (chunk I/O only; the one-time open cost
+/// of footer + trailer is excluded so tests can assert exact per-read
+/// byte accounting).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ReadStats {
+    /// Compressed chunk bytes fetched from disk.
+    pub bytes_read: u64,
+    /// Chunks arithmetic-decoded (cache misses).
+    pub chunks_decoded: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+/// Result of [`StoreReader::verify`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct VerifyReport {
+    pub tensors: usize,
+    pub chunks: usize,
+    pub bytes: u64,
+}
+
+/// A read-only handle on one APackStore file.
+pub struct StoreReader {
+    io: Mutex<File>,
+    index: StoreIndex,
+    /// First byte past the chunk region (chunks must end before this).
+    chunk_region_end: u64,
+    cache: Mutex<ChunkCache>,
+    bytes_read: AtomicU64,
+    chunks_decoded: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+}
+
+impl StoreReader {
+    /// Open and validate a store: magic, trailer, footer CRC, index
+    /// invariants, and chunk-extent bounds. Uses the default cache budget.
+    pub fn open(path: &Path) -> Result<Self> {
+        Self::with_cache_capacity(path, DEFAULT_CACHE_VALUES)
+    }
+
+    /// Open with an explicit cache budget in values (0 disables caching).
+    pub fn with_cache_capacity(path: &Path, cache_values: usize) -> Result<Self> {
+        let mut file = File::open(path)?;
+        let file_len = file.metadata()?.len();
+        let min_len = (STORE_MAGIC.len() + TRAILER_BYTES) as u64;
+        if file_len < min_len {
+            return Err(Error::Store(format!(
+                "file is {file_len} bytes, smaller than magic + trailer ({min_len})"
+            )));
+        }
+        let mut magic = [0u8; 8];
+        file.seek(SeekFrom::Start(0))?;
+        file.read_exact(&mut magic)?;
+        if magic != STORE_MAGIC {
+            return Err(Error::Store("bad store magic".into()));
+        }
+        let mut trailer_buf = [0u8; TRAILER_BYTES];
+        file.seek(SeekFrom::End(-(TRAILER_BYTES as i64)))?;
+        file.read_exact(&mut trailer_buf)?;
+        let trailer = parse_trailer(&trailer_buf)?;
+        let footer_end = trailer
+            .footer_offset
+            .checked_add(trailer.footer_len)
+            .ok_or_else(|| Error::Store("footer extent overflows".into()))?;
+        if trailer.footer_offset < STORE_MAGIC.len() as u64
+            || footer_end != file_len - TRAILER_BYTES as u64
+        {
+            return Err(Error::Store(format!(
+                "footer extent [{}, {footer_end}) does not abut the trailer",
+                trailer.footer_offset
+            )));
+        }
+        let mut footer = vec![0u8; trailer.footer_len as usize];
+        file.seek(SeekFrom::Start(trailer.footer_offset))?;
+        file.read_exact(&mut footer)?;
+        if crc32(&footer) != trailer.footer_crc {
+            return Err(Error::Store("footer CRC mismatch".into()));
+        }
+        let index = StoreIndex::from_bytes(&footer, trailer.tensor_count as usize)?;
+        // Every chunk must live inside [magic, footer).
+        for t in &index.tensors {
+            for (ci, c) in t.chunks.iter().enumerate() {
+                let end = c
+                    .offset
+                    .checked_add(c.len)
+                    .ok_or_else(|| Error::Store(format!(
+                        "tensor {}: chunk {ci} extent overflows",
+                        t.name
+                    )))?;
+                if c.offset < STORE_MAGIC.len() as u64 || end > trailer.footer_offset {
+                    return Err(Error::Store(format!(
+                        "tensor {}: chunk {ci} [{}, {end}) outside chunk region [8, {})",
+                        t.name, c.offset, trailer.footer_offset
+                    )));
+                }
+            }
+        }
+        Ok(Self {
+            io: Mutex::new(file),
+            index,
+            chunk_region_end: trailer.footer_offset,
+            cache: Mutex::new(ChunkCache::new(cache_values)),
+            bytes_read: AtomicU64::new(0),
+            chunks_decoded: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
+        })
+    }
+
+    /// All tensor names, in write order.
+    pub fn tensor_names(&self) -> Vec<&str> {
+        self.index.tensors.iter().map(|t| t.name.as_str()).collect()
+    }
+
+    /// Number of tensors in the store.
+    pub fn tensor_count(&self) -> usize {
+        self.index.tensors.len()
+    }
+
+    /// Metadata for one tensor.
+    pub fn meta(&self, name: &str) -> Result<&TensorMeta> {
+        self.index
+            .get(name)
+            .ok_or_else(|| Error::Store(format!("no tensor named {name:?}")))
+    }
+
+    /// The parsed footer index.
+    pub fn index(&self) -> &StoreIndex {
+        &self.index
+    }
+
+    /// Read one chunk's compressed blob and verify its CRC.
+    fn read_chunk_bytes(&self, t: &TensorMeta, ci: usize) -> Result<Vec<u8>> {
+        let c = &t.chunks[ci];
+        debug_assert!(c.offset + c.len <= self.chunk_region_end);
+        let mut buf = vec![0u8; c.len as usize];
+        {
+            let mut io = self.io.lock().expect("store io lock");
+            io.seek(SeekFrom::Start(c.offset))?;
+            io.read_exact(&mut buf)?;
+        }
+        self.bytes_read.fetch_add(c.len, Ordering::Relaxed);
+        if crc32(&buf) != c.crc32 {
+            return Err(Error::Store(format!(
+                "tensor {}: chunk {ci} CRC mismatch — data corrupted",
+                t.name
+            )));
+        }
+        Ok(buf)
+    }
+
+    /// Decoded values of chunk `ci` of tensor index `ti`, via the cache.
+    fn chunk_values(&self, ti: usize, ci: usize) -> Result<Arc<Vec<u32>>> {
+        let key: ChunkKey = (ti as u32, ci as u32);
+        if let Some(hit) = self.cache.lock().expect("store cache lock").get(key) {
+            self.cache_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(hit);
+        }
+        self.cache_misses.fetch_add(1, Ordering::Relaxed);
+        let t = &self.index.tensors[ti];
+        let blob = self.read_chunk_bytes(t, ci)?;
+        let container = Container::body_from_bytes(t.table.clone(), &blob)?;
+        if container.n_values != t.chunks[ci].n_values {
+            return Err(Error::Store(format!(
+                "tensor {}: chunk {ci} holds {} values, index says {}",
+                t.name, container.n_values, t.chunks[ci].n_values
+            )));
+        }
+        let values = Arc::new(container.decode()?);
+        self.chunks_decoded.fetch_add(1, Ordering::Relaxed);
+        self.cache.lock().expect("store cache lock").insert(key, Arc::clone(&values));
+        Ok(values)
+    }
+
+    /// Decode one chunk (CRC-checked; served from cache when resident).
+    pub fn get_chunk(&self, name: &str, ci: usize) -> Result<Arc<Vec<u32>>> {
+        let ti = self
+            .index
+            .position(name)
+            .ok_or_else(|| Error::Store(format!("no tensor named {name:?}")))?;
+        let t = &self.index.tensors[ti];
+        if ci >= t.chunks.len() {
+            return Err(Error::Store(format!(
+                "tensor {name}: chunk {ci} out of range (has {})",
+                t.chunks.len()
+            )));
+        }
+        self.chunk_values(ti, ci)
+    }
+
+    /// Decode a full tensor, all chunks in parallel.
+    pub fn get_tensor(&self, name: &str) -> Result<Vec<u32>> {
+        let t = self.meta(name)?;
+        self.get_range(name, 0..t.n_values)
+    }
+
+    /// Decode values `[range.start, range.end)` of a tensor, touching only
+    /// the covering chunks (decoded in parallel, cache-assisted).
+    pub fn get_range(&self, name: &str, range: Range<u64>) -> Result<Vec<u32>> {
+        let ti = self
+            .index
+            .position(name)
+            .ok_or_else(|| Error::Store(format!("no tensor named {name:?}")))?;
+        let t = &self.index.tensors[ti];
+        if range.start > range.end || range.end > t.n_values {
+            return Err(Error::Store(format!(
+                "tensor {name}: range {}..{} out of bounds (n_values {})",
+                range.start, range.end, t.n_values
+            )));
+        }
+        if range.start == range.end {
+            return Ok(Vec::new());
+        }
+        let first = t.chunk_for_value(range.start);
+        let last = t.chunk_for_value(range.end - 1);
+        let indices: Vec<usize> = (first..=last).collect();
+        let parts: Result<Vec<Arc<Vec<u32>>>> =
+            par_map(&indices, |&ci| self.chunk_values(ti, ci)).into_iter().collect();
+        let parts = parts?;
+        let mut out = Vec::with_capacity((range.end - range.start) as usize);
+        for (&ci, part) in indices.iter().zip(&parts) {
+            let covered = t.chunk_value_range(ci);
+            let lo = range.start.max(covered.start) - covered.start;
+            let hi = range.end.min(covered.end) - covered.start;
+            out.extend_from_slice(&part[lo as usize..hi as usize]);
+        }
+        Ok(out)
+    }
+
+    /// Re-read and decode every chunk of every tensor, checking CRCs and
+    /// value counts. Bypasses the cache (this is an integrity pass over
+    /// the bytes on disk, not over what happens to be resident).
+    pub fn verify(&self) -> Result<VerifyReport> {
+        let mut report = VerifyReport { tensors: self.index.tensors.len(), ..Default::default() };
+        for t in &self.index.tensors {
+            let indices: Vec<usize> = (0..t.chunks.len()).collect();
+            let checks: Result<Vec<u64>> = par_map(&indices, |&ci| {
+                let blob = self.read_chunk_bytes(t, ci)?;
+                let container = Container::body_from_bytes(t.table.clone(), &blob)?;
+                let values = container.decode()?;
+                if values.len() as u64 != t.chunks[ci].n_values {
+                    return Err(Error::Store(format!(
+                        "tensor {}: chunk {ci} decoded {} values, index says {}",
+                        t.name,
+                        values.len(),
+                        t.chunks[ci].n_values
+                    )));
+                }
+                Ok(blob.len() as u64)
+            })
+            .into_iter()
+            .collect();
+            let bytes: u64 = checks?.iter().sum();
+            report.chunks += t.chunks.len();
+            report.bytes += bytes;
+        }
+        Ok(report)
+    }
+
+    /// Snapshot the cumulative read counters.
+    pub fn stats(&self) -> ReadStats {
+        ReadStats {
+            bytes_read: self.bytes_read.load(Ordering::Relaxed),
+            chunks_decoded: self.chunks_decoded.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Zero the read counters (does not touch the cache).
+    pub fn reset_stats(&self) {
+        self.bytes_read.store(0, Ordering::Relaxed);
+        self.chunks_decoded.store(0, Ordering::Relaxed);
+        self.cache_hits.store(0, Ordering::Relaxed);
+        self.cache_misses.store(0, Ordering::Relaxed);
+    }
+
+    /// Drop all cached chunks (benches use this to time the cold path).
+    pub fn clear_cache(&self) {
+        self.cache.lock().expect("store cache lock").clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apack::tablegen::TensorKind;
+    use crate::coordinator::PartitionPolicy;
+    use crate::models::distributions::ValueProfile;
+    use crate::store::StoreWriter;
+
+    fn temp_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("apack_reader_{}_{tag}.apackstore", std::process::id()))
+    }
+
+    fn build_store(tag: &str, n: usize) -> (std::path::PathBuf, Vec<u32>) {
+        let path = temp_path(tag);
+        let values = ValueProfile::ReluActivation { sparsity: 0.5, q: 0.93, noise_floor: 0.01 }
+            .sample(8, n, 77);
+        let policy = PartitionPolicy { substreams: 8, min_per_stream: 128 };
+        let mut w = StoreWriter::create(&path, policy).unwrap();
+        w.add_tensor("t", 8, &values, TensorKind::Activations).unwrap();
+        w.finish().unwrap();
+        (path, values)
+    }
+
+    #[test]
+    fn chunk_and_range_reads_match_full_decode() {
+        let (path, values) = build_store("range", 10_000);
+        let r = StoreReader::open(&path).unwrap();
+        let full = r.get_tensor("t").unwrap();
+        assert_eq!(full, values);
+        let t = r.meta("t").unwrap();
+        assert_eq!(t.chunks.len(), 8);
+        for ci in 0..t.chunks.len() {
+            let covered = t.chunk_value_range(ci);
+            let chunk = r.get_chunk("t", ci).unwrap();
+            assert_eq!(
+                chunk.as_slice(),
+                &values[covered.start as usize..covered.end as usize]
+            );
+        }
+        for (lo, hi) in [(0u64, 1u64), (999, 1001), (1250, 8751), (0, 10_000), (4000, 4000)] {
+            assert_eq!(
+                r.get_range("t", lo..hi).unwrap(),
+                &values[lo as usize..hi as usize],
+                "{lo}..{hi}"
+            );
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn reads_touch_only_covering_chunks() {
+        let (path, _) = build_store("account", 10_000);
+        let r = StoreReader::with_cache_capacity(&path, 0).unwrap(); // no cache
+        let t = r.meta("t").unwrap();
+        let per = t.values_per_chunk as usize;
+        assert_eq!(per, 1250);
+        let chunk_bytes: Vec<u64> = t.chunks.iter().map(|c| c.len).collect();
+
+        // One chunk -> exactly that chunk's bytes.
+        r.reset_stats();
+        r.get_chunk("t", 3).unwrap();
+        assert_eq!(r.stats().bytes_read, chunk_bytes[3]);
+        assert_eq!(r.stats().chunks_decoded, 1);
+
+        // A range inside chunk 2 -> only chunk 2.
+        r.reset_stats();
+        r.get_range("t", (2 * per) as u64 + 10..(3 * per) as u64 - 10).unwrap();
+        assert_eq!(r.stats().bytes_read, chunk_bytes[2]);
+
+        // A range straddling chunks 4-5 -> exactly those two.
+        r.reset_stats();
+        r.get_range("t", (5 * per - 1) as u64..(5 * per + 1) as u64).unwrap();
+        assert_eq!(r.stats().bytes_read, chunk_bytes[4] + chunk_bytes[5]);
+        assert_eq!(r.stats().chunks_decoded, 2);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn cache_serves_repeat_reads_without_io() {
+        let (path, _) = build_store("cache", 10_000);
+        let r = StoreReader::open(&path).unwrap();
+        r.get_chunk("t", 0).unwrap();
+        let cold = r.stats();
+        assert_eq!(cold.cache_misses, 1);
+        r.get_chunk("t", 0).unwrap();
+        let warm = r.stats();
+        assert_eq!(warm.cache_hits, 1);
+        assert_eq!(warm.bytes_read, cold.bytes_read, "hit must not re-read disk");
+        assert_eq!(warm.chunks_decoded, cold.chunks_decoded);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn errors_on_unknown_names_and_bad_ranges() {
+        let (path, _) = build_store("errs", 1000);
+        let r = StoreReader::open(&path).unwrap();
+        assert!(r.get_tensor("nope").is_err());
+        assert!(r.get_chunk("t", 99).is_err());
+        assert!(r.get_range("t", 5..4).is_err());
+        assert!(r.get_range("t", 0..1001).is_err());
+        assert!(r.meta("nope").is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn verify_passes_clean_store() {
+        let (path, _) = build_store("verify", 5000);
+        let r = StoreReader::open(&path).unwrap();
+        let rep = r.verify().unwrap();
+        assert_eq!(rep.tensors, 1);
+        assert_eq!(rep.chunks, r.meta("t").unwrap().chunks.len());
+        assert!(rep.bytes > 0);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,270 @@
+//! Sequential APackStore writer: stream chunk blobs, seal with the footer
+//! index and trailer. Chunk encoding runs in parallel (one engine per
+//! chunk, like the replicated hardware engines of paper §V-B); file I/O
+//! stays sequential and append-only.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use crate::apack::container::compress_with_table;
+use crate::apack::tablegen::{generate_table, TableGenConfig, TensorKind};
+use crate::apack::{Histogram, SymbolTable};
+use crate::coordinator::PartitionPolicy;
+use crate::error::{Error, Result};
+use crate::eval::{EVAL_SEED, PROFILE_SAMPLES};
+use crate::models::trace::ModelTrace;
+use crate::models::zoo::ModelConfig;
+use crate::util::par_map;
+
+use super::format::{crc32, trailer_bytes, ChunkMeta, StoreIndex, TensorMeta, STORE_MAGIC};
+
+/// Summary returned by [`StoreWriter::finish`].
+#[derive(Debug, Clone)]
+pub struct StoreSummary {
+    pub tensors: usize,
+    pub chunks: usize,
+    /// Total file size in bytes (blobs + footer + framing).
+    pub file_bytes: u64,
+    /// Sum of raw (uncompressed) tensor bits.
+    pub raw_bits: u64,
+}
+
+impl StoreSummary {
+    /// Whole-store compression ratio vs. raw values.
+    pub fn compression_ratio(&self) -> f64 {
+        self.raw_bits as f64 / (self.file_bytes as f64 * 8.0)
+    }
+}
+
+/// Writes one APackStore file. Add tensors, then call [`Self::finish`];
+/// dropping a writer without finishing leaves an unreadable file (no
+/// trailer), which the reader rejects — a torn write cannot masquerade as
+/// a complete store.
+pub struct StoreWriter {
+    out: BufWriter<File>,
+    /// Next blob's absolute file offset.
+    offset: u64,
+    tensors: Vec<TensorMeta>,
+    policy: PartitionPolicy,
+}
+
+impl StoreWriter {
+    /// Create (truncate) the store file and write the leading magic.
+    /// `policy` controls chunking: each tensor is split into
+    /// `policy.shards_for(len)` fixed-value-count chunks.
+    pub fn create(path: &Path, policy: PartitionPolicy) -> Result<Self> {
+        let file = File::create(path)?;
+        let mut out = BufWriter::new(file);
+        out.write_all(&STORE_MAGIC)?;
+        Ok(Self { out, offset: STORE_MAGIC.len() as u64, tensors: Vec::new(), policy })
+    }
+
+    /// Compress and append a tensor, profiling its table from the values
+    /// themselves (the weights path of paper §VI).
+    pub fn add_tensor(
+        &mut self,
+        name: &str,
+        bits: u32,
+        values: &[u32],
+        kind: TensorKind,
+    ) -> Result<()> {
+        let table = if values.is_empty() {
+            SymbolTable::uniform(bits)
+        } else {
+            let hist = Histogram::from_values(bits, values);
+            generate_table(&hist, kind, &TableGenConfig::for_bits(bits))?
+        };
+        self.add_tensor_with_table(name, values, kind, table)
+    }
+
+    /// Compress and append a tensor with a prebuilt table (e.g. an
+    /// activation table profiled on pooled samples, §VII).
+    pub fn add_tensor_with_table(
+        &mut self,
+        name: &str,
+        values: &[u32],
+        kind: TensorKind,
+        table: SymbolTable,
+    ) -> Result<()> {
+        if self.tensors.iter().any(|t| t.name == name) {
+            return Err(Error::Store(format!("duplicate tensor name {name:?}")));
+        }
+        if name.is_empty() || name.len() > u16::MAX as usize {
+            return Err(Error::Store(format!("tensor name length {} invalid", name.len())));
+        }
+        let chunks = self.policy.split(values);
+        let values_per_chunk = chunks.first().map(|c| c.len() as u64).unwrap_or(1).max(1);
+        // Encode every chunk in parallel against the shared table, then
+        // append the blobs in order.
+        let blobs: Result<Vec<Vec<u8>>> =
+            par_map(&chunks, |chunk| {
+                compress_with_table(table.clone(), chunk).map(|c| c.body_to_bytes())
+            })
+            .into_iter()
+            .collect();
+        let blobs = blobs?;
+        let mut metas = Vec::with_capacity(blobs.len());
+        for (chunk, blob) in chunks.iter().zip(&blobs) {
+            metas.push(ChunkMeta {
+                offset: self.offset,
+                len: blob.len() as u64,
+                n_values: chunk.len() as u64,
+                crc32: crc32(blob),
+            });
+            self.out.write_all(blob)?;
+            self.offset += blob.len() as u64;
+        }
+        self.tensors.push(TensorMeta {
+            name: name.to_string(),
+            bits: table.bits(),
+            kind,
+            n_values: values.len() as u64,
+            values_per_chunk,
+            table,
+            chunks: metas,
+        });
+        Ok(())
+    }
+
+    /// Tensors written so far.
+    pub fn tensor_count(&self) -> usize {
+        self.tensors.len()
+    }
+
+    /// Write footer + trailer and flush. The file is only readable after
+    /// this returns.
+    pub fn finish(mut self) -> Result<StoreSummary> {
+        let index = StoreIndex::new(std::mem::take(&mut self.tensors));
+        let footer = index.to_bytes();
+        let footer_offset = self.offset;
+        self.out.write_all(&footer)?;
+        self.out.write_all(&trailer_bytes(
+            footer_offset,
+            footer.len() as u64,
+            crc32(&footer),
+            index.tensors.len() as u32,
+        ))?;
+        self.out.flush()?;
+        let file_bytes =
+            footer_offset + footer.len() as u64 + super::format::TRAILER_BYTES as u64;
+        Ok(StoreSummary {
+            tensors: index.tensors.len(),
+            chunks: index.tensors.iter().map(|t| t.chunks.len()).sum(),
+            file_bytes,
+            raw_bits: index.tensors.iter().map(|t| t.raw_bits()).sum(),
+        })
+    }
+}
+
+/// Pack synthesized traces of `models` into one store — the Table II zoo
+/// as a servable artifact. Per layer, weights are stored under
+/// `"{model}/layer{i:03}/weights"` with a self-profiled table; studied
+/// activations go under `".../activations"` with a table profiled on the
+/// pooled samples and applied to the fresh tensor (paper §VII
+/// methodology). `sample_cap` bounds values per tensor, exactly like the
+/// evaluation studies.
+pub fn pack_model_zoo(
+    path: &Path,
+    models: &[ModelConfig],
+    sample_cap: usize,
+    policy: PartitionPolicy,
+) -> Result<StoreSummary> {
+    let mut writer = StoreWriter::create(path, policy)?;
+    for cfg in models {
+        let trace = ModelTrace::synthesize(cfg, sample_cap, PROFILE_SAMPLES, EVAL_SEED);
+        for l in &trace.layers {
+            writer.add_tensor(
+                &format!("{}/layer{:03}/weights", cfg.name, l.layer_idx),
+                l.bits,
+                &l.weights,
+                TensorKind::Weights,
+            )?;
+            if !l.activations.is_empty() {
+                let hist = Histogram::from_values(l.bits, &l.act_profile_samples);
+                let table = generate_table(
+                    &hist,
+                    TensorKind::Activations,
+                    &TableGenConfig::for_bits(l.bits),
+                )?;
+                writer.add_tensor_with_table(
+                    &format!("{}/layer{:03}/activations", cfg.name, l.layer_idx),
+                    &l.activations,
+                    TensorKind::Activations,
+                    table,
+                )?;
+            }
+        }
+    }
+    writer.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::distributions::ValueProfile;
+    use crate::store::StoreReader;
+
+    fn temp_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("apack_writer_{}_{tag}.apackstore", std::process::id()))
+    }
+
+    fn tensor(n: usize, seed: u64) -> Vec<u32> {
+        ValueProfile::ReluActivation { sparsity: 0.5, q: 0.93, noise_floor: 0.01 }
+            .sample(8, n, seed)
+    }
+
+    #[test]
+    fn writer_roundtrip_and_summary() {
+        let path = temp_path("roundtrip");
+        let policy = PartitionPolicy { substreams: 4, min_per_stream: 256 };
+        let mut w = StoreWriter::create(&path, policy).unwrap();
+        let a = tensor(10_000, 1);
+        let b = tensor(500, 2);
+        w.add_tensor("a", 8, &a, TensorKind::Activations).unwrap();
+        w.add_tensor("b", 8, &b, TensorKind::Weights).unwrap();
+        let summary = w.finish().unwrap();
+        assert_eq!(summary.tensors, 2);
+        assert_eq!(summary.raw_bits, (10_500) * 8);
+        assert!(summary.compression_ratio() > 1.0, "{}", summary.compression_ratio());
+
+        let r = StoreReader::open(&path).unwrap();
+        assert_eq!(r.get_tensor("a").unwrap(), a);
+        assert_eq!(r.get_tensor("b").unwrap(), b);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn duplicate_and_invalid_names_rejected() {
+        let path = temp_path("dup");
+        let mut w = StoreWriter::create(&path, PartitionPolicy::default()).unwrap();
+        let v = tensor(100, 3);
+        w.add_tensor("x", 8, &v, TensorKind::Weights).unwrap();
+        assert!(w.add_tensor("x", 8, &v, TensorKind::Weights).is_err());
+        assert!(w.add_tensor("", 8, &v, TensorKind::Weights).is_err());
+        drop(w);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn unfinished_store_is_unreadable() {
+        let path = temp_path("torn");
+        let mut w = StoreWriter::create(&path, PartitionPolicy::default()).unwrap();
+        w.add_tensor("x", 8, &tensor(5000, 4), TensorKind::Weights).unwrap();
+        drop(w); // no finish(): no trailer
+        assert!(StoreReader::open(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_tensor_roundtrips() {
+        let path = temp_path("empty");
+        let mut w = StoreWriter::create(&path, PartitionPolicy::default()).unwrap();
+        w.add_tensor("e", 8, &[], TensorKind::Weights).unwrap();
+        w.finish().unwrap();
+        let r = StoreReader::open(&path).unwrap();
+        assert_eq!(r.get_tensor("e").unwrap(), Vec::<u32>::new());
+        assert_eq!(r.meta("e").unwrap().chunks.len(), 0);
+        std::fs::remove_file(&path).ok();
+    }
+}

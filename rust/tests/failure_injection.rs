@@ -7,7 +7,10 @@ use apack_repro::apack::decoder::ApackDecoder;
 use apack_repro::apack::encoder::ApackEncoder;
 use apack_repro::apack::tablegen::{table_for_tensor, TensorKind};
 use apack_repro::apack::{Container, SymbolTable};
+use apack_repro::coordinator::PartitionPolicy;
 use apack_repro::runtime::ArtifactManifest;
+use apack_repro::store::format::{crc32, trailer_bytes, StoreIndex, TRAILER_BYTES};
+use apack_repro::store::{StoreReader, StoreWriter};
 use apack_repro::util::Rng64;
 
 fn sample_tensor(n: usize, seed: u64) -> Vec<u32> {
@@ -138,6 +141,132 @@ fn manifest_fuzz() {
             (0..n).map(|_| char::from(rng.range(0x20, 0x7e) as u8)).collect();
         let _ = ArtifactManifest::from_json(&soup);
     }
+}
+
+// ---------------------------------------------------------------------------
+// APackStore failure injection.
+// ---------------------------------------------------------------------------
+
+fn store_temp(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("apack_finj_{}_{tag}.apackstore", std::process::id()))
+}
+
+/// Build a small valid store and return (path, file bytes).
+fn build_store(tag: &str) -> (std::path::PathBuf, Vec<u8>) {
+    let path = store_temp(tag);
+    let values = sample_tensor(20_000, 0xF00D);
+    let policy = PartitionPolicy { substreams: 8, min_per_stream: 128 };
+    let mut w = StoreWriter::create(&path, policy).unwrap();
+    w.add_tensor("t", 8, &values, TensorKind::Activations).unwrap();
+    w.finish().unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    (path, bytes)
+}
+
+/// Truncating the file anywhere in the footer/trailer region must make
+/// `open` fail cleanly (no panic, no partial index).
+#[test]
+fn store_truncated_footer_rejected() {
+    let (path, bytes) = build_store("truncfoot");
+    // Trailer says where the footer starts; cut at points from inside the
+    // footer through the trailer.
+    let trailer = &bytes[bytes.len() - TRAILER_BYTES..];
+    let footer_offset = u64::from_le_bytes(trailer[0..8].try_into().unwrap()) as usize;
+    for keep in [
+        footer_offset + 1,
+        footer_offset + 10,
+        bytes.len() - TRAILER_BYTES,
+        bytes.len() - TRAILER_BYTES / 2,
+        bytes.len() - 1,
+    ] {
+        std::fs::write(&path, &bytes[..keep]).unwrap();
+        assert!(StoreReader::open(&path).is_err(), "keep={keep}");
+    }
+    // And degenerate sizes.
+    for keep in [0usize, 1, 7, 8, 20] {
+        std::fs::write(&path, &bytes[..keep]).unwrap();
+        assert!(StoreReader::open(&path).is_err(), "keep={keep}");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// A flipped byte inside any chunk blob must be caught by that chunk's
+/// CRC on read — open still succeeds (the footer is intact) but the read
+/// errors instead of returning corrupt values.
+#[test]
+fn store_chunk_bit_flip_caught_by_crc() {
+    let (path, bytes) = build_store("bitflip");
+    let reader = StoreReader::open(&path).unwrap();
+    let chunk1 = reader.meta("t").unwrap().chunks[1];
+    drop(reader);
+    for delta in [0u64, chunk1.len / 2, chunk1.len - 1] {
+        let mut bad = bytes.clone();
+        bad[(chunk1.offset + delta) as usize] ^= 0x10;
+        std::fs::write(&path, &bad).unwrap();
+        let reader = StoreReader::open(&path).expect("footer is intact");
+        let err = reader.get_chunk("t", 1);
+        assert!(err.is_err(), "flip at +{delta} must fail CRC");
+        // Untouched chunks still read fine.
+        assert!(reader.get_chunk("t", 0).is_ok());
+        // And whole-store verify reports the corruption too.
+        assert!(reader.verify().is_err());
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// An index entry pointing past EOF (or into the footer) is rejected at
+/// open — before any read could chase the bogus offset.
+#[test]
+fn store_index_past_eof_rejected() {
+    let (path, bytes) = build_store("pasteof");
+    let trailer = &bytes[bytes.len() - TRAILER_BYTES..];
+    let footer_offset = u64::from_le_bytes(trailer[0..8].try_into().unwrap());
+    let footer_len = u64::from_le_bytes(trailer[8..16].try_into().unwrap());
+    let footer =
+        &bytes[footer_offset as usize..(footer_offset + footer_len) as usize];
+    let index = StoreIndex::from_bytes(footer, 1).unwrap();
+
+    for bogus_offset in [footer_offset, bytes.len() as u64, u64::MAX - 100] {
+        // Rewrite the footer with chunk 2 relocated past the chunk region,
+        // with a consistent CRC-carrying trailer (the attack is a hostile
+        // index, not a torn write).
+        let mut hostile = index.clone();
+        hostile.tensors[0].chunks[2].offset = bogus_offset;
+        let hostile_footer = StoreIndex::new(hostile.tensors).to_bytes();
+        let mut file = bytes[..footer_offset as usize].to_vec();
+        file.extend_from_slice(&hostile_footer);
+        file.extend_from_slice(&trailer_bytes(
+            footer_offset,
+            hostile_footer.len() as u64,
+            crc32(&hostile_footer),
+            1,
+        ));
+        std::fs::write(&path, &file).unwrap();
+        assert!(
+            StoreReader::open(&path).is_err(),
+            "chunk offset {bogus_offset:#x} must be rejected"
+        );
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// Random byte soup and a zeroed trailer never panic the opener.
+#[test]
+fn store_open_fuzz() {
+    let path = store_temp("fuzz");
+    let mut rng = Rng64::new(0x5049);
+    for _ in 0..50 {
+        let n = rng.range(0, 600);
+        let soup: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        std::fs::write(&path, &soup).unwrap();
+        let _ = StoreReader::open(&path); // must not panic
+    }
+    // Valid magic + garbage trailer.
+    let mut bytes = b"APACKST1".to_vec();
+    bytes.extend_from_slice(&[0u8; 64]);
+    std::fs::write(&path, &bytes).unwrap();
+    assert!(StoreReader::open(&path).is_err());
+    std::fs::remove_file(&path).ok();
 }
 
 /// Encoding a value outside the table's coverage errors cleanly.

@@ -15,6 +15,7 @@ use apack_repro::baselines::{
     rle_decode, rle_encode, rlez_decode, rlez_encode, ss_decode, ss_encode, ShapeShifterConfig,
 };
 use apack_repro::coordinator::{Coordinator, PartitionPolicy};
+use apack_repro::store::{StoreReader, StoreWriter};
 use apack_repro::util::Rng64;
 
 /// Random valid table: random strictly-increasing v_mins + random counts
@@ -166,6 +167,50 @@ fn prop_coordinator_reassembly() {
         let sc = coord.compress(8, &values, TensorKind::Activations, None).unwrap();
         assert_eq!(coord.decompress(&sc).unwrap(), values, "seed {seed}");
     }
+}
+
+/// Store invariant: for any tensor, partition policy and range,
+/// `get_range(lo..hi)` equals the corresponding slice of a full
+/// `get_tensor` decode (and `get_chunk` equals its covered slice).
+#[test]
+fn prop_store_range_equals_tensor_slice() {
+    let path = std::env::temp_dir()
+        .join(format!("apack_prop_store_{}.apackstore", std::process::id()));
+    for seed in 0..6u64 {
+        let mut rng = Rng64::new(0x57033 + seed);
+        let n = rng.range(1, 40_000);
+        let values = random_tensor(&mut rng, 8, n);
+        let policy = PartitionPolicy {
+            substreams: rng.range(1, 32) as u32,
+            min_per_stream: rng.range(1, 2048),
+        };
+        let mut w = StoreWriter::create(&path, policy).unwrap();
+        w.add_tensor("t", 8, &values, TensorKind::Activations).unwrap();
+        w.finish().unwrap();
+
+        let reader = StoreReader::open(&path).unwrap();
+        let full = reader.get_tensor("t").unwrap();
+        assert_eq!(full, values, "seed {seed}");
+        for _ in 0..20 {
+            let lo = rng.below(n as u64 + 1);
+            let hi = lo + rng.below(n as u64 + 1 - lo);
+            assert_eq!(
+                reader.get_range("t", lo..hi).unwrap(),
+                &full[lo as usize..hi as usize],
+                "seed {seed} range {lo}..{hi}"
+            );
+        }
+        let meta = reader.meta("t").unwrap();
+        for ci in 0..meta.chunks.len() {
+            let covered = meta.chunk_value_range(ci);
+            assert_eq!(
+                reader.get_chunk("t", ci).unwrap().as_slice(),
+                &full[covered.start as usize..covered.end as usize],
+                "seed {seed} chunk {ci}"
+            );
+        }
+    }
+    std::fs::remove_file(&path).ok();
 }
 
 /// Invariant 5: the entropy-based size estimate tracks the real encoder

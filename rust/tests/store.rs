@@ -1,0 +1,176 @@
+//! APackStore integration tests: the full zoo packed into one store and
+//! read back bit-exactly, random access touching only the chunks it
+//! covers (byte-accounted), and concurrent readers over one handle.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use apack_repro::apack::tablegen::TensorKind;
+use apack_repro::coordinator::PartitionPolicy;
+use apack_repro::eval::{EVAL_SEED, PROFILE_SAMPLES};
+use apack_repro::models::trace::ModelTrace;
+use apack_repro::models::zoo::all_models;
+use apack_repro::store::{pack_model_zoo, StoreReader, StoreWriter};
+use apack_repro::util::Rng64;
+
+fn temp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("apack_itest_{}_{tag}.apackstore", std::process::id()))
+}
+
+/// Acceptance: all 24 Table-II models into one store, every tensor back
+/// bit-exactly (weights and studied activations).
+#[test]
+fn zoo_pack_roundtrips_every_tensor() {
+    let path = temp_path("zoo");
+    let models = all_models();
+    let sample_cap = 512;
+    let policy = PartitionPolicy { substreams: 8, min_per_stream: 64 };
+    let summary = pack_model_zoo(&path, &models, sample_cap, policy).unwrap();
+    assert!(summary.tensors > models.len(), "at least one tensor per model");
+
+    let reader = StoreReader::open(&path).unwrap();
+    let mut tensors_checked = 0usize;
+    for cfg in &models {
+        // Re-synthesize with the writer's seeds: bit-exact reference.
+        let trace = ModelTrace::synthesize(cfg, sample_cap, PROFILE_SAMPLES, EVAL_SEED);
+        for l in &trace.layers {
+            let wname = format!("{}/layer{:03}/weights", cfg.name, l.layer_idx);
+            assert_eq!(reader.get_tensor(&wname).unwrap(), l.weights, "{wname}");
+            tensors_checked += 1;
+            if !l.activations.is_empty() {
+                let aname = format!("{}/layer{:03}/activations", cfg.name, l.layer_idx);
+                assert_eq!(reader.get_tensor(&aname).unwrap(), l.activations, "{aname}");
+                tensors_checked += 1;
+            }
+        }
+    }
+    assert_eq!(tensors_checked, reader.tensor_count(), "every stored tensor checked");
+    assert_eq!(tensors_checked, summary.tensors);
+    std::fs::remove_file(&path).ok();
+}
+
+/// Acceptance: `get_chunk` / `get_range` read and decode only the chunks
+/// they cover — asserted by exact byte accounting against the index.
+#[test]
+fn random_access_reads_only_covering_chunks() {
+    let path = temp_path("accounting");
+    let n = 64_000usize;
+    let values: Vec<u32> = {
+        let mut rng = Rng64::new(42);
+        (0..n).map(|_| if rng.chance(0.5) { 0 } else { rng.below(256) as u32 }).collect()
+    };
+    let policy = PartitionPolicy { substreams: 16, min_per_stream: 256 };
+    let mut w = StoreWriter::create(&path, policy).unwrap();
+    w.add_tensor("t", 8, &values, TensorKind::Activations).unwrap();
+    w.finish().unwrap();
+
+    // Cache disabled so every read is visible in the byte counters.
+    let reader = StoreReader::with_cache_capacity(&path, 0).unwrap();
+    let meta = reader.meta("t").unwrap();
+    assert_eq!(meta.chunks.len(), 16);
+    let per = meta.values_per_chunk;
+    assert_eq!(per, 4000);
+    let chunk_bytes: Vec<u64> = meta.chunks.iter().map(|c| c.len).collect();
+    let total_bytes: u64 = chunk_bytes.iter().sum();
+
+    // Single chunk: exactly that chunk's bytes, one decode.
+    reader.reset_stats();
+    let chunk5 = reader.get_chunk("t", 5).unwrap();
+    assert_eq!(chunk5.as_slice(), &values[5 * per as usize..6 * per as usize]);
+    assert_eq!(reader.stats().bytes_read, chunk_bytes[5]);
+    assert_eq!(reader.stats().chunks_decoded, 1);
+
+    // Range within one chunk: that chunk only, not the whole tensor.
+    reader.reset_stats();
+    let got = reader.get_range("t", per + 7..2 * per - 9).unwrap();
+    assert_eq!(got, &values[(per + 7) as usize..(2 * per - 9) as usize]);
+    assert_eq!(reader.stats().bytes_read, chunk_bytes[1]);
+
+    // Range spanning three chunks: exactly those three.
+    reader.reset_stats();
+    let lo = 2 * per + 100;
+    let hi = 5 * per - 100;
+    let got = reader.get_range("t", lo..hi).unwrap();
+    assert_eq!(got, &values[lo as usize..hi as usize]);
+    assert_eq!(
+        reader.stats().bytes_read,
+        chunk_bytes[2] + chunk_bytes[3] + chunk_bytes[4]
+    );
+    assert_eq!(reader.stats().chunks_decoded, 3);
+
+    // Full tensor: all bytes, once each.
+    reader.reset_stats();
+    assert_eq!(reader.get_tensor("t").unwrap(), values);
+    assert_eq!(reader.stats().bytes_read, total_bytes);
+    assert_eq!(reader.stats().chunks_decoded, 16);
+    std::fs::remove_file(&path).ok();
+}
+
+/// Many threads over one shared reader: every read verifies, and the
+/// cache turns repeat traffic into hits.
+#[test]
+fn concurrent_readers_share_one_store() {
+    let path = temp_path("concurrent");
+    let n = 40_000usize;
+    let values: Vec<u32> = {
+        let mut rng = Rng64::new(9);
+        (0..n).map(|_| rng.below(200) as u32).collect()
+    };
+    let mut w =
+        StoreWriter::create(&path, PartitionPolicy { substreams: 8, min_per_stream: 256 })
+            .unwrap();
+    w.add_tensor("t", 8, &values, TensorKind::Weights).unwrap();
+    w.finish().unwrap();
+
+    let reader = Arc::new(StoreReader::open(&path).unwrap());
+    std::thread::scope(|scope| {
+        for tid in 0..6u64 {
+            let reader = Arc::clone(&reader);
+            let values = &values;
+            scope.spawn(move || {
+                let mut rng = Rng64::new(100 + tid);
+                for _ in 0..50 {
+                    let lo = rng.below(n as u64);
+                    let hi = (lo + 1 + rng.below(2000)).min(n as u64);
+                    assert_eq!(
+                        reader.get_range("t", lo..hi).unwrap(),
+                        &values[lo as usize..hi as usize]
+                    );
+                }
+            });
+        }
+    });
+    let stats = reader.stats();
+    assert!(stats.cache_hits > 0, "repeat traffic must hit the cache");
+    // Everything fits in the cache, so decodes are bounded by chunk count
+    // × thread count (concurrent first-misses may race before the insert
+    // lands), far below the 300 total reads.
+    assert!(stats.chunks_decoded <= 8 * 6, "chunks decoded {}", stats.chunks_decoded);
+    std::fs::remove_file(&path).ok();
+}
+
+/// Store-level verify passes on a clean store and the footprint numbers
+/// in the index are consistent with the file.
+#[test]
+fn verify_and_footprint_consistency() {
+    let path = temp_path("verifyfp");
+    let values: Vec<u32> = (0..20_000u32).map(|i| (i * 2654435761) >> 26).collect();
+    let mut w =
+        StoreWriter::create(&path, PartitionPolicy { substreams: 4, min_per_stream: 64 })
+            .unwrap();
+    w.add_tensor("t", 8, &values, TensorKind::Weights).unwrap();
+    let summary = w.finish().unwrap();
+
+    let reader = StoreReader::open(&path).unwrap();
+    let report = reader.verify().unwrap();
+    assert_eq!(report.tensors, 1);
+    assert_eq!(report.chunks, 4);
+    let meta = reader.meta("t").unwrap();
+    assert_eq!(report.bytes, meta.compressed_bytes());
+    // The file holds the chunk payload plus footer/trailer framing only.
+    let disk = std::fs::metadata(&path).unwrap().len();
+    assert_eq!(disk, summary.file_bytes);
+    assert!(disk > meta.compressed_bytes());
+    assert!(disk < meta.compressed_bytes() + 4096, "framing overhead is bounded");
+    std::fs::remove_file(&path).ok();
+}
