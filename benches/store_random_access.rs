@@ -1,58 +1,165 @@
-//! APackStore hot-path bench: random access into a packed store — full
-//! tensor decode, uncached vs. cached chunk reads, and cross-chunk range
-//! reads. The cached/uncached split shows what the LRU buys on the serving
-//! path (repeat reads skip both disk and the arithmetic decoder).
+//! APackStore hot-path bench: random access into a packed store.
+//!
+//! Sections:
+//! 1. full-tensor decode, cold cache (all chunks from disk, parallel);
+//! 2. **multi-threaded `get_range` scaling** — the same total read work
+//!    spread over 1..N reader threads, on the mmap backend and the file
+//!    backend, caches disabled. With the io mutex gone, throughput must
+//!    grow with threads (this is the regression guard for the lock-free
+//!    `ChunkSource` path); per-backend `bytes_read` is printed so the two
+//!    paths are directly comparable in one run;
+//! 3. cached vs uncached chunk reads (what the LRU buys on repeat traffic);
+//! 4. a sharded store of the same tensors: per-shard parallel verify and
+//!    concurrent reads through the same `StoreHandle` surface.
+//!
+//! Pass `--quick` (CI does) for a small store and few iterations.
+
+use std::time::{Duration, Instant};
 
 use apack_repro::apack::tablegen::TensorKind;
 use apack_repro::coordinator::PartitionPolicy;
 use apack_repro::models::distributions::ValueProfile;
-use apack_repro::store::{StoreReader, StoreWriter};
+use apack_repro::store::{Backend, ShardedStoreWriter, StoreHandle, StoreWriter};
 use apack_repro::util::bench::Bench;
 use apack_repro::util::Rng64;
 
+/// Total random `get_range` reads spread across the reader threads, and
+/// the values served — fixed work per scaling point so the wall-clock
+/// trend is the scaling signal.
+fn range_read_pass(
+    store: &StoreHandle,
+    threads: usize,
+    total_reads: usize,
+    span: u64,
+    n_values: u64,
+    names: &[String],
+) -> (Duration, u64) {
+    let reads_per_thread = total_reads.div_ceil(threads);
+    let t0 = Instant::now();
+    let mut served = 0u64;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for tid in 0..threads {
+            handles.push(scope.spawn(move || {
+                let mut rng = Rng64::new(0xBE57 ^ ((tid as u64) << 8));
+                let mut acc = 0u64;
+                for _ in 0..reads_per_thread {
+                    let name = &names[rng.below(names.len() as u64) as usize];
+                    let lo = rng.below(n_values - span);
+                    acc += store.get_range(name, lo..lo + span).unwrap().len() as u64;
+                }
+                acc
+            }));
+        }
+        for h in handles {
+            served += h.join().expect("reader thread");
+        }
+    });
+    (t0.elapsed(), served)
+}
+
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick" || a == "quick");
+    let (n_tensors, n_values, bench, total_reads) = if quick {
+        (2usize, 200_000usize, Bench::quick(), 64usize)
+    } else {
+        (8, 1_000_000, Bench::default(), 256)
+    };
+    let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let mut thread_points = vec![1usize, 2, 4, 8];
+    thread_points.retain(|&t| t <= avail.max(2));
+    if quick {
+        thread_points = vec![1, avail.clamp(2, 4)];
+    }
+
     let path = std::env::temp_dir()
         .join(format!("apack_bench_store_{}.apackstore", std::process::id()));
-    let n_tensors = 8usize;
-    let n_values = 1_000_000usize;
+    let shard_dir = std::env::temp_dir()
+        .join(format!("apack_bench_store_{}.apackstore.d", std::process::id()));
     let policy = PartitionPolicy::default(); // 64 chunks per tensor
 
-    // Build the store once: 8 × 1M-value activation tensors.
+    // Build the single-file store: n_tensors × n_values activation tensors.
+    let tensors: Vec<(String, Vec<u32>)> = (0..n_tensors)
+        .map(|i| {
+            let values =
+                ValueProfile::ReluActivation { sparsity: 0.5, q: 0.93, noise_floor: 0.01 }
+                    .sample(8, n_values, 1000 + i as u64);
+            (format!("tensor{i}"), values)
+        })
+        .collect();
     let mut writer = StoreWriter::create(&path, policy).expect("create store");
-    for i in 0..n_tensors {
-        let values =
-            ValueProfile::ReluActivation { sparsity: 0.5, q: 0.93, noise_floor: 0.01 }
-                .sample(8, n_values, 1000 + i as u64);
-        writer
-            .add_tensor(&format!("tensor{i}"), 8, &values, TensorKind::Activations)
-            .expect("add tensor");
+    for (name, values) in &tensors {
+        writer.add_tensor(name, 8, values, TensorKind::Activations).expect("add tensor");
     }
     let summary = writer.finish().expect("finish store");
     println!(
-        "store: {} tensors, {} chunks, {:.1} MiB on disk ({:.2}x vs raw)\n",
+        "store: {} tensors, {} chunks, {:.1} MiB on disk ({:.2}x vs raw){}\n",
         summary.tensors,
         summary.chunks,
         summary.file_bytes as f64 / (1 << 20) as f64,
-        summary.compression_ratio()
+        summary.compression_ratio(),
+        if quick { "  [quick]" } else { "" }
     );
+    let names: Vec<String> = tensors.iter().map(|(n, _)| n.clone()).collect();
 
-    let reader = StoreReader::open(&path).expect("open store");
-    let meta = reader.meta("tensor0").expect("meta");
+    let store = StoreHandle::open(&path).expect("open store");
+    let meta = store.meta("tensor0").expect("meta");
     let chunks_per_tensor = meta.chunks.len();
     let per_chunk = meta.values_per_chunk;
-    let bench = Bench::default();
+    let span = 4 * per_chunk;
 
-    // Full-tensor decode, cold cache (all 64 chunks from disk, parallel).
-    let s = bench.run("store get_tensor 1M values (cold cache)", || {
-        reader.clear_cache();
-        reader.get_tensor("tensor0").unwrap()
+    // 1. Full-tensor decode, cold cache.
+    let s = bench.run("store get_tensor full (cold cache, mmap)", || {
+        store.clear_cache();
+        store.get_tensor("tensor0").unwrap()
     });
     println!("{}", s.report(Some(n_values as u64)));
 
-    // Random single-chunk reads, uncached: every read hits disk + decoder.
+    // 2. Multi-threaded get_range scaling, caches OFF, both backends.
+    println!(
+        "\nget_range scaling: {total_reads} random {span}-value reads, caches off \
+         ({avail} cores)"
+    );
+    for backend in [Backend::Mmap, Backend::File] {
+        let uncached = StoreHandle::open_with(&path, backend, 0).expect("open uncached");
+        let mut t1 = None;
+        for &threads in &thread_points {
+            let (dt, served) = range_read_pass(
+                &uncached,
+                threads,
+                total_reads,
+                span,
+                n_values as u64,
+                &names,
+            );
+            let mvals = served as f64 / dt.as_secs_f64() / 1e6;
+            let speedup = match t1 {
+                None => {
+                    t1 = Some(dt);
+                    1.0
+                }
+                Some(base) => base.as_secs_f64() / dt.as_secs_f64(),
+            };
+            println!(
+                "  {:<5} backend  {threads:>2} threads  {dt:>10.3?}  {mvals:>8.1} Mvalues/s  \
+                 {speedup:>5.2}x vs 1 thread",
+                backend.name()
+            );
+        }
+        let stats = uncached.stats();
+        println!(
+            "  {:<5} backend  bytes_read {} ({:.1} MiB compressed), {} chunks decoded",
+            backend.name(),
+            stats.bytes_read,
+            stats.bytes_read as f64 / (1 << 20) as f64,
+            stats.chunks_decoded
+        );
+    }
+
+    // 3. Random single-chunk reads: uncached vs cache-warm.
     let reads = 64usize;
     let mut rng = Rng64::new(7);
-    let uncached_keys: Vec<(String, usize)> = (0..reads)
+    let keys: Vec<(String, usize)> = (0..reads)
         .map(|_| {
             (
                 format!("tensor{}", rng.below(n_tensors as u64)),
@@ -61,55 +168,66 @@ fn main() {
         })
         .collect();
     let s = bench.run("store get_chunk ×64 random (uncached)", || {
-        reader.clear_cache();
+        store.clear_cache();
         let mut acc = 0u64;
-        for (name, ci) in &uncached_keys {
-            acc += reader.get_chunk(name, *ci).unwrap().len() as u64;
+        for (name, ci) in &keys {
+            acc += store.get_chunk(name, *ci).unwrap().len() as u64;
         }
         acc
     });
-    println!("{}", s.report(Some((reads as u64) * per_chunk)));
-
-    // The same reads, cache warm: pure LRU hits.
-    for (name, ci) in &uncached_keys {
-        reader.get_chunk(name, *ci).unwrap();
+    println!("\n{}", s.report(Some((reads as u64) * per_chunk)));
+    for (name, ci) in &keys {
+        store.get_chunk(name, *ci).unwrap();
     }
     let s = bench.run("store get_chunk ×64 random (cached)", || {
         let mut acc = 0u64;
-        for (name, ci) in &uncached_keys {
-            acc += reader.get_chunk(name, *ci).unwrap().len() as u64;
+        for (name, ci) in &keys {
+            acc += store.get_chunk(name, *ci).unwrap().len() as u64;
         }
         acc
     });
     println!("{}", s.report(Some((reads as u64) * per_chunk)));
-
-    // Cross-chunk range reads (4 chunks per read), uncached.
-    let span = 4 * per_chunk;
-    let ranges: Vec<(String, u64)> = (0..16)
-        .map(|_| {
-            let name = format!("tensor{}", rng.below(n_tensors as u64));
-            let lo = rng.below((n_values as u64) - span);
-            (name, lo)
-        })
-        .collect();
-    let s = bench.run("store get_range 4-chunk span ×16 (uncached)", || {
-        reader.clear_cache();
-        let mut acc = 0u64;
-        for (name, lo) in &ranges {
-            acc += reader.get_range(name, *lo..*lo + span).unwrap().len() as u64;
-        }
-        acc
-    });
-    println!("{}", s.report(Some(16 * span)));
-
-    let stats = reader.stats();
+    let stats = store.stats();
     println!(
-        "\ncumulative: {:.1} MiB compressed read, {} chunks decoded, {} cache hits / {} misses",
+        "single-file session: {:.1} MiB compressed via {} backend, {} decodes, \
+         hit rate {:.0}%",
         stats.bytes_read as f64 / (1 << 20) as f64,
+        stats.backend.name(),
         stats.chunks_decoded,
-        stats.cache_hits,
-        stats.cache_misses
+        100.0 * stats.hit_rate()
     );
-    drop(reader);
+    drop(store);
+
+    // 4. The same tensors as a sharded store: parallel verify + reads.
+    let shards = if quick { 2 } else { 4 };
+    let mut sw = ShardedStoreWriter::create(&shard_dir, shards, policy).expect("shard writer");
+    for (name, values) in &tensors {
+        sw.add_tensor(name, 8, values, TensorKind::Activations).expect("add tensor");
+    }
+    let ssum = sw.finish().expect("finish sharded");
+    // Cache off, like section 2: this point must measure the concurrent
+    // sharded IO path, not LRU hits.
+    let sharded =
+        StoreHandle::open_with(&shard_dir, Backend::Mmap, 0).expect("open sharded");
+    println!(
+        "\nsharded store: {} shard files, {} tensors, {:.1} MiB",
+        ssum.shards,
+        ssum.tensors,
+        ssum.file_bytes as f64 / (1 << 20) as f64
+    );
+    let s = bench.run("sharded verify (per-shard parallel)", || {
+        sharded.verify().unwrap()
+    });
+    println!("{}", s.report(Some(ssum.file_bytes)));
+    let threads = *thread_points.last().unwrap();
+    let (dt, served) =
+        range_read_pass(&sharded, threads, total_reads, span, n_values as u64, &names);
+    println!(
+        "sharded get_range  {threads:>2} threads  {dt:>10.3?}  {:>8.1} Mvalues/s",
+        served as f64 / dt.as_secs_f64() / 1e6
+    );
+
+    drop(sharded);
     std::fs::remove_file(&path).ok();
+    std::fs::remove_dir_all(&shard_dir).ok();
 }

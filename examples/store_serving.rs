@@ -3,12 +3,14 @@
 //! stays compressed at rest, decode happens on demand on the memory path;
 //! cf. EIE serving inference from a compressed weight store).
 //!
-//! Packs a zoo subset into one store file, then hammers it from several
-//! threads doing random `get_range` / `get_chunk` reads, verifying every
-//! result against a reference decode.
+//! Packs a zoo subset into a **sharded** store (hash-partitioned shard
+//! files, like a store too large for one file), then hammers it through a
+//! [`StoreHandle`] from several threads doing random `get_range` /
+//! `get_chunk` reads, verifying every result against a reference decode.
+//! Reads go through the zero-copy mmap backend, so no IO lock is touched.
 //!
 //! ```sh
-//! cargo run --release --example store_serving [threads] [reads-per-thread]
+//! cargo run --release --example store_serving [threads] [reads-per-thread] [shards]
 //! ```
 
 use std::collections::HashMap;
@@ -17,7 +19,7 @@ use std::time::Instant;
 
 use apack_repro::coordinator::PartitionPolicy;
 use apack_repro::models::zoo::model_by_name;
-use apack_repro::store::{pack_model_zoo, StoreReader};
+use apack_repro::store::{pack_model_zoo_sharded, StoreHandle};
 use apack_repro::util::Rng64;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
@@ -25,30 +27,33 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(8);
     let reads_per_thread: usize =
         std::env::args().nth(2).map(|s| s.parse()).transpose()?.unwrap_or(400);
+    let shards: usize =
+        std::env::args().nth(3).map(|s| s.parse()).transpose()?.unwrap_or(4);
 
     let path = std::env::temp_dir()
-        .join(format!("apack_store_serving_{}.apackstore", std::process::id()));
+        .join(format!("apack_store_serving_{}.apackstore.d", std::process::id()));
     let models: Vec<_> = ["resnet18", "ncf", "bilstm", "alexnet_eyeriss"]
         .iter()
         .map(|n| model_by_name(n).expect("zoo model"))
         .collect();
     let policy = PartitionPolicy { substreams: 16, min_per_stream: 512 };
-    let summary = pack_model_zoo(&path, &models, 8192, policy)?;
+    let summary = pack_model_zoo_sharded(&path, &models, 8192, policy, shards)?;
     println!(
-        "packed {} tensors / {} chunks into {:.1} KiB ({:.2}x vs raw)",
+        "packed {} tensors / {} chunks into {} shard files, {:.1} KiB ({:.2}x vs raw)",
         summary.tensors,
         summary.chunks,
+        summary.shards,
         summary.file_bytes as f64 / 1024.0,
         summary.compression_ratio()
     );
 
-    let reader = Arc::new(StoreReader::open(&path)?);
+    let store = Arc::new(StoreHandle::open(&path)?);
     let names: Vec<String> =
-        reader.tensor_names().into_iter().map(str::to_string).collect();
+        store.tensor_names().into_iter().map(str::to_string).collect();
 
-    // Reference decode of every tensor (also warms nothing: fresh reader).
+    // Reference decode of every tensor (fresh handle: warms nothing).
     let reference: HashMap<String, Vec<u32>> = {
-        let check = StoreReader::open(&path)?;
+        let check = StoreHandle::open(&path)?;
         names.iter().map(|n| (n.clone(), check.get_tensor(n).unwrap())).collect()
     };
     let reference = Arc::new(reference);
@@ -58,7 +63,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     std::thread::scope(|scope| {
         let mut handles = Vec::new();
         for tid in 0..threads {
-            let reader = Arc::clone(&reader);
+            let store = Arc::clone(&store);
             let reference = Arc::clone(&reference);
             let names = &names;
             handles.push(scope.spawn(move || {
@@ -67,7 +72,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 for _ in 0..reads_per_thread {
                     let name = &names[rng.below(names.len() as u64) as usize];
                     let expect = &reference[name];
-                    let meta = reader.meta(name).unwrap();
+                    let meta = store.meta(name).unwrap();
                     if meta.chunks.is_empty() {
                         continue;
                     }
@@ -77,13 +82,13 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                         let n = meta.n_values;
                         let lo = rng.below(n);
                         let hi = (lo + 1 + rng.below(n - lo)).min(n);
-                        let got = reader.get_range(name, lo..hi).unwrap();
+                        let got = store.get_range(name, lo..hi).unwrap();
                         assert_eq!(got, expect[lo as usize..hi as usize], "{name} {lo}..{hi}");
                         served += hi - lo;
                     } else {
                         let ci = rng.below(meta.chunks.len() as u64) as usize;
                         let covered = meta.chunk_value_range(ci);
-                        let got = reader.get_chunk(name, ci).unwrap();
+                        let got = store.get_chunk(name, ci).unwrap();
                         assert_eq!(
                             got.as_slice(),
                             &expect[covered.start as usize..covered.end as usize],
@@ -101,25 +106,27 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     });
     let dt = t0.elapsed();
 
-    let stats = reader.stats();
+    let stats = store.stats();
     let total_reads = (threads * reads_per_thread) as f64;
     println!(
-        "{threads} threads × {reads_per_thread} reads: {served_values} values served in {dt:?} \
-         ({:.0} reads/s, {:.1} Mvalues/s)",
+        "{threads} threads × {reads_per_thread} reads over {} shard(s): {served_values} \
+         values served in {dt:?} ({:.0} reads/s, {:.1} Mvalues/s)",
+        store.shard_count(),
         total_reads / dt.as_secs_f64(),
         served_values as f64 / dt.as_secs_f64() / 1e6
     );
     println!(
-        "cache: {} hits / {} misses ({:.0}% hit rate); {:.2} MiB compressed read, \
-         {} chunks decoded",
+        "cache: {} hits / {} misses ({:.0}% hit rate); {:.2} MiB compressed read via {} \
+         backend, {} chunks decoded",
         stats.cache_hits,
         stats.cache_misses,
-        100.0 * stats.cache_hits as f64 / (stats.cache_hits + stats.cache_misses).max(1) as f64,
+        100.0 * stats.hit_rate(),
         stats.bytes_read as f64 / (1 << 20) as f64,
+        stats.backend.name(),
         stats.chunks_decoded
     );
     println!("all reads verified against reference decode — serving is lossless");
-    drop(reader);
-    std::fs::remove_file(&path).ok();
+    drop(store);
+    std::fs::remove_dir_all(&path).ok();
     Ok(())
 }

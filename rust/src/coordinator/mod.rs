@@ -136,6 +136,23 @@ impl PartitionPolicy {
         let per = values.len().div_ceil(shards).max(1);
         values.chunks(per).collect()
     }
+
+    /// Effective number of shard **files** for a store expected to hold
+    /// `total_values` values — the same scale-to-content heuristic as
+    /// [`Self::shards_for`], lifted one level up: each shard file should
+    /// receive enough values to feed a full complement of its own
+    /// substreams (`substreams × min_per_stream`), otherwise the requested
+    /// count is clamped down. A store too small to fill one file's
+    /// substreams still gets one shard.
+    pub fn file_shards_for(&self, requested: usize, total_values: u64) -> usize {
+        if requested <= 1 {
+            return 1;
+        }
+        let per_file_floor =
+            (self.substreams as u64).saturating_mul(self.min_per_stream as u64).max(1);
+        let max_by_content = (total_values / per_file_floor).max(1) as usize;
+        requested.min(max_by_content)
+    }
 }
 
 /// Coordinator facade: profile → table → parallel shard encode, and the
@@ -238,6 +255,18 @@ mod tests {
         // Chunks reassemble exactly.
         let total: usize = p.split(&v).iter().map(|c| c.len()).sum();
         assert_eq!(total, v.len());
+    }
+
+    #[test]
+    fn file_shard_heuristic_scales_with_content() {
+        let p = PartitionPolicy { substreams: 64, min_per_stream: 1024 };
+        // 64×1024 = 65536 values fill one shard file's substreams.
+        assert_eq!(p.file_shards_for(1, 0), 1);
+        assert_eq!(p.file_shards_for(4, 0), 1, "empty store collapses to one shard");
+        assert_eq!(p.file_shards_for(4, 65_536), 1);
+        assert_eq!(p.file_shards_for(4, 4 * 65_536), 4);
+        assert_eq!(p.file_shards_for(4, 1 << 30), 4, "request is the ceiling");
+        assert_eq!(p.file_shards_for(8, 3 * 65_536), 3);
     }
 
     #[test]

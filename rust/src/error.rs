@@ -21,6 +21,15 @@ pub enum Error {
     /// An APackStore file is malformed or fails an integrity check
     /// (truncated footer, CRC mismatch, index pointing past EOF, …).
     Store(String),
+    /// A sharded store's manifest is unreadable or fails validation
+    /// (bad magic, bad CRC, truncated records, inconsistent counts).
+    ManifestCorrupt(String),
+    /// A shard file named by the manifest is absent from the store
+    /// directory.
+    ShardMissing { shard: String },
+    /// The store directory holds a different number of shard files than
+    /// the manifest declares.
+    ShardCountMismatch { manifest: usize, found: usize },
     /// Underlying I/O failure, stringified (keeps the error type `Eq`).
     Io(String),
     /// Configuration error (coordinator / simulator parameters).
@@ -44,6 +53,14 @@ impl fmt::Display for Error {
             }
             Error::BadContainer(s) => write!(f, "bad container: {s}"),
             Error::Store(s) => write!(f, "bad store: {s}"),
+            Error::ManifestCorrupt(s) => write!(f, "corrupt shard manifest: {s}"),
+            Error::ShardMissing { shard } => {
+                write!(f, "shard file {shard:?} named by the manifest is missing")
+            }
+            Error::ShardCountMismatch { manifest, found } => write!(
+                f,
+                "manifest declares {manifest} shard files but the directory holds {found}"
+            ),
             Error::Io(s) => write!(f, "i/o error: {s}"),
             Error::Config(s) => write!(f, "configuration error: {s}"),
             Error::Runtime(s) => write!(f, "runtime error: {s}"),

@@ -10,7 +10,7 @@ use crate::coordinator::PartitionPolicy;
 use crate::error::Result;
 use crate::eval::study::geomean;
 use crate::models::zoo::{all_models, ModelConfig};
-use crate::store::{pack_model_zoo, StoreReader};
+use crate::store::{pack_model_zoo, StoreHandle};
 
 use super::render_table;
 
@@ -34,9 +34,10 @@ impl ModelStoreFootprint {
 }
 
 /// Group a packed store's tensors by their `"{model}/..."` name prefix.
-pub fn footprints_from_store(reader: &StoreReader) -> Vec<ModelStoreFootprint> {
+/// Works uniformly over single-file and sharded stores.
+pub fn footprints_from_store(store: &StoreHandle) -> Vec<ModelStoreFootprint> {
     let mut out: Vec<ModelStoreFootprint> = Vec::new();
-    for t in &reader.index().tensors {
+    for t in store.tensor_metas() {
         let model = t.name.split('/').next().unwrap_or(&t.name).to_string();
         let idx = match out.iter().position(|f| f.model == model) {
             Some(i) => i,
@@ -63,8 +64,8 @@ pub fn footprints_from_store(reader: &StoreReader) -> Vec<ModelStoreFootprint> {
 /// Pack `models` into a store at `path` and render the footprint report.
 pub fn report_at(path: &Path, models: &[ModelConfig], sample_cap: usize) -> Result<String> {
     let summary = pack_model_zoo(path, models, sample_cap, PartitionPolicy::default())?;
-    let reader = StoreReader::open(path)?;
-    let footprints = footprints_from_store(&reader);
+    let store = StoreHandle::open(path)?;
+    let footprints = footprints_from_store(&store);
 
     let rows: Vec<Vec<String>> = footprints
         .iter()
@@ -120,14 +121,14 @@ mod tests {
         assert!(text.contains("ncf"));
         assert!(text.contains("bilstm"));
 
-        let reader = StoreReader::open(&path).unwrap();
-        let fps = footprints_from_store(&reader);
+        let store = StoreHandle::open(&path).unwrap();
+        let fps = footprints_from_store(&store);
         assert_eq!(fps.len(), 2);
         for f in &fps {
             assert!(f.raw_bits > 0 && f.stored_bytes > 0);
             assert!(f.ratio() > 1.0, "{}: ratio {}", f.model, f.ratio());
         }
-        drop(reader);
+        drop(store);
         std::fs::remove_file(&path).ok();
     }
 }

@@ -13,7 +13,10 @@ use apack_repro::apack::tablegen::TensorKind;
 use apack_repro::coordinator::{Coordinator, PartitionPolicy, ShardedContainer};
 use apack_repro::eval::{self, CompressionStudy};
 use apack_repro::models::zoo::{all_models, model_by_name};
-use apack_repro::store::{pack_model_zoo, StoreReader};
+use apack_repro::store::{
+    pack_model_zoo, pack_model_zoo_sharded, Backend, ReadStats, StoreHandle,
+    DEFAULT_CACHE_VALUES,
+};
 
 const USAGE: &str = "\
 apack-repro — APack off-chip lossless compression, full-system reproduction
@@ -21,10 +24,10 @@ apack-repro — APack off-chip lossless compression, full-system reproduction
 USAGE:
   apack-repro compress <input> [--output <file>] [--kind weights|activations] [--substreams N]
   apack-repro decompress <input> --output <file>
-  apack-repro store pack <output> [--models a,b|all] [--sample-cap N] [--substreams N] [--min-per-stream N]
-  apack-repro store get <store> --tensor NAME [--chunk I | --range LO..HI] [--output <file>]
-  apack-repro store stats <store>
-  apack-repro store verify <store>
+  apack-repro store pack <output> [--models a,b|all] [--sample-cap N] [--substreams N] [--min-per-stream N] [--shards N]
+  apack-repro store get <store> --tensor NAME [--chunk I | --range LO..HI] [--output <file>] [--backend mmap|file]
+  apack-repro store stats <store> [--backend mmap|file]
+  apack-repro store verify <store> [--backend mmap|file]
   apack-repro store report [--sample-cap N]
   apack-repro table [--model NAME] [--layer N] [--kind weights|activations]
   apack-repro fig --id <2|5a|5b|6|7|8>
@@ -186,9 +189,22 @@ fn run() -> Result<(), Box<dyn Error>> {
     Ok(())
 }
 
+/// Render the session read counters (`store get`/`stats` footer line).
+fn read_stats_line(stats: &ReadStats) -> String {
+    format!(
+        "session reads: {} compressed bytes via {} backend, {} chunks decoded, \
+         cache hit rate {:.1}%",
+        stats.bytes_read,
+        stats.backend.name(),
+        stats.chunks_decoded,
+        100.0 * stats.hit_rate()
+    )
+}
+
 /// `store pack | get | stats | verify | report` — the APackStore CLI.
 fn run_store(args: &Args) -> Result<(), Box<dyn Error>> {
     let action = args.positional.first().map(String::as_str).unwrap_or("");
+    let backend = Backend::parse(&args.flag_or("backend", "mmap"))?;
     match action {
         "pack" => {
             let out = args.positional.get(1).ok_or("missing <output> store path")?;
@@ -205,39 +221,58 @@ fn run_store(args: &Args) -> Result<(), Box<dyn Error>> {
             let sample_cap: usize = args.flag_or("sample-cap", "16384").parse()?;
             let substreams: u32 = args.flag_or("substreams", "64").parse()?;
             let min_per_stream: usize = args.flag_or("min-per-stream", "1024").parse()?;
+            let shards: usize = args.flag_or("shards", "1").parse()?;
             let policy = PartitionPolicy { substreams, min_per_stream };
-            let summary = pack_model_zoo(Path::new(out), &models, sample_cap, policy)?;
-            println!(
-                "packed {} models into {out}: {} tensors, {} chunks, {:.1} KiB \
-                 ({:.2}x vs raw sampled values)",
-                models.len(),
-                summary.tensors,
-                summary.chunks,
-                summary.file_bytes as f64 / 1024.0,
-                summary.compression_ratio()
-            );
+            if shards > 1 {
+                let summary =
+                    pack_model_zoo_sharded(Path::new(out), &models, sample_cap, policy, shards)?;
+                println!(
+                    "packed {} models into {out} ({} shard files): {} tensors, {} chunks, \
+                     {:.1} KiB ({:.2}x vs raw sampled values)",
+                    models.len(),
+                    summary.shards,
+                    summary.tensors,
+                    summary.chunks,
+                    summary.file_bytes as f64 / 1024.0,
+                    summary.compression_ratio()
+                );
+                for (i, s) in summary.per_shard.iter().enumerate() {
+                    println!(
+                        "  shard-{i:03}: {} tensors, {} chunks, {:.1} KiB",
+                        s.tensors,
+                        s.chunks,
+                        s.file_bytes as f64 / 1024.0
+                    );
+                }
+            } else {
+                let summary = pack_model_zoo(Path::new(out), &models, sample_cap, policy)?;
+                println!(
+                    "packed {} models into {out}: {} tensors, {} chunks, {:.1} KiB \
+                     ({:.2}x vs raw sampled values)",
+                    models.len(),
+                    summary.tensors,
+                    summary.chunks,
+                    summary.file_bytes as f64 / 1024.0,
+                    summary.compression_ratio()
+                );
+            }
         }
         "get" => {
             let input = Path::new(args.positional.get(1).ok_or("missing <store> path")?);
-            let reader = StoreReader::open(input)?;
+            let store = StoreHandle::open_with(input, backend, DEFAULT_CACHE_VALUES)?;
             let name = args.flag("tensor").ok_or("--tensor required")?;
             let values = if let Some(ci) = args.flag("chunk") {
-                reader.get_chunk(name, ci.parse()?)?.to_vec()
+                store.get_chunk(name, ci.parse()?)?.to_vec()
             } else if let Some(range) = args.flag("range") {
                 let (lo, hi) = range
                     .split_once("..")
                     .ok_or("--range must look like LO..HI")?;
-                reader.get_range(name, lo.trim().parse()?..hi.trim().parse()?)?
+                store.get_range(name, lo.trim().parse()?..hi.trim().parse()?)?
             } else {
-                reader.get_tensor(name)?
+                store.get_tensor(name)?
             };
-            let stats = reader.stats();
-            println!(
-                "{name}: {} values decoded ({} compressed bytes read, {} chunks)",
-                values.len(),
-                stats.bytes_read,
-                stats.chunks_decoded
-            );
+            println!("{name}: {} values decoded", values.len());
+            println!("{}", read_stats_line(&store.stats()));
             if let Some(out) = args.flag("output") {
                 let mut bytes = Vec::with_capacity(values.len() * 4);
                 for v in &values {
@@ -254,10 +289,9 @@ fn run_store(args: &Args) -> Result<(), Box<dyn Error>> {
         }
         "stats" => {
             let input = Path::new(args.positional.get(1).ok_or("missing <store> path")?);
-            let reader = StoreReader::open(input)?;
-            let rows: Vec<Vec<String>> = reader
-                .index()
-                .tensors
+            let store = StoreHandle::open_with(input, backend, DEFAULT_CACHE_VALUES)?;
+            let rows: Vec<Vec<String>> = store
+                .tensor_metas()
                 .iter()
                 .map(|t| {
                     vec![
@@ -277,19 +311,27 @@ fn run_store(args: &Args) -> Result<(), Box<dyn Error>> {
             println!(
                 "{}",
                 eval::render_table(
-                    &format!("{} — {} tensors", input.display(), reader.tensor_count()),
+                    &format!(
+                        "{} — {} tensors, {} shard file(s)",
+                        input.display(),
+                        store.tensor_count(),
+                        store.shard_count()
+                    ),
                     &["tensor", "bits", "kind", "values", "chunks", "bytes", "ratio"],
                     &rows
                 )
             );
+            println!("{}", read_stats_line(&store.stats()));
         }
         "verify" => {
             let input = Path::new(args.positional.get(1).ok_or("missing <store> path")?);
-            let reader = StoreReader::open(input)?;
-            let report = reader.verify()?;
+            let store = StoreHandle::open_with(input, backend, DEFAULT_CACHE_VALUES)?;
+            let report = store.verify()?;
             println!(
-                "{}: OK — {} tensors, {} chunks, {} compressed bytes all pass CRC + decode",
+                "{}: OK — {} shard file(s), {} tensors, {} chunks, {} compressed bytes \
+                 all pass CRC + decode",
                 input.display(),
+                report.shards,
                 report.tensors,
                 report.chunks,
                 report.bytes

@@ -1,0 +1,210 @@
+//! [`StoreHandle`] — the one store-access type every consumer uses.
+//!
+//! The CLI, the eval report, the serving example and the benches don't
+//! care whether a store is one `.apackstore` file or a sharded directory,
+//! nor which IO backend serves the bytes. `StoreHandle` folds
+//! [`StoreReader`] and [`ShardedStoreReader`] behind one surface
+//! (`get_tensor` / `get_chunk` / `get_range` / `stats` / `verify` / …),
+//! auto-detected from the path: a directory opens as a sharded store, a
+//! file as a single-file store. This is the seam later work (async
+//! serving, delta updates) plugs into without touching the callers again.
+
+use std::ops::Range;
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::error::Result;
+
+use super::format::TensorMeta;
+use super::io::Backend;
+use super::reader::{ReadStats, StoreReader, VerifyReport, DEFAULT_CACHE_VALUES};
+use super::shard::ShardedStoreReader;
+
+/// A read-only handle on an APackStore: single file or sharded directory.
+pub enum StoreHandle {
+    Single(StoreReader),
+    Sharded(ShardedStoreReader),
+}
+
+impl StoreHandle {
+    /// Open `path` with the default (mmap) backend and cache budget,
+    /// auto-detecting single-file vs. sharded layout.
+    pub fn open(path: &Path) -> Result<Self> {
+        Self::open_with(path, Backend::default(), DEFAULT_CACHE_VALUES)
+    }
+
+    /// Open with an explicit backend and cache budget (in values; a
+    /// sharded store splits the budget across shards).
+    pub fn open_with(path: &Path, backend: Backend, cache_values: usize) -> Result<Self> {
+        if path.is_dir() {
+            Ok(StoreHandle::Sharded(ShardedStoreReader::open_with(
+                path,
+                backend,
+                cache_values,
+            )?))
+        } else {
+            Ok(StoreHandle::Single(StoreReader::open_with(path, backend, cache_values)?))
+        }
+    }
+
+    /// The IO backend serving this store.
+    pub fn backend(&self) -> Backend {
+        match self {
+            StoreHandle::Single(r) => r.backend(),
+            StoreHandle::Sharded(r) => r.backend(),
+        }
+    }
+
+    /// Number of shard files (1 for a single-file store).
+    pub fn shard_count(&self) -> usize {
+        match self {
+            StoreHandle::Single(_) => 1,
+            StoreHandle::Sharded(r) => r.shard_count(),
+        }
+    }
+
+    /// All tensor names (write order; sharded: shard order first).
+    pub fn tensor_names(&self) -> Vec<&str> {
+        match self {
+            StoreHandle::Single(r) => r.tensor_names(),
+            StoreHandle::Sharded(r) => r.tensor_names(),
+        }
+    }
+
+    /// Number of tensors in the store.
+    pub fn tensor_count(&self) -> usize {
+        match self {
+            StoreHandle::Single(r) => r.tensor_count(),
+            StoreHandle::Sharded(r) => r.tensor_count(),
+        }
+    }
+
+    /// Every tensor's footer entry (same order as [`Self::tensor_names`]).
+    pub fn tensor_metas(&self) -> Vec<&TensorMeta> {
+        match self {
+            StoreHandle::Single(r) => r.index().tensors.iter().collect(),
+            StoreHandle::Sharded(r) => r.tensor_metas(),
+        }
+    }
+
+    /// Metadata for one tensor.
+    pub fn meta(&self, name: &str) -> Result<&TensorMeta> {
+        match self {
+            StoreHandle::Single(r) => r.meta(name),
+            StoreHandle::Sharded(r) => r.meta(name),
+        }
+    }
+
+    /// Decode one chunk (CRC-checked; cache-assisted).
+    pub fn get_chunk(&self, name: &str, ci: usize) -> Result<Arc<Vec<u32>>> {
+        match self {
+            StoreHandle::Single(r) => r.get_chunk(name, ci),
+            StoreHandle::Sharded(r) => r.get_chunk(name, ci),
+        }
+    }
+
+    /// Decode a full tensor, chunks in parallel.
+    pub fn get_tensor(&self, name: &str) -> Result<Vec<u32>> {
+        match self {
+            StoreHandle::Single(r) => r.get_tensor(name),
+            StoreHandle::Sharded(r) => r.get_tensor(name),
+        }
+    }
+
+    /// Decode a value range, touching only the covering chunks.
+    pub fn get_range(&self, name: &str, range: Range<u64>) -> Result<Vec<u32>> {
+        match self {
+            StoreHandle::Single(r) => r.get_range(name, range),
+            StoreHandle::Sharded(r) => r.get_range(name, range),
+        }
+    }
+
+    /// Snapshot the cumulative read counters (sharded: aggregated).
+    pub fn stats(&self) -> ReadStats {
+        match self {
+            StoreHandle::Single(r) => r.stats(),
+            StoreHandle::Sharded(r) => r.stats(),
+        }
+    }
+
+    /// Zero the read counters.
+    pub fn reset_stats(&self) {
+        match self {
+            StoreHandle::Single(r) => r.reset_stats(),
+            StoreHandle::Sharded(r) => r.reset_stats(),
+        }
+    }
+
+    /// Drop all cached chunks.
+    pub fn clear_cache(&self) {
+        match self {
+            StoreHandle::Single(r) => r.clear_cache(),
+            StoreHandle::Sharded(r) => r.clear_cache(),
+        }
+    }
+
+    /// Integrity pass: re-read, CRC-check and decode every chunk (sharded:
+    /// shards verify in parallel, chunks fan out within each).
+    pub fn verify(&self) -> Result<VerifyReport> {
+        match self {
+            StoreHandle::Single(r) => r.verify(),
+            StoreHandle::Sharded(r) => r.verify(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apack::tablegen::TensorKind;
+    use crate::coordinator::PartitionPolicy;
+    use crate::models::distributions::ValueProfile;
+    use crate::store::{ShardedStoreWriter, StoreWriter};
+
+    fn tensor(n: usize, seed: u64) -> Vec<u32> {
+        ValueProfile::ReluActivation { sparsity: 0.5, q: 0.93, noise_floor: 0.01 }
+            .sample(8, n, seed)
+    }
+
+    #[test]
+    fn handle_auto_detects_layout() {
+        let base = std::env::temp_dir()
+            .join(format!("apack_handle_{}", std::process::id()));
+        let file_path = base.with_extension("apackstore");
+        let dir_path = base.with_extension("apackstore.d");
+        let policy = PartitionPolicy { substreams: 4, min_per_stream: 128 };
+        let v = tensor(3000, 5);
+
+        let mut w = StoreWriter::create(&file_path, policy).unwrap();
+        w.add_tensor("t", 8, &v, TensorKind::Weights).unwrap();
+        w.finish().unwrap();
+        let mut w = ShardedStoreWriter::create(&dir_path, 2, policy).unwrap();
+        w.add_tensor("t", 8, &v, TensorKind::Weights).unwrap();
+        w.finish().unwrap();
+
+        let single = StoreHandle::open(&file_path).unwrap();
+        let sharded = StoreHandle::open(&dir_path).unwrap();
+        assert!(matches!(single, StoreHandle::Single(_)));
+        assert!(matches!(sharded, StoreHandle::Sharded(_)));
+        assert_eq!(single.shard_count(), 1);
+        assert_eq!(sharded.shard_count(), 2);
+        assert_eq!(single.tensor_count(), 1);
+        assert_eq!(sharded.tensor_count(), 1);
+
+        // Identical data through either layout, plus uniform stats/verify.
+        assert_eq!(single.get_tensor("t").unwrap(), v);
+        assert_eq!(sharded.get_tensor("t").unwrap(), v);
+        assert_eq!(single.get_range("t", 100..200).unwrap(), &v[100..200]);
+        assert_eq!(sharded.get_range("t", 100..200).unwrap(), &v[100..200]);
+        assert_eq!(single.meta("t").unwrap().n_values, 3000);
+        assert_eq!(sharded.meta("t").unwrap().n_values, 3000);
+        assert!(single.verify().unwrap().chunks > 0);
+        assert_eq!(sharded.verify().unwrap().shards, 2);
+        assert!(single.stats().bytes_read > 0);
+        assert_eq!(single.tensor_metas().len(), 1);
+        assert_eq!(sharded.tensor_metas().len(), 1);
+
+        std::fs::remove_file(&file_path).ok();
+        std::fs::remove_dir_all(&dir_path).ok();
+    }
+}

@@ -1,0 +1,498 @@
+//! Pluggable chunk IO: the [`ChunkSource`] trait and its two backends.
+//!
+//! The store read stack used to funnel every chunk read through a
+//! `Mutex<File>` (seek + read under the lock), which serialized the very
+//! parallelism the format was designed for — independently decodable
+//! chunks mirroring the replicated decode engines of paper §V-B. This
+//! module replaces that with **positioned reads behind a `Sync` trait with
+//! no interior mutex**, so any number of reader threads can fetch chunk
+//! bytes concurrently:
+//!
+//! - [`MmapSource`] (the default, [`Backend::Mmap`]) maps the store file
+//!   read-only and serves **zero-copy** `&[u8]` slices straight out of the
+//!   page cache via [`ChunkSource::slice_at`] — no buffer allocation, no
+//!   syscall per read, no lock.
+//! - [`FileSource`] ([`Backend::File`]) is the plain-file comparison
+//!   backend: one `pread(2)`-style positioned read per chunk
+//!   (`FileExt::read_exact_at` on unix), also lock-free. It exists so the
+//!   bench can quantify what the mapping buys in one run.
+//!
+//! Both backends count the bytes they serve in a per-backend
+//! [`ChunkSource::bytes_read`] counter, which the reader folds into
+//! [`super::ReadStats`] so mmap and file paths are directly comparable.
+
+use std::fs::File;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::error::{Error, Result};
+
+/// Which IO backend a source (and the reader above it) uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Backend {
+    /// Memory-mapped, zero-copy reads (default). Fastest, but assumes the
+    /// store file is immutable while open — see [`MmapSource`] for the
+    /// truncation caveat.
+    #[default]
+    Mmap,
+    /// Positioned (`pread`-style) reads from an open file descriptor.
+    /// Slower per read, but robust to the file being replaced underneath.
+    File,
+}
+
+impl Backend {
+    /// Open `path` with this backend.
+    pub fn open(self, path: &Path) -> Result<Box<dyn ChunkSource>> {
+        match self {
+            Backend::Mmap => Ok(Box::new(MmapSource::open(path)?)),
+            Backend::File => Ok(Box::new(FileSource::open(path)?)),
+        }
+    }
+
+    /// Parse a CLI spelling (`"mmap"` / `"file"`).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "mmap" => Ok(Backend::Mmap),
+            "file" => Ok(Backend::File),
+            other => Err(Error::Config(format!(
+                "unknown store backend {other:?} (expected mmap or file)"
+            ))),
+        }
+    }
+
+    /// Stable lowercase name (for stats lines and benches).
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Mmap => "mmap",
+            Backend::File => "file",
+        }
+    }
+}
+
+/// Positioned, lock-free chunk IO over one store file.
+///
+/// Contract: implementations are `Sync` **without an interior mutex** on
+/// the read path — `read_at`/`slice_at` take `&self` and may be called
+/// from any number of threads concurrently. All offsets are validated
+/// against [`Self::len`]; reads past EOF are errors, never truncation.
+pub trait ChunkSource: Send + Sync {
+    /// Total length of the underlying file in bytes.
+    fn len(&self) -> u64;
+
+    /// True when the file is empty.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Which backend this is (per-backend accounting and reporting).
+    fn backend(&self) -> Backend;
+
+    /// Read exactly `buf.len()` bytes starting at `offset`.
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<()>;
+
+    /// Zero-copy view of `[offset, offset + len)` if this backend can
+    /// serve one (mmap can; plain files cannot). Counts toward
+    /// [`Self::bytes_read`] just like `read_at`.
+    fn slice_at(&self, offset: u64, len: usize) -> Option<&[u8]>;
+
+    /// Cumulative bytes served by this source since open (or the last
+    /// [`Self::reset_bytes_read`]).
+    fn bytes_read(&self) -> u64;
+
+    /// Zero the byte counter (the reader calls this after parsing the
+    /// footer so stats cover chunk IO only, as before).
+    fn reset_bytes_read(&self);
+}
+
+/// Bounds-check a positioned read against the file length.
+fn check_extent(len: u64, offset: u64, want: usize) -> Result<()> {
+    let end = offset
+        .checked_add(want as u64)
+        .ok_or_else(|| Error::Store(format!("read extent {offset}+{want} overflows")))?;
+    if end > len {
+        return Err(Error::Store(format!(
+            "read [{offset}, {end}) past EOF ({len} bytes)"
+        )));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// FileSource: positioned pread, no mutex.
+// ---------------------------------------------------------------------------
+
+/// Plain-file backend: one positioned read syscall per chunk.
+///
+/// On unix this is `pread(2)` (`FileExt::read_exact_at`), which carries its
+/// own offset — no seek, no shared cursor, and therefore **no lock**: the
+/// mutex the old reader wrapped around the file is gone by construction.
+pub struct FileSource {
+    #[cfg(unix)]
+    file: File,
+    /// Non-unix hosts have no positioned-read API in std; fall back to a
+    /// locked seek+read (correctness over scalability off-platform).
+    #[cfg(not(unix))]
+    file: std::sync::Mutex<File>,
+    len: u64,
+    bytes: AtomicU64,
+}
+
+impl FileSource {
+    /// Open `path` read-only.
+    pub fn open(path: &Path) -> Result<Self> {
+        let file = File::open(path)?;
+        let len = file.metadata()?.len();
+        #[cfg(not(unix))]
+        let file = std::sync::Mutex::new(file);
+        Ok(Self { file, len, bytes: AtomicU64::new(0) })
+    }
+}
+
+impl ChunkSource for FileSource {
+    fn len(&self) -> u64 {
+        self.len
+    }
+
+    fn backend(&self) -> Backend {
+        Backend::File
+    }
+
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<()> {
+        check_extent(self.len, offset, buf.len())?;
+        #[cfg(unix)]
+        {
+            use std::os::unix::fs::FileExt;
+            self.file.read_exact_at(buf, offset)?;
+        }
+        #[cfg(not(unix))]
+        {
+            use std::io::{Read, Seek, SeekFrom};
+            let mut f = self.file.lock().expect("file source lock");
+            f.seek(SeekFrom::Start(offset))?;
+            f.read_exact(buf)?;
+        }
+        self.bytes.fetch_add(buf.len() as u64, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn slice_at(&self, _offset: u64, _len: usize) -> Option<&[u8]> {
+        None
+    }
+
+    fn bytes_read(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    fn reset_bytes_read(&self) {
+        self.bytes.store(0, Ordering::Relaxed);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MmapSource: read-only mapping, zero-copy slices.
+// ---------------------------------------------------------------------------
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 0x1;
+    pub const MAP_SHARED: c_int = 0x1;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+
+    /// `MAP_FAILED` is `(void *)-1`.
+    pub fn map_failed() -> *mut c_void {
+        usize::MAX as *mut c_void
+    }
+}
+
+/// Memory-mapped backend: the whole store file mapped read-only once at
+/// open; every chunk read is a bounds-checked slice of the mapping. No
+/// syscall, no allocation, no lock on the read path — concurrent readers
+/// scale with threads until DRAM bandwidth, which is exactly the deployment
+/// the replicated hardware decoders assume (paper §V-B).
+///
+/// **Tradeoff vs. [`FileSource`]:** a mapping is only safe while the file
+/// keeps its length. If another process truncates or rewrites the store
+/// in place while it is open (e.g. re-running `store pack` onto the same
+/// path), touching a mapped page past the new EOF raises SIGBUS and kills
+/// the process, where the file backend would return a typed read error
+/// for that one request. Long-lived servers that must survive in-place
+/// repacks should either open with [`Backend::File`] or (better) pack to
+/// a fresh path and swap atomically.
+///
+/// On non-unix hosts (no `mmap`) the file is read into a **resident
+/// buffer** at open — reads stay zero-copy but memory cost is O(store
+/// size); prefer [`Backend::File`] there for large stores.
+pub struct MmapSource {
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    ptr: *const u8,
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    map_len: usize,
+    #[cfg(not(all(unix, target_pointer_width = "64")))]
+    resident: Vec<u8>,
+    len: u64,
+    bytes: AtomicU64,
+}
+
+// SAFETY: the mapping is read-only (PROT_READ) and shared only through
+// `&self` methods that hand out immutable slices; the raw pointer is never
+// written through and lives until Drop.
+#[cfg(all(unix, target_pointer_width = "64"))]
+unsafe impl Send for MmapSource {}
+#[cfg(all(unix, target_pointer_width = "64"))]
+unsafe impl Sync for MmapSource {}
+
+impl MmapSource {
+    /// Map `path` read-only. Empty files map to an empty source.
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    pub fn open(path: &Path) -> Result<Self> {
+        use std::os::unix::io::AsRawFd;
+        let file = File::open(path)?;
+        let len = file.metadata()?.len();
+        if len == 0 {
+            return Ok(Self {
+                ptr: std::ptr::null(),
+                map_len: 0,
+                len: 0,
+                bytes: AtomicU64::new(0),
+            });
+        }
+        let map_len = len as usize;
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                map_len,
+                sys::PROT_READ,
+                sys::MAP_SHARED,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == sys::map_failed() || ptr.is_null() {
+            return Err(Error::Io(format!(
+                "mmap of {} ({len} bytes) failed",
+                path.display()
+            )));
+        }
+        // The mapping holds its own reference to the file; the fd can close.
+        Ok(Self { ptr: ptr as *const u8, map_len, len, bytes: AtomicU64::new(0) })
+    }
+
+    /// Fallback without a 64-bit unix `mmap` (non-unix, or 32-bit where
+    /// casting the mapping length to `usize` could truncate and the FFI
+    /// `off_t` ABI differs): load the file into memory once.
+    #[cfg(not(all(unix, target_pointer_width = "64")))]
+    pub fn open(path: &Path) -> Result<Self> {
+        let resident = std::fs::read(path)?;
+        let len = resident.len() as u64;
+        Ok(Self { resident, len, bytes: AtomicU64::new(0) })
+    }
+
+    /// The whole file as a slice.
+    fn data(&self) -> &[u8] {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        {
+            if self.map_len == 0 {
+                return &[];
+            }
+            // SAFETY: ptr/map_len describe a live PROT_READ mapping owned
+            // by self; it is unmapped only in Drop.
+            unsafe { std::slice::from_raw_parts(self.ptr, self.map_len) }
+        }
+        #[cfg(not(all(unix, target_pointer_width = "64")))]
+        {
+            &self.resident
+        }
+    }
+}
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+impl Drop for MmapSource {
+    fn drop(&mut self) {
+        if self.map_len != 0 {
+            // SAFETY: exactly the region mmap returned at open.
+            unsafe {
+                sys::munmap(self.ptr as *mut std::os::raw::c_void, self.map_len);
+            }
+        }
+    }
+}
+
+impl ChunkSource for MmapSource {
+    fn len(&self) -> u64 {
+        self.len
+    }
+
+    fn backend(&self) -> Backend {
+        Backend::Mmap
+    }
+
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<()> {
+        check_extent(self.len, offset, buf.len())?;
+        let start = offset as usize;
+        buf.copy_from_slice(&self.data()[start..start + buf.len()]);
+        self.bytes.fetch_add(buf.len() as u64, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn slice_at(&self, offset: u64, len: usize) -> Option<&[u8]> {
+        if check_extent(self.len, offset, len).is_err() {
+            return None;
+        }
+        let start = offset as usize;
+        self.bytes.fetch_add(len as u64, Ordering::Relaxed);
+        Some(&self.data()[start..start + len])
+    }
+
+    fn bytes_read(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    fn reset_bytes_read(&self) {
+        self.bytes.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_file(tag: &str, data: &[u8]) -> std::path::PathBuf {
+        let path = std::env::temp_dir()
+            .join(format!("apack_io_{}_{tag}.bin", std::process::id()));
+        std::fs::write(&path, data).unwrap();
+        path
+    }
+
+    fn payload() -> Vec<u8> {
+        (0..4096u32).map(|i| (i * 31 % 251) as u8).collect()
+    }
+
+    #[test]
+    fn both_backends_read_identical_bytes() {
+        let data = payload();
+        let path = temp_file("ident", &data);
+        for backend in [Backend::Mmap, Backend::File] {
+            let src = backend.open(&path).unwrap();
+            assert_eq!(src.len(), data.len() as u64);
+            assert_eq!(src.backend(), backend);
+            let mut buf = vec![0u8; 100];
+            src.read_at(17, &mut buf).unwrap();
+            assert_eq!(&buf[..], &data[17..117], "{backend:?}");
+            // Whole file.
+            let mut all = vec![0u8; data.len()];
+            src.read_at(0, &mut all).unwrap();
+            assert_eq!(all, data, "{backend:?}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn mmap_serves_zero_copy_slices_and_file_does_not() {
+        let data = payload();
+        let path = temp_file("slices", &data);
+        let mm = MmapSource::open(&path).unwrap();
+        let s = mm.slice_at(100, 50).unwrap();
+        assert_eq!(s, &data[100..150]);
+        assert!(mm.slice_at(data.len() as u64 - 10, 11).is_none(), "past EOF");
+        let f = FileSource::open(&path).unwrap();
+        assert!(f.slice_at(0, 10).is_none());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn byte_accounting_per_backend() {
+        let data = payload();
+        let path = temp_file("bytes", &data);
+        let mm = MmapSource::open(&path).unwrap();
+        let mut buf = vec![0u8; 64];
+        mm.read_at(0, &mut buf).unwrap();
+        mm.slice_at(64, 36).unwrap();
+        assert_eq!(mm.bytes_read(), 100);
+        mm.reset_bytes_read();
+        assert_eq!(mm.bytes_read(), 0);
+
+        let f = FileSource::open(&path).unwrap();
+        f.read_at(5, &mut buf).unwrap();
+        assert_eq!(f.bytes_read(), 64);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn reads_past_eof_error_not_truncate() {
+        let data = payload();
+        let path = temp_file("eof", &data);
+        for backend in [Backend::Mmap, Backend::File] {
+            let src = backend.open(&path).unwrap();
+            let mut buf = vec![0u8; 10];
+            assert!(src.read_at(data.len() as u64, &mut buf).is_err(), "{backend:?}");
+            assert!(src.read_at(data.len() as u64 - 5, &mut buf).is_err(), "{backend:?}");
+            assert!(src.read_at(u64::MAX - 2, &mut buf).is_err(), "{backend:?}");
+            // A read that exactly reaches EOF is fine.
+            let mut tail = vec![0u8; 10];
+            src.read_at(data.len() as u64 - 10, &mut tail).unwrap();
+            assert_eq!(&tail[..], &data[data.len() - 10..]);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_file_is_empty_source() {
+        let path = temp_file("empty", &[]);
+        for backend in [Backend::Mmap, Backend::File] {
+            let src = backend.open(&path).unwrap();
+            assert_eq!(src.len(), 0);
+            assert!(src.is_empty());
+            let mut buf = [0u8; 1];
+            assert!(src.read_at(0, &mut buf).is_err());
+            src.read_at(0, &mut [0u8; 0]).unwrap(); // zero-length read is a no-op
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn concurrent_positioned_reads_see_consistent_bytes() {
+        let data = payload();
+        let path = temp_file("conc", &data);
+        for backend in [Backend::Mmap, Backend::File] {
+            let src = backend.open(&path).unwrap();
+            let src = &src;
+            let data = &data;
+            std::thread::scope(|scope| {
+                for t in 0..8usize {
+                    scope.spawn(move || {
+                        for i in 0..200usize {
+                            let off = (t * 97 + i * 13) % (data.len() - 32);
+                            let mut buf = [0u8; 32];
+                            src.read_at(off as u64, &mut buf).unwrap();
+                            assert_eq!(&buf[..], &data[off..off + 32]);
+                        }
+                    });
+                }
+            });
+            assert_eq!(src.bytes_read(), 8 * 200 * 32);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn backend_parse_roundtrip() {
+        assert_eq!(Backend::parse("mmap").unwrap(), Backend::Mmap);
+        assert_eq!(Backend::parse("FILE").unwrap(), Backend::File);
+        assert!(Backend::parse("io_uring").is_err());
+        assert_eq!(Backend::default().name(), "mmap");
+        assert_eq!(Backend::File.name(), "file");
+    }
+}

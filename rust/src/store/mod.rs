@@ -2,30 +2,86 @@
 //!
 //! APack's premise is that compressed tensors live *at rest* and are
 //! decoded on demand on the DRAM path (paper §V). This module turns the
-//! codec into that servable artifact: one file holds many named tensors,
-//! each split into independently decodable fixed-value-count chunks
-//! (sharded by [`crate::coordinator::PartitionPolicy`], like the
-//! substreams the replicated hardware engines consume) with one shared
+//! codec into that servable artifact: named tensors split into
+//! independently decodable fixed-value-count chunks (sharded by
+//! [`crate::coordinator::PartitionPolicy`], like the substreams the
+//! replicated hardware engines consume) with one shared
 //! [`crate::apack::SymbolTable`] per tensor stored exactly once in the
 //! footer index.
 //!
-//! - [`format`] — the on-disk layout: magic, chunk blobs, footer index
-//!   with per-chunk CRC32s, fixed trailer. See its module docs for the
-//!   byte-level specification.
+//! # Store layouts
+//!
+//! A store is either **one file** or a **sharded directory**; both are
+//! opened uniformly through [`StoreHandle`]:
+//!
+//! ```text
+//! single file:   model.apackstore           (format.rs: magic | chunk
+//!                                            blobs | footer index | trailer)
+//!
+//! sharded dir:   model.apackstore.d/
+//!                  MANIFEST                 (shard.rs: magic | shard_count
+//!                                            | per-shard records | crc32)
+//!                  shard-000.apackstore     (each a complete single-file
+//!                  shard-001.apackstore      store; tensors routed here by
+//!                  ...                       FNV-1a name hash)
+//! ```
+//!
+//! Tensors are hash-partitioned across shard files by
+//! [`shard_for_name`]; the shard count scales with content via
+//! [`crate::coordinator::PartitionPolicy::file_shards_for`]. Each shard is
+//! self-contained, so shards verify in parallel and can later be placed on
+//! different nodes.
+//!
+//! # The `ChunkSource` contract
+//!
+//! All chunk IO flows through the [`ChunkSource`] trait ([`io`]):
+//! positioned `read_at(offset, len)` reads, `Sync`, and **no interior
+//! mutex on the read path** — concurrent `get_range` calls never serialize
+//! on IO. Two backends implement it: [`MmapSource`] ([`Backend::Mmap`],
+//! the default) serves zero-copy slices of a read-only mapping, and
+//! [`FileSource`] ([`Backend::File`]) issues one `pread`-style positioned
+//! read per chunk. Both count bytes per backend so the paths are
+//! comparable in one run.
+//!
+//! # The `StoreHandle` contract
+//!
+//! [`StoreHandle`] is the single type every consumer (CLI, eval report,
+//! benches, serving example) holds. It presents the same surface over
+//! either layout — `get_tensor` / `get_chunk` / `get_range` / `meta` /
+//! `stats` / `verify` / `clear_cache` — with identical semantics:
+//! bit-exact decode, reads touch only covering chunks, every read is
+//! CRC-checked, stats aggregate across shards.
+//!
+//! # Submodules
+//!
+//! - [`format`] — single-file on-disk layout: magic, chunk blobs, footer
+//!   index with per-chunk CRC32s, fixed trailer.
+//! - [`io`] — [`ChunkSource`] and the mmap / positioned-file backends.
 //! - [`writer`] — [`StoreWriter`] (streaming, parallel chunk encode) and
 //!   [`pack_model_zoo`] (the 24 Table-II models into one store).
-//! - [`reader`] — [`StoreReader`]: `get_tensor` / `get_chunk` /
-//!   `get_range` decode only the chunks they touch, in parallel, with
-//!   corruption detection on every read and byte-accounted I/O stats.
+//! - [`shard`] — the MANIFEST format, [`ShardedStoreWriter`] /
+//!   [`ShardedStoreReader`], and [`pack_model_zoo_sharded`].
+//! - [`reader`] — [`StoreReader`]: lock-free random access over one file
+//!   with corruption detection on every read and byte-accounted IO stats.
+//! - [`handle`] — [`StoreHandle`], the uniform entry point.
 //! - [`cache`] — [`ChunkCache`], the bounded LRU of decoded chunks behind
-//!   the reader's hot path.
+//!   the readers' hot path.
 
 pub mod cache;
 pub mod format;
+pub mod handle;
+pub mod io;
 pub mod reader;
+pub mod shard;
 pub mod writer;
 
 pub use cache::ChunkCache;
 pub use format::{crc32, ChunkMeta, StoreIndex, TensorMeta};
+pub use handle::StoreHandle;
+pub use io::{Backend, ChunkSource, FileSource, MmapSource};
 pub use reader::{ReadStats, StoreReader, VerifyReport, DEFAULT_CACHE_VALUES};
-pub use writer::{pack_model_zoo, StoreSummary, StoreWriter};
+pub use shard::{
+    pack_model_zoo_sharded, shard_file_name, shard_for_name, ShardEntry, ShardManifest,
+    ShardedStoreReader, ShardedStoreSummary, ShardedStoreWriter, MANIFEST_FILE,
+};
+pub use writer::{pack_model_zoo, zoo_value_estimate, StoreSummary, StoreWriter};

@@ -2,18 +2,19 @@
 //!
 //! `get_tensor`, `get_chunk` and `get_range` decode **only the chunks they
 //! touch**: the footer index maps a value range to chunk indices in O(1)
-//! (fixed values per chunk), each chunk blob is read with one positioned
-//! read and CRC-checked, and decompression fans out over
-//! [`crate::util::par_map`] — the software mirror of the replicated
-//! decode engines on the DRAM path (paper §V-B). A bounded LRU
-//! ([`super::ChunkCache`]) keeps hot decoded chunks resident.
+//! (fixed values per chunk), each chunk blob is fetched with one positioned
+//! read through a [`ChunkSource`] backend and CRC-checked, and
+//! decompression fans out over [`crate::util::par_map`] — the software
+//! mirror of the replicated decode engines on the DRAM path (paper §V-B).
+//! A bounded LRU ([`super::ChunkCache`]) keeps hot decoded chunks resident.
 //!
-//! The reader is `Sync`: file I/O goes through a mutex (positioned reads
-//! are short; the arithmetic decode outside the lock dominates), so many
-//! threads can serve requests from one open store.
+//! The reader is `Sync` **with no IO lock**: chunk bytes come from a
+//! [`ChunkSource`] whose `read_at`/`slice_at` are positioned and lock-free
+//! (mmap zero-copy by default, `pread` on the file backend), so concurrent
+//! `get_range` calls never serialize on IO. The only mutex left guards the
+//! LRU cache, which is touched for nanoseconds per read.
 
-use std::fs::File;
-use std::io::{Read, Seek, SeekFrom};
+use std::borrow::Cow;
 use std::ops::Range;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -27,16 +28,20 @@ use super::cache::{ChunkCache, ChunkKey};
 use super::format::{
     crc32, parse_trailer, StoreIndex, TensorMeta, STORE_MAGIC, TRAILER_BYTES,
 };
+use super::io::{Backend, ChunkSource};
 
 /// Default cache budget: 4M values (16 MiB of decoded u32s).
 pub const DEFAULT_CACHE_VALUES: usize = 4 << 20;
 
 /// Cumulative read-path counters (chunk I/O only; the one-time open cost
 /// of footer + trailer is excluded so tests can assert exact per-read
-/// byte accounting).
+/// byte accounting). `backend` identifies which IO path served the bytes,
+/// so mmap and file runs are comparable side by side.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct ReadStats {
-    /// Compressed chunk bytes fetched from disk.
+    /// IO backend the bytes came through.
+    pub backend: Backend,
+    /// Compressed chunk bytes fetched from the source.
     pub bytes_read: u64,
     /// Chunks arithmetic-decoded (cache misses).
     pub chunks_decoded: u64,
@@ -44,22 +49,54 @@ pub struct ReadStats {
     pub cache_misses: u64,
 }
 
+impl ReadStats {
+    /// Cache hit rate in `[0, 1]` (0 when nothing was looked up yet).
+    pub fn hit_rate(&self) -> f64 {
+        let lookups = self.cache_hits + self.cache_misses;
+        if lookups == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / lookups as f64
+        }
+    }
+
+    /// Fold another reader's counters into this one (sharded stores
+    /// aggregate per-shard readers; backends match by construction).
+    pub fn merge(&mut self, other: &ReadStats) {
+        self.bytes_read += other.bytes_read;
+        self.chunks_decoded += other.chunks_decoded;
+        self.cache_hits += other.cache_hits;
+        self.cache_misses += other.cache_misses;
+    }
+}
+
 /// Result of [`StoreReader::verify`].
 #[derive(Debug, Clone, Copy, Default)]
 pub struct VerifyReport {
+    /// Shard files checked (1 for a single-file store).
+    pub shards: usize,
     pub tensors: usize,
     pub chunks: usize,
     pub bytes: u64,
 }
 
+impl VerifyReport {
+    /// Fold a per-shard report into an aggregate.
+    pub fn merge(&mut self, other: &VerifyReport) {
+        self.shards += other.shards;
+        self.tensors += other.tensors;
+        self.chunks += other.chunks;
+        self.bytes += other.bytes;
+    }
+}
+
 /// A read-only handle on one APackStore file.
 pub struct StoreReader {
-    io: Mutex<File>,
+    source: Box<dyn ChunkSource>,
     index: StoreIndex,
     /// First byte past the chunk region (chunks must end before this).
     chunk_region_end: u64,
     cache: Mutex<ChunkCache>,
-    bytes_read: AtomicU64,
     chunks_decoded: AtomicU64,
     cache_hits: AtomicU64,
     cache_misses: AtomicU64,
@@ -67,15 +104,21 @@ pub struct StoreReader {
 
 impl StoreReader {
     /// Open and validate a store: magic, trailer, footer CRC, index
-    /// invariants, and chunk-extent bounds. Uses the default cache budget.
+    /// invariants, and chunk-extent bounds. Uses the default (mmap)
+    /// backend and cache budget.
     pub fn open(path: &Path) -> Result<Self> {
-        Self::with_cache_capacity(path, DEFAULT_CACHE_VALUES)
+        Self::open_with(path, Backend::default(), DEFAULT_CACHE_VALUES)
     }
 
     /// Open with an explicit cache budget in values (0 disables caching).
     pub fn with_cache_capacity(path: &Path, cache_values: usize) -> Result<Self> {
-        let mut file = File::open(path)?;
-        let file_len = file.metadata()?.len();
+        Self::open_with(path, Backend::default(), cache_values)
+    }
+
+    /// Open with an explicit IO backend and cache budget.
+    pub fn open_with(path: &Path, backend: Backend, cache_values: usize) -> Result<Self> {
+        let source = backend.open(path)?;
+        let file_len = source.len();
         let min_len = (STORE_MAGIC.len() + TRAILER_BYTES) as u64;
         if file_len < min_len {
             return Err(Error::Store(format!(
@@ -83,14 +126,12 @@ impl StoreReader {
             )));
         }
         let mut magic = [0u8; 8];
-        file.seek(SeekFrom::Start(0))?;
-        file.read_exact(&mut magic)?;
+        source.read_at(0, &mut magic)?;
         if magic != STORE_MAGIC {
             return Err(Error::Store("bad store magic".into()));
         }
         let mut trailer_buf = [0u8; TRAILER_BYTES];
-        file.seek(SeekFrom::End(-(TRAILER_BYTES as i64)))?;
-        file.read_exact(&mut trailer_buf)?;
+        source.read_at(file_len - TRAILER_BYTES as u64, &mut trailer_buf)?;
         let trailer = parse_trailer(&trailer_buf)?;
         let footer_end = trailer
             .footer_offset
@@ -105,8 +146,7 @@ impl StoreReader {
             )));
         }
         let mut footer = vec![0u8; trailer.footer_len as usize];
-        file.seek(SeekFrom::Start(trailer.footer_offset))?;
-        file.read_exact(&mut footer)?;
+        source.read_at(trailer.footer_offset, &mut footer)?;
         if crc32(&footer) != trailer.footer_crc {
             return Err(Error::Store("footer CRC mismatch".into()));
         }
@@ -129,16 +169,22 @@ impl StoreReader {
                 }
             }
         }
+        // Open-time IO (magic + trailer + footer) is excluded from stats.
+        source.reset_bytes_read();
         Ok(Self {
-            io: Mutex::new(file),
+            source,
             index,
             chunk_region_end: trailer.footer_offset,
             cache: Mutex::new(ChunkCache::new(cache_values)),
-            bytes_read: AtomicU64::new(0),
             chunks_decoded: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
             cache_misses: AtomicU64::new(0),
         })
+    }
+
+    /// The IO backend serving this reader.
+    pub fn backend(&self) -> Backend {
+        self.source.backend()
     }
 
     /// All tensor names, in write order.
@@ -163,24 +209,27 @@ impl StoreReader {
         &self.index
     }
 
-    /// Read one chunk's compressed blob and verify its CRC.
-    fn read_chunk_bytes(&self, t: &TensorMeta, ci: usize) -> Result<Vec<u8>> {
+    /// One chunk's compressed blob, CRC-verified. Served as a zero-copy
+    /// slice of the mapping when the backend supports it, otherwise read
+    /// into a fresh buffer.
+    fn read_chunk_bytes(&self, t: &TensorMeta, ci: usize) -> Result<Cow<'_, [u8]>> {
         let c = &t.chunks[ci];
         debug_assert!(c.offset + c.len <= self.chunk_region_end);
-        let mut buf = vec![0u8; c.len as usize];
-        {
-            let mut io = self.io.lock().expect("store io lock");
-            io.seek(SeekFrom::Start(c.offset))?;
-            io.read_exact(&mut buf)?;
-        }
-        self.bytes_read.fetch_add(c.len, Ordering::Relaxed);
-        if crc32(&buf) != c.crc32 {
+        let blob: Cow<'_, [u8]> = match self.source.slice_at(c.offset, c.len as usize) {
+            Some(slice) => Cow::Borrowed(slice),
+            None => {
+                let mut buf = vec![0u8; c.len as usize];
+                self.source.read_at(c.offset, &mut buf)?;
+                Cow::Owned(buf)
+            }
+        };
+        if crc32(&blob) != c.crc32 {
             return Err(Error::Store(format!(
                 "tensor {}: chunk {ci} CRC mismatch — data corrupted",
                 t.name
             )));
         }
-        Ok(buf)
+        Ok(blob)
     }
 
     /// Decoded values of chunk `ci` of tensor index `ti`, via the cache.
@@ -194,6 +243,7 @@ impl StoreReader {
         let t = &self.index.tensors[ti];
         let blob = self.read_chunk_bytes(t, ci)?;
         let container = Container::body_from_bytes(t.table.clone(), &blob)?;
+        drop(blob);
         if container.n_values != t.chunks[ci].n_values {
             return Err(Error::Store(format!(
                 "tensor {}: chunk {ci} holds {} values, index says {}",
@@ -263,38 +313,49 @@ impl StoreReader {
 
     /// Re-read and decode every chunk of every tensor, checking CRCs and
     /// value counts. Bypasses the cache (this is an integrity pass over
-    /// the bytes on disk, not over what happens to be resident).
+    /// the bytes on disk, not over what happens to be resident). All
+    /// (tensor, chunk) pairs fan out over one `par_map`, so a store of
+    /// many small tensors verifies as fast as one big tensor.
     pub fn verify(&self) -> Result<VerifyReport> {
-        let mut report = VerifyReport { tensors: self.index.tensors.len(), ..Default::default() };
-        for t in &self.index.tensors {
-            let indices: Vec<usize> = (0..t.chunks.len()).collect();
-            let checks: Result<Vec<u64>> = par_map(&indices, |&ci| {
-                let blob = self.read_chunk_bytes(t, ci)?;
-                let container = Container::body_from_bytes(t.table.clone(), &blob)?;
-                let values = container.decode()?;
-                if values.len() as u64 != t.chunks[ci].n_values {
-                    return Err(Error::Store(format!(
-                        "tensor {}: chunk {ci} decoded {} values, index says {}",
-                        t.name,
-                        values.len(),
-                        t.chunks[ci].n_values
-                    )));
-                }
-                Ok(blob.len() as u64)
-            })
-            .into_iter()
+        let jobs: Vec<(usize, usize)> = self
+            .index
+            .tensors
+            .iter()
+            .enumerate()
+            .flat_map(|(ti, t)| (0..t.chunks.len()).map(move |ci| (ti, ci)))
             .collect();
-            let bytes: u64 = checks?.iter().sum();
-            report.chunks += t.chunks.len();
-            report.bytes += bytes;
-        }
-        Ok(report)
+        let checks: Result<Vec<u64>> = par_map(&jobs, |&(ti, ci)| {
+            let t = &self.index.tensors[ti];
+            let blob = self.read_chunk_bytes(t, ci)?;
+            let blob_len = blob.len() as u64;
+            let container = Container::body_from_bytes(t.table.clone(), &blob)?;
+            drop(blob);
+            let values = container.decode()?;
+            if values.len() as u64 != t.chunks[ci].n_values {
+                return Err(Error::Store(format!(
+                    "tensor {}: chunk {ci} decoded {} values, index says {}",
+                    t.name,
+                    values.len(),
+                    t.chunks[ci].n_values
+                )));
+            }
+            Ok(blob_len)
+        })
+        .into_iter()
+        .collect();
+        Ok(VerifyReport {
+            shards: 1,
+            tensors: self.index.tensors.len(),
+            chunks: jobs.len(),
+            bytes: checks?.iter().sum(),
+        })
     }
 
     /// Snapshot the cumulative read counters.
     pub fn stats(&self) -> ReadStats {
         ReadStats {
-            bytes_read: self.bytes_read.load(Ordering::Relaxed),
+            backend: self.source.backend(),
+            bytes_read: self.source.bytes_read(),
             chunks_decoded: self.chunks_decoded.load(Ordering::Relaxed),
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
@@ -303,7 +364,7 @@ impl StoreReader {
 
     /// Zero the read counters (does not touch the cache).
     pub fn reset_stats(&self) {
-        self.bytes_read.store(0, Ordering::Relaxed);
+        self.source.reset_bytes_read();
         self.chunks_decoded.store(0, Ordering::Relaxed);
         self.cache_hits.store(0, Ordering::Relaxed);
         self.cache_misses.store(0, Ordering::Relaxed);
@@ -341,25 +402,28 @@ mod tests {
     #[test]
     fn chunk_and_range_reads_match_full_decode() {
         let (path, values) = build_store("range", 10_000);
-        let r = StoreReader::open(&path).unwrap();
-        let full = r.get_tensor("t").unwrap();
-        assert_eq!(full, values);
-        let t = r.meta("t").unwrap();
-        assert_eq!(t.chunks.len(), 8);
-        for ci in 0..t.chunks.len() {
-            let covered = t.chunk_value_range(ci);
-            let chunk = r.get_chunk("t", ci).unwrap();
-            assert_eq!(
-                chunk.as_slice(),
-                &values[covered.start as usize..covered.end as usize]
-            );
-        }
-        for (lo, hi) in [(0u64, 1u64), (999, 1001), (1250, 8751), (0, 10_000), (4000, 4000)] {
-            assert_eq!(
-                r.get_range("t", lo..hi).unwrap(),
-                &values[lo as usize..hi as usize],
-                "{lo}..{hi}"
-            );
+        for backend in [Backend::Mmap, Backend::File] {
+            let r = StoreReader::open_with(&path, backend, DEFAULT_CACHE_VALUES).unwrap();
+            assert_eq!(r.backend(), backend);
+            let full = r.get_tensor("t").unwrap();
+            assert_eq!(full, values, "{backend:?}");
+            let t = r.meta("t").unwrap();
+            assert_eq!(t.chunks.len(), 8);
+            for ci in 0..t.chunks.len() {
+                let covered = t.chunk_value_range(ci);
+                let chunk = r.get_chunk("t", ci).unwrap();
+                assert_eq!(
+                    chunk.as_slice(),
+                    &values[covered.start as usize..covered.end as usize]
+                );
+            }
+            for (lo, hi) in [(0u64, 1u64), (999, 1001), (1250, 8751), (0, 10_000), (4000, 4000)] {
+                assert_eq!(
+                    r.get_range("t", lo..hi).unwrap(),
+                    &values[lo as usize..hi as usize],
+                    "{backend:?} {lo}..{hi}"
+                );
+            }
         }
         std::fs::remove_file(&path).ok();
     }
@@ -367,28 +431,31 @@ mod tests {
     #[test]
     fn reads_touch_only_covering_chunks() {
         let (path, _) = build_store("account", 10_000);
-        let r = StoreReader::with_cache_capacity(&path, 0).unwrap(); // no cache
-        let t = r.meta("t").unwrap();
-        let per = t.values_per_chunk as usize;
-        assert_eq!(per, 1250);
-        let chunk_bytes: Vec<u64> = t.chunks.iter().map(|c| c.len).collect();
+        for backend in [Backend::Mmap, Backend::File] {
+            let r = StoreReader::open_with(&path, backend, 0).unwrap(); // no cache
+            let t = r.meta("t").unwrap();
+            let per = t.values_per_chunk as usize;
+            assert_eq!(per, 1250);
+            let chunk_bytes: Vec<u64> = t.chunks.iter().map(|c| c.len).collect();
 
-        // One chunk -> exactly that chunk's bytes.
-        r.reset_stats();
-        r.get_chunk("t", 3).unwrap();
-        assert_eq!(r.stats().bytes_read, chunk_bytes[3]);
-        assert_eq!(r.stats().chunks_decoded, 1);
+            // One chunk -> exactly that chunk's bytes, on either backend.
+            r.reset_stats();
+            r.get_chunk("t", 3).unwrap();
+            assert_eq!(r.stats().bytes_read, chunk_bytes[3], "{backend:?}");
+            assert_eq!(r.stats().chunks_decoded, 1);
+            assert_eq!(r.stats().backend, backend);
 
-        // A range inside chunk 2 -> only chunk 2.
-        r.reset_stats();
-        r.get_range("t", (2 * per) as u64 + 10..(3 * per) as u64 - 10).unwrap();
-        assert_eq!(r.stats().bytes_read, chunk_bytes[2]);
+            // A range inside chunk 2 -> only chunk 2.
+            r.reset_stats();
+            r.get_range("t", (2 * per) as u64 + 10..(3 * per) as u64 - 10).unwrap();
+            assert_eq!(r.stats().bytes_read, chunk_bytes[2], "{backend:?}");
 
-        // A range straddling chunks 4-5 -> exactly those two.
-        r.reset_stats();
-        r.get_range("t", (5 * per - 1) as u64..(5 * per + 1) as u64).unwrap();
-        assert_eq!(r.stats().bytes_read, chunk_bytes[4] + chunk_bytes[5]);
-        assert_eq!(r.stats().chunks_decoded, 2);
+            // A range straddling chunks 4-5 -> exactly those two.
+            r.reset_stats();
+            r.get_range("t", (5 * per - 1) as u64..(5 * per + 1) as u64).unwrap();
+            assert_eq!(r.stats().bytes_read, chunk_bytes[4] + chunk_bytes[5]);
+            assert_eq!(r.stats().chunks_decoded, 2);
+        }
         std::fs::remove_file(&path).ok();
     }
 
@@ -399,11 +466,13 @@ mod tests {
         r.get_chunk("t", 0).unwrap();
         let cold = r.stats();
         assert_eq!(cold.cache_misses, 1);
+        assert_eq!(cold.hit_rate(), 0.0);
         r.get_chunk("t", 0).unwrap();
         let warm = r.stats();
         assert_eq!(warm.cache_hits, 1);
         assert_eq!(warm.bytes_read, cold.bytes_read, "hit must not re-read disk");
         assert_eq!(warm.chunks_decoded, cold.chunks_decoded);
+        assert_eq!(warm.hit_rate(), 0.5);
         std::fs::remove_file(&path).ok();
     }
 
@@ -424,9 +493,37 @@ mod tests {
         let (path, _) = build_store("verify", 5000);
         let r = StoreReader::open(&path).unwrap();
         let rep = r.verify().unwrap();
+        assert_eq!(rep.shards, 1);
         assert_eq!(rep.tensors, 1);
         assert_eq!(rep.chunks, r.meta("t").unwrap().chunks.len());
         assert!(rep.bytes > 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn concurrent_get_range_needs_no_io_lock() {
+        // Many threads over one uncached reader: every byte fetched is a
+        // positioned read with no shared cursor, so results stay correct
+        // under full concurrency (the old Mutex<File> would still be
+        // correct, just serialized — this guards the lock-free path).
+        let (path, values) = build_store("lockfree", 10_000);
+        let r = StoreReader::open_with(&path, Backend::Mmap, 0).unwrap();
+        let r = &r;
+        let values = &values;
+        std::thread::scope(|scope| {
+            for tid in 0..8u64 {
+                scope.spawn(move || {
+                    for i in 0..40u64 {
+                        let lo = (tid * 997 + i * 131) % 9_000;
+                        let hi = lo + 1 + (i * 53) % 1_000;
+                        assert_eq!(
+                            r.get_range("t", lo..hi).unwrap(),
+                            &values[lo as usize..hi as usize]
+                        );
+                    }
+                });
+            }
+        });
         std::fs::remove_file(&path).ok();
     }
 }

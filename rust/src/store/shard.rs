@@ -1,0 +1,589 @@
+//! Sharded APackStore: one logical store hash-partitioned across N shard
+//! files, for models too large (or too hot) for a single file.
+//!
+//! # Directory layout
+//!
+//! ```text
+//! <store-dir>/
+//!   MANIFEST           — see below
+//!   shard-000.apackstore  — a complete single-file APackStore (format.rs)
+//!   shard-001.apackstore
+//!   ...
+//! ```
+//!
+//! Every shard file is a self-contained APackStore (magic, chunk blobs,
+//! footer index, trailer), so each shard verifies, serves and repairs
+//! independently — per-shard parallel verify is just `par_map` over shard
+//! readers. Tensors are routed to shards by an FNV-1a hash of their name
+//! ([`shard_for_name`]); the shard count is clamped to the store's content
+//! by [`crate::coordinator::PartitionPolicy::file_shards_for`], the same
+//! scale-to-content heuristic that sizes substreams within a tensor.
+//!
+//! # Manifest format
+//!
+//! ```text
+//! offset 0   magic, 8 bytes: "APSHMAN1"
+//! offset 8   shard_count u32
+//! then       shard_count × (tensors u32 | file_bytes u64)
+//! EOF - 4    crc32 of all preceding bytes
+//! ```
+//!
+//! Little-endian throughout. Shard file names are derived
+//! ([`shard_file_name`]), not stored. Failure modes are **typed**: a bad
+//! manifest is [`Error::ManifestCorrupt`], a directory whose shard-file
+//! count disagrees with the manifest is [`Error::ShardCountMismatch`], and
+//! an expected shard file that is absent is [`Error::ShardMissing`] — a
+//! torn or mixed-up store directory can never masquerade as a healthy one.
+
+use std::path::{Path, PathBuf};
+
+use crate::apack::tablegen::TensorKind;
+use crate::apack::SymbolTable;
+use crate::coordinator::PartitionPolicy;
+use crate::error::{Error, Result};
+use crate::models::zoo::ModelConfig;
+use crate::util::par_map;
+
+use super::format::{crc32, TensorMeta};
+use super::io::Backend;
+use super::reader::{ReadStats, StoreReader, VerifyReport, DEFAULT_CACHE_VALUES};
+use super::writer::{for_each_zoo_tensor, zoo_value_estimate, StoreSummary, StoreWriter};
+
+/// Manifest file name inside a sharded-store directory.
+pub const MANIFEST_FILE: &str = "MANIFEST";
+
+/// Manifest leading magic ("APSHMAN" + format version digit).
+pub const MANIFEST_MAGIC: [u8; 8] = *b"APSHMAN1";
+
+/// Derived file name of shard `i`.
+pub fn shard_file_name(i: usize) -> String {
+    format!("shard-{i:03}.apackstore")
+}
+
+/// True for names produced by [`shard_file_name`] (directory scans).
+fn is_shard_file_name(name: &str) -> bool {
+    name.starts_with("shard-") && name.ends_with(".apackstore")
+}
+
+/// Shard index a tensor name routes to: FNV-1a over the name, mod `shards`.
+/// Deterministic across runs and platforms, so writer and reader agree
+/// without storing a routing table.
+pub fn shard_for_name(name: &str, shards: usize) -> usize {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in name.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (h % shards.max(1) as u64) as usize
+}
+
+/// One shard's manifest record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardEntry {
+    /// Tensors routed into this shard.
+    pub tensors: u32,
+    /// Shard file size in bytes at seal time.
+    pub file_bytes: u64,
+}
+
+/// The parsed MANIFEST of a sharded store.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ShardManifest {
+    pub entries: Vec<ShardEntry>,
+}
+
+impl ShardManifest {
+    /// Serialize (magic + records + CRC).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(8 + 4 + self.entries.len() * 12 + 4);
+        out.extend_from_slice(&MANIFEST_MAGIC);
+        out.extend_from_slice(&(self.entries.len() as u32).to_le_bytes());
+        for e in &self.entries {
+            out.extend_from_slice(&e.tensors.to_le_bytes());
+            out.extend_from_slice(&e.file_bytes.to_le_bytes());
+        }
+        let crc = crc32(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    /// Parse and validate [`Self::to_bytes`] output.
+    pub fn from_bytes(data: &[u8]) -> Result<Self> {
+        let bad = |m: String| Error::ManifestCorrupt(m);
+        if data.len() < 8 + 4 + 4 {
+            return Err(bad(format!("{} bytes is too short for a manifest", data.len())));
+        }
+        if data[0..8] != MANIFEST_MAGIC {
+            return Err(bad("bad manifest magic".into()));
+        }
+        let count = u32::from_le_bytes(data[8..12].try_into().unwrap()) as usize;
+        if count == 0 {
+            return Err(bad("manifest declares zero shards".into()));
+        }
+        if count > 1 << 16 {
+            return Err(bad(format!("manifest declares {count} shards (absurd)")));
+        }
+        let expect = 8 + 4 + count * 12 + 4;
+        if data.len() != expect {
+            return Err(bad(format!(
+                "manifest is {} bytes, {count} shards need {expect}",
+                data.len()
+            )));
+        }
+        let body = &data[..data.len() - 4];
+        let stored_crc =
+            u32::from_le_bytes(data[data.len() - 4..].try_into().unwrap());
+        if crc32(body) != stored_crc {
+            return Err(bad("manifest CRC mismatch".into()));
+        }
+        let mut entries = Vec::with_capacity(count);
+        for i in 0..count {
+            let pos = 12 + i * 12;
+            entries.push(ShardEntry {
+                tensors: u32::from_le_bytes(data[pos..pos + 4].try_into().unwrap()),
+                file_bytes: u64::from_le_bytes(data[pos + 4..pos + 12].try_into().unwrap()),
+            });
+        }
+        Ok(Self { entries })
+    }
+}
+
+/// Summary returned by [`ShardedStoreWriter::finish`].
+#[derive(Debug, Clone)]
+pub struct ShardedStoreSummary {
+    pub shards: usize,
+    pub tensors: usize,
+    pub chunks: usize,
+    /// Total bytes on disk: all shard files plus the manifest.
+    pub file_bytes: u64,
+    /// Sum of raw (uncompressed) tensor bits.
+    pub raw_bits: u64,
+    pub per_shard: Vec<StoreSummary>,
+}
+
+impl ShardedStoreSummary {
+    /// Whole-store compression ratio vs. raw values.
+    pub fn compression_ratio(&self) -> f64 {
+        self.raw_bits as f64 / (self.file_bytes as f64 * 8.0)
+    }
+}
+
+/// Writes a sharded store: N independent [`StoreWriter`]s, tensors routed
+/// by [`shard_for_name`], sealed with the MANIFEST. Like the single-file
+/// writer, dropping without [`Self::finish`] leaves no manifest, so a torn
+/// write cannot open as a healthy sharded store.
+pub struct ShardedStoreWriter {
+    dir: PathBuf,
+    writers: Vec<StoreWriter>,
+}
+
+impl ShardedStoreWriter {
+    /// Create (or reset) a sharded store directory with `shards` files.
+    /// Stale shard files and manifests from a previous pack are removed,
+    /// so repacking with a different shard count cannot leave a directory
+    /// that fails the count check.
+    pub fn create(dir: &Path, shards: usize, policy: PartitionPolicy) -> Result<Self> {
+        if shards == 0 {
+            return Err(Error::Config("sharded store needs at least one shard".into()));
+        }
+        if shards > 1 << 16 {
+            return Err(Error::Config(format!("{shards} shard files is absurd")));
+        }
+        std::fs::create_dir_all(dir)?;
+        for entry in std::fs::read_dir(dir)? {
+            let entry = entry?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if name == MANIFEST_FILE || is_shard_file_name(&name) {
+                std::fs::remove_file(entry.path())?;
+            }
+        }
+        let writers: Result<Vec<StoreWriter>> = (0..shards)
+            .map(|i| StoreWriter::create(&dir.join(shard_file_name(i)), policy))
+            .collect();
+        Ok(Self { dir: dir.to_path_buf(), writers: writers? })
+    }
+
+    /// Number of shard files.
+    pub fn shard_count(&self) -> usize {
+        self.writers.len()
+    }
+
+    /// Tensors written so far, across all shards.
+    pub fn tensor_count(&self) -> usize {
+        self.writers.iter().map(|w| w.tensor_count()).sum()
+    }
+
+    /// Compress and append a tensor to its home shard, profiling the table
+    /// from the values (duplicate names are rejected by the home shard —
+    /// equal names always route identically).
+    pub fn add_tensor(
+        &mut self,
+        name: &str,
+        bits: u32,
+        values: &[u32],
+        kind: TensorKind,
+    ) -> Result<()> {
+        let s = shard_for_name(name, self.writers.len());
+        self.writers[s].add_tensor(name, bits, values, kind)
+    }
+
+    /// Compress and append a tensor with a prebuilt table.
+    pub fn add_tensor_with_table(
+        &mut self,
+        name: &str,
+        values: &[u32],
+        kind: TensorKind,
+        table: SymbolTable,
+    ) -> Result<()> {
+        let s = shard_for_name(name, self.writers.len());
+        self.writers[s].add_tensor_with_table(name, values, kind, table)
+    }
+
+    /// Seal every shard file, then write the MANIFEST. The store is only
+    /// openable as a sharded store after this returns.
+    pub fn finish(self) -> Result<ShardedStoreSummary> {
+        let mut per_shard = Vec::with_capacity(self.writers.len());
+        for w in self.writers {
+            per_shard.push(w.finish()?);
+        }
+        let manifest = ShardManifest {
+            entries: per_shard
+                .iter()
+                .map(|s| ShardEntry { tensors: s.tensors as u32, file_bytes: s.file_bytes })
+                .collect(),
+        };
+        let manifest_bytes = manifest.to_bytes();
+        std::fs::write(self.dir.join(MANIFEST_FILE), &manifest_bytes)?;
+        Ok(ShardedStoreSummary {
+            shards: per_shard.len(),
+            tensors: per_shard.iter().map(|s| s.tensors).sum(),
+            chunks: per_shard.iter().map(|s| s.chunks).sum(),
+            file_bytes: per_shard.iter().map(|s| s.file_bytes).sum::<u64>()
+                + manifest_bytes.len() as u64,
+            raw_bits: per_shard.iter().map(|s| s.raw_bits).sum(),
+            per_shard,
+        })
+    }
+}
+
+/// Read-only handle on a sharded store directory: the same
+/// `get_tensor` / `get_chunk` / `get_range` / `stats` / `verify` surface
+/// as [`StoreReader`], routed by tensor-name hash. Lookups are O(1): the
+/// name hashes straight to its home shard, whose own footer index resolves
+/// it.
+pub struct ShardedStoreReader {
+    readers: Vec<StoreReader>,
+}
+
+impl ShardedStoreReader {
+    /// Open with the default (mmap) backend and cache budget.
+    pub fn open(dir: &Path) -> Result<Self> {
+        Self::open_with(dir, Backend::default(), DEFAULT_CACHE_VALUES)
+    }
+
+    /// Open and cross-validate manifest vs. directory vs. shard footers.
+    /// The cache budget is split evenly across shards.
+    pub fn open_with(dir: &Path, backend: Backend, cache_values: usize) -> Result<Self> {
+        let manifest_path = dir.join(MANIFEST_FILE);
+        let manifest_bytes = std::fs::read(&manifest_path).map_err(|e| {
+            Error::ManifestCorrupt(format!("cannot read {}: {e}", manifest_path.display()))
+        })?;
+        let manifest = ShardManifest::from_bytes(&manifest_bytes)?;
+        let n = manifest.entries.len();
+
+        // The directory must hold exactly the manifest's shard files: a
+        // different count means a torn pack or a mixed-up directory.
+        let mut found = 0usize;
+        for entry in std::fs::read_dir(dir)? {
+            let name = entry?.file_name();
+            if is_shard_file_name(&name.to_string_lossy()) {
+                found += 1;
+            }
+        }
+        if found != n {
+            return Err(Error::ShardCountMismatch { manifest: n, found });
+        }
+        for i in 0..n {
+            if !dir.join(shard_file_name(i)).is_file() {
+                return Err(Error::ShardMissing { shard: shard_file_name(i) });
+            }
+        }
+
+        let per_shard_cache = cache_values / n;
+        let mut readers = Vec::with_capacity(n);
+        for (i, entry) in manifest.entries.iter().enumerate() {
+            let path = dir.join(shard_file_name(i));
+            let disk = std::fs::metadata(&path)?.len();
+            if disk != entry.file_bytes {
+                return Err(Error::ManifestCorrupt(format!(
+                    "shard {i} is {disk} bytes on disk, manifest says {}",
+                    entry.file_bytes
+                )));
+            }
+            let reader = StoreReader::open_with(&path, backend, per_shard_cache)?;
+            if reader.tensor_count() != entry.tensors as usize {
+                return Err(Error::ManifestCorrupt(format!(
+                    "shard {i} holds {} tensors, manifest says {}",
+                    reader.tensor_count(),
+                    entry.tensors
+                )));
+            }
+            for name in reader.tensor_names() {
+                if shard_for_name(name, n) != i {
+                    return Err(Error::Store(format!(
+                        "tensor {name:?} found in shard {i} but routes to shard {} — \
+                         shard files shuffled?",
+                        shard_for_name(name, n)
+                    )));
+                }
+            }
+            readers.push(reader);
+        }
+        Ok(Self { readers })
+    }
+
+    /// The IO backend serving every shard.
+    pub fn backend(&self) -> Backend {
+        self.readers[0].backend()
+    }
+
+    /// Number of shard files.
+    pub fn shard_count(&self) -> usize {
+        self.readers.len()
+    }
+
+    /// Per-shard readers, in shard order (report/eval introspection).
+    pub fn shard_readers(&self) -> &[StoreReader] {
+        &self.readers
+    }
+
+    /// All tensor names: shard order, write order within each shard.
+    pub fn tensor_names(&self) -> Vec<&str> {
+        self.readers.iter().flat_map(|r| r.tensor_names()).collect()
+    }
+
+    /// Total tensors across shards.
+    pub fn tensor_count(&self) -> usize {
+        self.readers.iter().map(|r| r.tensor_count()).sum()
+    }
+
+    /// Every tensor's footer entry, shard order.
+    pub fn tensor_metas(&self) -> Vec<&TensorMeta> {
+        self.readers.iter().flat_map(|r| r.index().tensors.iter()).collect()
+    }
+
+    /// The shard reader owning `name`.
+    fn home(&self, name: &str) -> &StoreReader {
+        &self.readers[shard_for_name(name, self.readers.len())]
+    }
+
+    /// Metadata for one tensor.
+    pub fn meta(&self, name: &str) -> Result<&TensorMeta> {
+        self.home(name).meta(name)
+    }
+
+    /// Decode one chunk of a tensor (CRC-checked, cache-assisted).
+    pub fn get_chunk(&self, name: &str, ci: usize) -> Result<std::sync::Arc<Vec<u32>>> {
+        self.home(name).get_chunk(name, ci)
+    }
+
+    /// Decode a full tensor.
+    pub fn get_tensor(&self, name: &str) -> Result<Vec<u32>> {
+        self.home(name).get_tensor(name)
+    }
+
+    /// Decode a value range of a tensor.
+    pub fn get_range(&self, name: &str, range: std::ops::Range<u64>) -> Result<Vec<u32>> {
+        self.home(name).get_range(name, range)
+    }
+
+    /// Aggregate read counters across shards (one shared backend).
+    pub fn stats(&self) -> ReadStats {
+        let mut agg = ReadStats { backend: self.backend(), ..Default::default() };
+        for r in &self.readers {
+            agg.merge(&r.stats());
+        }
+        agg
+    }
+
+    /// Zero every shard's read counters.
+    pub fn reset_stats(&self) {
+        for r in &self.readers {
+            r.reset_stats();
+        }
+    }
+
+    /// Drop every shard's cached chunks.
+    pub fn clear_cache(&self) {
+        for r in &self.readers {
+            r.clear_cache();
+        }
+    }
+
+    /// Integrity pass over every shard **in parallel** (each shard further
+    /// fans its chunks out): re-read, CRC-check and decode everything.
+    pub fn verify(&self) -> Result<VerifyReport> {
+        let reports: Result<Vec<VerifyReport>> =
+            par_map(&self.readers, |r| r.verify()).into_iter().collect();
+        let mut agg = VerifyReport::default();
+        for rep in reports? {
+            agg.merge(&rep);
+        }
+        Ok(agg)
+    }
+}
+
+/// Pack the zoo into a sharded store at `dir`. `requested_shards` is
+/// clamped to the store's estimated content by
+/// [`PartitionPolicy::file_shards_for`] (a tiny store collapses to fewer
+/// files), mirroring how substream counts scale within a tensor.
+pub fn pack_model_zoo_sharded(
+    dir: &Path,
+    models: &[ModelConfig],
+    sample_cap: usize,
+    policy: PartitionPolicy,
+    requested_shards: usize,
+) -> Result<ShardedStoreSummary> {
+    let shards = policy.file_shards_for(requested_shards, zoo_value_estimate(models, sample_cap));
+    let mut writer = ShardedStoreWriter::create(dir, shards, policy)?;
+    for_each_zoo_tensor(models, sample_cap, |name, bits, values, kind, table| match table {
+        Some(t) => writer.add_tensor_with_table(name, values, kind, t),
+        None => writer.add_tensor(name, bits, values, kind),
+    })?;
+    writer.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::distributions::ValueProfile;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("apack_shard_{}_{tag}.apackstore.d", std::process::id()))
+    }
+
+    fn tensor(n: usize, seed: u64) -> Vec<u32> {
+        ValueProfile::ReluActivation { sparsity: 0.5, q: 0.93, noise_floor: 0.01 }
+            .sample(8, n, seed)
+    }
+
+    #[test]
+    fn manifest_roundtrip_and_rejection() {
+        let m = ShardManifest {
+            entries: vec![
+                ShardEntry { tensors: 3, file_bytes: 1234 },
+                ShardEntry { tensors: 0, file_bytes: 40 },
+            ],
+        };
+        let bytes = m.to_bytes();
+        assert_eq!(ShardManifest::from_bytes(&bytes).unwrap(), m);
+
+        // Any single-byte flip is caught (magic, counts, records or CRC).
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x40;
+            assert!(
+                matches!(ShardManifest::from_bytes(&bad), Err(Error::ManifestCorrupt(_))),
+                "flip at {i}"
+            );
+        }
+        // Truncations too.
+        for keep in [0, 4, 11, bytes.len() - 1] {
+            assert!(matches!(
+                ShardManifest::from_bytes(&bytes[..keep]),
+                Err(Error::ManifestCorrupt(_))
+            ));
+        }
+    }
+
+    #[test]
+    fn routing_is_deterministic_and_in_range() {
+        for shards in 1..=8usize {
+            for name in ["a", "m/layer000/weights", "m/layer001/activations", ""] {
+                let s = shard_for_name(name, shards);
+                assert!(s < shards);
+                assert_eq!(s, shard_for_name(name, shards), "stable");
+            }
+        }
+        // The zoo-style names actually spread across 4 shards.
+        let mut used = [false; 4];
+        for i in 0..64 {
+            used[shard_for_name(&format!("model/layer{i:03}/weights"), 4)] = true;
+        }
+        assert!(used.iter().all(|&u| u), "hash must use every shard: {used:?}");
+    }
+
+    #[test]
+    fn sharded_write_read_roundtrip() {
+        let dir = temp_dir("roundtrip");
+        let policy = PartitionPolicy { substreams: 4, min_per_stream: 128 };
+        let mut w = ShardedStoreWriter::create(&dir, 3, policy).unwrap();
+        let tensors: Vec<(String, Vec<u32>)> =
+            (0..10).map(|i| (format!("t{i:02}"), tensor(2000 + 517 * i, i as u64))).collect();
+        for (name, v) in &tensors {
+            w.add_tensor(name, 8, v, TensorKind::Weights).unwrap();
+        }
+        assert_eq!(w.tensor_count(), 10);
+        let summary = w.finish().unwrap();
+        assert_eq!(summary.shards, 3);
+        assert_eq!(summary.tensors, 10);
+        assert!(summary.compression_ratio() > 1.0);
+
+        let r = ShardedStoreReader::open(&dir).unwrap();
+        assert_eq!(r.shard_count(), 3);
+        assert_eq!(r.tensor_count(), 10);
+        for (name, v) in &tensors {
+            assert_eq!(&r.get_tensor(name).unwrap(), v, "{name}");
+            let meta = r.meta(name).unwrap();
+            assert_eq!(meta.n_values, v.len() as u64);
+        }
+        assert!(r.get_tensor("absent").is_err());
+        let rep = r.verify().unwrap();
+        assert_eq!(rep.shards, 3);
+        assert_eq!(rep.tensors, 10);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn duplicate_names_rejected_across_shards() {
+        let dir = temp_dir("dup");
+        let mut w =
+            ShardedStoreWriter::create(&dir, 4, PartitionPolicy::default()).unwrap();
+        let v = tensor(500, 9);
+        w.add_tensor("same", 8, &v, TensorKind::Weights).unwrap();
+        assert!(w.add_tensor("same", 8, &v, TensorKind::Weights).is_err());
+        drop(w);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unfinished_sharded_store_is_unopenable() {
+        let dir = temp_dir("torn");
+        let mut w =
+            ShardedStoreWriter::create(&dir, 2, PartitionPolicy::default()).unwrap();
+        w.add_tensor("x", 8, &tensor(3000, 4), TensorKind::Weights).unwrap();
+        drop(w); // no finish(): no MANIFEST
+        assert!(matches!(
+            ShardedStoreReader::open(&dir),
+            Err(Error::ManifestCorrupt(_))
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn repack_with_fewer_shards_cleans_stale_files() {
+        let dir = temp_dir("repack");
+        let policy = PartitionPolicy { substreams: 2, min_per_stream: 64 };
+        let mut w = ShardedStoreWriter::create(&dir, 4, policy).unwrap();
+        w.add_tensor("a", 8, &tensor(1000, 1), TensorKind::Weights).unwrap();
+        w.finish().unwrap();
+        // Repack with 2 shards into the same directory.
+        let mut w = ShardedStoreWriter::create(&dir, 2, policy).unwrap();
+        w.add_tensor("a", 8, &tensor(1000, 1), TensorKind::Weights).unwrap();
+        w.finish().unwrap();
+        let r = ShardedStoreReader::open(&dir).unwrap();
+        assert_eq!(r.shard_count(), 2, "stale shard-002/003 must be gone");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

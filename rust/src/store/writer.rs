@@ -157,28 +157,28 @@ impl StoreWriter {
     }
 }
 
-/// Pack synthesized traces of `models` into one store — the Table II zoo
-/// as a servable artifact. Per layer, weights are stored under
-/// `"{model}/layer{i:03}/weights"` with a self-profiled table; studied
-/// activations go under `".../activations"` with a table profiled on the
-/// pooled samples and applied to the fresh tensor (paper §VII
-/// methodology). `sample_cap` bounds values per tensor, exactly like the
-/// evaluation studies.
-pub fn pack_model_zoo(
-    path: &Path,
+/// Stream every zoo tensor of `models` into `add` — the shared iteration
+/// behind [`pack_model_zoo`] and [`super::shard::pack_model_zoo_sharded`].
+/// Per layer, weights go under `"{model}/layer{i:03}/weights"` (table
+/// profiled from the values themselves); studied activations go under
+/// `".../activations"` with a table profiled on the pooled samples and
+/// applied to the fresh tensor (paper §VII methodology), passed to `add`
+/// as the prebuilt table. `sample_cap` bounds values per tensor, exactly
+/// like the evaluation studies.
+pub(crate) fn for_each_zoo_tensor(
     models: &[ModelConfig],
     sample_cap: usize,
-    policy: PartitionPolicy,
-) -> Result<StoreSummary> {
-    let mut writer = StoreWriter::create(path, policy)?;
+    mut add: impl FnMut(&str, u32, &[u32], TensorKind, Option<SymbolTable>) -> Result<()>,
+) -> Result<()> {
     for cfg in models {
         let trace = ModelTrace::synthesize(cfg, sample_cap, PROFILE_SAMPLES, EVAL_SEED);
         for l in &trace.layers {
-            writer.add_tensor(
+            add(
                 &format!("{}/layer{:03}/weights", cfg.name, l.layer_idx),
                 l.bits,
                 &l.weights,
                 TensorKind::Weights,
+                None,
             )?;
             if !l.activations.is_empty() {
                 let hist = Histogram::from_values(l.bits, &l.act_profile_samples);
@@ -187,15 +187,59 @@ pub fn pack_model_zoo(
                     TensorKind::Activations,
                     &TableGenConfig::for_bits(l.bits),
                 )?;
-                writer.add_tensor_with_table(
+                add(
                     &format!("{}/layer{:03}/activations", cfg.name, l.layer_idx),
+                    l.bits,
                     &l.activations,
                     TensorKind::Activations,
-                    table,
+                    Some(table),
                 )?;
             }
         }
     }
+    Ok(())
+}
+
+/// Estimate of the total values `pack_model_zoo`/`pack_model_zoo_sharded`
+/// will store for `models` at `sample_cap` — weights plus studied
+/// activations, both sample-capped. Used to clamp the shard-file count
+/// before any trace is synthesized
+/// ([`PartitionPolicy::file_shards_for`]).
+pub fn zoo_value_estimate(models: &[ModelConfig], sample_cap: usize) -> u64 {
+    let cap = sample_cap as u64;
+    models
+        .iter()
+        .map(|cfg| {
+            cfg.layers
+                .iter()
+                .map(|l| {
+                    let w = l.weight_elems().min(cap);
+                    let a = if cfg.act_profile.is_some() {
+                        l.input_elems().min(cap)
+                    } else {
+                        0
+                    };
+                    w + a
+                })
+                .sum::<u64>()
+        })
+        .sum()
+}
+
+/// Pack synthesized traces of `models` into one store — the Table II zoo
+/// as a servable artifact (see [`for_each_zoo_tensor`] for the naming and
+/// table-profiling scheme).
+pub fn pack_model_zoo(
+    path: &Path,
+    models: &[ModelConfig],
+    sample_cap: usize,
+    policy: PartitionPolicy,
+) -> Result<StoreSummary> {
+    let mut writer = StoreWriter::create(path, policy)?;
+    for_each_zoo_tensor(models, sample_cap, |name, bits, values, kind, table| match table {
+        Some(t) => writer.add_tensor_with_table(name, values, kind, t),
+        None => writer.add_tensor(name, bits, values, kind),
+    })?;
     writer.finish()
 }
 

@@ -10,8 +10,12 @@ use apack_repro::apack::{Container, SymbolTable};
 use apack_repro::coordinator::PartitionPolicy;
 use apack_repro::runtime::ArtifactManifest;
 use apack_repro::store::format::{crc32, trailer_bytes, StoreIndex, TRAILER_BYTES};
-use apack_repro::store::{StoreReader, StoreWriter};
+use apack_repro::store::{
+    shard_file_name, shard_for_name, ShardedStoreReader, ShardedStoreWriter, StoreHandle,
+    StoreReader, StoreWriter, MANIFEST_FILE,
+};
 use apack_repro::util::Rng64;
+use apack_repro::Error;
 
 fn sample_tensor(n: usize, seed: u64) -> Vec<u32> {
     let mut rng = Rng64::new(seed);
@@ -267,6 +271,141 @@ fn store_open_fuzz() {
     std::fs::write(&path, &bytes).unwrap();
     assert!(StoreReader::open(&path).is_err());
     std::fs::remove_file(&path).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Sharded-store failure injection: every broken-directory shape fails
+// loudly with a *typed* error, never a silent partial open.
+// ---------------------------------------------------------------------------
+
+/// Build a healthy 3-shard store in a temp directory.
+fn build_sharded(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("apack_finj_{}_{tag}.apackstore.d", std::process::id()));
+    let policy = PartitionPolicy { substreams: 4, min_per_stream: 128 };
+    let mut w = ShardedStoreWriter::create(&dir, 3, policy).unwrap();
+    for i in 0..9usize {
+        let v = sample_tensor(3000 + 700 * i, 0xBAD0 + i as u64);
+        w.add_tensor(&format!("m/layer{i:03}/weights"), 8, &v, TensorKind::Weights)
+            .unwrap();
+    }
+    w.finish().unwrap();
+    dir
+}
+
+/// A shard file the manifest names but the directory lacks (renamed away,
+/// count unchanged) is a typed `ShardMissing` error.
+#[test]
+fn sharded_missing_shard_file_rejected() {
+    let dir = build_sharded("missing");
+    std::fs::rename(dir.join(shard_file_name(1)), dir.join(shard_file_name(9))).unwrap();
+    match ShardedStoreReader::open(&dir).err() {
+        Some(Error::ShardMissing { shard }) => assert_eq!(shard, shard_file_name(1)),
+        other => panic!("expected ShardMissing, got {other:?}"),
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A directory whose shard-file count disagrees with the manifest — a
+/// deleted shard or a stray extra one — is a typed `ShardCountMismatch`.
+#[test]
+fn sharded_shard_count_mismatch_rejected() {
+    // Deleted shard: 2 files on disk, manifest says 3.
+    let dir = build_sharded("delcount");
+    std::fs::remove_file(dir.join(shard_file_name(2))).unwrap();
+    match StoreHandle::open(&dir).err() {
+        Some(Error::ShardCountMismatch { manifest, found }) => {
+            assert_eq!((manifest, found), (3, 2));
+        }
+        other => panic!("expected ShardCountMismatch, got {other:?}"),
+    }
+    std::fs::remove_dir_all(&dir).ok();
+
+    // Stray extra shard file: 4 on disk, manifest says 3.
+    let dir = build_sharded("extracount");
+    std::fs::copy(dir.join(shard_file_name(0)), dir.join(shard_file_name(3))).unwrap();
+    match StoreHandle::open(&dir).err() {
+        Some(Error::ShardCountMismatch { manifest, found }) => {
+            assert_eq!((manifest, found), (3, 4));
+        }
+        other => panic!("expected ShardCountMismatch, got {other:?}"),
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Any corruption of the MANIFEST — bit flips anywhere, truncation, byte
+/// soup, or absence — is a typed `ManifestCorrupt` error.
+#[test]
+fn sharded_corrupt_manifest_rejected() {
+    let dir = build_sharded("manifest");
+    let manifest_path = dir.join(MANIFEST_FILE);
+    let good = std::fs::read(&manifest_path).unwrap();
+
+    for i in 0..good.len() {
+        let mut bad = good.clone();
+        bad[i] ^= 0x08;
+        std::fs::write(&manifest_path, &bad).unwrap();
+        assert!(
+            matches!(ShardedStoreReader::open(&dir), Err(Error::ManifestCorrupt(_))),
+            "flip at byte {i}"
+        );
+    }
+    for keep in [0usize, 7, 11, good.len() - 1] {
+        std::fs::write(&manifest_path, &good[..keep]).unwrap();
+        assert!(matches!(
+            ShardedStoreReader::open(&dir),
+            Err(Error::ManifestCorrupt(_))
+        ));
+    }
+    let mut rng = Rng64::new(0x3141);
+    for _ in 0..50 {
+        let n = rng.range(0, 200);
+        let soup: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        std::fs::write(&manifest_path, &soup).unwrap();
+        let _ = ShardedStoreReader::open(&dir); // must not panic
+    }
+    std::fs::remove_file(&manifest_path).unwrap();
+    assert!(matches!(
+        ShardedStoreReader::open(&dir),
+        Err(Error::ManifestCorrupt(_))
+    ));
+
+    // Restored manifest opens clean again (the shards were never touched).
+    std::fs::write(&manifest_path, &good).unwrap();
+    assert!(ShardedStoreReader::open(&dir).is_ok());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A truncated shard file is caught at open (manifest records each shard's
+/// sealed size), and corrupt chunk bytes inside a shard are caught by the
+/// per-chunk CRC through the sharded read path.
+#[test]
+fn sharded_shard_corruption_caught() {
+    let dir = build_sharded("shardbody");
+    // Truncation: disk size disagrees with the manifest.
+    let victim = dir.join(shard_file_name(0));
+    let bytes = std::fs::read(&victim).unwrap();
+    std::fs::write(&victim, &bytes[..bytes.len() - 3]).unwrap();
+    assert!(matches!(
+        ShardedStoreReader::open(&dir),
+        Err(Error::ManifestCorrupt(_))
+    ));
+    std::fs::write(&victim, &bytes).unwrap();
+
+    // Same-size chunk corruption: open succeeds, reads + verify fail.
+    let reader = ShardedStoreReader::open(&dir).unwrap();
+    let name = reader.tensor_names()[0].to_string();
+    let home = shard_for_name(&name, 3);
+    let chunk0 = reader.meta(&name).unwrap().chunks[0];
+    drop(reader);
+    let victim = dir.join(shard_file_name(home));
+    let mut bad = std::fs::read(&victim).unwrap();
+    bad[chunk0.offset as usize + (chunk0.len / 2) as usize] ^= 0x20;
+    std::fs::write(&victim, &bad).unwrap();
+    let reader = ShardedStoreReader::open(&dir).unwrap();
+    assert!(reader.get_tensor(&name).is_err(), "corrupt chunk must fail CRC");
+    assert!(reader.verify().is_err(), "verify must report the corruption");
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 /// Encoding a value outside the table's coverage errors cleanly.

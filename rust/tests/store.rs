@@ -1,6 +1,7 @@
 //! APackStore integration tests: the full zoo packed into one store and
 //! read back bit-exactly, random access touching only the chunks it
-//! covers (byte-accounted), and concurrent readers over one handle.
+//! covers (byte-accounted), concurrent readers over one handle, and the
+//! sharded layout round-tripping bit-identically to the single-file one.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -10,11 +11,18 @@ use apack_repro::coordinator::PartitionPolicy;
 use apack_repro::eval::{EVAL_SEED, PROFILE_SAMPLES};
 use apack_repro::models::trace::ModelTrace;
 use apack_repro::models::zoo::all_models;
-use apack_repro::store::{pack_model_zoo, StoreReader, StoreWriter};
+use apack_repro::store::{
+    pack_model_zoo, pack_model_zoo_sharded, Backend, ShardedStoreWriter, StoreHandle,
+    StoreReader, StoreWriter,
+};
 use apack_repro::util::Rng64;
 
 fn temp_path(tag: &str) -> PathBuf {
     std::env::temp_dir().join(format!("apack_itest_{}_{tag}.apackstore", std::process::id()))
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("apack_itest_{}_{tag}.apackstore.d", std::process::id()))
 }
 
 /// Acceptance: all 24 Table-II models into one store, every tensor back
@@ -147,6 +155,139 @@ fn concurrent_readers_share_one_store() {
     // lands), far below the 300 total reads.
     assert!(stats.chunks_decoded <= 8 * 6, "chunks decoded {}", stats.chunks_decoded);
     std::fs::remove_file(&path).ok();
+}
+
+/// Property: for every shard count N=1..4, a sharded store holds exactly
+/// the same tensors, bit-identically, as the single-file store built from
+/// the same data — full decodes, random ranges (including ranges that
+/// straddle chunk boundaries), and chunk reads all agree with the
+/// in-memory slice, on both IO backends.
+#[test]
+fn sharded_store_matches_single_file_bit_exact() {
+    // Varied tensor population: sizes around chunk boundaries, a tiny
+    // tensor, an empty one, and a multi-chunk one.
+    let mut rng = Rng64::new(0x51AB);
+    let tensors: Vec<(String, Vec<u32>)> = [0usize, 1, 63, 1024, 1025, 5000, 12_001]
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| {
+            let v: Vec<u32> = (0..n).map(|_| rng.below(256) as u32).collect();
+            (format!("m/layer{i:03}/weights"), v)
+        })
+        .collect();
+    let policy = PartitionPolicy { substreams: 4, min_per_stream: 256 };
+
+    let single_path = temp_path("shardeq");
+    let mut w = StoreWriter::create(&single_path, policy).unwrap();
+    for (name, v) in &tensors {
+        w.add_tensor(name, 8, v, TensorKind::Weights).unwrap();
+    }
+    w.finish().unwrap();
+    let single = StoreHandle::open(&single_path).unwrap();
+
+    for shards in 1..=4usize {
+        let dir = temp_dir(&format!("shardeq{shards}"));
+        let mut w = ShardedStoreWriter::create(&dir, shards, policy).unwrap();
+        for (name, v) in &tensors {
+            w.add_tensor(name, 8, v, TensorKind::Weights).unwrap();
+        }
+        let summary = w.finish().unwrap();
+        assert_eq!(summary.shards, shards);
+        assert_eq!(summary.tensors, tensors.len());
+
+        for backend in [Backend::Mmap, Backend::File] {
+            let sharded = StoreHandle::open_with(&dir, backend, 1 << 20).unwrap();
+            assert_eq!(sharded.shard_count(), shards);
+            assert_eq!(sharded.tensor_count(), single.tensor_count());
+            let mut names: Vec<&str> = sharded.tensor_names();
+            names.sort_unstable();
+            let mut expect_names: Vec<&str> = single.tensor_names();
+            expect_names.sort_unstable();
+            assert_eq!(names, expect_names, "N={shards}");
+
+            for (name, v) in &tensors {
+                // Full decode: bit-identical to the single-file store.
+                assert_eq!(&sharded.get_tensor(name).unwrap(), v, "N={shards} {name}");
+                assert_eq!(
+                    sharded.get_tensor(name).unwrap(),
+                    single.get_tensor(name).unwrap()
+                );
+                let meta = sharded.meta(name).unwrap();
+                assert_eq!(meta.n_values, v.len() as u64);
+
+                // Random ranges == slices, biased toward chunk boundaries.
+                let n = v.len() as u64;
+                for trial in 0..20u64 {
+                    let (lo, hi) = if n == 0 {
+                        (0, 0)
+                    } else if trial % 4 == 0 && meta.chunks.len() > 1 {
+                        // Straddle a chunk boundary explicitly.
+                        let b = meta.values_per_chunk
+                            * (1 + trial % (meta.chunks.len() as u64 - 1).max(1));
+                        let b = b.min(n);
+                        (b.saturating_sub(1 + trial % 7), (b + 1 + trial % 5).min(n))
+                    } else {
+                        let lo = rng.below(n);
+                        (lo, (lo + 1 + rng.below(n - lo)).min(n))
+                    };
+                    assert_eq!(
+                        sharded.get_range(name, lo..hi).unwrap(),
+                        &v[lo as usize..hi as usize],
+                        "N={shards} {name} {lo}..{hi}"
+                    );
+                }
+                // Chunk reads agree too.
+                for ci in 0..meta.chunks.len() {
+                    let covered = meta.chunk_value_range(ci);
+                    assert_eq!(
+                        sharded.get_chunk(name, ci).unwrap().as_slice(),
+                        &v[covered.start as usize..covered.end as usize]
+                    );
+                }
+            }
+            let report = sharded.verify().unwrap();
+            assert_eq!(report.shards, shards);
+            assert_eq!(report.tensors, tensors.len());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+    std::fs::remove_file(&single_path).ok();
+}
+
+/// Acceptance: the full 24-model zoo sharded over 4 files round-trips
+/// bit-exactly against the single-file pack of the same traces, and the
+/// per-shard parallel verify covers every chunk.
+#[test]
+fn zoo_sharded_pack_matches_single_file() {
+    let single_path = temp_path("zooshard1");
+    let dir = temp_dir("zooshard4");
+    let models = all_models();
+    let sample_cap = 256;
+    let policy = PartitionPolicy { substreams: 4, min_per_stream: 64 };
+
+    let single_summary = pack_model_zoo(&single_path, &models, sample_cap, policy).unwrap();
+    let sharded_summary =
+        pack_model_zoo_sharded(&dir, &models, sample_cap, policy, 4).unwrap();
+    assert_eq!(sharded_summary.tensors, single_summary.tensors);
+    assert_eq!(sharded_summary.shards, 4, "zoo is large enough for 4 shards");
+
+    let single = StoreHandle::open(&single_path).unwrap();
+    let sharded = StoreHandle::open(&dir).unwrap();
+    assert_eq!(sharded.tensor_count(), single.tensor_count());
+    for name in single.tensor_names() {
+        assert_eq!(
+            sharded.get_tensor(name).unwrap(),
+            single.get_tensor(name).unwrap(),
+            "{name}"
+        );
+    }
+    let report = sharded.verify().unwrap();
+    assert_eq!(report.shards, 4);
+    assert_eq!(report.tensors, single.tensor_count());
+    assert_eq!(report.chunks, single.verify().unwrap().chunks);
+
+    std::fs::remove_file(&single_path).ok();
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 /// Store-level verify passes on a clean store and the footprint numbers
