@@ -1,0 +1,332 @@
+//! Serving-layer bench: closed-loop clients through a `ServingEngine`.
+//!
+//! Sections:
+//! 1. **worker × queue-depth sweep** — closed-loop clients issuing a
+//!    duplicate-heavy mix of chunk/range requests; reports requests/s and
+//!    the p50/p95/p99 latency histogram per configuration, coalescing on
+//!    vs off side by side.
+//! 2. **coalescing demonstration** (asserted, so CI fails loudly on
+//!    regression): a burst of duplicate single-chunk requests against an
+//!    uncached store decodes measurably fewer chunks with coalescing ON
+//!    than OFF, while every response stays bit-exact.
+//! 3. **saturation demonstration** (asserted): a tiny queue in front of
+//!    slow full-tensor requests sheds via `Error::Overloaded` instead of
+//!    queueing without bound, and every admitted request still answers
+//!    bit-exactly; a zero deadline sheds at pop with
+//!    `deadline_expired = true`.
+//!
+//! Pass `--quick` (CI does) for a small store and few iterations.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use apack_repro::apack::tablegen::TensorKind;
+use apack_repro::coordinator::PartitionPolicy;
+use apack_repro::models::distributions::ValueProfile;
+use apack_repro::serving::{Request, ServingConfig, ServingEngine, Ticket};
+use apack_repro::store::{Backend, StoreHandle, StoreWriter};
+use apack_repro::util::Rng64;
+use apack_repro::Error;
+
+/// Closed-loop pass: `clients` threads × `requests` blocking requests,
+/// every response verified bit-exact against the reference decode.
+/// Returns (wall time, completed, shed, values served).
+fn client_pass(
+    engine: &ServingEngine,
+    reference: &HashMap<String, Vec<u32>>,
+    names: &[String],
+    clients: usize,
+    requests: usize,
+    hot_fraction: f64,
+) -> (Duration, u64, u64, u64) {
+    let t0 = Instant::now();
+    let mut completed = 0u64;
+    let mut shed = 0u64;
+    let mut served = 0u64;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for tid in 0..clients {
+            handles.push(scope.spawn(move || {
+                let mut rng = Rng64::new(0x5EED ^ ((tid as u64) << 16));
+                let (mut completed, mut shed, mut served) = (0u64, 0u64, 0u64);
+                for _ in 0..requests {
+                    let name = &names[rng.below(names.len() as u64) as usize];
+                    let expect = &reference[name];
+                    let meta = engine.store().meta(name).unwrap();
+                    let result = if rng.f64() < hot_fraction {
+                        // Hot set: chunk 0 of this tensor — maximally
+                        // duplicate-heavy traffic.
+                        engine.get_chunk(name, 0).map(|v| {
+                            let covered = meta.chunk_value_range(0);
+                            assert_eq!(
+                                v.as_slice(),
+                                &expect[covered.start as usize..covered.end as usize],
+                                "{name} hot chunk"
+                            );
+                            v.len() as u64
+                        })
+                    } else if rng.chance(0.5) {
+                        let n = meta.n_values;
+                        let lo = rng.below(n);
+                        let span = 1 + rng.below((n - lo).min(8192));
+                        engine.get_range(name, lo..lo + span).map(|v| {
+                            assert_eq!(
+                                v.as_slice(),
+                                &expect[lo as usize..(lo + span) as usize],
+                                "{name} {lo}+{span}"
+                            );
+                            v.len() as u64
+                        })
+                    } else {
+                        let ci = rng.below(meta.chunks.len() as u64) as usize;
+                        engine.get_chunk(name, ci).map(|v| {
+                            let covered = meta.chunk_value_range(ci);
+                            assert_eq!(
+                                v.as_slice(),
+                                &expect[covered.start as usize..covered.end as usize],
+                                "{name} chunk {ci}"
+                            );
+                            v.len() as u64
+                        })
+                    };
+                    match result {
+                        Ok(n) => {
+                            completed += 1;
+                            served += n;
+                        }
+                        Err(Error::Overloaded { .. }) => shed += 1,
+                        Err(e) => panic!("serving read failed: {e}"),
+                    }
+                }
+                (completed, shed, served)
+            }));
+        }
+        for handle in handles {
+            let (c, s, v) = handle.join().expect("client thread");
+            completed += c;
+            shed += s;
+            served += v;
+        }
+    });
+    (t0.elapsed(), completed, shed, served)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick" || a == "quick");
+    let (n_tensors, n_values, clients, requests, burst) = if quick {
+        (2usize, 150_000usize, 8usize, 60usize, 192usize)
+    } else {
+        (4, 600_000, 16, 400, 512)
+    };
+    let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+
+    // Build the store and the reference decode.
+    let path = std::env::temp_dir()
+        .join(format!("apack_bench_serving_{}.apackstore", std::process::id()));
+    let policy = PartitionPolicy::default();
+    let tensors: Vec<(String, Vec<u32>)> = (0..n_tensors)
+        .map(|i| {
+            let values =
+                ValueProfile::ReluActivation { sparsity: 0.5, q: 0.93, noise_floor: 0.01 }
+                    .sample(8, n_values, 9000 + i as u64);
+            (format!("tensor{i}"), values)
+        })
+        .collect();
+    let mut writer = StoreWriter::create(&path, policy).expect("create store");
+    for (name, values) in &tensors {
+        writer.add_tensor(name, 8, values, TensorKind::Activations).expect("add tensor");
+    }
+    let summary = writer.finish().expect("finish store");
+    println!(
+        "store: {} tensors, {} chunks, {:.1} MiB ({:.2}x vs raw){}\n",
+        summary.tensors,
+        summary.chunks,
+        summary.file_bytes as f64 / (1 << 20) as f64,
+        summary.compression_ratio(),
+        if quick { "  [quick]" } else { "" }
+    );
+    let names: Vec<String> = tensors.iter().map(|(n, _)| n.clone()).collect();
+    let reference: HashMap<String, Vec<u32>> = tensors.into_iter().collect();
+
+    // 1. Worker × queue-depth sweep, coalescing on vs off.
+    let mut worker_points = vec![2usize, 4, 8];
+    worker_points.retain(|&w| w <= avail.max(2));
+    if quick {
+        worker_points = vec![avail.clamp(2, 4)];
+    }
+    println!(
+        "closed-loop sweep: {clients} clients × {requests} requests, 80% hot-set \
+         ({avail} cores)"
+    );
+    for &workers in &worker_points {
+        for queue_depth in [64usize, 256] {
+            for coalescing in [false, true] {
+                let store = Arc::new(StoreHandle::open(&path).expect("open store"));
+                let engine = ServingEngine::start(
+                    Arc::clone(&store),
+                    ServingConfig {
+                        workers,
+                        queue_depth,
+                        coalescing,
+                        deadline: None,
+                        prefetch: None,
+                    },
+                )
+                .expect("start engine");
+                let (dt, completed, shed, served) =
+                    client_pass(&engine, &reference, &names, clients, requests, 0.8);
+                let m = engine.metrics();
+                println!(
+                    "  {workers} workers  depth {queue_depth:>3}  coalescing {:>3}  \
+                     {:>8.0} req/s  {:>7.1} Mvalues/s  {completed} ok / {shed} shed  \
+                     coalesced {:>5}  p50 {:?} p95 {:?} p99 {:?}",
+                    if coalescing { "on" } else { "off" },
+                    (completed + shed) as f64 / dt.as_secs_f64(),
+                    served as f64 / dt.as_secs_f64() / 1e6,
+                    m.coalesced_decodes,
+                    m.latency.p50,
+                    m.latency.p95,
+                    m.latency.p99,
+                );
+            }
+        }
+    }
+
+    // 2. Coalescing demonstration: a duplicate burst against an UNCACHED
+    // store. Every request targets the same chunk, so with coalescing off
+    // each one decodes (burst decodes total); with it on, concurrent
+    // duplicates share flights and the decode count collapses.
+    println!("\ncoalescing: {burst} duplicate requests of one chunk, cache off");
+    let burst_workers = avail.clamp(2, 8);
+    let mut decoded = [0u64; 2];
+    for (mode, coalescing) in [false, true].into_iter().enumerate() {
+        let store = Arc::new(
+            StoreHandle::open_with(&path, Backend::Mmap, 0).expect("open uncached"),
+        );
+        let engine = ServingEngine::start(
+            Arc::clone(&store),
+            ServingConfig {
+                workers: burst_workers,
+                queue_depth: burst + 8,
+                coalescing,
+                deadline: None,
+                prefetch: None,
+            },
+        )
+        .expect("start engine");
+        let expect = &reference["tensor0"];
+        let covered = store.meta("tensor0").expect("meta").chunk_value_range(0);
+        let tickets: Vec<Ticket> = (0..burst)
+            .map(|_| {
+                engine
+                    .submit(Request::Chunk { tensor: "tensor0".to_string(), chunk: 0 })
+                    .expect("burst fits the queue")
+            })
+            .collect();
+        for ticket in tickets {
+            let got = ticket.wait().expect("burst decode");
+            assert_eq!(
+                got.as_slice(),
+                &expect[covered.start as usize..covered.end as usize],
+                "coalesced responses must stay bit-exact"
+            );
+        }
+        let stats = engine.stats();
+        decoded[mode] = stats.chunks_decoded;
+        println!(
+            "  coalescing {:>3}: {} chunks decoded, {} coalesced, {} compressed bytes",
+            if coalescing { "on" } else { "off" },
+            stats.chunks_decoded,
+            stats.coalesced_reads,
+            stats.bytes_read
+        );
+    }
+    assert_eq!(decoded[0], burst as u64, "cache off + coalescing off: every request decodes");
+    assert!(
+        decoded[1] < decoded[0] * 3 / 4,
+        "coalescing must measurably cut decodes: on {} vs off {}",
+        decoded[1],
+        decoded[0]
+    );
+    println!(
+        "  => {:.1}x fewer decodes with coalescing on",
+        decoded[0] as f64 / decoded[1].max(1) as f64
+    );
+
+    // 3. Saturation: a tiny queue in front of slow full-tensor decodes
+    // shed via Error::Overloaded instead of queueing without bound.
+    println!("\nsaturation: 1 worker, queue depth 4, full-tensor request flood");
+    let store = Arc::new(StoreHandle::open(&path).expect("open store"));
+    let engine = ServingEngine::start(
+        Arc::clone(&store),
+        ServingConfig {
+            workers: 1,
+            queue_depth: 4,
+            coalescing: true,
+            deadline: None,
+            prefetch: None,
+        },
+    )
+    .expect("start engine");
+    let flood = if quick { 60 } else { 200 };
+    let mut admitted = Vec::new();
+    let mut shed = 0u64;
+    for _ in 0..flood {
+        match engine.submit(Request::Tensor { tensor: "tensor0".to_string() }) {
+            Ok(ticket) => admitted.push(ticket),
+            Err(Error::Overloaded { queue_depth, deadline_expired }) => {
+                assert_eq!(queue_depth, 4);
+                assert!(!deadline_expired);
+                shed += 1;
+            }
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    let expect = &reference["tensor0"];
+    let admitted_count = admitted.len() as u64;
+    for ticket in admitted {
+        assert_eq!(
+            ticket.wait().expect("admitted request").as_slice(),
+            &expect[..],
+            "admitted requests still answer bit-exactly under overload"
+        );
+    }
+    assert!(shed > 0, "a {flood}-request flood must overflow a 4-deep queue");
+    assert_eq!(admitted_count + shed, flood as u64);
+    let m = engine.metrics();
+    assert_eq!(m.shed_queue_full, shed);
+    println!(
+        "  {admitted_count} admitted (all bit-exact), {shed} shed via Error::Overloaded, \
+         peak queue depth {}",
+        m.queue_depth_max
+    );
+    drop(engine);
+
+    // Zero deadline: everything queued sheds at pop, typed as such.
+    let engine = ServingEngine::start(
+        Arc::clone(&store),
+        ServingConfig {
+            workers: 1,
+            queue_depth: 64,
+            coalescing: true,
+            deadline: Some(Duration::ZERO),
+            prefetch: None,
+        },
+    )
+    .expect("start engine");
+    let mut deadline_shed = 0u64;
+    for _ in 0..8 {
+        match engine.get_chunk("tensor0", 0) {
+            Err(Error::Overloaded { deadline_expired: true, .. }) => deadline_shed += 1,
+            other => panic!("zero deadline must shed, got {other:?}"),
+        }
+    }
+    assert_eq!(deadline_shed, 8);
+    println!("  zero-deadline requests: all {deadline_shed} shed with deadline_expired");
+
+    drop(engine);
+    drop(store);
+    std::fs::remove_file(&path).ok();
+    println!("\nserving bench OK: coalescing reduces decodes, overload sheds typed errors");
+}

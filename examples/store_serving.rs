@@ -1,16 +1,19 @@
-//! Domain example: serve tensors to many concurrent readers straight from
+//! Domain example: serve tensors to many concurrent clients straight from
 //! a compressed APackStore — the deployment APack targets (paper §V: data
 //! stays compressed at rest, decode happens on demand on the memory path;
 //! cf. EIE serving inference from a compressed weight store).
 //!
-//! Packs a zoo subset into a **sharded** store (hash-partitioned shard
-//! files, like a store too large for one file), then hammers it through a
-//! [`StoreHandle`] from several threads doing random `get_range` /
-//! `get_chunk` reads, verifying every result against a reference decode.
-//! Reads go through the zero-copy mmap backend, so no IO lock is touched.
+//! Packs a zoo subset into a **sharded** store, then runs closed-loop
+//! client threads through a [`ServingEngine`] — the batching,
+//! admission-controlled request layer — instead of hammering the
+//! `StoreHandle` directly: requests queue into a bounded worker pool,
+//! concurrent duplicate chunk decodes coalesce into single flights, the
+//! hot-set prefetcher warms the LRU ahead of demand, and overload sheds
+//! with a typed `Error::Overloaded` rather than unbounded latency. Every
+//! response is verified bit-exact against a reference decode.
 //!
 //! ```sh
-//! cargo run --release --example store_serving [threads] [reads-per-thread] [shards]
+//! cargo run --release --example store_serving [clients] [requests-per-client] [shards]
 //! ```
 
 use std::collections::HashMap;
@@ -19,13 +22,15 @@ use std::time::Instant;
 
 use apack_repro::coordinator::PartitionPolicy;
 use apack_repro::models::zoo::model_by_name;
+use apack_repro::serving::{PrefetchConfig, ServingConfig, ServingEngine};
 use apack_repro::store::{pack_model_zoo_sharded, StoreHandle};
 use apack_repro::util::Rng64;
+use apack_repro::Error;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
-    let threads: usize =
+    let clients: usize =
         std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(8);
-    let reads_per_thread: usize =
+    let requests_per_client: usize =
         std::env::args().nth(2).map(|s| s.parse()).transpose()?.unwrap_or(400);
     let shards: usize =
         std::env::args().nth(3).map(|s| s.parse()).transpose()?.unwrap_or(4);
@@ -56,76 +61,111 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         let check = StoreHandle::open(&path)?;
         names.iter().map(|n| (n.clone(), check.get_tensor(n).unwrap())).collect()
     };
-    let reference = Arc::new(reference);
+
+    // The serving engine replaces the hand-rolled reader threads of the
+    // pre-serving version of this example: clients block on tickets while
+    // a bounded worker pool decodes, coalesces and prefetches.
+    let engine = ServingEngine::start(
+        Arc::clone(&store),
+        ServingConfig {
+            queue_depth: 256,
+            coalescing: true,
+            prefetch: Some(PrefetchConfig::default()),
+            ..ServingConfig::default()
+        },
+    )?;
+    println!(
+        "serving: {} workers, queue depth {}, coalescing on, prefetch on",
+        engine.config().workers,
+        engine.config().queue_depth
+    );
 
     let t0 = Instant::now();
     let mut served_values = 0u64;
+    let mut shed_requests = 0u64;
     std::thread::scope(|scope| {
         let mut handles = Vec::new();
-        for tid in 0..threads {
-            let store = Arc::clone(&store);
-            let reference = Arc::clone(&reference);
+        for tid in 0..clients {
+            let engine = &engine;
+            let reference = &reference;
             let names = &names;
             handles.push(scope.spawn(move || {
                 let mut rng = Rng64::new(0x5E17E + tid as u64);
-                let mut served = 0u64;
-                for _ in 0..reads_per_thread {
+                let (mut served, mut shed) = (0u64, 0u64);
+                for _ in 0..requests_per_client {
                     let name = &names[rng.below(names.len() as u64) as usize];
                     let expect = &reference[name];
-                    let meta = store.meta(name).unwrap();
+                    let meta = engine.store().meta(name).unwrap();
                     if meta.chunks.is_empty() {
                         continue;
                     }
-                    if rng.chance(0.5) {
+                    let result = if rng.chance(0.5) {
                         // Random range read (a slice of a layer's weights,
                         // as a sharded inference server would fetch).
                         let n = meta.n_values;
                         let lo = rng.below(n);
                         let hi = (lo + 1 + rng.below(n - lo)).min(n);
-                        let got = store.get_range(name, lo..hi).unwrap();
-                        assert_eq!(got, expect[lo as usize..hi as usize], "{name} {lo}..{hi}");
-                        served += hi - lo;
+                        engine.get_range(name, lo..hi).map(|got| {
+                            assert_eq!(
+                                got.as_slice(),
+                                &expect[lo as usize..hi as usize],
+                                "{name} {lo}..{hi}"
+                            );
+                            hi - lo
+                        })
                     } else {
                         let ci = rng.below(meta.chunks.len() as u64) as usize;
                         let covered = meta.chunk_value_range(ci);
-                        let got = store.get_chunk(name, ci).unwrap();
-                        assert_eq!(
-                            got.as_slice(),
-                            &expect[covered.start as usize..covered.end as usize],
-                            "{name} chunk {ci}"
-                        );
-                        served += covered.end - covered.start;
+                        engine.get_chunk(name, ci).map(|got| {
+                            assert_eq!(
+                                got.as_slice(),
+                                &expect[covered.start as usize..covered.end as usize],
+                                "{name} chunk {ci}"
+                            );
+                            covered.end - covered.start
+                        })
+                    };
+                    match result {
+                        Ok(n) => served += n,
+                        Err(Error::Overloaded { .. }) => shed += 1,
+                        Err(e) => panic!("serving read failed: {e}"),
                     }
                 }
-                served
+                (served, shed)
             }));
         }
-        for h in handles {
-            served_values += h.join().expect("reader thread");
+        for handle in handles {
+            let (served, shed) = handle.join().expect("client thread");
+            served_values += served;
+            shed_requests += shed;
         }
     });
     let dt = t0.elapsed();
 
-    let stats = store.stats();
-    let total_reads = (threads * reads_per_thread) as f64;
+    let total_requests = (clients * requests_per_client) as f64;
     println!(
-        "{threads} threads × {reads_per_thread} reads over {} shard(s): {served_values} \
-         values served in {dt:?} ({:.0} reads/s, {:.1} Mvalues/s)",
+        "{clients} clients × {requests_per_client} requests over {} shard(s): \
+         {served_values} values served in {dt:?} ({:.0} requests/s, {:.1} Mvalues/s, \
+         {shed_requests} shed)",
         store.shard_count(),
-        total_reads / dt.as_secs_f64(),
+        total_requests / dt.as_secs_f64(),
         served_values as f64 / dt.as_secs_f64() / 1e6
     );
+    println!("{}", engine.metrics().render());
+    let stats = engine.stats();
     println!(
-        "cache: {} hits / {} misses ({:.0}% hit rate); {:.2} MiB compressed read via {} \
-         backend, {} chunks decoded",
+        "store: {} hits / {} misses ({:.0}% hit rate); {:.2} MiB compressed via {} \
+         backend, {} chunks decoded, {} prefetched",
         stats.cache_hits,
         stats.cache_misses,
         100.0 * stats.hit_rate(),
         stats.bytes_read as f64 / (1 << 20) as f64,
         stats.backend.name(),
-        stats.chunks_decoded
+        stats.chunks_decoded,
+        stats.prefetched_chunks
     );
-    println!("all reads verified against reference decode — serving is lossless");
+    println!("all responses verified against reference decode — serving is lossless");
+    drop(engine);
     drop(store);
     std::fs::remove_dir_all(&path).ok();
     Ok(())

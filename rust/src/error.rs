@@ -2,7 +2,8 @@
 
 use std::fmt;
 
-/// Errors produced by the APack codec, coordinator and simulator.
+/// Errors produced by the APack codec, coordinator, simulator, store and
+/// serving layer.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Error {
     /// A symbol/probability table failed validation (the contained string
@@ -30,6 +31,12 @@ pub enum Error {
     /// The store directory holds a different number of shard files than
     /// the manifest declares.
     ShardCountMismatch { manifest: usize, found: usize },
+    /// The serving layer shed this request instead of queueing it without
+    /// bound: the admission queue was already `queue_depth` requests deep
+    /// at submit time, or — when `deadline_expired` — the request's
+    /// deadline passed before a worker picked it up. Overload surfaces as
+    /// this typed error, never as unbounded latency.
+    Overloaded { queue_depth: usize, deadline_expired: bool },
     /// Underlying I/O failure, stringified (keeps the error type `Eq`).
     Io(String),
     /// Configuration error (coordinator / simulator parameters).
@@ -61,6 +68,20 @@ impl fmt::Display for Error {
                 f,
                 "manifest declares {manifest} shard files but the directory holds {found}"
             ),
+            Error::Overloaded { queue_depth, deadline_expired } => {
+                if *deadline_expired {
+                    write!(
+                        f,
+                        "serving overloaded: deadline expired before a worker picked the \
+                         request up (queue depth {queue_depth})"
+                    )
+                } else {
+                    write!(
+                        f,
+                        "serving overloaded: admission queue full at {queue_depth} requests"
+                    )
+                }
+            }
             Error::Io(s) => write!(f, "i/o error: {s}"),
             Error::Config(s) => write!(f, "configuration error: {s}"),
             Error::Runtime(s) => write!(f, "runtime error: {s}"),

@@ -31,6 +31,9 @@
 //!   store. Named tensors in one file, independently decodable CRC-checked
 //!   chunks, one shared table per tensor, O(1) `get_tensor` /
 //!   `get_chunk` / `get_range` with an LRU chunk cache.
+//! - [`serving`] — the request layer over the store: bounded-queue worker
+//!   pool, chunk-level single-flight coalescing, admission control with
+//!   typed overload shedding, hot-set prefetch and latency metrics.
 //! - [`runtime`] — PJRT client that loads the AOT-lowered JAX/Pallas model
 //!   (HLO text) and runs real inference to produce activation traces.
 //! - [`eval`] — regeneration harness for every table and figure in the
@@ -43,6 +46,7 @@ pub mod error;
 pub mod eval;
 pub mod models;
 pub mod runtime;
+pub mod serving;
 pub mod simulator;
 pub mod store;
 pub mod util;

@@ -8,15 +8,19 @@
 use std::error::Error;
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use apack_repro::apack::tablegen::TensorKind;
 use apack_repro::coordinator::{Coordinator, PartitionPolicy, ShardedContainer};
 use apack_repro::eval::{self, CompressionStudy};
 use apack_repro::models::zoo::{all_models, model_by_name};
+use apack_repro::serving::{PrefetchConfig, ServingConfig, ServingEngine};
 use apack_repro::store::{
     pack_model_zoo, pack_model_zoo_sharded, Backend, ReadStats, StoreHandle,
     DEFAULT_CACHE_VALUES,
 };
+use apack_repro::util::Rng64;
 
 const USAGE: &str = "\
 apack-repro — APack off-chip lossless compression, full-system reproduction
@@ -29,6 +33,9 @@ USAGE:
   apack-repro store stats <store> [--backend mmap|file]
   apack-repro store verify <store> [--backend mmap|file]
   apack-repro store report [--sample-cap N]
+  apack-repro serve-bench [--models a,b|all] [--workers N] [--queue-depth N] [--clients N]
+                          [--requests N] [--coalescing on|off] [--prefetch on|off]
+                          [--deadline-ms N] [--hot-fraction F] [--shards N] [--sample-cap N]
   apack-repro table [--model NAME] [--layer N] [--kind weights|activations]
   apack-repro fig --id <2|5a|5b|6|7|8>
   apack-repro area-power
@@ -134,6 +141,7 @@ fn run() -> Result<(), Box<dyn Error>> {
             }
         }
         "store" => run_store(&args)?,
+        "serve-bench" => run_serve_bench(&args)?,
         "fig" => {
             let id = args.flag("id").ok_or("--id required")?;
             match id {
@@ -189,15 +197,21 @@ fn run() -> Result<(), Box<dyn Error>> {
     Ok(())
 }
 
-/// Render the session read counters (`store get`/`stats` footer line).
+/// Render the session read counters (`store get`/`stats`/`serve-bench`
+/// footer line). The serving counters (prefetched/coalesced/shed) are
+/// zero for plain store commands and light up when the stats come
+/// through a `ServingEngine`.
 fn read_stats_line(stats: &ReadStats) -> String {
     format!(
-        "session reads: {} compressed bytes via {} backend, {} chunks decoded, \
-         cache hit rate {:.1}%",
+        "session reads: {} compressed bytes via {} backend, {} chunks decoded \
+         ({} prefetched), cache hit rate {:.1}%, {} coalesced, {} shed",
         stats.bytes_read,
         stats.backend.name(),
         stats.chunks_decoded,
-        100.0 * stats.hit_rate()
+        stats.prefetched_chunks,
+        100.0 * stats.hit_rate(),
+        stats.coalesced_reads,
+        stats.shed_requests
     )
 }
 
@@ -347,6 +361,158 @@ fn run_store(args: &Args) -> Result<(), Box<dyn Error>> {
                     .into(),
             )
         }
+    }
+    Ok(())
+}
+
+/// `serve-bench` — closed-loop clients through a [`ServingEngine`] over a
+/// freshly packed zoo store: the serving layer's throughput/latency/
+/// shedding profile in one command.
+fn run_serve_bench(args: &Args) -> Result<(), Box<dyn Error>> {
+    let models = match args.flag("models").unwrap_or("resnet18,ncf,bilstm,alexnet_eyeriss") {
+        "all" => all_models(),
+        list => list
+            .split(',')
+            .map(|n| {
+                model_by_name(n.trim()).ok_or_else(|| format!("unknown model {}", n.trim()))
+            })
+            .collect::<Result<Vec<_>, _>>()?,
+    };
+    let workers: usize = args.flag_or("workers", "0").parse()?; // 0 = auto
+    let queue_depth: usize = args.flag_or("queue-depth", "256").parse()?;
+    let clients: usize = args.flag_or("clients", "8").parse()?;
+    let requests: usize = args.flag_or("requests", "400").parse()?;
+    let coalescing = !args.flag("coalescing").is_some_and(|v| v == "off");
+    let prefetch_on = !args.flag("prefetch").is_some_and(|v| v == "off");
+    let deadline_ms: u64 = args.flag_or("deadline-ms", "0").parse()?; // 0 = none
+    let hot_fraction: f64 = args.flag_or("hot-fraction", "0.8").parse()?;
+    let shards: usize = args.flag_or("shards", "1").parse()?;
+    let sample_cap: usize = args.flag_or("sample-cap", "8192").parse()?;
+
+    let path = std::env::temp_dir()
+        .join(format!("apack_serve_bench_{}.apackstore", std::process::id()));
+    let policy = PartitionPolicy { substreams: 16, min_per_stream: 512 };
+    if shards > 1 {
+        pack_model_zoo_sharded(&path, &models, sample_cap, policy, shards)?;
+    } else {
+        pack_model_zoo(&path, &models, sample_cap, policy)?;
+    }
+    let store = Arc::new(StoreHandle::open(&path)?);
+
+    // Owned tensor directory so client threads need no store borrows.
+    let tensors: Vec<(String, u64, usize)> = store
+        .tensor_metas()
+        .iter()
+        .filter(|t| !t.chunks.is_empty())
+        .map(|t| (t.name.clone(), t.n_values, t.chunks.len()))
+        .collect();
+    if tensors.is_empty() {
+        return Err("packed store holds no non-empty tensors".into());
+    }
+    // A small hot pool spread across tensors: `hot_fraction` of requests
+    // land here, exercising coalescing and the prefetcher.
+    let hot_pool: Vec<(String, usize)> = tensors
+        .iter()
+        .flat_map(|(name, _, chunks)| {
+            [(name.clone(), 0usize), (name.clone(), chunks / 2)]
+        })
+        .take(8)
+        .collect();
+
+    let config = ServingConfig {
+        workers: if workers == 0 { ServingConfig::default().workers } else { workers },
+        queue_depth,
+        coalescing,
+        deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms)),
+        prefetch: prefetch_on.then(PrefetchConfig::default),
+    };
+    println!(
+        "serve-bench: {} tensors over {} shard(s), {} workers, queue depth {}, \
+         coalescing {}, prefetch {}, {} clients × {} requests ({:.0}% hot-set)",
+        tensors.len(),
+        store.shard_count(),
+        config.workers,
+        config.queue_depth,
+        if coalescing { "on" } else { "off" },
+        if prefetch_on { "on" } else { "off" },
+        clients,
+        requests,
+        100.0 * hot_fraction
+    );
+    let engine = ServingEngine::start(Arc::clone(&store), config)?;
+
+    let t0 = Instant::now();
+    let mut ok = 0u64;
+    let mut shed = 0u64;
+    let mut failed = 0u64;
+    let mut served_values = 0u64;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for tid in 0..clients {
+            let engine = &engine;
+            let tensors = &tensors;
+            let hot_pool = &hot_pool;
+            handles.push(scope.spawn(move || {
+                let mut rng = Rng64::new(0xC11E27 ^ ((tid as u64) << 10));
+                let (mut ok, mut shed, mut failed, mut served) = (0u64, 0u64, 0u64, 0u64);
+                for _ in 0..requests {
+                    let result = if rng.f64() < hot_fraction {
+                        let (name, ci) = &hot_pool[rng.below(hot_pool.len() as u64) as usize];
+                        engine.get_chunk(name, *ci)
+                    } else {
+                        let (name, n_values, chunks) =
+                            &tensors[rng.below(tensors.len() as u64) as usize];
+                        if rng.chance(0.5) {
+                            let lo = rng.below(*n_values);
+                            let span = 1 + rng.below((*n_values - lo).min(4096));
+                            engine.get_range(name, lo..(lo + span).min(*n_values))
+                        } else {
+                            engine.get_chunk(name, rng.below(*chunks as u64) as usize)
+                        }
+                    };
+                    match result {
+                        Ok(values) => {
+                            ok += 1;
+                            served += values.len() as u64;
+                        }
+                        Err(apack_repro::Error::Overloaded { .. }) => shed += 1,
+                        Err(e) => {
+                            eprintln!("serve-bench read failed: {e}");
+                            failed += 1;
+                        }
+                    }
+                }
+                (ok, shed, failed, served)
+            }));
+        }
+        for handle in handles {
+            let (o, s, f, v) = handle.join().expect("serve-bench client");
+            ok += o;
+            shed += s;
+            failed += f;
+            served_values += v;
+        }
+    });
+    let dt = t0.elapsed();
+
+    let total = (clients * requests) as f64;
+    println!(
+        "{ok} ok / {shed} shed / {failed} failed in {dt:?} ({:.0} requests/s, \
+         {:.1} Mvalues/s)",
+        total / dt.as_secs_f64(),
+        served_values as f64 / dt.as_secs_f64() / 1e6
+    );
+    println!("{}", engine.metrics().render());
+    println!("{}", read_stats_line(&engine.stats()));
+    drop(engine);
+    drop(store);
+    if path.is_dir() {
+        std::fs::remove_dir_all(&path).ok();
+    } else {
+        std::fs::remove_file(&path).ok();
+    }
+    if failed > 0 {
+        return Err(format!("{failed} requests failed with non-overload errors").into());
     }
     Ok(())
 }

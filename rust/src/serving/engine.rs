@@ -1,0 +1,560 @@
+//! [`ServingEngine`]: the bounded-queue worker pool that fronts one
+//! [`StoreHandle`].
+//!
+//! See the module docs of [`crate::serving`] for the request lifecycle
+//! (queue → coalesce → decode → respond) and the prefetch loop.
+//!
+//! Concurrency model — std only, per the crate's no-deps rule:
+//!
+//! - The queue is a `Mutex<VecDeque>` plus a condvar; `submit` never
+//!   blocks (it either enqueues or sheds with
+//!   [`Error::Overloaded`]) and workers park on the condvar when idle.
+//! - Each request carries a one-shot response slot (mutex + condvar) the
+//!   client blocks on in [`Ticket::wait`]; workers fill it exactly once.
+//! - Shutdown is drain-then-join: dropping the engine flags shutdown and
+//!   wakes everyone; workers keep popping until the queue is empty, so
+//!   every admitted request is answered — a `Ticket` can always be
+//!   waited on, even after the engine is gone.
+
+use std::collections::VecDeque;
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::store::StoreHandle;
+
+use super::metrics::{LatencyHistogram, MetricsSnapshot};
+use super::prefetch::{HotSet, PrefetchConfig};
+use super::singleflight::{ChunkResult, SingleFlight};
+
+/// One serving request against the store.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Request {
+    /// One chunk of a tensor (the response shares the cached `Arc`).
+    Chunk { tensor: String, chunk: usize },
+    /// A value range of a tensor, assembled from its covering chunks.
+    Range { tensor: String, range: Range<u64> },
+    /// A full tensor.
+    Tensor { tensor: String },
+}
+
+impl Request {
+    /// The tensor this request reads.
+    pub fn tensor(&self) -> &str {
+        match self {
+            Request::Chunk { tensor, .. }
+            | Request::Range { tensor, .. }
+            | Request::Tensor { tensor } => tensor,
+        }
+    }
+}
+
+/// Engine tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    /// Worker threads decoding requests (default: available parallelism).
+    pub workers: usize,
+    /// Admission bound: `submit` sheds with [`Error::Overloaded`] once
+    /// this many requests are queued.
+    pub queue_depth: usize,
+    /// Collapse concurrent duplicate `(tensor, chunk)` decodes into one
+    /// flight (see [`SingleFlight`]).
+    pub coalescing: bool,
+    /// Default per-request deadline, measured from submit. A request
+    /// still queued when its deadline passes is shed at pop time instead
+    /// of being decoded late.
+    pub deadline: Option<Duration>,
+    /// Hot-set prefetcher; `None` disables the prefetch thread.
+    pub prefetch: Option<PrefetchConfig>,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        Self {
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            queue_depth: 256,
+            coalescing: true,
+            deadline: None,
+            prefetch: None,
+        }
+    }
+}
+
+/// One-shot response slot shared between a [`Ticket`] and the worker
+/// answering it.
+struct Slot {
+    result: Mutex<Option<ChunkResult>>,
+    ready: Condvar,
+}
+
+impl Slot {
+    fn new() -> Self {
+        Self { result: Mutex::new(None), ready: Condvar::new() }
+    }
+
+    fn fill(&self, result: ChunkResult) {
+        *self.result.lock().expect("serving response lock") = Some(result);
+        self.ready.notify_all();
+    }
+}
+
+/// Handle on an admitted request. Outlives the engine: every admitted
+/// request is answered even through shutdown, so `wait` never hangs.
+pub struct Ticket {
+    slot: Arc<Slot>,
+}
+
+impl Ticket {
+    /// Block until the response arrives.
+    pub fn wait(self) -> Result<Arc<Vec<u32>>> {
+        let mut slot = self.slot.result.lock().expect("serving response lock");
+        loop {
+            if let Some(result) = slot.take() {
+                return result;
+            }
+            slot = self.slot.ready.wait(slot).expect("serving response lock");
+        }
+    }
+
+    /// The response if it already arrived (non-blocking; takes it, so a
+    /// later `wait` would block — check `Some` before discarding).
+    pub fn try_wait(&self) -> Option<ChunkResult> {
+        self.slot.result.lock().expect("serving response lock").take()
+    }
+}
+
+/// A queued request with its admission timestamp and response slot.
+struct Queued {
+    request: Request,
+    slot: Arc<Slot>,
+    enqueued: Instant,
+    deadline: Option<Duration>,
+}
+
+/// State shared by the engine handle, its workers and the prefetcher.
+struct Shared {
+    store: Arc<StoreHandle>,
+    config: ServingConfig,
+    queue: Mutex<VecDeque<Queued>>,
+    queue_cv: Condvar,
+    shutdown: AtomicBool,
+    flight: SingleFlight,
+    hotset: HotSet,
+    /// The prefetch thread parks here between scans so shutdown can wake
+    /// it immediately instead of waiting out the interval.
+    prefetch_park: (Mutex<()>, Condvar),
+    // Counters (see MetricsSnapshot for semantics).
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    shed_queue_full: AtomicU64,
+    shed_deadline: AtomicU64,
+    coalesced: AtomicU64,
+    queue_depth_max: AtomicUsize,
+    latency: LatencyHistogram,
+}
+
+/// A batching, admission-controlled serving layer over one
+/// [`StoreHandle`]. See [`crate::serving`] for the architecture.
+pub struct ServingEngine {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    prefetcher: Option<JoinHandle<()>>,
+}
+
+impl ServingEngine {
+    /// Spawn the worker pool (and prefetch thread, if configured) over
+    /// `store`.
+    pub fn start(store: Arc<StoreHandle>, config: ServingConfig) -> Result<Self> {
+        if config.workers == 0 {
+            return Err(Error::Config("serving engine needs at least one worker".into()));
+        }
+        if config.queue_depth == 0 {
+            return Err(Error::Config(
+                "serving queue depth must be at least one request".into(),
+            ));
+        }
+        let prefetch_cfg = config.prefetch.clone();
+        let shared = Arc::new(Shared {
+            store,
+            config,
+            queue: Mutex::new(VecDeque::new()),
+            queue_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            flight: SingleFlight::new(),
+            hotset: HotSet::new(),
+            prefetch_park: (Mutex::new(()), Condvar::new()),
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            shed_queue_full: AtomicU64::new(0),
+            shed_deadline: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            queue_depth_max: AtomicUsize::new(0),
+            latency: LatencyHistogram::new(),
+        });
+        let workers = (0..shared.config.workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("apack-serve-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn serving worker")
+            })
+            .collect();
+        let prefetcher = prefetch_cfg.map(|cfg| {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("apack-prefetch".to_string())
+                .spawn(move || prefetch_loop(&shared, &cfg))
+                .expect("spawn serving prefetcher")
+        });
+        Ok(Self { shared, workers, prefetcher })
+    }
+
+    /// Admit a request with the engine's default deadline. Non-blocking:
+    /// returns [`Error::Overloaded`] instead of queueing past
+    /// `queue_depth`.
+    pub fn submit(&self, request: Request) -> Result<Ticket> {
+        self.submit_with_deadline(request, self.shared.config.deadline)
+    }
+
+    /// Admit a request with an explicit deadline (`None` = no deadline),
+    /// overriding the engine default.
+    pub fn submit_with_deadline(
+        &self,
+        request: Request,
+        deadline: Option<Duration>,
+    ) -> Result<Ticket> {
+        let shared = &self.shared;
+        let slot = Arc::new(Slot::new());
+        let depth = {
+            let mut queue = shared.queue.lock().expect("serving queue lock");
+            if queue.len() >= shared.config.queue_depth {
+                drop(queue);
+                shared.shed_queue_full.fetch_add(1, Ordering::Relaxed);
+                return Err(Error::Overloaded {
+                    queue_depth: shared.config.queue_depth,
+                    deadline_expired: false,
+                });
+            }
+            queue.push_back(Queued {
+                request,
+                slot: Arc::clone(&slot),
+                enqueued: Instant::now(),
+                deadline,
+            });
+            queue.len()
+        };
+        shared.queue_depth_max.fetch_max(depth, Ordering::Relaxed);
+        shared.submitted.fetch_add(1, Ordering::Relaxed);
+        shared.queue_cv.notify_one();
+        Ok(Ticket { slot })
+    }
+
+    /// Blocking convenience: submit + wait.
+    pub fn get(&self, request: Request) -> Result<Arc<Vec<u32>>> {
+        self.submit(request)?.wait()
+    }
+
+    /// Blocking chunk read through the serving path.
+    pub fn get_chunk(&self, tensor: &str, chunk: usize) -> Result<Arc<Vec<u32>>> {
+        self.get(Request::Chunk { tensor: tensor.to_string(), chunk })
+    }
+
+    /// Blocking range read through the serving path.
+    pub fn get_range(&self, tensor: &str, range: Range<u64>) -> Result<Arc<Vec<u32>>> {
+        self.get(Request::Range { tensor: tensor.to_string(), range })
+    }
+
+    /// Blocking full-tensor read through the serving path.
+    pub fn get_tensor(&self, tensor: &str) -> Result<Arc<Vec<u32>>> {
+        self.get(Request::Tensor { tensor: tensor.to_string() })
+    }
+
+    /// The store this engine serves.
+    pub fn store(&self) -> &Arc<StoreHandle> {
+        &self.shared.store
+    }
+
+    /// The engine's configuration.
+    pub fn config(&self) -> &ServingConfig {
+        &self.shared.config
+    }
+
+    /// Point-in-time serving counters.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        let shared = &self.shared;
+        MetricsSnapshot {
+            submitted: shared.submitted.load(Ordering::Relaxed),
+            completed: shared.completed.load(Ordering::Relaxed),
+            shed_queue_full: shared.shed_queue_full.load(Ordering::Relaxed),
+            shed_deadline: shared.shed_deadline.load(Ordering::Relaxed),
+            coalesced_decodes: shared.coalesced.load(Ordering::Relaxed),
+            queue_depth: shared.queue.lock().expect("serving queue lock").len(),
+            queue_depth_max: shared.queue_depth_max.load(Ordering::Relaxed),
+            latency: shared.latency.snapshot(),
+        }
+    }
+
+    /// The store's read counters with this engine's serving counters
+    /// folded in (`coalesced_reads`, `shed_requests`;
+    /// `prefetched_chunks` is counted by the store itself).
+    pub fn stats(&self) -> crate::store::ReadStats {
+        let mut stats = self.shared.store.stats();
+        stats.coalesced_reads += self.shared.coalesced.load(Ordering::Relaxed);
+        stats.shed_requests += self.shared.shed_queue_full.load(Ordering::Relaxed)
+            + self.shared.shed_deadline.load(Ordering::Relaxed);
+        stats
+    }
+}
+
+impl Drop for ServingEngine {
+    /// Drain-then-join shutdown: workers answer every queued request
+    /// before exiting, so no admitted `Ticket` is left hanging.
+    fn drop(&mut self) {
+        // Flag shutdown while holding the queue mutex: a worker checks the
+        // flag under that mutex before parking, so the store can never
+        // slip between its check and its wait (lost-wakeup race). The
+        // prefetcher's park uses wait_timeout and self-recovers within
+        // one interval, so its notify needs no such ceremony.
+        {
+            let _queue = self.shared.queue.lock().expect("serving queue lock");
+            self.shared.shutdown.store(true, Ordering::Release);
+        }
+        self.shared.queue_cv.notify_all();
+        self.shared.prefetch_park.1.notify_all();
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+        if let Some(handle) = self.prefetcher.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Worker: pop → deadline check → decode (coalesced) → respond.
+fn worker_loop(shared: &Shared) {
+    loop {
+        let item = {
+            let mut queue = shared.queue.lock().expect("serving queue lock");
+            loop {
+                if let Some(item) = queue.pop_front() {
+                    break item;
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                queue = shared.queue_cv.wait(queue).expect("serving queue lock");
+            }
+        };
+        if let Some(deadline) = item.deadline {
+            if item.enqueued.elapsed() >= deadline {
+                shared.shed_deadline.fetch_add(1, Ordering::Relaxed);
+                item.slot.fill(Err(Error::Overloaded {
+                    queue_depth: shared.config.queue_depth,
+                    deadline_expired: true,
+                }));
+                continue;
+            }
+        }
+        let result = execute(shared, &item.request);
+        shared.latency.record(item.enqueued.elapsed());
+        shared.completed.fetch_add(1, Ordering::Relaxed);
+        item.slot.fill(result);
+    }
+}
+
+/// Decode one request against the store.
+fn execute(shared: &Shared, request: &Request) -> Result<Arc<Vec<u32>>> {
+    match request {
+        Request::Chunk { tensor, chunk } => decode_chunk(shared, tensor, *chunk),
+        Request::Range { tensor, range } => assemble_range(shared, tensor, range.clone()),
+        Request::Tensor { tensor } => {
+            let n_values = shared.store.meta(tensor)?.n_values;
+            assemble_range(shared, tensor, 0..n_values)
+        }
+    }
+}
+
+/// One chunk through hot-set tracking and (when enabled) the
+/// single-flight table.
+fn decode_chunk(shared: &Shared, tensor: &str, chunk: usize) -> Result<Arc<Vec<u32>>> {
+    if shared.config.prefetch.is_some() {
+        shared.hotset.touch(tensor, chunk);
+    }
+    if shared.config.coalescing {
+        let (result, coalesced) =
+            shared.flight.run(tensor, chunk, || shared.store.get_chunk(tensor, chunk));
+        if coalesced {
+            shared.coalesced.fetch_add(1, Ordering::Relaxed);
+        }
+        result
+    } else {
+        shared.store.get_chunk(tensor, chunk)
+    }
+}
+
+/// A value range assembled from its covering chunks, each fetched through
+/// [`decode_chunk`] so duplicate-heavy range traffic coalesces too.
+/// Chunks decode sequentially within one request — parallelism comes from
+/// the worker pool, not from fan-out inside a request.
+fn assemble_range(shared: &Shared, tensor: &str, range: Range<u64>) -> Result<Arc<Vec<u32>>> {
+    let meta = shared.store.meta(tensor)?;
+    if range.start > range.end || range.end > meta.n_values {
+        return Err(Error::Store(format!(
+            "tensor {tensor}: range {}..{} out of bounds (n_values {})",
+            range.start, range.end, meta.n_values
+        )));
+    }
+    if range.start == range.end {
+        return Ok(Arc::new(Vec::new()));
+    }
+    let first = meta.chunk_for_value(range.start);
+    let last = meta.chunk_for_value(range.end - 1);
+    let mut out = Vec::with_capacity((range.end - range.start) as usize);
+    for ci in first..=last {
+        let part = decode_chunk(shared, tensor, ci)?;
+        let covered = meta.chunk_value_range(ci);
+        let lo = range.start.max(covered.start) - covered.start;
+        let hi = range.end.min(covered.end) - covered.start;
+        out.extend_from_slice(&part[lo as usize..hi as usize]);
+    }
+    Ok(Arc::new(out))
+}
+
+/// Prefetch thread: park on the interval (shutdown-wakeable), scan the
+/// hot set, warm the store cache. Racing a demand decode is harmless —
+/// `prefetch_chunk` is a no-op on resident chunks.
+fn prefetch_loop(shared: &Shared, cfg: &PrefetchConfig) {
+    loop {
+        {
+            let park = shared.prefetch_park.0.lock().expect("prefetch park lock");
+            if shared.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            let _unused = shared
+                .prefetch_park
+                .1
+                .wait_timeout(park, cfg.interval)
+                .expect("prefetch park lock");
+        }
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        for (tensor, chunk, _touches) in shared.hotset.hottest(cfg.top_k, cfg.min_touches) {
+            if shared.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            // Unknown-tensor races can't happen (the hot set only holds
+            // names that decoded once); IO errors surface on the demand
+            // path too, so the prefetcher just moves on.
+            let _ = shared.store.prefetch_chunk(&tensor, chunk as usize);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apack::tablegen::TensorKind;
+    use crate::coordinator::PartitionPolicy;
+    use crate::models::distributions::ValueProfile;
+    use crate::store::StoreWriter;
+
+    fn build_store(tag: &str, n: usize) -> (std::path::PathBuf, Vec<u32>) {
+        let path = std::env::temp_dir()
+            .join(format!("apack_engine_{}_{tag}.apackstore", std::process::id()));
+        let values = ValueProfile::ReluActivation { sparsity: 0.5, q: 0.93, noise_floor: 0.01 }
+            .sample(8, n, 42);
+        let policy = PartitionPolicy { substreams: 8, min_per_stream: 128 };
+        let mut writer = StoreWriter::create(&path, policy).unwrap();
+        writer.add_tensor("t", 8, &values, TensorKind::Activations).unwrap();
+        writer.finish().unwrap();
+        (path, values)
+    }
+
+    #[test]
+    fn serves_bit_exact_through_every_request_kind() {
+        let (path, values) = build_store("kinds", 10_000);
+        let store = Arc::new(StoreHandle::open(&path).unwrap());
+        let engine = ServingEngine::start(
+            Arc::clone(&store),
+            ServingConfig { workers: 2, ..ServingConfig::default() },
+        )
+        .unwrap();
+
+        assert_eq!(engine.get_tensor("t").unwrap().as_slice(), &values[..]);
+        assert_eq!(
+            engine.get_range("t", 100..2345).unwrap().as_slice(),
+            &values[100..2345]
+        );
+        assert!(engine.get_range("t", 5000..5000).unwrap().is_empty());
+        let meta = store.meta("t").unwrap();
+        let covered = meta.chunk_value_range(3);
+        assert_eq!(
+            engine.get_chunk("t", 3).unwrap().as_slice(),
+            &values[covered.start as usize..covered.end as usize]
+        );
+
+        // Errors surface through the ticket, not as hangs or panics.
+        assert!(engine.get_tensor("absent").is_err());
+        assert!(engine.get_chunk("t", 999).is_err());
+        assert!(engine.get_range("t", 5..4).is_err());
+        assert!(engine.get_range("t", 0..999_999).is_err());
+
+        let m = engine.metrics();
+        assert_eq!(m.submitted, 8);
+        assert_eq!(m.completed, 8, "error responses complete too");
+        assert_eq!(m.shed_total(), 0);
+        assert_eq!(m.latency.count, 8);
+        drop(engine);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_degenerate_configs() {
+        let (path, _) = build_store("cfg", 2_000);
+        let store = Arc::new(StoreHandle::open(&path).unwrap());
+        assert!(ServingEngine::start(
+            Arc::clone(&store),
+            ServingConfig { workers: 0, ..ServingConfig::default() }
+        )
+        .is_err());
+        assert!(ServingEngine::start(
+            store,
+            ServingConfig { queue_depth: 0, ..ServingConfig::default() }
+        )
+        .is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn drop_drains_admitted_tickets() {
+        let (path, values) = build_store("drain", 20_000);
+        let store = Arc::new(StoreHandle::open(&path).unwrap());
+        let engine = ServingEngine::start(
+            store,
+            ServingConfig { workers: 2, queue_depth: 64, ..ServingConfig::default() },
+        )
+        .unwrap();
+        let tickets: Vec<Ticket> = (0..16)
+            .map(|i| {
+                engine
+                    .submit(Request::Range {
+                        tensor: "t".to_string(),
+                        range: (i * 1000)..(i * 1000 + 500),
+                    })
+                    .unwrap()
+            })
+            .collect();
+        drop(engine); // joins workers only after the queue is drained
+        for (i, ticket) in tickets.into_iter().enumerate() {
+            let got = ticket.wait().unwrap();
+            let lo = i * 1000;
+            assert_eq!(got.as_slice(), &values[lo..lo + 500], "request {i}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,79 @@
+//! **Serving layer** — a batching, admission-controlled request front for
+//! one [`crate::store::StoreHandle`].
+//!
+//! APack's deployment story (paper §V) is a memory path that serves
+//! decompressed values on demand while the data stays compressed at rest
+//! — the regime EIE demonstrated for inference from a compressed weight
+//! store, extended here with the request scheduling a store under heavy
+//! multi-tenant traffic needs. Raw `StoreHandle` reads give every caller
+//! its own decode and unbounded queueing under overload; the serving
+//! layer adds the four things between "a store" and "a service":
+//!
+//! 1. **A bounded queue + worker pool** ([`ServingEngine`]): clients
+//!    submit [`Request`]s and block on a [`Ticket`]; a fixed pool of
+//!    decode workers drains the queue. Throughput is set by workers ×
+//!    per-chunk decode rate, not by how many clients pile in.
+//! 2. **Chunk-level coalescing** ([`SingleFlight`]): concurrent requests
+//!    resolving to the same `(tensor, chunk)` share one arithmetic
+//!    decode instead of N — the request-side mirror of the store's LRU
+//!    (which only helps *after* a decode lands).
+//! 3. **Admission control**: a full queue or an expired deadline sheds
+//!    the request with the typed [`crate::error::Error::Overloaded`]
+//!    instead of letting latency grow without bound.
+//! 4. **Hot-set prefetch** ([`prefetch`]): access-frequency counters
+//!    (decayed every scan) drive a background thread that warms the
+//!    store's chunk cache ahead of demand via
+//!    [`crate::store::StoreHandle::prefetch_chunk`].
+//!
+//! # Request lifecycle
+//!
+//! ```text
+//!  client                ServingEngine                         store
+//!  ------                -------------                         -----
+//!  submit(req) ──► admission: queue full? deadline set?
+//!                  │  full ──► Err(Overloaded)  (shed, counted)
+//!                  ▼
+//!                bounded VecDeque ◄── workers park on condvar
+//!                  │ pop
+//!                  ▼
+//!                deadline expired? ──► Ticket ◄ Err(Overloaded)
+//!                  │ no
+//!                  ▼
+//!                per chunk: hot-set touch, then single-flight:
+//!                  leader ─────────────► get_chunk (CRC + decode, LRU)
+//!                  followers wait, share the leader's Arc
+//!                  │
+//!                  ▼
+//!  Ticket::wait ◄─ respond (latency recorded, metrics updated)
+//!
+//!  prefetch thread (optional): every interval, top-K hottest chunks
+//!  ──► StoreHandle::prefetch_chunk  (no-op when already resident)
+//! ```
+//!
+//! # Observability
+//!
+//! [`ServingEngine::metrics`] snapshots queue depth (current + peak),
+//! shed counts (queue-full vs deadline), coalesced decodes and a
+//! submit-to-response latency histogram (p50/p95/p99, ~25% bucket
+//! error); [`ServingEngine::stats`] returns the store's
+//! [`crate::store::ReadStats`] with the serving counters
+//! (`coalesced_reads`, `shed_requests`) folded in next to the store's
+//! own `prefetched_chunks`.
+//!
+//! # Submodules
+//!
+//! - [`engine`] — [`ServingEngine`], [`ServingConfig`], [`Request`],
+//!   [`Ticket`]: queue, workers, deadlines, shutdown-by-drain.
+//! - [`singleflight`] — [`SingleFlight`], the in-flight decode table.
+//! - [`prefetch`] — [`PrefetchConfig`] and the decayed hot-set counters.
+//! - [`metrics`] — [`LatencyHistogram`], [`MetricsSnapshot`].
+
+pub mod engine;
+pub mod metrics;
+pub mod prefetch;
+pub mod singleflight;
+
+pub use engine::{Request, ServingConfig, ServingEngine, Ticket};
+pub use metrics::{LatencyHistogram, LatencySnapshot, MetricsSnapshot};
+pub use prefetch::{HotSet, PrefetchConfig};
+pub use singleflight::{ChunkResult, SingleFlight};

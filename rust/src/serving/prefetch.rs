@@ -1,0 +1,139 @@
+//! Hot-set tracking for the serving prefetcher.
+//!
+//! Every chunk a request touches bumps a frequency counter; a background
+//! thread (see `serving::engine`) periodically asks for the hottest
+//! `(tensor, chunk)` pairs and warms the store's LRU cache via
+//! [`crate::store::StoreHandle::prefetch_chunk`] — decode-ahead for the
+//! traffic the engine is *about* to see, the software mirror of the
+//! paper's §V premise that decode bandwidth on the memory path is cheap
+//! relative to a demand stall.
+//!
+//! Counters **decay by half on every scan** and drop at zero, so the hot
+//! set tracks recent traffic rather than all-time totals; a chunk that
+//! stops being requested stops being prefetched within a few intervals.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Prefetcher tuning. `Default` suits closed-loop serving benches; widen
+/// `interval` for latency-insensitive batch traffic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PrefetchConfig {
+    /// How often the prefetch thread scans the hot set.
+    pub interval: Duration,
+    /// At most this many chunks warmed per scan.
+    pub top_k: usize,
+    /// Only chunks touched at least this often since the last scan
+    /// qualify (1 = everything seen; higher = only sustained traffic).
+    pub min_touches: u64,
+}
+
+impl Default for PrefetchConfig {
+    fn default() -> Self {
+        Self { interval: Duration::from_millis(2), top_k: 32, min_touches: 2 }
+    }
+}
+
+/// Frequency counters over `(tensor, chunk)`, touched by workers on every
+/// chunk access and drained by the prefetch thread.
+#[derive(Default)]
+pub struct HotSet {
+    /// tensor name -> chunk index -> touches since last decay.
+    counts: Mutex<HashMap<String, HashMap<u32, u64>>>,
+}
+
+impl HotSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one access (worker hot path: one short lock).
+    pub fn touch(&self, tensor: &str, chunk: usize) {
+        let mut counts = self.counts.lock().expect("hot-set lock");
+        match counts.get_mut(tensor) {
+            Some(inner) => *inner.entry(chunk as u32).or_insert(0) += 1,
+            None => {
+                counts.insert(tensor.to_string(), HashMap::from([(chunk as u32, 1u64)]));
+            }
+        }
+    }
+
+    /// The `top_k` hottest chunks with at least `min_touches`, hottest
+    /// first (ties broken by name/index so scans are deterministic), then
+    /// decay every counter by half, dropping the cold tail.
+    pub fn hottest(&self, top_k: usize, min_touches: u64) -> Vec<(String, u32, u64)> {
+        let mut counts = self.counts.lock().expect("hot-set lock");
+        let mut flat: Vec<(String, u32, u64)> = counts
+            .iter()
+            .flat_map(|(name, inner)| {
+                inner.iter().map(move |(&ci, &n)| (name.clone(), ci, n))
+            })
+            .filter(|entry| entry.2 >= min_touches.max(1))
+            .collect();
+        flat.sort_by(|a, b| {
+            b.2.cmp(&a.2).then_with(|| (a.0.as_str(), a.1).cmp(&(b.0.as_str(), b.1)))
+        });
+        flat.truncate(top_k);
+        for inner in counts.values_mut() {
+            inner.retain(|_, n| {
+                *n >>= 1;
+                *n > 0
+            });
+        }
+        counts.retain(|_, inner| !inner.is_empty());
+        flat
+    }
+
+    /// Distinct chunks currently tracked (diagnostics).
+    pub fn tracked(&self) -> usize {
+        self.counts.lock().expect("hot-set lock").values().map(HashMap::len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hottest_orders_filters_and_decays() {
+        let hs = HotSet::new();
+        for _ in 0..8 {
+            hs.touch("a", 0);
+        }
+        for _ in 0..4 {
+            hs.touch("a", 1);
+        }
+        hs.touch("b", 9);
+        assert_eq!(hs.tracked(), 3);
+
+        let hot = hs.hottest(10, 2);
+        assert_eq!(hot.len(), 2, "b/9 has one touch, below min_touches=2");
+        assert_eq!((hot[0].0.as_str(), hot[0].1, hot[0].2), ("a", 0, 8));
+        assert_eq!((hot[1].0.as_str(), hot[1].1, hot[1].2), ("a", 1, 4));
+
+        // Halved: 8->4, 4->2, 1->0 (dropped).
+        assert_eq!(hs.tracked(), 2);
+        let hot = hs.hottest(1, 1);
+        assert_eq!(hot.len(), 1, "top_k truncates");
+        assert_eq!((hot[0].0.as_str(), hot[0].1, hot[0].2), ("a", 0, 4));
+
+        // Two more decays (2->1->0, 1->0) and the set drains entirely.
+        hs.hottest(10, 1);
+        hs.hottest(10, 1);
+        assert_eq!(hs.tracked(), 0);
+        assert!(hs.hottest(10, 1).is_empty());
+    }
+
+    #[test]
+    fn ties_are_deterministic() {
+        let hs = HotSet::new();
+        hs.touch("b", 2);
+        hs.touch("a", 7);
+        hs.touch("a", 3);
+        let hot = hs.hottest(10, 1);
+        let order: Vec<(&str, u32)> =
+            hot.iter().map(|e| (e.0.as_str(), e.1)).collect();
+        assert_eq!(order, vec![("a", 3), ("a", 7), ("b", 2)]);
+    }
+}

@@ -1,0 +1,191 @@
+//! Single-flight table: chunk-level coalescing of concurrent duplicate
+//! decodes.
+//!
+//! Under hot-set traffic many in-flight requests resolve to the same
+//! `(tensor, chunk)`. Without coalescing each of them arithmetic-decodes
+//! the chunk independently — N× the work for one result (the LRU only
+//! helps *after* the first decode completes). The single-flight table
+//! gives every key at most one decode in flight: the first caller (the
+//! **leader**) runs the decode; callers that arrive while it is running
+//! (**followers**) block on the flight's condvar and share the leader's
+//! `Arc`'d result. A caller that arrives after the flight completed
+//! simply starts a new one — the table never caches results, it only
+//! collapses *concurrent* duplicates (the [`crate::store::ChunkCache`]
+//! owns temporal reuse).
+//!
+//! The leader publishes its result (success or error) before unlisting
+//! the key, so followers can never block on a completed flight; errors
+//! are `Clone` and shared like values, so one corrupt chunk fails every
+//! coalesced request identically.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::error::Result;
+
+/// Decoded chunk shared between coalesced requests.
+pub type ChunkResult = Result<Arc<Vec<u32>>>;
+
+/// One in-flight decode: the leader fills `result`, followers wait on
+/// `done`.
+struct Flight {
+    result: Mutex<Option<ChunkResult>>,
+    done: Condvar,
+}
+
+/// The table of in-flight `(tensor, chunk)` decodes.
+pub struct SingleFlight {
+    inflight: Mutex<HashMap<(String, u32), Arc<Flight>>>,
+}
+
+impl Default for SingleFlight {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SingleFlight {
+    pub fn new() -> Self {
+        Self { inflight: Mutex::new(HashMap::new()) }
+    }
+
+    /// Decode `(tensor, chunk)` through the table: run `decode` if no
+    /// flight is up, otherwise wait for the in-flight one. Returns the
+    /// shared result plus whether this call was coalesced onto another
+    /// caller's flight (`true` only for followers).
+    ///
+    /// `decode` must not panic: a leader that unwinds would strand its
+    /// followers (store decode paths report all failures as `Err`).
+    pub fn run(
+        &self,
+        tensor: &str,
+        chunk: usize,
+        decode: impl FnOnce() -> ChunkResult,
+    ) -> (ChunkResult, bool) {
+        let key = (tensor.to_string(), chunk as u32);
+        let (flight, leader) = {
+            let mut map = self.inflight.lock().expect("single-flight table lock");
+            match map.get(&key) {
+                Some(f) => (Arc::clone(f), false),
+                None => {
+                    let f = Arc::new(Flight {
+                        result: Mutex::new(None),
+                        done: Condvar::new(),
+                    });
+                    map.insert(key.clone(), Arc::clone(&f));
+                    (f, true)
+                }
+            }
+        };
+        if leader {
+            let result = decode();
+            *flight.result.lock().expect("single-flight result lock") = Some(result.clone());
+            flight.done.notify_all();
+            // Publish before unlisting: a caller holding the flight Arc
+            // reads the stored result; a caller arriving after the remove
+            // starts a fresh flight.
+            self.inflight.lock().expect("single-flight table lock").remove(&key);
+            (result, false)
+        } else {
+            let mut slot = flight.result.lock().expect("single-flight result lock");
+            while slot.is_none() {
+                slot = flight.done.wait(slot).expect("single-flight result lock");
+            }
+            (slot.as_ref().expect("loop exits on Some").clone(), true)
+        }
+    }
+
+    /// Number of decodes currently in flight (diagnostics).
+    pub fn inflight_len(&self) -> usize {
+        self.inflight.lock().expect("single-flight table lock").len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Barrier;
+    use std::time::Duration;
+
+    #[test]
+    fn concurrent_duplicates_share_one_decode() {
+        let flight = SingleFlight::new();
+        let decodes = AtomicU64::new(0);
+        let coalesced = AtomicU64::new(0);
+        let barrier = Barrier::new(8);
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| {
+                    barrier.wait();
+                    let (res, joined) = flight.run("t", 3, || {
+                        decodes.fetch_add(1, Ordering::Relaxed);
+                        // Long enough that every barrier-released peer
+                        // arrives while this flight is still up.
+                        std::thread::sleep(Duration::from_millis(100));
+                        Ok(Arc::new(vec![7u32, 8, 9]))
+                    });
+                    assert_eq!(res.unwrap().as_slice(), &[7, 8, 9]);
+                    if joined {
+                        coalesced.fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        assert_eq!(decodes.load(Ordering::Relaxed), 1, "one leader only");
+        assert_eq!(coalesced.load(Ordering::Relaxed), 7, "everyone else follows");
+        assert_eq!(flight.inflight_len(), 0, "table drains");
+    }
+
+    #[test]
+    fn distinct_keys_do_not_coalesce() {
+        let flight = SingleFlight::new();
+        let (a, ca) = flight.run("t", 0, || Ok(Arc::new(vec![1u32])));
+        let (b, cb) = flight.run("t", 1, || Ok(Arc::new(vec![2u32])));
+        let (c, cc) = flight.run("u", 0, || Ok(Arc::new(vec![3u32])));
+        assert_eq!(a.unwrap()[0], 1);
+        assert_eq!(b.unwrap()[0], 2);
+        assert_eq!(c.unwrap()[0], 3);
+        assert!(!ca && !cb && !cc);
+    }
+
+    #[test]
+    fn errors_are_shared_like_values() {
+        let flight = SingleFlight::new();
+        let barrier = Barrier::new(4);
+        let fails = AtomicU64::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    barrier.wait();
+                    let (res, _) = flight.run("t", 0, || {
+                        std::thread::sleep(Duration::from_millis(50));
+                        Err(crate::error::Error::Store("injected".into()))
+                    });
+                    assert!(res.is_err());
+                    fails.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(fails.load(Ordering::Relaxed), 4);
+        // A later call retries rather than replaying the stale error.
+        let (res, joined) = flight.run("t", 0, || Ok(Arc::new(vec![5u32])));
+        assert_eq!(res.unwrap()[0], 5);
+        assert!(!joined);
+    }
+
+    #[test]
+    fn sequential_calls_lead_their_own_flights() {
+        let flight = SingleFlight::new();
+        let decodes = AtomicU64::new(0);
+        for _ in 0..3 {
+            let (res, joined) = flight.run("t", 0, || {
+                decodes.fetch_add(1, Ordering::Relaxed);
+                Ok(Arc::new(vec![1u32]))
+            });
+            assert!(res.is_ok());
+            assert!(!joined, "no concurrency, no coalescing");
+        }
+        assert_eq!(decodes.load(Ordering::Relaxed), 3);
+    }
+}

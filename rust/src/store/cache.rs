@@ -73,6 +73,13 @@ impl ChunkCache {
         }
     }
 
+    /// Whether a chunk is resident, without refreshing its recency (the
+    /// prefetcher peeks before decoding so a warm chunk costs nothing and
+    /// demand traffic alone drives the LRU order).
+    pub fn contains(&self, key: ChunkKey) -> bool {
+        self.map.contains_key(&key)
+    }
+
     /// Drop every entry (used by benches to measure the cold path).
     pub fn clear(&mut self) {
         self.map.clear();

@@ -119,6 +119,16 @@ impl StoreHandle {
         }
     }
 
+    /// Warm the chunk cache with one chunk ahead of demand (the serving
+    /// layer's hot-set prefetcher drives this; see
+    /// [`StoreReader::prefetch_chunk`]). Returns whether a decode happened.
+    pub fn prefetch_chunk(&self, name: &str, ci: usize) -> Result<bool> {
+        match self {
+            StoreHandle::Single(r) => r.prefetch_chunk(name, ci),
+            StoreHandle::Sharded(r) => r.prefetch_chunk(name, ci),
+        }
+    }
+
     /// Snapshot the cumulative read counters (sharded: aggregated).
     pub fn stats(&self) -> ReadStats {
         match self {

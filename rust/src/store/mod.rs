@@ -46,11 +46,14 @@
 //! # The `StoreHandle` contract
 //!
 //! [`StoreHandle`] is the single type every consumer (CLI, eval report,
-//! benches, serving example) holds. It presents the same surface over
+//! benches, the serving layer) holds. It presents the same surface over
 //! either layout — `get_tensor` / `get_chunk` / `get_range` / `meta` /
-//! `stats` / `verify` / `clear_cache` — with identical semantics:
-//! bit-exact decode, reads touch only covering chunks, every read is
-//! CRC-checked, stats aggregate across shards.
+//! `stats` / `verify` / `clear_cache` / `prefetch_chunk` — with
+//! identical semantics: bit-exact decode, reads touch only covering
+//! chunks, every read is CRC-checked, stats aggregate across shards.
+//! [`crate::serving::ServingEngine`] builds request scheduling
+//! (batching, coalescing, admission control, prefetch) on top of this
+//! surface without the store knowing.
 //!
 //! # Submodules
 //!

@@ -43,10 +43,23 @@ pub struct ReadStats {
     pub backend: Backend,
     /// Compressed chunk bytes fetched from the source.
     pub bytes_read: u64,
-    /// Chunks arithmetic-decoded (cache misses).
+    /// Chunks arithmetic-decoded (cache misses plus prefetch decodes).
     pub chunks_decoded: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Chunks decoded ahead of demand into the LRU by
+    /// [`StoreReader::prefetch_chunk`]. Prefetch decodes count here and in
+    /// `chunks_decoded`/`bytes_read` (the IO is real) but **not** in the
+    /// hit/miss counters, so `hit_rate()` stays a demand-traffic signal.
+    pub prefetched_chunks: u64,
+    /// Serving-layer counter: requests that shared another request's
+    /// in-flight decode instead of decoding again. Zero unless the stats
+    /// come through a `serving::ServingEngine`.
+    pub coalesced_reads: u64,
+    /// Serving-layer counter: requests shed by admission control
+    /// (queue full or deadline expired). Zero unless the stats come
+    /// through a `serving::ServingEngine`.
+    pub shed_requests: u64,
 }
 
 impl ReadStats {
@@ -67,6 +80,9 @@ impl ReadStats {
         self.chunks_decoded += other.chunks_decoded;
         self.cache_hits += other.cache_hits;
         self.cache_misses += other.cache_misses;
+        self.prefetched_chunks += other.prefetched_chunks;
+        self.coalesced_reads += other.coalesced_reads;
+        self.shed_requests += other.shed_requests;
     }
 }
 
@@ -100,6 +116,7 @@ pub struct StoreReader {
     chunks_decoded: AtomicU64,
     cache_hits: AtomicU64,
     cache_misses: AtomicU64,
+    prefetched_chunks: AtomicU64,
 }
 
 impl StoreReader {
@@ -179,6 +196,7 @@ impl StoreReader {
             chunks_decoded: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
             cache_misses: AtomicU64::new(0),
+            prefetched_chunks: AtomicU64::new(0),
         })
     }
 
@@ -254,6 +272,49 @@ impl StoreReader {
         self.chunks_decoded.fetch_add(1, Ordering::Relaxed);
         self.cache.lock().expect("store cache lock").insert(key, Arc::clone(&values));
         Ok(values)
+    }
+
+    /// Warm the cache with chunk `ci` of `name` if it is not resident:
+    /// decode and insert, counted in `prefetched_chunks` (and, since the
+    /// IO and decode are real, in `bytes_read`/`chunks_decoded`) but not
+    /// in the cache hit/miss counters — `hit_rate()` keeps measuring
+    /// demand traffic only. Returns whether a decode actually happened
+    /// (`false`: already resident, caching disabled, or the chunk is
+    /// larger than the whole cache budget and could never stay resident).
+    pub fn prefetch_chunk(&self, name: &str, ci: usize) -> Result<bool> {
+        let ti = self
+            .index
+            .position(name)
+            .ok_or_else(|| Error::Store(format!("no tensor named {name:?}")))?;
+        let t = &self.index.tensors[ti];
+        if ci >= t.chunks.len() {
+            return Err(Error::Store(format!(
+                "tensor {name}: chunk {ci} out of range (has {})",
+                t.chunks.len()
+            )));
+        }
+        let key: ChunkKey = (ti as u32, ci as u32);
+        {
+            let cache = self.cache.lock().expect("store cache lock");
+            let budget = cache.capacity_values();
+            if budget == 0 || t.chunks[ci].n_values as usize > budget || cache.contains(key) {
+                return Ok(false);
+            }
+        }
+        let blob = self.read_chunk_bytes(t, ci)?;
+        let container = Container::body_from_bytes(t.table.clone(), &blob)?;
+        drop(blob);
+        if container.n_values != t.chunks[ci].n_values {
+            return Err(Error::Store(format!(
+                "tensor {}: chunk {ci} holds {} values, index says {}",
+                t.name, container.n_values, t.chunks[ci].n_values
+            )));
+        }
+        let values = Arc::new(container.decode()?);
+        self.chunks_decoded.fetch_add(1, Ordering::Relaxed);
+        self.prefetched_chunks.fetch_add(1, Ordering::Relaxed);
+        self.cache.lock().expect("store cache lock").insert(key, values);
+        Ok(true)
     }
 
     /// Decode one chunk (CRC-checked; served from cache when resident).
@@ -359,6 +420,9 @@ impl StoreReader {
             chunks_decoded: self.chunks_decoded.load(Ordering::Relaxed),
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            prefetched_chunks: self.prefetched_chunks.load(Ordering::Relaxed),
+            coalesced_reads: 0,
+            shed_requests: 0,
         }
     }
 
@@ -368,6 +432,7 @@ impl StoreReader {
         self.chunks_decoded.store(0, Ordering::Relaxed);
         self.cache_hits.store(0, Ordering::Relaxed);
         self.cache_misses.store(0, Ordering::Relaxed);
+        self.prefetched_chunks.store(0, Ordering::Relaxed);
     }
 
     /// Drop all cached chunks (benches use this to time the cold path).
@@ -473,6 +538,34 @@ mod tests {
         assert_eq!(warm.bytes_read, cold.bytes_read, "hit must not re-read disk");
         assert_eq!(warm.chunks_decoded, cold.chunks_decoded);
         assert_eq!(warm.hit_rate(), 0.5);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn prefetch_warms_cache_without_demand_counters() {
+        let (path, values) = build_store("prefetch", 10_000);
+        let r = StoreReader::open(&path).unwrap();
+        assert!(r.prefetch_chunk("t", 2).unwrap(), "cold chunk must decode");
+        let s = r.stats();
+        assert_eq!(s.prefetched_chunks, 1);
+        assert_eq!(s.chunks_decoded, 1);
+        assert!(s.bytes_read > 0, "prefetch IO is accounted");
+        assert_eq!(s.cache_hits + s.cache_misses, 0, "no demand lookups yet");
+        // Resident now: a repeat prefetch is a no-op, a demand read hits.
+        assert!(!r.prefetch_chunk("t", 2).unwrap());
+        let covered = r.meta("t").unwrap().chunk_value_range(2);
+        assert_eq!(
+            r.get_chunk("t", 2).unwrap().as_slice(),
+            &values[covered.start as usize..covered.end as usize]
+        );
+        let s = r.stats();
+        assert_eq!((s.cache_hits, s.cache_misses, s.prefetched_chunks), (1, 0, 1));
+        assert!(r.prefetch_chunk("nope", 0).is_err());
+        assert!(r.prefetch_chunk("t", 99).is_err());
+        // Caching disabled: prefetch is a no-op, not an error.
+        let off = StoreReader::open_with(&path, Backend::Mmap, 0).unwrap();
+        assert!(!off.prefetch_chunk("t", 0).unwrap());
+        assert_eq!(off.stats().prefetched_chunks, 0);
         std::fs::remove_file(&path).ok();
     }
 

@@ -393,6 +393,12 @@ impl ShardedStoreReader {
         self.home(name).get_tensor(name)
     }
 
+    /// Warm the home shard's cache with one chunk
+    /// (see [`StoreReader::prefetch_chunk`]).
+    pub fn prefetch_chunk(&self, name: &str, ci: usize) -> Result<bool> {
+        self.home(name).prefetch_chunk(name, ci)
+    }
+
     /// Decode a value range of a tensor.
     pub fn get_range(&self, name: &str, range: std::ops::Range<u64>) -> Result<Vec<u32>> {
         self.home(name).get_range(name, range)

@@ -1,0 +1,381 @@
+//! Serving-layer integration tests: concurrency stress with bit-exact
+//! verification, admission control under saturation (typed shedding, no
+//! hangs), coalescing under duplicate storms, deadline expiry, and the
+//! prefetcher warming the chunk cache.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use apack_repro::apack::tablegen::TensorKind;
+use apack_repro::coordinator::PartitionPolicy;
+use apack_repro::models::distributions::ValueProfile;
+use apack_repro::serving::{PrefetchConfig, Request, ServingConfig, ServingEngine, Ticket};
+use apack_repro::store::{Backend, ShardedStoreWriter, StoreHandle, StoreWriter};
+use apack_repro::util::Rng64;
+use apack_repro::Error;
+
+fn tensor_values(n: usize, seed: u64) -> Vec<u32> {
+    ValueProfile::ReluActivation { sparsity: 0.5, q: 0.93, noise_floor: 0.01 }
+        .sample(8, n, seed)
+}
+
+/// Build a store (single-file or sharded) of `n_tensors` × `n_values`.
+fn build_store(
+    tag: &str,
+    n_tensors: usize,
+    n_values: usize,
+    shards: usize,
+) -> (PathBuf, HashMap<String, Vec<u32>>) {
+    let policy = PartitionPolicy { substreams: 8, min_per_stream: 256 };
+    let tensors: Vec<(String, Vec<u32>)> = (0..n_tensors)
+        .map(|i| (format!("t{i}"), tensor_values(n_values, 7000 + i as u64)))
+        .collect();
+    let path = if shards > 1 {
+        let dir = std::env::temp_dir().join(format!(
+            "apack_serving_{}_{tag}.apackstore.d",
+            std::process::id()
+        ));
+        let mut writer = ShardedStoreWriter::create(&dir, shards, policy).unwrap();
+        for (name, values) in &tensors {
+            writer.add_tensor(name, 8, values, TensorKind::Activations).unwrap();
+        }
+        writer.finish().unwrap();
+        dir
+    } else {
+        let file = std::env::temp_dir().join(format!(
+            "apack_serving_{}_{tag}.apackstore",
+            std::process::id()
+        ));
+        let mut writer = StoreWriter::create(&file, policy).unwrap();
+        for (name, values) in &tensors {
+            writer.add_tensor(name, 8, values, TensorKind::Activations).unwrap();
+        }
+        writer.finish().unwrap();
+        file
+    };
+    (path, tensors.into_iter().collect())
+}
+
+fn cleanup(path: &PathBuf) {
+    if path.is_dir() {
+        std::fs::remove_dir_all(path).ok();
+    } else {
+        std::fs::remove_file(path).ok();
+    }
+}
+
+/// Many client threads through one engine, every response verified
+/// bit-exact against the reference decode. Covers both store layouts.
+#[test]
+fn stress_concurrent_clients_bit_exact() {
+    for shards in [1usize, 3] {
+        let (path, reference) = build_store("stress", 3, 30_000, shards);
+        let store = Arc::new(StoreHandle::open(&path).unwrap());
+        let engine = ServingEngine::start(
+            Arc::clone(&store),
+            ServingConfig {
+                workers: 4,
+                queue_depth: 128,
+                coalescing: true,
+                deadline: None,
+                prefetch: Some(PrefetchConfig {
+                    interval: Duration::from_millis(1),
+                    ..PrefetchConfig::default()
+                }),
+            },
+        )
+        .unwrap();
+        let names: Vec<String> = reference.keys().cloned().collect();
+
+        let clients = 8usize;
+        let requests = 120usize;
+        std::thread::scope(|scope| {
+            for tid in 0..clients {
+                let engine = &engine;
+                let reference = &reference;
+                let names = &names;
+                scope.spawn(move || {
+                    let mut rng = Rng64::new(0xAB + tid as u64);
+                    for i in 0..requests {
+                        let name = &names[rng.below(names.len() as u64) as usize];
+                        let expect = &reference[name];
+                        let meta = engine.store().meta(name).unwrap();
+                        match i % 3 {
+                            0 => {
+                                // Hot chunk: duplicate-heavy on purpose.
+                                let covered = meta.chunk_value_range(0);
+                                let got = engine.get_chunk(name, 0).unwrap();
+                                assert_eq!(
+                                    got.as_slice(),
+                                    &expect[covered.start as usize..covered.end as usize]
+                                );
+                            }
+                            1 => {
+                                let n = meta.n_values;
+                                let lo = rng.below(n);
+                                let span = 1 + rng.below((n - lo).min(5000));
+                                let got = engine.get_range(name, lo..lo + span).unwrap();
+                                assert_eq!(
+                                    got.as_slice(),
+                                    &expect[lo as usize..(lo + span) as usize]
+                                );
+                            }
+                            _ => {
+                                let ci = rng.below(meta.chunks.len() as u64) as usize;
+                                let covered = meta.chunk_value_range(ci);
+                                let got = engine.get_chunk(name, ci).unwrap();
+                                assert_eq!(
+                                    got.as_slice(),
+                                    &expect[covered.start as usize..covered.end as usize]
+                                );
+                            }
+                        }
+                    }
+                });
+            }
+        });
+
+        let m = engine.metrics();
+        let total = (clients * requests) as u64;
+        assert_eq!(m.submitted, total, "{shards} shard(s)");
+        assert_eq!(m.completed, total, "closed-loop clients never overflow the queue");
+        assert_eq!(m.shed_total(), 0);
+        assert_eq!(m.latency.count, total);
+        assert!(m.queue_depth_max <= 128);
+        let stats = engine.stats();
+        assert_eq!(stats.shed_requests, 0);
+        assert!(
+            stats.cache_hits + stats.chunks_decoded > 0,
+            "traffic must have flowed through the store"
+        );
+        drop(engine);
+        cleanup(&path);
+    }
+}
+
+/// A saturated queue sheds with `Error::Overloaded` instead of hanging,
+/// and every admitted request still answers bit-exactly.
+#[test]
+fn admission_control_sheds_instead_of_hanging() {
+    let (path, reference) = build_store("admission", 1, 60_000, 1);
+    let store = Arc::new(StoreHandle::open(&path).unwrap());
+    let engine = ServingEngine::start(
+        Arc::clone(&store),
+        ServingConfig {
+            workers: 1,
+            queue_depth: 2,
+            coalescing: true,
+            deadline: None,
+            prefetch: None,
+        },
+    )
+    .unwrap();
+
+    // Flood: full-tensor decodes are slow, submits are instant, so the
+    // 2-deep queue must overflow.
+    let flood = 64usize;
+    let mut admitted: Vec<Ticket> = Vec::new();
+    let mut shed = 0u64;
+    for _ in 0..flood {
+        match engine.submit(Request::Tensor { tensor: "t0".to_string() }) {
+            Ok(ticket) => admitted.push(ticket),
+            Err(Error::Overloaded { queue_depth, deadline_expired }) => {
+                assert_eq!(queue_depth, 2);
+                assert!(!deadline_expired);
+                shed += 1;
+            }
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    assert!(shed > 0, "64 instant submits must overflow a 2-deep queue");
+
+    let expect = &reference["t0"];
+    let admitted_count = admitted.len() as u64;
+    for ticket in admitted {
+        assert_eq!(ticket.wait().unwrap().as_slice(), &expect[..]);
+    }
+    let m = engine.metrics();
+    assert_eq!(m.submitted, admitted_count);
+    assert_eq!(m.completed, admitted_count);
+    assert_eq!(m.shed_queue_full, shed);
+    assert_eq!(admitted_count + shed, flood as u64);
+    assert_eq!(engine.stats().shed_requests, shed);
+    drop(engine);
+    cleanup(&path);
+}
+
+/// A zero deadline expires every queued request: typed deadline shed.
+#[test]
+fn expired_deadlines_shed_at_pop() {
+    let (path, _) = build_store("deadline", 1, 5_000, 1);
+    let store = Arc::new(StoreHandle::open(&path).unwrap());
+    let engine = ServingEngine::start(
+        Arc::clone(&store),
+        ServingConfig {
+            workers: 1,
+            queue_depth: 64,
+            coalescing: true,
+            deadline: Some(Duration::ZERO),
+            prefetch: None,
+        },
+    )
+    .unwrap();
+    for _ in 0..6 {
+        match engine.get_chunk("t0", 0) {
+            Err(Error::Overloaded { deadline_expired, .. }) => assert!(deadline_expired),
+            other => panic!("zero deadline must shed, got {other:?}"),
+        }
+    }
+    // A per-request override lifts the engine default.
+    let got = engine
+        .submit_with_deadline(
+            Request::Chunk { tensor: "t0".to_string(), chunk: 0 },
+            Some(Duration::from_secs(60)),
+        )
+        .unwrap()
+        .wait();
+    assert!(got.is_ok(), "a generous per-request deadline must serve normally");
+    let m = engine.metrics();
+    assert_eq!(m.shed_deadline, 6);
+    assert_eq!(m.completed, 1);
+    drop(engine);
+    cleanup(&path);
+}
+
+/// Duplicate burst against an uncached store: coalescing ON decodes
+/// measurably fewer chunks than OFF at identical (bit-exact) results.
+#[test]
+fn coalescing_cuts_duplicate_decodes() {
+    let (path, reference) = build_store("coalesce", 1, 40_000, 1);
+    let expect = &reference["t0"];
+    let burst = 96usize;
+    let mut decoded = [0u64; 2];
+    for (mode, coalescing) in [false, true].into_iter().enumerate() {
+        // cache_values = 0: every decode is real, so the counter isolates
+        // the single-flight effect.
+        let store =
+            Arc::new(StoreHandle::open_with(&path, Backend::Mmap, 0).unwrap());
+        let engine = ServingEngine::start(
+            Arc::clone(&store),
+            ServingConfig {
+                workers: 4,
+                queue_depth: burst + 8,
+                coalescing,
+                deadline: None,
+                prefetch: None,
+            },
+        )
+        .unwrap();
+        let covered = store.meta("t0").unwrap().chunk_value_range(1);
+        let tickets: Vec<Ticket> = (0..burst)
+            .map(|_| {
+                engine
+                    .submit(Request::Chunk { tensor: "t0".to_string(), chunk: 1 })
+                    .unwrap()
+            })
+            .collect();
+        for ticket in tickets {
+            assert_eq!(
+                ticket.wait().unwrap().as_slice(),
+                &expect[covered.start as usize..covered.end as usize],
+                "coalescing must never change bytes"
+            );
+        }
+        let stats = engine.stats();
+        decoded[mode] = stats.chunks_decoded;
+        if coalescing {
+            assert_eq!(stats.coalesced_reads, engine.metrics().coalesced_decodes);
+            assert!(stats.coalesced_reads > 0, "duplicates must share flights");
+        } else {
+            assert_eq!(stats.coalesced_reads, 0);
+        }
+        drop(engine);
+    }
+    assert_eq!(decoded[0], burst as u64, "coalescing off: every duplicate decodes");
+    assert!(
+        decoded[1] < decoded[0],
+        "coalescing on must decode less: {} vs {}",
+        decoded[1],
+        decoded[0]
+    );
+    cleanup(&path);
+}
+
+/// The prefetcher decodes hot chunks back into a cleared cache.
+#[test]
+fn prefetcher_warms_cleared_cache() {
+    let (path, reference) = build_store("prefetch", 1, 20_000, 1);
+    let store = Arc::new(StoreHandle::open(&path).unwrap());
+    let engine = ServingEngine::start(
+        Arc::clone(&store),
+        ServingConfig {
+            workers: 2,
+            queue_depth: 64,
+            coalescing: true,
+            deadline: None,
+            prefetch: Some(PrefetchConfig {
+                interval: Duration::from_millis(1),
+                top_k: 8,
+                min_touches: 1,
+            }),
+        },
+    )
+    .unwrap();
+    let expect = &reference["t0"];
+    let covered = store.meta("t0").unwrap().chunk_value_range(2);
+
+    // Keep chunk 2 hot while repeatedly clearing the cache: the prefetch
+    // thread must eventually decode it back in on its own.
+    let mut warmed = false;
+    for _ in 0..400 {
+        for _ in 0..4 {
+            let got = engine.get_chunk("t0", 2).unwrap();
+            assert_eq!(
+                got.as_slice(),
+                &expect[covered.start as usize..covered.end as usize]
+            );
+        }
+        store.clear_cache();
+        std::thread::sleep(Duration::from_millis(2));
+        if store.stats().prefetched_chunks > 0 {
+            warmed = true;
+            break;
+        }
+    }
+    assert!(warmed, "prefetcher never warmed the cache in 400 rounds");
+    drop(engine);
+    cleanup(&path);
+}
+
+/// Errors inside requests surface through tickets; the engine keeps
+/// serving afterwards (no worker death, no hang).
+#[test]
+fn request_errors_do_not_poison_the_engine() {
+    let (path, reference) = build_store("errors", 1, 10_000, 1);
+    let store = Arc::new(StoreHandle::open(&path).unwrap());
+    let engine = ServingEngine::start(
+        store,
+        ServingConfig {
+            workers: 2,
+            queue_depth: 32,
+            coalescing: true,
+            deadline: None,
+            prefetch: None,
+        },
+    )
+    .unwrap();
+    assert!(engine.get_tensor("absent").is_err());
+    assert!(engine.get_chunk("t0", 9999).is_err());
+    assert!(engine.get_range("t0", 9..3).is_err());
+    // Still serving, bit-exactly.
+    assert_eq!(
+        engine.get_tensor("t0").unwrap().as_slice(),
+        &reference["t0"][..]
+    );
+    let m = engine.metrics();
+    assert_eq!(m.completed, 4, "error responses count as completed work");
+    drop(engine);
+    cleanup(&path);
+}
