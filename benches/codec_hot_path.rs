@@ -1,58 +1,55 @@
-//! Hot-path throughput bench: software encoder/decoder values/s and GB/s,
-//! single-stream and through the parallel coordinator — the §Perf numbers
-//! in EXPERIMENTS.md come from this target.
+//! Hot-path throughput bench: software encoder/decoder values/s and GB/s —
+//! single-stream (per-value reference vs. block `decode_into`, every
+//! `ResolveMode`) and through the parallel coordinator.
+//!
+//! Thin wrapper over [`apack_repro::eval::hot_path`]: the harness asserts
+//! every decode configuration bit-exact against the encoder input before
+//! timing it, then writes the machine-readable `BENCH_codec_hot_path.json`
+//! at the package root (uploaded as a CI artifact) so decode throughput is
+//! a tracked number PR over PR.
+//!
+//! Pass `--quick` (CI does) for fewer iterations; the workload stays the
+//! reference 4M-value ReLU-activation tensor either way. Table-generation
+//! cost (the offline profiling step) is timed here too since it is not
+//! part of the JSON schema.
 
-use apack_repro::apack::bitstream::BitReader;
-use apack_repro::apack::decoder::{ApackDecoder, ResolveMode};
-use apack_repro::apack::encoder::ApackEncoder;
+use std::path::Path;
+
 use apack_repro::apack::tablegen::{table_for_tensor, TensorKind};
-use apack_repro::coordinator::{Coordinator, PartitionPolicy};
+use apack_repro::eval::hot_path::{self, HotPathConfig};
 use apack_repro::models::distributions::ValueProfile;
 use apack_repro::util::bench::Bench;
 
 fn main() {
-    let n = 4_000_000usize;
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cfg = if quick { HotPathConfig::quick() } else { HotPathConfig::full() };
+
+    let report = hot_path::run(&cfg);
+    print!("{}", report.render());
+
+    // Persist the artifact BEFORE the regression gate below: a failing run
+    // is exactly when the recorded numbers matter.
+    let path = Path::new(hot_path::REPORT_FILE);
+    report.write_json(path).expect("write bench JSON");
+    println!("wrote {}", path.display());
+
+    // Release-profile regression floor: the block+Lut fast path must beat
+    // the per-value RowScan baseline outright (the ISSUE-4 target is ≥2×;
+    // the hard gate is kept at >1× so shared CI runners don't flake, and
+    // the exact ratio is tracked in the JSON artifact PR over PR).
+    assert!(
+        report.speedup_block_lut_vs_per_value_rowscan > 1.0,
+        "block Lut decode ({:.2}x) regressed below the per-value RowScan baseline",
+        report.speedup_block_lut_vs_per_value_rowscan
+    );
+
+    // Table generation cost (the offline Listing-1 search), outside the
+    // JSON schema but worth watching.
+    let bench = if quick { Bench::quick() } else { Bench::default() };
     let values = ValueProfile::ReluActivation { sparsity: 0.5, q: 0.93, noise_floor: 0.01 }
-        .sample(8, n, 42);
-    let table = table_for_tensor(8, &values, TensorKind::Activations).unwrap();
-    let bench = Bench::default();
-
-    // Single-stream encode.
-    let s = bench.run("encode single-stream (4M values)", || {
-        ApackEncoder::encode_all(&table, &values).unwrap()
-    });
-    println!("{}", s.report(Some(n as u64)));
-
-    // Single-stream decode, both resolver models.
-    let (sym, sb, ofs, ob) = ApackEncoder::encode_all(&table, &values).unwrap();
-    for mode in [ResolveMode::Division, ResolveMode::RowScan] {
-        let s = bench.run(&format!("decode single-stream {mode:?}"), || {
-            let mut dec =
-                ApackDecoder::new(&table, BitReader::new(&sym, sb)).unwrap().with_mode(mode);
-            let mut ofs_r = BitReader::new(&ofs, ob);
-            let mut acc = 0u64;
-            for _ in 0..n {
-                acc += dec.decode_value(&mut ofs_r).unwrap() as u64;
-            }
-            acc
-        });
-        println!("{}", s.report(Some(n as u64)));
-    }
-
-    // Parallel coordinator (64 substreams).
-    let mut coord = Coordinator::new(PartitionPolicy::default());
-    let s = bench.run("coordinator encode (64 substreams)", || {
-        coord.compress_with_table(table.clone(), &values).unwrap()
-    });
-    println!("{}", s.report(Some(n as u64)));
-
-    let sc = coord.compress_with_table(table.clone(), &values).unwrap();
-    let s = bench.run("coordinator decode (64 substreams)", || coord.decompress(&sc).unwrap());
-    println!("{}", s.report(Some(n as u64)));
-
-    // Table generation cost (the offline profiling step).
+        .sample(8, 65_536, 42);
     let s = bench.run("table generation (Listing 1 search)", || {
-        table_for_tensor(8, &values[..65536], TensorKind::Activations).unwrap()
+        table_for_tensor(8, &values, TensorKind::Activations).unwrap()
     });
     println!("{}", s.report(None));
 }

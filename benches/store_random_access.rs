@@ -190,11 +190,13 @@ fn main() {
     let stats = store.stats();
     println!(
         "single-file session: {:.1} MiB compressed via {} backend, {} decodes, \
-         hit rate {:.0}%",
+         hit rate {:.0}%, decode {:.1} MB/s/thread, scratch reuse {:.0}%",
         stats.bytes_read as f64 / (1 << 20) as f64,
         stats.backend.name(),
         stats.chunks_decoded,
-        100.0 * stats.hit_rate()
+        100.0 * stats.hit_rate(),
+        stats.decode_mb_per_s(),
+        100.0 * stats.scratch_reuse_rate()
     );
     drop(store);
 
@@ -225,6 +227,14 @@ fn main() {
     println!(
         "sharded get_range  {threads:>2} threads  {dt:>10.3?}  {:>8.1} Mvalues/s",
         served as f64 / dt.as_secs_f64() / 1e6
+    );
+    let sstats = sharded.stats();
+    println!(
+        "sharded session: decode {:.1} MB/s/thread over {} values, scratch reuse {:.0}% \
+         (verify storms recycle their buffers)",
+        sstats.decode_mb_per_s(),
+        sstats.values_decoded,
+        100.0 * sstats.scratch_reuse_rate()
     );
 
     drop(sharded);

@@ -158,8 +158,10 @@ impl<'t, 'a> BitSerialDecoder<'t, 'a> {
     /// Decode one value, one micro-step at a time.
     pub fn decode_value(&mut self, ofs_in: &mut BitReader<'_>) -> Result<u32> {
         // PCNT Table (Fig 4b): 16 parallel scaled-boundary comparisons.
+        // `wrapping_sub` keeps a corrupt CODE < LO a detectable huge `d`
+        // instead of a debug-build panic, as in the optimized decoder.
         let range = (self.hi - self.lo) as u32 + 1;
-        let d = (self.code - self.lo) as u32;
+        let d = self.code.wrapping_sub(self.lo) as u32;
         let mut found = None;
         for i in 0..NUM_ROWS {
             let s_lo = (range * self.cum[i] as u32) >> PROB_BITS;
@@ -172,9 +174,18 @@ impl<'t, 'a> BitSerialDecoder<'t, 'a> {
         let (idx, s_lo, s_hi) =
             found.ok_or(Error::CorruptStream { position: self.count })?;
 
-        // SYMBOL Gen (Fig 4c): base + offset.
+        // SYMBOL Gen (Fig 4c): base + offset. Same contract as the
+        // optimized decoder (DESIGN.md invariant 3): an exhausted offset
+        // stream is a corrupt stream, never fabricated zero offsets.
         let row = self.table.rows()[idx];
-        let offset = if row.ol > 0 { ofs_in.read_bits(row.ol) as u32 } else { 0 };
+        let offset = if row.ol > 0 {
+            if ofs_in.bits_remaining() < row.ol as usize {
+                return Err(Error::CorruptStream { position: self.count });
+            }
+            ofs_in.read_bits(row.ol) as u32
+        } else {
+            0
+        };
         let value = row.v_min + offset;
         if value > row.v_max {
             return Err(Error::CorruptStream { position: self.count });
@@ -274,6 +285,36 @@ mod tests {
                 assert_eq!(od.decode_value(&mut ofs_r).unwrap(), v);
             }
         }
+    }
+
+    /// Corrupt-stream contract matches the optimized decoder (DESIGN.md
+    /// invariant 3): on a truncated offset stream, the bit-serial
+    /// reference errors with `CorruptStream` at the same position instead
+    /// of fabricating zero offsets.
+    #[test]
+    fn reference_decoder_corrupt_positions_match_optimized() {
+        let values = tensor(31, 2000);
+        let t = table_for_tensor(8, &values, TensorKind::Activations).unwrap();
+        let (sym, sb, ofs, ob) = ApackEncoder::encode_all(&t, &values).unwrap();
+        assert!(ob > 0);
+        let truncated = ob / 3;
+
+        let outcome = |decode: &mut dyn FnMut(&mut BitReader<'_>) -> Result<u32>| {
+            let mut ofs_r = BitReader::new(&ofs, truncated);
+            for i in 0..values.len() {
+                match decode(&mut ofs_r) {
+                    Ok(_) => {}
+                    Err(Error::CorruptStream { position }) => return (i, position),
+                    Err(e) => panic!("unexpected error {e}"),
+                }
+            }
+            panic!("truncated offsets must error");
+        };
+        let mut rd = BitSerialDecoder::new(&t, BitReader::new(&sym, sb));
+        let reference = outcome(&mut |o| rd.decode_value(o));
+        let mut od = ApackDecoder::new(&t, BitReader::new(&sym, sb)).unwrap();
+        let optimized = outcome(&mut |o| od.decode_value(o));
+        assert_eq!(reference, optimized);
     }
 
     /// Register trajectories match: after each value, (HI, LO, UBC) of the

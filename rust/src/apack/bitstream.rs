@@ -91,9 +91,15 @@ impl BitWriter {
 /// deliberate: the arithmetic-coder flush (see [`super::encoder`]) emits a
 /// disambiguating prefix such that *any* continuation decodes the final
 /// symbol correctly, so the decoder may freely over-read its 16-bit CODE
-/// window near the end of the stream — exactly as the hardware, whose CODE
-/// shift register keeps shifting whatever is on the bus once the stream is
+/// window — both the initial `CODE` prime and the renormalization refills —
+/// near the end of the stream, exactly as the hardware, whose CODE shift
+/// register keeps shifting whatever is on the bus once the stream is
 /// exhausted.
+///
+/// The zero-latch is **only** correct for the symbol stream. Offset bits
+/// carry verbatim payload, so fabricating zeros there would silently decode
+/// wrong values; the decoder checks [`Self::bits_remaining`] before every
+/// offset read and surfaces exhaustion as `Error::CorruptStream` instead.
 #[derive(Debug, Clone)]
 pub struct BitReader<'a> {
     data: &'a [u8],
@@ -116,7 +122,7 @@ impl<'a> BitReader<'a> {
 
     /// Number of real (non-padding) bits remaining.
     #[inline]
-    pub fn remaining_bits(&self) -> usize {
+    pub fn bits_remaining(&self) -> usize {
         self.len_bits.saturating_sub(self.pos)
     }
 
@@ -230,7 +236,7 @@ mod tests {
         // 0b101 followed by five 0s.
         assert_eq!(r.read_bits(8), 0b1010_0000);
         assert_eq!(r.read_bits(16), 0);
-        assert_eq!(r.remaining_bits(), 0);
+        assert_eq!(r.bits_remaining(), 0);
     }
 
     #[test]

@@ -47,11 +47,27 @@ impl Container {
         raw as f64 / self.footprint_bits() as f64
     }
 
-    /// Decode the full tensor.
+    /// Decode the full tensor into a fresh vector.
     pub fn decode(&self) -> Result<Vec<u32>> {
-        let sym = BitReader::new(&self.symbols, self.symbol_bits as usize);
-        let mut ofs = BitReader::new(&self.offsets, self.offset_bits as usize);
-        ApackDecoder::decode_all(&self.table, sym, &mut ofs, self.n_values as usize)
+        let mut out = vec![0u32; self.n_values as usize];
+        self.decode_into(&mut out)?;
+        Ok(out)
+    }
+
+    /// Decode the full tensor into a caller-owned slice (the allocation-free
+    /// read path: coordinator, engine pool and store decode shards/chunks
+    /// into disjoint sub-slices of one pre-sized buffer). `out.len()` must
+    /// equal `n_values`. An offset stream exhausted mid-value surfaces as
+    /// `Error::CorruptStream` — never as fabricated zero offsets.
+    pub fn decode_into(&self, out: &mut [u32]) -> Result<()> {
+        let view = BodyView {
+            n_values: self.n_values,
+            symbols: &self.symbols,
+            symbol_bits: self.symbol_bits,
+            offsets: &self.offsets,
+            offset_bits: self.offset_bits,
+        };
+        view.decode_into(&self.table, out)
     }
 
     /// Serialize to a flat byte buffer (little-endian framing). Layout:
@@ -99,6 +115,35 @@ impl Container {
     /// Rejects both truncated and over-long input — chunk records are
     /// exact-length so byte-level corruption cannot hide in slack space.
     pub fn body_from_bytes(table: SymbolTable, data: &[u8]) -> Result<Self> {
+        let view = BodyView::parse(data)?;
+        Ok(Self {
+            table,
+            n_values: view.n_values,
+            symbols: view.symbols.to_vec(),
+            symbol_bits: view.symbol_bits,
+            offsets: view.offsets.to_vec(),
+            offset_bits: view.offset_bits,
+        })
+    }
+}
+
+/// A parsed-but-borrowed body record: the stream slices point into the
+/// caller's buffer (e.g. an mmap'd store chunk), so the zero-copy decode
+/// path never duplicates the compressed bytes.
+#[derive(Debug, Clone, Copy)]
+pub struct BodyView<'a> {
+    pub n_values: u64,
+    pub symbols: &'a [u8],
+    pub symbol_bits: u64,
+    pub offsets: &'a [u8],
+    pub offset_bits: u64,
+}
+
+impl<'a> BodyView<'a> {
+    /// Parse a [`Container::body_to_bytes`] record without copying the
+    /// streams. Same exact-length validation as
+    /// [`Container::body_from_bytes`].
+    pub fn parse(data: &'a [u8]) -> Result<Self> {
         let err = |m: &str| Error::BadContainer(m.to_string());
         if data.len() < 24 {
             return Err(err("truncated shard body header"));
@@ -118,9 +163,30 @@ impl Container {
                 data.len()
             )));
         }
-        let symbols = data[24..24 + sym_len].to_vec();
-        let offsets = data[24 + sym_len..].to_vec();
-        Ok(Self { table, n_values, symbols, symbol_bits, offsets, offset_bits })
+        Ok(Self {
+            n_values,
+            symbols: &data[24..24 + sym_len],
+            symbol_bits,
+            offsets: &data[24 + sym_len..],
+            offset_bits,
+        })
+    }
+
+    /// Decode the record into a caller-owned slice (`out.len()` must equal
+    /// `n_values`) straight from the borrowed streams — the store's
+    /// hot read path: no stream copy, no output allocation.
+    pub fn decode_into(&self, table: &SymbolTable, out: &mut [u32]) -> Result<()> {
+        if out.len() as u64 != self.n_values {
+            return Err(Error::BadContainer(format!(
+                "decode_into slice holds {} values, body has {}",
+                out.len(),
+                self.n_values
+            )));
+        }
+        let sym = BitReader::new(self.symbols, self.symbol_bits as usize);
+        let mut ofs = BitReader::new(self.offsets, self.offset_bits as usize);
+        let mut dec = ApackDecoder::new(table, sym)?;
+        dec.decode_into(out, &mut ofs)
     }
 }
 
@@ -210,6 +276,26 @@ mod tests {
         long.push(0);
         assert!(Container::body_from_bytes(c.table.clone(), &long).is_err());
         assert!(Container::body_from_bytes(c.table.clone(), &body[..body.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn decode_into_and_body_view_match_decode() {
+        let values = tensor();
+        let c = compress(8, &values, TensorKind::Activations).unwrap();
+        let mut out = vec![0u32; values.len()];
+        c.decode_into(&mut out).unwrap();
+        assert_eq!(out, values);
+        // Wrong-size slice is rejected before any decode work.
+        let mut short = vec![0u32; values.len() - 1];
+        assert!(c.decode_into(&mut short).is_err());
+        // Zero-copy body view decodes identically from borrowed streams.
+        let body = c.body_to_bytes();
+        let view = BodyView::parse(&body).unwrap();
+        assert_eq!(view.n_values, c.n_values);
+        let mut out2 = vec![0u32; values.len()];
+        view.decode_into(&c.table, &mut out2).unwrap();
+        assert_eq!(out2, values);
+        assert!(BodyView::parse(&body[..body.len() - 1]).is_err());
     }
 
     #[test]

@@ -5,15 +5,24 @@
 //!
 //! 1. "PCNT Table" (Fig 4b): find the row whose *scaled* probability-count
 //!    range contains `CODE`. The hardware compares `CODE` against every
-//!    row's scaled boundary in parallel; we model that row scan exactly, and
-//!    additionally provide a division-based fast path used on the software
-//!    hot path — the two are proven equivalent (`debug_assert` + property
-//!    tests, DESIGN.md invariant 3).
+//!    row's scaled boundary in parallel; we model that row scan exactly and
+//!    additionally provide two software fast paths — a division that inverts
+//!    the scaling, and a division + count→row LUT ([`ResolveMode::Lut`],
+//!    the default). All three are proven bit-identical (`debug_assert` +
+//!    property tests, DESIGN.md invariant 3).
 //! 2. "SYMBOL Gen" (Fig 4c): emit `v_min[row] + offset`, consuming
-//!    `OL[row]` bits from the offset stream.
+//!    `OL[row]` bits from the offset stream. An exhausted offset stream is
+//!    a corrupt stream, not a zero offset (see [`super::bitstream`]).
 //! 3. "HI/LO/CODE Adj" (Fig 4d): renormalize, consuming fresh symbol-stream
 //!    bits into `CODE` and applying the underflow transform (`CODE ^=
 //!    0x4000`) in lockstep with the encoder.
+//!
+//! Two call granularities share the same state machine:
+//! [`ApackDecoder::decode_value`] is the per-value reference path, and
+//! [`ApackDecoder::decode_into`] is the block fast path that keeps
+//! `HI`/`LO`/`CODE` in locals across a whole output slice and hoists the
+//! per-value mode dispatch out of the loop (DESIGN.md §8). The two are
+//! bit-identical, including `CorruptStream` positions.
 
 use super::bitstream::BitReader;
 use super::table::{SymbolTable, PROB_BITS};
@@ -23,18 +32,30 @@ use crate::error::{Error, Result};
 const TOP_BIT: u16 = 0x8000;
 const SECOND_BIT: u16 = 0x4000;
 
-/// Which symbol-resolution circuit to model. Both produce identical results
-/// on every valid stream; `RowScan` mirrors the 16-comparator hardware and
-/// is also the faster software path (a 16-row multiply/compare scan beats
-/// one integer division per value — EXPERIMENTS.md §Perf iteration 4).
+/// Which symbol-resolution circuit to model. All three produce identical
+/// results on every stream — including identical `CorruptStream` positions
+/// on corrupt input (DESIGN.md invariant 3). `RowScan` mirrors the
+/// 16-comparator hardware; `Lut` is the software hot path (one 32-bit
+/// division plus one LUT load, no data-dependent branching — see the
+/// `codec_hot_path` bench and DESIGN.md §8).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum ResolveMode {
     /// Parallel comparison of CODE against each row's scaled boundaries, as
     /// the hardware PCNT Table block does.
-    #[default]
     RowScan,
-    /// Invert the scaling with one division, then a cumulative-count lookup.
+    /// Invert the scaling with one division, then a cumulative-count scan.
     Division,
+    /// Invert the scaling with one division, then map the recovered count
+    /// to its row through the table's precomputed count→row LUT
+    /// ([`SymbolTable::row_for_count`]).
+    #[default]
+    Lut,
+}
+
+impl ResolveMode {
+    /// All modes, for exhaustive equivalence sweeps.
+    pub const ALL: [ResolveMode; 3] =
+        [ResolveMode::RowScan, ResolveMode::Division, ResolveMode::Lut];
 }
 
 /// Streaming APack decoder for one (sub)stream.
@@ -54,7 +75,8 @@ pub struct ApackDecoder<'t, 'a> {
 impl<'t, 'a> ApackDecoder<'t, 'a> {
     /// New decoder: primes the 16-bit `CODE` register from the symbol
     /// stream (reading past a short stream pads with zeros, as the
-    /// hardware's shift register would latch an idle bus).
+    /// hardware's shift register would latch an idle bus — the one place
+    /// the symbol stream's zero-latch is load-bearing by design).
     pub fn new(table: &'t SymbolTable, mut sym_in: BitReader<'a>) -> Result<Self> {
         let mut cum = [0u16; NUM_ROWS + 1];
         for i in 0..NUM_ROWS {
@@ -93,7 +115,7 @@ impl<'t, 'a> ApackDecoder<'t, 'a> {
     /// is empty). Matches the parallel-comparator PCNT block bit-for-bit.
     #[inline]
     fn resolve_row_scan(&self, range: u32) -> Option<(usize, u32, u32)> {
-        let d = (self.code - self.lo) as u32;
+        let d = self.code.wrapping_sub(self.lo) as u32;
         let mut s_lo = 0u32; // cum[0] == 0 scales to 0
         for i in 0..NUM_ROWS {
             let s_hi = (range * self.cum[i + 1] as u32) >> PROB_BITS;
@@ -105,15 +127,15 @@ impl<'t, 'a> ApackDecoder<'t, 'a> {
         None
     }
 
-    /// Alternative path: invert the floor-scaling with one division.
+    /// Division path: invert the floor-scaling with one division.
     /// `k = floor(((d+1) << PROB_BITS - 1) / range)` is the largest count
     /// `c` with `floor(range*c >> PROB_BITS) <= d`; the matching row is the
     /// one whose cumulative range contains `k`.
     #[inline]
     fn resolve_division(&self, range: u32) -> Option<(usize, u32, u32)> {
-        let d = (self.code - self.lo) as u32;
+        let d = self.code.wrapping_sub(self.lo) as u32;
         // (d+1) ≤ 2^16, so the scaled dividend fits u32 — a 32-bit divide
-        // is markedly cheaper than 64-bit (EXPERIMENTS.md §Perf iter. 3).
+        // is markedly cheaper than 64-bit.
         let k = (((d + 1) << PROB_BITS) - 1) / range;
         if k >= self.cum[NUM_ROWS] as u32 {
             return None;
@@ -130,22 +152,60 @@ impl<'t, 'a> ApackDecoder<'t, 'a> {
         Some((idx, s_lo, s_hi))
     }
 
-    /// Decode one value, consuming offset bits from `ofs_in`.
-    pub fn decode_value(&mut self, ofs_in: &mut BitReader<'_>) -> Result<u32> {
-        let range = (self.hi - self.lo) as u32 + 1;
-        let (idx, s_lo, s_hi) = match self.mode {
+    /// LUT path: same division as [`Self::resolve_division`], then one load
+    /// from the table's count→row LUT instead of the cumulative scan. The
+    /// recovered `k` satisfies `cum[idx] <= k < cum[idx+1]` exactly when the
+    /// scan would pick `idx`, so the two are equivalent by construction.
+    #[inline]
+    fn resolve_lut(&self, range: u32) -> Option<(usize, u32, u32)> {
+        let d = self.code.wrapping_sub(self.lo) as u32;
+        let k = (((d + 1) << PROB_BITS) - 1) / range;
+        if k >= self.cum[NUM_ROWS] as u32 {
+            return None;
+        }
+        let idx = self.table.row_for_count(k as u16);
+        let s_lo = (range * self.cum[idx] as u32) >> PROB_BITS;
+        let s_hi = (range * self.cum[idx + 1] as u32) >> PROB_BITS;
+        Some((idx, s_lo, s_hi))
+    }
+
+    #[inline]
+    fn resolve(&self, range: u32) -> Option<(usize, u32, u32)> {
+        match self.mode {
             ResolveMode::RowScan => self.resolve_row_scan(range),
             ResolveMode::Division => {
                 let r = self.resolve_division(range);
                 debug_assert_eq!(r, self.resolve_row_scan(range), "resolver divergence");
                 r
             }
+            ResolveMode::Lut => {
+                let r = self.resolve_lut(range);
+                debug_assert_eq!(r, self.resolve_row_scan(range), "resolver divergence");
+                r
+            }
         }
-        .ok_or(Error::CorruptStream { position: self.count })?;
+    }
 
-        // SYMBOL Gen: reconstruct the value.
+    /// Decode one value, consuming offset bits from `ofs_in`. This is the
+    /// per-value reference path; [`Self::decode_into`] is the block fast
+    /// path with identical semantics.
+    pub fn decode_value(&mut self, ofs_in: &mut BitReader<'_>) -> Result<u32> {
+        let range = (self.hi - self.lo) as u32 + 1;
+        let (idx, s_lo, s_hi) =
+            self.resolve(range).ok_or(Error::CorruptStream { position: self.count })?;
+
+        // SYMBOL Gen: reconstruct the value. Offset bits are verbatim
+        // payload: running out mid-value means the stream lies about its
+        // length, so fail loudly instead of latching zeros.
         let row = &self.table.rows()[idx];
-        let offset = if row.ol > 0 { ofs_in.read_bits(row.ol) as u32 } else { 0 };
+        let offset = if row.ol > 0 {
+            if ofs_in.bits_remaining() < row.ol as usize {
+                return Err(Error::CorruptStream { position: self.count });
+            }
+            ofs_in.read_bits(row.ol) as u32
+        } else {
+            0
+        };
         let value = row.v_min + offset;
         if value > row.v_max {
             // Offset escaped the row's span: corrupt offset stream. (The
@@ -164,7 +224,7 @@ impl<'t, 'a> ApackDecoder<'t, 'a> {
         // Renormalize in lockstep with the encoder. Common-prefix bits are
         // discarded in one batch per pass (mirroring the encoder's LD1
         // batching); underflow steps stay per-bit. Bit-identical to the
-        // one-bit loop (EXPERIMENTS.md §Perf iter. 3).
+        // one-bit loop.
         loop {
             let diff = hi ^ lo;
             if diff & TOP_BIT == 0 {
@@ -188,7 +248,133 @@ impl<'t, 'a> ApackDecoder<'t, 'a> {
         Ok(value)
     }
 
-    /// Decode exactly `n` values into a vector.
+    /// Block fast path: decode exactly `out.len()` values into `out`.
+    ///
+    /// Bit-identical to calling [`Self::decode_value`] once per slot —
+    /// including the position carried by `Error::CorruptStream` — but
+    /// keeps `HI`/`LO`/`CODE` and the cumulative-count array in locals for
+    /// the whole block, resolves the [`ResolveMode`] dispatch once instead
+    /// of per value, and raises exactly one error surface per block. On
+    /// error the decoder state reflects the values decoded so far, and
+    /// `out[..error.position - count_before]` holds their decoded values.
+    pub fn decode_into(&mut self, out: &mut [u32], ofs_in: &mut BitReader<'_>) -> Result<()> {
+        match self.mode {
+            ResolveMode::RowScan => self.decode_block::<0>(out, ofs_in),
+            ResolveMode::Division => self.decode_block::<1>(out, ofs_in),
+            ResolveMode::Lut => self.decode_block::<2>(out, ofs_in),
+        }
+    }
+
+    /// Monomorphized block loop (`MODE`: 0 = RowScan, 1 = Division,
+    /// 2 = Lut) so the resolver inlines with no per-value dispatch.
+    fn decode_block<const MODE: u8>(
+        &mut self,
+        out: &mut [u32],
+        ofs_in: &mut BitReader<'_>,
+    ) -> Result<()> {
+        let table = self.table;
+        let rows = table.rows();
+        let cum = self.cum;
+        let (mut hi, mut lo, mut code) = (self.hi, self.lo, self.code);
+        let sym_in = &mut self.sym_in;
+        let mut done = 0usize;
+        let mut corrupt = false;
+        for slot in out.iter_mut() {
+            let range = (hi - lo) as u32 + 1;
+            let d = code.wrapping_sub(lo) as u32;
+            // Resolve the symbol (see the resolve_* methods for the math;
+            // this repeats them on block locals).
+            let idx;
+            let s_lo;
+            let s_hi;
+            if MODE == 0 {
+                let mut r = NUM_ROWS;
+                let mut sl = 0u32;
+                let mut sh = 0u32;
+                for i in 0..NUM_ROWS {
+                    sl = sh;
+                    sh = (range * cum[i + 1] as u32) >> PROB_BITS;
+                    if d < sh {
+                        r = i;
+                        break;
+                    }
+                }
+                if r == NUM_ROWS {
+                    corrupt = true;
+                    break;
+                }
+                idx = r;
+                s_lo = sl;
+                s_hi = sh;
+            } else {
+                let k = (((d + 1) << PROB_BITS) - 1) / range;
+                if k >= cum[NUM_ROWS] as u32 {
+                    corrupt = true;
+                    break;
+                }
+                idx = if MODE == 1 {
+                    let mut r = 0usize;
+                    for i in 0..NUM_ROWS {
+                        r = if k as u16 >= cum[i] { i } else { r };
+                    }
+                    r
+                } else {
+                    table.row_for_count(k as u16)
+                };
+                s_lo = (range * cum[idx] as u32) >> PROB_BITS;
+                s_hi = (range * cum[idx + 1] as u32) >> PROB_BITS;
+            }
+
+            // SYMBOL Gen (exhausted offset stream = corrupt, never zeros).
+            let row = &rows[idx];
+            let value = if row.ol > 0 {
+                if ofs_in.bits_remaining() < row.ol as usize {
+                    corrupt = true;
+                    break;
+                }
+                row.v_min + ofs_in.read_bits(row.ol) as u32
+            } else {
+                row.v_min
+            };
+            if value > row.v_max {
+                corrupt = true;
+                break;
+            }
+            *slot = value;
+
+            // HI/LO/CODE Adj on block locals, in lockstep with the encoder.
+            hi = (lo as u32 + s_hi - 1) as u16;
+            lo = (lo as u32 + s_lo) as u16;
+            loop {
+                let diff = hi ^ lo;
+                if diff & TOP_BIT == 0 {
+                    let k = (diff as u32 | 1).leading_zeros() - 16;
+                    lo <<= k;
+                    hi = (hi << k) | ((1u32 << k) as u16).wrapping_sub(1);
+                    code = (code << k) | sym_in.read_bits(k) as u16;
+                } else if lo & SECOND_BIT != 0 && hi & SECOND_BIT == 0 {
+                    code = ((code ^ SECOND_BIT) << 1) | sym_in.read_bit() as u16;
+                    lo = (lo & (SECOND_BIT - 1)) << 1;
+                    hi = ((hi | SECOND_BIT) << 1) | 1;
+                } else {
+                    break;
+                }
+            }
+            done += 1;
+        }
+        self.hi = hi;
+        self.lo = lo;
+        self.code = code;
+        self.count += done;
+        if corrupt {
+            return Err(Error::CorruptStream { position: self.count });
+        }
+        Ok(())
+    }
+
+    /// Decode exactly `n` values into a vector. Delegates to the block
+    /// fast path ([`Self::decode_into`]) — there is exactly one decode
+    /// loop to keep in sync with the encoder.
     pub fn decode_all(
         table: &SymbolTable,
         sym: BitReader<'a>,
@@ -196,10 +382,8 @@ impl<'t, 'a> ApackDecoder<'t, 'a> {
         n: usize,
     ) -> Result<Vec<u32>> {
         let mut dec = ApackDecoder::new(table, sym)?;
-        let mut out = Vec::with_capacity(n);
-        for _ in 0..n {
-            out.push(dec.decode_value(ofs)?);
-        }
+        let mut out = vec![0u32; n];
+        dec.decode_into(&mut out, ofs)?;
         Ok(out)
     }
 }
@@ -214,12 +398,12 @@ mod tests {
     }
 
     #[test]
-    fn row_scan_and_division_agree_on_long_stream() {
+    fn all_resolvers_agree_on_long_stream() {
         let t = SymbolTable::uniform(8);
         let values: Vec<u32> = (0..20_000u32).map(|i| (i * 2654435761) >> 24).collect();
         let (sym, sb, ofs, ob) = encode(&t, &values);
 
-        for mode in [ResolveMode::RowScan, ResolveMode::Division] {
+        for mode in ResolveMode::ALL {
             let mut dec =
                 ApackDecoder::new(&t, BitReader::new(&sym, sb)).unwrap().with_mode(mode);
             let mut ofs_r = BitReader::new(&ofs, ob);
@@ -227,6 +411,63 @@ mod tests {
                 assert_eq!(dec.decode_value(&mut ofs_r).unwrap(), v, "mode {mode:?} idx {i}");
             }
         }
+    }
+
+    #[test]
+    fn block_decode_matches_per_value() {
+        let t = SymbolTable::uniform(8);
+        let values: Vec<u32> = (0..10_000u32).map(|i| (i * 2654435761) >> 24).collect();
+        let (sym, sb, ofs, ob) = encode(&t, &values);
+        for mode in ResolveMode::ALL {
+            // Per-value reference.
+            let mut dec =
+                ApackDecoder::new(&t, BitReader::new(&sym, sb)).unwrap().with_mode(mode);
+            let mut ofs_r = BitReader::new(&ofs, ob);
+            let reference: Vec<u32> =
+                values.iter().map(|_| dec.decode_value(&mut ofs_r).unwrap()).collect();
+            assert_eq!(reference, values);
+            // Block path, including split across multiple blocks.
+            for split in [0usize, 1, values.len() / 3, values.len()] {
+                let mut dec =
+                    ApackDecoder::new(&t, BitReader::new(&sym, sb)).unwrap().with_mode(mode);
+                let mut ofs_r = BitReader::new(&ofs, ob);
+                let mut out = vec![0u32; values.len()];
+                let (a, b) = out.split_at_mut(split);
+                dec.decode_into(a, &mut ofs_r).unwrap();
+                dec.decode_into(b, &mut ofs_r).unwrap();
+                assert_eq!(out, values, "mode {mode:?} split {split}");
+                assert_eq!(dec.count(), values.len());
+            }
+        }
+    }
+
+    #[test]
+    fn exhausted_offset_stream_is_corrupt_not_zero() {
+        let t = SymbolTable::uniform(8);
+        let values: Vec<u32> = (0..2000u32).map(|i| (i * 37) % 256).collect();
+        let (sym, sb, ofs, ob) = encode(&t, &values);
+        assert!(ob > 0);
+        // Truncate the offset stream: both paths must error with the SAME
+        // position, not fabricate zero offsets.
+        let truncated = ob / 3;
+        let per_value_err = {
+            let mut dec = ApackDecoder::new(&t, BitReader::new(&sym, sb)).unwrap();
+            let mut ofs_r = BitReader::new(&ofs, truncated);
+            let mut err = None;
+            for _ in 0..values.len() {
+                if let Err(e) = dec.decode_value(&mut ofs_r) {
+                    err = Some(e);
+                    break;
+                }
+            }
+            err.expect("truncated offsets must error")
+        };
+        let mut dec = ApackDecoder::new(&t, BitReader::new(&sym, sb)).unwrap();
+        let mut ofs_r = BitReader::new(&ofs, truncated);
+        let mut out = vec![0u32; values.len()];
+        let block_err = dec.decode_into(&mut out, &mut ofs_r).unwrap_err();
+        assert_eq!(per_value_err, block_err);
+        assert!(matches!(block_err, Error::CorruptStream { .. }));
     }
 
     #[test]

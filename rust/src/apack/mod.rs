@@ -21,8 +21,8 @@ pub mod histogram;
 pub mod table;
 pub mod tablegen;
 
-pub use container::{compress, decompress, Container};
-pub use decoder::ApackDecoder;
+pub use container::{compress, decompress, BodyView, Container};
+pub use decoder::{ApackDecoder, ResolveMode};
 pub use encoder::ApackEncoder;
 pub use histogram::Histogram;
 pub use table::{SymbolTable, TableRow, PROB_BITS, PROB_MAX};

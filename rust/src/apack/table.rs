@@ -52,12 +52,42 @@ pub fn offset_len(span: u32) -> u32 {
     32 - (span - 1).leading_zeros()
 }
 
+/// Number of entries in the decoder's count→row LUT: one per point of the
+/// probability-count space.
+pub const COUNT_LUT_LEN: usize = 1 << PROB_BITS;
+
 /// The full APack per-tensor table.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Clone)]
 pub struct SymbolTable {
     rows: [TableRow; NUM_ROWS],
     /// Value bit width this table was built for (4, 8, or 16 in the paper).
     bits: u32,
+    /// Count→row LUT for the decoder's `ResolveMode::Lut` fast path: entry
+    /// `k` is the index of the row whose `[lo_cnt, hi_cnt)` range contains
+    /// `k`. Built once per table (the decode-side mirror of the encoder's
+    /// per-value `row_lut`), it turns symbol resolution into one 32-bit
+    /// division plus one byte load instead of a 16-row scan. Entry
+    /// [`PROB_MAX`] is never produced by a valid `CODE` (the scaled top
+    /// boundary is exclusive) and points at the last row as a sentinel.
+    row_of_k: [u8; COUNT_LUT_LEN],
+}
+
+// Manual impls so the derived forms don't drag the 1 KiB LUT (fully
+// determined by `rows`) through comparisons and debug output.
+impl PartialEq for SymbolTable {
+    fn eq(&self, other: &Self) -> bool {
+        self.bits == other.bits && self.rows == other.rows
+    }
+}
+impl Eq for SymbolTable {}
+
+impl std::fmt::Debug for SymbolTable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SymbolTable")
+            .field("bits", &self.bits)
+            .field("rows", &self.rows)
+            .finish()
+    }
 }
 
 impl SymbolTable {
@@ -115,7 +145,19 @@ impl SymbolTable {
                 rows[NUM_ROWS - 1].hi_cnt
             )));
         }
-        Ok(Self { rows, bits })
+        // Count→row LUT: rows partition [0, PROB_MAX), so every k below
+        // PROB_MAX lands in exactly one (possibly shared-boundary) range;
+        // empty rows cover no k, matching the cumulative-scan semantics.
+        let mut row_of_k = [0u8; COUNT_LUT_LEN];
+        let mut lo = 0usize;
+        for (i, row) in rows.iter().enumerate() {
+            for slot in row_of_k[lo..row.hi_cnt as usize].iter_mut() {
+                *slot = i as u8;
+            }
+            lo = row.hi_cnt as usize;
+        }
+        row_of_k[PROB_MAX as usize] = (NUM_ROWS - 1) as u8; // unreachable sentinel
+        Ok(Self { rows, bits, row_of_k })
     }
 
     /// Uniform table: the value space split evenly with counts proportional
@@ -158,6 +200,15 @@ impl SymbolTable {
     #[inline]
     pub fn rows(&self) -> &[TableRow; NUM_ROWS] {
         &self.rows
+    }
+
+    /// The row whose probability-count range `[lo_cnt, hi_cnt)` contains
+    /// `k` — one LUT load (decoder `ResolveMode::Lut`). `k` must be below
+    /// [`PROB_MAX`]; valid arithmetic-coder states never produce
+    /// `k == PROB_MAX` (the scaled top boundary is exclusive).
+    #[inline]
+    pub fn row_for_count(&self, k: u16) -> usize {
+        self.row_of_k[k as usize] as usize
     }
 
     /// Row `i`'s inclusive-low probability count (the previous row's high).
@@ -315,6 +366,24 @@ pub(crate) mod tests {
         for v in 0u32..=0xFF {
             let i = t.lookup(v).unwrap();
             assert!(t.rows()[i].v_min <= v && v <= t.rows()[i].v_max, "v={v:#x} -> row {i}");
+        }
+    }
+
+    #[test]
+    fn count_lut_matches_range_partition() {
+        // Every k in [0, PROB_MAX) must map to the unique row whose
+        // [lo_cnt, hi_cnt) contains it — including across the empty rows of
+        // Table I (rows 4–12 cover no counts and must never be returned).
+        for t in [paper_table1(), SymbolTable::uniform(4), SymbolTable::uniform(8)] {
+            for k in 0..PROB_MAX {
+                let i = t.row_for_count(k);
+                assert!(
+                    t.lo_cnt(i) <= k && k < t.rows()[i].hi_cnt,
+                    "k={k:#x} -> row {i} [{:#x},{:#x})",
+                    t.lo_cnt(i),
+                    t.rows()[i].hi_cnt
+                );
+            }
         }
     }
 

@@ -204,21 +204,31 @@ impl Coordinator {
         Ok(sc)
     }
 
-    /// Decompress all shards in parallel and reassemble the tensor.
+    /// Decompress all shards in parallel, each directly into its disjoint
+    /// sub-slice of one pre-sized output buffer — no per-shard `Vec`
+    /// allocation, no reassembly concat (the software mirror of the
+    /// replicated engines all writing one DRAM destination, paper §V-B).
     pub fn decompress(&mut self, sc: &ShardedContainer) -> Result<Vec<u32>> {
-        let parts: Result<Vec<Vec<u32>>> =
-            crate::util::par_map(&sc.shards, |s| s.decode()).into_iter().collect();
-        let mut out = Vec::with_capacity(sc.n_values as usize);
-        for p in parts? {
-            out.extend(p);
-        }
-        if out.len() as u64 != sc.n_values {
+        let total: u64 = sc.shards.iter().map(|s| s.n_values).sum();
+        if total != sc.n_values {
             return Err(Error::BadContainer(format!(
-                "reassembled {} values, expected {}",
-                out.len(),
+                "shard value counts sum to {total}, expected {}",
                 sc.n_values
             )));
         }
+        let mut out = vec![0u32; sc.n_values as usize];
+        let mut jobs: Vec<(&Container, &mut [u32])> = Vec::with_capacity(sc.shards.len());
+        let mut rest: &mut [u32] = &mut out;
+        for shard in &sc.shards {
+            let (slice, tail) = rest.split_at_mut(shard.n_values as usize);
+            rest = tail;
+            jobs.push((shard, slice));
+        }
+        let results: Result<Vec<()>> =
+            crate::util::par_map_owned(jobs, |(shard, slice)| shard.decode_into(slice))
+                .into_iter()
+                .collect();
+        results?;
         self.metrics.record_decompress(out.len());
         Ok(out)
     }

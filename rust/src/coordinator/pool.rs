@@ -11,12 +11,30 @@ use std::thread::JoinHandle;
 use crate::apack::container::Container;
 use crate::error::{Error, Result};
 
-/// A unit of work: decode a shard (identified by its index so results can
-/// be reassembled in order).
+/// A worker's write destination: one disjoint sub-slice of the caller's
+/// pre-sized output buffer, passed as a raw region because the pool's
+/// workers are long-lived (`'static`) threads that can't hold scoped
+/// borrows.
+///
+/// SAFETY contract (upheld by [`EnginePool::decode_shards`]): regions of
+/// concurrently in-flight jobs never overlap, and the buffer they point
+/// into outlives every job — the submitter drains one reply per sent job
+/// before returning, and a reply is only observable after the worker has
+/// finished (or never started) writing.
+struct OutRegion {
+    ptr: *mut u32,
+    len: usize,
+}
+
+unsafe impl Send for OutRegion {}
+
+/// A unit of work: decode a shard into its output region (the index is
+/// kept for error reporting).
 struct Job {
     shard_idx: usize,
     container: Container,
-    reply: mpsc::Sender<(usize, Result<Vec<u32>>)>,
+    out: OutRegion,
+    reply: mpsc::Sender<(usize, Result<()>)>,
 }
 
 /// Fixed pool of decoder workers with a bounded queue (backpressure:
@@ -46,7 +64,13 @@ impl EnginePool {
                     };
                     match job {
                         Ok(job) => {
-                            let result = job.container.decode();
+                            // SAFETY: see OutRegion — disjoint region of a
+                            // buffer the submitter keeps alive until this
+                            // reply is drained.
+                            let out = unsafe {
+                                std::slice::from_raw_parts_mut(job.out.ptr, job.out.len)
+                            };
+                            let result = job.container.decode_into(out);
                             *processed.lock().unwrap() += 1;
                             // Receiver may be gone if the caller bailed.
                             let _ = job.reply.send((job.shard_idx, result));
@@ -59,27 +83,55 @@ impl EnginePool {
         Self { tx: Some(tx), workers, processed }
     }
 
-    /// Decode a set of shards through the pool, reassembling in order.
+    /// Decode a set of shards through the pool, each worker writing its
+    /// shard directly into the shard's disjoint sub-slice of one pre-sized
+    /// output buffer — the shards land in order by construction, with no
+    /// per-shard `Vec` and no reassembly concat.
     pub fn decode_shards(&self, shards: &[Container]) -> Result<Vec<u32>> {
+        let total: usize = shards.iter().map(|s| s.n_values as usize).sum();
+        let mut out = vec![0u32; total];
         let (reply_tx, reply_rx) = mpsc::channel();
         let tx = self.tx.as_ref().expect("pool is live");
+        let base = out.as_mut_ptr();
+        let mut offset = 0usize;
+        let mut sent = 0usize;
+        let mut first_err: Option<Error> = None;
         for (i, c) in shards.iter().enumerate() {
-            tx.send(Job { shard_idx: i, container: c.clone(), reply: reply_tx.clone() })
-                .map_err(|_| Error::Runtime("engine pool shut down".into()))?;
+            let len = c.n_values as usize;
+            // SAFETY: [offset, offset+len) regions are disjoint across
+            // jobs and `out` stays alive through the drain loop below.
+            let region = OutRegion { ptr: unsafe { base.add(offset) }, len };
+            offset += len;
+            let job =
+                Job { shard_idx: i, container: c.clone(), out: region, reply: reply_tx.clone() };
+            if tx.send(job).is_err() {
+                first_err = Some(Error::Runtime("engine pool shut down".into()));
+                break;
+            }
+            sent += 1;
         }
         drop(reply_tx);
-        let mut parts: Vec<Option<Vec<u32>>> = vec![None; shards.len()];
-        for _ in 0..shards.len() {
-            let (idx, res) = reply_rx
-                .recv()
-                .map_err(|_| Error::Runtime("engine pool workers died".into()))?;
-            parts[idx] = Some(res?);
+        // Drain EVERY outstanding reply — even after an error — so no
+        // worker still holds a pointer into `out` when we return.
+        for _ in 0..sent {
+            match reply_rx.recv() {
+                Ok((_idx, res)) => {
+                    if let Err(e) = res {
+                        first_err.get_or_insert(e);
+                    }
+                }
+                // All senders gone: no job (and thus no region pointer)
+                // can still be live anywhere.
+                Err(_) => {
+                    first_err.get_or_insert(Error::Runtime("engine pool workers died".into()));
+                    break;
+                }
+            }
         }
-        let mut out = Vec::new();
-        for p in parts {
-            out.extend(p.expect("all shards replied"));
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(out),
         }
-        Ok(out)
     }
 
     /// Total jobs processed by the pool.

@@ -1,0 +1,244 @@
+//! Codec hot-path measurement harness: single-stream and 64-substream
+//! encode/decode throughput across every [`ResolveMode`] and both decode
+//! granularities (per-value reference vs. block `decode_into`), with
+//! machine-readable JSON output so decode throughput is a tracked,
+//! regression-guarded number PR over PR (ISSUE 4; DESIGN.md §8).
+//!
+//! Shared by `benches/codec_hot_path.rs` (release-build numbers, uploaded
+//! as a CI artifact) and the tier-1 `hot_path_report` integration test
+//! (bit-exactness gate + JSON emission on every `cargo test` run, labeled
+//! with the build profile so debug numbers are never mistaken for release
+//! throughput). Every decode measurement is checked bit-exact against the
+//! input tensor — the fast path cannot silently diverge while getting
+//! faster.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::apack::bitstream::BitReader;
+use crate::apack::decoder::{ApackDecoder, ResolveMode};
+use crate::apack::encoder::ApackEncoder;
+use crate::apack::tablegen::{table_for_tensor, TensorKind};
+use crate::coordinator::{Coordinator, PartitionPolicy};
+use crate::models::distributions::ValueProfile;
+use crate::util::bench::Bench;
+use crate::util::json::Json;
+
+/// The canonical JSON artifact name (repo root / CI artifact).
+pub const REPORT_FILE: &str = "BENCH_codec_hot_path.json";
+
+/// Harness configuration.
+pub struct HotPathConfig {
+    /// Workload size (the reference workload is 4M ReLU-activation values).
+    pub n_values: usize,
+    /// Substream count for the coordinator measurements.
+    pub substreams: u32,
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl HotPathConfig {
+    /// The full reference configuration (4M values, 64 substreams).
+    pub fn full() -> Self {
+        Self { n_values: 4_000_000, substreams: 64, warmup: 2, iters: 10 }
+    }
+
+    /// CI configuration: same workload, fewer iterations.
+    pub fn quick() -> Self {
+        Self { iters: 5, warmup: 1, ..Self::full() }
+    }
+
+    /// Tier-1 test configuration: small enough for a debug build.
+    pub fn tiny() -> Self {
+        Self { n_values: 200_000, substreams: 16, warmup: 1, iters: 2 }
+    }
+}
+
+/// One measured configuration.
+pub struct HotPathEntry {
+    /// e.g. `decode/block/Lut` or `coordinator/decode/64-substream`.
+    pub name: String,
+    pub median_ns: u64,
+    pub values_per_s: f64,
+    /// Throughput in GB/s of raw model values (one byte per 8-bit value,
+    /// matching the paper's traffic accounting).
+    pub gb_per_s: f64,
+}
+
+/// The full harness result.
+pub struct HotPathReport {
+    pub n_values: usize,
+    pub substreams: u32,
+    /// `release` or `debug` — debug numbers are real but not comparable.
+    pub profile: &'static str,
+    pub entries: Vec<HotPathEntry>,
+    /// The tentpole ratio: block `decode_into` in the default (`Lut`) mode
+    /// over the pre-existing per-value `RowScan` baseline, single-stream.
+    pub speedup_block_lut_vs_per_value_rowscan: f64,
+}
+
+impl HotPathReport {
+    /// Entry lookup by name.
+    pub fn entry(&self, name: &str) -> Option<&HotPathEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Serialize to the BENCH JSON schema.
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("bench".to_string(), Json::Str("codec_hot_path".to_string()));
+        root.insert(
+            "workload".to_string(),
+            Json::Str("relu_activation_8b_seed42".to_string()),
+        );
+        root.insert("n_values".to_string(), Json::Num(self.n_values as f64));
+        root.insert("substreams".to_string(), Json::Num(self.substreams as f64));
+        root.insert("profile".to_string(), Json::Str(self.profile.to_string()));
+        root.insert(
+            "speedup_block_lut_vs_per_value_rowscan".to_string(),
+            Json::Num(self.speedup_block_lut_vs_per_value_rowscan),
+        );
+        let entries: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|e| {
+                let mut m = BTreeMap::new();
+                m.insert("name".to_string(), Json::Str(e.name.clone()));
+                m.insert("median_ns".to_string(), Json::Num(e.median_ns as f64));
+                m.insert("values_per_s".to_string(), Json::Num(e.values_per_s));
+                m.insert("gb_per_s".to_string(), Json::Num(e.gb_per_s));
+                Json::Obj(m)
+            })
+            .collect();
+        root.insert("results".to_string(), Json::Arr(entries));
+        Json::Obj(root)
+    }
+
+    /// Write the JSON artifact (the bench and the tier-1 test both write
+    /// [`REPORT_FILE`] at the package root).
+    pub fn write_json(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string() + "\n")
+    }
+
+    /// Human-readable per-entry lines (the bench's stdout report).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for e in &self.entries {
+            s.push_str(&format!(
+                "{:<44} {:>12.1} Mvalues/s  {:>8.3} GB/s  ({} ns median)\n",
+                e.name,
+                e.values_per_s / 1e6,
+                e.gb_per_s,
+                e.median_ns
+            ));
+        }
+        s.push_str(&format!(
+            "block Lut vs per-value RowScan (single-stream): {:.2}x\n",
+            self.speedup_block_lut_vs_per_value_rowscan
+        ));
+        s
+    }
+}
+
+fn entry(name: &str, median_ns: u64, n: usize) -> HotPathEntry {
+    let secs = (median_ns as f64 / 1e9).max(1e-12);
+    HotPathEntry {
+        name: name.to_string(),
+        median_ns,
+        values_per_s: n as f64 / secs,
+        gb_per_s: n as f64 / secs / 1e9,
+    }
+}
+
+/// Run the harness: measure every configuration, assert every decode
+/// bit-exact against the input tensor (panics on divergence — this is the
+/// regression gate CI leans on), and return the report.
+pub fn run(cfg: &HotPathConfig) -> HotPathReport {
+    let n = cfg.n_values;
+    let values = ValueProfile::ReluActivation { sparsity: 0.5, q: 0.93, noise_floor: 0.01 }
+        .sample(8, n, 42);
+    let table = table_for_tensor(8, &values, TensorKind::Activations).unwrap();
+    let bench = Bench { warmup: cfg.warmup, iters: cfg.iters };
+    let mut entries = Vec::new();
+
+    // Single-stream encode.
+    let s = bench.run("encode/single-stream", || {
+        ApackEncoder::encode_all(&table, &values).unwrap()
+    });
+    entries.push(entry("encode/single-stream", s.median.as_nanos() as u64, n));
+
+    let (sym, sb, ofs, ob) = ApackEncoder::encode_all(&table, &values).unwrap();
+
+    // Single-stream decode: per-value reference and block fast path, every
+    // resolver. Bit-exactness is asserted once per configuration BEFORE
+    // timing (so the gate cannot be optimized out of the measurement and
+    // the compare cost never skews the throughput numbers).
+    let decode_per_value = |mode: ResolveMode| {
+        let mut dec =
+            ApackDecoder::new(&table, BitReader::new(&sym, sb)).unwrap().with_mode(mode);
+        let mut ofs_r = BitReader::new(&ofs, ob);
+        let mut out = vec![0u32; n];
+        for slot in out.iter_mut() {
+            *slot = dec.decode_value(&mut ofs_r).unwrap();
+        }
+        out
+    };
+    let decode_block = |mode: ResolveMode| {
+        let mut dec =
+            ApackDecoder::new(&table, BitReader::new(&sym, sb)).unwrap().with_mode(mode);
+        let mut ofs_r = BitReader::new(&ofs, ob);
+        let mut out = vec![0u32; n];
+        dec.decode_into(&mut out, &mut ofs_r).unwrap();
+        out
+    };
+    for mode in ResolveMode::ALL {
+        assert_eq!(decode_per_value(mode), values, "per-value {mode:?} diverged");
+        assert_eq!(
+            decode_block(mode),
+            values,
+            "block {mode:?} diverged from the per-value reference"
+        );
+
+        let name = format!("decode/per-value/{mode:?}");
+        let s = bench.run(&name, || decode_per_value(mode));
+        entries.push(entry(&name, s.median.as_nanos() as u64, n));
+
+        let name = format!("decode/block/{mode:?}");
+        let s = bench.run(&name, || decode_block(mode));
+        entries.push(entry(&name, s.median.as_nanos() as u64, n));
+    }
+
+    // Parallel coordinator (block decode through Container::decode_into,
+    // shards landing in disjoint sub-slices of one output buffer).
+    let mut coord = Coordinator::new(PartitionPolicy {
+        substreams: cfg.substreams,
+        ..PartitionPolicy::default()
+    });
+    let name = format!("coordinator/encode/{}-substream", cfg.substreams);
+    let s = bench.run(&name, || coord.compress_with_table(table.clone(), &values).unwrap());
+    entries.push(entry(&name, s.median.as_nanos() as u64, n));
+
+    let sc = coord.compress_with_table(table.clone(), &values).unwrap();
+    assert_eq!(coord.decompress(&sc).unwrap(), values, "coordinator decode diverged");
+    let name = format!("coordinator/decode/{}-substream", cfg.substreams);
+    let s = bench.run(&name, || coord.decompress(&sc).unwrap());
+    entries.push(entry(&name, s.median.as_nanos() as u64, n));
+
+    let baseline = entries
+        .iter()
+        .find(|e| e.name == "decode/per-value/RowScan")
+        .map(|e| e.values_per_s)
+        .unwrap_or(f64::INFINITY);
+    let fast = entries
+        .iter()
+        .find(|e| e.name == "decode/block/Lut")
+        .map(|e| e.values_per_s)
+        .unwrap_or(0.0);
+    HotPathReport {
+        n_values: n,
+        substreams: cfg.substreams,
+        profile: if cfg!(debug_assertions) { "debug" } else { "release" },
+        entries,
+        speedup_block_lut_vs_per_value_rowscan: fast / baseline,
+    }
+}

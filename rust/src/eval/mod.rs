@@ -12,6 +12,8 @@
 //!
 //! - [`store_report`] — APackStore footprint vs. raw per model: what the
 //!   zoo weighs at rest when packed into one compressed store file.
+//! - [`hot_path`] — codec hot-path throughput harness (per-mode, per-value
+//!   vs. block decode) emitting `BENCH_codec_hot_path.json`.
 //!
 //! All figures derive from one shared [`CompressionStudy`] so the traffic,
 //! energy and performance numbers are mutually consistent.
@@ -19,6 +21,7 @@
 pub mod area_power;
 pub mod e2e;
 pub mod fig2;
+pub mod hot_path;
 pub mod fig5;
 pub mod fig6;
 pub mod fig7;

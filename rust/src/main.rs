@@ -204,14 +204,21 @@ fn run() -> Result<(), Box<dyn Error>> {
 fn read_stats_line(stats: &ReadStats) -> String {
     format!(
         "session reads: {} compressed bytes via {} backend, {} chunks decoded \
-         ({} prefetched), cache hit rate {:.1}%, {} coalesced, {} shed",
+         ({} prefetched), cache hit rate {:.1}%, {} coalesced, {} shed\n\
+         decode path: {:.1} MB/s per thread over {} values, scratch-pool reuse {:.1}% \
+         ({} of {} buffers)",
         stats.bytes_read,
         stats.backend.name(),
         stats.chunks_decoded,
         stats.prefetched_chunks,
         100.0 * stats.hit_rate(),
         stats.coalesced_reads,
-        stats.shed_requests
+        stats.shed_requests,
+        stats.decode_mb_per_s(),
+        stats.values_decoded,
+        100.0 * stats.scratch_reuse_rate(),
+        stats.scratch_reused,
+        stats.scratch_acquired
     )
 }
 

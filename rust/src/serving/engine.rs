@@ -413,6 +413,15 @@ fn assemble_range(shared: &Shared, tensor: &str, range: Range<u64>) -> Result<Ar
     }
     let first = meta.chunk_for_value(range.start);
     let last = meta.chunk_for_value(range.end - 1);
+    if first == last {
+        let covered = meta.chunk_value_range(first);
+        if covered.start == range.start && covered.end == range.end {
+            // Whole-chunk range (single-chunk tensors take this path too):
+            // the response IS the cached chunk — share the Arc, copy
+            // nothing.
+            return decode_chunk(shared, tensor, first);
+        }
+    }
     let mut out = Vec::with_capacity((range.end - range.start) as usize);
     for ci in first..=last {
         let part = decode_chunk(shared, tensor, ci)?;

@@ -1,4 +1,5 @@
-//! Bounded LRU cache of decompressed chunks.
+//! Bounded LRU cache of decompressed chunks, plus the scratch-buffer pool
+//! the decode path draws from.
 //!
 //! The reader's hot path (paper §V: decode on the DRAM path, serve from
 //! on-chip storage) keeps recently decoded chunks resident so repeated
@@ -6,9 +7,17 @@
 //! decode. Capacity is budgeted in **values** (4 bytes each), not entries,
 //! so one huge chunk cannot silently blow the memory bound that dozens of
 //! small chunks were sized for.
+//!
+//! Buffer ownership (DESIGN.md §8): decode targets are `Vec<u32>`s drawn
+//! from a [`ScratchPool`]; cached chunks wrap theirs in an `Arc` shared
+//! with clients, and [`ChunkCache::insert`]/[`ChunkCache::clear`] hand
+//! evicted entries back to the caller, which recycles each into the pool
+//! once the last client reference drops ([`ScratchPool::recycle`]). The
+//! steady-state read path therefore allocates nothing.
 
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// Cache key: (tensor index in the store, chunk index in the tensor).
 pub type ChunkKey = (u32, u32);
@@ -48,14 +57,19 @@ impl ChunkCache {
     /// Insert a decoded chunk, evicting least-recently-used entries until
     /// the value budget holds. Chunks larger than the whole budget are not
     /// cached (they would evict everything for a single-use entry).
-    pub fn insert(&mut self, key: ChunkKey, data: Arc<Vec<u32>>) {
+    ///
+    /// Returns the evicted (and displaced) entries so the caller can
+    /// recycle their buffers into a [`ScratchPool`]; usually empty.
+    pub fn insert(&mut self, key: ChunkKey, data: Arc<Vec<u32>>) -> Vec<Arc<Vec<u32>>> {
+        let mut evicted = Vec::new();
         let size = data.len();
         if size > self.capacity_values {
-            return;
+            return evicted;
         }
         self.tick += 1;
         if let Some(old) = self.map.insert(key, Entry { data, last_used: self.tick }) {
             self.used_values -= old.data.len();
+            evicted.push(old.data);
         }
         self.used_values += size;
         while self.used_values > self.capacity_values {
@@ -69,8 +83,10 @@ impl ChunkCache {
                 .expect("used_values > 0 implies non-empty map");
             if let Some(e) = self.map.remove(&lru) {
                 self.used_values -= e.data.len();
+                evicted.push(e.data);
             }
         }
+        evicted
     }
 
     /// Whether a chunk is resident, without refreshing its recency (the
@@ -80,10 +96,11 @@ impl ChunkCache {
         self.map.contains_key(&key)
     }
 
-    /// Drop every entry (used by benches to measure the cold path).
-    pub fn clear(&mut self) {
-        self.map.clear();
+    /// Drop every entry (used by benches to measure the cold path),
+    /// returning them for scratch-pool recycling.
+    pub fn clear(&mut self) -> Vec<Arc<Vec<u32>>> {
         self.used_values = 0;
+        self.map.drain().map(|(_, e)| e.data).collect()
     }
 
     /// Number of resident chunks.
@@ -103,6 +120,96 @@ impl ChunkCache {
     /// Configured budget in values.
     pub fn capacity_values(&self) -> usize {
         self.capacity_values
+    }
+}
+
+/// Thread-safe pool of reusable `Vec<u32>` decode buffers.
+///
+/// Every chunk decode on the store read path (`get_range`, `get_chunk`,
+/// `prefetch_chunk`, `verify`) acquires its output buffer here instead of
+/// allocating; `verify` releases directly, while cached chunks come back
+/// via [`Self::recycle`] when the LRU evicts them and the last client
+/// `Arc` drops. Idle memory is bounded two ways — at most `max_buffers`
+/// buffers AND at most `max_retained_values` total retained capacity
+/// (buffers keep their capacity across reuse, so without the byte bound a
+/// verify pass over huge chunks would pin `max_buffers ×` the largest
+/// chunk forever).
+pub struct ScratchPool {
+    bufs: Mutex<Vec<Vec<u32>>>,
+    max_buffers: usize,
+    max_retained_values: usize,
+    acquired: AtomicU64,
+    reused: AtomicU64,
+}
+
+impl ScratchPool {
+    /// Pool retaining at most `max_buffers` idle buffers totalling at most
+    /// `max_retained_values` of capacity.
+    pub fn new(max_buffers: usize, max_retained_values: usize) -> Self {
+        Self {
+            bufs: Mutex::new(Vec::new()),
+            max_buffers,
+            max_retained_values,
+            acquired: AtomicU64::new(0),
+            reused: AtomicU64::new(0),
+        }
+    }
+
+    /// Take a buffer resized to `n` zeroed values. The zeroing memset is
+    /// deliberate: it keeps the pool safe-code-only and is cheap next to
+    /// the allocation + page faults it replaces (the decode path then
+    /// overwrites every slot or the buffer is released on error).
+    pub fn acquire(&self, n: usize) -> Vec<u32> {
+        self.acquired.fetch_add(1, Ordering::Relaxed);
+        let pooled = self.bufs.lock().expect("scratch pool lock").pop();
+        let mut buf = match pooled {
+            Some(b) => {
+                self.reused.fetch_add(1, Ordering::Relaxed);
+                b
+            }
+            None => Vec::new(),
+        };
+        buf.clear();
+        buf.resize(n, 0);
+        buf
+    }
+
+    /// Return a buffer to the pool (dropped if either the count or the
+    /// retained-capacity bound would be exceeded; the capacity sum is an
+    /// O(max_buffers) scan over at most a few dozen entries).
+    pub fn release(&self, buf: Vec<u32>) {
+        let mut bufs = self.bufs.lock().expect("scratch pool lock");
+        let retained: usize = bufs.iter().map(|b| b.capacity()).sum();
+        if bufs.len() < self.max_buffers
+            && retained.saturating_add(buf.capacity()) <= self.max_retained_values
+        {
+            bufs.push(buf);
+        }
+    }
+
+    /// Reclaim an `Arc`'d buffer if this was the last reference (evicted
+    /// cache entries no client still holds); otherwise the buffer stays
+    /// alive with its holders and is simply not pooled.
+    pub fn recycle(&self, data: Arc<Vec<u32>>) {
+        if let Ok(buf) = Arc::try_unwrap(data) {
+            self.release(buf);
+        }
+    }
+
+    /// Buffers handed out so far.
+    pub fn acquired(&self) -> u64 {
+        self.acquired.load(Ordering::Relaxed)
+    }
+
+    /// Acquisitions served from the pool instead of a fresh allocation.
+    pub fn reused(&self) -> u64 {
+        self.reused.load(Ordering::Relaxed)
+    }
+
+    /// Zero the reuse counters (buffers stay pooled).
+    pub fn reset_counters(&self) {
+        self.acquired.store(0, Ordering::Relaxed);
+        self.reused.store(0, Ordering::Relaxed);
     }
 }
 
@@ -152,9 +259,62 @@ mod tests {
     fn reinsert_same_key_accounts_once() {
         let mut c = ChunkCache::new(100);
         c.insert((0, 0), chunk(30, 1));
-        c.insert((0, 0), chunk(50, 2));
+        let displaced = c.insert((0, 0), chunk(50, 2));
+        assert_eq!(displaced.len(), 1, "displaced entry is handed back");
+        assert_eq!(displaced[0].len(), 30);
         assert_eq!(c.len(), 1);
         assert_eq!(c.used_values(), 50);
         assert_eq!(c.get((0, 0)).unwrap()[0], 2);
+    }
+
+    #[test]
+    fn insert_and_clear_return_evicted_entries() {
+        let mut c = ChunkCache::new(100);
+        assert!(c.insert((0, 0), chunk(60, 1)).is_empty());
+        let evicted = c.insert((0, 1), chunk(60, 2));
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(evicted[0][0], 1, "LRU entry handed back on eviction");
+        let drained = c.clear();
+        assert_eq!(drained.len(), 1);
+        assert!(c.is_empty());
+        assert_eq!(c.used_values(), 0);
+    }
+
+    #[test]
+    fn scratch_pool_rejects_oversized_retention() {
+        // Byte bound: a buffer whose capacity would blow the retained
+        // budget is dropped instead of pooled.
+        let pool = ScratchPool::new(8, 100);
+        pool.release(Vec::with_capacity(60));
+        pool.release(Vec::with_capacity(60)); // 120 > 100: dropped
+        assert_eq!(pool.bufs.lock().unwrap().len(), 1);
+        pool.release(Vec::with_capacity(30));
+        assert_eq!(pool.bufs.lock().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn scratch_pool_reuses_and_bounds_buffers() {
+        let pool = ScratchPool::new(2, 1 << 20);
+        let a = pool.acquire(100);
+        assert_eq!(a.len(), 100);
+        assert_eq!((pool.acquired(), pool.reused()), (1, 0));
+        pool.release(a);
+        let b = pool.acquire(10);
+        assert_eq!(b.len(), 10);
+        assert_eq!((pool.acquired(), pool.reused()), (2, 1));
+        // Recycle through an Arc: unique → pooled, shared → left alone.
+        pool.recycle(Arc::new(b));
+        let shared = Arc::new(vec![7u32; 5]);
+        pool.recycle(Arc::clone(&shared));
+        assert_eq!(shared[0], 7, "shared buffer must survive recycle");
+        let c = pool.acquire(3);
+        assert_eq!((pool.acquired(), pool.reused()), (3, 2));
+        // The bound holds: releasing three keeps at most two.
+        pool.release(c);
+        pool.release(vec![0; 1]);
+        pool.release(vec![0; 1]);
+        assert_eq!(pool.bufs.lock().unwrap().len(), 2);
+        pool.reset_counters();
+        assert_eq!((pool.acquired(), pool.reused()), (0, 0));
     }
 }

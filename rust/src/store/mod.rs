@@ -68,7 +68,8 @@
 //!   with corruption detection on every read and byte-accounted IO stats.
 //! - [`handle`] — [`StoreHandle`], the uniform entry point.
 //! - [`cache`] — [`ChunkCache`], the bounded LRU of decoded chunks behind
-//!   the readers' hot path.
+//!   the readers' hot path, and [`ScratchPool`], the recycled decode
+//!   buffers every read path draws from (DESIGN.md §8).
 
 pub mod cache;
 pub mod format;
@@ -78,7 +79,7 @@ pub mod reader;
 pub mod shard;
 pub mod writer;
 
-pub use cache::ChunkCache;
+pub use cache::{ChunkCache, ScratchPool};
 pub use format::{crc32, ChunkMeta, StoreIndex, TensorMeta};
 pub use handle::StoreHandle;
 pub use io::{Backend, ChunkSource, FileSource, MmapSource};

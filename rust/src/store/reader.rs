@@ -19,12 +19,13 @@ use std::ops::Range;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
-use crate::apack::container::Container;
+use crate::apack::container::BodyView;
 use crate::error::{Error, Result};
 use crate::util::par_map;
 
-use super::cache::{ChunkCache, ChunkKey};
+use super::cache::{ChunkCache, ChunkKey, ScratchPool};
 use super::format::{
     crc32, parse_trailer, StoreIndex, TensorMeta, STORE_MAGIC, TRAILER_BYTES,
 };
@@ -43,7 +44,8 @@ pub struct ReadStats {
     pub backend: Backend,
     /// Compressed chunk bytes fetched from the source.
     pub bytes_read: u64,
-    /// Chunks arithmetic-decoded (cache misses plus prefetch decodes).
+    /// Chunks arithmetic-decoded (cache misses, prefetch and verify
+    /// decodes).
     pub chunks_decoded: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
@@ -60,6 +62,18 @@ pub struct ReadStats {
     /// (queue full or deadline expired). Zero unless the stats come
     /// through a `serving::ServingEngine`.
     pub shed_requests: u64,
+    /// Values arithmetic-decoded (demand, prefetch and verify decodes;
+    /// excludes cache hits).
+    pub values_decoded: u64,
+    /// Nanoseconds spent inside chunk decodes, summed across decoding
+    /// threads (concurrent decodes overlap in wall-clock time but add
+    /// here), so `values_decoded` over this is the **per-thread** decode
+    /// rate (`decode_mb_per_s`), not aggregate session throughput.
+    pub decode_nanos: u64,
+    /// Decode buffers drawn from the scratch pool.
+    pub scratch_acquired: u64,
+    /// Draws served by a recycled buffer instead of a fresh allocation.
+    pub scratch_reused: u64,
 }
 
 impl ReadStats {
@@ -73,6 +87,29 @@ impl ReadStats {
         }
     }
 
+    /// Single-stream decode throughput in MB/s of decoded output (4 bytes
+    /// per value): decoded bytes over **per-thread** decode time (see
+    /// `decode_nanos` — parallel decodes sum their overlapping spans, so
+    /// aggregate session throughput is roughly this × decode threads).
+    /// 0.0 before the first decode.
+    pub fn decode_mb_per_s(&self) -> f64 {
+        if self.decode_nanos == 0 {
+            0.0
+        } else {
+            (self.values_decoded * 4) as f64 / (self.decode_nanos as f64 / 1e9) / 1e6
+        }
+    }
+
+    /// Fraction of decode-buffer draws served by the scratch pool instead
+    /// of the allocator, in `[0, 1]`.
+    pub fn scratch_reuse_rate(&self) -> f64 {
+        if self.scratch_acquired == 0 {
+            0.0
+        } else {
+            self.scratch_reused as f64 / self.scratch_acquired as f64
+        }
+    }
+
     /// Fold another reader's counters into this one (sharded stores
     /// aggregate per-shard readers; backends match by construction).
     pub fn merge(&mut self, other: &ReadStats) {
@@ -83,6 +120,10 @@ impl ReadStats {
         self.prefetched_chunks += other.prefetched_chunks;
         self.coalesced_reads += other.coalesced_reads;
         self.shed_requests += other.shed_requests;
+        self.values_decoded += other.values_decoded;
+        self.decode_nanos += other.decode_nanos;
+        self.scratch_acquired += other.scratch_acquired;
+        self.scratch_reused += other.scratch_reused;
     }
 }
 
@@ -113,10 +154,15 @@ pub struct StoreReader {
     /// First byte past the chunk region (chunks must end before this).
     chunk_region_end: u64,
     cache: Mutex<ChunkCache>,
+    /// Decode buffers for every read path (see DESIGN.md §8): `verify`
+    /// releases directly, cached chunks return via eviction + `recycle`.
+    scratch: ScratchPool,
     chunks_decoded: AtomicU64,
     cache_hits: AtomicU64,
     cache_misses: AtomicU64,
     prefetched_chunks: AtomicU64,
+    values_decoded: AtomicU64,
+    decode_nanos: AtomicU64,
 }
 
 impl StoreReader {
@@ -188,15 +234,27 @@ impl StoreReader {
         }
         // Open-time IO (magic + trailer + footer) is excluded from stats.
         source.reset_bytes_read();
+        // Idle scratch buffers are bounded by decode concurrency (~2
+        // in-flight decodes per hardware thread), and their retained
+        // capacity by the reader's own cache budget — never by store or
+        // chunk size. A small floor (64K values = 256 KiB) keeps buffer
+        // reuse alive on cache-disabled readers (verify passes, benches)
+        // without letting an intentionally small budget pin big buffers.
+        let scratch_buffers =
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4) * 2;
+        let scratch_retained = cache_values.max(1 << 16);
         Ok(Self {
             source,
             index,
             chunk_region_end: trailer.footer_offset,
             cache: Mutex::new(ChunkCache::new(cache_values)),
+            scratch: ScratchPool::new(scratch_buffers, scratch_retained),
             chunks_decoded: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
             cache_misses: AtomicU64::new(0),
             prefetched_chunks: AtomicU64::new(0),
+            values_decoded: AtomicU64::new(0),
+            decode_nanos: AtomicU64::new(0),
         })
     }
 
@@ -250,6 +308,43 @@ impl StoreReader {
         Ok(blob)
     }
 
+    /// Fetch, CRC-check and arithmetic-decode one chunk into a
+    /// scratch-pool buffer — the single decode path under `get_*`,
+    /// `prefetch_chunk` and `verify`. Decodes straight from the (possibly
+    /// mmap'd) blob via [`BodyView`]: no stream copy, no fresh output
+    /// allocation, decode wall-time accounted.
+    fn decode_chunk_scratch(&self, t: &TensorMeta, ci: usize) -> Result<Vec<u32>> {
+        let blob = self.read_chunk_bytes(t, ci)?;
+        let view = BodyView::parse(&blob)?;
+        if view.n_values != t.chunks[ci].n_values {
+            return Err(Error::Store(format!(
+                "tensor {}: chunk {ci} holds {} values, index says {}",
+                t.name, view.n_values, t.chunks[ci].n_values
+            )));
+        }
+        let n = view.n_values as usize;
+        let mut buf = self.scratch.acquire(n);
+        let t0 = Instant::now();
+        let decoded = view.decode_into(&t.table, &mut buf);
+        self.decode_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        if let Err(e) = decoded {
+            self.scratch.release(buf);
+            return Err(e);
+        }
+        self.chunks_decoded.fetch_add(1, Ordering::Relaxed);
+        self.values_decoded.fetch_add(n as u64, Ordering::Relaxed);
+        Ok(buf)
+    }
+
+    /// Insert a decoded chunk, recycling whatever the LRU evicts.
+    fn cache_insert(&self, key: ChunkKey, values: &Arc<Vec<u32>>) {
+        let evicted =
+            self.cache.lock().expect("store cache lock").insert(key, Arc::clone(values));
+        for old in evicted {
+            self.scratch.recycle(old);
+        }
+    }
+
     /// Decoded values of chunk `ci` of tensor index `ti`, via the cache.
     fn chunk_values(&self, ti: usize, ci: usize) -> Result<Arc<Vec<u32>>> {
         let key: ChunkKey = (ti as u32, ci as u32);
@@ -259,18 +354,8 @@ impl StoreReader {
         }
         self.cache_misses.fetch_add(1, Ordering::Relaxed);
         let t = &self.index.tensors[ti];
-        let blob = self.read_chunk_bytes(t, ci)?;
-        let container = Container::body_from_bytes(t.table.clone(), &blob)?;
-        drop(blob);
-        if container.n_values != t.chunks[ci].n_values {
-            return Err(Error::Store(format!(
-                "tensor {}: chunk {ci} holds {} values, index says {}",
-                t.name, container.n_values, t.chunks[ci].n_values
-            )));
-        }
-        let values = Arc::new(container.decode()?);
-        self.chunks_decoded.fetch_add(1, Ordering::Relaxed);
-        self.cache.lock().expect("store cache lock").insert(key, Arc::clone(&values));
+        let values = Arc::new(self.decode_chunk_scratch(t, ci)?);
+        self.cache_insert(key, &values);
         Ok(values)
     }
 
@@ -301,19 +386,9 @@ impl StoreReader {
                 return Ok(false);
             }
         }
-        let blob = self.read_chunk_bytes(t, ci)?;
-        let container = Container::body_from_bytes(t.table.clone(), &blob)?;
-        drop(blob);
-        if container.n_values != t.chunks[ci].n_values {
-            return Err(Error::Store(format!(
-                "tensor {}: chunk {ci} holds {} values, index says {}",
-                t.name, container.n_values, t.chunks[ci].n_values
-            )));
-        }
-        let values = Arc::new(container.decode()?);
-        self.chunks_decoded.fetch_add(1, Ordering::Relaxed);
+        let values = Arc::new(self.decode_chunk_scratch(t, ci)?);
         self.prefetched_chunks.fetch_add(1, Ordering::Relaxed);
-        self.cache.lock().expect("store cache lock").insert(key, values);
+        self.cache_insert(key, &values);
         Ok(true)
     }
 
@@ -387,20 +462,12 @@ impl StoreReader {
             .collect();
         let checks: Result<Vec<u64>> = par_map(&jobs, |&(ti, ci)| {
             let t = &self.index.tensors[ti];
-            let blob = self.read_chunk_bytes(t, ci)?;
-            let blob_len = blob.len() as u64;
-            let container = Container::body_from_bytes(t.table.clone(), &blob)?;
-            drop(blob);
-            let values = container.decode()?;
-            if values.len() as u64 != t.chunks[ci].n_values {
-                return Err(Error::Store(format!(
-                    "tensor {}: chunk {ci} decoded {} values, index says {}",
-                    t.name,
-                    values.len(),
-                    t.chunks[ci].n_values
-                )));
-            }
-            Ok(blob_len)
+            // Scratch decode: the blob is CRC-checked and the decoded
+            // count validated against the index inside; the buffer goes
+            // straight back to the pool (verify keeps nothing).
+            let values = self.decode_chunk_scratch(t, ci)?;
+            self.scratch.release(values);
+            Ok(t.chunks[ci].len)
         })
         .into_iter()
         .collect();
@@ -423,21 +490,33 @@ impl StoreReader {
             prefetched_chunks: self.prefetched_chunks.load(Ordering::Relaxed),
             coalesced_reads: 0,
             shed_requests: 0,
+            values_decoded: self.values_decoded.load(Ordering::Relaxed),
+            decode_nanos: self.decode_nanos.load(Ordering::Relaxed),
+            scratch_acquired: self.scratch.acquired(),
+            scratch_reused: self.scratch.reused(),
         }
     }
 
-    /// Zero the read counters (does not touch the cache).
+    /// Zero the read counters (does not touch the cache; pooled scratch
+    /// buffers stay pooled).
     pub fn reset_stats(&self) {
         self.source.reset_bytes_read();
         self.chunks_decoded.store(0, Ordering::Relaxed);
         self.cache_hits.store(0, Ordering::Relaxed);
         self.cache_misses.store(0, Ordering::Relaxed);
         self.prefetched_chunks.store(0, Ordering::Relaxed);
+        self.values_decoded.store(0, Ordering::Relaxed);
+        self.decode_nanos.store(0, Ordering::Relaxed);
+        self.scratch.reset_counters();
     }
 
-    /// Drop all cached chunks (benches use this to time the cold path).
+    /// Drop all cached chunks (benches use this to time the cold path);
+    /// their buffers are recycled into the scratch pool where possible.
     pub fn clear_cache(&self) {
-        self.cache.lock().expect("store cache lock").clear();
+        let drained = self.cache.lock().expect("store cache lock").clear();
+        for entry in drained {
+            self.scratch.recycle(entry);
+        }
     }
 }
 

@@ -1,15 +1,24 @@
 //! Minimal data-parallel map over std scoped threads (rayon stand-in).
+//!
+//! One chunking/spawn/collect core ([`par_map_owned_with`]) serves both
+//! the borrowing map ([`par_map`], [`par_map_with`]) and the owned-item
+//! map ([`par_map_owned`]) whose items may carry `&mut` borrows (e.g.
+//! disjoint sub-slices of one output buffer — the coordinator's
+//! decode-into-slice path).
 
-/// Parallel map preserving order: splits `items` across up to `threads`
-/// workers (defaults to available parallelism).
+fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Parallel map preserving order: splits `items` across up to the
+/// available-parallelism worker count.
 pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
 where
     T: Sync,
     R: Send,
     F: Fn(&T) -> R + Sync,
 {
-    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-    par_map_with(items, threads, f)
+    par_map_with(items, default_threads(), f)
 }
 
 /// Parallel map with an explicit worker count.
@@ -19,22 +28,45 @@ where
     R: Send,
     F: Fn(&T) -> R + Sync,
 {
+    par_map_owned_with(items.iter().collect(), threads, |item| f(item))
+}
+
+/// Parallel map over **owned** items, preserving order (each item is moved
+/// into the closure).
+pub fn par_map_owned<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    par_map_owned_with(items, default_threads(), f)
+}
+
+/// The shared core: order-preserving scoped-thread map over owned items
+/// with an explicit worker count.
+pub fn par_map_owned_with<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
     let n = items.len();
     if n == 0 {
         return Vec::new();
     }
     let threads = threads.clamp(1, n);
     if threads == 1 {
-        return items.iter().map(&f).collect();
+        return items.into_iter().map(f).collect();
     }
+    let mut items: Vec<Option<T>> = items.into_iter().map(Some).collect();
     let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
     let chunk = n.div_ceil(threads);
     let f = &f;
     std::thread::scope(|scope| {
-        for (items_chunk, out_chunk) in items.chunks(chunk).zip(out.chunks_mut(chunk)) {
+        for (in_chunk, out_chunk) in items.chunks_mut(chunk).zip(out.chunks_mut(chunk)) {
             scope.spawn(move || {
-                for (item, slot) in items_chunk.iter().zip(out_chunk.iter_mut()) {
-                    *slot = Some(f(item));
+                for (item, slot) in in_chunk.iter_mut().zip(out_chunk.iter_mut()) {
+                    *slot = Some(f(item.take().expect("item present")));
                 }
             });
         }
@@ -65,5 +97,21 @@ mod tests {
     fn more_threads_than_items() {
         let items = vec![5];
         assert_eq!(par_map_with(&items, 64, |&x| x), vec![5]);
+    }
+
+    #[test]
+    fn owned_map_supports_mutable_slices() {
+        let mut buf = vec![0u32; 100];
+        let jobs: Vec<(u32, &mut [u32])> =
+            buf.chunks_mut(10).enumerate().map(|(i, c)| (i as u32, c)).collect();
+        let lens = par_map_owned(jobs, |(i, slice)| {
+            slice.fill(i);
+            slice.len()
+        });
+        assert_eq!(lens, vec![10; 10]);
+        for (i, chunk) in buf.chunks(10).enumerate() {
+            assert!(chunk.iter().all(|&v| v == i as u32));
+        }
+        assert!(par_map_owned(Vec::<u8>::new(), |x| x).is_empty());
     }
 }

@@ -78,10 +78,12 @@ fn truncated_symbol_stream_terminates() {
     }
 }
 
-/// Truncated offset stream: values decode but diverge (offsets read as
-/// zero padding).
+/// Truncated offset stream: the decoder must fail with a typed
+/// `CorruptStream` at the first value whose offset bits are missing —
+/// never silently fabricate zero offsets (the zero-latch is reserved for
+/// the symbol stream, whose flush provably tolerates it).
 #[test]
-fn truncated_offset_stream_diverges() {
+fn truncated_offset_stream_is_corrupt() {
     let values = sample_tensor(4096, 4);
     let t = table_for_tensor(8, &values, TensorKind::Activations).unwrap();
     let (sym, sb, ofs, ob) = ApackEncoder::encode_all(&t, &values).unwrap();
@@ -90,8 +92,11 @@ fn truncated_offset_stream_diverges() {
     }
     let mut ofs_r = BitReader::new(&ofs, ob / 4);
     match ApackDecoder::decode_all(&t, BitReader::new(&sym, sb), &mut ofs_r, values.len()) {
-        Ok(decoded) => assert_ne!(decoded, values),
-        Err(_) => {}
+        Ok(_) => panic!("decode with 3/4 of the offset bits missing must fail"),
+        Err(Error::CorruptStream { position }) => {
+            assert!(position < values.len(), "error position {position} out of range")
+        }
+        Err(e) => panic!("expected CorruptStream, got {e}"),
     }
 }
 

@@ -131,3 +131,37 @@ fn zoo_is_complete_and_consistent() {
     let perf: Vec<_> = models.iter().filter(|m| m.in_perf_study).collect();
     assert!(perf.len() >= 12, "perf study subset too small: {}", perf.len());
 }
+
+#[test]
+fn hot_path_harness_bit_exact_and_emits_json() {
+    // The codec hot-path harness on a tier-1-sized workload: the harness
+    // itself asserts every decode configuration (per-value and block, all
+    // three resolvers, and the sharded coordinator) bit-exact against the
+    // encoder input, so this test is the build-profile-portable version of
+    // the bench's regression gate. It also (re)writes the machine-readable
+    // BENCH_codec_hot_path.json at the package root; `cargo bench --bench
+    // codec_hot_path` overwrites it with release-profile numbers.
+    let report = apack_repro::eval::hot_path::run(
+        &apack_repro::eval::hot_path::HotPathConfig::tiny(),
+    );
+    for path in ["decode/per-value", "decode/block"] {
+        for mode in ["RowScan", "Division", "Lut"] {
+            let name = format!("{path}/{mode}");
+            let e = report.entry(&name).unwrap_or_else(|| panic!("missing entry {name}"));
+            assert!(e.values_per_s > 0.0, "{name} measured nothing");
+        }
+    }
+    assert!(report.entry("coordinator/decode/16-substream").is_some());
+    assert!(report.speedup_block_lut_vs_per_value_rowscan > 0.0);
+    // Emit the JSON artifact — but never clobber release-profile numbers a
+    // `cargo bench` run already produced with this debug-profile run.
+    let path = std::path::Path::new(apack_repro::eval::hot_path::REPORT_FILE);
+    let release_numbers_present = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|s| apack_repro::util::json::Json::parse(&s).ok())
+        .and_then(|j| j.get("profile").and_then(|p| p.as_str().map(String::from)))
+        .is_some_and(|p| p == "release");
+    if !release_numbers_present {
+        report.write_json(path).expect("write BENCH_codec_hot_path.json");
+    }
+}

@@ -126,8 +126,62 @@ fn prop_tablegen_validity() {
     }
 }
 
-/// Invariant 3: the two decoder symbol-resolution circuits agree on every
-/// step of every stream.
+/// Decode a stream per-value in one mode, recording the decoded prefix and
+/// the position of the first `CorruptStream` error (if any).
+fn per_value_outcome(
+    table: &SymbolTable,
+    sym: &[u8],
+    sb: usize,
+    ofs: &[u8],
+    ob: usize,
+    n: usize,
+    mode: ResolveMode,
+) -> (Vec<u32>, Option<usize>) {
+    let mut dec =
+        ApackDecoder::new(table, BitReader::new(sym, sb)).unwrap().with_mode(mode);
+    let mut ofs_r = BitReader::new(ofs, ob);
+    let mut out = Vec::new();
+    for _ in 0..n {
+        match dec.decode_value(&mut ofs_r) {
+            Ok(v) => out.push(v),
+            Err(apack_repro::Error::CorruptStream { position }) => {
+                return (out, Some(position))
+            }
+            Err(e) => panic!("unexpected error {e}"),
+        }
+    }
+    (out, None)
+}
+
+/// Same outcome through the block `decode_into` path.
+fn block_outcome(
+    table: &SymbolTable,
+    sym: &[u8],
+    sb: usize,
+    ofs: &[u8],
+    ob: usize,
+    n: usize,
+    mode: ResolveMode,
+) -> (Vec<u32>, Option<usize>) {
+    let mut dec =
+        ApackDecoder::new(table, BitReader::new(sym, sb)).unwrap().with_mode(mode);
+    let mut ofs_r = BitReader::new(ofs, ob);
+    let mut out = vec![0u32; n];
+    match dec.decode_into(&mut out, &mut ofs_r) {
+        Ok(()) => (out, None),
+        Err(apack_repro::Error::CorruptStream { position }) => {
+            out.truncate(position);
+            (out, Some(position))
+        }
+        Err(e) => panic!("unexpected error {e}"),
+    }
+}
+
+/// Invariant 3: the three decoder symbol-resolution circuits (`RowScan`,
+/// `Division`, `Lut`) and both decode granularities (per-value reference,
+/// block `decode_into`) agree on every step of every stream — decoded
+/// prefix AND `CorruptStream` position, on clean, bit-flipped and
+/// truncated streams alike.
 #[test]
 fn prop_resolver_equivalence() {
     for seed in 0..15u64 {
@@ -135,18 +189,74 @@ fn prop_resolver_equivalence() {
         let table = random_table(&mut rng, 8);
         let values = random_tensor(&mut rng, 8, 3000);
         let (sym, sb, ofs, ob) = ApackEncoder::encode_all(&table, &values).unwrap();
-        let mut d1 = ApackDecoder::new(&table, BitReader::new(&sym, sb))
-            .unwrap()
-            .with_mode(ResolveMode::RowScan);
-        let mut d2 = ApackDecoder::new(&table, BitReader::new(&sym, sb))
-            .unwrap()
-            .with_mode(ResolveMode::Division);
-        let mut o1 = BitReader::new(&ofs, ob);
-        let mut o2 = BitReader::new(&ofs, ob);
-        for i in 0..values.len() {
-            let a = d1.decode_value(&mut o1).unwrap();
-            let b = d2.decode_value(&mut o2).unwrap();
-            assert_eq!(a, b, "seed {seed} step {i}");
+        let n = values.len();
+
+        // Clean, symbol-corrupted, offset-corrupted and offset-truncated
+        // variants of the same stream.
+        let mut sym_flip = sym.clone();
+        sym_flip[rng.below(sym.len() as u64) as usize] ^= 1 << rng.below(8);
+        let mut ofs_flip = ofs.clone();
+        if !ofs_flip.is_empty() {
+            ofs_flip[rng.below(ofs_flip.len() as u64) as usize] ^= 1 << rng.below(8);
+        }
+        let cases: [(&str, &[u8], usize, &[u8], usize); 4] = [
+            ("clean", &sym, sb, &ofs, ob),
+            ("sym-flip", &sym_flip, sb, &ofs, ob),
+            ("ofs-flip", &sym, sb, &ofs_flip, ob),
+            ("ofs-trunc", &sym, sb, &ofs, ob / 2),
+        ];
+        for (tag, s, s_bits, o, o_bits) in cases {
+            let reference =
+                per_value_outcome(&table, s, s_bits, o, o_bits, n, ResolveMode::RowScan);
+            if tag == "clean" {
+                assert_eq!(reference, (values.clone(), None), "seed {seed}");
+            }
+            for mode in ResolveMode::ALL {
+                let pv = per_value_outcome(&table, s, s_bits, o, o_bits, n, mode);
+                assert_eq!(pv, reference, "seed {seed} {tag} per-value {mode:?}");
+                let blk = block_outcome(&table, s, s_bits, o, o_bits, n, mode);
+                assert_eq!(blk, reference, "seed {seed} {tag} block {mode:?}");
+            }
+        }
+    }
+}
+
+/// Invariant 3 continued: block `decode_into` is bit-exact vs. per-value
+/// `decode_value` on every `ValueProfile` (the distribution shapes the
+/// symbol mix, exercising different resolver rows and renorm patterns) and
+/// on truncated/corrupted streams derived from each.
+#[test]
+fn prop_block_decode_matches_per_value_on_all_profiles() {
+    use apack_repro::models::distributions::ValueProfile;
+    let profiles = [
+        ValueProfile::TwoSidedGeometric { q: 0.9, noise_floor: 0.01 },
+        ValueProfile::Sparse { sparsity: 0.6, q: 0.85 },
+        ValueProfile::ReluActivation { sparsity: 0.5, q: 0.93, noise_floor: 0.01 },
+        ValueProfile::Uniform,
+    ];
+    for (pi, profile) in profiles.iter().enumerate() {
+        let values = profile.sample(8, 20_000, 0xB10C + pi as u64);
+        let hist = Histogram::from_values(8, &values);
+        let table =
+            generate_table(&hist, TensorKind::Activations, &TableGenConfig::default()).unwrap();
+        let (sym, sb, ofs, ob) = ApackEncoder::encode_all(&table, &values).unwrap();
+        let n = values.len();
+        let mut sym_bad = sym.clone();
+        sym_bad[sym.len() / 3] ^= 0x24;
+        let cases: [(&str, &[u8], usize, &[u8], usize); 3] = [
+            ("clean", &sym, sb, &ofs, ob),
+            ("sym-corrupt", &sym_bad, sb, &ofs, ob),
+            ("ofs-trunc", &sym, sb, &ofs, ob / 3),
+        ];
+        for (tag, s, s_bits, o, o_bits) in cases {
+            for mode in ResolveMode::ALL {
+                let pv = per_value_outcome(&table, s, s_bits, o, o_bits, n, mode);
+                let blk = block_outcome(&table, s, s_bits, o, o_bits, n, mode);
+                assert_eq!(blk, pv, "profile {pi} {tag} {mode:?}");
+                if tag == "clean" {
+                    assert_eq!(pv, (values.clone(), None), "profile {pi} {mode:?}");
+                }
+            }
         }
     }
 }
