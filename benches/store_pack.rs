@@ -1,0 +1,57 @@
+//! Ingest throughput bench: tablegen (seed vs. incremental search),
+//! encoder (per-value vs. block) and end-to-end `pack_model_zoo` (serial
+//! vs. pipelined) values/s and MB/s — the write-path mirror of
+//! `codec_hot_path`.
+//!
+//! Thin wrapper over [`apack_repro::eval::ingest`]: the harness asserts
+//! every equivalence *before* timing anything — incremental tablegen must
+//! produce byte-identical tables to the seed search, the block encoder
+//! must emit bit-identical streams to the per-value reference (and those
+//! streams must round-trip decode), and the pipelined packer must write
+//! byte-identical store files to the serial packer (which must pass
+//! `verify`). It then writes the machine-readable `BENCH_store_pack.json`
+//! at the package root (uploaded as a CI artifact) so ingest throughput is
+//! a tracked number PR over PR.
+//!
+//! Pass `--quick` (CI does) for fewer iterations and a smaller pack.
+
+use std::path::Path;
+
+use apack_repro::eval::ingest::{self, IngestConfig};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cfg = if quick { IngestConfig::quick() } else { IngestConfig::full() };
+
+    let report = ingest::run(&cfg);
+    print!("{}", report.render());
+
+    // Persist the artifact BEFORE the regression gates below: a failing
+    // run is exactly when the recorded numbers matter.
+    let path = Path::new(ingest::REPORT_FILE);
+    report.write_json(path).expect("write bench JSON");
+    println!("wrote {}", path.display());
+
+    // Release-profile regression floors (same shape as the codec_hot_path
+    // gate): the block encoder must beat the per-value baseline outright,
+    // and the pipelined packer must improve on the serial baseline
+    // measured in this same run. The exact ratios are tracked in the JSON
+    // artifact PR over PR.
+    assert!(
+        report.speedup_block_vs_per_value_encode > 1.0,
+        "block encode ({:.2}x) regressed below the per-value baseline",
+        report.speedup_block_vs_per_value_encode
+    );
+    assert!(
+        report.speedup_pipelined_vs_serial_pack > 1.0,
+        "pipelined pack ({:.2}x) regressed below the serial baseline",
+        report.speedup_pipelined_vs_serial_pack
+    );
+    // The incremental search is informational here (it is exact-equivalence
+    // gated inside the harness); print it loudly instead of gating so a
+    // noisy shared runner cannot flake CI on it.
+    println!(
+        "incremental tablegen speedup: {:.2}x",
+        report.speedup_incremental_vs_seed_tablegen
+    );
+}

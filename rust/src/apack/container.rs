@@ -195,21 +195,39 @@ impl<'a> BodyView<'a> {
 pub fn compress(bits: u32, values: &[u32], kind: TensorKind) -> Result<Container> {
     let hist = super::histogram::Histogram::from_values(bits, values);
     let table = generate_table(&hist, kind, &TableGenConfig::for_bits(bits))?;
-    compress_with_table(table, values)
+    compress_with_table(&table, values)
 }
 
 /// Compress with a pre-generated table (e.g. an activation table built from
-/// profiling samples, applied to fresh inference activations).
-pub fn compress_with_table(table: SymbolTable, values: &[u32]) -> Result<Container> {
-    let (symbols, symbol_bits, offsets, offset_bits) = ApackEncoder::encode_all(&table, values)?;
+/// profiling samples, applied to fresh inference activations). Borrows the
+/// table — callers encoding many chunks/shards against one table no longer
+/// clone it per call (the resulting `Container` clones it exactly once,
+/// and the heavy value→row LUT inside is `Arc`-shared; DESIGN.md §9).
+pub fn compress_with_table(table: &SymbolTable, values: &[u32]) -> Result<Container> {
+    let (symbols, symbol_bits, offsets, offset_bits) = ApackEncoder::encode_all(table, values)?;
     Ok(Container {
-        table,
+        table: table.clone(),
         n_values: values.len() as u64,
         symbols,
         symbol_bits: symbol_bits as u64,
         offsets,
         offset_bits: offset_bits as u64,
     })
+}
+
+/// Encode a chunk straight to its [`Container::body_to_bytes`] record —
+/// the store writer's ingest hot path: no `Container`, no table clone,
+/// one output buffer. Byte-identical to
+/// `compress_with_table(table, values)?.body_to_bytes()`.
+pub fn encode_body(table: &SymbolTable, values: &[u32]) -> Result<Vec<u8>> {
+    let (symbols, symbol_bits, offsets, offset_bits) = ApackEncoder::encode_all(table, values)?;
+    let mut out = Vec::with_capacity(24 + symbols.len() + offsets.len());
+    out.extend_from_slice(&(values.len() as u64).to_le_bytes());
+    out.extend_from_slice(&(symbol_bits as u64).to_le_bytes());
+    out.extend_from_slice(&(offset_bits as u64).to_le_bytes());
+    out.extend_from_slice(&symbols);
+    out.extend_from_slice(&offsets);
+    Ok(out)
 }
 
 /// One-shot decompression.
@@ -296,6 +314,18 @@ mod tests {
         view.decode_into(&c.table, &mut out2).unwrap();
         assert_eq!(out2, values);
         assert!(BodyView::parse(&body[..body.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn encode_body_matches_container_body() {
+        let values = tensor();
+        let c = compress(8, &values, TensorKind::Weights).unwrap();
+        let direct = encode_body(&c.table, &values).unwrap();
+        assert_eq!(direct, c.body_to_bytes());
+        let view = BodyView::parse(&direct).unwrap();
+        let mut out = vec![0u32; values.len()];
+        view.decode_into(&c.table, &mut out).unwrap();
+        assert_eq!(out, values);
     }
 
     #[test]

@@ -19,6 +19,13 @@
 //! cites Nelson's implementation as its basis), executed here one bit per
 //! loop iteration; the hardware performs all iterations of one value in a
 //! single combinatorial step, which produces the identical bit stream.
+//!
+//! Two call granularities share the same state machine (mirroring the
+//! decoder, DESIGN.md §9): [`ApackEncoder::encode_value`] is the per-value
+//! reference path and [`ApackEncoder::encode_into`] is the block fast path
+//! that keeps `HI`/`LO`/`UBC` in locals across a whole input slice. The
+//! two are bit-identical, including the error raised (and the bits already
+//! committed) on an unencodable value.
 
 use super::bitstream::BitWriter;
 use super::table::{SymbolTable, PROB_BITS};
@@ -30,18 +37,16 @@ const SECOND_BIT: u16 = 0x4000;
 
 /// Streaming APack encoder for one (sub)stream.
 ///
-/// Feed values with [`encode_value`](Self::encode_value) (symbol bits go to
-/// the symbol writer, raw offset bits to the offset writer), then call
-/// [`finish`](Self::finish) to flush the disambiguating tail.
+/// Feed values with [`encode_value`](Self::encode_value) (the per-value
+/// reference path; symbol bits go to the symbol writer, raw offset bits to
+/// the offset writer) or a whole slice at a time with
+/// [`encode_into`](Self::encode_into) (the block fast path, bit-identical),
+/// then call [`finish`](Self::finish) to flush the disambiguating tail.
 #[derive(Debug, Clone)]
 pub struct ApackEncoder<'t> {
     table: &'t SymbolTable,
     /// Cumulative count boundaries: `cum[i]..cum[i+1]` is row i's range.
     cum: [u16; NUM_ROWS + 1],
-    /// Direct value→row map — the software fast path for the hardware's
-    /// 16-comparator SYMBOL Lookup (perf: replaces a 16-iteration scan per
-    /// value with one load; see EXPERIMENTS.md §Perf iteration 1).
-    row_lut: Vec<u8>,
     hi: u16,
     lo: u16,
     /// Underflow bit counter (hardware: 5-bit UBC register).
@@ -52,24 +57,17 @@ pub struct ApackEncoder<'t> {
 
 impl<'t> ApackEncoder<'t> {
     /// New encoder over a validated table. `HI`/`LO` initialize to
-    /// `0xFFFF`/`0x0000` (paper §V).
+    /// `0xFFFF`/`0x0000` (paper §V). The value→row SYMBOL-Lookup LUT
+    /// (the software fast path for the hardware's 16 comparators; see
+    /// EXPERIMENTS.md §Perf iteration 1) is owned by the table — built
+    /// lazily on first use and shared by every encoder over it —
+    /// so constructing an encoder is O(1).
     pub fn new(table: &'t SymbolTable) -> Self {
         let mut cum = [0u16; NUM_ROWS + 1];
         for i in 0..NUM_ROWS {
             cum[i + 1] = table.rows()[i].hi_cnt;
         }
-        // One byte per representable value: 256 B for 8-bit tables, 64 KiB
-        // for 16-bit — built once per tensor, amortized over the stream.
-        let n_values = table.value_max() as usize + 1;
-        let mut row_lut = vec![0u8; n_values];
-        let mut row = 0usize;
-        for (v, slot) in row_lut.iter_mut().enumerate() {
-            while row + 1 < NUM_ROWS && table.rows()[row + 1].v_min as usize <= v {
-                row += 1;
-            }
-            *slot = row as u8;
-        }
-        Self { table, cum, row_lut, hi: 0xFFFF, lo: 0x0000, ubc: 0, count: 0 }
+        Self { table, cum, hi: 0xFFFF, lo: 0x0000, ubc: 0, count: 0 }
     }
 
     /// Number of values encoded so far.
@@ -111,10 +109,11 @@ impl<'t> ApackEncoder<'t> {
     ) -> Result<()> {
         // SYMBOL Lookup (Fig 3b): row index + offset emission. The LUT is
         // exact for in-range values; out-of-range errors like lookup().
-        if v >= self.row_lut.len() as u32 {
+        let lut = self.table.value_lut();
+        if v >= lut.len() as u32 {
             return Err(Error::ValueOutOfRange { value: v, bits: self.table.bits() });
         }
-        let idx = self.row_lut[v as usize] as usize;
+        let idx = lut[v as usize] as usize;
         debug_assert_eq!(idx, self.table.lookup(v).unwrap());
         let row = &self.table.rows()[idx];
         let (cum_lo, cum_hi) = (self.cum[idx], self.cum[idx + 1]);
@@ -173,6 +172,97 @@ impl<'t> ApackEncoder<'t> {
         Ok(())
     }
 
+    /// Block fast path: encode a whole slice of values.
+    ///
+    /// Bit-identical to calling [`Self::encode_value`] once per element —
+    /// including which error is raised first and the exact bits already
+    /// written when it is — but keeps `HI`/`LO`/`UBC` and the cumulative
+    /// counts in locals across the block and resolves the SYMBOL Lookup
+    /// through the table's shared value→row LUT, so the per-value cost is
+    /// one load, one multiply pair and the batched renormalization pushes
+    /// (DESIGN.md §9). On error the encoder state (and both writers)
+    /// reflect the values encoded before the offending one, exactly as the
+    /// per-value loop would leave them.
+    pub fn encode_into(
+        &mut self,
+        values: &[u32],
+        sym_out: &mut BitWriter,
+        ofs_out: &mut BitWriter,
+    ) -> Result<()> {
+        let table = self.table;
+        let lut = table.value_lut();
+        let rows = table.rows();
+        let cum = self.cum;
+        let (mut hi, mut lo) = (self.hi, self.lo);
+        let mut ubc = self.ubc;
+        let mut done = 0u64;
+        let mut failed = None;
+        for &v in values {
+            // SYMBOL Lookup (Fig 3b) via the shared LUT.
+            if v >= lut.len() as u32 {
+                failed = Some(Error::ValueOutOfRange { value: v, bits: table.bits() });
+                break;
+            }
+            let idx = lut[v as usize] as usize;
+            debug_assert_eq!(idx, table.lookup(v).unwrap());
+            let row = &rows[idx];
+            let (cum_lo, cum_hi) = (cum[idx], cum[idx + 1]);
+            if cum_hi == cum_lo {
+                failed = Some(Error::ValueNotCovered(v));
+                break;
+            }
+            if row.ol > 0 {
+                ofs_out.push_bits((v - row.v_min) as u64, row.ol);
+            }
+
+            // PCNT Table scaling (Fig 3c) on block locals.
+            let range = (hi - lo) as u32 + 1;
+            let t_hi = lo as u32 + ((range * cum_hi as u32) >> PROB_BITS) - 1;
+            let t_lo = lo as u32 + ((range * cum_lo as u32) >> PROB_BITS);
+            debug_assert!(t_hi <= 0xFFFF && t_lo <= t_hi);
+            hi = t_hi as u16;
+            lo = t_lo as u16;
+
+            // HI/LO/CODE Gen (Fig 3d), same batched renormalization as
+            // `encode_value`, on locals.
+            loop {
+                let diff = hi ^ lo;
+                if diff & TOP_BIT == 0 {
+                    let k = (diff as u32 | 1).leading_zeros() - 16;
+                    let bits = (hi >> (16 - k)) as u64;
+                    if ubc > 0 {
+                        let first = bits >> (k - 1);
+                        sym_out.push_bit(first == 1);
+                        sym_out.push_repeated(first == 0, ubc);
+                        ubc = 0;
+                        if k > 1 {
+                            sym_out.push_bits(bits & ((1 << (k - 1)) - 1), k - 1);
+                        }
+                    } else {
+                        sym_out.push_bits(bits, k);
+                    }
+                    lo <<= k;
+                    hi = (hi << k) | ((1u32 << k) as u16).wrapping_sub(1);
+                } else if lo & SECOND_BIT != 0 && hi & SECOND_BIT == 0 {
+                    ubc += 1;
+                    lo = (lo & (SECOND_BIT - 1)) << 1;
+                    hi = ((hi | SECOND_BIT) << 1) | 1;
+                } else {
+                    break;
+                }
+            }
+            done += 1;
+        }
+        self.hi = hi;
+        self.lo = lo;
+        self.ubc = ubc;
+        self.count += done;
+        match failed {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
     /// Flush the coder state: writes the second-MSB of `LO` followed by the
     /// pending underflow bits plus one, inverted (Nelson's flush). Any
     /// continuation of the stream after these bits — including the zero
@@ -188,6 +278,9 @@ impl<'t> ApackEncoder<'t> {
 
     /// Encode a full tensor into fresh symbol/offset streams. Returns
     /// `(symbol_bytes, symbol_bits, offset_bytes, offset_bits)`.
+    /// Delegates to the block fast path ([`Self::encode_into`]) — there is
+    /// exactly one bulk encode loop to keep in sync with the decoder, and
+    /// `encode_value` remains as its per-value reference.
     pub fn encode_all(
         table: &SymbolTable,
         values: &[u32],
@@ -195,9 +288,7 @@ impl<'t> ApackEncoder<'t> {
         let mut enc = ApackEncoder::new(table);
         let mut sym = BitWriter::with_capacity_bits(values.len() * 4);
         let mut ofs = BitWriter::with_capacity_bits(values.len() * 4);
-        for &v in values {
-            enc.encode_value(v, &mut sym, &mut ofs)?;
-        }
+        enc.encode_into(values, &mut sym, &mut ofs)?;
         enc.finish(&mut sym);
         let (sym_bytes, sym_bits) = sym.finish();
         let (ofs_bytes, ofs_bits) = ofs.finish();
@@ -262,6 +353,109 @@ mod tests {
             }
         }
         roundtrip(&t, &values);
+    }
+
+    /// Encode with the per-value reference loop (the pre-block path).
+    fn encode_per_value(
+        table: &SymbolTable,
+        values: &[u32],
+    ) -> Result<(Vec<u8>, usize, Vec<u8>, usize)> {
+        let mut enc = ApackEncoder::new(table);
+        let mut sym = BitWriter::new();
+        let mut ofs = BitWriter::new();
+        for &v in values {
+            enc.encode_value(v, &mut sym, &mut ofs)?;
+        }
+        enc.finish(&mut sym);
+        let (sb, sbits) = sym.finish();
+        let (ob, obits) = ofs.finish();
+        Ok((sb, sbits, ob, obits))
+    }
+
+    #[test]
+    fn block_encode_bit_identical_to_per_value() {
+        let tables = [
+            SymbolTable::uniform(4),
+            SymbolTable::uniform(8),
+            SymbolTable::uniform(16),
+            crate::apack::table::tests::paper_table1(),
+        ];
+        for (ti, t) in tables.iter().enumerate() {
+            let max = t.value_max();
+            // Mix of runs and jumps so renorm + UBC paths all fire; for the
+            // paper table stay on covered rows (0..4 and the top).
+            let values: Vec<u32> = (0..5000u32)
+                .map(|i| {
+                    if ti == 3 {
+                        if i % 3 == 0 { i % 4 } else { max - (i % 4) }
+                    } else {
+                        (i.wrapping_mul(2654435761) >> 16) % (max + 1)
+                    }
+                })
+                .collect();
+            let reference = encode_per_value(t, &values).unwrap();
+            let block = ApackEncoder::encode_all(t, &values).unwrap();
+            assert_eq!(block, reference, "table {ti}");
+
+            // And split across multiple encode_into calls at odd points.
+            for split in [0usize, 1, values.len() / 3, values.len()] {
+                let mut enc = ApackEncoder::new(t);
+                let mut sym = BitWriter::new();
+                let mut ofs = BitWriter::new();
+                enc.encode_into(&values[..split], &mut sym, &mut ofs).unwrap();
+                enc.encode_into(&values[split..], &mut sym, &mut ofs).unwrap();
+                assert_eq!(enc.count(), values.len() as u64);
+                enc.finish(&mut sym);
+                let (sb, sbits) = sym.finish();
+                let (ob, obits) = ofs.finish();
+                assert_eq!((sb, sbits, ob, obits), reference, "table {ti} split {split}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_encode_error_matches_per_value() {
+        // 0x55 hits a zero-probability row of Table I: both paths must
+        // fail with the same error after committing the same prefix bits.
+        let t = crate::apack::table::tests::paper_table1();
+        let mut values: Vec<u32> = (0..100).map(|i| i % 4).collect();
+        values.push(0x55);
+        values.extend((0..50).map(|i| 0xFC + i % 4));
+
+        let run_block = {
+            let mut enc = ApackEncoder::new(&t);
+            let mut sym = BitWriter::new();
+            let mut ofs = BitWriter::new();
+            let err = enc.encode_into(&values, &mut sym, &mut ofs).unwrap_err();
+            (err, enc.count(), enc.hi(), enc.lo(), enc.ubc(), sym.len_bits(), ofs.len_bits())
+        };
+        let run_per_value = {
+            let mut enc = ApackEncoder::new(&t);
+            let mut sym = BitWriter::new();
+            let mut ofs = BitWriter::new();
+            let mut err = None;
+            for &v in &values {
+                if let Err(e) = enc.encode_value(v, &mut sym, &mut ofs) {
+                    err = Some(e);
+                    break;
+                }
+            }
+            let err = err.expect("per-value loop must reject 0x55");
+            (err, enc.count(), enc.hi(), enc.lo(), enc.ubc(), sym.len_bits(), ofs.len_bits())
+        };
+        assert_eq!(run_block, run_per_value);
+        assert!(matches!(run_block.0, Error::ValueNotCovered(0x55)));
+        assert_eq!(run_block.1, 100, "values before the bad one are committed");
+
+        // Out-of-range values too.
+        let t8 = SymbolTable::uniform(8);
+        let mut enc = ApackEncoder::new(&t8);
+        let (mut s, mut o) = (BitWriter::new(), BitWriter::new());
+        assert!(matches!(
+            enc.encode_into(&[1, 2, 0x100], &mut s, &mut o),
+            Err(Error::ValueOutOfRange { value: 0x100, bits: 8 })
+        ));
+        assert_eq!(enc.count(), 2);
     }
 
     #[test]

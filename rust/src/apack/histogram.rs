@@ -59,13 +59,46 @@ impl Histogram {
 
     /// Merge another histogram (used to pool several activation samples,
     /// paper §VII "up to 9 input activation samples per layer").
+    /// Equivalent to `merge_many(once(other))` — one prefix rebuild.
     pub fn merge(&mut self, other: &Histogram) {
-        assert_eq!(self.bits, other.bits);
-        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
-            *a += *b;
+        self.merge_many(std::iter::once(other));
+    }
+
+    /// Merge several histograms with a **single** deferred prefix rebuild
+    /// — pooling N activation samples costs one O(2^bits) prefix pass
+    /// instead of N (`merge` per sample rebuilt every time). This is the
+    /// ingest path's pooling primitive (`store::pipeline`, DESIGN.md §9).
+    pub fn merge_many<'a>(&mut self, others: impl IntoIterator<Item = &'a Histogram>) {
+        for other in others {
+            assert_eq!(self.bits, other.bits);
+            for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+                *a += *b;
+            }
+            self.total += other.total;
         }
-        self.total += other.total;
         self.rebuild_prefix();
+    }
+
+    /// Histogram of several value slices pooled together — counts
+    /// accumulated across all chunks, then one prefix rebuild. Equal to
+    /// `from_values` over the concatenation (and to building per-chunk
+    /// histograms and [`Self::merge_many`]-ing them), without the
+    /// intermediate allocations or rebuilds.
+    pub fn from_value_chunks<'a>(
+        bits: u32,
+        chunks: impl IntoIterator<Item = &'a [u32]>,
+    ) -> Self {
+        let mut h = Self::new(bits);
+        let mask = (1u32 << bits) - 1;
+        for chunk in chunks {
+            for &v in chunk {
+                debug_assert!(v <= mask, "value {v:#x} exceeds {bits}-bit space");
+                h.counts[(v & mask) as usize] += 1;
+            }
+            h.total += chunk.len() as u64;
+        }
+        h.rebuild_prefix();
+        h
     }
 
     /// Value bit width.
@@ -163,6 +196,29 @@ mod tests {
         assert_eq!(a.total(), 5);
         assert_eq!(a.counts()[3], 2);
         assert_eq!(a.range_mass(1, 4), 5);
+    }
+
+    #[test]
+    fn merge_many_equals_sequential_merges() {
+        let samples: Vec<Vec<u32>> =
+            (0..9u32).map(|s| (0..200).map(|i| (i * (s + 3)) % 256).collect()).collect();
+        let hists: Vec<Histogram> =
+            samples.iter().map(|v| Histogram::from_values(8, v)).collect();
+
+        let mut sequential = Histogram::new(8);
+        for h in &hists {
+            sequential.merge(h);
+        }
+        let mut pooled = Histogram::new(8);
+        pooled.merge_many(&hists);
+        assert_eq!(pooled, sequential);
+
+        // And straight from the chunks, no intermediate histograms.
+        let chunked =
+            Histogram::from_value_chunks(8, samples.iter().map(|v| v.as_slice()));
+        assert_eq!(chunked, sequential);
+        let flat: Vec<u32> = samples.concat();
+        assert_eq!(chunked, Histogram::from_values(8, &flat));
     }
 
     #[test]

@@ -21,12 +21,12 @@ pub mod histogram;
 pub mod table;
 pub mod tablegen;
 
-pub use container::{compress, decompress, BodyView, Container};
+pub use container::{compress, decompress, encode_body, BodyView, Container};
 pub use decoder::{ApackDecoder, ResolveMode};
 pub use encoder::ApackEncoder;
 pub use histogram::Histogram;
 pub use table::{SymbolTable, TableRow, PROB_BITS, PROB_MAX};
-pub use tablegen::{generate_table, TableGenConfig, TensorKind};
+pub use tablegen::{generate_table, generate_table_seed, TableGenConfig, TensorKind};
 
 /// Number of rows in the symbol / probability-count tables. The paper found
 /// 16 sufficient across 4-, 8- and 16-bit models (§IV).

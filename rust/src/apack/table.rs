@@ -13,6 +13,8 @@
 //! previous row's high (0 for row 0) and `v_min[i] = v_max[i-1] + 1`.
 
 
+use std::sync::{Arc, OnceLock};
+
 use super::NUM_ROWS;
 use crate::error::{Error, Result};
 
@@ -64,15 +66,24 @@ pub struct SymbolTable {
     bits: u32,
     /// Count→row LUT for the decoder's `ResolveMode::Lut` fast path: entry
     /// `k` is the index of the row whose `[lo_cnt, hi_cnt)` range contains
-    /// `k`. Built once per table (the decode-side mirror of the encoder's
-    /// per-value `row_lut`), it turns symbol resolution into one 32-bit
+    /// `k`. Built once per table (the decode-side mirror of
+    /// [`Self::value_lut`]), it turns symbol resolution into one 32-bit
     /// division plus one byte load instead of a 16-row scan. Entry
     /// [`PROB_MAX`] is never produced by a valid `CODE` (the scaled top
     /// boundary is exclusive) and points at the last row as a sentinel.
     row_of_k: [u8; COUNT_LUT_LEN],
+    /// Value→row LUT for the *encoder's* SYMBOL Lookup fast path: entry
+    /// `v` is the row containing value `v` (256 B for 8-bit tables, 64 KiB
+    /// for 16-bit). Owned by the table and shared by every encoder over it
+    /// — instead of being rebuilt per [`super::encoder::ApackEncoder`] —
+    /// but built **lazily** on the first [`Self::value_lut`] call, so
+    /// decode-only tables (e.g. the footer tables a store reader parses at
+    /// open) never pay for it. `Arc` inside so clones of an initialized
+    /// table share the allocation (DESIGN.md §9).
+    value_lut: OnceLock<Arc<[u8]>>,
 }
 
-// Manual impls so the derived forms don't drag the 1 KiB LUT (fully
+// Manual impls so the derived forms don't drag the LUTs (both fully
 // determined by `rows`) through comparisons and debug output.
 impl PartialEq for SymbolTable {
     fn eq(&self, other: &Self) -> bool {
@@ -157,7 +168,7 @@ impl SymbolTable {
             lo = row.hi_cnt as usize;
         }
         row_of_k[PROB_MAX as usize] = (NUM_ROWS - 1) as u8; // unreachable sentinel
-        Ok(Self { rows, bits, row_of_k })
+        Ok(Self { rows, bits, row_of_k, value_lut: OnceLock::new() })
     }
 
     /// Uniform table: the value space split evenly with counts proportional
@@ -209,6 +220,28 @@ impl SymbolTable {
     #[inline]
     pub fn row_for_count(&self, k: u16) -> usize {
         self.row_of_k[k as usize] as usize
+    }
+
+    /// The encoder-side value→row LUT: entry `v` is the index of the row
+    /// containing value `v` (one slot per representable value). Built on
+    /// first use (decode-only tables never pay for it), then shared by
+    /// every [`super::encoder::ApackEncoder`] over the table; indexing
+    /// with `v ≤ value_max()` is exact, larger values are the caller's
+    /// out-of-range error.
+    pub fn value_lut(&self) -> &[u8] {
+        self.value_lut.get_or_init(|| {
+            // The matching row is the last whose v_min ≤ v (SYMBOL
+            // Lookup, Fig 3b). One pass over the value space.
+            let mut lut = vec![0u8; self.value_max() as usize + 1];
+            let mut row = 0usize;
+            for (v, slot) in lut.iter_mut().enumerate() {
+                while row + 1 < NUM_ROWS && self.rows[row + 1].v_min as usize <= v {
+                    row += 1;
+                }
+                *slot = row as u8;
+            }
+            lut.into()
+        })
     }
 
     /// Row `i`'s inclusive-low probability count (the previous row's high).
@@ -385,6 +418,26 @@ pub(crate) mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn value_lut_matches_lookup_scan() {
+        // The encoder's value→row LUT agrees with the 16-comparator scan
+        // on every representable value, for skewed and uniform tables.
+        for t in [paper_table1(), SymbolTable::uniform(4), SymbolTable::uniform(8)] {
+            let lut = t.value_lut();
+            assert_eq!(lut.len() as u64, t.value_max() as u64 + 1);
+            for v in 0..=t.value_max() {
+                assert_eq!(lut[v as usize] as usize, t.lookup(v).unwrap(), "v={v:#x}");
+            }
+        }
+        // Shared, not copied: cloning an initialized table carries the
+        // same Arc'd allocation.
+        let t = paper_table1();
+        let built = t.value_lut();
+        assert_eq!(built.len(), 256);
+        let c = t.clone();
+        assert!(std::ptr::eq(t.value_lut(), c.value_lut()));
     }
 
     #[test]

@@ -13,6 +13,13 @@
 //! 3. stops when a full round improves the footprint by less than the 1%
 //!    `THRESHOLD`.
 //!
+//! The production `search` evaluates candidates **incrementally**: a
+//! boundary move changes exactly two ranges, so per-range bit
+//! contributions are cached and only those two are recomputed per
+//! candidate (DESIGN.md §9). The pre-incremental full-recompute search is
+//! kept verbatim behind [`generate_table_seed`]; the two are
+//! property-tested to produce byte-identical tables.
+//!
 //! Once the partition is fixed, the 10-bit probability counts are assigned
 //! proportionally to range masses (largest-remainder rounding), giving every
 //! non-empty range at least one count. For **activations** a final
@@ -69,7 +76,9 @@ impl TableGenConfig {
 }
 
 /// Partition state during the search: the movable `v_min` boundaries.
-#[derive(Clone)]
+/// `Copy` (it is 17 words) so the hot search tracks its best candidate by
+/// plain assignment instead of a `Clone` call per improvement.
+#[derive(Clone, Copy)]
 struct Partition {
     v_mins: [u32; NUM_ROWS],
     value_max: u32,
@@ -121,12 +130,136 @@ fn encoded_size(hist: &Histogram, p: &Partition) -> f64 {
 /// bytes" for the range + probability tables + symbol count).
 pub const METADATA_BITS: usize = 298 * 8;
 
-/// The recursive boundary search (paper Listing 1, `search`).
+/// Range `i`'s exact contribution to [`encoded_size`]: the same
+/// floating-point expression, term for term, so a sum of contributions in
+/// index order is **bit-identical** to the from-scratch accumulation
+/// (empty ranges contribute `0.0`, and `x + 0.0 == x` exactly for the
+/// non-negative partials this sum produces). This is what lets the
+/// incremental search below claim identical results to the seed search.
+#[inline]
+fn range_contrib(hist: &Histogram, p: &Partition, i: usize, total_f: f64) -> f64 {
+    let mass = hist.range_mass(p.v_mins[i], p.v_max(i));
+    if mass == 0 {
+        return 0.0;
+    }
+    let prob = mass as f64 / total_f;
+    let ol = offset_len(p.v_max(i) - p.v_mins[i] + 1) as f64;
+    mass as f64 * (-prob.log2() + ol)
+}
+
+/// All [`NUM_ROWS`] contributions of a partition.
+fn contribs_for(hist: &Histogram, p: &Partition, total_f: f64) -> [f64; NUM_ROWS] {
+    let mut c = [0.0; NUM_ROWS];
+    for (i, slot) in c.iter_mut().enumerate() {
+        *slot = range_contrib(hist, p, i, total_f);
+    }
+    c
+}
+
+/// Footprint from per-range contributions — equals
+/// `encoded_size(hist, p)` bit-for-bit when `hist.total() > 0` (see
+/// [`range_contrib`] for why).
+#[inline]
+fn size_from_contribs(contrib: &[f64; NUM_ROWS]) -> f64 {
+    let mut bits = 0.0;
+    for &c in contrib {
+        bits += c;
+    }
+    bits + METADATA_BITS as f64
+}
+
+/// The recursive boundary search (paper Listing 1, `search`) —
+/// **incremental** evaluation: moving boundary `i` changes exactly two
+/// ranges (`i-1`, whose `v_max` follows the boundary, and `i`, whose
+/// `v_min` is it), so each candidate updates two cached contributions and
+/// re-sums instead of recomputing entropy over all 16 rows. Candidate
+/// order, comparisons and returned partitions are identical to
+/// [`search_seed`] (property-tested: `prop_incremental_tablegen_matches_seed`).
 ///
-/// Returns the best `(partition, size)` found. `around < 0` (modelled as
-/// `None`) allows all boundaries; otherwise only boundaries within
+/// `around = None` allows all boundaries; otherwise only boundaries within
 /// `around_radius` of `around` are tried.
 fn search(
+    hist: &Histogram,
+    pt: &Partition,
+    contrib: &[f64; NUM_ROWS],
+    minsize: f64,
+    depth: u32,
+    around: Option<usize>,
+    cfg: &TableGenConfig,
+) -> (Partition, f64) {
+    let total_f = hist.total() as f64;
+    let mut best = *pt;
+    let mut best_size = minsize;
+    let mut try_pt = *pt;
+    let mut try_contrib = *contrib;
+
+    for i in 1..NUM_ROWS {
+        if let Some(a) = around {
+            if (i as i64 - a as i64).unsigned_abs() as u32 > cfg.around_radius {
+                continue;
+            }
+        }
+        let save = try_pt.v_mins[i];
+        let (save_prev, save_this) = (try_contrib[i - 1], try_contrib[i]);
+
+        // Move the boundary DOWN one stride at a time, keeping rows
+        // non-empty (v_min strictly increasing).
+        let floor = try_pt.v_mins[i - 1] + 1;
+        while try_pt.v_mins[i] > floor {
+            try_pt.v_mins[i] = try_pt.v_mins[i].saturating_sub(cfg.stride).max(floor);
+            try_contrib[i - 1] = range_contrib(hist, &try_pt, i - 1, total_f);
+            try_contrib[i] = range_contrib(hist, &try_pt, i, total_f);
+            let s = size_from_contribs(&try_contrib);
+            if s < best_size {
+                best = try_pt;
+                best_size = s;
+            }
+            if depth < cfg.depth_max {
+                let (p, s) =
+                    search(hist, &try_pt, &try_contrib, best_size, depth + 1, Some(i), cfg);
+                if s < best_size {
+                    best = p;
+                    best_size = s;
+                }
+            }
+        }
+        try_pt.v_mins[i] = save;
+        try_contrib[i - 1] = save_prev;
+        try_contrib[i] = save_this;
+
+        // Move the boundary UP.
+        let ceil = if i + 1 < NUM_ROWS { try_pt.v_mins[i + 1] - 1 } else { try_pt.value_max };
+        while try_pt.v_mins[i] < ceil {
+            try_pt.v_mins[i] = (try_pt.v_mins[i] + cfg.stride).min(ceil);
+            try_contrib[i - 1] = range_contrib(hist, &try_pt, i - 1, total_f);
+            try_contrib[i] = range_contrib(hist, &try_pt, i, total_f);
+            let s = size_from_contribs(&try_contrib);
+            if s < best_size {
+                best = try_pt;
+                best_size = s;
+            }
+            if depth < cfg.depth_max {
+                let (p, s) =
+                    search(hist, &try_pt, &try_contrib, best_size, depth + 1, Some(i), cfg);
+                if s < best_size {
+                    best = p;
+                    best_size = s;
+                }
+            }
+        }
+        try_pt.v_mins[i] = save;
+        try_contrib[i - 1] = save_prev;
+        try_contrib[i] = save_this;
+    }
+    (best, best_size)
+}
+
+/// The pre-incremental boundary search, kept verbatim as the **reference
+/// implementation**: every candidate is evaluated by a full
+/// [`encoded_size`] recomputation. [`generate_table_seed`] drives it; the
+/// equivalence property test and the `store_pack` ingest bench compare
+/// the incremental path against it.
+fn search_seed(
     hist: &Histogram,
     pt: &Partition,
     minsize: f64,
@@ -134,9 +267,9 @@ fn search(
     around: Option<usize>,
     cfg: &TableGenConfig,
 ) -> (Partition, f64) {
-    let mut best = pt.clone();
+    let mut best = *pt;
     let mut best_size = minsize;
-    let mut try_pt = pt.clone();
+    let mut try_pt = *pt;
 
     for i in 1..NUM_ROWS {
         if let Some(a) = around {
@@ -146,18 +279,16 @@ fn search(
         }
         let save = try_pt.v_mins[i];
 
-        // Move the boundary DOWN one stride at a time, keeping rows
-        // non-empty (v_min strictly increasing).
         let floor = try_pt.v_mins[i - 1] + 1;
         while try_pt.v_mins[i] > floor {
             try_pt.v_mins[i] = try_pt.v_mins[i].saturating_sub(cfg.stride).max(floor);
             let s = encoded_size(hist, &try_pt);
             if s < best_size {
-                best = try_pt.clone();
+                best = try_pt;
                 best_size = s;
             }
             if depth < cfg.depth_max {
-                let (p, s) = search(hist, &try_pt, best_size, depth + 1, Some(i), cfg);
+                let (p, s) = search_seed(hist, &try_pt, best_size, depth + 1, Some(i), cfg);
                 if s < best_size {
                     best = p;
                     best_size = s;
@@ -166,17 +297,16 @@ fn search(
         }
         try_pt.v_mins[i] = save;
 
-        // Move the boundary UP.
         let ceil = if i + 1 < NUM_ROWS { try_pt.v_mins[i + 1] - 1 } else { try_pt.value_max };
         while try_pt.v_mins[i] < ceil {
             try_pt.v_mins[i] = (try_pt.v_mins[i] + cfg.stride).min(ceil);
             let s = encoded_size(hist, &try_pt);
             if s < best_size {
-                best = try_pt.clone();
+                best = try_pt;
                 best_size = s;
             }
             if depth < cfg.depth_max {
-                let (p, s) = search(hist, &try_pt, best_size, depth + 1, Some(i), cfg);
+                let (p, s) = search_seed(hist, &try_pt, best_size, depth + 1, Some(i), cfg);
                 if s < best_size {
                     best = p;
                     best_size = s;
@@ -189,13 +319,24 @@ fn search(
 }
 
 /// `findPT` (paper Listing 1): iterate `search` until the improvement per
-/// round drops below the threshold, then assign probability counts.
+/// round drops below the threshold, then assign probability counts. Uses
+/// the incremental boundary search (O(1) contribution deltas per
+/// candidate); the resulting tables are byte-identical to
+/// [`generate_table_seed`].
 pub fn generate_table(hist: &Histogram, kind: TensorKind, cfg: &TableGenConfig) -> Result<SymbolTable> {
     let bits = hist.bits();
     let mut pt = Partition::uniform(bits);
+    if hist.total() == 0 {
+        // Degenerate empty histogram: no candidate can beat `encoded_size
+        // == 0.0`, so the seed flow keeps the uniform partition — return
+        // it directly (assign_counts falls back to uniform counts too).
+        return assign_counts(hist, &pt, kind);
+    }
+    let total_f = hist.total() as f64;
     let mut size = encoded_size(hist, &pt);
     loop {
-        let (new_pt, new_size) = search(hist, &pt, size, 1, None, cfg);
+        let contrib = contribs_for(hist, &pt, total_f);
+        let (new_pt, new_size) = search(hist, &pt, &contrib, size, 1, None, cfg);
         pt = new_pt;
         if size <= 0.0 || new_size / size >= cfg.threshold {
             size = new_size;
@@ -206,7 +347,37 @@ pub fn generate_table(hist: &Histogram, kind: TensorKind, cfg: &TableGenConfig) 
     // Stride-1 refinement round for coarse searches.
     if cfg.stride > 1 {
         let fine = TableGenConfig { stride: 1, depth_max: 1, ..*cfg };
-        let (new_pt, _) = search(hist, &pt, size, 1, None, &fine);
+        let contrib = contribs_for(hist, &pt, total_f);
+        let (new_pt, _) = search(hist, &pt, &contrib, size, 1, None, &fine);
+        pt = new_pt;
+    }
+    assign_counts(hist, &pt, kind)
+}
+
+/// The seed (pre-incremental) `findPT`, kept selectable: drives
+/// [`search_seed`] exactly as the original implementation did. Used by the
+/// equivalence property test (`generate_table` must produce byte-identical
+/// tables) and as the tablegen baseline in `benches/store_pack.rs`.
+pub fn generate_table_seed(
+    hist: &Histogram,
+    kind: TensorKind,
+    cfg: &TableGenConfig,
+) -> Result<SymbolTable> {
+    let bits = hist.bits();
+    let mut pt = Partition::uniform(bits);
+    let mut size = encoded_size(hist, &pt);
+    loop {
+        let (new_pt, new_size) = search_seed(hist, &pt, size, 1, None, cfg);
+        pt = new_pt;
+        if size <= 0.0 || new_size / size >= cfg.threshold {
+            size = new_size;
+            break;
+        }
+        size = new_size;
+    }
+    if cfg.stride > 1 {
+        let fine = TableGenConfig { stride: 1, depth_max: 1, ..*cfg };
+        let (new_pt, _) = search_seed(hist, &pt, size, 1, None, &fine);
         pt = new_pt;
     }
     assign_counts(hist, &pt, kind)
@@ -424,6 +595,35 @@ mod tests {
             (0.9..1.1).contains(&ratio),
             "estimate {est:.0} vs actual {actual:.0} (ratio {ratio:.3})"
         );
+    }
+
+    #[test]
+    fn incremental_search_matches_seed_search() {
+        // The incremental search must pick the exact same partitions (and
+        // therefore tables) as the full-recompute seed search — 8-bit
+        // stride-1 and 16-bit coarse+refine alike, for both tensor kinds
+        // and for the degenerate empty histogram.
+        let values = skewed_tensor(20_000);
+        let hist = Histogram::from_values(8, &values);
+        for kind in [TensorKind::Weights, TensorKind::Activations] {
+            let cfg = TableGenConfig::for_bits(8);
+            let inc = generate_table(&hist, kind, &cfg).unwrap();
+            let seed = generate_table_seed(&hist, kind, &cfg).unwrap();
+            assert_eq!(inc.to_bytes(), seed.to_bytes(), "{kind:?}");
+        }
+
+        let wide: Vec<u32> = values.iter().map(|v| v * 257).collect();
+        let hist16 = Histogram::from_values(16, &wide);
+        let cfg16 = TableGenConfig::for_bits(16);
+        let inc = generate_table(&hist16, TensorKind::Activations, &cfg16).unwrap();
+        let seed = generate_table_seed(&hist16, TensorKind::Activations, &cfg16).unwrap();
+        assert_eq!(inc.to_bytes(), seed.to_bytes(), "16-bit coarse");
+
+        let empty = Histogram::new(8);
+        let inc = generate_table(&empty, TensorKind::Weights, &TableGenConfig::default()).unwrap();
+        let seed =
+            generate_table_seed(&empty, TensorKind::Weights, &TableGenConfig::default()).unwrap();
+        assert_eq!(inc.to_bytes(), seed.to_bytes(), "empty histogram");
     }
 
     #[test]

@@ -195,7 +195,7 @@ impl Coordinator {
     ) -> Result<ShardedContainer> {
         let chunks = self.policy.split(values);
         let shards: Result<Vec<Container>> =
-            crate::util::par_map(&chunks, |chunk| compress_with_table(table.clone(), chunk))
+            crate::util::par_map(&chunks, |chunk| compress_with_table(&table, chunk))
                 .into_iter()
                 .collect();
         let shards = shards?;

@@ -1,0 +1,362 @@
+//! Ingest (write-path) measurement harness: tablegen, encode and
+//! end-to-end `pack_model_zoo` throughput, with machine-readable JSON
+//! output so ingest speed is a tracked, regression-guarded number PR over
+//! PR — the write-side mirror of [`super::hot_path`] (ISSUE 5; DESIGN.md
+//! §9).
+//!
+//! Shared by `benches/store_pack.rs` (release-build numbers, uploaded as a
+//! CI artifact) and the tier-1 `ingest_report` integration test (JSON
+//! emission on every `cargo test` run, profile-labeled). Correctness is
+//! asserted **before** anything is timed:
+//!
+//! - the incremental tablegen search must produce byte-identical tables
+//!   to the seed (full-recompute) search,
+//! - the block encoder must emit bit-identical streams to the per-value
+//!   reference, and those streams must round-trip decode to the input,
+//! - the pipelined packer must write byte-identical store files to the
+//!   serial packer, and the packed store must pass `verify` (CRC + full
+//!   decode of every chunk).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::apack::bitstream::{BitReader, BitWriter};
+use crate::apack::decoder::ApackDecoder;
+use crate::apack::encoder::ApackEncoder;
+use crate::apack::tablegen::{
+    generate_table, generate_table_seed, TableGenConfig, TensorKind,
+};
+use crate::apack::{Histogram, SymbolTable};
+use crate::coordinator::PartitionPolicy;
+use crate::models::distributions::ValueProfile;
+use crate::models::zoo::{model_by_name, ModelConfig};
+use crate::store::{pack_model_zoo_with, PackOptions, StoreReader};
+use crate::util::bench::Bench;
+use crate::util::json::Json;
+
+/// The canonical JSON artifact name (repo root / CI artifact).
+pub const REPORT_FILE: &str = "BENCH_store_pack.json";
+
+/// Zoo models used for the end-to-end pack measurement, smallest first so
+/// `pack_models` scales the workload monotonically.
+const PACK_MODELS: [&str; 6] =
+    ["ncf", "bilstm", "alexnet_eyeriss", "mobilenet_v1", "resnet18", "googlenet"];
+
+/// Harness configuration.
+pub struct IngestConfig {
+    /// Values per codec measurement tensor.
+    pub n_values: usize,
+    pub warmup: usize,
+    pub iters: usize,
+    /// Include the 16-bit (coarse-stride search) cases — on for the
+    /// release bench, off for the debug tier-1 run where the seed search
+    /// baseline is slow.
+    pub wide: bool,
+    /// Zoo models in the end-to-end pack measurement.
+    pub pack_models: usize,
+    /// `sample_cap` for the pack measurement.
+    pub pack_sample_cap: usize,
+}
+
+impl IngestConfig {
+    /// The full reference configuration.
+    pub fn full() -> Self {
+        Self {
+            n_values: 2_000_000,
+            warmup: 2,
+            iters: 10,
+            wide: true,
+            pack_models: 6,
+            pack_sample_cap: 16_384,
+        }
+    }
+
+    /// CI configuration: same workloads, fewer iterations.
+    pub fn quick() -> Self {
+        Self { warmup: 1, iters: 3, pack_models: 4, pack_sample_cap: 8192, ..Self::full() }
+    }
+
+    /// Tier-1 test configuration: small enough for a debug build.
+    pub fn tiny() -> Self {
+        Self {
+            n_values: 100_000,
+            warmup: 1,
+            iters: 2,
+            wide: false,
+            pack_models: 2,
+            pack_sample_cap: 1024,
+        }
+    }
+}
+
+/// One measured configuration.
+pub struct IngestEntry {
+    /// e.g. `encode/block/8b-relu` or `pack/pipelined`.
+    pub name: String,
+    pub median_ns: u64,
+    pub values_per_s: f64,
+    /// Raw-value throughput in MB/s (`bits/8` bytes per value).
+    pub mb_per_s: f64,
+}
+
+/// The full harness result.
+pub struct IngestReport {
+    pub n_values: usize,
+    /// `release` or `debug` — debug numbers are real but not comparable.
+    pub profile: &'static str,
+    pub entries: Vec<IngestEntry>,
+    /// Block `encode_into` over the per-value `encode_value` loop
+    /// (8-bit ReLU tensor, single stream) — the tentpole encode ratio.
+    pub speedup_block_vs_per_value_encode: f64,
+    /// Incremental boundary search over the seed full-recompute search
+    /// (8-bit ReLU histogram).
+    pub speedup_incremental_vs_seed_tablegen: f64,
+    /// Pipelined `pack_model_zoo` over the serial packer, same models,
+    /// same run.
+    pub speedup_pipelined_vs_serial_pack: f64,
+}
+
+impl IngestReport {
+    /// Entry lookup by name.
+    pub fn entry(&self, name: &str) -> Option<&IngestEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Serialize to the BENCH JSON schema.
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("bench".to_string(), Json::Str("store_pack".to_string()));
+        root.insert(
+            "workload".to_string(),
+            Json::Str("ingest_tablegen_encode_pack_seed42".to_string()),
+        );
+        root.insert("n_values".to_string(), Json::Num(self.n_values as f64));
+        root.insert("profile".to_string(), Json::Str(self.profile.to_string()));
+        root.insert(
+            "speedup_block_vs_per_value_encode".to_string(),
+            Json::Num(self.speedup_block_vs_per_value_encode),
+        );
+        root.insert(
+            "speedup_incremental_vs_seed_tablegen".to_string(),
+            Json::Num(self.speedup_incremental_vs_seed_tablegen),
+        );
+        root.insert(
+            "speedup_pipelined_vs_serial_pack".to_string(),
+            Json::Num(self.speedup_pipelined_vs_serial_pack),
+        );
+        let entries: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|e| {
+                let mut m = BTreeMap::new();
+                m.insert("name".to_string(), Json::Str(e.name.clone()));
+                m.insert("median_ns".to_string(), Json::Num(e.median_ns as f64));
+                m.insert("values_per_s".to_string(), Json::Num(e.values_per_s));
+                m.insert("mb_per_s".to_string(), Json::Num(e.mb_per_s));
+                Json::Obj(m)
+            })
+            .collect();
+        root.insert("results".to_string(), Json::Arr(entries));
+        Json::Obj(root)
+    }
+
+    /// Write the JSON artifact (the bench and the tier-1 test both write
+    /// [`REPORT_FILE`] at the package root).
+    pub fn write_json(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string() + "\n")
+    }
+
+    /// Human-readable per-entry lines (the bench's stdout report).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for e in &self.entries {
+            s.push_str(&format!(
+                "{:<40} {:>12.2} Mvalues/s  {:>9.1} MB/s  ({} ns median)\n",
+                e.name,
+                e.values_per_s / 1e6,
+                e.mb_per_s,
+                e.median_ns
+            ));
+        }
+        s.push_str(&format!(
+            "block vs per-value encode (8b relu):        {:.2}x\n\
+             incremental vs seed tablegen (8b relu):     {:.2}x\n\
+             pipelined vs serial pack_model_zoo:         {:.2}x\n",
+            self.speedup_block_vs_per_value_encode,
+            self.speedup_incremental_vs_seed_tablegen,
+            self.speedup_pipelined_vs_serial_pack
+        ));
+        s
+    }
+}
+
+fn entry(name: &str, median_ns: u64, n: usize, bits: u32) -> IngestEntry {
+    let secs = (median_ns as f64 / 1e9).max(1e-12);
+    IngestEntry {
+        name: name.to_string(),
+        median_ns,
+        values_per_s: n as f64 / secs,
+        mb_per_s: n as f64 * (bits as f64 / 8.0) / 1e6 / secs,
+    }
+}
+
+/// Encode with the per-value reference loop (the pre-block baseline).
+fn encode_per_value(table: &SymbolTable, values: &[u32]) -> (Vec<u8>, usize, Vec<u8>, usize) {
+    let mut enc = ApackEncoder::new(table);
+    let mut sym = BitWriter::with_capacity_bits(values.len() * 4);
+    let mut ofs = BitWriter::with_capacity_bits(values.len() * 4);
+    for &v in values {
+        enc.encode_value(v, &mut sym, &mut ofs).unwrap();
+    }
+    enc.finish(&mut sym);
+    let (sb, sbits) = sym.finish();
+    let (ob, obits) = ofs.finish();
+    (sb, sbits, ob, obits)
+}
+
+/// Run the harness: assert every equivalence, then measure tablegen /
+/// encode per bit-width and profile plus the end-to-end zoo pack, and
+/// return the report.
+pub fn run(cfg: &IngestConfig) -> IngestReport {
+    let bench = Bench { warmup: cfg.warmup, iters: cfg.iters };
+    let mut entries = Vec::new();
+
+    // (tag, bits, profile) cases — the 8b ReLU case carries the headline
+    // speedups.
+    let mut cases: Vec<(&str, u32, ValueProfile)> = vec![
+        (
+            "4b-relu",
+            4,
+            ValueProfile::ReluActivation { sparsity: 0.5, q: 0.93, noise_floor: 0.01 },
+        ),
+        (
+            "8b-relu",
+            8,
+            ValueProfile::ReluActivation { sparsity: 0.5, q: 0.93, noise_floor: 0.01 },
+        ),
+        ("8b-weights", 8, ValueProfile::TwoSidedGeometric { q: 0.9, noise_floor: 0.01 }),
+    ];
+    if cfg.wide {
+        cases.push(("16b-sparse", 16, ValueProfile::Sparse { sparsity: 0.6, q: 0.85 }));
+    }
+
+    let mut tablegen_seed_vps = 0.0;
+    let mut tablegen_inc_vps = 0.0;
+    let mut encode_pv_vps = 0.0;
+    let mut encode_blk_vps = 0.0;
+
+    for (tag, bits, profile) in cases {
+        let values = profile.sample(bits, cfg.n_values, 42);
+        let n = values.len();
+        let hist = Histogram::from_values(bits, &values);
+        let tg_cfg = TableGenConfig::for_bits(bits);
+
+        // Gate: incremental search == seed search, byte for byte.
+        let table = generate_table(&hist, TensorKind::Activations, &tg_cfg).unwrap();
+        let seed_table = generate_table_seed(&hist, TensorKind::Activations, &tg_cfg).unwrap();
+        assert_eq!(
+            table.to_bytes(),
+            seed_table.to_bytes(),
+            "{tag}: incremental tablegen diverged from the seed search"
+        );
+
+        let name = format!("tablegen/seed/{tag}");
+        let s = bench.run(&name, || {
+            generate_table_seed(&hist, TensorKind::Activations, &tg_cfg).unwrap()
+        });
+        let e = entry(&name, s.median.as_nanos() as u64, n, bits);
+        if tag == "8b-relu" {
+            tablegen_seed_vps = e.values_per_s;
+        }
+        entries.push(e);
+
+        let name = format!("tablegen/incremental/{tag}");
+        let s = bench
+            .run(&name, || generate_table(&hist, TensorKind::Activations, &tg_cfg).unwrap());
+        let e = entry(&name, s.median.as_nanos() as u64, n, bits);
+        if tag == "8b-relu" {
+            tablegen_inc_vps = e.values_per_s;
+        }
+        entries.push(e);
+
+        // Gate: block encoder bit-identical to the per-value reference,
+        // and the stream round-trips.
+        let reference = encode_per_value(&table, &values);
+        let block = ApackEncoder::encode_all(&table, &values).unwrap();
+        assert_eq!(block, reference, "{tag}: block encoder diverged from per-value");
+        let (sym, sb, ofs, ob) = block;
+        let mut ofs_r = BitReader::new(&ofs, ob);
+        let decoded =
+            ApackDecoder::decode_all(&table, BitReader::new(&sym, sb), &mut ofs_r, n).unwrap();
+        assert_eq!(decoded, values, "{tag}: encoded stream failed to round-trip");
+
+        let name = format!("encode/per-value/{tag}");
+        let s = bench.run(&name, || encode_per_value(&table, &values));
+        let e = entry(&name, s.median.as_nanos() as u64, n, bits);
+        if tag == "8b-relu" {
+            encode_pv_vps = e.values_per_s;
+        }
+        entries.push(e);
+
+        let name = format!("encode/block/{tag}");
+        let s = bench.run(&name, || ApackEncoder::encode_all(&table, &values).unwrap());
+        let e = entry(&name, s.median.as_nanos() as u64, n, bits);
+        if tag == "8b-relu" {
+            encode_blk_vps = e.values_per_s;
+        }
+        entries.push(e);
+    }
+
+    // End-to-end zoo pack: serial vs pipelined, same models, same run.
+    let models: Vec<ModelConfig> = PACK_MODELS
+        .iter()
+        .take(cfg.pack_models.clamp(1, PACK_MODELS.len()))
+        .map(|n| model_by_name(n).expect("pack model in zoo"))
+        .collect();
+    let policy = PartitionPolicy { substreams: 16, min_per_stream: 512 };
+    let dir = std::env::temp_dir();
+    let serial_path = dir.join(format!("apack_ingest_serial_{}.apackstore", std::process::id()));
+    let piped_path = dir.join(format!("apack_ingest_piped_{}.apackstore", std::process::id()));
+    let serial_opts = PackOptions { pipelined: false, ..PackOptions::default() };
+    let piped_opts = PackOptions::default();
+
+    // Gate: identical bytes, and the packed store verifies (CRC + decode).
+    let summary =
+        pack_model_zoo_with(&serial_path, &models, cfg.pack_sample_cap, policy, &serial_opts)
+            .unwrap();
+    pack_model_zoo_with(&piped_path, &models, cfg.pack_sample_cap, policy, &piped_opts).unwrap();
+    assert_eq!(
+        std::fs::read(&serial_path).unwrap(),
+        std::fs::read(&piped_path).unwrap(),
+        "pipelined pack bytes diverged from serial"
+    );
+    StoreReader::open(&piped_path).unwrap().verify().unwrap();
+    let pack_values = summary.pack.values as usize;
+    let pack_bits = (summary.raw_bits / summary.pack.values.max(1)) as u32;
+
+    let s = bench.run("pack/serial", || {
+        pack_model_zoo_with(&serial_path, &models, cfg.pack_sample_cap, policy, &serial_opts)
+            .unwrap()
+    });
+    let serial_entry = entry("pack/serial", s.median.as_nanos() as u64, pack_values, pack_bits);
+    let s = bench.run("pack/pipelined", || {
+        pack_model_zoo_with(&piped_path, &models, cfg.pack_sample_cap, policy, &piped_opts)
+            .unwrap()
+    });
+    let piped_entry =
+        entry("pack/pipelined", s.median.as_nanos() as u64, pack_values, pack_bits);
+    let pack_speedup = piped_entry.values_per_s / serial_entry.values_per_s.max(1e-12);
+    entries.push(serial_entry);
+    entries.push(piped_entry);
+    std::fs::remove_file(&serial_path).ok();
+    std::fs::remove_file(&piped_path).ok();
+
+    IngestReport {
+        n_values: cfg.n_values,
+        profile: if cfg!(debug_assertions) { "debug" } else { "release" },
+        entries,
+        speedup_block_vs_per_value_encode: encode_blk_vps / encode_pv_vps.max(1e-12),
+        speedup_incremental_vs_seed_tablegen: tablegen_inc_vps / tablegen_seed_vps.max(1e-12),
+        speedup_pipelined_vs_serial_pack: pack_speedup,
+    }
+}

@@ -14,6 +14,9 @@
 //!   zoo weighs at rest when packed into one compressed store file.
 //! - [`hot_path`] — codec hot-path throughput harness (per-mode, per-value
 //!   vs. block decode) emitting `BENCH_codec_hot_path.json`.
+//! - [`ingest`] — write-path throughput harness (tablegen seed vs.
+//!   incremental, per-value vs. block encode, serial vs. pipelined zoo
+//!   pack) emitting `BENCH_store_pack.json`.
 //!
 //! All figures derive from one shared [`CompressionStudy`] so the traffic,
 //! energy and performance numbers are mutually consistent.
@@ -22,6 +25,7 @@ pub mod area_power;
 pub mod e2e;
 pub mod fig2;
 pub mod hot_path;
+pub mod ingest;
 pub mod fig5;
 pub mod fig6;
 pub mod fig7;

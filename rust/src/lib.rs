@@ -30,7 +30,8 @@
 //! - [`store`] — APackStore: a persistent, random-access compressed tensor
 //!   store. Named tensors in one file, independently decodable CRC-checked
 //!   chunks, one shared table per tensor, O(1) `get_tensor` /
-//!   `get_chunk` / `get_range` with an LRU chunk cache.
+//!   `get_chunk` / `get_range` with an LRU chunk cache; pipelined,
+//!   stage-timed zoo ingest.
 //! - [`serving`] — the request layer over the store: bounded-queue worker
 //!   pool, chunk-level single-flight coalescing, admission control with
 //!   typed overload shedding, hot-set prefetch and latency metrics.

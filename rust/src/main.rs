@@ -17,8 +17,8 @@ use apack_repro::eval::{self, CompressionStudy};
 use apack_repro::models::zoo::{all_models, model_by_name};
 use apack_repro::serving::{PrefetchConfig, ServingConfig, ServingEngine};
 use apack_repro::store::{
-    pack_model_zoo, pack_model_zoo_sharded, Backend, ReadStats, StoreHandle,
-    DEFAULT_CACHE_VALUES,
+    pack_model_zoo, pack_model_zoo_sharded, pack_model_zoo_sharded_with, pack_model_zoo_with,
+    Backend, PackOptions, ReadStats, StoreHandle, DEFAULT_CACHE_VALUES,
 };
 use apack_repro::util::Rng64;
 
@@ -29,6 +29,7 @@ USAGE:
   apack-repro compress <input> [--output <file>] [--kind weights|activations] [--substreams N]
   apack-repro decompress <input> --output <file>
   apack-repro store pack <output> [--models a,b|all] [--sample-cap N] [--substreams N] [--min-per-stream N] [--shards N]
+                         [--pipeline on|off] [--pack-workers N]
   apack-repro store get <store> --tensor NAME [--chunk I | --range LO..HI] [--output <file>] [--backend mmap|file]
   apack-repro store stats <store> [--backend mmap|file]
   apack-repro store verify <store> [--backend mmap|file]
@@ -222,6 +223,15 @@ fn read_stats_line(stats: &ReadStats) -> String {
     )
 }
 
+/// Tag for the `store pack` footer: which ingest path produced the stats.
+fn pipeline_tag(pipelined: bool) -> &'static str {
+    if pipelined {
+        "pipelined ingest"
+    } else {
+        "serial ingest"
+    }
+}
+
 /// `store pack | get | stats | verify | report` — the APackStore CLI.
 fn run_store(args: &Args) -> Result<(), Box<dyn Error>> {
     let action = args.positional.first().map(String::as_str).unwrap_or("");
@@ -244,9 +254,21 @@ fn run_store(args: &Args) -> Result<(), Box<dyn Error>> {
             let min_per_stream: usize = args.flag_or("min-per-stream", "1024").parse()?;
             let shards: usize = args.flag_or("shards", "1").parse()?;
             let policy = PartitionPolicy { substreams, min_per_stream };
+            let pipelined = !args.flag_or("pipeline", "on").eq_ignore_ascii_case("off");
+            let opts = PackOptions {
+                pipelined,
+                workers: args.flag_or("pack-workers", "0").parse()?,
+                ..PackOptions::default()
+            };
             if shards > 1 {
-                let summary =
-                    pack_model_zoo_sharded(Path::new(out), &models, sample_cap, policy, shards)?;
+                let summary = pack_model_zoo_sharded_with(
+                    Path::new(out),
+                    &models,
+                    sample_cap,
+                    policy,
+                    shards,
+                    &opts,
+                )?;
                 println!(
                     "packed {} models into {out} ({} shard files): {} tensors, {} chunks, \
                      {:.1} KiB ({:.2}x vs raw sampled values)",
@@ -265,8 +287,10 @@ fn run_store(args: &Args) -> Result<(), Box<dyn Error>> {
                         s.file_bytes as f64 / 1024.0
                     );
                 }
+                println!("{} ({})", summary.pack.render(), pipeline_tag(pipelined));
             } else {
-                let summary = pack_model_zoo(Path::new(out), &models, sample_cap, policy)?;
+                let summary =
+                    pack_model_zoo_with(Path::new(out), &models, sample_cap, policy, &opts)?;
                 println!(
                     "packed {} models into {out}: {} tensors, {} chunks, {:.1} KiB \
                      ({:.2}x vs raw sampled values)",
@@ -276,6 +300,7 @@ fn run_store(args: &Args) -> Result<(), Box<dyn Error>> {
                     summary.file_bytes as f64 / 1024.0,
                     summary.compression_ratio()
                 );
+                println!("{} ({})", summary.pack.render(), pipeline_tag(pipelined));
             }
         }
         "get" => {

@@ -22,9 +22,15 @@ pub struct LayerTrace {
     pub weights: Vec<u32>,
     /// True number of weight elements (≥ `weights.len()`).
     pub weight_elems: u64,
-    /// Sampled input-activation values for *profiling* (pooled samples),
-    /// empty if the model's activations are not studied.
+    /// Sampled input-activation values for *profiling*: the per-input
+    /// draws concatenated in input order, empty if the model's
+    /// activations are not studied.
     pub act_profile_samples: Vec<u32>,
+    /// Values drawn per profiling input — `act_profile_samples` is the
+    /// concatenation of [`act_samples_per_input`](Self::act_samples_per_input)-sized
+    /// per-input runs (0 when activations are not studied), so consumers
+    /// can pool per-input histograms without re-deriving the split.
+    pub act_samples_per_input: usize,
     /// Fresh activation values standing in for the measured inference
     /// input (same distribution, different seed).
     pub activations: Vec<u32>,
@@ -79,7 +85,7 @@ impl ModelTrace {
             let a_n = (a_elems as usize).min(sample_cap);
             let wp = jitter_profile(cfg.weight_profile, i);
             let weights = wp.sample(bits, w_n, seed ^ (i as u64) << 1);
-            let (act_profile_samples_v, activations) = match cfg.act_profile {
+            let (act_profile_samples_v, act_per_input, activations) = match cfg.act_profile {
                 Some(ap) => {
                     let ap = jitter_profile(ap, i);
                     // Pool `profile_samples` smaller draws for the table.
@@ -95,9 +101,9 @@ impl ModelTrace {
                     // Fresh "measurement" input: disjoint seed.
                     let fresh =
                         ap.sample(bits, a_n, seed ^ 0xF4E5_1000 ^ ((i as u64) << 8));
-                    (pooled, fresh)
+                    (pooled, per, fresh)
                 }
-                None => (Vec::new(), Vec::new()),
+                None => (Vec::new(), 0, Vec::new()),
             };
             layers.push(LayerTrace {
                 layer_idx: i,
@@ -105,6 +111,7 @@ impl ModelTrace {
                 weights,
                 weight_elems: w_elems,
                 act_profile_samples: act_profile_samples_v,
+                act_samples_per_input: act_per_input,
                 activations,
                 act_elems: a_elems,
             });

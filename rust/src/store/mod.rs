@@ -60,8 +60,13 @@
 //! - [`format`] — single-file on-disk layout: magic, chunk blobs, footer
 //!   index with per-chunk CRC32s, fixed trailer.
 //! - [`io`] — [`ChunkSource`] and the mmap / positioned-file backends.
-//! - [`writer`] — [`StoreWriter`] (streaming, parallel chunk encode) and
-//!   [`pack_model_zoo`] (the 24 Table-II models into one store).
+//! - [`writer`] — [`StoreWriter`] (streaming chunk append, [`PackStats`]
+//!   stage accounting), [`encode_tensor`]/[`EncodedTensor`] (the ingest
+//!   compute stage) and [`pack_model_zoo`] (the 24 Table-II models into
+//!   one store).
+//! - [`pipeline`] — the pipelined zoo packer: compute workers overlap
+//!   tensor N+1's synthesis/tablegen/encode with tensor N's ordered
+//!   append over a bounded channel (DESIGN.md §9).
 //! - [`shard`] — the MANIFEST format, [`ShardedStoreWriter`] /
 //!   [`ShardedStoreReader`], and [`pack_model_zoo_sharded`].
 //! - [`reader`] — [`StoreReader`]: lock-free random access over one file
@@ -75,6 +80,7 @@ pub mod cache;
 pub mod format;
 pub mod handle;
 pub mod io;
+pub mod pipeline;
 pub mod reader;
 pub mod shard;
 pub mod writer;
@@ -83,9 +89,14 @@ pub use cache::{ChunkCache, ScratchPool};
 pub use format::{crc32, ChunkMeta, StoreIndex, TensorMeta};
 pub use handle::StoreHandle;
 pub use io::{Backend, ChunkSource, FileSource, MmapSource};
+pub use pipeline::PackOptions;
 pub use reader::{ReadStats, StoreReader, VerifyReport, DEFAULT_CACHE_VALUES};
 pub use shard::{
-    pack_model_zoo_sharded, shard_file_name, shard_for_name, ShardEntry, ShardManifest,
-    ShardedStoreReader, ShardedStoreSummary, ShardedStoreWriter, MANIFEST_FILE,
+    pack_model_zoo_sharded, pack_model_zoo_sharded_with, shard_file_name, shard_for_name,
+    ShardEntry, ShardManifest, ShardedStoreReader, ShardedStoreSummary, ShardedStoreWriter,
+    MANIFEST_FILE,
 };
-pub use writer::{pack_model_zoo, zoo_value_estimate, StoreSummary, StoreWriter};
+pub use writer::{
+    encode_tensor, pack_model_zoo, pack_model_zoo_with, zoo_value_estimate, EncodedChunk,
+    EncodedTensor, PackStats, StoreSummary, StoreWriter,
+};

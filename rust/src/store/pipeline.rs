@@ -1,0 +1,356 @@
+//! Pipelined zoo ingest: overlap tensor N+1's synthesis / profiling /
+//! tablegen / chunk encode with tensor N's ordered sequential append
+//! (DESIGN.md §9).
+//!
+//! The serial packer alternates a serial profile phase (trace synthesis +
+//! histogram + Listing-1 search) with a parallel encode phase per tensor,
+//! so cores idle during every profile. Here a pool of workers each claims
+//! one **model** at a time (synthesis is per model), runs the full compute
+//! stage for all of its tensors ([`encode_zoo_model`]) and ships the
+//! resulting [`EncodedTensor`]s over a **bounded** channel to the single
+//! append thread, which writes them in model order through a small reorder
+//! buffer. The paper deploys pipelined parallel engines on both the
+//! compress and decompress sides (§V-B); this is the software mirror of
+//! the compress side, as PR 4's block decode was of the decompress side.
+//!
+//! Ordering and backpressure rules:
+//!
+//! - **Appends are in submission order** (model order, layer order within
+//!   a model) — the pipelined packer produces a byte-identical store file
+//!   to the serial packer, which is what lets `--pipeline off` stay
+//!   selectable as a same-bytes baseline.
+//! - **In-flight memory is bounded** by the channel capacity
+//!   ([`PackOptions::in_flight`] models) plus one claimed model per
+//!   worker; a worker with a finished model blocks on `send` until the
+//!   appender drains.
+//! - **Workers encode chunks in-line** (`encode_threads = 1`):
+//!   model-level parallelism already saturates cores, and nesting a
+//!   per-chunk `par_map` under every worker would oversubscribe.
+//! - **Errors abort promptly and deterministically**: the first error in
+//!   *append order* is returned; workers stop claiming new models, and
+//!   the appender drains the channel so no worker deadlocks on a full
+//!   channel mid-shutdown.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::apack::tablegen::{generate_table, TableGenConfig, TensorKind};
+use crate::apack::Histogram;
+use crate::coordinator::PartitionPolicy;
+use crate::error::Result;
+use crate::eval::{EVAL_SEED, PROFILE_SAMPLES};
+use crate::models::trace::{LayerTrace, ModelTrace};
+use crate::models::zoo::ModelConfig;
+
+use super::writer::{encode_tensor, EncodedTensor};
+
+/// Knobs for the zoo packers ([`super::writer::pack_model_zoo_with`] /
+/// [`super::shard::pack_model_zoo_sharded_with`]).
+#[derive(Debug, Clone, Copy)]
+pub struct PackOptions {
+    /// Overlap compute with append (default). `false` selects the serial
+    /// profile→encode→append loop — same bytes, kept as the measured
+    /// baseline in `benches/store_pack.rs`.
+    pub pipelined: bool,
+    /// Compute workers; `0` = the machine's available parallelism.
+    pub workers: usize,
+    /// Bounded-channel capacity in *models*; `0` = `2 × workers`. Caps
+    /// in-flight memory when the appender is the bottleneck.
+    pub in_flight: usize,
+}
+
+impl Default for PackOptions {
+    fn default() -> Self {
+        Self { pipelined: true, workers: 0, in_flight: 0 }
+    }
+}
+
+/// Anything that can accept an ordered stream of encoded tensors — the
+/// single-file [`super::writer::StoreWriter`] and the sharded
+/// [`super::shard::ShardedStoreWriter`] (which routes by name hash).
+pub(crate) trait TensorSink {
+    fn append(&mut self, t: EncodedTensor) -> Result<()>;
+}
+
+impl TensorSink for super::writer::StoreWriter {
+    fn append(&mut self, t: EncodedTensor) -> Result<()> {
+        self.append_encoded(t)
+    }
+}
+
+impl TensorSink for super::shard::ShardedStoreWriter {
+    fn append(&mut self, t: EncodedTensor) -> Result<()> {
+        self.append_encoded(t)
+    }
+}
+
+/// Pooled activation-profile histogram of a layer: one histogram pass over
+/// the **per-input** sample runs (the trace records their size,
+/// [`LayerTrace::act_samples_per_input`]) with a single deferred prefix
+/// rebuild ([`Histogram::from_value_chunks`] — the `merge_many` pooling
+/// primitive), instead of a rebuild per pooled input (paper §VII: up to 9
+/// profiling inputs per layer).
+fn pooled_profile_histogram(l: &LayerTrace) -> Histogram {
+    Histogram::from_value_chunks(
+        l.bits,
+        l.act_profile_samples.chunks(l.act_samples_per_input.max(1)),
+    )
+}
+
+/// The full compute stage for one zoo model: synthesize its trace, then
+/// per layer encode the weights tensor (`"{model}/layer{i:03}/weights"`,
+/// table profiled from the values themselves) and — for studied
+/// activations — `".../activations"` with a table profiled on the pooled
+/// samples and applied to the fresh tensor (paper §VII methodology).
+/// `sample_cap` bounds values per tensor, exactly like the evaluation
+/// studies. Synthesis time is attributed to the model's first tensor.
+pub(crate) fn encode_zoo_model(
+    cfg: &ModelConfig,
+    sample_cap: usize,
+    policy: &PartitionPolicy,
+    encode_threads: usize,
+) -> Result<Vec<EncodedTensor>> {
+    let t0 = Instant::now();
+    let trace = ModelTrace::synthesize(cfg, sample_cap, PROFILE_SAMPLES, EVAL_SEED);
+    let synth_nanos = t0.elapsed().as_nanos() as u64;
+    let mut out = Vec::with_capacity(trace.layers.len() * 2);
+    for l in &trace.layers {
+        let mut t = encode_tensor(
+            policy,
+            &format!("{}/layer{:03}/weights", cfg.name, l.layer_idx),
+            l.bits,
+            &l.weights,
+            TensorKind::Weights,
+            None,
+            encode_threads,
+        )?;
+        if out.is_empty() {
+            t.synth_nanos = synth_nanos;
+        }
+        out.push(t);
+        if !l.activations.is_empty() {
+            let tg0 = Instant::now();
+            let hist = pooled_profile_histogram(l);
+            let table = generate_table(
+                &hist,
+                TensorKind::Activations,
+                &TableGenConfig::for_bits(l.bits),
+            )?;
+            let tablegen_nanos = tg0.elapsed().as_nanos() as u64;
+            let mut t = encode_tensor(
+                policy,
+                &format!("{}/layer{:03}/activations", cfg.name, l.layer_idx),
+                l.bits,
+                &l.activations,
+                TensorKind::Activations,
+                Some(table),
+                encode_threads,
+            )?;
+            t.tablegen_nanos += tablegen_nanos;
+            out.push(t);
+        }
+    }
+    Ok(out)
+}
+
+/// Drive a zoo pack into `sink` — pipelined per `opts`, or the serial
+/// profile→encode→append loop. Append order (and therefore the store
+/// file's bytes) is identical either way.
+pub(crate) fn pack_zoo_into<S: TensorSink>(
+    sink: &mut S,
+    models: &[ModelConfig],
+    sample_cap: usize,
+    policy: &PartitionPolicy,
+    opts: &PackOptions,
+) -> Result<()> {
+    if !opts.pipelined || models.len() < 2 {
+        for cfg in models {
+            for t in encode_zoo_model(cfg, sample_cap, policy, 0)? {
+                sink.append(t)?;
+            }
+        }
+        return Ok(());
+    }
+
+    let default_threads =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let workers =
+        if opts.workers == 0 { default_threads } else { opts.workers }.clamp(1, models.len());
+    let cap = if opts.in_flight == 0 { workers * 2 } else { opts.in_flight }.max(1);
+
+    let next_job = AtomicUsize::new(0);
+    let abort = AtomicBool::new(false);
+    let (tx, rx) = mpsc::sync_channel::<(usize, Result<Vec<EncodedTensor>>)>(cap);
+    let mut first_err = None;
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let (next_job, abort) = (&next_job, &abort);
+            scope.spawn(move || loop {
+                if abort.load(Ordering::Relaxed) {
+                    break;
+                }
+                let i = next_job.fetch_add(1, Ordering::Relaxed);
+                if i >= models.len() {
+                    break;
+                }
+                let result = encode_zoo_model(&models[i], sample_cap, policy, 1);
+                if result.is_err() {
+                    abort.store(true, Ordering::Relaxed);
+                }
+                // A send error means the appender is gone; just stop.
+                if tx.send((i, result)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx); // the workers hold the only senders now
+
+        // Ordered append: claimed jobs are a dense prefix 0..k and every
+        // claimed job is sent exactly once, so draining the channel while
+        // releasing the reorder buffer in sequence order visits every
+        // model. After an error we keep draining (workers blocked on the
+        // bounded channel must unblock to exit) but append nothing more.
+        let mut pending: BTreeMap<usize, Result<Vec<EncodedTensor>>> = BTreeMap::new();
+        let mut next_seq = 0usize;
+        for (seq, result) in rx {
+            pending.insert(seq, result);
+            while let Some(result) = pending.remove(&next_seq) {
+                next_seq += 1;
+                if first_err.is_some() {
+                    continue;
+                }
+                match result {
+                    Ok(tensors) => {
+                        for t in tensors {
+                            if let Err(e) = sink.append(t) {
+                                first_err = Some(e);
+                                abort.store(true, Ordering::Relaxed);
+                                break;
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        first_err = Some(e);
+                        abort.store(true, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+    });
+
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo::model_by_name;
+    use crate::store::writer::{pack_model_zoo_with, StoreWriter};
+    use crate::store::StoreReader;
+    use std::path::PathBuf;
+
+    fn temp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("apack_pipe_{}_{tag}.apackstore", std::process::id()))
+    }
+
+    fn small_models() -> Vec<ModelConfig> {
+        ["ncf", "bilstm", "alexnet_eyeriss"]
+            .iter()
+            .map(|n| model_by_name(n).expect("zoo model"))
+            .collect()
+    }
+
+    #[test]
+    fn pipelined_pack_is_byte_identical_to_serial() {
+        let models = small_models();
+        let policy = PartitionPolicy { substreams: 4, min_per_stream: 512 };
+        let serial_path = temp_path("serial");
+        let piped_path = temp_path("piped");
+
+        let serial = pack_model_zoo_with(
+            &serial_path,
+            &models,
+            2048,
+            policy,
+            &PackOptions { pipelined: false, ..PackOptions::default() },
+        )
+        .unwrap();
+        let piped = pack_model_zoo_with(
+            &piped_path,
+            &models,
+            2048,
+            policy,
+            &PackOptions { pipelined: true, workers: 3, in_flight: 2 },
+        )
+        .unwrap();
+        assert_eq!(serial.tensors, piped.tensors);
+        assert_eq!(serial.file_bytes, piped.file_bytes);
+        assert_eq!(serial.pack.values, piped.pack.values);
+
+        let a = std::fs::read(&serial_path).unwrap();
+        let b = std::fs::read(&piped_path).unwrap();
+        assert_eq!(a, b, "pipelined pack must write the exact serial bytes");
+
+        // And the packed store round-trips (verify = CRC + full decode).
+        let r = StoreReader::open(&piped_path).unwrap();
+        r.verify().unwrap();
+        std::fs::remove_file(&serial_path).ok();
+        std::fs::remove_file(&piped_path).ok();
+    }
+
+    #[test]
+    fn pipelined_pack_surfaces_append_errors() {
+        // A sink that rejects everything: the pipeline must return the
+        // error (not hang with workers blocked on the bounded channel).
+        struct Failing;
+        impl TensorSink for Failing {
+            fn append(&mut self, _t: EncodedTensor) -> Result<()> {
+                Err(crate::error::Error::Store("sink full".into()))
+            }
+        }
+        let models = small_models();
+        let err = pack_zoo_into(
+            &mut Failing,
+            &models,
+            512,
+            &PartitionPolicy::default(),
+            &PackOptions { pipelined: true, workers: 2, in_flight: 1 },
+        )
+        .unwrap_err();
+        assert!(matches!(err, crate::error::Error::Store(_)));
+    }
+
+    #[test]
+    fn pooled_profile_histogram_matches_flat() {
+        let cfg = model_by_name("resnet18").unwrap();
+        let trace = ModelTrace::synthesize(&cfg, 2048, PROFILE_SAMPLES, EVAL_SEED);
+        let l = trace
+            .layers
+            .iter()
+            .find(|l| !l.act_profile_samples.is_empty())
+            .expect("resnet18 has studied activations");
+        let pooled = pooled_profile_histogram(l);
+        let flat = Histogram::from_values(l.bits, &l.act_profile_samples);
+        assert_eq!(pooled, flat);
+    }
+
+    #[test]
+    fn single_model_pack_falls_back_to_serial() {
+        let models = vec![model_by_name("ncf").unwrap()];
+        let path = temp_path("single");
+        let mut w = StoreWriter::create(&path, PartitionPolicy::default()).unwrap();
+        pack_zoo_into(&mut w, &models, 1024, &PartitionPolicy::default(), &PackOptions::default())
+            .unwrap();
+        let summary = w.finish().unwrap();
+        assert!(summary.tensors > 0);
+        StoreReader::open(&path).unwrap().verify().unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+}

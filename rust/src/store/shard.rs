@@ -46,8 +46,11 @@ use crate::util::par_map;
 
 use super::format::{crc32, TensorMeta};
 use super::io::Backend;
+use super::pipeline::{pack_zoo_into, PackOptions};
 use super::reader::{ReadStats, StoreReader, VerifyReport, DEFAULT_CACHE_VALUES};
-use super::writer::{for_each_zoo_tensor, zoo_value_estimate, StoreSummary, StoreWriter};
+use super::writer::{
+    zoo_value_estimate, EncodedTensor, PackStats, StoreSummary, StoreWriter,
+};
 
 /// Manifest file name inside a sharded-store directory.
 pub const MANIFEST_FILE: &str = "MANIFEST";
@@ -158,6 +161,9 @@ pub struct ShardedStoreSummary {
     pub file_bytes: u64,
     /// Sum of raw (uncompressed) tensor bits.
     pub raw_bits: u64,
+    /// Ingest breakdown aggregated across shard writers (stage times add,
+    /// wall is the max — the shards share one wall clock).
+    pub pack: PackStats,
     pub per_shard: Vec<StoreSummary>,
 }
 
@@ -240,6 +246,14 @@ impl ShardedStoreWriter {
         self.writers[s].add_tensor_with_table(name, values, kind, table)
     }
 
+    /// Append a pre-encoded tensor to its home shard (the pipelined
+    /// packer's sink; equal names always route identically, so duplicate
+    /// rejection still works shard-locally).
+    pub fn append_encoded(&mut self, t: EncodedTensor) -> Result<()> {
+        let s = shard_for_name(&t.name, self.writers.len());
+        self.writers[s].append_encoded(t)
+    }
+
     /// Seal every shard file, then write the MANIFEST. The store is only
     /// openable as a sharded store after this returns.
     pub fn finish(self) -> Result<ShardedStoreSummary> {
@@ -255,6 +269,10 @@ impl ShardedStoreWriter {
         };
         let manifest_bytes = manifest.to_bytes();
         std::fs::write(self.dir.join(MANIFEST_FILE), &manifest_bytes)?;
+        let mut pack = PackStats::default();
+        for s in &per_shard {
+            pack.merge(&s.pack);
+        }
         Ok(ShardedStoreSummary {
             shards: per_shard.len(),
             tensors: per_shard.iter().map(|s| s.tensors).sum(),
@@ -262,6 +280,7 @@ impl ShardedStoreWriter {
             file_bytes: per_shard.iter().map(|s| s.file_bytes).sum::<u64>()
                 + manifest_bytes.len() as u64,
             raw_bits: per_shard.iter().map(|s| s.raw_bits).sum(),
+            pack,
             per_shard,
         })
     }
@@ -444,6 +463,7 @@ impl ShardedStoreReader {
 /// clamped to the store's estimated content by
 /// [`PartitionPolicy::file_shards_for`] (a tiny store collapses to fewer
 /// files), mirroring how substream counts scale within a tensor.
+/// Pipelined by default; see [`pack_model_zoo_sharded_with`].
 pub fn pack_model_zoo_sharded(
     dir: &Path,
     models: &[ModelConfig],
@@ -451,12 +471,30 @@ pub fn pack_model_zoo_sharded(
     policy: PartitionPolicy,
     requested_shards: usize,
 ) -> Result<ShardedStoreSummary> {
+    pack_model_zoo_sharded_with(
+        dir,
+        models,
+        sample_cap,
+        policy,
+        requested_shards,
+        &PackOptions::default(),
+    )
+}
+
+/// [`pack_model_zoo_sharded`] with explicit [`PackOptions`] —
+/// `pipelined: false` selects the serial path; both produce byte-identical
+/// shard files.
+pub fn pack_model_zoo_sharded_with(
+    dir: &Path,
+    models: &[ModelConfig],
+    sample_cap: usize,
+    policy: PartitionPolicy,
+    requested_shards: usize,
+    opts: &PackOptions,
+) -> Result<ShardedStoreSummary> {
     let shards = policy.file_shards_for(requested_shards, zoo_value_estimate(models, sample_cap));
     let mut writer = ShardedStoreWriter::create(dir, shards, policy)?;
-    for_each_zoo_tensor(models, sample_cap, |name, bits, values, kind, table| match table {
-        Some(t) => writer.add_tensor_with_table(name, values, kind, t),
-        None => writer.add_tensor(name, bits, values, kind),
-    })?;
+    pack_zoo_into(&mut writer, models, sample_cap, &policy, opts)?;
     writer.finish()
 }
 

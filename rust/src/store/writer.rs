@@ -1,23 +1,192 @@
 //! Sequential APackStore writer: stream chunk blobs, seal with the footer
-//! index and trailer. Chunk encoding runs in parallel (one engine per
-//! chunk, like the replicated hardware engines of paper §V-B); file I/O
-//! stays sequential and append-only.
+//! index and trailer. The ingest work (profile → tablegen → chunk encode)
+//! is factored into [`encode_tensor`], which produces a self-contained
+//! [`EncodedTensor`] that [`StoreWriter::append_encoded`] appends — the
+//! seam the pipelined packer ([`super::pipeline`]) uses to overlap tensor
+//! N+1's encode with tensor N's ordered append. File I/O stays sequential
+//! and append-only; every stage is timed into [`PackStats`] (DESIGN.md §9).
 
 use std::fs::File;
 use std::io::{BufWriter, Write};
 use std::path::Path;
+use std::time::Instant;
 
-use crate::apack::container::compress_with_table;
+use crate::apack::container::encode_body;
 use crate::apack::tablegen::{generate_table, TableGenConfig, TensorKind};
 use crate::apack::{Histogram, SymbolTable};
 use crate::coordinator::PartitionPolicy;
 use crate::error::{Error, Result};
-use crate::eval::{EVAL_SEED, PROFILE_SAMPLES};
-use crate::models::trace::ModelTrace;
 use crate::models::zoo::ModelConfig;
-use crate::util::par_map;
+use crate::util::par_map_with;
 
 use super::format::{crc32, trailer_bytes, ChunkMeta, StoreIndex, TensorMeta, STORE_MAGIC};
+use super::pipeline::{pack_zoo_into, PackOptions};
+
+/// Ingest-stage timing/throughput breakdown for one pack (or one tensor,
+/// before aggregation): where the `store pack` wall time went. Stage nanos
+/// are **CPU time summed across pipeline workers** (they overlap under the
+/// pipelined packer); `wall_nanos` is end-to-end wall time, so
+/// `values_per_s` reflects what the user actually waited for.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PackStats {
+    /// Values appended.
+    pub values: u64,
+    /// Raw (uncompressed) payload bits of those values.
+    pub raw_bits: u64,
+    /// Compressed chunk-blob bytes written.
+    pub written_bytes: u64,
+    /// Trace/tensor synthesis time (zoo packs; zero for direct adds).
+    pub synth_nanos: u64,
+    /// Histogram + Listing-1 table search time.
+    pub tablegen_nanos: u64,
+    /// Chunk encode time (symbol + offset streams).
+    pub encode_nanos: u64,
+    /// Sequential blob append time.
+    pub write_nanos: u64,
+    /// End-to-end wall time (writer creation → seal).
+    pub wall_nanos: u64,
+}
+
+impl PackStats {
+    /// Fold another stats record in: stage times and volumes add, wall
+    /// times take the max (shard writers run over the same wall clock).
+    pub fn merge(&mut self, o: &PackStats) {
+        self.values += o.values;
+        self.raw_bits += o.raw_bits;
+        self.written_bytes += o.written_bytes;
+        self.synth_nanos += o.synth_nanos;
+        self.tablegen_nanos += o.tablegen_nanos;
+        self.encode_nanos += o.encode_nanos;
+        self.write_nanos += o.write_nanos;
+        self.wall_nanos = self.wall_nanos.max(o.wall_nanos);
+    }
+
+    /// Total tablegen milliseconds.
+    pub fn tablegen_ms(&self) -> f64 {
+        self.tablegen_nanos as f64 / 1e6
+    }
+
+    /// Encode throughput over raw value bytes.
+    pub fn encode_mb_per_s(&self) -> f64 {
+        mb_per_s(self.raw_bits / 8, self.encode_nanos)
+    }
+
+    /// Append throughput over compressed bytes.
+    pub fn write_mb_per_s(&self) -> f64 {
+        mb_per_s(self.written_bytes, self.write_nanos)
+    }
+
+    /// End-to-end packed values per second (wall time).
+    pub fn values_per_s(&self) -> f64 {
+        self.values as f64 / (self.wall_nanos as f64 / 1e9).max(1e-12)
+    }
+
+    /// The `store pack` footer line.
+    pub fn render(&self) -> String {
+        format!(
+            "pack stats: {} values at {:.2} Mvalues/s end-to-end — synth {:.0} ms, \
+             tablegen {:.0} ms, encode {:.1} MB/s raw, write {:.1} MB/s compressed",
+            self.values,
+            self.values_per_s() / 1e6,
+            self.synth_nanos as f64 / 1e6,
+            self.tablegen_ms(),
+            self.encode_mb_per_s(),
+            self.write_mb_per_s()
+        )
+    }
+}
+
+fn mb_per_s(bytes: u64, nanos: u64) -> f64 {
+    bytes as f64 / 1e6 / (nanos as f64 / 1e9).max(1e-12)
+}
+
+/// One encoded chunk of an [`EncodedTensor`]: the
+/// [`crate::apack::Container::body_to_bytes`] record plus its value count.
+#[derive(Debug, Clone)]
+pub struct EncodedChunk {
+    pub body: Vec<u8>,
+    pub n_values: u64,
+}
+
+/// A fully encoded tensor, ready for ordered append: everything
+/// [`StoreWriter::append_encoded`] needs, produced off the writer by
+/// [`encode_tensor`] (possibly on a pipeline worker thread).
+#[derive(Debug, Clone)]
+pub struct EncodedTensor {
+    pub name: String,
+    pub kind: TensorKind,
+    pub n_values: u64,
+    pub values_per_chunk: u64,
+    pub table: SymbolTable,
+    pub chunks: Vec<EncodedChunk>,
+    /// Stage nanos attributed to this tensor (summed into [`PackStats`]
+    /// at append time).
+    pub synth_nanos: u64,
+    pub tablegen_nanos: u64,
+    pub encode_nanos: u64,
+}
+
+/// Profile (unless a table is supplied) and chunk-encode one tensor —
+/// the ingest compute stage, independent of any writer so pipeline
+/// workers can run it concurrently with the append stage.
+///
+/// `encode_threads` bounds the chunk-encode parallelism: `0` uses the
+/// machine's parallelism (the serial packer's behaviour, encoding one
+/// tensor's chunks in parallel), `1` encodes chunks in-line (the pipelined
+/// packer's choice — tensor-level parallelism already saturates cores).
+/// The encoded bytes are identical either way.
+pub fn encode_tensor(
+    policy: &PartitionPolicy,
+    name: &str,
+    bits: u32,
+    values: &[u32],
+    kind: TensorKind,
+    table: Option<SymbolTable>,
+    encode_threads: usize,
+) -> Result<EncodedTensor> {
+    let mut tablegen_nanos = 0u64;
+    let table = match table {
+        Some(t) => t,
+        None if values.is_empty() => SymbolTable::uniform(bits),
+        None => {
+            let t0 = Instant::now();
+            let hist = Histogram::from_values(bits, values);
+            let t = generate_table(&hist, kind, &TableGenConfig::for_bits(bits))?;
+            tablegen_nanos = t0.elapsed().as_nanos() as u64;
+            t
+        }
+    };
+    let chunks = policy.split(values);
+    let values_per_chunk = chunks.first().map(|c| c.len() as u64).unwrap_or(1).max(1);
+    let threads = if encode_threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    } else {
+        encode_threads
+    };
+    let t0 = Instant::now();
+    let bodies: Result<Vec<Vec<u8>>> =
+        par_map_with(&chunks, threads, |chunk| encode_body(&table, chunk))
+            .into_iter()
+            .collect();
+    let bodies = bodies?;
+    let encode_nanos = t0.elapsed().as_nanos() as u64;
+    let chunks = chunks
+        .iter()
+        .zip(bodies)
+        .map(|(chunk, body)| EncodedChunk { body, n_values: chunk.len() as u64 })
+        .collect();
+    Ok(EncodedTensor {
+        name: name.to_string(),
+        kind,
+        n_values: values.len() as u64,
+        values_per_chunk,
+        table,
+        chunks,
+        synth_nanos: 0,
+        tablegen_nanos,
+        encode_nanos,
+    })
+}
 
 /// Summary returned by [`StoreWriter::finish`].
 #[derive(Debug, Clone)]
@@ -28,6 +197,8 @@ pub struct StoreSummary {
     pub file_bytes: u64,
     /// Sum of raw (uncompressed) tensor bits.
     pub raw_bits: u64,
+    /// Ingest timing/throughput breakdown.
+    pub pack: PackStats,
 }
 
 impl StoreSummary {
@@ -47,6 +218,8 @@ pub struct StoreWriter {
     offset: u64,
     tensors: Vec<TensorMeta>,
     policy: PartitionPolicy,
+    stats: PackStats,
+    created: Instant,
 }
 
 impl StoreWriter {
@@ -57,7 +230,28 @@ impl StoreWriter {
         let file = File::create(path)?;
         let mut out = BufWriter::new(file);
         out.write_all(&STORE_MAGIC)?;
-        Ok(Self { out, offset: STORE_MAGIC.len() as u64, tensors: Vec::new(), policy })
+        Ok(Self {
+            out,
+            offset: STORE_MAGIC.len() as u64,
+            tensors: Vec::new(),
+            policy,
+            stats: PackStats::default(),
+            created: Instant::now(),
+        })
+    }
+
+    /// Reject duplicate or unstorable names — called *before* any encode
+    /// work in the `add_tensor*` paths (a bad name must not cost a full
+    /// tablegen + encode first) and again by [`Self::append_encoded`] for
+    /// tensors encoded off-writer.
+    fn validate_name(&self, name: &str) -> Result<()> {
+        if self.tensors.iter().any(|m| m.name == name) {
+            return Err(Error::Store(format!("duplicate tensor name {name:?}")));
+        }
+        if name.is_empty() || name.len() > u16::MAX as usize {
+            return Err(Error::Store(format!("tensor name length {} invalid", name.len())));
+        }
+        Ok(())
     }
 
     /// Compress and append a tensor, profiling its table from the values
@@ -69,13 +263,9 @@ impl StoreWriter {
         values: &[u32],
         kind: TensorKind,
     ) -> Result<()> {
-        let table = if values.is_empty() {
-            SymbolTable::uniform(bits)
-        } else {
-            let hist = Histogram::from_values(bits, values);
-            generate_table(&hist, kind, &TableGenConfig::for_bits(bits))?
-        };
-        self.add_tensor_with_table(name, values, kind, table)
+        self.validate_name(name)?;
+        let t = encode_tensor(&self.policy, name, bits, values, kind, None, 0)?;
+        self.append_encoded(t)
     }
 
     /// Compress and append a tensor with a prebuilt table (e.g. an
@@ -87,44 +277,53 @@ impl StoreWriter {
         kind: TensorKind,
         table: SymbolTable,
     ) -> Result<()> {
-        if self.tensors.iter().any(|t| t.name == name) {
-            return Err(Error::Store(format!("duplicate tensor name {name:?}")));
-        }
-        if name.is_empty() || name.len() > u16::MAX as usize {
-            return Err(Error::Store(format!("tensor name length {} invalid", name.len())));
-        }
-        let chunks = self.policy.split(values);
-        let values_per_chunk = chunks.first().map(|c| c.len() as u64).unwrap_or(1).max(1);
-        // Encode every chunk in parallel against the shared table, then
-        // append the blobs in order.
-        let blobs: Result<Vec<Vec<u8>>> =
-            par_map(&chunks, |chunk| {
-                compress_with_table(table.clone(), chunk).map(|c| c.body_to_bytes())
-            })
-            .into_iter()
-            .collect();
-        let blobs = blobs?;
-        let mut metas = Vec::with_capacity(blobs.len());
-        for (chunk, blob) in chunks.iter().zip(&blobs) {
+        self.validate_name(name)?;
+        let bits = table.bits();
+        let t = encode_tensor(&self.policy, name, bits, values, kind, Some(table), 0)?;
+        self.append_encoded(t)
+    }
+
+    /// Append a pre-encoded tensor: the sequential IO stage of the ingest
+    /// pipeline. Validates the name, streams the chunk blobs, records the
+    /// footer metadata and folds the tensor's stage timings into the
+    /// writer's [`PackStats`].
+    pub fn append_encoded(&mut self, t: EncodedTensor) -> Result<()> {
+        self.validate_name(&t.name)?;
+        let t0 = Instant::now();
+        let mut metas = Vec::with_capacity(t.chunks.len());
+        for chunk in &t.chunks {
             metas.push(ChunkMeta {
                 offset: self.offset,
-                len: blob.len() as u64,
-                n_values: chunk.len() as u64,
-                crc32: crc32(blob),
+                len: chunk.body.len() as u64,
+                n_values: chunk.n_values,
+                crc32: crc32(&chunk.body),
             });
-            self.out.write_all(blob)?;
-            self.offset += blob.len() as u64;
+            self.out.write_all(&chunk.body)?;
+            self.offset += chunk.body.len() as u64;
         }
+        self.stats.write_nanos += t0.elapsed().as_nanos() as u64;
+        self.stats.synth_nanos += t.synth_nanos;
+        self.stats.tablegen_nanos += t.tablegen_nanos;
+        self.stats.encode_nanos += t.encode_nanos;
+        self.stats.values += t.n_values;
+        self.stats.raw_bits += t.n_values * t.table.bits() as u64;
+        self.stats.written_bytes += metas.iter().map(|m| m.len).sum::<u64>();
         self.tensors.push(TensorMeta {
-            name: name.to_string(),
-            bits: table.bits(),
-            kind,
-            n_values: values.len() as u64,
-            values_per_chunk,
-            table,
+            name: t.name,
+            bits: t.table.bits(),
+            kind: t.kind,
+            n_values: t.n_values,
+            values_per_chunk: t.values_per_chunk,
+            table: t.table,
             chunks: metas,
         });
         Ok(())
+    }
+
+    /// The writer's chunking policy (callers producing [`EncodedTensor`]s
+    /// off-writer must encode with the same policy).
+    pub fn policy(&self) -> PartitionPolicy {
+        self.policy
     }
 
     /// Tensors written so far.
@@ -138,6 +337,7 @@ impl StoreWriter {
         let index = StoreIndex::new(std::mem::take(&mut self.tensors));
         let footer = index.to_bytes();
         let footer_offset = self.offset;
+        let t0 = Instant::now();
         self.out.write_all(&footer)?;
         self.out.write_all(&trailer_bytes(
             footer_offset,
@@ -146,6 +346,8 @@ impl StoreWriter {
             index.tensors.len() as u32,
         ))?;
         self.out.flush()?;
+        self.stats.write_nanos += t0.elapsed().as_nanos() as u64;
+        self.stats.wall_nanos = self.created.elapsed().as_nanos() as u64;
         let file_bytes =
             footer_offset + footer.len() as u64 + super::format::TRAILER_BYTES as u64;
         Ok(StoreSummary {
@@ -153,51 +355,9 @@ impl StoreWriter {
             chunks: index.tensors.iter().map(|t| t.chunks.len()).sum(),
             file_bytes,
             raw_bits: index.tensors.iter().map(|t| t.raw_bits()).sum(),
+            pack: self.stats,
         })
     }
-}
-
-/// Stream every zoo tensor of `models` into `add` — the shared iteration
-/// behind [`pack_model_zoo`] and [`super::shard::pack_model_zoo_sharded`].
-/// Per layer, weights go under `"{model}/layer{i:03}/weights"` (table
-/// profiled from the values themselves); studied activations go under
-/// `".../activations"` with a table profiled on the pooled samples and
-/// applied to the fresh tensor (paper §VII methodology), passed to `add`
-/// as the prebuilt table. `sample_cap` bounds values per tensor, exactly
-/// like the evaluation studies.
-pub(crate) fn for_each_zoo_tensor(
-    models: &[ModelConfig],
-    sample_cap: usize,
-    mut add: impl FnMut(&str, u32, &[u32], TensorKind, Option<SymbolTable>) -> Result<()>,
-) -> Result<()> {
-    for cfg in models {
-        let trace = ModelTrace::synthesize(cfg, sample_cap, PROFILE_SAMPLES, EVAL_SEED);
-        for l in &trace.layers {
-            add(
-                &format!("{}/layer{:03}/weights", cfg.name, l.layer_idx),
-                l.bits,
-                &l.weights,
-                TensorKind::Weights,
-                None,
-            )?;
-            if !l.activations.is_empty() {
-                let hist = Histogram::from_values(l.bits, &l.act_profile_samples);
-                let table = generate_table(
-                    &hist,
-                    TensorKind::Activations,
-                    &TableGenConfig::for_bits(l.bits),
-                )?;
-                add(
-                    &format!("{}/layer{:03}/activations", cfg.name, l.layer_idx),
-                    l.bits,
-                    &l.activations,
-                    TensorKind::Activations,
-                    Some(table),
-                )?;
-            }
-        }
-    }
-    Ok(())
 }
 
 /// Estimate of the total values `pack_model_zoo`/`pack_model_zoo_sharded`
@@ -227,19 +387,31 @@ pub fn zoo_value_estimate(models: &[ModelConfig], sample_cap: usize) -> u64 {
 }
 
 /// Pack synthesized traces of `models` into one store — the Table II zoo
-/// as a servable artifact (see [`for_each_zoo_tensor`] for the naming and
-/// table-profiling scheme).
+/// as a servable artifact (see [`super::pipeline::encode_zoo_model`] for
+/// the naming and table-profiling scheme). Pipelined by default; see
+/// [`pack_model_zoo_with`].
 pub fn pack_model_zoo(
     path: &Path,
     models: &[ModelConfig],
     sample_cap: usize,
     policy: PartitionPolicy,
 ) -> Result<StoreSummary> {
+    pack_model_zoo_with(path, models, sample_cap, policy, &PackOptions::default())
+}
+
+/// [`pack_model_zoo`] with explicit [`PackOptions`] — `pipelined: false`
+/// selects the serial (profile-then-encode-then-append per tensor) path,
+/// kept for the `store_pack` bench's same-run baseline. Both paths
+/// produce byte-identical store files.
+pub fn pack_model_zoo_with(
+    path: &Path,
+    models: &[ModelConfig],
+    sample_cap: usize,
+    policy: PartitionPolicy,
+    opts: &PackOptions,
+) -> Result<StoreSummary> {
     let mut writer = StoreWriter::create(path, policy)?;
-    for_each_zoo_tensor(models, sample_cap, |name, bits, values, kind, table| match table {
-        Some(t) => writer.add_tensor_with_table(name, values, kind, t),
-        None => writer.add_tensor(name, bits, values, kind),
-    })?;
+    pack_zoo_into(&mut writer, models, sample_cap, &policy, opts)?;
     writer.finish()
 }
 
@@ -271,6 +443,12 @@ mod tests {
         assert_eq!(summary.tensors, 2);
         assert_eq!(summary.raw_bits, (10_500) * 8);
         assert!(summary.compression_ratio() > 1.0, "{}", summary.compression_ratio());
+        // Pack stats account the appended volume.
+        assert_eq!(summary.pack.values, 10_500);
+        assert_eq!(summary.pack.raw_bits, 10_500 * 8);
+        assert!(summary.pack.written_bytes > 0);
+        assert!(summary.pack.wall_nanos > 0);
+        assert!(summary.pack.tablegen_nanos > 0, "profiled adds must time tablegen");
 
         let r = StoreReader::open(&path).unwrap();
         assert_eq!(r.get_tensor("a").unwrap(), a);
@@ -310,5 +488,23 @@ mod tests {
         assert_eq!(r.get_tensor("e").unwrap(), Vec::<u32>::new());
         assert_eq!(r.meta("e").unwrap().chunks.len(), 0);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn encode_tensor_threads_do_not_change_bytes() {
+        // Chunk-encode parallelism is a scheduling choice, not a format
+        // one: 1-thread and N-thread encodes emit identical chunks.
+        let policy = PartitionPolicy { substreams: 8, min_per_stream: 128 };
+        let v = tensor(20_000, 7);
+        let serial =
+            encode_tensor(&policy, "t", 8, &v, TensorKind::Weights, None, 1).unwrap();
+        let parallel =
+            encode_tensor(&policy, "t", 8, &v, TensorKind::Weights, None, 0).unwrap();
+        assert_eq!(serial.chunks.len(), parallel.chunks.len());
+        for (a, b) in serial.chunks.iter().zip(&parallel.chunks) {
+            assert_eq!(a.body, b.body);
+            assert_eq!(a.n_values, b.n_values);
+        }
+        assert_eq!(serial.table.to_bytes(), parallel.table.to_bytes());
     }
 }

@@ -261,6 +261,120 @@ fn prop_block_decode_matches_per_value_on_all_profiles() {
     }
 }
 
+/// Ingest invariant (DESIGN.md §9): the block encoder `encode_into` is
+/// bit-identical to the per-value `encode_value` loop — symbol *and*
+/// offset streams, including the flush tail — across every `ValueProfile`
+/// and 4/8/16-bit widths, and both match the bit-serial hardware
+/// reference model exactly.
+#[test]
+fn prop_block_encoder_bit_identical_to_per_value_and_bitserial() {
+    use apack_repro::apack::bitserial::BitSerialEncoder;
+    use apack_repro::models::distributions::ValueProfile;
+    let profiles = [
+        ValueProfile::TwoSidedGeometric { q: 0.9, noise_floor: 0.01 },
+        ValueProfile::Sparse { sparsity: 0.6, q: 0.85 },
+        ValueProfile::ReluActivation { sparsity: 0.5, q: 0.93, noise_floor: 0.01 },
+        ValueProfile::Uniform,
+    ];
+    for bits in [4u32, 8, 16] {
+        for (pi, profile) in profiles.iter().enumerate() {
+            let n = if bits == 16 { 4000 } else { 8000 };
+            let values = profile.sample(bits, n, 0xE4C0_DE + pi as u64 + bits as u64);
+            let hist = Histogram::from_values(bits, &values);
+            let table =
+                generate_table(&hist, TensorKind::Activations, &TableGenConfig::for_bits(bits))
+                    .unwrap();
+
+            // Per-value reference (with flush).
+            let mut enc = ApackEncoder::new(&table);
+            let (mut s, mut o) = (BitWriter::new(), BitWriter::new());
+            for &v in &values {
+                enc.encode_value(v, &mut s, &mut o).unwrap();
+            }
+            enc.finish(&mut s);
+            let per_value = (s.finish(), o.finish());
+
+            // Block fast path (encode_all delegates to encode_into).
+            let (sym, sb, ofs, ob) = ApackEncoder::encode_all(&table, &values).unwrap();
+            assert_eq!(
+                ((sym.clone(), sb), (ofs.clone(), ob)),
+                per_value,
+                "bits {bits} profile {pi}: block vs per-value"
+            );
+
+            // Bit-serial hardware reference model.
+            let mut ref_enc = BitSerialEncoder::new(&table);
+            let (mut rs, mut ro) = (BitWriter::new(), BitWriter::new());
+            for &v in &values {
+                ref_enc.encode_value(v, &mut rs, &mut ro).unwrap();
+            }
+            ref_enc.finish(&mut rs);
+            assert_eq!(
+                ((sym.clone(), sb), (ofs.clone(), ob)),
+                (rs.finish(), ro.finish()),
+                "bits {bits} profile {pi}: block vs bit-serial reference"
+            );
+
+            // And the stream decodes back to the input.
+            let mut ofs_r = BitReader::new(&ofs, ob);
+            let got = ApackDecoder::decode_all(&table, BitReader::new(&sym, sb), &mut ofs_r, n)
+                .unwrap();
+            assert_eq!(got, values, "bits {bits} profile {pi}: roundtrip");
+        }
+    }
+}
+
+/// Ingest invariant (DESIGN.md §9): the incremental tablegen search
+/// produces byte-identical tables to the seed (full-recompute) search on
+/// real zoo histograms — weights and pooled activation profiles — plus
+/// random tensors.
+#[test]
+fn prop_incremental_tablegen_matches_seed() {
+    use apack_repro::apack::tablegen::generate_table_seed;
+    use apack_repro::models::trace::ModelTrace;
+    use apack_repro::models::zoo::model_by_name;
+
+    // Zoo histograms: a couple of models, all layers, both tensor kinds.
+    for name in ["ncf", "bilstm"] {
+        let cfg = model_by_name(name).unwrap();
+        let trace = ModelTrace::synthesize(&cfg, 2048, 3, 0xA9AC_2022);
+        for l in &trace.layers {
+            let whist = Histogram::from_values(l.bits, &l.weights);
+            let tg = TableGenConfig::for_bits(l.bits);
+            let inc = generate_table(&whist, TensorKind::Weights, &tg).unwrap();
+            let seed = generate_table_seed(&whist, TensorKind::Weights, &tg).unwrap();
+            assert_eq!(inc.to_bytes(), seed.to_bytes(), "{name} layer {} weights", l.layer_idx);
+            if !l.act_profile_samples.is_empty() {
+                let ahist = Histogram::from_values(l.bits, &l.act_profile_samples);
+                let inc = generate_table(&ahist, TensorKind::Activations, &tg).unwrap();
+                let seed = generate_table_seed(&ahist, TensorKind::Activations, &tg).unwrap();
+                assert_eq!(
+                    inc.to_bytes(),
+                    seed.to_bytes(),
+                    "{name} layer {} activations",
+                    l.layer_idx
+                );
+            }
+        }
+    }
+
+    // Random tensors across widths and kinds (16-bit pairs are covered
+    // once in the tablegen unit tests — the coarse-stride seed search is
+    // too slow to repeat per random case in a debug build).
+    for seed in 0..10u64 {
+        let mut rng = Rng64::new(0x7AB_5EED + seed);
+        let bits = [4u32, 8, 8, 8][rng.below(4) as usize];
+        let n = rng.range(16, 20_000);
+        let values = random_tensor(&mut rng, bits, n);
+        let hist = Histogram::from_values(bits, &values);
+        let kind = if rng.chance(0.5) { TensorKind::Weights } else { TensorKind::Activations };
+        let tg = TableGenConfig::for_bits(bits);
+        let inc = generate_table(&hist, kind, &tg).unwrap();
+        let sd = generate_table_seed(&hist, kind, &tg).unwrap();
+        assert_eq!(inc.to_bytes(), sd.to_bytes(), "seed {seed}");
+    }
+}
+
 /// Invariant 4: sharded compression reassembles exactly for any partition
 /// width.
 #[test]
