@@ -14,10 +14,15 @@
 //! part of the JSON schema.
 
 use std::path::Path;
+use std::time::Instant;
 
+use apack_repro::apack::bitstream::BitReader;
+use apack_repro::apack::decoder::{ApackDecoder, ResolveMode};
+use apack_repro::apack::encoder::ApackEncoder;
 use apack_repro::apack::tablegen::{table_for_tensor, TensorKind};
 use apack_repro::eval::hot_path::{self, HotPathConfig};
 use apack_repro::models::distributions::ValueProfile;
+use apack_repro::obs;
 use apack_repro::util::bench::Bench;
 
 fn main() {
@@ -52,4 +57,64 @@ fn main() {
         table_for_tensor(8, &values, TensorKind::Activations).unwrap()
     });
     println!("{}", s.report(None));
+
+    tracing_overhead_gate(quick);
+}
+
+/// Observability overhead gate (ISSUE 6): the span site inside the block
+/// `decode_into` fast path must stay within 3% of an untraced decode —
+/// disabled, its whole cost is one relaxed atomic load; enabled, one span
+/// is recorded per block decode into a per-thread ring. Enabled and
+/// disabled runs are interleaved round-by-round and compared best-of-N so
+/// runner noise lands on both sides of the ratio equally, plus a small
+/// absolute epsilon so sub-millisecond jitter cannot flake a shared CI
+/// runner.
+fn tracing_overhead_gate(quick: bool) {
+    let n = 1_000_000;
+    let values = ValueProfile::ReluActivation { sparsity: 0.5, q: 0.93, noise_floor: 0.01 }
+        .sample(8, n, 7);
+    let table = table_for_tensor(8, &values, TensorKind::Activations).unwrap();
+    let (sym, sb, ofs, ob) = ApackEncoder::encode_all(&table, &values).unwrap();
+    let mut out = vec![0u32; n];
+    let decode_once = |out: &mut [u32]| {
+        let mut dec = ApackDecoder::new(&table, BitReader::new(&sym, sb))
+            .unwrap()
+            .with_mode(ResolveMode::Lut);
+        let mut ofs_r = BitReader::new(&ofs, ob);
+        dec.decode_into(out, &mut ofs_r).unwrap();
+    };
+
+    obs::disable();
+    obs::drain();
+    decode_once(&mut out); // warmup
+    assert_eq!(out, values, "overhead-gate decode diverged");
+
+    let rounds: usize = if quick { 7 } else { 15 };
+    let (mut best_off, mut best_on) = (u64::MAX, u64::MAX);
+    for _ in 0..rounds {
+        obs::disable();
+        let t = Instant::now();
+        decode_once(&mut out);
+        best_off = best_off.min(t.elapsed().as_nanos() as u64);
+
+        obs::enable();
+        let t = Instant::now();
+        decode_once(&mut out);
+        best_on = best_on.min(t.elapsed().as_nanos() as u64);
+    }
+    obs::disable();
+    let spans = obs::drain().len();
+    assert!(spans >= rounds, "enabled rounds recorded {spans} spans, expected >= {rounds}");
+
+    let overhead = best_on as f64 / best_off.max(1) as f64 - 1.0;
+    println!(
+        "tracing overhead gate: block Lut decode {:+.2}% enabled vs disabled \
+         (best of {rounds}: {best_on} ns vs {best_off} ns, {spans} spans recorded)",
+        100.0 * overhead
+    );
+    assert!(
+        best_on as f64 <= best_off as f64 * 1.03 + 100_000.0,
+        "tracing-enabled block decode ({best_on} ns) exceeds the 3% overhead \
+         budget over disabled ({best_off} ns)"
+    );
 }

@@ -258,6 +258,11 @@ impl<'t, 'a> ApackDecoder<'t, 'a> {
     /// error the decoder state reflects the values decoded so far, and
     /// `out[..error.position - count_before]` holds their decoded values.
     pub fn decode_into(&mut self, out: &mut [u32], ofs_in: &mut BitReader<'_>) -> Result<()> {
+        // The tracer's single Decode site: every block decode (store
+        // chunks, coordinator shards, benches) funnels through here. One
+        // span per block, one relaxed atomic load when tracing is off —
+        // this is the call site the CI overhead gate measures.
+        let _span = crate::obs::span_n(crate::obs::Stage::Decode, out.len() as u64);
         match self.mode {
             ResolveMode::RowScan => self.decode_block::<0>(out, ofs_in),
             ResolveMode::Division => self.decode_block::<1>(out, ofs_in),

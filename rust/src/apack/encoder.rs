@@ -189,6 +189,10 @@ impl<'t> ApackEncoder<'t> {
         sym_out: &mut BitWriter,
         ofs_out: &mut BitWriter,
     ) -> Result<()> {
+        // The tracer's single Encode site (mirror of
+        // `ApackDecoder::decode_into`): one span per block, one relaxed
+        // atomic load when tracing is off.
+        let _span = crate::obs::span_n(crate::obs::Stage::Encode, values.len() as u64);
         let table = self.table;
         let lut = table.value_lut();
         let rows = table.rows();

@@ -193,6 +193,7 @@ impl Coordinator {
         table: SymbolTable,
         values: &[u32],
     ) -> Result<ShardedContainer> {
+        let _span = crate::obs::span_n(crate::obs::Stage::Compress, values.len() as u64);
         let chunks = self.policy.split(values);
         let shards: Result<Vec<Container>> =
             crate::util::par_map(&chunks, |chunk| compress_with_table(&table, chunk))
@@ -209,6 +210,7 @@ impl Coordinator {
     /// allocation, no reassembly concat (the software mirror of the
     /// replicated engines all writing one DRAM destination, paper §V-B).
     pub fn decompress(&mut self, sc: &ShardedContainer) -> Result<Vec<u32>> {
+        let _span = crate::obs::span_n(crate::obs::Stage::Decompress, sc.n_values);
         let total: u64 = sc.shards.iter().map(|s| s.n_values).sum();
         if total != sc.n_values {
             return Err(Error::BadContainer(format!(

@@ -21,6 +21,7 @@ use crate::apack::encoder::ApackEncoder;
 use crate::apack::tablegen::{table_for_tensor, TensorKind};
 use crate::coordinator::{Coordinator, PartitionPolicy};
 use crate::models::distributions::ValueProfile;
+use crate::obs::rates;
 use crate::util::bench::Bench;
 use crate::util::json::Json;
 
@@ -141,12 +142,11 @@ impl HotPathReport {
 }
 
 fn entry(name: &str, median_ns: u64, n: usize) -> HotPathEntry {
-    let secs = (median_ns as f64 / 1e9).max(1e-12);
     HotPathEntry {
         name: name.to_string(),
         median_ns,
-        values_per_s: n as f64 / secs,
-        gb_per_s: n as f64 / secs / 1e9,
+        values_per_s: rates::per_sec(n as f64, median_ns),
+        gb_per_s: rates::gb_per_s(n as f64, median_ns),
     }
 }
 

@@ -30,6 +30,7 @@ use crate::apack::{Histogram, SymbolTable};
 use crate::coordinator::PartitionPolicy;
 use crate::models::distributions::ValueProfile;
 use crate::models::zoo::{model_by_name, ModelConfig};
+use crate::obs::rates;
 use crate::store::{pack_model_zoo_with, PackOptions, StoreReader};
 use crate::util::bench::Bench;
 use crate::util::json::Json;
@@ -191,12 +192,11 @@ impl IngestReport {
 }
 
 fn entry(name: &str, median_ns: u64, n: usize, bits: u32) -> IngestEntry {
-    let secs = (median_ns as f64 / 1e9).max(1e-12);
     IngestEntry {
         name: name.to_string(),
         median_ns,
-        values_per_s: n as f64 / secs,
-        mb_per_s: n as f64 * (bits as f64 / 8.0) / 1e6 / secs,
+        values_per_s: rates::per_sec(n as f64, median_ns),
+        mb_per_s: rates::mb_per_s(n as f64 * (bits as f64 / 8.0), median_ns),
     }
 }
 

@@ -35,6 +35,10 @@
 //! - [`serving`] — the request layer over the store: bounded-queue worker
 //!   pool, chunk-level single-flight coalescing, admission control with
 //!   typed overload shedding, hot-set prefetch and latency metrics.
+//! - [`obs`] — the observability substrate: structured span tracer
+//!   (request + ingest paths, near-zero cost disabled), named metrics
+//!   registry backing `ReadStats`/`PackStats`/`MetricsSnapshot`, and
+//!   Chrome-trace / Prometheus / JSONL exporters.
 //! - [`runtime`] — PJRT client that loads the AOT-lowered JAX/Pallas model
 //!   (HLO text) and runs real inference to produce activation traces.
 //! - [`eval`] — regeneration harness for every table and figure in the
@@ -46,6 +50,7 @@ pub mod coordinator;
 pub mod error;
 pub mod eval;
 pub mod models;
+pub mod obs;
 pub mod runtime;
 pub mod serving;
 pub mod simulator;

@@ -15,6 +15,7 @@ use apack_repro::apack::tablegen::TensorKind;
 use apack_repro::coordinator::{Coordinator, PartitionPolicy, ShardedContainer};
 use apack_repro::eval::{self, CompressionStudy};
 use apack_repro::models::zoo::{all_models, model_by_name};
+use apack_repro::obs;
 use apack_repro::serving::{PrefetchConfig, ServingConfig, ServingEngine};
 use apack_repro::store::{
     pack_model_zoo, pack_model_zoo_sharded, pack_model_zoo_sharded_with, pack_model_zoo_with,
@@ -29,14 +30,17 @@ USAGE:
   apack-repro compress <input> [--output <file>] [--kind weights|activations] [--substreams N]
   apack-repro decompress <input> --output <file>
   apack-repro store pack <output> [--models a,b|all] [--sample-cap N] [--substreams N] [--min-per-stream N] [--shards N]
-                         [--pipeline on|off] [--pack-workers N]
+                         [--pipeline on|off] [--pack-workers N] [--trace <file.json>]
   apack-repro store get <store> --tensor NAME [--chunk I | --range LO..HI] [--output <file>] [--backend mmap|file]
-  apack-repro store stats <store> [--backend mmap|file]
+                        [--trace <file.json>] [--prom <file.prom>]
+  apack-repro store stats <store> [--backend mmap|file] [--prom <file.prom>]
   apack-repro store verify <store> [--backend mmap|file]
   apack-repro store report [--sample-cap N]
   apack-repro serve-bench [--models a,b|all] [--workers N] [--queue-depth N] [--clients N]
                           [--requests N] [--coalescing on|off] [--prefetch on|off]
                           [--deadline-ms N] [--hot-fraction F] [--shards N] [--sample-cap N]
+                          [--trace <file.json>] [--prom <file.prom>]
+                          [--snapshot-jsonl <file.jsonl>] [--snapshot-ms N]
   apack-repro table [--model NAME] [--layer N] [--kind weights|activations]
   apack-repro fig --id <2|5a|5b|6|7|8>
   apack-repro area-power
@@ -232,12 +236,53 @@ fn pipeline_tag(pipelined: bool) -> &'static str {
     }
 }
 
+/// Turn the span tracer on when `--trace <file>` was given, returning the
+/// output path (tracing stays off — one relaxed atomic load per span
+/// site — otherwise).
+fn trace_flag(args: &Args) -> Option<PathBuf> {
+    let path = args.flag("trace").map(PathBuf::from);
+    if path.is_some() {
+        obs::enable();
+    }
+    path
+}
+
+/// Stop tracing, write the collected spans as Chrome trace-event JSON,
+/// re-read and parse the file (self-validation — a trace that
+/// `chrome://tracing` would reject fails the command), and print a
+/// one-line summary. Returns the events for further digestion.
+fn finish_trace(path: &Path) -> Result<Vec<obs::SpanEvent>, Box<dyn Error>> {
+    obs::disable();
+    let events = obs::drain();
+    obs::write_chrome_trace(path, &events)?;
+    let text = std::fs::read_to_string(path)?;
+    apack_repro::util::json::Json::parse(&text)
+        .map_err(|e| format!("trace self-validation failed: {e}"))?;
+    println!(
+        "trace: {} spans -> {} (chrome trace-event JSON, parse-checked)",
+        events.len(),
+        path.display()
+    );
+    Ok(events)
+}
+
+/// Write a Prometheus exposition-format dump of `snap` when `--prom
+/// <file>` was given.
+fn prom_flag(args: &Args, snap: &obs::RegistrySnapshot) -> Result<(), Box<dyn Error>> {
+    if let Some(out) = args.flag("prom") {
+        std::fs::write(out, obs::prometheus_text(snap))?;
+        println!("metrics: Prometheus text -> {out}");
+    }
+    Ok(())
+}
+
 /// `store pack | get | stats | verify | report` — the APackStore CLI.
 fn run_store(args: &Args) -> Result<(), Box<dyn Error>> {
     let action = args.positional.first().map(String::as_str).unwrap_or("");
     let backend = Backend::parse(&args.flag_or("backend", "mmap"))?;
     match action {
         "pack" => {
+            let trace = trace_flag(args);
             let out = args.positional.get(1).ok_or("missing <output> store path")?;
             let models = match args.flag("models").unwrap_or("all") {
                 "all" => all_models(),
@@ -302,8 +347,12 @@ fn run_store(args: &Args) -> Result<(), Box<dyn Error>> {
                 );
                 println!("{} ({})", summary.pack.render(), pipeline_tag(pipelined));
             }
+            if let Some(p) = trace {
+                finish_trace(&p)?;
+            }
         }
         "get" => {
+            let trace = trace_flag(args);
             let input = Path::new(args.positional.get(1).ok_or("missing <store> path")?);
             let store = StoreHandle::open_with(input, backend, DEFAULT_CACHE_VALUES)?;
             let name = args.flag("tensor").ok_or("--tensor required")?;
@@ -331,6 +380,10 @@ fn run_store(args: &Args) -> Result<(), Box<dyn Error>> {
                     values.iter().take(16).map(|v| format!("{v:#x}")).collect();
                 let more = if values.len() > 16 { ", …" } else { "" };
                 println!("head: [{}{more}]", head.join(", "));
+            }
+            prom_flag(args, &store.registry_snapshot())?;
+            if let Some(p) = trace {
+                finish_trace(&p)?;
             }
         }
         "stats" => {
@@ -368,6 +421,7 @@ fn run_store(args: &Args) -> Result<(), Box<dyn Error>> {
                 )
             );
             println!("{}", read_stats_line(&store.stats()));
+            prom_flag(args, &store.registry_snapshot())?;
         }
         "verify" => {
             let input = Path::new(args.positional.get(1).ok_or("missing <store> path")?);
@@ -471,7 +525,22 @@ fn run_serve_bench(args: &Args) -> Result<(), Box<dyn Error>> {
         requests,
         100.0 * hot_fraction
     );
+    let trace = trace_flag(args);
     let engine = ServingEngine::start(Arc::clone(&store), config)?;
+    let snapshots = match args.flag("snapshot-jsonl") {
+        Some(out) => {
+            let interval: u64 = args.flag_or("snapshot-ms", "200").parse()?;
+            Some((
+                out.to_string(),
+                obs::SnapshotStream::start(
+                    Path::new(out),
+                    Duration::from_millis(interval.max(1)),
+                    engine.snapshot_source(),
+                )?,
+            ))
+        }
+        None => None,
+    };
 
     let t0 = Instant::now();
     let mut ok = 0u64;
@@ -536,6 +605,22 @@ fn run_serve_bench(args: &Args) -> Result<(), Box<dyn Error>> {
     );
     println!("{}", engine.metrics().render());
     println!("{}", read_stats_line(&engine.stats()));
+    if let Some((out, stream)) = snapshots {
+        drop(stream); // flush the final snapshot line before reporting
+        println!("metrics: periodic JSONL snapshots -> {out}");
+    }
+    prom_flag(args, &engine.registry_snapshot())?;
+    if let Some(p) = trace {
+        let events = finish_trace(&p)?;
+        match obs::request_coverage(&events) {
+            Some(cov) => println!(
+                "trace coverage: stage spans account for {:.1}% of the median \
+                 request's wall-clock (acceptance floor 95%)",
+                100.0 * cov
+            ),
+            None => println!("trace coverage: no request spans captured"),
+        }
+    }
     drop(engine);
     drop(store);
     if path.is_dir() {

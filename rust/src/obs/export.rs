@@ -1,0 +1,274 @@
+//! Telemetry exporters (ISSUE 6; DESIGN.md §10):
+//!
+//! - [`chrome_trace`] / [`write_chrome_trace`] — Chrome trace-event JSON
+//!   (complete `"ph": "X"` events, µs timestamps), loadable in
+//!   `chrome://tracing` and Perfetto. Wired to `--trace out.json` on
+//!   `store pack|get` and `serve-bench`.
+//! - [`prometheus_text`] — Prometheus exposition-format text dump of a
+//!   [`RegistrySnapshot`] (counters, gauges, histograms as summaries).
+//! - [`SnapshotStream`] — background thread appending one JSON line per
+//!   interval to a file (long-run monitoring; `--snapshot-jsonl`).
+//! - [`request_coverage`] — the acceptance metric: median fraction of
+//!   each `Request` span's wall clock covered by its direct children.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::Write as _;
+use std::path::Path;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+use super::hist::LatencySnapshot;
+use super::registry::RegistrySnapshot;
+use super::trace::{SpanEvent, Stage};
+
+/// Serialize span events as a Chrome trace-event JSON document
+/// (`{"traceEvents": [...]}`; one complete `"X"` event per span, `ts` /
+/// `dur` in microseconds, span id / parent id / payload count in `args`).
+pub fn chrome_trace(events: &[SpanEvent]) -> Json {
+    let trace_events: Vec<Json> = events
+        .iter()
+        .map(|e| {
+            let mut args = BTreeMap::new();
+            args.insert("id".to_string(), Json::Num(e.id as f64));
+            args.insert("parent".to_string(), Json::Num(e.parent as f64));
+            args.insert("count".to_string(), Json::Num(e.count as f64));
+            let mut m = BTreeMap::new();
+            m.insert("name".to_string(), Json::Str(e.stage.name().to_string()));
+            m.insert("ph".to_string(), Json::Str("X".to_string()));
+            m.insert("ts".to_string(), Json::Num(e.start_ns as f64 / 1e3));
+            m.insert("dur".to_string(), Json::Num(e.duration_ns() as f64 / 1e3));
+            m.insert("pid".to_string(), Json::Num(1.0));
+            m.insert("tid".to_string(), Json::Num(e.tid as f64));
+            m.insert("args".to_string(), Json::Obj(args));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut root = BTreeMap::new();
+    root.insert("traceEvents".to_string(), Json::Arr(trace_events));
+    root.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+    Json::Obj(root)
+}
+
+/// Write [`chrome_trace`] JSON to `path`.
+pub fn write_chrome_trace(path: &Path, events: &[SpanEvent]) -> crate::Result<()> {
+    std::fs::write(path, chrome_trace(events).to_string() + "\n")?;
+    Ok(())
+}
+
+/// Prometheus metric names allow `[a-zA-Z0-9_:]`; our dotted registry
+/// names (`store.cache_hits`) map dots (and anything else) to `_`.
+fn prom_name(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == ':' { c } else { '_' })
+        .collect()
+}
+
+/// Prometheus exposition-format text dump of a registry snapshot.
+/// Histograms are exported as summaries (p50/p95/p99 quantiles in
+/// seconds plus `_sum`/`_count`), matching how latency histograms are
+/// conventionally scraped.
+pub fn prometheus_text(snap: &RegistrySnapshot) -> String {
+    let mut out = String::new();
+    for (name, v) in &snap.counters {
+        let n = prom_name(name);
+        out.push_str(&format!("# TYPE {n} counter\n{n} {v}\n"));
+    }
+    for (name, v) in &snap.gauges {
+        let n = prom_name(name);
+        out.push_str(&format!("# TYPE {n} gauge\n{n} {v}\n"));
+    }
+    for (name, h) in &snap.hists {
+        let n = prom_name(name);
+        out.push_str(&format!("# TYPE {n} summary\n"));
+        for (q, d) in [(0.5, h.p50), (0.95, h.p95), (0.99, h.p99)] {
+            out.push_str(&format!("{n}{{quantile=\"{q}\"}} {}\n", d.as_secs_f64()));
+        }
+        let sum_s = h.mean.as_secs_f64() * h.count as f64;
+        out.push_str(&format!("{n}_sum {sum_s}\n{n}_count {}\n", h.count));
+    }
+    out
+}
+
+fn hist_json(h: &LatencySnapshot) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("count".to_string(), Json::Num(h.count as f64));
+    m.insert("mean_ns".to_string(), Json::Num(h.mean.as_nanos() as f64));
+    m.insert("p50_ns".to_string(), Json::Num(h.p50.as_nanos() as f64));
+    m.insert("p95_ns".to_string(), Json::Num(h.p95.as_nanos() as f64));
+    m.insert("p99_ns".to_string(), Json::Num(h.p99.as_nanos() as f64));
+    m.insert("max_ns".to_string(), Json::Num(h.max.as_nanos() as f64));
+    Json::Obj(m)
+}
+
+/// One JSONL snapshot line (compact JSON, no trailing newline).
+pub fn jsonl_line(seq: u64, snap: &RegistrySnapshot) -> String {
+    let nums =
+        |m: &BTreeMap<String, u64>| m.iter().map(|(k, v)| (k.clone(), Json::Num(*v as f64)));
+    let mut root = BTreeMap::new();
+    root.insert("seq".to_string(), Json::Num(seq as f64));
+    root.insert("counters".to_string(), Json::Obj(nums(&snap.counters).collect()));
+    root.insert("gauges".to_string(), Json::Obj(nums(&snap.gauges).collect()));
+    root.insert(
+        "hists".to_string(),
+        Json::Obj(snap.hists.iter().map(|(k, h)| (k.clone(), hist_json(h))).collect()),
+    );
+    Json::Obj(root).to_string()
+}
+
+/// Background thread that appends one [`jsonl_line`] per `interval` to a
+/// file, plus a final line at shutdown. Stops (and writes the last line)
+/// on drop.
+pub struct SnapshotStream {
+    stop: Arc<(Mutex<bool>, Condvar)>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl SnapshotStream {
+    /// Start streaming `source()` snapshots to `path` (truncates any
+    /// existing file).
+    pub fn start<F>(path: &Path, interval: Duration, source: F) -> crate::Result<SnapshotStream>
+    where
+        F: Fn() -> RegistrySnapshot + Send + 'static,
+    {
+        let mut file = File::create(path)?;
+        let stop = Arc::new((Mutex::new(false), Condvar::new()));
+        let thread_stop = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("apack-obs-jsonl".to_string())
+            .spawn(move || {
+                let (lock, cv) = &*thread_stop;
+                let mut seq = 0u64;
+                let mut stopped = lock.lock().unwrap();
+                loop {
+                    let done = *stopped;
+                    // The stop mutex guards only the flag; `source` never
+                    // touches it, so holding it across the write is safe.
+                    let line = jsonl_line(seq, &source());
+                    seq += 1;
+                    let _ = writeln!(file, "{line}");
+                    let _ = file.flush();
+                    if done {
+                        return;
+                    }
+                    stopped = cv.wait_timeout(stopped, interval).unwrap().0;
+                }
+            })
+            .map_err(|e| crate::Error::Io(e.to_string()))?;
+        Ok(SnapshotStream { stop, handle: Some(handle) })
+    }
+}
+
+impl Drop for SnapshotStream {
+    fn drop(&mut self) {
+        let (lock, cv) = &*self.stop;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Median over `Request` spans of the fraction of each request's wall
+/// clock covered by its **direct** children (admit + queue wait +
+/// execute), clamped to 1.0 per request. `None` when the events hold no
+/// request span with nonzero duration. The ISSUE-6 acceptance bar is
+/// `>= 0.95` at the median for a `serve-bench --trace` run.
+pub fn request_coverage(events: &[SpanEvent]) -> Option<f64> {
+    let mut covered: BTreeMap<u64, u64> = events
+        .iter()
+        .filter(|e| e.stage == Stage::Request && e.duration_ns() > 0)
+        .map(|e| (e.id, 0u64))
+        .collect();
+    for e in events {
+        if e.stage != Stage::Request {
+            if let Some(c) = covered.get_mut(&e.parent) {
+                *c += e.duration_ns();
+            }
+        }
+    }
+    let mut fractions: Vec<f64> = events
+        .iter()
+        .filter(|e| e.stage == Stage::Request && e.duration_ns() > 0)
+        .map(|e| (covered[&e.id] as f64 / e.duration_ns() as f64).min(1.0))
+        .collect();
+    if fractions.is_empty() {
+        return None;
+    }
+    fractions.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Some(fractions[fractions.len() / 2])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(id: u64, parent: u64, stage: Stage, start_ns: u64, end_ns: u64) -> SpanEvent {
+        SpanEvent { id, parent, stage, start_ns, end_ns, tid: 1, count: 0 }
+    }
+
+    #[test]
+    fn chrome_trace_round_trips_through_the_parser() {
+        let events =
+            [ev(1, 0, Stage::Request, 0, 4000), ev(2, 1, Stage::Execute, 1000, 3000)];
+        let doc = chrome_trace(&events).to_string();
+        let parsed = Json::parse(&doc).unwrap();
+        let arr = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(arr[0].get("name").unwrap().as_str().unwrap(), "request");
+        assert_eq!(arr[1].get("dur").unwrap().as_f64().unwrap(), 2.0); // µs
+        assert_eq!(
+            arr[1].get("args").unwrap().get("parent").unwrap().as_usize().unwrap(),
+            1
+        );
+    }
+
+    #[test]
+    fn prometheus_text_has_types_and_sanitized_names() {
+        let mut snap = RegistrySnapshot::default();
+        snap.counters.insert("store.cache_hits".to_string(), 12);
+        snap.gauges.insert("serving.queue_depth".to_string(), 3);
+        snap.hists.insert("serving.latency_ns".to_string(), LatencySnapshot::default());
+        let text = prometheus_text(&snap);
+        assert!(text.contains("# TYPE store_cache_hits counter"));
+        assert!(text.contains("store_cache_hits 12"));
+        assert!(text.contains("# TYPE serving_queue_depth gauge"));
+        assert!(text.contains("# TYPE serving_latency_ns summary"));
+        assert!(text.contains("serving_latency_ns_count 0"));
+        assert!(!text.contains("store.cache_hits"), "dots must be sanitized");
+    }
+
+    #[test]
+    fn jsonl_line_is_one_parsable_object() {
+        let mut snap = RegistrySnapshot::default();
+        snap.counters.insert("a.b".to_string(), 5);
+        let line = jsonl_line(7, &snap);
+        assert!(!line.contains('\n'));
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("seq").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(j.get("counters").unwrap().get("a.b").unwrap().as_usize().unwrap(), 5);
+    }
+
+    #[test]
+    fn coverage_is_median_of_clamped_fractions() {
+        // Request 1: children cover 100%; request 5: children cover 50%;
+        // request 8: no children (0%).
+        let events = [
+            ev(1, 0, Stage::Request, 0, 1000),
+            ev(2, 1, Stage::QueueWait, 0, 600),
+            ev(3, 1, Stage::Execute, 600, 1000),
+            ev(4, 3, Stage::Decode, 600, 1000), // grandchild: not counted
+            ev(5, 0, Stage::Request, 0, 1000),
+            ev(6, 5, Stage::Execute, 0, 500),
+            ev(8, 0, Stage::Request, 0, 1000),
+        ];
+        let cov = request_coverage(&events).unwrap();
+        assert!((cov - 0.5).abs() < 1e-9, "median of [0, 0.5, 1.0] is 0.5, got {cov}");
+        assert_eq!(request_coverage(&[]), None);
+    }
+}

@@ -1,0 +1,218 @@
+//! Concurrent log-linear latency histogram — the quantile substrate every
+//! subsystem shares (generalized out of `serving/metrics.rs`, ISSUE 6).
+//!
+//! Every power-of-two octave of nanoseconds is split into 4 sub-buckets,
+//! so quantile estimates carry at most ~25% relative error while `record`
+//! stays one atomic increment (no lock on the worker hot path). Quantiles
+//! are read as the **upper bound** of the bucket the target rank lands in,
+//! i.e. conservatively.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// 4 sub-buckets per octave.
+const SUB: usize = 4;
+/// Bucket count: indices 0..4 are exact (0–3 ns), then 4 per octave up to
+/// the u64 nanosecond range. 256 covers every index `bucket_index` emits.
+const BUCKETS: usize = 256;
+
+/// Concurrent log-linear latency histogram.
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_nanos: AtomicU64,
+    max_nanos: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_nanos: AtomicU64::new(0),
+            max_nanos: AtomicU64::new(0),
+        }
+    }
+
+    /// Bucket index for a nanosecond value (log-linear, monotone).
+    fn bucket_index(nanos: u64) -> usize {
+        if nanos < SUB as u64 {
+            return nanos as usize;
+        }
+        let msb = 63 - nanos.leading_zeros() as usize; // >= 2 here
+        let sub = ((nanos >> (msb - 2)) & 0b11) as usize;
+        ((msb - 1) * SUB + sub).min(BUCKETS - 1)
+    }
+
+    /// Inclusive upper bound (nanos) of bucket `i` — what quantiles report.
+    fn bucket_bound(i: usize) -> u64 {
+        if i < SUB {
+            return i as u64;
+        }
+        let msb = i / SUB + 1;
+        let sub = (i % SUB) as u64;
+        (1u64 << msb) + (sub + 1) * (1u64 << (msb - 2)) - 1
+    }
+
+    /// Record one observation (an atomic increment; safe from any thread).
+    pub fn record(&self, latency: Duration) {
+        let nanos = u64::try_from(latency.as_nanos()).unwrap_or(u64::MAX);
+        self.buckets[Self::bucket_index(nanos)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_nanos.fetch_add(nanos, Ordering::Relaxed);
+        self.max_nanos.fetch_max(nanos, Ordering::Relaxed);
+    }
+
+    /// Observations recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Zero every bucket and summary counter (`MetricsRegistry::reset`).
+    /// Not atomic with respect to concurrent `record`s — reset between
+    /// measurement windows, not during one.
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum_nanos.store(0, Ordering::Relaxed);
+        self.max_nanos.store(0, Ordering::Relaxed);
+    }
+
+    /// Latency at quantile `q` in `[0, 1]` (upper bucket bound, clamped
+    /// to the recorded maximum so `p99 <= max` always holds; ZERO when
+    /// empty). Concurrent `record`s can skew an in-flight read by a few
+    /// observations — snapshots are monitoring data, not a barrier.
+    pub fn quantile(&self, q: f64) -> Duration {
+        let total = self.count.load(Ordering::Relaxed);
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let max = self.max_nanos.load(Ordering::Relaxed);
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Duration::from_nanos(Self::bucket_bound(i).min(max));
+            }
+        }
+        Duration::from_nanos(max)
+    }
+
+    /// One consistent-enough view of the distribution.
+    pub fn snapshot(&self) -> LatencySnapshot {
+        let count = self.count.load(Ordering::Relaxed);
+        let mean = if count == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_nanos(self.sum_nanos.load(Ordering::Relaxed) / count)
+        };
+        LatencySnapshot {
+            count,
+            mean,
+            p50: self.quantile(0.50),
+            p95: self.quantile(0.95),
+            p99: self.quantile(0.99),
+            max: Duration::from_nanos(self.max_nanos.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+/// Point-in-time latency distribution.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LatencySnapshot {
+    pub count: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
+    pub max: Duration,
+}
+
+impl LatencySnapshot {
+    /// One-line rendering for bench/CLI output.
+    pub fn render(&self) -> String {
+        format!(
+            "p50 {:?}  p95 {:?}  p99 {:?}  max {:?}  (mean {:?}, n={})",
+            self.p50, self.p95, self.p99, self.max, self.mean, self.count
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_monotone_and_bound_covers() {
+        // Strictly increasing sample latencies spanning the u64 range.
+        let mut samples: Vec<u64> = (0..16).collect();
+        for shift in 4..60u32 {
+            for k in 0..4u64 {
+                samples.push((1u64 << shift) + k * (1u64 << (shift - 2)));
+            }
+        }
+        let mut prev = 0usize;
+        for &n in &samples {
+            let i = LatencyHistogram::bucket_index(n);
+            assert!(i >= prev, "monotone at {n}: {i} < {prev}");
+            prev = i;
+            let bound = LatencyHistogram::bucket_bound(i);
+            assert!(bound >= n, "bound {bound} must cover {n}");
+            // Log-linear: the bound overshoots by at most ~25% + 1.
+            assert!(bound <= n + n / 4 + 1, "bound {bound} too loose for {n}");
+        }
+    }
+
+    #[test]
+    fn quantiles_are_ordered_and_plausible() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile(0.5), Duration::ZERO);
+        for us in 1..=1000u64 {
+            h.record(Duration::from_micros(us));
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 1000);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+        // p50 of uniform 1..=1000µs is ~500µs; allow the 25% bucket error.
+        let p50 = s.p50.as_micros() as f64;
+        assert!((450.0..=650.0).contains(&p50), "p50 {p50}µs");
+        let p99 = s.p99.as_micros() as f64;
+        assert!((950.0..=1300.0).contains(&p99), "p99 {p99}µs");
+        assert_eq!(s.max, Duration::from_micros(1000));
+        assert!(s.render().contains("p95"));
+    }
+
+    #[test]
+    fn concurrent_records_all_land() {
+        let h = LatencyHistogram::new();
+        std::thread::scope(|scope| {
+            for t in 0..4 {
+                let h = &h;
+                scope.spawn(move || {
+                    for i in 0..1000u64 {
+                        h.record(Duration::from_nanos(t * 1000 + i));
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), 4000);
+    }
+
+    #[test]
+    fn reset_zeroes_everything() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_micros(7));
+        h.reset();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.snapshot(), LatencySnapshot::default());
+    }
+}

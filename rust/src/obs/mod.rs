@@ -1,0 +1,43 @@
+//! **Observability substrate** — unified telemetry for codec → store →
+//! serving (ISSUE 6; DESIGN.md §10).
+//!
+//! Three pieces, std-only like everything else in the tree (§1):
+//!
+//! 1. [`trace`] — a structured span tracer: per-thread event buffers,
+//!    RAII guards, cross-thread [`ManualSpan`]s, one relaxed atomic load
+//!    on the disabled path. Instruments the full request path (admit →
+//!    queue wait → single-flight → chunk IO → arithmetic decode →
+//!    copy-out) and the full ingest path (synth → histogram → tablegen →
+//!    encode → append → seal).
+//! 2. [`registry`] — named atomic counters/gauges plus the log-linear
+//!    [`LatencyHistogram`] (generalized out of `serving/metrics.rs`).
+//!    `ReadStats`, `PackStats` and `MetricsSnapshot` are views over
+//!    [`RegistrySnapshot`]s; [`rates`] holds the shared values/s / MB/s
+//!    derivations.
+//! 3. [`export`] — Chrome trace-event JSON (`--trace`, loadable in
+//!    `chrome://tracing` / Perfetto), Prometheus exposition text
+//!    (`--prom`), periodic JSONL snapshots (`--snapshot-jsonl`).
+//!
+//! # Overhead budget
+//!
+//! Disabled: one relaxed `AtomicBool` load per call site, CI-gated < 3%
+//! on the codec hot path (`benches/codec_hot_path.rs`). Enabled: span
+//! sites are block-granular (one span per chunk decode / encode / IO,
+//! never per value), so recording is amortized over thousands of values.
+
+pub mod export;
+pub mod hist;
+pub mod rates;
+pub mod registry;
+pub mod trace;
+
+pub use export::{
+    chrome_trace, jsonl_line, prometheus_text, request_coverage, write_chrome_trace,
+    SnapshotStream,
+};
+pub use hist::{LatencyHistogram, LatencySnapshot};
+pub use registry::{Counter, Gauge, MetricsRegistry, RegistrySnapshot};
+pub use trace::{
+    clear, disable, drain, dropped, enable, enabled, record, span, span_n, span_under,
+    ManualSpan, SpanEvent, SpanGuard, Stage,
+};

@@ -1,0 +1,47 @@
+//! Rate derivation helpers — the one place `values/s`, `MB/s` and `GB/s`
+//! are computed from a count and an elapsed-nanoseconds counter
+//! (deduplicated out of `ReadStats`, `PackStats` and the bench JSON
+//! emitters; ISSUE 6).
+//!
+//! All helpers guard the zero-duration case the same way (clamp elapsed
+//! to 1e-12 s), so a not-yet-timed stat renders as a huge-but-finite
+//! rate instead of `inf`/`NaN`. Callers that want "0 until timed"
+//! semantics (e.g. `ReadStats::decode_mb_per_s`) check `nanos == 0`
+//! themselves first.
+
+/// `count` per second over `nanos` elapsed nanoseconds.
+pub fn per_sec(count: f64, nanos: u64) -> f64 {
+    count / (nanos as f64 / 1e9).max(1e-12)
+}
+
+/// Megabytes (1e6 bytes) per second.
+pub fn mb_per_s(bytes: f64, nanos: u64) -> f64 {
+    per_sec(bytes, nanos) / 1e6
+}
+
+/// Gigabytes (1e9 bytes) per second.
+pub fn gb_per_s(bytes: f64, nanos: u64) -> f64 {
+    per_sec(bytes, nanos) / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rates_are_consistent() {
+        let one_sec = 1_000_000_000u64;
+        assert!((per_sec(100.0, one_sec) - 100.0).abs() < 1e-9);
+        assert!((mb_per_s(2_000_000.0, one_sec) - 2.0).abs() < 1e-9);
+        assert!((gb_per_s(3_000_000_000.0, one_sec) - 3.0).abs() < 1e-9);
+        // Half the time, double the rate.
+        assert!((per_sec(100.0, one_sec / 2) - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_duration_is_finite() {
+        assert!(per_sec(1.0, 0).is_finite());
+        assert!(mb_per_s(1.0, 0).is_finite());
+        assert!(gb_per_s(1.0, 0).is_finite());
+    }
+}

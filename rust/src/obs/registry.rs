@@ -1,0 +1,247 @@
+//! Named metrics registry: atomic counters, gauges and latency
+//! histograms behind `"component.metric"` names, snapshotted into one
+//! [`RegistrySnapshot`] the exporters and the legacy stat structs
+//! (`ReadStats`, `PackStats`, `MetricsSnapshot`) are views over
+//! (ISSUE 6; DESIGN.md §10).
+//!
+//! Registration is get-or-create and hands back an `Arc` handle, so hot
+//! paths update a pre-fetched atomic — the registry's map lock is only
+//! taken at registration and snapshot time. Registries are
+//! **per-component** (one per `StoreReader`, `StoreWriter`,
+//! `ServingEngine`), not process-global: two readers don't share
+//! counters, and snapshots [`RegistrySnapshot::merge`] across components
+//! exactly where the old structs used to `merge`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::hist::{LatencyHistogram, LatencySnapshot};
+
+/// Monotonically increasing atomic counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    /// Only [`MetricsRegistry::reset`] should call this — counters are
+    /// monotonic within a measurement window.
+    fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Last-write-wins atomic gauge (with a `set_max` high-water helper).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn set_max(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Hist(Arc<LatencyHistogram>),
+}
+
+/// One component's named metrics.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get-or-create the counter `name`. Panics if `name` is already
+    /// registered as a different kind (names are compile-time constants
+    /// owned by one component — see the DESIGN.md §10 glossary).
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Arc::new(Counter::default())))
+        {
+            Metric::Counter(c) => Arc::clone(c),
+            _ => panic!("metric {name:?} already registered with a different kind"),
+        }
+    }
+
+    /// Get-or-create the gauge `name`.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Gauge(Arc::new(Gauge::default())))
+        {
+            Metric::Gauge(g) => Arc::clone(g),
+            _ => panic!("metric {name:?} already registered with a different kind"),
+        }
+    }
+
+    /// Get-or-create the latency histogram `name`.
+    pub fn histogram(&self, name: &str) -> Arc<LatencyHistogram> {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Hist(Arc::new(LatencyHistogram::new())))
+        {
+            Metric::Hist(h) => Arc::clone(h),
+            _ => panic!("metric {name:?} already registered with a different kind"),
+        }
+    }
+
+    /// Point-in-time values of every registered metric.
+    pub fn snapshot(&self) -> RegistrySnapshot {
+        let m = self.metrics.lock().unwrap();
+        let mut snap = RegistrySnapshot::default();
+        for (name, metric) in m.iter() {
+            match metric {
+                Metric::Counter(c) => {
+                    snap.counters.insert(name.clone(), c.get());
+                }
+                Metric::Gauge(g) => {
+                    snap.gauges.insert(name.clone(), g.get());
+                }
+                Metric::Hist(h) => {
+                    snap.hists.insert(name.clone(), h.snapshot());
+                }
+            }
+        }
+        snap
+    }
+
+    /// Zero every counter, gauge and histogram (new measurement window).
+    pub fn reset(&self) {
+        let m = self.metrics.lock().unwrap();
+        for metric in m.values() {
+            match metric {
+                Metric::Counter(c) => c.reset(),
+                Metric::Gauge(g) => g.set(0),
+                Metric::Hist(h) => h.reset(),
+            }
+        }
+    }
+}
+
+/// Point-in-time registry values; what the exporters serialize and the
+/// legacy stat structs are built from.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RegistrySnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, u64>,
+    pub hists: BTreeMap<String, LatencySnapshot>,
+}
+
+impl RegistrySnapshot {
+    /// Counter value, 0 when absent.
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Gauge value, 0 when absent.
+    pub fn gauge(&self, name: &str) -> u64 {
+        self.gauges.get(name).copied().unwrap_or(0)
+    }
+
+    /// Histogram snapshot, empty when absent.
+    pub fn hist(&self, name: &str) -> LatencySnapshot {
+        self.hists.get(name).copied().unwrap_or_default()
+    }
+
+    /// Fold another component's snapshot in: counters sum, gauges take
+    /// the max (high-water semantics across shards), histograms keep the
+    /// first registered (per-component distributions don't merge
+    /// losslessly at the snapshot level).
+    pub fn merge(&mut self, other: &RegistrySnapshot) {
+        for (name, v) in &other.counters {
+            *self.counters.entry(name.clone()).or_insert(0) += v;
+        }
+        for (name, v) in &other.gauges {
+            let e = self.gauges.entry(name.clone()).or_insert(0);
+            *e = (*e).max(*v);
+        }
+        for (name, h) in &other.hists {
+            self.hists.entry(name.clone()).or_insert(*h);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn get_or_create_returns_the_same_atomic() {
+        let r = MetricsRegistry::new();
+        let a = r.counter("x.hits");
+        let b = r.counter("x.hits");
+        a.add(3);
+        b.inc();
+        assert_eq!(r.snapshot().counter("x.hits"), 4);
+        assert_eq!(r.snapshot().counter("x.misses"), 0);
+    }
+
+    #[test]
+    fn snapshot_covers_all_kinds_and_reset_zeroes() {
+        let r = MetricsRegistry::new();
+        r.counter("c").add(7);
+        r.gauge("g").set_max(9);
+        r.histogram("h").record(Duration::from_micros(5));
+        let s = r.snapshot();
+        assert_eq!(s.counter("c"), 7);
+        assert_eq!(s.gauge("g"), 9);
+        assert_eq!(s.hist("h").count, 1);
+        r.reset();
+        let s = r.snapshot();
+        assert_eq!((s.counter("c"), s.gauge("g"), s.hist("h").count), (0, 0, 0));
+    }
+
+    #[test]
+    fn merge_sums_counters_maxes_gauges() {
+        let (a, b) = (MetricsRegistry::new(), MetricsRegistry::new());
+        a.counter("c").add(2);
+        b.counter("c").add(5);
+        a.gauge("g").set(10);
+        b.gauge("g").set(4);
+        b.counter("only_b").inc();
+        let mut s = a.snapshot();
+        s.merge(&b.snapshot());
+        assert_eq!(s.counter("c"), 7);
+        assert_eq!(s.gauge("g"), 10);
+        assert_eq!(s.counter("only_b"), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "different kind")]
+    fn kind_mismatch_panics() {
+        let r = MetricsRegistry::new();
+        r.counter("x");
+        r.gauge("x");
+    }
+}

@@ -1,0 +1,465 @@
+//! Structured span tracer: per-thread event buffers with RAII guards,
+//! near-zero cost when disabled (ISSUE 6; DESIGN.md §10).
+//!
+//! # Design
+//!
+//! - **Disabled path**: every entry point ([`span`], [`span_n`],
+//!   [`span_under`], [`ManualSpan::begin`], [`record`]) does exactly one
+//!   relaxed [`AtomicBool`] load and returns a no-op guard. No
+//!   allocation, no lock, no clock read. Hot-path call sites (one span
+//!   per *block* decode/encode, never per value) keep the enabled-mode
+//!   overhead under the 3% CI budget too.
+//! - **Enabled path**: each thread lazily registers one [`Ring`] — a
+//!   bounded `Vec<SpanEvent>` behind a `Mutex` only that thread pushes
+//!   to, so the lock is uncontended on the record path (a drain takes it
+//!   briefly from the collecting thread). Events past the per-thread cap
+//!   are dropped and counted ([`dropped`]), never reallocated without
+//!   bound.
+//! - **Span identity**: ids come from one global counter (0 = "no
+//!   parent"/root). Intra-thread nesting is implicit via a thread-local
+//!   parent stack; cross-thread spans (a serving request that is
+//!   admitted on the client thread and executed on a worker) use
+//!   [`ManualSpan`], which is `Send` and carries its id explicitly so
+//!   children on other threads can attach via [`span_under`].
+//! - **Timestamps**: nanoseconds since a process-wide epoch pinned at
+//!   first use, so events from all threads share one axis (what the
+//!   Chrome trace exporter needs). `Instant::duration_since` saturates,
+//!   so an `Instant` captured before the epoch (e.g. a queue-entry time
+//!   from before `enable()`) clamps to 0 instead of panicking.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Per-thread event cap: past this, new events are dropped (and counted)
+/// rather than growing the buffer without bound. 64K events × 56 B ≈
+/// 3.5 MiB per recording thread, worst case.
+const MAX_EVENTS_PER_THREAD: usize = 1 << 16;
+
+/// Pipeline stage a span measures — the full request path (serving admit
+/// → queue wait → single-flight → chunk IO → arithmetic decode →
+/// copy-out) and the full ingest path (synth → histogram → tablegen →
+/// encode → append → seal), plus the coordinator's batch entry points.
+/// DESIGN.md §10 is the taxonomy reference.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Stage {
+    /// Whole serving request: submit → response filled (cross-thread).
+    Request,
+    /// Admission control on the submitting thread (queue-bound check).
+    Admit,
+    /// Time spent queued between admit and a worker picking the request
+    /// up (recorded at pop via [`record`]; spans two threads).
+    QueueWait,
+    /// Worker-side execution of one request (decode + assembly).
+    Execute,
+    /// Single-flight resolution of one `(tensor, chunk)` — the leader's
+    /// decode or a follower's wait on the leader.
+    SingleFlight,
+    /// Compressed-chunk read (mmap slice or pread) + CRC check.
+    ChunkIo,
+    /// Arithmetic block decode (`ApackDecoder::decode_into`).
+    Decode,
+    /// Assembling decoded chunks into the caller's contiguous range.
+    CopyOut,
+    /// Background hot-set prefetch sweep.
+    Prefetch,
+    /// Ingest: synthetic trace generation for one model.
+    Synth,
+    /// Ingest: value histogram construction.
+    Histogram,
+    /// Ingest: Listing-1 symbol-table search.
+    TableGen,
+    /// Arithmetic block encode (`ApackEncoder::encode_into`).
+    Encode,
+    /// Ingest: blob + metadata append into the store file.
+    Append,
+    /// Ingest: footer/trailer write and flush (`StoreWriter::finish`).
+    Seal,
+    /// Coordinator batch compress (all substreams of one tensor).
+    Compress,
+    /// Coordinator batch decompress (all substreams of one tensor).
+    Decompress,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 17] = [
+        Stage::Request,
+        Stage::Admit,
+        Stage::QueueWait,
+        Stage::Execute,
+        Stage::SingleFlight,
+        Stage::ChunkIo,
+        Stage::Decode,
+        Stage::CopyOut,
+        Stage::Prefetch,
+        Stage::Synth,
+        Stage::Histogram,
+        Stage::TableGen,
+        Stage::Encode,
+        Stage::Append,
+        Stage::Seal,
+        Stage::Compress,
+        Stage::Decompress,
+    ];
+
+    /// Stable name used by the exporters and DESIGN.md §10.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Request => "request",
+            Stage::Admit => "admit",
+            Stage::QueueWait => "queue_wait",
+            Stage::Execute => "execute",
+            Stage::SingleFlight => "single_flight",
+            Stage::ChunkIo => "chunk_io",
+            Stage::Decode => "decode",
+            Stage::CopyOut => "copy_out",
+            Stage::Prefetch => "prefetch",
+            Stage::Synth => "synth",
+            Stage::Histogram => "histogram",
+            Stage::TableGen => "tablegen",
+            Stage::Encode => "encode",
+            Stage::Append => "append",
+            Stage::Seal => "seal",
+            Stage::Compress => "compress",
+            Stage::Decompress => "decompress",
+        }
+    }
+}
+
+/// One completed span.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanEvent {
+    /// Unique nonzero span id.
+    pub id: u64,
+    /// Parent span id; 0 = root.
+    pub parent: u64,
+    pub stage: Stage,
+    /// Nanoseconds since the process trace epoch.
+    pub start_ns: u64,
+    /// Nanoseconds since the process trace epoch; `>= start_ns`.
+    pub end_ns: u64,
+    /// Recording thread (dense tracer-assigned index, not the OS tid).
+    pub tid: u64,
+    /// Stage-specific payload size: values decoded/encoded, bytes read
+    /// or written, chunks prefetched. 0 when not meaningful.
+    pub count: u64,
+}
+
+impl SpanEvent {
+    pub fn duration_ns(&self) -> u64 {
+        self.end_ns.saturating_sub(self.start_ns)
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static RINGS: Mutex<Vec<Arc<Ring>>> = Mutex::new(Vec::new());
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// One thread's event buffer. Only the owning thread pushes; `drain` /
+/// `clear` lock it briefly from the collecting thread.
+struct Ring {
+    tid: u64,
+    events: Mutex<Vec<SpanEvent>>,
+}
+
+struct Local {
+    ring: Option<Arc<Ring>>,
+    /// Open intra-thread span ids, innermost last.
+    stack: Vec<u64>,
+}
+
+thread_local! {
+    static LOCAL: RefCell<Local> = RefCell::new(Local { ring: None, stack: Vec::new() });
+}
+
+fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn ns_since_epoch(t: Instant) -> u64 {
+    // Saturates to 0 for instants captured before the epoch.
+    u64::try_from(t.duration_since(epoch()).as_nanos()).unwrap_or(u64::MAX)
+}
+
+fn next_id() -> u64 {
+    NEXT_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Push a finished event into the calling thread's ring (registering the
+/// ring on first use). `ev.tid` is overwritten with the ring's id.
+fn emit(mut ev: SpanEvent) {
+    LOCAL.with(|l| {
+        let mut l = l.borrow_mut();
+        let ring = l.ring.get_or_insert_with(|| {
+            let ring = Arc::new(Ring {
+                tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+                events: Mutex::new(Vec::new()),
+            });
+            RINGS.lock().unwrap().push(Arc::clone(&ring));
+            ring
+        });
+        ev.tid = ring.tid;
+        let mut events = ring.events.lock().unwrap();
+        if events.len() >= MAX_EVENTS_PER_THREAD {
+            DROPPED.fetch_add(1, Ordering::Relaxed);
+        } else {
+            events.push(ev);
+        }
+    });
+}
+
+/// Is tracing on? (One relaxed load — the entire disabled-path cost.)
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn tracing on (pins the trace epoch on first call).
+pub fn enable() {
+    let _ = epoch();
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Turn tracing off. In-flight guards created while enabled still record
+/// on drop; new call sites go back to the one-load no-op path.
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Events dropped because a thread's buffer was full.
+pub fn dropped() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+/// Discard all buffered events and the drop counter.
+pub fn clear() {
+    for ring in RINGS.lock().unwrap().iter() {
+        ring.events.lock().unwrap().clear();
+    }
+    DROPPED.store(0, Ordering::Relaxed);
+}
+
+/// Collect (and remove) every buffered event from every thread, sorted
+/// by start time. Threads keep recording into their (now empty) rings.
+pub fn drain() -> Vec<SpanEvent> {
+    let mut out = Vec::new();
+    for ring in RINGS.lock().unwrap().iter() {
+        out.append(&mut ring.events.lock().unwrap());
+    }
+    out.sort_by_key(|e| (e.start_ns, e.id));
+    out
+}
+
+/// An in-flight span on one open guard (intra-thread).
+struct ActiveSpan {
+    id: u64,
+    parent: u64,
+    stage: Stage,
+    start: Instant,
+    count: u64,
+}
+
+/// RAII span: records a [`SpanEvent`] on drop. `None` inside = tracing
+/// was disabled at creation and the whole guard is a no-op.
+pub struct SpanGuard(Option<ActiveSpan>);
+
+impl SpanGuard {
+    /// This span's id (0 when tracing is disabled) — pass to
+    /// [`span_under`] on another thread to attach children.
+    pub fn id(&self) -> u64 {
+        self.0.as_ref().map(|s| s.id).unwrap_or(0)
+    }
+
+    /// Set the payload count after the fact (e.g. bytes actually read).
+    pub fn set_count(&mut self, count: u64) {
+        if let Some(s) = &mut self.0 {
+            s.count = count;
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(s) = self.0.take() {
+            let end = Instant::now();
+            LOCAL.with(|l| {
+                let mut l = l.borrow_mut();
+                if let Some(pos) = l.stack.iter().rposition(|&id| id == s.id) {
+                    l.stack.remove(pos);
+                }
+            });
+            emit(SpanEvent {
+                id: s.id,
+                parent: s.parent,
+                stage: s.stage,
+                start_ns: ns_since_epoch(s.start),
+                end_ns: ns_since_epoch(end),
+                tid: 0,
+                count: s.count,
+            });
+        }
+    }
+}
+
+/// Open a span nested under the thread's current innermost span.
+#[inline]
+pub fn span(stage: Stage) -> SpanGuard {
+    span_n(stage, 0)
+}
+
+/// [`span`] with a payload count known up front.
+#[inline]
+pub fn span_n(stage: Stage, count: u64) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard(None);
+    }
+    let id = next_id();
+    let parent = LOCAL.with(|l| {
+        let mut l = l.borrow_mut();
+        let parent = l.stack.last().copied().unwrap_or(0);
+        l.stack.push(id);
+        parent
+    });
+    SpanGuard(Some(ActiveSpan { id, parent, stage, start: Instant::now(), count }))
+}
+
+/// Open a span under an **explicit** parent id (from a [`ManualSpan`] on
+/// another thread, or 0 for a root). The span still joins this thread's
+/// stack so intra-thread children nest under it.
+pub fn span_under(stage: Stage, parent: u64, count: u64) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard(None);
+    }
+    let id = next_id();
+    LOCAL.with(|l| l.borrow_mut().stack.push(id));
+    SpanGuard(Some(ActiveSpan { id, parent, stage, start: Instant::now(), count }))
+}
+
+/// A cross-thread span: begun on one thread, finished on another (e.g. a
+/// serving request admitted on the client thread and answered by a
+/// worker). `Send`, carries its id explicitly, and does **not** join any
+/// thread's parent stack — attach children with [`span_under`].
+#[derive(Debug)]
+pub struct ManualSpan {
+    id: u64,
+    parent: u64,
+    stage: Stage,
+    start: Instant,
+}
+
+impl ManualSpan {
+    /// `None` when tracing is disabled (one relaxed load).
+    pub fn begin(stage: Stage) -> Option<ManualSpan> {
+        if !enabled() {
+            return None;
+        }
+        let parent = LOCAL.with(|l| l.borrow().stack.last().copied().unwrap_or(0));
+        Some(ManualSpan { id: next_id(), parent, stage, start: Instant::now() })
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Record the span, ending now, into the **finishing** thread's ring.
+    pub fn finish(self) {
+        self.finish_with(0)
+    }
+
+    /// [`finish`] with a payload count.
+    pub fn finish_with(self, count: u64) {
+        let end = Instant::now();
+        emit(SpanEvent {
+            id: self.id,
+            parent: self.parent,
+            stage: self.stage,
+            start_ns: ns_since_epoch(self.start),
+            end_ns: ns_since_epoch(end),
+            tid: 0,
+            count,
+        });
+    }
+}
+
+/// Record a span from two already-captured instants (e.g. queue wait:
+/// `enqueued → popped`, where the start predates the worker seeing the
+/// item). An `Instant` captured before the trace epoch clamps to 0.
+pub fn record(stage: Stage, parent: u64, start: Instant, end: Instant, count: u64) {
+    if !enabled() {
+        return;
+    }
+    emit(SpanEvent {
+        id: next_id(),
+        parent,
+        stage,
+        start_ns: ns_since_epoch(start),
+        end_ns: ns_since_epoch(end),
+        tid: 0,
+        count,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The tracer is process-global: tests that flip it must not overlap.
+    // (Integration-level invariants live in rust/tests/obs.rs behind the
+    // same discipline; these unit tests cover the guard mechanics.)
+    static TRACER: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disabled_guards_are_free_and_silent() {
+        let _g = TRACER.lock().unwrap();
+        disable();
+        let before = NEXT_ID.load(Ordering::Relaxed);
+        {
+            let s = span(Stage::Decode);
+            assert_eq!(s.id(), 0);
+            assert!(ManualSpan::begin(Stage::Request).is_none());
+            record(Stage::QueueWait, 0, Instant::now(), Instant::now(), 0);
+        }
+        // No ids were allocated: the disabled path never got past the
+        // one relaxed load.
+        assert_eq!(NEXT_ID.load(Ordering::Relaxed), before);
+    }
+
+    #[test]
+    fn nesting_and_cross_thread_parents() {
+        let _g = TRACER.lock().unwrap();
+        enable();
+        let req = ManualSpan::begin(Stage::Request).expect("enabled");
+        let req_id = req.id();
+        let exec_id;
+        let dec_id;
+        {
+            let outer = span_under(Stage::Execute, req_id, 0);
+            exec_id = outer.id();
+            assert_ne!(exec_id, 0);
+            let mut inner = span(Stage::Decode);
+            dec_id = inner.id();
+            inner.set_count(42);
+        }
+        req.finish_with(1);
+        disable();
+        // Other lib tests may have recorded spans of their own while
+        // tracing was on — select ours by id, don't count.
+        let events = drain();
+        let by_id = |id: u64| events.iter().find(|e| e.id == id).copied().unwrap();
+        let (reqe, exec, dec) = (by_id(req_id), by_id(exec_id), by_id(dec_id));
+        assert_eq!(exec.parent, req_id);
+        assert_eq!(exec.stage, Stage::Execute);
+        assert_eq!(dec.parent, exec_id, "inner span nests under the open guard");
+        assert_eq!(dec.count, 42);
+        assert_eq!(reqe.stage, Stage::Request);
+        assert_eq!(reqe.count, 1);
+        for e in [reqe, exec, dec] {
+            assert!(e.end_ns >= e.start_ns);
+            assert_ne!(e.tid, 0);
+        }
+    }
+}

@@ -18,15 +18,19 @@
 
 use std::collections::VecDeque;
 use std::ops::Range;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
+use crate::obs::{
+    self, Counter, Gauge, LatencyHistogram, ManualSpan, MetricsRegistry, RegistrySnapshot,
+    Stage,
+};
 use crate::store::StoreHandle;
 
-use super::metrics::{LatencyHistogram, MetricsSnapshot};
+use super::metrics::MetricsSnapshot;
 use super::prefetch::{HotSet, PrefetchConfig};
 use super::singleflight::{ChunkResult, SingleFlight};
 
@@ -126,12 +130,14 @@ impl Ticket {
     }
 }
 
-/// A queued request with its admission timestamp and response slot.
+/// A queued request with its admission timestamp, response slot and
+/// (when tracing is on) the request span carried across to the worker.
 struct Queued {
     request: Request,
     slot: Arc<Slot>,
     enqueued: Instant,
     deadline: Option<Duration>,
+    trace_span: Option<ManualSpan>,
 }
 
 /// State shared by the engine handle, its workers and the prefetcher.
@@ -146,14 +152,28 @@ struct Shared {
     /// The prefetch thread parks here between scans so shutdown can wake
     /// it immediately instead of waiting out the interval.
     prefetch_park: (Mutex<()>, Condvar),
-    // Counters (see MetricsSnapshot for semantics).
-    submitted: AtomicU64,
-    completed: AtomicU64,
-    shed_queue_full: AtomicU64,
-    shed_deadline: AtomicU64,
-    coalesced: AtomicU64,
-    queue_depth_max: AtomicUsize,
-    latency: LatencyHistogram,
+    /// `serving.*` metrics (DESIGN.md §10 glossary); the fields below are
+    /// pre-registered handles so the hot path never takes the map lock.
+    registry: MetricsRegistry,
+    submitted: Arc<Counter>,
+    completed: Arc<Counter>,
+    shed_queue_full: Arc<Counter>,
+    shed_deadline: Arc<Counter>,
+    coalesced: Arc<Counter>,
+    queue_depth: Arc<Gauge>,
+    queue_depth_max: Arc<Gauge>,
+    latency: Arc<LatencyHistogram>,
+}
+
+impl Shared {
+    /// Refresh the live-queue gauge, then snapshot `serving.*` and fold
+    /// in the store's `store.*` registry view.
+    fn registry_snapshot(&self) -> RegistrySnapshot {
+        self.queue_depth.set(self.queue.lock().expect("serving queue lock").len() as u64);
+        let mut snap = self.registry.snapshot();
+        snap.merge(&self.store.registry_snapshot());
+        snap
+    }
 }
 
 /// A batching, admission-controlled serving layer over one
@@ -177,6 +197,7 @@ impl ServingEngine {
             ));
         }
         let prefetch_cfg = config.prefetch.clone();
+        let registry = MetricsRegistry::new();
         let shared = Arc::new(Shared {
             store,
             config,
@@ -186,13 +207,15 @@ impl ServingEngine {
             flight: SingleFlight::new(),
             hotset: HotSet::new(),
             prefetch_park: (Mutex::new(()), Condvar::new()),
-            submitted: AtomicU64::new(0),
-            completed: AtomicU64::new(0),
-            shed_queue_full: AtomicU64::new(0),
-            shed_deadline: AtomicU64::new(0),
-            coalesced: AtomicU64::new(0),
-            queue_depth_max: AtomicUsize::new(0),
-            latency: LatencyHistogram::new(),
+            submitted: registry.counter("serving.submitted"),
+            completed: registry.counter("serving.completed"),
+            shed_queue_full: registry.counter("serving.shed_queue_full"),
+            shed_deadline: registry.counter("serving.shed_deadline"),
+            coalesced: registry.counter("serving.coalesced_decodes"),
+            queue_depth: registry.gauge("serving.queue_depth"),
+            queue_depth_max: registry.gauge("serving.queue_depth_max"),
+            latency: registry.histogram("serving.latency_ns"),
+            registry,
         });
         let workers = (0..shared.config.workers)
             .map(|i| {
@@ -228,12 +251,22 @@ impl ServingEngine {
         deadline: Option<Duration>,
     ) -> Result<Ticket> {
         let shared = &self.shared;
+        // Request span: begun here, carried to the worker, finished when
+        // the response slot fills (or at shed). Admit covers this
+        // function's admission-control section, under the request.
+        let trace_span = ManualSpan::begin(Stage::Request);
+        let req_id = trace_span.as_ref().map(|s| s.id()).unwrap_or(0);
+        let admit = obs::span_under(Stage::Admit, req_id, 0);
         let slot = Arc::new(Slot::new());
         let depth = {
             let mut queue = shared.queue.lock().expect("serving queue lock");
             if queue.len() >= shared.config.queue_depth {
                 drop(queue);
-                shared.shed_queue_full.fetch_add(1, Ordering::Relaxed);
+                shared.shed_queue_full.inc();
+                drop(admit);
+                if let Some(span) = trace_span {
+                    span.finish();
+                }
                 return Err(Error::Overloaded {
                     queue_depth: shared.config.queue_depth,
                     deadline_expired: false,
@@ -244,11 +277,12 @@ impl ServingEngine {
                 slot: Arc::clone(&slot),
                 enqueued: Instant::now(),
                 deadline,
+                trace_span,
             });
             queue.len()
         };
-        shared.queue_depth_max.fetch_max(depth, Ordering::Relaxed);
-        shared.submitted.fetch_add(1, Ordering::Relaxed);
+        shared.queue_depth_max.set_max(depth as u64);
+        shared.submitted.inc();
         shared.queue_cv.notify_one();
         Ok(Ticket { slot })
     }
@@ -283,19 +317,30 @@ impl ServingEngine {
         &self.shared.config
     }
 
-    /// Point-in-time serving counters.
+    /// Point-in-time serving counters — a [`MetricsSnapshot`] view over
+    /// the engine's `serving.*` registry.
     pub fn metrics(&self) -> MetricsSnapshot {
-        let shared = &self.shared;
-        MetricsSnapshot {
-            submitted: shared.submitted.load(Ordering::Relaxed),
-            completed: shared.completed.load(Ordering::Relaxed),
-            shed_queue_full: shared.shed_queue_full.load(Ordering::Relaxed),
-            shed_deadline: shared.shed_deadline.load(Ordering::Relaxed),
-            coalesced_decodes: shared.coalesced.load(Ordering::Relaxed),
-            queue_depth: shared.queue.lock().expect("serving queue lock").len(),
-            queue_depth_max: shared.queue_depth_max.load(Ordering::Relaxed),
-            latency: shared.latency.snapshot(),
-        }
+        self.shared.queue_depth.set(
+            self.shared.queue.lock().expect("serving queue lock").len() as u64,
+        );
+        MetricsSnapshot::from_snapshot(&self.shared.registry.snapshot())
+    }
+
+    /// The full registry snapshot: this engine's `serving.*` metrics
+    /// merged with the store's `store.*` view — what the Prometheus and
+    /// JSONL exporters serialize.
+    pub fn registry_snapshot(&self) -> RegistrySnapshot {
+        self.shared.registry_snapshot()
+    }
+
+    /// A `'static` snapshot source for [`crate::obs::SnapshotStream`]:
+    /// clones the shared state so the stream thread outlives this
+    /// borrow.
+    pub fn snapshot_source(
+        &self,
+    ) -> impl Fn() -> RegistrySnapshot + Send + Sync + 'static {
+        let shared = Arc::clone(&self.shared);
+        move || shared.registry_snapshot()
     }
 
     /// The store's read counters with this engine's serving counters
@@ -303,9 +348,9 @@ impl ServingEngine {
     /// `prefetched_chunks` is counted by the store itself).
     pub fn stats(&self) -> crate::store::ReadStats {
         let mut stats = self.shared.store.stats();
-        stats.coalesced_reads += self.shared.coalesced.load(Ordering::Relaxed);
-        stats.shed_requests += self.shared.shed_queue_full.load(Ordering::Relaxed)
-            + self.shared.shed_deadline.load(Ordering::Relaxed);
+        stats.coalesced_reads += self.shared.coalesced.get();
+        stats.shed_requests +=
+            self.shared.shed_queue_full.get() + self.shared.shed_deadline.get();
         stats
     }
 }
@@ -349,20 +394,34 @@ fn worker_loop(shared: &Shared) {
                 queue = shared.queue_cv.wait(queue).expect("serving queue lock");
             }
         };
+        let req_id = item.trace_span.as_ref().map(|s| s.id()).unwrap_or(0);
+        // Queue wait: from the submit-side enqueue instant to now, on
+        // this worker. An enqueue that predates the trace epoch clamps.
+        obs::record(Stage::QueueWait, req_id, item.enqueued, Instant::now(), 0);
         if let Some(deadline) = item.deadline {
             if item.enqueued.elapsed() >= deadline {
-                shared.shed_deadline.fetch_add(1, Ordering::Relaxed);
+                shared.shed_deadline.inc();
                 item.slot.fill(Err(Error::Overloaded {
                     queue_depth: shared.config.queue_depth,
                     deadline_expired: true,
                 }));
+                if let Some(span) = item.trace_span {
+                    span.finish();
+                }
                 continue;
             }
         }
-        let result = execute(shared, &item.request);
+        let result = {
+            let _exec = obs::span_under(Stage::Execute, req_id, 0);
+            execute(shared, &item.request)
+        };
         shared.latency.record(item.enqueued.elapsed());
-        shared.completed.fetch_add(1, Ordering::Relaxed);
+        shared.completed.inc();
+        let served = result.as_ref().map(|v| v.len() as u64).unwrap_or(0);
         item.slot.fill(result);
+        if let Some(span) = item.trace_span {
+            span.finish_with(served);
+        }
     }
 }
 
@@ -384,11 +443,15 @@ fn decode_chunk(shared: &Shared, tensor: &str, chunk: usize) -> Result<Arc<Vec<u
     if shared.config.prefetch.is_some() {
         shared.hotset.touch(tensor, chunk);
     }
+    // One span per (tensor, chunk) resolution: the leader's decode or a
+    // follower's wait. The store's ChunkIo/Decode spans nest under it on
+    // the leader's thread.
+    let _sf = obs::span(Stage::SingleFlight);
     if shared.config.coalescing {
         let (result, coalesced) =
             shared.flight.run(tensor, chunk, || shared.store.get_chunk(tensor, chunk));
         if coalesced {
-            shared.coalesced.fetch_add(1, Ordering::Relaxed);
+            shared.coalesced.inc();
         }
         result
     } else {
@@ -422,6 +485,7 @@ fn assemble_range(shared: &Shared, tensor: &str, range: Range<u64>) -> Result<Ar
             return decode_chunk(shared, tensor, first);
         }
     }
+    let mut copy_out = obs::span(Stage::CopyOut);
     let mut out = Vec::with_capacity((range.end - range.start) as usize);
     for ci in first..=last {
         let part = decode_chunk(shared, tensor, ci)?;
@@ -430,6 +494,7 @@ fn assemble_range(shared: &Shared, tensor: &str, range: Range<u64>) -> Result<Ar
         let hi = range.end.min(covered.end) - covered.start;
         out.extend_from_slice(&part[lo as usize..hi as usize]);
     }
+    copy_out.set_count(out.len() as u64);
     Ok(Arc::new(out))
 }
 
@@ -452,7 +517,15 @@ fn prefetch_loop(shared: &Shared, cfg: &PrefetchConfig) {
         if shared.shutdown.load(Ordering::Acquire) {
             return;
         }
-        for (tensor, chunk, _touches) in shared.hotset.hottest(cfg.top_k, cfg.min_touches) {
+        let hottest = shared.hotset.hottest(cfg.top_k, cfg.min_touches);
+        // Span only non-empty sweeps: an idle 2ms-interval prefetcher
+        // would otherwise flood the trace with empty scans.
+        let _scan = if hottest.is_empty() {
+            None
+        } else {
+            Some(obs::span_n(Stage::Prefetch, hottest.len() as u64))
+        };
+        for (tensor, chunk, _touches) in hottest {
             if shared.shutdown.load(Ordering::Acquire) {
                 return;
             }

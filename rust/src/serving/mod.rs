@@ -52,13 +52,20 @@
 //!
 //! # Observability
 //!
-//! [`ServingEngine::metrics`] snapshots queue depth (current + peak),
-//! shed counts (queue-full vs deadline), coalesced decodes and a
-//! submit-to-response latency histogram (p50/p95/p99, ~25% bucket
-//! error); [`ServingEngine::stats`] returns the store's
-//! [`crate::store::ReadStats`] with the serving counters
-//! (`coalesced_reads`, `shed_requests`) folded in next to the store's
-//! own `prefetched_chunks`.
+//! All serving telemetry lives in the engine's
+//! [`crate::obs::MetricsRegistry`] under `serving.*` names (glossary:
+//! DESIGN.md §10); [`ServingEngine::metrics`] and
+//! [`ServingEngine::stats`] are views over one registry snapshot —
+//! queue depth (current + peak), shed counts (queue-full vs deadline),
+//! coalesced decodes, a submit-to-response latency histogram
+//! (p50/p95/p99, ~25% bucket error), and the store's
+//! [`crate::store::ReadStats`] with the serving counters folded in.
+//! [`ServingEngine::registry_snapshot`] merges the store's `store.*`
+//! counters for the exporters ([`crate::obs::prometheus_text`],
+//! [`crate::obs::SnapshotStream`]); with the span tracer enabled
+//! (`serve-bench --trace`) every request records an
+//! admit → queue-wait → execute → single-flight → chunk-IO → decode →
+//! copy-out span tree ([`crate::obs::span`]).
 //!
 //! # Submodules
 //!

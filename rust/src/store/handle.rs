@@ -137,6 +137,16 @@ impl StoreHandle {
         }
     }
 
+    /// `store.*` metrics snapshot (sharded: merged across shards). The
+    /// serving engine folds this into its own `serving.*` snapshot so
+    /// exporters see one namespace.
+    pub fn registry_snapshot(&self) -> crate::obs::RegistrySnapshot {
+        match self {
+            StoreHandle::Single(r) => r.registry_snapshot(),
+            StoreHandle::Sharded(r) => r.registry_snapshot(),
+        }
+    }
+
     /// Zero the read counters.
     pub fn reset_stats(&self) {
         match self {

@@ -55,6 +55,14 @@
 //! (batching, coalescing, admission control, prefetch) on top of this
 //! surface without the store knowing.
 //!
+//! Telemetry: each reader owns a [`crate::obs::MetricsRegistry`] with
+//! `store.*` counters and each writer one with `ingest.*` counters
+//! (glossary: DESIGN.md §10); `ReadStats` / `PackStats` are views over
+//! registry snapshots, chunk IO and decode record
+//! [`crate::obs::span`]s when tracing is on, and
+//! `StoreHandle::registry_snapshot` merges across shards for the
+//! exporters.
+//!
 //! # Submodules
 //!
 //! - [`format`] — single-file on-disk layout: magic, chunk blobs, footer

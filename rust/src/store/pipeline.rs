@@ -113,7 +113,10 @@ pub(crate) fn encode_zoo_model(
     encode_threads: usize,
 ) -> Result<Vec<EncodedTensor>> {
     let t0 = Instant::now();
-    let trace = ModelTrace::synthesize(cfg, sample_cap, PROFILE_SAMPLES, EVAL_SEED);
+    let trace = {
+        let _synth = crate::obs::span(crate::obs::Stage::Synth);
+        ModelTrace::synthesize(cfg, sample_cap, PROFILE_SAMPLES, EVAL_SEED)
+    };
     let synth_nanos = t0.elapsed().as_nanos() as u64;
     let mut out = Vec::with_capacity(trace.layers.len() * 2);
     for l in &trace.layers {

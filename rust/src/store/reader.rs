@@ -17,12 +17,12 @@
 use std::borrow::Cow;
 use std::ops::Range;
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::apack::container::BodyView;
 use crate::error::{Error, Result};
+use crate::obs::{self, Counter, MetricsRegistry, RegistrySnapshot, Stage};
 use crate::util::par_map;
 
 use super::cache::{ChunkCache, ChunkKey, ScratchPool};
@@ -110,6 +110,29 @@ impl ReadStats {
         }
     }
 
+    /// Build the stats view from a registry snapshot holding `store.*`
+    /// names (DESIGN.md §10 glossary). `serving.*` names are folded in
+    /// when present (snapshots that came through a
+    /// `serving::ServingEngine` carry them; a bare reader's do not, so
+    /// those fields read 0 exactly as before the registry refactor).
+    pub fn from_snapshot(backend: Backend, snap: &RegistrySnapshot) -> Self {
+        ReadStats {
+            backend,
+            bytes_read: snap.counter("store.bytes_read"),
+            chunks_decoded: snap.counter("store.chunks_decoded"),
+            cache_hits: snap.counter("store.cache_hits"),
+            cache_misses: snap.counter("store.cache_misses"),
+            prefetched_chunks: snap.counter("store.prefetched_chunks"),
+            coalesced_reads: snap.counter("serving.coalesced_decodes"),
+            shed_requests: snap.counter("serving.shed_queue_full")
+                + snap.counter("serving.shed_deadline"),
+            values_decoded: snap.counter("store.values_decoded"),
+            decode_nanos: snap.counter("store.decode_nanos"),
+            scratch_acquired: snap.counter("store.scratch_acquired"),
+            scratch_reused: snap.counter("store.scratch_reused"),
+        }
+    }
+
     /// Fold another reader's counters into this one (sharded stores
     /// aggregate per-shard readers; backends match by construction).
     pub fn merge(&mut self, other: &ReadStats) {
@@ -157,12 +180,16 @@ pub struct StoreReader {
     /// Decode buffers for every read path (see DESIGN.md §8): `verify`
     /// releases directly, cached chunks return via eviction + `recycle`.
     scratch: ScratchPool,
-    chunks_decoded: AtomicU64,
-    cache_hits: AtomicU64,
-    cache_misses: AtomicU64,
-    prefetched_chunks: AtomicU64,
-    values_decoded: AtomicU64,
-    decode_nanos: AtomicU64,
+    /// `store.*` metrics (DESIGN.md §10). The hot path holds the
+    /// pre-resolved [`Counter`] handles below — the registry map lock is
+    /// only taken at open and snapshot time.
+    registry: MetricsRegistry,
+    chunks_decoded: Arc<Counter>,
+    cache_hits: Arc<Counter>,
+    cache_misses: Arc<Counter>,
+    prefetched_chunks: Arc<Counter>,
+    values_decoded: Arc<Counter>,
+    decode_nanos: Arc<Counter>,
 }
 
 impl StoreReader {
@@ -243,18 +270,20 @@ impl StoreReader {
         let scratch_buffers =
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4) * 2;
         let scratch_retained = cache_values.max(1 << 16);
+        let registry = MetricsRegistry::new();
         Ok(Self {
             source,
             index,
             chunk_region_end: trailer.footer_offset,
             cache: Mutex::new(ChunkCache::new(cache_values)),
             scratch: ScratchPool::new(scratch_buffers, scratch_retained),
-            chunks_decoded: AtomicU64::new(0),
-            cache_hits: AtomicU64::new(0),
-            cache_misses: AtomicU64::new(0),
-            prefetched_chunks: AtomicU64::new(0),
-            values_decoded: AtomicU64::new(0),
-            decode_nanos: AtomicU64::new(0),
+            chunks_decoded: registry.counter("store.chunks_decoded"),
+            cache_hits: registry.counter("store.cache_hits"),
+            cache_misses: registry.counter("store.cache_misses"),
+            prefetched_chunks: registry.counter("store.prefetched_chunks"),
+            values_decoded: registry.counter("store.values_decoded"),
+            decode_nanos: registry.counter("store.decode_nanos"),
+            registry,
         })
     }
 
@@ -291,6 +320,7 @@ impl StoreReader {
     fn read_chunk_bytes(&self, t: &TensorMeta, ci: usize) -> Result<Cow<'_, [u8]>> {
         let c = &t.chunks[ci];
         debug_assert!(c.offset + c.len <= self.chunk_region_end);
+        let _io = obs::span_n(Stage::ChunkIo, c.len);
         let blob: Cow<'_, [u8]> = match self.source.slice_at(c.offset, c.len as usize) {
             Some(slice) => Cow::Borrowed(slice),
             None => {
@@ -326,13 +356,13 @@ impl StoreReader {
         let mut buf = self.scratch.acquire(n);
         let t0 = Instant::now();
         let decoded = view.decode_into(&t.table, &mut buf);
-        self.decode_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.decode_nanos.add(t0.elapsed().as_nanos() as u64);
         if let Err(e) = decoded {
             self.scratch.release(buf);
             return Err(e);
         }
-        self.chunks_decoded.fetch_add(1, Ordering::Relaxed);
-        self.values_decoded.fetch_add(n as u64, Ordering::Relaxed);
+        self.chunks_decoded.inc();
+        self.values_decoded.add(n as u64);
         Ok(buf)
     }
 
@@ -349,10 +379,10 @@ impl StoreReader {
     fn chunk_values(&self, ti: usize, ci: usize) -> Result<Arc<Vec<u32>>> {
         let key: ChunkKey = (ti as u32, ci as u32);
         if let Some(hit) = self.cache.lock().expect("store cache lock").get(key) {
-            self.cache_hits.fetch_add(1, Ordering::Relaxed);
+            self.cache_hits.inc();
             return Ok(hit);
         }
-        self.cache_misses.fetch_add(1, Ordering::Relaxed);
+        self.cache_misses.inc();
         let t = &self.index.tensors[ti];
         let values = Arc::new(self.decode_chunk_scratch(t, ci)?);
         self.cache_insert(key, &values);
@@ -387,7 +417,7 @@ impl StoreReader {
             }
         }
         let values = Arc::new(self.decode_chunk_scratch(t, ci)?);
-        self.prefetched_chunks.fetch_add(1, Ordering::Relaxed);
+        self.prefetched_chunks.inc();
         self.cache_insert(key, &values);
         Ok(true)
     }
@@ -437,6 +467,7 @@ impl StoreReader {
         let parts: Result<Vec<Arc<Vec<u32>>>> =
             par_map(&indices, |&ci| self.chunk_values(ti, ci)).into_iter().collect();
         let parts = parts?;
+        let mut copy_out = obs::span(Stage::CopyOut);
         let mut out = Vec::with_capacity((range.end - range.start) as usize);
         for (&ci, part) in indices.iter().zip(&parts) {
             let covered = t.chunk_value_range(ci);
@@ -444,6 +475,7 @@ impl StoreReader {
             let hi = range.end.min(covered.end) - covered.start;
             out.extend_from_slice(&part[lo as usize..hi as usize]);
         }
+        copy_out.set_count(out.len() as u64);
         Ok(out)
     }
 
@@ -479,34 +511,30 @@ impl StoreReader {
         })
     }
 
-    /// Snapshot the cumulative read counters.
+    /// Snapshot this reader's `store.*` metrics. The IO source and the
+    /// scratch pool own their byte/draw atomics (they predate the
+    /// registry and are shared with non-store users), so their live
+    /// values are overlaid into the snapshot here — every exporter and
+    /// stats view downstream sees one coherent namespace.
+    pub fn registry_snapshot(&self) -> RegistrySnapshot {
+        let mut snap = self.registry.snapshot();
+        snap.counters.insert("store.bytes_read".to_string(), self.source.bytes_read());
+        snap.counters.insert("store.scratch_acquired".to_string(), self.scratch.acquired());
+        snap.counters.insert("store.scratch_reused".to_string(), self.scratch.reused());
+        snap
+    }
+
+    /// Snapshot the cumulative read counters (a [`ReadStats`] view over
+    /// [`StoreReader::registry_snapshot`]).
     pub fn stats(&self) -> ReadStats {
-        ReadStats {
-            backend: self.source.backend(),
-            bytes_read: self.source.bytes_read(),
-            chunks_decoded: self.chunks_decoded.load(Ordering::Relaxed),
-            cache_hits: self.cache_hits.load(Ordering::Relaxed),
-            cache_misses: self.cache_misses.load(Ordering::Relaxed),
-            prefetched_chunks: self.prefetched_chunks.load(Ordering::Relaxed),
-            coalesced_reads: 0,
-            shed_requests: 0,
-            values_decoded: self.values_decoded.load(Ordering::Relaxed),
-            decode_nanos: self.decode_nanos.load(Ordering::Relaxed),
-            scratch_acquired: self.scratch.acquired(),
-            scratch_reused: self.scratch.reused(),
-        }
+        ReadStats::from_snapshot(self.source.backend(), &self.registry_snapshot())
     }
 
     /// Zero the read counters (does not touch the cache; pooled scratch
     /// buffers stay pooled).
     pub fn reset_stats(&self) {
         self.source.reset_bytes_read();
-        self.chunks_decoded.store(0, Ordering::Relaxed);
-        self.cache_hits.store(0, Ordering::Relaxed);
-        self.cache_misses.store(0, Ordering::Relaxed);
-        self.prefetched_chunks.store(0, Ordering::Relaxed);
-        self.values_decoded.store(0, Ordering::Relaxed);
-        self.decode_nanos.store(0, Ordering::Relaxed);
+        self.registry.reset();
         self.scratch.reset_counters();
     }
 

@@ -432,6 +432,16 @@ impl ShardedStoreReader {
         agg
     }
 
+    /// Merged `store.*` metrics snapshot across shards (counters sum; see
+    /// [`crate::obs::RegistrySnapshot::merge`]).
+    pub fn registry_snapshot(&self) -> crate::obs::RegistrySnapshot {
+        let mut agg = crate::obs::RegistrySnapshot::default();
+        for r in &self.readers {
+            agg.merge(&r.registry_snapshot());
+        }
+        agg
+    }
+
     /// Zero every shard's read counters.
     pub fn reset_stats(&self) {
         for r in &self.readers {

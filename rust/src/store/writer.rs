@@ -9,6 +9,7 @@
 use std::fs::File;
 use std::io::{BufWriter, Write};
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::apack::container::encode_body;
@@ -17,6 +18,7 @@ use crate::apack::{Histogram, SymbolTable};
 use crate::coordinator::PartitionPolicy;
 use crate::error::{Error, Result};
 use crate::models::zoo::ModelConfig;
+use crate::obs::{self, rates, Counter, MetricsRegistry, RegistrySnapshot, Stage};
 use crate::util::par_map_with;
 
 use super::format::{crc32, trailer_bytes, ChunkMeta, StoreIndex, TensorMeta, STORE_MAGIC};
@@ -48,6 +50,22 @@ pub struct PackStats {
 }
 
 impl PackStats {
+    /// Build the stats view from a registry snapshot holding `ingest.*`
+    /// names (DESIGN.md §10 glossary). `wall_nanos` is not a counter —
+    /// the writer stamps it from its own clock after taking the view.
+    pub fn from_snapshot(snap: &RegistrySnapshot) -> Self {
+        PackStats {
+            values: snap.counter("ingest.values"),
+            raw_bits: snap.counter("ingest.raw_bits"),
+            written_bytes: snap.counter("ingest.written_bytes"),
+            synth_nanos: snap.counter("ingest.synth_nanos"),
+            tablegen_nanos: snap.counter("ingest.tablegen_nanos"),
+            encode_nanos: snap.counter("ingest.encode_nanos"),
+            write_nanos: snap.counter("ingest.write_nanos"),
+            wall_nanos: 0,
+        }
+    }
+
     /// Fold another stats record in: stage times and volumes add, wall
     /// times take the max (shard writers run over the same wall clock).
     pub fn merge(&mut self, o: &PackStats) {
@@ -68,17 +86,17 @@ impl PackStats {
 
     /// Encode throughput over raw value bytes.
     pub fn encode_mb_per_s(&self) -> f64 {
-        mb_per_s(self.raw_bits / 8, self.encode_nanos)
+        rates::mb_per_s((self.raw_bits / 8) as f64, self.encode_nanos)
     }
 
     /// Append throughput over compressed bytes.
     pub fn write_mb_per_s(&self) -> f64 {
-        mb_per_s(self.written_bytes, self.write_nanos)
+        rates::mb_per_s(self.written_bytes as f64, self.write_nanos)
     }
 
     /// End-to-end packed values per second (wall time).
     pub fn values_per_s(&self) -> f64 {
-        self.values as f64 / (self.wall_nanos as f64 / 1e9).max(1e-12)
+        rates::per_sec(self.values as f64, self.wall_nanos)
     }
 
     /// The `store pack` footer line.
@@ -94,10 +112,6 @@ impl PackStats {
             self.write_mb_per_s()
         )
     }
-}
-
-fn mb_per_s(bytes: u64, nanos: u64) -> f64 {
-    bytes as f64 / 1e6 / (nanos as f64 / 1e9).max(1e-12)
 }
 
 /// One encoded chunk of an [`EncodedTensor`]: the
@@ -150,8 +164,14 @@ pub fn encode_tensor(
         None if values.is_empty() => SymbolTable::uniform(bits),
         None => {
             let t0 = Instant::now();
-            let hist = Histogram::from_values(bits, values);
-            let t = generate_table(&hist, kind, &TableGenConfig::for_bits(bits))?;
+            let hist = {
+                let _h = obs::span_n(Stage::Histogram, values.len() as u64);
+                Histogram::from_values(bits, values)
+            };
+            let t = {
+                let _tg = obs::span(Stage::TableGen);
+                generate_table(&hist, kind, &TableGenConfig::for_bits(bits))?
+            };
             tablegen_nanos = t0.elapsed().as_nanos() as u64;
             t
         }
@@ -164,10 +184,14 @@ pub fn encode_tensor(
         encode_threads
     };
     let t0 = Instant::now();
-    let bodies: Result<Vec<Vec<u8>>> =
+    // One Encode span per tensor (the per-chunk encode itself runs on
+    // whatever worker threads `par_map_with` picks).
+    let bodies: Result<Vec<Vec<u8>>> = {
+        let _enc = obs::span_n(Stage::Encode, values.len() as u64);
         par_map_with(&chunks, threads, |chunk| encode_body(&table, chunk))
             .into_iter()
-            .collect();
+            .collect()
+    };
     let bodies = bodies?;
     let encode_nanos = t0.elapsed().as_nanos() as u64;
     let chunks = chunks
@@ -218,7 +242,16 @@ pub struct StoreWriter {
     offset: u64,
     tensors: Vec<TensorMeta>,
     policy: PartitionPolicy,
-    stats: PackStats,
+    /// `ingest.*` metrics (DESIGN.md §10); [`PackStats`] is the view over
+    /// a snapshot of this registry at [`Self::finish`] time.
+    registry: MetricsRegistry,
+    values: Arc<Counter>,
+    raw_bits: Arc<Counter>,
+    written_bytes: Arc<Counter>,
+    synth_nanos: Arc<Counter>,
+    tablegen_nanos: Arc<Counter>,
+    encode_nanos: Arc<Counter>,
+    write_nanos: Arc<Counter>,
     created: Instant,
 }
 
@@ -230,12 +263,20 @@ impl StoreWriter {
         let file = File::create(path)?;
         let mut out = BufWriter::new(file);
         out.write_all(&STORE_MAGIC)?;
+        let registry = MetricsRegistry::new();
         Ok(Self {
             out,
             offset: STORE_MAGIC.len() as u64,
             tensors: Vec::new(),
             policy,
-            stats: PackStats::default(),
+            values: registry.counter("ingest.values"),
+            raw_bits: registry.counter("ingest.raw_bits"),
+            written_bytes: registry.counter("ingest.written_bytes"),
+            synth_nanos: registry.counter("ingest.synth_nanos"),
+            tablegen_nanos: registry.counter("ingest.tablegen_nanos"),
+            encode_nanos: registry.counter("ingest.encode_nanos"),
+            write_nanos: registry.counter("ingest.write_nanos"),
+            registry,
             created: Instant::now(),
         })
     }
@@ -290,6 +331,7 @@ impl StoreWriter {
     pub fn append_encoded(&mut self, t: EncodedTensor) -> Result<()> {
         self.validate_name(&t.name)?;
         let t0 = Instant::now();
+        let mut append = obs::span(Stage::Append);
         let mut metas = Vec::with_capacity(t.chunks.len());
         for chunk in &t.chunks {
             metas.push(ChunkMeta {
@@ -301,13 +343,16 @@ impl StoreWriter {
             self.out.write_all(&chunk.body)?;
             self.offset += chunk.body.len() as u64;
         }
-        self.stats.write_nanos += t0.elapsed().as_nanos() as u64;
-        self.stats.synth_nanos += t.synth_nanos;
-        self.stats.tablegen_nanos += t.tablegen_nanos;
-        self.stats.encode_nanos += t.encode_nanos;
-        self.stats.values += t.n_values;
-        self.stats.raw_bits += t.n_values * t.table.bits() as u64;
-        self.stats.written_bytes += metas.iter().map(|m| m.len).sum::<u64>();
+        let appended = metas.iter().map(|m| m.len).sum::<u64>();
+        append.set_count(appended);
+        drop(append);
+        self.write_nanos.add(t0.elapsed().as_nanos() as u64);
+        self.synth_nanos.add(t.synth_nanos);
+        self.tablegen_nanos.add(t.tablegen_nanos);
+        self.encode_nanos.add(t.encode_nanos);
+        self.values.add(t.n_values);
+        self.raw_bits.add(t.n_values * t.table.bits() as u64);
+        self.written_bytes.add(appended);
         self.tensors.push(TensorMeta {
             name: t.name,
             bits: t.table.bits(),
@@ -331,6 +376,12 @@ impl StoreWriter {
         self.tensors.len()
     }
 
+    /// Snapshot the writer's `ingest.*` metrics mid-pack (the JSONL
+    /// snapshot stream and `PackStats::from_snapshot` read this).
+    pub fn registry_snapshot(&self) -> RegistrySnapshot {
+        self.registry.snapshot()
+    }
+
     /// Write footer + trailer and flush. The file is only readable after
     /// this returns.
     pub fn finish(mut self) -> Result<StoreSummary> {
@@ -338,16 +389,20 @@ impl StoreWriter {
         let footer = index.to_bytes();
         let footer_offset = self.offset;
         let t0 = Instant::now();
-        self.out.write_all(&footer)?;
-        self.out.write_all(&trailer_bytes(
-            footer_offset,
-            footer.len() as u64,
-            crc32(&footer),
-            index.tensors.len() as u32,
-        ))?;
-        self.out.flush()?;
-        self.stats.write_nanos += t0.elapsed().as_nanos() as u64;
-        self.stats.wall_nanos = self.created.elapsed().as_nanos() as u64;
+        {
+            let _seal = obs::span_n(Stage::Seal, footer.len() as u64);
+            self.out.write_all(&footer)?;
+            self.out.write_all(&trailer_bytes(
+                footer_offset,
+                footer.len() as u64,
+                crc32(&footer),
+                index.tensors.len() as u32,
+            ))?;
+            self.out.flush()?;
+        }
+        self.write_nanos.add(t0.elapsed().as_nanos() as u64);
+        let mut pack = PackStats::from_snapshot(&self.registry.snapshot());
+        pack.wall_nanos = self.created.elapsed().as_nanos() as u64;
         let file_bytes =
             footer_offset + footer.len() as u64 + super::format::TRAILER_BYTES as u64;
         Ok(StoreSummary {
@@ -355,7 +410,7 @@ impl StoreWriter {
             chunks: index.tensors.iter().map(|t| t.chunks.len()).sum(),
             file_bytes,
             raw_bits: index.tensors.iter().map(|t| t.raw_bits()).sum(),
-            pack: self.stats,
+            pack,
         })
     }
 }

@@ -1,0 +1,310 @@
+//! Observability integration tests (ISSUE 6): metric invariants (counters
+//! monotonic, quantiles ordered), the disabled tracer recording nothing,
+//! span-tree well-formedness under a concurrent serving run, request
+//! coverage, and the exporters (Chrome trace JSON parses, Prometheus
+//! text, JSONL snapshot stream).
+//!
+//! The span tracer is process-global, and libtest runs `#[test]` fns on
+//! parallel threads — every test that enables/drains the tracer holds
+//! [`TRACER`] for its whole body so concurrent tests cannot steal each
+//! other's spans.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use apack_repro::apack::tablegen::TensorKind;
+use apack_repro::coordinator::PartitionPolicy;
+use apack_repro::models::distributions::ValueProfile;
+use apack_repro::obs::{self, rates, LatencyHistogram, MetricsRegistry, SnapshotStream, Stage};
+use apack_repro::serving::{ServingConfig, ServingEngine};
+use apack_repro::store::{StoreHandle, StoreWriter};
+use apack_repro::util::json::Json;
+use apack_repro::util::Rng64;
+
+/// Global-tracer serialization (see module docs).
+static TRACER: Mutex<()> = Mutex::new(());
+
+fn tracer_lock() -> MutexGuard<'static, ()> {
+    let guard = TRACER.lock().unwrap_or_else(|e| e.into_inner());
+    obs::disable();
+    obs::clear();
+    obs::drain();
+    guard
+}
+
+fn tensor_values(n: usize, seed: u64) -> Vec<u32> {
+    ValueProfile::ReluActivation { sparsity: 0.5, q: 0.93, noise_floor: 0.01 }
+        .sample(8, n, seed)
+}
+
+/// Pack a small single-file store for the serving/reader tests.
+fn build_store(
+    tag: &str,
+    n_tensors: usize,
+    n_values: usize,
+) -> (PathBuf, HashMap<String, Vec<u32>>) {
+    let path = std::env::temp_dir()
+        .join(format!("apack_obs_{}_{tag}.apackstore", std::process::id()));
+    let policy = PartitionPolicy { substreams: 8, min_per_stream: 256 };
+    let tensors: Vec<(String, Vec<u32>)> = (0..n_tensors)
+        .map(|i| (format!("t{i}"), tensor_values(n_values, 9100 + i as u64)))
+        .collect();
+    let mut writer = StoreWriter::create(&path, policy).unwrap();
+    for (name, values) in &tensors {
+        writer.add_tensor(name, 8, values, TensorKind::Activations).unwrap();
+    }
+    writer.finish().unwrap();
+    (path, tensors.into_iter().collect())
+}
+
+fn cleanup(path: &PathBuf) {
+    std::fs::remove_file(path).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Metric invariants.
+
+/// Registry counters only move up, under concurrent writers, and
+/// successive snapshots observe non-decreasing values.
+#[test]
+fn counters_are_monotonic_under_concurrency() {
+    let registry = MetricsRegistry::new();
+    let c = registry.counter("test.ops");
+    let done = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    std::thread::scope(|scope| {
+        for _ in 0..4 {
+            let c = Arc::clone(&c);
+            let done = Arc::clone(&done);
+            scope.spawn(move || {
+                while !done.load(std::sync::atomic::Ordering::Relaxed) {
+                    c.inc();
+                }
+            });
+        }
+        let mut prev = 0u64;
+        for _ in 0..200 {
+            let now = registry.snapshot().counter("test.ops");
+            assert!(now >= prev, "counter went backwards: {now} < {prev}");
+            prev = now;
+        }
+        done.store(true, std::sync::atomic::Ordering::Relaxed);
+    });
+    assert!(registry.snapshot().counter("test.ops") > 0);
+}
+
+/// The shared histogram keeps its quantiles ordered (p50 ≤ p95 ≤ p99 ≤
+/// max) on skewed and uniform inputs alike.
+#[test]
+fn histogram_quantiles_are_ordered() {
+    let h = LatencyHistogram::new();
+    let mut rng = Rng64::new(0x0B5);
+    for _ in 0..5000 {
+        // Heavy-tailed: mostly microseconds, occasional milliseconds.
+        let ns = if rng.chance(0.95) { 500 + rng.below(20_000) } else { rng.below(5_000_000) };
+        h.record(Duration::from_nanos(ns));
+    }
+    let s = h.snapshot();
+    assert_eq!(s.count, 5000);
+    assert!(
+        s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max,
+        "quantiles out of order: {}",
+        s.render()
+    );
+    assert!(s.mean <= s.max);
+}
+
+/// `rates` helpers (deduped from eval + writer): sane values, no division
+/// by zero.
+#[test]
+fn rates_helpers_are_sane() {
+    assert!((rates::per_sec(1000.0, 1_000_000_000) - 1000.0).abs() < 1e-9);
+    assert!((rates::mb_per_s(1_000_000.0, 1_000_000_000) - 1.0).abs() < 1e-9);
+    assert!((rates::gb_per_s(1_000_000_000.0, 1_000_000_000) - 1.0).abs() < 1e-9);
+    // Zero-duration measurements clamp instead of producing inf/NaN.
+    assert!(rates::per_sec(1000.0, 0).is_finite());
+}
+
+// ---------------------------------------------------------------------------
+// Tracer behavior.
+
+/// With the tracer disabled (the default), instrumented hot paths record
+/// nothing — a full pack + read cycle leaves the ring buffers empty.
+#[test]
+fn disabled_tracer_records_zero_events() {
+    let _g = tracer_lock();
+    let (path, reference) = build_store("disabled", 2, 8_000);
+    let store = StoreHandle::open(&path).unwrap();
+    for (name, values) in &reference {
+        assert_eq!(&store.get_tensor(name).unwrap(), values);
+    }
+    drop(store);
+    cleanup(&path);
+    assert!(!obs::enabled());
+    assert_eq!(obs::drain().len(), 0, "disabled tracer must record nothing");
+}
+
+/// Concurrent serving with tracing on: the drained span forest is
+/// well-formed (every span's parent is another drained span or the root,
+/// end ≥ start, one Request span per submitted request, the expected
+/// stages present) and direct children cover most of each request's wall
+/// clock. The release-build `serve-bench --trace` run in CI holds the
+/// stricter ≥95% acceptance bar; a debug-build test box gets headroom.
+#[test]
+fn concurrent_serve_span_tree_is_well_formed() {
+    let _g = tracer_lock();
+    let (path, reference) = build_store("serve", 3, 12_000);
+    let store = Arc::new(StoreHandle::open(&path).unwrap());
+    let engine = ServingEngine::start(
+        Arc::clone(&store),
+        ServingConfig {
+            workers: 3,
+            queue_depth: 256,
+            coalescing: true,
+            deadline: None,
+            prefetch: None,
+        },
+    )
+    .unwrap();
+    let names: Vec<String> = reference.keys().cloned().collect();
+
+    obs::enable();
+    let clients = 4usize;
+    let requests = 25usize;
+    std::thread::scope(|scope| {
+        for tid in 0..clients {
+            let engine = &engine;
+            let reference = &reference;
+            let names = &names;
+            scope.spawn(move || {
+                let mut rng = Rng64::new(0x0B5E + tid as u64);
+                for _ in 0..requests {
+                    let name = &names[rng.below(names.len() as u64) as usize];
+                    let n = reference[name].len() as u64;
+                    let lo = rng.below(n);
+                    let hi = (lo + 1 + rng.below(2048)).min(n);
+                    let got = engine.get_range(name, lo..hi).unwrap();
+                    assert_eq!(got[..], reference[name][lo as usize..hi as usize]);
+                }
+            });
+        }
+    });
+    // One full-tensor read: spans several chunks, so the multi-chunk
+    // assembly (CopyOut) path is exercised deterministically.
+    assert_eq!(&*engine.get_tensor(&names[0]).unwrap(), &reference[&names[0]]);
+    let snap = engine.registry_snapshot();
+    drop(engine);
+    drop(store);
+    cleanup(&path);
+    obs::disable();
+    let events = obs::drain();
+
+    // Registry view agrees with the workload (clients × requests plus the
+    // full-tensor read above).
+    let total = (clients * requests) as u64 + 1;
+    assert_eq!(snap.counter("serving.submitted"), total);
+    assert_eq!(snap.counter("serving.completed"), total);
+    assert_eq!(snap.hist("serving.latency_ns").count, total);
+
+    // Forest well-formedness.
+    let ids: std::collections::BTreeSet<u64> = events.iter().map(|e| e.id).collect();
+    assert_eq!(ids.len(), events.len(), "span ids must be unique");
+    for e in &events {
+        assert!(e.id != 0, "recorded span must have a nonzero id");
+        assert!(e.end_ns >= e.start_ns, "span {} ends before it starts", e.id);
+        assert!(
+            e.parent == 0 || ids.contains(&e.parent),
+            "span {} has dangling parent {}",
+            e.id,
+            e.parent
+        );
+    }
+    let n_stage = |s: Stage| events.iter().filter(|e| e.stage == s).count() as u64;
+    assert_eq!(n_stage(Stage::Request), total, "one Request span per request");
+    assert_eq!(n_stage(Stage::Admit), total);
+    assert_eq!(n_stage(Stage::QueueWait), total);
+    assert_eq!(n_stage(Stage::Execute), total);
+    assert!(n_stage(Stage::Decode) > 0, "chunk decodes must be traced");
+    assert!(n_stage(Stage::ChunkIo) > 0, "chunk reads must be traced");
+    assert!(n_stage(Stage::CopyOut) > 0, "range assembly must be traced");
+    assert_eq!(obs::dropped(), 0, "ring buffers must not overflow this workload");
+
+    // Every non-root stage hangs under the right parent stage.
+    let stage_of: std::collections::BTreeMap<u64, Stage> =
+        events.iter().map(|e| (e.id, e.stage)).collect();
+    for e in &events {
+        if matches!(e.stage, Stage::Admit | Stage::QueueWait | Stage::Execute) {
+            assert_eq!(stage_of[&e.parent], Stage::Request, "{:?} not under Request", e.stage);
+        }
+    }
+
+    let cov = obs::request_coverage(&events).expect("request spans present");
+    assert!(cov >= 0.90, "median request coverage {cov:.3} below the 0.90 test floor");
+}
+
+// ---------------------------------------------------------------------------
+// Exporters.
+
+/// End-to-end exporter check over real spans and a real registry: the
+/// Chrome trace document parses and holds every span; Prometheus text and
+/// the JSONL stream carry the registry contents.
+#[test]
+fn exporters_round_trip_real_telemetry() {
+    let _g = tracer_lock();
+    obs::enable();
+    {
+        let mut outer = obs::span_n(Stage::Encode, 64);
+        outer.set_count(128);
+        let _inner = obs::span(Stage::ChunkIo);
+    }
+    obs::disable();
+    let events = obs::drain();
+    assert_eq!(events.len(), 2);
+
+    let trace_path = std::env::temp_dir()
+        .join(format!("apack_obs_trace_{}.json", std::process::id()));
+    obs::write_chrome_trace(&trace_path, &events).unwrap();
+    let doc = Json::parse(&std::fs::read_to_string(&trace_path).unwrap()).unwrap();
+    let arr = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert_eq!(arr.len(), events.len());
+    std::fs::remove_file(&trace_path).ok();
+
+    let registry = MetricsRegistry::new();
+    registry.counter("demo.ops").add(42);
+    registry.gauge("demo.depth").set(3);
+    registry.histogram("demo.latency_ns").record(Duration::from_micros(10));
+    let text = obs::prometheus_text(&registry.snapshot());
+    assert!(text.contains("demo_ops 42"));
+    assert!(text.contains("# TYPE demo_depth gauge"));
+    assert!(text.contains("demo_latency_ns_count 1"));
+
+    // JSONL stream: every line parses, `seq` increases, final line flushed
+    // on drop.
+    let jsonl_path = std::env::temp_dir()
+        .join(format!("apack_obs_snap_{}.jsonl", std::process::id()));
+    {
+        let reg = Arc::new(registry);
+        let src = Arc::clone(&reg);
+        let stream = SnapshotStream::start(&jsonl_path, Duration::from_millis(5), move || {
+            src.snapshot()
+        })
+        .unwrap();
+        reg.counter("demo.ops").add(8);
+        std::thread::sleep(Duration::from_millis(25));
+        drop(stream);
+    }
+    let body = std::fs::read_to_string(&jsonl_path).unwrap();
+    let lines: Vec<&str> = body.lines().collect();
+    assert!(lines.len() >= 2, "expected several snapshot lines, got {}", lines.len());
+    for (i, line) in lines.iter().enumerate() {
+        let j = Json::parse(line).unwrap();
+        assert_eq!(j.get("seq").unwrap().as_usize().unwrap(), i);
+    }
+    let last = Json::parse(lines.last().unwrap()).unwrap();
+    assert_eq!(
+        last.get("counters").unwrap().get("demo.ops").unwrap().as_usize().unwrap(),
+        50
+    );
+    std::fs::remove_file(&jsonl_path).ok();
+}
