@@ -1,6 +1,8 @@
 //! Hot-path throughput bench: software encoder/decoder values/s and GB/s —
 //! single-stream (per-value reference vs. block `decode_into`, every
-//! `ResolveMode`) and through the parallel coordinator.
+//! `ResolveMode`), through the parallel coordinator, and over the store
+//! chunk-body paths (v1 single-stream vs. v2 lane bodies across the lane
+//! sweep, SoA and threaded).
 //!
 //! Thin wrapper over [`apack_repro::eval::hot_path`]: the harness asserts
 //! every decode configuration bit-exact against the encoder input before
@@ -46,6 +48,18 @@ fn main() {
         report.speedup_block_lut_vs_per_value_rowscan > 1.0,
         "block Lut decode ({:.2}x) regressed below the per-value RowScan baseline",
         report.speedup_block_lut_vs_per_value_rowscan
+    );
+
+    // ISSUE-7 gate: the chunk-body v2 threaded lane decode (16 lanes) must
+    // beat the v1 single-stream store-body path it replaces. Like the gate
+    // above, the hard floor is >1× (the exact ratio is tracked in the JSON
+    // artifact); the per-lane-count SoA and threaded entries are all in
+    // the report for inspection.
+    assert!(
+        report.speedup_body_v2_threaded16_vs_v1 > 1.0,
+        "body v2 threaded 16-lane decode ({:.2}x) regressed below the v1 \
+         single-stream store-body baseline",
+        report.speedup_body_v2_threaded16_vs_v1
     );
 
     // Table generation cost (the offline Listing-1 search), outside the

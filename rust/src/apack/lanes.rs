@@ -1,0 +1,715 @@
+//! Chunk body **v2**: one chunk's values split into N independent
+//! arithmetic-coded substreams ("lanes") sharing the tensor's single
+//! [`SymbolTable`], so one chunk decodes data-parallel — the software
+//! mirror of the paper's replicated decoder engines that keep up with
+//! DRAM bandwidth (§V-B), baked into the *format* instead of the
+//! scheduler (DESIGN.md §11).
+//!
+//! # On-disk layout (one chunk blob)
+//!
+//! ```text
+//! header, 12 bytes:   version u8 (= 2) | lanes u8 | pad u16 (= 0)
+//!                     | n_values u64
+//! directory:          lanes × { sym_bits u32 | ofs_bits u32 | crc32 u32 }
+//! payloads:           lanes × ( symbol bytes | offset bytes ), in lane
+//!                     order, each stream byte-aligned
+//! ```
+//!
+//! Per-lane value counts are **not** stored: the split is the
+//! deterministic function [`lane_range`] of `(n_values, lanes)` (first
+//! `n % lanes` lanes take one extra value), so the directory stays 12
+//! bytes per lane. Byte lengths derive from the bit lengths
+//! (`ceil(bits/8)`). The per-lane CRC covers that lane's payload bytes and
+//! is checked only on the `verify` path ([`BodyV2View::verify_lanes`]) —
+//! the demand decode path relies on the store's whole-chunk CRC, keeping
+//! lane fan-out pure win on the hot path.
+//!
+//! # Lane-count selection
+//!
+//! [`lane_count`] clamps the requested count to a power of two in
+//! `1..=`[`MAX_LANES`], then halves while a lane would hold fewer than
+//! [`MIN_VALUES_PER_LANE`] values — tiny chunks degrade gracefully down to
+//! one lane (whose body costs exactly the v1 header: 12 header + 12
+//! directory bytes vs. v1's 24-byte header), and every multi-lane body
+//! guarantees `n >= lanes × MIN_VALUES_PER_LANE`, which
+//! [`BodyV2View::parse`] re-checks as a directory-consistency invariant.
+//!
+//! # Decode paths
+//!
+//! - [`BodyV2View::decode_into`] — single-thread struct-of-arrays decode:
+//!   `HI`/`LO`/`CODE` live in arrays indexed by lane and the block loop
+//!   runs round-major (one value per lane per round), so the per-lane
+//!   update is the same straight-line LUT-resolve + renormalize as
+//!   [`ApackDecoder`]'s block path, repeated across independent lanes
+//!   with no cross-lane data dependence.
+//! - [`BodyV2View::decode_into_threaded`] — splits the caller's output
+//!   buffer into disjoint per-lane sub-slices and decodes each lane with
+//!   its own [`ApackDecoder`] on [`crate::util::par_map_owned_with`]
+//!   worker threads.
+//!
+//! Both are bit-exact with per-lane sequential decode, including
+//! `CorruptStream` positions: a lane-`l` corruption at within-lane value
+//! `p` surfaces at global position `lane_range(..).start + p`.
+
+use super::bitstream::BitReader;
+use super::decoder::ApackDecoder;
+use super::encoder::ApackEncoder;
+use super::table::{SymbolTable, PROB_BITS};
+use super::NUM_ROWS;
+use crate::error::{Error, Result};
+use crate::obs::{self, Stage};
+use crate::store::format::crc32;
+use crate::util::par_map_owned_with;
+
+use std::ops::Range;
+
+/// Default lane count for new v2 bodies (the paper's hardware deploys 16
+/// decoder lanes per engine cluster; the hot-path bench sweeps 1..64).
+pub const DEFAULT_LANES: u8 = 16;
+
+/// Hard cap on lanes per chunk body (keeps the directory and the decoder's
+/// fixed lane-state arrays small).
+pub const MAX_LANES: u8 = 64;
+
+/// Minimum values per lane before [`lane_count`] halves the lane count:
+/// below this, per-lane coder flush + directory overhead stops paying for
+/// the parallelism.
+pub const MIN_VALUES_PER_LANE: usize = 1024;
+
+/// First body byte of every v2 chunk blob (v1 bodies start with a
+/// `n_values u64` little-endian header instead; the store dispatches on
+/// the footer's per-tensor `body_version`, never by sniffing).
+pub const BODY_V2_VERSION: u8 = 2;
+
+/// Fixed v2 body header: `version u8 | lanes u8 | pad u16 | n_values u64`.
+pub const HEADER_BYTES: usize = 12;
+
+/// One directory entry: `sym_bits u32 | ofs_bits u32 | crc32 u32`.
+pub const DIR_ENTRY_BYTES: usize = 12;
+
+// Renormalization constants, same values as the (file-private) ones in
+// `decoder.rs` — the SoA loop below must stay in lockstep with
+// `ApackDecoder::decode_block`.
+const TOP_BIT: u16 = 0x8000;
+const SECOND_BIT: u16 = 0x4000;
+
+/// Effective lane count for `n` values at a requested lane count: the
+/// request rounds *down* to a power of two clamped to `1..=`[`MAX_LANES`],
+/// then halves while any lane would hold fewer than
+/// [`MIN_VALUES_PER_LANE`] values. Guarantees the result is a power of
+/// two and that `result == 1 || n >= result × MIN_VALUES_PER_LANE`.
+pub fn lane_count(n: usize, requested: u8) -> u8 {
+    let capped = requested.clamp(1, MAX_LANES);
+    // Largest power of two <= capped (capped >= 1, so this never shifts
+    // past the width).
+    let mut lanes = 1u8 << (7 - capped.leading_zeros());
+    while lanes > 1 && n < lanes as usize * MIN_VALUES_PER_LANE {
+        lanes /= 2;
+    }
+    lanes
+}
+
+/// Value-index range of lane `lane` in the deterministic contiguous split
+/// of `n` values across `lanes` lanes: lane `l` gets `n / lanes` values,
+/// plus one extra for the first `n % lanes` lanes. This function is the
+/// *only* definition of the split — encoder, both decoders, and the
+/// verify path all derive per-lane counts from it, which is what lets the
+/// directory omit them.
+pub fn lane_range(n: usize, lanes: usize, lane: usize) -> Range<usize> {
+    debug_assert!(lane < lanes);
+    let q = n / lanes;
+    let r = n % lanes;
+    let start = lane * q + lane.min(r);
+    let len = q + usize::from(lane < r);
+    start..start + len
+}
+
+/// Encode `values` as a v2 chunk body with (up to) `requested_lanes`
+/// lanes, all sharing `table`. The effective lane count is
+/// [`lane_count`]`(values.len(), requested_lanes)` and is recorded in the
+/// body header. Each lane is an independent [`ApackEncoder`] run over its
+/// [`lane_range`] slice.
+pub fn encode_body_v2(
+    table: &SymbolTable,
+    values: &[u32],
+    requested_lanes: u8,
+) -> Result<Vec<u8>> {
+    let n = values.len();
+    let lanes = lane_count(n, requested_lanes) as usize;
+
+    let mut dir = Vec::with_capacity(lanes * DIR_ENTRY_BYTES);
+    let mut payload = Vec::new();
+    for l in 0..lanes {
+        let r = lane_range(n, lanes, l);
+        let (sym, sym_bits, ofs, ofs_bits) = ApackEncoder::encode_all(table, &values[r])?;
+        if sym_bits > u32::MAX as usize || ofs_bits > u32::MAX as usize {
+            return Err(Error::BadContainer(format!(
+                "lane {l} stream exceeds the u32 bit-length directory field \
+                 ({sym_bits} sym bits, {ofs_bits} ofs bits)"
+            )));
+        }
+        let start = payload.len();
+        payload.extend_from_slice(&sym);
+        payload.extend_from_slice(&ofs);
+        dir.extend_from_slice(&(sym_bits as u32).to_le_bytes());
+        dir.extend_from_slice(&(ofs_bits as u32).to_le_bytes());
+        dir.extend_from_slice(&crc32(&payload[start..]).to_le_bytes());
+    }
+
+    let mut out = Vec::with_capacity(HEADER_BYTES + dir.len() + payload.len());
+    out.push(BODY_V2_VERSION);
+    out.push(lanes as u8);
+    out.extend_from_slice(&[0u8; 2]); // pad
+    out.extend_from_slice(&(n as u64).to_le_bytes());
+    out.extend_from_slice(&dir);
+    out.extend_from_slice(&payload);
+    Ok(out)
+}
+
+/// One parsed directory entry plus its resolved payload offset.
+#[derive(Debug, Clone, Copy, Default)]
+struct LaneEntry {
+    sym_bits: u32,
+    ofs_bits: u32,
+    crc: u32,
+    /// Byte offset of this lane's payload (symbols then offsets) within
+    /// the body's payload region.
+    start: usize,
+}
+
+impl LaneEntry {
+    #[inline]
+    fn sym_len(&self) -> usize {
+        (self.sym_bits as usize).div_ceil(8)
+    }
+    #[inline]
+    fn ofs_len(&self) -> usize {
+        (self.ofs_bits as usize).div_ceil(8)
+    }
+}
+
+/// A parsed-but-borrowed v2 body: directory in fixed arrays, payload as a
+/// slice of the caller's buffer (e.g. an mmap'd store chunk) — the v2
+/// mirror of [`super::container::BodyView`], allocation-free to parse.
+#[derive(Debug, Clone, Copy)]
+pub struct BodyV2View<'a> {
+    /// Total values across all lanes.
+    pub n_values: u64,
+    lanes: usize,
+    entries: [LaneEntry; MAX_LANES as usize],
+    payload: &'a [u8],
+}
+
+impl<'a> BodyV2View<'a> {
+    /// Parse an [`encode_body_v2`] record without copying the streams.
+    /// Exact-length framing (slack or truncation is rejected) plus
+    /// directory-consistency checks: version byte, power-of-two lane
+    /// count within bounds, zero pad, and the [`lane_count`] invariant
+    /// `lanes == 1 || n_values >= lanes × MIN_VALUES_PER_LANE`.
+    pub fn parse(data: &'a [u8]) -> Result<Self> {
+        let err = |m: String| Error::BadContainer(m);
+        if data.len() < HEADER_BYTES {
+            return Err(err("truncated v2 body header".into()));
+        }
+        if data[0] != BODY_V2_VERSION {
+            return Err(err(format!("bad v2 body version byte {}", data[0])));
+        }
+        let lanes = data[1] as usize;
+        if lanes == 0 || lanes > MAX_LANES as usize || !lanes.is_power_of_two() {
+            return Err(err(format!("bad v2 lane count {lanes}")));
+        }
+        if data[2] != 0 || data[3] != 0 {
+            return Err(err("nonzero v2 header pad".into()));
+        }
+        let n_values = u64::from_le_bytes(data[4..12].try_into().unwrap());
+        if lanes > 1 && (n_values as usize) < lanes * MIN_VALUES_PER_LANE {
+            return Err(err(format!(
+                "v2 directory inconsistent: {lanes} lanes over {n_values} values \
+                 violates the {MIN_VALUES_PER_LANE}-values-per-lane floor"
+            )));
+        }
+        let dir_end = HEADER_BYTES + lanes * DIR_ENTRY_BYTES;
+        if data.len() < dir_end {
+            return Err(err("truncated v2 lane directory".into()));
+        }
+        let mut entries = [LaneEntry::default(); MAX_LANES as usize];
+        let mut offset = 0usize;
+        for (l, e) in entries.iter_mut().enumerate().take(lanes) {
+            let at = HEADER_BYTES + l * DIR_ENTRY_BYTES;
+            e.sym_bits = u32::from_le_bytes(data[at..at + 4].try_into().unwrap());
+            e.ofs_bits = u32::from_le_bytes(data[at + 4..at + 8].try_into().unwrap());
+            e.crc = u32::from_le_bytes(data[at + 8..at + 12].try_into().unwrap());
+            e.start = offset;
+            offset = offset
+                .checked_add(e.sym_len() + e.ofs_len())
+                .ok_or_else(|| err("v2 lane payload lengths overflow".into()))?;
+        }
+        let expected = dir_end
+            .checked_add(offset)
+            .ok_or_else(|| err("v2 body length overflows".into()))?;
+        if data.len() != expected {
+            return Err(err(format!(
+                "v2 body length mismatch: {} bytes, expected {expected}",
+                data.len()
+            )));
+        }
+        Ok(Self { n_values, lanes, entries, payload: &data[dir_end..] })
+    }
+
+    /// Lane count recorded in the header.
+    #[inline]
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Header + directory bytes (the v2 framing overhead the zoo matrix
+    /// test bounds against payload bytes).
+    #[inline]
+    pub fn directory_bytes(&self) -> usize {
+        HEADER_BYTES + self.lanes * DIR_ENTRY_BYTES
+    }
+
+    /// Value-index range lane `l` decodes to (the deterministic split).
+    #[inline]
+    pub fn lane_values(&self, l: usize) -> Range<usize> {
+        lane_range(self.n_values as usize, self.lanes, l)
+    }
+
+    /// Lane `l`'s `(symbols, offsets)` payload slices.
+    #[inline]
+    fn lane_streams(&self, l: usize) -> (&'a [u8], &'a [u8]) {
+        let e = &self.entries[l];
+        let sym = &self.payload[e.start..e.start + e.sym_len()];
+        let ofs = &self.payload[e.start + e.sym_len()..e.start + e.sym_len() + e.ofs_len()];
+        (sym, ofs)
+    }
+
+    /// Check every lane's payload CRC32 — the `verify` path's lane-granular
+    /// corruption localization (the store's whole-chunk CRC says *that* a
+    /// chunk is bad; this says *which lane*). A mismatch in lane `k`
+    /// surfaces as `CorruptStream` positioned at that lane's first value —
+    /// a stable position independent of where inside the lane the bytes
+    /// were damaged.
+    pub fn verify_lanes(&self) -> Result<()> {
+        for l in 0..self.lanes {
+            let e = &self.entries[l];
+            let bytes = &self.payload[e.start..e.start + e.sym_len() + e.ofs_len()];
+            if crc32(bytes) != e.crc {
+                return Err(Error::CorruptStream { position: self.lane_values(l).start });
+            }
+        }
+        Ok(())
+    }
+
+    /// Single-thread lane-parallel decode: struct-of-arrays lane state
+    /// (`HI`/`LO`/`CODE` plus one bit reader pair per lane), round-major
+    /// block loop — `n / lanes` full rounds of one value per lane, then
+    /// one tail round for the `n % lanes` lanes holding an extra value.
+    /// LUT symbol resolution per lane (bit-identical to every
+    /// [`super::decoder::ResolveMode`], DESIGN.md invariant 3). Emits one
+    /// `Decode` span with a `DecodeLanes` child carrying the lane count,
+    /// so Chrome traces show the fan-out.
+    pub fn decode_into(&self, table: &SymbolTable, out: &mut [u32]) -> Result<()> {
+        if out.len() as u64 != self.n_values {
+            return Err(Error::BadContainer(format!(
+                "decode_into slice holds {} values, v2 body has {}",
+                out.len(),
+                self.n_values
+            )));
+        }
+        let _span = obs::span_n(Stage::Decode, out.len() as u64);
+        let _fan = obs::span_n(Stage::DecodeLanes, self.lanes as u64);
+
+        let n = out.len();
+        let lanes = self.lanes;
+        let mut cum = [0u16; NUM_ROWS + 1];
+        for i in 0..NUM_ROWS {
+            cum[i + 1] = table.rows()[i].hi_cnt;
+        }
+
+        // Lane state, struct-of-arrays: fixed-size arrays indexed by lane
+        // (only the first `lanes` entries are live).
+        let mut hi = [0xFFFFu16; MAX_LANES as usize];
+        let mut lo = [0u16; MAX_LANES as usize];
+        let mut code = [0u16; MAX_LANES as usize];
+        let mut base = [0usize; MAX_LANES as usize];
+        let mut sym_in: Vec<BitReader<'a>> = Vec::with_capacity(lanes);
+        let mut ofs_in: Vec<BitReader<'a>> = Vec::with_capacity(lanes);
+        for l in 0..lanes {
+            let e = &self.entries[l];
+            let (sym, ofs) = self.lane_streams(l);
+            let mut s = BitReader::new(sym, e.sym_bits as usize);
+            // Prime CODE exactly as `ApackDecoder::new` does (zero-latch
+            // past a short stream is legal for the symbol stream).
+            code[l] = s.read_bits(16) as u16;
+            sym_in.push(s);
+            ofs_in.push(BitReader::new(ofs, e.ofs_bits as usize));
+            base[l] = lane_range(n, lanes, l).start;
+        }
+
+        let q = n / lanes;
+        let r = n % lanes;
+        // First corruption in round-major order; within one lane the
+        // position matches sequential per-lane decode exactly (lanes are
+        // independent, so lane l's p-th step is schedule-invariant).
+        let mut corrupt: Option<(usize, usize)> = None;
+        'rounds: for round in 0..q {
+            for l in 0..lanes {
+                if !lane_step(
+                    table,
+                    &cum,
+                    &mut hi[l],
+                    &mut lo[l],
+                    &mut code[l],
+                    &mut sym_in[l],
+                    &mut ofs_in[l],
+                    &mut out[base[l] + round],
+                ) {
+                    corrupt = Some((l, round));
+                    break 'rounds;
+                }
+            }
+        }
+        if corrupt.is_none() {
+            for l in 0..r {
+                if !lane_step(
+                    table,
+                    &cum,
+                    &mut hi[l],
+                    &mut lo[l],
+                    &mut code[l],
+                    &mut sym_in[l],
+                    &mut ofs_in[l],
+                    &mut out[base[l] + q],
+                ) {
+                    corrupt = Some((l, q));
+                    break;
+                }
+            }
+        }
+        if let Some((l, p)) = corrupt {
+            return Err(Error::CorruptStream { position: base[l] + p });
+        }
+        Ok(())
+    }
+
+    /// Threaded lane decode: the output buffer splits into disjoint
+    /// per-lane sub-slices ([`lane_range`]) and each lane runs its own
+    /// [`ApackDecoder::decode_into`] on a scoped worker thread
+    /// (`threads == 0` uses the machine's parallelism). Bit-identical to
+    /// [`Self::decode_into`]; on corruption the first failing lane *in
+    /// lane order* is reported, its position rebased to the lane's start.
+    /// Opens the `DecodeLanes` span on the calling thread; the per-lane
+    /// `Decode` spans come from each worker's block decode.
+    pub fn decode_into_threaded(
+        &self,
+        table: &SymbolTable,
+        out: &mut [u32],
+        threads: usize,
+    ) -> Result<()> {
+        if out.len() as u64 != self.n_values {
+            return Err(Error::BadContainer(format!(
+                "decode_into_threaded slice holds {} values, v2 body has {}",
+                out.len(),
+                self.n_values
+            )));
+        }
+        let _fan = obs::span_n(Stage::DecodeLanes, self.lanes as u64);
+        let n = out.len();
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(|t| t.get()).unwrap_or(4)
+        } else {
+            threads
+        };
+
+        let mut jobs: Vec<(usize, &mut [u32])> = Vec::with_capacity(self.lanes);
+        let mut rest = out;
+        for l in 0..self.lanes {
+            let len = lane_range(n, self.lanes, l).len();
+            let (head, tail) = rest.split_at_mut(len);
+            jobs.push((l, head));
+            rest = tail;
+        }
+        debug_assert!(rest.is_empty());
+
+        par_map_owned_with(jobs, threads, |(l, slice)| -> Result<()> {
+            let e = &self.entries[l];
+            let (sym, ofs) = self.lane_streams(l);
+            let mut dec = ApackDecoder::new(table, BitReader::new(sym, e.sym_bits as usize))?;
+            let mut ofs_r = BitReader::new(ofs, e.ofs_bits as usize);
+            let lane_base = lane_range(n, self.lanes, l).start;
+            dec.decode_into(slice, &mut ofs_r).map_err(|err| match err {
+                Error::CorruptStream { position } => {
+                    Error::CorruptStream { position: lane_base + position }
+                }
+                other => other,
+            })
+        })
+        .into_iter()
+        .collect::<Result<Vec<()>>>()?;
+        Ok(())
+    }
+}
+
+/// Decode one value for one lane: LUT symbol resolution, SYMBOL Gen with
+/// offset-exhaustion detection, then the batched HI/LO/CODE
+/// renormalization — the exact per-value body of
+/// `ApackDecoder::decode_block::<2>` on one lane's registers. Returns
+/// `false` on corruption (the caller owns position accounting).
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn lane_step(
+    table: &SymbolTable,
+    cum: &[u16; NUM_ROWS + 1],
+    hi: &mut u16,
+    lo: &mut u16,
+    code: &mut u16,
+    sym_in: &mut BitReader<'_>,
+    ofs_in: &mut BitReader<'_>,
+    slot: &mut u32,
+) -> bool {
+    let range = (*hi - *lo) as u32 + 1;
+    let d = code.wrapping_sub(*lo) as u32;
+    let k = (((d + 1) << PROB_BITS) - 1) / range;
+    if k >= cum[NUM_ROWS] as u32 {
+        return false;
+    }
+    let idx = table.row_for_count(k as u16);
+    let s_lo = (range * cum[idx] as u32) >> PROB_BITS;
+    let s_hi = (range * cum[idx + 1] as u32) >> PROB_BITS;
+
+    let row = &table.rows()[idx];
+    let value = if row.ol > 0 {
+        if ofs_in.bits_remaining() < row.ol as usize {
+            return false;
+        }
+        row.v_min + ofs_in.read_bits(row.ol) as u32
+    } else {
+        row.v_min
+    };
+    if value > row.v_max {
+        return false;
+    }
+    *slot = value;
+
+    let mut nh = (*lo as u32 + s_hi - 1) as u16;
+    let mut nl = (*lo as u32 + s_lo) as u16;
+    let mut nc = *code;
+    loop {
+        let diff = nh ^ nl;
+        if diff & TOP_BIT == 0 {
+            let k = (diff as u32 | 1).leading_zeros() - 16;
+            nl <<= k;
+            nh = (nh << k) | ((1u32 << k) as u16).wrapping_sub(1);
+            nc = (nc << k) | sym_in.read_bits(k) as u16;
+        } else if nl & SECOND_BIT != 0 && nh & SECOND_BIT == 0 {
+            nc = ((nc ^ SECOND_BIT) << 1) | sym_in.read_bit() as u16;
+            nl = (nl & (SECOND_BIT - 1)) << 1;
+            nh = ((nh | SECOND_BIT) << 1) | 1;
+        } else {
+            break;
+        }
+    }
+    *hi = nh;
+    *lo = nl;
+    *code = nc;
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apack::container::encode_body;
+    use crate::apack::container::BodyView;
+    use crate::models::distributions::ValueProfile;
+
+    fn tensor(n: usize, seed: u64) -> Vec<u32> {
+        ValueProfile::ReluActivation { sparsity: 0.5, q: 0.93, noise_floor: 0.01 }
+            .sample(8, n, seed)
+    }
+
+    fn table_for(values: &[u32]) -> SymbolTable {
+        crate::apack::tablegen::table_for_tensor(
+            8,
+            values,
+            crate::apack::tablegen::TensorKind::Activations,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn lane_count_selection() {
+        // Requests round down to powers of two and clamp to MAX_LANES.
+        assert_eq!(lane_count(1 << 20, 16), 16);
+        assert_eq!(lane_count(1 << 20, 17), 16);
+        assert_eq!(lane_count(1 << 20, 31), 16);
+        assert_eq!(lane_count(1 << 20, 255), 64);
+        assert_eq!(lane_count(1 << 20, 0), 1);
+        // Tiny chunks degrade: each lane keeps >= MIN_VALUES_PER_LANE.
+        assert_eq!(lane_count(16 * MIN_VALUES_PER_LANE, 16), 16);
+        assert_eq!(lane_count(16 * MIN_VALUES_PER_LANE - 1, 16), 8);
+        assert_eq!(lane_count(MIN_VALUES_PER_LANE, 16), 1);
+        assert_eq!(lane_count(MIN_VALUES_PER_LANE - 1, 16), 1);
+        assert_eq!(lane_count(0, 64), 1);
+        for n in [0usize, 1, 1023, 1024, 4096, 100_000] {
+            for req in 1..=255u8 {
+                let l = lane_count(n, req);
+                assert!(l.is_power_of_two() && l <= MAX_LANES);
+                assert!(l == 1 || n >= l as usize * MIN_VALUES_PER_LANE, "n={n} req={req}");
+            }
+        }
+    }
+
+    #[test]
+    fn lane_ranges_tile_exactly() {
+        for n in [0usize, 1, 5, 16, 17, 1024, 12_345] {
+            for lanes in [1usize, 2, 4, 8, 16, 64] {
+                let mut next = 0usize;
+                for l in 0..lanes {
+                    let r = lane_range(n, lanes, l);
+                    assert_eq!(r.start, next, "n={n} lanes={lanes} l={l}");
+                    next = r.end;
+                }
+                assert_eq!(next, n);
+            }
+        }
+    }
+
+    #[test]
+    fn v2_roundtrip_single_and_multi_lane() {
+        for n in [0usize, 1, 100, 1024, 20_000] {
+            let values = tensor(n.max(1), 9);
+            let values = &values[..n];
+            let table = table_for(&tensor(4096, 9));
+            let body = encode_body_v2(&table, values, DEFAULT_LANES).unwrap();
+            let view = BodyV2View::parse(&body).unwrap();
+            assert_eq!(view.n_values as usize, n);
+            assert_eq!(view.lanes(), lane_count(n, DEFAULT_LANES) as usize);
+            view.verify_lanes().unwrap();
+            let mut soa = vec![0u32; n];
+            view.decode_into(&table, &mut soa).unwrap();
+            assert_eq!(soa, values);
+            let mut thr = vec![0u32; n];
+            view.decode_into_threaded(&table, &mut thr, 0).unwrap();
+            assert_eq!(thr, values);
+        }
+    }
+
+    #[test]
+    fn v2_single_lane_body_is_v1_sized() {
+        // One lane: 12-byte header + 12-byte directory == v1's 24-byte
+        // header, and the streams are the very same encoder output.
+        let values = tensor(500, 3);
+        let table = table_for(&values);
+        let v1 = encode_body(&table, &values).unwrap();
+        let v2 = encode_body_v2(&table, &values, 16).unwrap();
+        assert_eq!(v2.len(), v1.len());
+        assert_eq!(&v2[HEADER_BYTES + DIR_ENTRY_BYTES..], &v1[24..]);
+    }
+
+    #[test]
+    fn v2_matches_v1_decode_bit_exactly() {
+        let values = tensor(40_000, 11);
+        let table = table_for(&values);
+        let v1 = encode_body(&table, &values).unwrap();
+        let v2 = encode_body_v2(&table, &values, 16).unwrap();
+        let mut from_v1 = vec![0u32; values.len()];
+        BodyView::parse(&v1).unwrap().decode_into(&table, &mut from_v1).unwrap();
+        let mut from_v2 = vec![0u32; values.len()];
+        BodyV2View::parse(&v2).unwrap().decode_into(&table, &mut from_v2).unwrap();
+        assert_eq!(from_v1, values);
+        assert_eq!(from_v2, values);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_bodies() {
+        let values = tensor(20_000, 5);
+        let table = table_for(&values);
+        let body = encode_body_v2(&table, &values, 16).unwrap();
+        assert!(BodyV2View::parse(&body[..HEADER_BYTES - 1]).is_err());
+        assert!(BodyV2View::parse(&body[..body.len() - 1]).is_err(), "truncated");
+        let mut long = body.clone();
+        long.push(0);
+        assert!(BodyV2View::parse(&long).is_err(), "slack");
+        let mut bad_version = body.clone();
+        bad_version[0] = 1;
+        assert!(BodyV2View::parse(&bad_version).is_err());
+        let mut bad_lanes = body.clone();
+        bad_lanes[1] = 3; // not a power of two
+        assert!(BodyV2View::parse(&bad_lanes).is_err());
+        let mut bad_pad = body.clone();
+        bad_pad[2] = 1;
+        assert!(BodyV2View::parse(&bad_pad).is_err());
+        // Directory inconsistency: 16 lanes over too few values.
+        let mut starved = body.clone();
+        starved[4..12].copy_from_slice(&100u64.to_le_bytes());
+        assert!(BodyV2View::parse(&starved).is_err());
+    }
+
+    #[test]
+    fn corrupt_offset_stream_positions_match_across_decoders() {
+        // Truncate the last lane's offset stream so its final offset read
+        // fails: SoA and threaded decode must report the same global
+        // CorruptStream position as sequential per-lane decode would.
+        let values = tensor(20_000, 13);
+        let table = table_for(&values);
+        let body = encode_body_v2(&table, &values, 4).unwrap();
+        let view = BodyV2View::parse(&body).unwrap();
+        assert_eq!(view.lanes(), 4);
+        // Rewrite lane 3's ofs_bits down by the final row read; easiest
+        // robust corruption: zero out lane 3's directory ofs_bits so every
+        // offset read in that lane fails immediately (if the lane reads
+        // offsets at all — with a ReLU profile at 8 bits it always does).
+        let mut cut = body.clone();
+        let at = HEADER_BYTES + 3 * DIR_ENTRY_BYTES;
+        // Keep framing consistent: shrink ofs_bits to 0 *and* drop that
+        // lane's offset bytes from the payload tail.
+        let e_ofs_bits =
+            u32::from_le_bytes(cut[at + 4..at + 8].try_into().unwrap()) as usize;
+        let drop = e_ofs_bits.div_ceil(8);
+        cut[at + 4..at + 8].copy_from_slice(&0u32.to_le_bytes());
+        cut.truncate(cut.len() - drop);
+        let view = BodyV2View::parse(&cut).unwrap();
+
+        let mut out = vec![0u32; values.len()];
+        let soa = view.decode_into(&table, &mut out).unwrap_err();
+        let mut out = vec![0u32; values.len()];
+        let thr = view.decode_into_threaded(&table, &mut out, 2).unwrap_err();
+        let (Error::CorruptStream { position: p_soa }, Error::CorruptStream { position: p_thr }) =
+            (&soa, &thr)
+        else {
+            panic!("expected CorruptStream, got {soa:?} / {thr:?}");
+        };
+        assert_eq!(p_soa, p_thr);
+        let lane3 = lane_range(values.len(), 4, 3);
+        assert!(lane3.contains(p_soa), "position {p_soa} outside lane 3 {lane3:?}");
+    }
+
+    #[test]
+    fn flipped_bit_in_lane_k_fails_lane_k_crc_at_stable_position() {
+        let values = tensor(20_000, 21);
+        let table = table_for(&values);
+        let body = encode_body_v2(&table, &values, 16).unwrap();
+        let view = BodyV2View::parse(&body).unwrap();
+        let lanes = view.lanes();
+        assert!(lanes >= 16);
+        let dir_end = HEADER_BYTES + lanes * DIR_ENTRY_BYTES;
+        for k in 0..lanes {
+            let e = view.entries[k];
+            let mid = dir_end + e.start + (e.sym_len() + e.ofs_len()) / 2;
+            let mut bad = body.clone();
+            bad[mid] ^= 0x10;
+            let bad_view = BodyV2View::parse(&bad).unwrap();
+            let err = bad_view.verify_lanes().unwrap_err();
+            let Error::CorruptStream { position } = err else {
+                panic!("lane {k}: expected CorruptStream, got {err:?}");
+            };
+            assert_eq!(
+                position,
+                lane_range(values.len(), lanes, k).start,
+                "lane {k} CRC failure must surface at that lane's first value"
+            );
+        }
+        view.verify_lanes().unwrap();
+    }
+}

@@ -11,6 +11,9 @@
 //! - [`tablegen`] — the heuristic table search of paper §VI (Listing 1).
 //! - [`container`] — the on-"disk"/on-DRAM representation: metadata + the
 //!   two streams, with substream framing for parallel engines.
+//! - [`lanes`] — chunk body **v2**: N independent per-chunk substreams
+//!   sharing one table, with struct-of-arrays and threaded lane-parallel
+//!   decode (DESIGN.md §11).
 
 pub mod bitserial;
 pub mod bitstream;
@@ -18,10 +21,15 @@ pub mod container;
 pub mod decoder;
 pub mod encoder;
 pub mod histogram;
+pub mod lanes;
 pub mod table;
 pub mod tablegen;
 
 pub use container::{compress, decompress, encode_body, BodyView, Container};
+pub use lanes::{
+    encode_body_v2, lane_count, lane_range, BodyV2View, DEFAULT_LANES, MAX_LANES,
+    MIN_VALUES_PER_LANE,
+};
 pub use decoder::{ApackDecoder, ResolveMode};
 pub use encoder::ApackEncoder;
 pub use histogram::Histogram;

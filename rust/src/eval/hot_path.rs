@@ -1,8 +1,11 @@
 //! Codec hot-path measurement harness: single-stream and 64-substream
 //! encode/decode throughput across every [`ResolveMode`] and both decode
-//! granularities (per-value reference vs. block `decode_into`), with
-//! machine-readable JSON output so decode throughput is a tracked,
-//! regression-guarded number PR over PR (ISSUE 4; DESIGN.md §8).
+//! granularities (per-value reference vs. block `decode_into`), plus the
+//! store chunk-body paths — v1 single-stream bodies against v2
+//! interleaved lane bodies over the [`LANE_SWEEP`] (SoA and threaded
+//! decoders) — with machine-readable JSON output so decode throughput is
+//! a tracked, regression-guarded number PR over PR (ISSUE 4, ISSUE 7;
+//! DESIGN.md §8, §11).
 //!
 //! Shared by `benches/codec_hot_path.rs` (release-build numbers, uploaded
 //! as a CI artifact) and the tier-1 `hot_path_report` integration test
@@ -16,8 +19,10 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::apack::bitstream::BitReader;
+use crate::apack::container::{encode_body, BodyView};
 use crate::apack::decoder::{ApackDecoder, ResolveMode};
 use crate::apack::encoder::ApackEncoder;
+use crate::apack::lanes::{encode_body_v2, BodyV2View};
 use crate::apack::tablegen::{table_for_tensor, TensorKind};
 use crate::coordinator::{Coordinator, PartitionPolicy};
 use crate::models::distributions::ValueProfile;
@@ -27,6 +32,10 @@ use crate::util::json::Json;
 
 /// The canonical JSON artifact name (repo root / CI artifact).
 pub const REPORT_FILE: &str = "BENCH_codec_hot_path.json";
+
+/// Lane counts swept for the chunk-body v2 decode measurements
+/// (EXPERIMENTS.md lane-count sweep).
+pub const LANE_SWEEP: [u8; 6] = [1, 4, 8, 16, 32, 64];
 
 /// Harness configuration.
 pub struct HotPathConfig {
@@ -76,6 +85,10 @@ pub struct HotPathReport {
     /// The tentpole ratio: block `decode_into` in the default (`Lut`) mode
     /// over the pre-existing per-value `RowScan` baseline, single-stream.
     pub speedup_block_lut_vs_per_value_rowscan: f64,
+    /// Chunk-body v2 ratio: threaded 16-lane body decode over the v1
+    /// single-stream body decode (the ISSUE 7 CI gate — lane fan-out must
+    /// beat the sequential store-body path it replaces).
+    pub speedup_body_v2_threaded16_vs_v1: f64,
 }
 
 impl HotPathReport {
@@ -98,6 +111,10 @@ impl HotPathReport {
         root.insert(
             "speedup_block_lut_vs_per_value_rowscan".to_string(),
             Json::Num(self.speedup_block_lut_vs_per_value_rowscan),
+        );
+        root.insert(
+            "speedup_body_v2_threaded16_vs_v1".to_string(),
+            Json::Num(self.speedup_body_v2_threaded16_vs_v1),
         );
         let entries: Vec<Json> = self
             .entries
@@ -136,6 +153,10 @@ impl HotPathReport {
         s.push_str(&format!(
             "block Lut vs per-value RowScan (single-stream): {:.2}x\n",
             self.speedup_block_lut_vs_per_value_rowscan
+        ));
+        s.push_str(&format!(
+            "body v2 threaded 16-lane vs v1 single-stream body: {:.2}x\n",
+            self.speedup_body_v2_threaded16_vs_v1
         ));
         s
     }
@@ -224,6 +245,48 @@ pub fn run(cfg: &HotPathConfig) -> HotPathReport {
     let s = bench.run(&name, || coord.decompress(&sc).unwrap());
     entries.push(entry(&name, s.median.as_nanos() as u64, n));
 
+    // Store chunk bodies: the v1 single-stream framing every pre-v2 store
+    // used vs. the v2 interleaved lane bodies across the lane sweep, both
+    // the single-thread struct-of-arrays decoder and the threaded
+    // lane-per-sub-slice decoder. Bit-exactness asserted before timing,
+    // as above.
+    let body_v1 = encode_body(&table, &values).unwrap();
+    let decode_v1 = || {
+        let mut out = vec![0u32; n];
+        BodyView::parse(&body_v1).unwrap().decode_into(&table, &mut out).unwrap();
+        out
+    };
+    assert_eq!(decode_v1(), values, "store-body v1 decode diverged");
+    let s = bench.run("store-body/decode/v1-block", decode_v1);
+    entries.push(entry("store-body/decode/v1-block", s.median.as_nanos() as u64, n));
+
+    for lanes in LANE_SWEEP {
+        let body = encode_body_v2(&table, &values, lanes).unwrap();
+        let decode_soa = || {
+            let mut out = vec![0u32; n];
+            BodyV2View::parse(&body).unwrap().decode_into(&table, &mut out).unwrap();
+            out
+        };
+        let decode_threaded = || {
+            let mut out = vec![0u32; n];
+            BodyV2View::parse(&body)
+                .unwrap()
+                .decode_into_threaded(&table, &mut out, 0)
+                .unwrap();
+            out
+        };
+        assert_eq!(decode_soa(), values, "store-body v2 SoA {lanes}-lane diverged");
+        assert_eq!(decode_threaded(), values, "store-body v2 threaded {lanes}-lane diverged");
+
+        let name = format!("store-body/decode/v2-soa/{lanes}-lane");
+        let s = bench.run(&name, decode_soa);
+        entries.push(entry(&name, s.median.as_nanos() as u64, n));
+
+        let name = format!("store-body/decode/v2-threaded/{lanes}-lane");
+        let s = bench.run(&name, decode_threaded);
+        entries.push(entry(&name, s.median.as_nanos() as u64, n));
+    }
+
     let baseline = entries
         .iter()
         .find(|e| e.name == "decode/per-value/RowScan")
@@ -234,11 +297,22 @@ pub fn run(cfg: &HotPathConfig) -> HotPathReport {
         .find(|e| e.name == "decode/block/Lut")
         .map(|e| e.values_per_s)
         .unwrap_or(0.0);
+    let body_v1_rate = entries
+        .iter()
+        .find(|e| e.name == "store-body/decode/v1-block")
+        .map(|e| e.values_per_s)
+        .unwrap_or(f64::INFINITY);
+    let body_v2_rate = entries
+        .iter()
+        .find(|e| e.name == "store-body/decode/v2-threaded/16-lane")
+        .map(|e| e.values_per_s)
+        .unwrap_or(0.0);
     HotPathReport {
         n_values: n,
         substreams: cfg.substreams,
         profile: if cfg!(debug_assertions) { "debug" } else { "release" },
         entries,
         speedup_block_lut_vs_per_value_rowscan: fast / baseline,
+        speedup_body_v2_threaded16_vs_v1: body_v2_rate / body_v1_rate,
     }
 }

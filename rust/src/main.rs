@@ -19,7 +19,7 @@ use apack_repro::obs;
 use apack_repro::serving::{PrefetchConfig, ServingConfig, ServingEngine};
 use apack_repro::store::{
     pack_model_zoo, pack_model_zoo_sharded, pack_model_zoo_sharded_with, pack_model_zoo_with,
-    Backend, PackOptions, ReadStats, StoreHandle, DEFAULT_CACHE_VALUES,
+    Backend, BodyConfig, BodyVersion, PackOptions, ReadStats, StoreHandle, DEFAULT_CACHE_VALUES,
 };
 use apack_repro::util::Rng64;
 
@@ -30,7 +30,7 @@ USAGE:
   apack-repro compress <input> [--output <file>] [--kind weights|activations] [--substreams N]
   apack-repro decompress <input> --output <file>
   apack-repro store pack <output> [--models a,b|all] [--sample-cap N] [--substreams N] [--min-per-stream N] [--shards N]
-                         [--pipeline on|off] [--pack-workers N] [--trace <file.json>]
+                         [--body v1|v2] [--lanes N] [--pipeline on|off] [--pack-workers N] [--trace <file.json>]
   apack-repro store get <store> --tensor NAME [--chunk I | --range LO..HI] [--output <file>] [--backend mmap|file]
                         [--trace <file.json>] [--prom <file.prom>]
   apack-repro store stats <store> [--backend mmap|file] [--prom <file.prom>]
@@ -236,6 +236,35 @@ fn pipeline_tag(pipelined: bool) -> &'static str {
     }
 }
 
+/// Chunk-body configuration from `--body v1|v2` / `--lanes N` (defaults:
+/// v2, [`apack_repro::apack::DEFAULT_LANES`] lanes).
+fn parse_body_config(args: &Args) -> Result<BodyConfig, Box<dyn Error>> {
+    let body = args.flag_or("body", "v2").to_ascii_lowercase();
+    match body.as_str() {
+        "v1" | "1" => {
+            if args.flag("lanes").is_some() {
+                return Err("--lanes only applies to --body v2".into());
+            }
+            Ok(BodyConfig::v1())
+        }
+        "v2" | "2" => {
+            let lanes: u8 = args
+                .flag_or("lanes", &apack_repro::apack::DEFAULT_LANES.to_string())
+                .parse()?;
+            Ok(BodyConfig::v2(lanes))
+        }
+        other => Err(format!("unknown --body {other:?} (try v1 or v2)").into()),
+    }
+}
+
+/// Human tag for a pack's chunk-body configuration.
+fn body_tag(body: BodyConfig) -> String {
+    match body.version {
+        BodyVersion::V1 => "body v1".to_string(),
+        BodyVersion::V2 => format!("body v2, {} lanes", body.effective_lanes()),
+    }
+}
+
 /// Turn the span tracer on when `--trace <file>` was given, returning the
 /// output path (tracing stays off — one relaxed atomic load per span
 /// site — otherwise).
@@ -300,9 +329,11 @@ fn run_store(args: &Args) -> Result<(), Box<dyn Error>> {
             let shards: usize = args.flag_or("shards", "1").parse()?;
             let policy = PartitionPolicy { substreams, min_per_stream };
             let pipelined = !args.flag_or("pipeline", "on").eq_ignore_ascii_case("off");
+            let body = parse_body_config(args)?;
             let opts = PackOptions {
                 pipelined,
                 workers: args.flag_or("pack-workers", "0").parse()?,
+                body,
                 ..PackOptions::default()
             };
             if shards > 1 {
@@ -332,7 +363,12 @@ fn run_store(args: &Args) -> Result<(), Box<dyn Error>> {
                         s.file_bytes as f64 / 1024.0
                     );
                 }
-                println!("{} ({})", summary.pack.render(), pipeline_tag(pipelined));
+                println!(
+                    "{} ({}, {})",
+                    summary.pack.render(),
+                    pipeline_tag(pipelined),
+                    body_tag(body)
+                );
             } else {
                 let summary =
                     pack_model_zoo_with(Path::new(out), &models, sample_cap, policy, &opts)?;
@@ -345,7 +381,12 @@ fn run_store(args: &Args) -> Result<(), Box<dyn Error>> {
                     summary.file_bytes as f64 / 1024.0,
                     summary.compression_ratio()
                 );
-                println!("{} ({})", summary.pack.render(), pipeline_tag(pipelined));
+                println!(
+                    "{} ({}, {})",
+                    summary.pack.render(),
+                    pipeline_tag(pipelined),
+                    body_tag(body)
+                );
             }
             if let Some(p) = trace {
                 finish_trace(&p)?;
@@ -366,7 +407,14 @@ fn run_store(args: &Args) -> Result<(), Box<dyn Error>> {
             } else {
                 store.get_tensor(name)?
             };
-            println!("{name}: {} values decoded", values.len());
+            let (bv, lanes) = {
+                let meta = store.meta(name)?;
+                (meta.body_version, meta.lanes)
+            };
+            println!(
+                "{name}: {} values decoded (chunk body v{bv}, {lanes} lane(s))",
+                values.len()
+            );
             println!("{}", read_stats_line(&store.stats()));
             if let Some(out) = args.flag("output") {
                 let mut bytes = Vec::with_capacity(values.len() * 4);
@@ -399,6 +447,8 @@ fn run_store(args: &Args) -> Result<(), Box<dyn Error>> {
                         format!("{:?}", t.kind),
                         t.n_values.to_string(),
                         t.chunks.len().to_string(),
+                        format!("v{}", t.body_version),
+                        t.lanes.to_string(),
                         t.compressed_bytes().to_string(),
                         format!(
                             "{:.2}x",
@@ -416,7 +466,7 @@ fn run_store(args: &Args) -> Result<(), Box<dyn Error>> {
                         store.tensor_count(),
                         store.shard_count()
                     ),
-                    &["tensor", "bits", "kind", "values", "chunks", "bytes", "ratio"],
+                    &["tensor", "bits", "kind", "values", "chunks", "body", "lanes", "bytes", "ratio"],
                     &rows
                 )
             );
@@ -436,6 +486,21 @@ fn run_store(args: &Args) -> Result<(), Box<dyn Error>> {
                 report.chunks,
                 report.bytes
             );
+            // Body-version census: v2 tensors additionally had every lane
+            // CRC swept during the verify above.
+            let mut groups: std::collections::BTreeMap<(u8, u8), usize> =
+                std::collections::BTreeMap::new();
+            for t in store.tensor_metas() {
+                *groups.entry((t.body_version, t.lanes)).or_default() += 1;
+            }
+            let census: Vec<String> = groups
+                .iter()
+                .map(|(&(bv, lanes), &n)| match bv {
+                    1 => format!("{n} × body v1"),
+                    _ => format!("{n} × body v{bv} ({lanes} lanes, per-lane CRCs swept)"),
+                })
+                .collect();
+            println!("chunk bodies: {}", census.join(", "));
         }
         "report" => {
             let sample_cap: usize = args.flag_or("sample-cap", "8192").parse()?;

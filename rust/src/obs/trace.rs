@@ -60,6 +60,10 @@ pub enum Stage {
     ChunkIo,
     /// Arithmetic block decode (`ApackDecoder::decode_into`).
     Decode,
+    /// Lane fan-out of one chunk-body-v2 decode: `count` carries the lane
+    /// count, so Chrome traces show how wide each chunk decoded
+    /// (`BodyV2View::decode_into[_threaded]`, DESIGN.md §11).
+    DecodeLanes,
     /// Assembling decoded chunks into the caller's contiguous range.
     CopyOut,
     /// Background hot-set prefetch sweep.
@@ -83,7 +87,7 @@ pub enum Stage {
 }
 
 impl Stage {
-    pub const ALL: [Stage; 17] = [
+    pub const ALL: [Stage; 18] = [
         Stage::Request,
         Stage::Admit,
         Stage::QueueWait,
@@ -91,6 +95,7 @@ impl Stage {
         Stage::SingleFlight,
         Stage::ChunkIo,
         Stage::Decode,
+        Stage::DecodeLanes,
         Stage::CopyOut,
         Stage::Prefetch,
         Stage::Synth,
@@ -113,6 +118,7 @@ impl Stage {
             Stage::SingleFlight => "single_flight",
             Stage::ChunkIo => "chunk_io",
             Stage::Decode => "decode",
+            Stage::DecodeLanes => "decode_lanes",
             Stage::CopyOut => "copy_out",
             Stage::Prefetch => "prefetch",
             Stage::Synth => "synth",

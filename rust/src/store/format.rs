@@ -4,14 +4,20 @@
 //! # File layout
 //!
 //! ```text
-//! offset 0         magic, 8 bytes: "APACKST1"
+//! offset 0         magic, 8 bytes: "APACKST1" or "APACKST2"
 //! offset 8         chunk blobs, concatenated in write order. Each blob is
-//!                  a table-less `Container` body
+//!                  either a v1 table-less `Container` body
 //!                  (`Container::body_to_bytes`):
 //!                    n_values u64 | sym_bits u64 | ofs_bits u64
 //!                    | symbol stream | offset stream
+//!                  or a v2 multi-lane body (`apack::encode_body_v2`,
+//!                  DESIGN.md §11):
+//!                    version u8 (=2) | lanes u8 | pad u16 | n_values u64
+//!                    | lanes × (sym_bits u32 | ofs_bits u32 | crc32 u32)
+//!                    | lane payloads
 //! footer_offset    footer: `StoreIndex::to_bytes`, per tensor:
 //!                    name_len u16 | name UTF-8 | bits u8 | kind u8
+//!                    | body_version u8 | lanes u8   (APACKST2 files only)
 //!                    | n_values u64 | values_per_chunk u64
 //!                    | shared SymbolTable (97 bytes, stored exactly once)
 //!                    | chunk_count u32
@@ -38,6 +44,12 @@
 //!   offsets are bounds-checked against the chunk region before any I/O.
 //! - **Appendable.** The index lives at the tail, so writers stream chunk
 //!   blobs and seal the file with footer + trailer in one pass.
+//! - **Versioned, backward-compatible.** The leading magic names the file
+//!   format ([`StoreFormat`]); per-tensor `body_version`/`lanes` footer
+//!   fields exist only in `APACKST2` files, so every v1 file written by
+//!   earlier builds parses byte-for-byte as before (the fields default to
+//!   v1 single-stream). Readers dispatch chunk decode on the footer's
+//!   `body_version` — never by sniffing blob bytes.
 
 use std::collections::BTreeMap;
 use std::ops::Range;
@@ -47,8 +59,121 @@ use crate::apack::tablegen::TensorKind;
 use crate::apack::SymbolTable;
 use crate::error::{Error, Result};
 
-/// Leading file magic ("APACKST" + format version digit).
+/// Leading file magic ("APACKST" + format version digit) for v1 files.
 pub const STORE_MAGIC: [u8; 8] = *b"APACKST1";
+
+/// Leading file magic for v2 files (footer carries per-tensor
+/// `body_version` + `lanes`; chunk bodies may use the v2 lane format).
+pub const STORE_MAGIC_V2: [u8; 8] = *b"APACKST2";
+
+/// On-disk *file* format, named by the leading magic. The only difference
+/// is the footer schema: v2 footers carry two extra bytes per tensor
+/// (`body_version`, `lanes`). Chunk-body framing is a per-tensor property
+/// ([`TensorMeta::body_version`]), not a file property — though v1 files
+/// can only describe v1 bodies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreFormat {
+    V1,
+    V2,
+}
+
+impl StoreFormat {
+    /// The 8-byte leading magic for this format.
+    pub fn magic(self) -> [u8; 8] {
+        match self {
+            StoreFormat::V1 => STORE_MAGIC,
+            StoreFormat::V2 => STORE_MAGIC_V2,
+        }
+    }
+
+    /// Recognize a leading magic; errors on anything else.
+    pub fn from_magic(magic: &[u8]) -> Result<Self> {
+        if magic == STORE_MAGIC {
+            Ok(StoreFormat::V1)
+        } else if magic == STORE_MAGIC_V2 {
+            Ok(StoreFormat::V2)
+        } else {
+            Err(Error::Store("bad store magic".into()))
+        }
+    }
+}
+
+/// Which chunk-body framing a tensor's chunks use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BodyVersion {
+    /// Single sequential substream per chunk (the seed format).
+    V1,
+    /// N independent lanes per chunk (`apack::encode_body_v2`).
+    #[default]
+    V2,
+}
+
+impl BodyVersion {
+    pub fn as_u8(self) -> u8 {
+        match self {
+            BodyVersion::V1 => 1,
+            BodyVersion::V2 => 2,
+        }
+    }
+
+    pub fn from_u8(b: u8) -> Result<Self> {
+        match b {
+            1 => Ok(BodyVersion::V1),
+            2 => Ok(BodyVersion::V2),
+            other => Err(Error::Store(format!("unknown body version {other}"))),
+        }
+    }
+}
+
+/// Writer-side choice of chunk-body framing: version plus the *requested*
+/// lane count for v2 bodies (each chunk clamps it via
+/// [`crate::apack::lane_count`], so tiny chunks degrade gracefully — the
+/// effective per-chunk count lives in the chunk header, the per-tensor
+/// request in the footer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BodyConfig {
+    pub version: BodyVersion,
+    /// Requested lanes per chunk (v2 only; ignored for v1).
+    pub lanes: u8,
+}
+
+impl Default for BodyConfig {
+    fn default() -> Self {
+        Self { version: BodyVersion::V2, lanes: crate::apack::DEFAULT_LANES }
+    }
+}
+
+impl BodyConfig {
+    /// The seed-compatible single-stream configuration: files produced
+    /// with this are byte-identical to pre-v2 builds.
+    pub fn v1() -> Self {
+        Self { version: BodyVersion::V1, lanes: 1 }
+    }
+
+    /// v2 bodies with a specific requested lane count.
+    pub fn v2(lanes: u8) -> Self {
+        Self { version: BodyVersion::V2, lanes }
+    }
+
+    /// File format this configuration requires: v1 bodies keep writing
+    /// v1 files (bit-compatibility with the seed), v2 bodies need the
+    /// extended footer.
+    pub fn store_format(self) -> StoreFormat {
+        match self.version {
+            BodyVersion::V1 => StoreFormat::V1,
+            BodyVersion::V2 => StoreFormat::V2,
+        }
+    }
+
+    /// Effective lane request normalized per body version (v1 is always
+    /// exactly one lane).
+    pub fn effective_lanes(self) -> u8 {
+        match self.version {
+            BodyVersion::V1 => 1,
+            BodyVersion::V2 => self.lanes.clamp(1, crate::apack::MAX_LANES),
+        }
+    }
+}
 
 /// Trailer magic ("APFT", little-endian u32 at EOF-4).
 pub const FOOTER_MAGIC: u32 = 0x4150_4654;
@@ -117,6 +242,12 @@ pub struct TensorMeta {
     pub n_values: u64,
     /// Fixed values per chunk (the last chunk may be shorter). Always ≥ 1.
     pub values_per_chunk: u64,
+    /// Chunk-body framing version (1 = single stream, 2 = lanes). Always
+    /// 1 in `APACKST1` files, where the footer has no field for it.
+    pub body_version: u8,
+    /// Requested lanes per chunk for v2 bodies (each chunk's header
+    /// records its own effective, possibly smaller, count); 1 for v1.
+    pub lanes: u8,
     /// The tensor's shared symbol/probability table, stored exactly once.
     pub table: SymbolTable,
     pub chunks: Vec<ChunkMeta>,
@@ -192,8 +323,11 @@ impl StoreIndex {
         self.position(name).map(|i| &self.tensors[i])
     }
 
-    /// Serialize the footer (without its CRC — the trailer carries that).
-    pub fn to_bytes(&self) -> Vec<u8> {
+    /// Serialize the footer (without its CRC — the trailer carries that)
+    /// in the given file format. `StoreFormat::V1` output is byte-for-byte
+    /// the pre-v2 footer and therefore requires every tensor to use v1
+    /// bodies (debug-asserted — the writer enforces it at append time).
+    pub fn to_bytes(&self, format: StoreFormat) -> Vec<u8> {
         let mut out = Vec::new();
         for t in &self.tensors {
             let name = t.name.as_bytes();
@@ -201,6 +335,18 @@ impl StoreIndex {
             out.extend_from_slice(name);
             out.push(t.bits as u8);
             out.push(kind_to_byte(t.kind));
+            match format {
+                StoreFormat::V1 => {
+                    debug_assert_eq!(
+                        t.body_version, 1,
+                        "v1 footers cannot describe v2 bodies"
+                    );
+                }
+                StoreFormat::V2 => {
+                    out.push(t.body_version);
+                    out.push(t.lanes);
+                }
+            }
             out.extend_from_slice(&t.n_values.to_le_bytes());
             out.extend_from_slice(&t.values_per_chunk.to_le_bytes());
             out.extend_from_slice(&t.table.to_bytes());
@@ -217,7 +363,10 @@ impl StoreIndex {
 
     /// Parse a footer holding `tensor_count` entries, validating every
     /// record (bounds, table invariants, per-tensor value accounting).
-    pub fn from_bytes(data: &[u8], tensor_count: usize) -> Result<Self> {
+    /// `format` selects the schema: v1 footers carry no body fields
+    /// (tensors default to single-stream v1 bodies), v2 footers carry
+    /// `body_version` + `lanes` per tensor.
+    pub fn from_bytes(data: &[u8], tensor_count: usize, format: StoreFormat) -> Result<Self> {
         let bad = |m: String| Error::Store(m);
         let mut pos = 0usize;
         let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
@@ -242,6 +391,25 @@ impl StoreIndex {
                 .to_string();
             let bits = take(&mut pos, 1)?[0] as u32;
             let kind = kind_from_byte(take(&mut pos, 1)?[0])?;
+            let (body_version, lanes) = match format {
+                StoreFormat::V1 => (1u8, 1u8),
+                StoreFormat::V2 => {
+                    let bv = take(&mut pos, 1)?[0];
+                    let lanes = take(&mut pos, 1)?[0];
+                    BodyVersion::from_u8(bv)
+                        .map_err(|_| bad(format!("tensor {name}: bad body version {bv}")))?;
+                    if lanes == 0
+                        || lanes > crate::apack::MAX_LANES
+                        || !lanes.is_power_of_two()
+                        || (bv == 1 && lanes != 1)
+                    {
+                        return Err(bad(format!(
+                            "tensor {name}: bad lane count {lanes} for body v{bv}"
+                        )));
+                    }
+                    (bv, lanes)
+                }
+            };
             let n_values = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
             let values_per_chunk =
                 u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
@@ -296,6 +464,8 @@ impl StoreIndex {
                 kind,
                 n_values,
                 values_per_chunk,
+                body_version,
+                lanes,
                 table,
                 chunks,
             });
@@ -391,6 +561,8 @@ mod tests {
                 kind: TensorKind::Weights,
                 n_values: 2500,
                 values_per_chunk: 1000,
+                body_version: 1,
+                lanes: 1,
                 table: table.clone(),
                 chunks: vec![
                     ChunkMeta { offset: 8, len: 700, n_values: 1000, crc32: 1 },
@@ -404,6 +576,8 @@ mod tests {
                 kind: TensorKind::Activations,
                 n_values: 10,
                 values_per_chunk: 10,
+                body_version: 1,
+                lanes: 1,
                 table,
                 chunks: vec![ChunkMeta { offset: 1738, len: 40, n_values: 10, crc32: 4 }],
             },
@@ -413,31 +587,76 @@ mod tests {
     #[test]
     fn index_roundtrip() {
         let idx = sample_index();
-        let bytes = idx.to_bytes();
-        let parsed = StoreIndex::from_bytes(&bytes, idx.tensors.len()).unwrap();
+        let bytes = idx.to_bytes(StoreFormat::V1);
+        let parsed = StoreIndex::from_bytes(&bytes, idx.tensors.len(), StoreFormat::V1).unwrap();
         assert_eq!(parsed.tensors.len(), 2);
         let t = parsed.get("m/layer000/weights").unwrap();
         assert_eq!(t.n_values, 2500);
         assert_eq!(t.chunks.len(), 3);
         assert_eq!(t.chunks[1].offset, 708);
         assert_eq!(t.kind, TensorKind::Weights);
+        assert_eq!((t.body_version, t.lanes), (1, 1));
         assert!(parsed.get("nope").is_none());
+    }
+
+    #[test]
+    fn index_roundtrip_v2() {
+        let mut idx = sample_index();
+        idx.tensors[0].body_version = 2;
+        idx.tensors[0].lanes = 16;
+        let idx = StoreIndex::new(idx.tensors);
+        let bytes = idx.to_bytes(StoreFormat::V2);
+        // Two extra footer bytes per tensor, nothing else.
+        assert_eq!(bytes.len(), sample_index().to_bytes(StoreFormat::V1).len() + 2 * 2);
+        let parsed = StoreIndex::from_bytes(&bytes, 2, StoreFormat::V2).unwrap();
+        let t = parsed.get("m/layer000/weights").unwrap();
+        assert_eq!((t.body_version, t.lanes), (2, 16));
+        let a = parsed.get("m/layer000/activations").unwrap();
+        assert_eq!((a.body_version, a.lanes), (1, 1));
+        // Parsing v2 bytes with the v1 schema must fail, not misread.
+        assert!(StoreIndex::from_bytes(&bytes, 2, StoreFormat::V1).is_err());
+    }
+
+    #[test]
+    fn index_rejects_bad_body_fields() {
+        let mut idx = sample_index();
+        idx.tensors[0].body_version = 2;
+        idx.tensors[0].lanes = 16;
+        let idx = StoreIndex::new(idx.tensors);
+        let bytes = idx.to_bytes(StoreFormat::V2);
+        let name_len = "m/layer000/weights".len();
+        let body_at = 2 + name_len + 2; // name_len u16 | name | bits | kind
+        for (delta, what) in [(0usize, "body version"), (1usize, "lanes")] {
+            for bad in [0u8, 3, 5, 65, 255] {
+                let mut b = bytes.clone();
+                b[body_at + delta] = bad;
+                assert!(
+                    StoreIndex::from_bytes(&b, 2, StoreFormat::V2).is_err(),
+                    "bad {what} {bad} must not parse"
+                );
+            }
+        }
+        // v1 bodies must declare exactly one lane.
+        let mut b = bytes.clone();
+        b[body_at] = 1;
+        assert!(StoreIndex::from_bytes(&b, 2, StoreFormat::V2).is_err());
     }
 
     #[test]
     fn index_rejects_corruption() {
         let idx = sample_index();
-        let bytes = idx.to_bytes();
+        let bytes = idx.to_bytes(StoreFormat::V1);
         // Truncation at every prefix either errors or never panics.
         for keep in [0, 1, 5, bytes.len() / 2, bytes.len() - 1] {
             assert!(
-                StoreIndex::from_bytes(&bytes[..keep], idx.tensors.len()).is_err(),
+                StoreIndex::from_bytes(&bytes[..keep], idx.tensors.len(), StoreFormat::V1)
+                    .is_err(),
                 "keep={keep}"
             );
         }
         // Wrong tensor count: too many -> truncated; too few -> trailing.
-        assert!(StoreIndex::from_bytes(&bytes, 3).is_err());
-        assert!(StoreIndex::from_bytes(&bytes, 1).is_err());
+        assert!(StoreIndex::from_bytes(&bytes, 3, StoreFormat::V1).is_err());
+        assert!(StoreIndex::from_bytes(&bytes, 1, StoreFormat::V1).is_err());
     }
 
     #[test]
@@ -452,13 +671,15 @@ mod tests {
             kind: TensorKind::Weights,
             n_values: 35,
             values_per_chunk: 10,
+            body_version: 1,
+            lanes: 1,
             table,
             chunks: vec![
                 ChunkMeta { offset: 8, len: 10, n_values: 10, crc32: 0 },
                 ChunkMeta { offset: 18, len: 10, n_values: 25, crc32: 0 },
             ],
         }]);
-        let err = StoreIndex::from_bytes(&hostile.to_bytes(), 1);
+        let err = StoreIndex::from_bytes(&hostile.to_bytes(StoreFormat::V1), 1, StoreFormat::V1);
         assert!(err.is_err(), "oversized last chunk must not parse");
     }
 

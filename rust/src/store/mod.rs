@@ -17,6 +17,11 @@
 //! ```text
 //! single file:   model.apackstore           (format.rs: magic | chunk
 //!                                            blobs | footer index | trailer)
+//!                                           magic APACKST1: v1 single-stream
+//!                                            chunk bodies; APACKST2: chunk
+//!                                            body v2 lane bodies, footer
+//!                                            records body version + lanes
+//!                                            per tensor ([`BodyConfig`])
 //!
 //! sharded dir:   model.apackstore.d/
 //!                  MANIFEST                 (shard.rs: magic | shard_count
@@ -94,7 +99,9 @@ pub mod shard;
 pub mod writer;
 
 pub use cache::{ChunkCache, ScratchPool};
-pub use format::{crc32, ChunkMeta, StoreIndex, TensorMeta};
+pub use format::{
+    crc32, BodyConfig, BodyVersion, ChunkMeta, StoreFormat, StoreIndex, TensorMeta,
+};
 pub use handle::StoreHandle;
 pub use io::{Backend, ChunkSource, FileSource, MmapSource};
 pub use pipeline::PackOptions;
@@ -105,6 +112,6 @@ pub use shard::{
     MANIFEST_FILE,
 };
 pub use writer::{
-    encode_tensor, pack_model_zoo, pack_model_zoo_with, zoo_value_estimate, EncodedChunk,
-    EncodedTensor, PackStats, StoreSummary, StoreWriter,
+    encode_tensor, encode_tensor_with, pack_model_zoo, pack_model_zoo_with, zoo_value_estimate,
+    EncodedChunk, EncodedTensor, PackStats, StoreSummary, StoreWriter,
 };

@@ -44,7 +44,8 @@ use crate::eval::{EVAL_SEED, PROFILE_SAMPLES};
 use crate::models::trace::{LayerTrace, ModelTrace};
 use crate::models::zoo::ModelConfig;
 
-use super::writer::{encode_tensor, EncodedTensor};
+use super::format::BodyConfig;
+use super::writer::{encode_tensor_with, EncodedTensor};
 
 /// Knobs for the zoo packers ([`super::writer::pack_model_zoo_with`] /
 /// [`super::shard::pack_model_zoo_sharded_with`]).
@@ -59,11 +60,14 @@ pub struct PackOptions {
     /// Bounded-channel capacity in *models*; `0` = `2 × workers`. Caps
     /// in-flight memory when the appender is the bottleneck.
     pub in_flight: usize,
+    /// Chunk-body configuration (version + requested v2 lane count); also
+    /// picks the file format via [`BodyConfig::store_format`].
+    pub body: BodyConfig,
 }
 
 impl Default for PackOptions {
     fn default() -> Self {
-        Self { pipelined: true, workers: 0, in_flight: 0 }
+        Self { pipelined: true, workers: 0, in_flight: 0, body: BodyConfig::default() }
     }
 }
 
@@ -110,6 +114,7 @@ pub(crate) fn encode_zoo_model(
     cfg: &ModelConfig,
     sample_cap: usize,
     policy: &PartitionPolicy,
+    body: BodyConfig,
     encode_threads: usize,
 ) -> Result<Vec<EncodedTensor>> {
     let t0 = Instant::now();
@@ -120,8 +125,9 @@ pub(crate) fn encode_zoo_model(
     let synth_nanos = t0.elapsed().as_nanos() as u64;
     let mut out = Vec::with_capacity(trace.layers.len() * 2);
     for l in &trace.layers {
-        let mut t = encode_tensor(
+        let mut t = encode_tensor_with(
             policy,
+            body,
             &format!("{}/layer{:03}/weights", cfg.name, l.layer_idx),
             l.bits,
             &l.weights,
@@ -142,8 +148,9 @@ pub(crate) fn encode_zoo_model(
                 &TableGenConfig::for_bits(l.bits),
             )?;
             let tablegen_nanos = tg0.elapsed().as_nanos() as u64;
-            let mut t = encode_tensor(
+            let mut t = encode_tensor_with(
                 policy,
+                body,
                 &format!("{}/layer{:03}/activations", cfg.name, l.layer_idx),
                 l.bits,
                 &l.activations,
@@ -170,7 +177,7 @@ pub(crate) fn pack_zoo_into<S: TensorSink>(
 ) -> Result<()> {
     if !opts.pipelined || models.len() < 2 {
         for cfg in models {
-            for t in encode_zoo_model(cfg, sample_cap, policy, 0)? {
+            for t in encode_zoo_model(cfg, sample_cap, policy, opts.body, 0)? {
                 sink.append(t)?;
             }
         }
@@ -200,7 +207,7 @@ pub(crate) fn pack_zoo_into<S: TensorSink>(
                 if i >= models.len() {
                     break;
                 }
-                let result = encode_zoo_model(&models[i], sample_cap, policy, 1);
+                let result = encode_zoo_model(&models[i], sample_cap, policy, opts.body, 1);
                 if result.is_err() {
                     abort.store(true, Ordering::Relaxed);
                 }
@@ -290,7 +297,7 @@ mod tests {
             &models,
             2048,
             policy,
-            &PackOptions { pipelined: true, workers: 3, in_flight: 2 },
+            &PackOptions { pipelined: true, workers: 3, in_flight: 2, ..PackOptions::default() },
         )
         .unwrap();
         assert_eq!(serial.tensors, piped.tensors);
@@ -324,7 +331,7 @@ mod tests {
             &models,
             512,
             &PartitionPolicy::default(),
-            &PackOptions { pipelined: true, workers: 2, in_flight: 1 },
+            &PackOptions { pipelined: true, workers: 2, in_flight: 1, ..PackOptions::default() },
         )
         .unwrap_err();
         assert!(matches!(err, crate::error::Error::Store(_)));

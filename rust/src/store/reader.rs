@@ -21,13 +21,14 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::apack::container::BodyView;
+use crate::apack::lanes::BodyV2View;
 use crate::error::{Error, Result};
 use crate::obs::{self, Counter, MetricsRegistry, RegistrySnapshot, Stage};
 use crate::util::par_map;
 
 use super::cache::{ChunkCache, ChunkKey, ScratchPool};
 use super::format::{
-    crc32, parse_trailer, StoreIndex, TensorMeta, STORE_MAGIC, TRAILER_BYTES,
+    crc32, parse_trailer, StoreFormat, StoreIndex, TensorMeta, STORE_MAGIC, TRAILER_BYTES,
 };
 use super::io::{Backend, ChunkSource};
 
@@ -217,9 +218,7 @@ impl StoreReader {
         }
         let mut magic = [0u8; 8];
         source.read_at(0, &mut magic)?;
-        if magic != STORE_MAGIC {
-            return Err(Error::Store("bad store magic".into()));
-        }
+        let format = StoreFormat::from_magic(&magic)?;
         let mut trailer_buf = [0u8; TRAILER_BYTES];
         source.read_at(file_len - TRAILER_BYTES as u64, &mut trailer_buf)?;
         let trailer = parse_trailer(&trailer_buf)?;
@@ -240,7 +239,7 @@ impl StoreReader {
         if crc32(&footer) != trailer.footer_crc {
             return Err(Error::Store("footer CRC mismatch".into()));
         }
-        let index = StoreIndex::from_bytes(&footer, trailer.tensor_count as usize)?;
+        let index = StoreIndex::from_bytes(&footer, trailer.tensor_count as usize, format)?;
         // Every chunk must live inside [magic, footer).
         for t in &index.tensors {
             for (ci, c) in t.chunks.iter().enumerate() {
@@ -340,22 +339,53 @@ impl StoreReader {
 
     /// Fetch, CRC-check and arithmetic-decode one chunk into a
     /// scratch-pool buffer — the single decode path under `get_*`,
-    /// `prefetch_chunk` and `verify`. Decodes straight from the (possibly
-    /// mmap'd) blob via [`BodyView`]: no stream copy, no fresh output
-    /// allocation, decode wall-time accounted.
-    fn decode_chunk_scratch(&self, t: &TensorMeta, ci: usize) -> Result<Vec<u32>> {
+    /// `prefetch_chunk` and `verify`. Dispatches on the tensor's recorded
+    /// body version: v1 chunks decode through [`BodyView`], v2 lane bodies
+    /// through [`BodyV2View`]. Either way the decode runs straight from
+    /// the (possibly mmap'd) blob: no stream copy, no fresh output
+    /// allocation, decode wall-time accounted. `check_lanes` additionally
+    /// runs the per-lane CRC sweep on v2 bodies (verify path only — it is
+    /// deliberately off the demand/prefetch hot path).
+    fn decode_chunk_scratch(
+        &self,
+        t: &TensorMeta,
+        ci: usize,
+        check_lanes: bool,
+    ) -> Result<Vec<u32>> {
         let blob = self.read_chunk_bytes(t, ci)?;
-        let view = BodyView::parse(&blob)?;
-        if view.n_values != t.chunks[ci].n_values {
-            return Err(Error::Store(format!(
-                "tensor {}: chunk {ci} holds {} values, index says {}",
-                t.name, view.n_values, t.chunks[ci].n_values
-            )));
-        }
-        let n = view.n_values as usize;
+        let n_expected = t.chunks[ci].n_values;
+        let count_err = |got: u64| {
+            Error::Store(format!(
+                "tensor {}: chunk {ci} holds {got} values, index says {n_expected}",
+                t.name
+            ))
+        };
+        let n = n_expected as usize;
         let mut buf = self.scratch.acquire(n);
         let t0 = Instant::now();
-        let decoded = view.decode_into(&t.table, &mut buf);
+        let decoded = match t.body_version {
+            1 => match BodyView::parse(&blob) {
+                Ok(view) if view.n_values != n_expected => Err(count_err(view.n_values)),
+                Ok(view) => view.decode_into(&t.table, &mut buf),
+                Err(e) => Err(e),
+            },
+            2 => match BodyV2View::parse(&blob) {
+                Ok(view) if view.n_values != n_expected => Err(count_err(view.n_values)),
+                Ok(view) => {
+                    if check_lanes {
+                        view.verify_lanes()
+                            .and_then(|()| view.decode_into(&t.table, &mut buf))
+                    } else {
+                        view.decode_into(&t.table, &mut buf)
+                    }
+                }
+                Err(e) => Err(e),
+            },
+            other => Err(Error::Store(format!(
+                "tensor {}: unsupported chunk body version {other}",
+                t.name
+            ))),
+        };
         self.decode_nanos.add(t0.elapsed().as_nanos() as u64);
         if let Err(e) = decoded {
             self.scratch.release(buf);
@@ -384,7 +414,7 @@ impl StoreReader {
         }
         self.cache_misses.inc();
         let t = &self.index.tensors[ti];
-        let values = Arc::new(self.decode_chunk_scratch(t, ci)?);
+        let values = Arc::new(self.decode_chunk_scratch(t, ci, false)?);
         self.cache_insert(key, &values);
         Ok(values)
     }
@@ -416,7 +446,7 @@ impl StoreReader {
                 return Ok(false);
             }
         }
-        let values = Arc::new(self.decode_chunk_scratch(t, ci)?);
+        let values = Arc::new(self.decode_chunk_scratch(t, ci, false)?);
         self.prefetched_chunks.inc();
         self.cache_insert(key, &values);
         Ok(true)
@@ -480,7 +510,9 @@ impl StoreReader {
     }
 
     /// Re-read and decode every chunk of every tensor, checking CRCs and
-    /// value counts. Bypasses the cache (this is an integrity pass over
+    /// value counts; v2 lane bodies additionally get their per-lane CRCs
+    /// swept before decode, so a corrupt lane is pinned to that lane's
+    /// first value. Bypasses the cache (this is an integrity pass over
     /// the bytes on disk, not over what happens to be resident). All
     /// (tensor, chunk) pairs fan out over one `par_map`, so a store of
     /// many small tensors verifies as fast as one big tensor.
@@ -497,7 +529,7 @@ impl StoreReader {
             // Scratch decode: the blob is CRC-checked and the decoded
             // count validated against the index inside; the buffer goes
             // straight back to the pool (verify keeps nothing).
-            let values = self.decode_chunk_scratch(t, ci)?;
+            let values = self.decode_chunk_scratch(t, ci, true)?;
             self.scratch.release(values);
             Ok(t.chunks[ci].len)
         })
@@ -554,6 +586,8 @@ mod tests {
     use crate::apack::tablegen::TensorKind;
     use crate::coordinator::PartitionPolicy;
     use crate::models::distributions::ValueProfile;
+    use crate::store::format::BodyConfig;
+    use crate::store::writer::encode_tensor_with;
     use crate::store::StoreWriter;
 
     fn temp_path(tag: &str) -> std::path::PathBuf {
@@ -724,6 +758,68 @@ mod tests {
                 });
             }
         });
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn body_versions_roundtrip_and_verify_through_reader() {
+        // One big chunk so the v2 store actually fans out to the full
+        // default lane count (small chunks degrade to fewer lanes).
+        let policy = PartitionPolicy { substreams: 1, min_per_stream: 1 << 20 };
+        let values = ValueProfile::ReluActivation { sparsity: 0.5, q: 0.93, noise_floor: 0.01 }
+            .sample(8, 40_000, 91);
+        for (tag, body, want) in [
+            ("bodyv1", BodyConfig::v1(), (1u8, 1u8)),
+            ("bodyv2", BodyConfig::default(), (2u8, crate::apack::DEFAULT_LANES)),
+        ] {
+            let path = temp_path(tag);
+            let mut w = StoreWriter::create_with(&path, policy, body).unwrap();
+            w.add_tensor("t", 8, &values, TensorKind::Activations).unwrap();
+            w.finish().unwrap();
+            for backend in [Backend::Mmap, Backend::File] {
+                let r = StoreReader::open_with(&path, backend, DEFAULT_CACHE_VALUES).unwrap();
+                let t = r.meta("t").unwrap();
+                assert_eq!((t.body_version, t.lanes), want, "{tag} {backend:?}");
+                assert_eq!(r.get_tensor("t").unwrap(), values, "{tag} {backend:?}");
+                let rep = r.verify().unwrap();
+                assert_eq!((rep.tensors, rep.chunks), (1, 1), "{tag} {backend:?}");
+            }
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    #[test]
+    fn verify_catches_corrupt_lane_behind_valid_chunk_crc() {
+        // Corrupt one byte of a v2 lane payload *before* append, so the
+        // whole-chunk CRC (computed at append time) covers the corrupted
+        // bytes and passes — only the per-lane CRC sweep can notice.
+        let path = temp_path("lanecrc");
+        let policy = PartitionPolicy { substreams: 1, min_per_stream: 1 << 20 };
+        let values = ValueProfile::ReluActivation { sparsity: 0.5, q: 0.93, noise_floor: 0.01 }
+            .sample(8, 40_000, 92);
+        let mut t = encode_tensor_with(
+            &policy,
+            BodyConfig::default(),
+            "t",
+            8,
+            &values,
+            TensorKind::Activations,
+            None,
+            0,
+        )
+        .unwrap();
+        assert_eq!(t.chunks.len(), 1);
+        let body = &mut t.chunks[0].body;
+        let mid = body.len() / 2; // deep inside the lane payloads
+        body[mid] ^= 0x10;
+        let mut w = StoreWriter::create_with(&path, policy, BodyConfig::default()).unwrap();
+        w.append_encoded(t).unwrap();
+        w.finish().unwrap();
+        let r = StoreReader::open(&path).unwrap();
+        match r.verify() {
+            Err(Error::CorruptStream { .. }) => {}
+            other => panic!("expected CorruptStream from lane CRC sweep, got {other:?}"),
+        }
         std::fs::remove_file(&path).ok();
     }
 }

@@ -44,7 +44,7 @@ use crate::error::{Error, Result};
 use crate::models::zoo::ModelConfig;
 use crate::util::par_map;
 
-use super::format::{crc32, TensorMeta};
+use super::format::{crc32, BodyConfig, TensorMeta};
 use super::io::Backend;
 use super::pipeline::{pack_zoo_into, PackOptions};
 use super::reader::{ReadStats, StoreReader, VerifyReport, DEFAULT_CACHE_VALUES};
@@ -189,6 +189,18 @@ impl ShardedStoreWriter {
     /// so repacking with a different shard count cannot leave a directory
     /// that fails the count check.
     pub fn create(dir: &Path, shards: usize, policy: PartitionPolicy) -> Result<Self> {
+        Self::create_with(dir, shards, policy, BodyConfig::default())
+    }
+
+    /// [`Self::create`] with an explicit chunk-body configuration, applied
+    /// to every shard file uniformly (mixed-version shard directories are
+    /// never produced).
+    pub fn create_with(
+        dir: &Path,
+        shards: usize,
+        policy: PartitionPolicy,
+        body: BodyConfig,
+    ) -> Result<Self> {
         if shards == 0 {
             return Err(Error::Config("sharded store needs at least one shard".into()));
         }
@@ -205,7 +217,7 @@ impl ShardedStoreWriter {
             }
         }
         let writers: Result<Vec<StoreWriter>> = (0..shards)
-            .map(|i| StoreWriter::create(&dir.join(shard_file_name(i)), policy))
+            .map(|i| StoreWriter::create_with(&dir.join(shard_file_name(i)), policy, body))
             .collect();
         Ok(Self { dir: dir.to_path_buf(), writers: writers? })
     }
@@ -503,7 +515,7 @@ pub fn pack_model_zoo_sharded_with(
     opts: &PackOptions,
 ) -> Result<ShardedStoreSummary> {
     let shards = policy.file_shards_for(requested_shards, zoo_value_estimate(models, sample_cap));
-    let mut writer = ShardedStoreWriter::create(dir, shards, policy)?;
+    let mut writer = ShardedStoreWriter::create_with(dir, shards, policy, opts.body)?;
     pack_zoo_into(&mut writer, models, sample_cap, &policy, opts)?;
     writer.finish()
 }

@@ -13,6 +13,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::apack::container::encode_body;
+use crate::apack::lanes::encode_body_v2;
 use crate::apack::tablegen::{generate_table, TableGenConfig, TensorKind};
 use crate::apack::{Histogram, SymbolTable};
 use crate::coordinator::PartitionPolicy;
@@ -21,7 +22,10 @@ use crate::models::zoo::ModelConfig;
 use crate::obs::{self, rates, Counter, MetricsRegistry, RegistrySnapshot, Stage};
 use crate::util::par_map_with;
 
-use super::format::{crc32, trailer_bytes, ChunkMeta, StoreIndex, TensorMeta, STORE_MAGIC};
+use super::format::{
+    crc32, trailer_bytes, BodyConfig, BodyVersion, ChunkMeta, StoreFormat, StoreIndex,
+    TensorMeta,
+};
 use super::pipeline::{pack_zoo_into, PackOptions};
 
 /// Ingest-stage timing/throughput breakdown for one pack (or one tensor,
@@ -114,8 +118,9 @@ impl PackStats {
     }
 }
 
-/// One encoded chunk of an [`EncodedTensor`]: the
-/// [`crate::apack::Container::body_to_bytes`] record plus its value count.
+/// One encoded chunk of an [`EncodedTensor`]: a v1
+/// ([`crate::apack::Container::body_to_bytes`]) or v2
+/// ([`crate::apack::encode_body_v2`]) body record plus its value count.
 #[derive(Debug, Clone)]
 pub struct EncodedChunk {
     pub body: Vec<u8>,
@@ -133,6 +138,10 @@ pub struct EncodedTensor {
     pub values_per_chunk: u64,
     pub table: SymbolTable,
     pub chunks: Vec<EncodedChunk>,
+    /// Chunk-body framing the chunks were encoded with (1 or 2) and the
+    /// requested v2 lane count — recorded into the footer at append time.
+    pub body_version: u8,
+    pub lanes: u8,
     /// Stage nanos attributed to this tensor (summed into [`PackStats`]
     /// at append time).
     pub synth_nanos: u64,
@@ -148,9 +157,37 @@ pub struct EncodedTensor {
 /// machine's parallelism (the serial packer's behaviour, encoding one
 /// tensor's chunks in parallel), `1` encodes chunks in-line (the pipelined
 /// packer's choice — tensor-level parallelism already saturates cores).
-/// The encoded bytes are identical either way.
+/// The encoded bytes are identical either way. Bodies use the default
+/// [`BodyConfig`] (v2 lanes); see [`encode_tensor_with`] to choose.
 pub fn encode_tensor(
     policy: &PartitionPolicy,
+    name: &str,
+    bits: u32,
+    values: &[u32],
+    kind: TensorKind,
+    table: Option<SymbolTable>,
+    encode_threads: usize,
+) -> Result<EncodedTensor> {
+    encode_tensor_with(
+        policy,
+        BodyConfig::default(),
+        name,
+        bits,
+        values,
+        kind,
+        table,
+        encode_threads,
+    )
+}
+
+/// [`encode_tensor`] with an explicit chunk-body configuration: v1
+/// single-stream bodies (the seed format, byte-identical output) or v2
+/// lane bodies at a requested lane count (each chunk clamps the request
+/// via [`crate::apack::lane_count`]).
+#[allow(clippy::too_many_arguments)]
+pub fn encode_tensor_with(
+    policy: &PartitionPolicy,
+    body: BodyConfig,
     name: &str,
     bits: u32,
     values: &[u32],
@@ -183,14 +220,18 @@ pub fn encode_tensor(
     } else {
         encode_threads
     };
+    let lanes = body.effective_lanes();
     let t0 = Instant::now();
     // One Encode span per tensor (the per-chunk encode itself runs on
     // whatever worker threads `par_map_with` picks).
     let bodies: Result<Vec<Vec<u8>>> = {
         let _enc = obs::span_n(Stage::Encode, values.len() as u64);
-        par_map_with(&chunks, threads, |chunk| encode_body(&table, chunk))
-            .into_iter()
-            .collect()
+        par_map_with(&chunks, threads, |chunk| match body.version {
+            BodyVersion::V1 => encode_body(&table, chunk),
+            BodyVersion::V2 => encode_body_v2(&table, chunk, lanes),
+        })
+        .into_iter()
+        .collect()
     };
     let bodies = bodies?;
     let encode_nanos = t0.elapsed().as_nanos() as u64;
@@ -206,6 +247,8 @@ pub fn encode_tensor(
         values_per_chunk,
         table,
         chunks,
+        body_version: body.version.as_u8(),
+        lanes,
         synth_nanos: 0,
         tablegen_nanos,
         encode_nanos,
@@ -242,6 +285,10 @@ pub struct StoreWriter {
     offset: u64,
     tensors: Vec<TensorMeta>,
     policy: PartitionPolicy,
+    /// Chunk-body configuration for tensors encoded by this writer; also
+    /// fixes the file format (magic + footer schema), chosen at create
+    /// time because the magic is the first write.
+    body: BodyConfig,
     /// `ingest.*` metrics (DESIGN.md §10); [`PackStats`] is the view over
     /// a snapshot of this registry at [`Self::finish`] time.
     registry: MetricsRegistry,
@@ -258,17 +305,28 @@ pub struct StoreWriter {
 impl StoreWriter {
     /// Create (truncate) the store file and write the leading magic.
     /// `policy` controls chunking: each tensor is split into
-    /// `policy.shards_for(len)` fixed-value-count chunks.
+    /// `policy.shards_for(len)` fixed-value-count chunks. Bodies use the
+    /// default [`BodyConfig`] (v2 lanes); see [`Self::create_with`].
     pub fn create(path: &Path, policy: PartitionPolicy) -> Result<Self> {
+        Self::create_with(path, policy, BodyConfig::default())
+    }
+
+    /// [`Self::create`] with an explicit chunk-body configuration. The
+    /// body version fixes the file format — `BodyConfig::v1()` writes a
+    /// seed-compatible `APACKST1` file byte-identical to pre-v2 builds;
+    /// v2 bodies write `APACKST2` (extended footer).
+    pub fn create_with(path: &Path, policy: PartitionPolicy, body: BodyConfig) -> Result<Self> {
         let file = File::create(path)?;
         let mut out = BufWriter::new(file);
-        out.write_all(&STORE_MAGIC)?;
+        let magic = body.store_format().magic();
+        out.write_all(&magic)?;
         let registry = MetricsRegistry::new();
         Ok(Self {
             out,
-            offset: STORE_MAGIC.len() as u64,
+            offset: magic.len() as u64,
             tensors: Vec::new(),
             policy,
+            body,
             values: registry.counter("ingest.values"),
             raw_bits: registry.counter("ingest.raw_bits"),
             written_bytes: registry.counter("ingest.written_bytes"),
@@ -305,7 +363,8 @@ impl StoreWriter {
         kind: TensorKind,
     ) -> Result<()> {
         self.validate_name(name)?;
-        let t = encode_tensor(&self.policy, name, bits, values, kind, None, 0)?;
+        let t =
+            encode_tensor_with(&self.policy, self.body, name, bits, values, kind, None, 0)?;
         self.append_encoded(t)
     }
 
@@ -320,7 +379,16 @@ impl StoreWriter {
     ) -> Result<()> {
         self.validate_name(name)?;
         let bits = table.bits();
-        let t = encode_tensor(&self.policy, name, bits, values, kind, Some(table), 0)?;
+        let t = encode_tensor_with(
+            &self.policy,
+            self.body,
+            name,
+            bits,
+            values,
+            kind,
+            Some(table),
+            0,
+        )?;
         self.append_encoded(t)
     }
 
@@ -330,6 +398,13 @@ impl StoreWriter {
     /// writer's [`PackStats`].
     pub fn append_encoded(&mut self, t: EncodedTensor) -> Result<()> {
         self.validate_name(&t.name)?;
+        if self.body.store_format() == StoreFormat::V1 && t.body_version != 1 {
+            return Err(Error::Store(format!(
+                "tensor {:?} uses body v{}, but this APACKST1 file can only \
+                 describe v1 bodies",
+                t.name, t.body_version
+            )));
+        }
         let t0 = Instant::now();
         let mut append = obs::span(Stage::Append);
         let mut metas = Vec::with_capacity(t.chunks.len());
@@ -359,10 +434,19 @@ impl StoreWriter {
             kind: t.kind,
             n_values: t.n_values,
             values_per_chunk: t.values_per_chunk,
+            body_version: t.body_version,
+            lanes: t.lanes,
             table: t.table,
             chunks: metas,
         });
         Ok(())
+    }
+
+    /// The writer's chunk-body configuration (callers producing
+    /// [`EncodedTensor`]s off-writer must encode with the same config for
+    /// the append-time format check to pass).
+    pub fn body(&self) -> BodyConfig {
+        self.body
     }
 
     /// The writer's chunking policy (callers producing [`EncodedTensor`]s
@@ -386,7 +470,7 @@ impl StoreWriter {
     /// this returns.
     pub fn finish(mut self) -> Result<StoreSummary> {
         let index = StoreIndex::new(std::mem::take(&mut self.tensors));
-        let footer = index.to_bytes();
+        let footer = index.to_bytes(self.body.store_format());
         let footer_offset = self.offset;
         let t0 = Instant::now();
         {
@@ -465,7 +549,7 @@ pub fn pack_model_zoo_with(
     policy: PartitionPolicy,
     opts: &PackOptions,
 ) -> Result<StoreSummary> {
-    let mut writer = StoreWriter::create(path, policy)?;
+    let mut writer = StoreWriter::create_with(path, policy, opts.body)?;
     pack_zoo_into(&mut writer, models, sample_cap, &policy, opts)?;
     writer.finish()
 }
@@ -542,6 +626,61 @@ mod tests {
         let r = StoreReader::open(&path).unwrap();
         assert_eq!(r.get_tensor("e").unwrap(), Vec::<u32>::new());
         assert_eq!(r.meta("e").unwrap().chunks.len(), 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v1_body_config_writes_seed_compatible_store() {
+        let path = temp_path("v1cfg");
+        let policy = PartitionPolicy { substreams: 4, min_per_stream: 256 };
+        let mut w = StoreWriter::create_with(&path, policy, BodyConfig::v1()).unwrap();
+        let a = tensor(10_000, 9);
+        w.add_tensor("a", 8, &a, TensorKind::Activations).unwrap();
+        w.finish().unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[..8], b"APACKST1");
+        let r = StoreReader::open(&path).unwrap();
+        assert_eq!(r.get_tensor("a").unwrap(), a);
+        assert_eq!(r.meta("a").unwrap().body_version, 1);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn default_pack_writes_v2_lane_bodies() {
+        let path = temp_path("v2def");
+        let policy = PartitionPolicy { substreams: 1, min_per_stream: 1 << 20 };
+        let mut w = StoreWriter::create(&path, policy).unwrap();
+        let a = tensor(40_000, 5);
+        w.add_tensor("a", 8, &a, TensorKind::Activations).unwrap();
+        w.finish().unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[..8], b"APACKST2");
+        let r = StoreReader::open(&path).unwrap();
+        let m = r.meta("a").unwrap();
+        assert_eq!((m.body_version, m.lanes), (2, crate::apack::DEFAULT_LANES));
+        assert_eq!(r.get_tensor("a").unwrap(), a);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn v1_file_rejects_v2_encoded_tensor() {
+        let path = temp_path("v1rej");
+        let policy = PartitionPolicy::default();
+        let mut w = StoreWriter::create_with(&path, policy, BodyConfig::v1()).unwrap();
+        let t = encode_tensor_with(
+            &policy,
+            BodyConfig::default(),
+            "x",
+            8,
+            &tensor(5000, 2),
+            TensorKind::Weights,
+            None,
+            1,
+        )
+        .unwrap();
+        assert_eq!(t.body_version, 2);
+        assert!(w.append_encoded(t).is_err());
+        drop(w);
         std::fs::remove_file(&path).ok();
     }
 

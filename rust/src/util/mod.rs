@@ -7,5 +7,5 @@ pub mod json;
 pub mod par;
 pub mod rng;
 
-pub use par::{par_map, par_map_owned, par_map_with};
+pub use par::{par_map, par_map_owned, par_map_owned_with, par_map_with};
 pub use rng::Rng64;

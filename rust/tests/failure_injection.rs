@@ -9,7 +9,7 @@ use apack_repro::apack::tablegen::{table_for_tensor, TensorKind};
 use apack_repro::apack::{Container, SymbolTable};
 use apack_repro::coordinator::PartitionPolicy;
 use apack_repro::runtime::ArtifactManifest;
-use apack_repro::store::format::{crc32, trailer_bytes, StoreIndex, TRAILER_BYTES};
+use apack_repro::store::format::{crc32, trailer_bytes, StoreFormat, StoreIndex, TRAILER_BYTES};
 use apack_repro::store::{
     shard_file_name, shard_for_name, ShardedStoreReader, ShardedStoreWriter, StoreHandle,
     StoreReader, StoreWriter, MANIFEST_FILE,
@@ -233,7 +233,8 @@ fn store_index_past_eof_rejected() {
     let footer_len = u64::from_le_bytes(trailer[8..16].try_into().unwrap());
     let footer =
         &bytes[footer_offset as usize..(footer_offset + footer_len) as usize];
-    let index = StoreIndex::from_bytes(footer, 1).unwrap();
+    // Default-packed stores carry v2 lane bodies under the APACKST2 magic.
+    let index = StoreIndex::from_bytes(footer, 1, StoreFormat::V2).unwrap();
 
     for bogus_offset in [footer_offset, bytes.len() as u64, u64::MAX - 100] {
         // Rewrite the footer with chunk 2 relocated past the chunk region,
@@ -241,7 +242,7 @@ fn store_index_past_eof_rejected() {
         // index, not a torn write).
         let mut hostile = index.clone();
         hostile.tensors[0].chunks[2].offset = bogus_offset;
-        let hostile_footer = StoreIndex::new(hostile.tensors).to_bytes();
+        let hostile_footer = StoreIndex::new(hostile.tensors).to_bytes(StoreFormat::V2);
         let mut file = bytes[..footer_offset as usize].to_vec();
         file.extend_from_slice(&hostile_footer);
         file.extend_from_slice(&trailer_bytes(

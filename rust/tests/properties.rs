@@ -375,6 +375,84 @@ fn prop_incremental_tablegen_matches_seed() {
     }
 }
 
+/// Chunk-body v2 invariant (DESIGN.md §11): for every `ValueProfile` ×
+/// 4/8/16-bit widths, a v2 lane body decodes bit-exactly — through both
+/// the struct-of-arrays decoder and the threaded lane-per-sub-slice
+/// decoder — to the same values as the v1 single-stream body over the
+/// same symbol table, and both match the original tensor.
+#[test]
+fn prop_body_v2_bit_exact_across_profiles_and_widths() {
+    use apack_repro::apack::container::{encode_body, BodyView};
+    use apack_repro::apack::lanes::{encode_body_v2, lane_count, BodyV2View};
+    use apack_repro::models::distributions::ValueProfile;
+    let profiles = [
+        ValueProfile::TwoSidedGeometric { q: 0.9, noise_floor: 0.01 },
+        ValueProfile::Sparse { sparsity: 0.6, q: 0.85 },
+        ValueProfile::ReluActivation { sparsity: 0.5, q: 0.93, noise_floor: 0.01 },
+        ValueProfile::Uniform,
+    ];
+    for bits in [4u32, 8, 16] {
+        for (pi, profile) in profiles.iter().enumerate() {
+            let n = if bits == 16 { 8192 } else { 20_000 };
+            let values = profile.sample(bits, n, 0x1A9E_5 + pi as u64 + bits as u64);
+            let hist = Histogram::from_values(bits, &values);
+            let table =
+                generate_table(&hist, TensorKind::Activations, &TableGenConfig::for_bits(bits))
+                    .unwrap();
+
+            let v1 = encode_body(&table, &values).unwrap();
+            let mut from_v1 = vec![0u32; n];
+            BodyView::parse(&v1).unwrap().decode_into(&table, &mut from_v1).unwrap();
+            assert_eq!(from_v1, values, "bits {bits} profile {pi}: v1 body");
+
+            let v2 = encode_body_v2(&table, &values, 16).unwrap();
+            let view = BodyV2View::parse(&v2).unwrap();
+            assert_eq!(
+                view.lanes(),
+                lane_count(n, 16) as usize,
+                "bits {bits} profile {pi}: directory lane count"
+            );
+            let mut soa = vec![0u32; n];
+            view.decode_into(&table, &mut soa).unwrap();
+            assert_eq!(soa, from_v1, "bits {bits} profile {pi}: SoA vs v1");
+            let mut threaded = vec![0u32; n];
+            view.decode_into_threaded(&table, &mut threaded, 0).unwrap();
+            assert_eq!(threaded, from_v1, "bits {bits} profile {pi}: threaded vs v1");
+        }
+    }
+}
+
+/// Chunk-body v2 tiny-chunk invariant: every chunk size from 1 to 4096
+/// values round-trips exactly, and the lane directory always records the
+/// deterministic degraded lane count (`lane_count`) — small chunks fall
+/// back toward a single lane rather than producing starved lanes.
+#[test]
+fn prop_body_v2_tiny_chunks_degrade_lanes() {
+    use apack_repro::apack::lanes::{encode_body_v2, lane_count, BodyV2View};
+    use apack_repro::models::distributions::ValueProfile;
+    let all = ValueProfile::ReluActivation { sparsity: 0.5, q: 0.93, noise_floor: 0.01 }
+        .sample(8, 4096, 0x7177);
+    let hist = Histogram::from_values(8, &all);
+    let table =
+        generate_table(&hist, TensorKind::Activations, &TableGenConfig::default()).unwrap();
+    for n in 1..=4096usize {
+        let values = &all[..n];
+        let body = encode_body_v2(&table, values, 16).unwrap();
+        let view = BodyV2View::parse(&body).unwrap();
+        assert_eq!(view.lanes(), lane_count(n, 16) as usize, "n {n}");
+        let mut out = vec![0u32; n];
+        view.decode_into(&table, &mut out).unwrap();
+        assert_eq!(out, values, "n {n}");
+        // The threaded decoder agrees (spot-checked — spawning threads
+        // for all 4096 sizes would dominate the test's runtime).
+        if n % 512 == 0 || n == 1 {
+            let mut out = vec![0u32; n];
+            view.decode_into_threaded(&table, &mut out, 0).unwrap();
+            assert_eq!(out, values, "n {n} threaded");
+        }
+    }
+}
+
 /// Invariant 4: sharded compression reassembles exactly for any partition
 /// width.
 #[test]

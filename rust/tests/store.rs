@@ -290,6 +290,81 @@ fn zoo_sharded_pack_matches_single_file() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// Cross-version matrix (ISSUE 7): the same zoo subset packed with v1 and
+/// v2 chunk bodies decodes bit-identically tensor for tensor; the
+/// footprint delta (v2's lane-directory framing) is reported; and on the
+/// 8-bit tensors the aggregate lane-directory overhead stays under 1% of
+/// the v2 body bytes. A one-chunk-per-tensor policy and a large sample
+/// cap keep chunks big enough for the full 16-lane fan-out — the regime
+/// the <1% bound is specified for (tiny chunks degrade to fewer lanes,
+/// paying proportionally less directory).
+#[test]
+fn cross_version_zoo_matrix_bit_exact_and_overhead_bounded() {
+    use apack_repro::apack::lanes::{lane_count, DEFAULT_LANES};
+    use apack_repro::models::zoo::model_by_name;
+    use apack_repro::store::{pack_model_zoo_with, BodyConfig, PackOptions};
+
+    let models: Vec<_> = ["ncf", "alexnet_eyeriss"]
+        .iter()
+        .map(|n| model_by_name(n).unwrap())
+        .collect();
+    let sample_cap = 131_072;
+    let policy = PartitionPolicy { substreams: 1, min_per_stream: 1 << 20 };
+
+    let v1_path = temp_path("matrix_v1");
+    let v2_path = temp_path("matrix_v2");
+    let v1_opts = PackOptions { body: BodyConfig::v1(), ..PackOptions::default() };
+    let v1 = pack_model_zoo_with(&v1_path, &models, sample_cap, policy, &v1_opts).unwrap();
+    let v2 =
+        pack_model_zoo_with(&v2_path, &models, sample_cap, policy, &PackOptions::default())
+            .unwrap();
+    assert_eq!(v1.tensors, v2.tensors);
+    assert_eq!(v1.chunks, v2.chunks);
+
+    let r1 = StoreHandle::open(&v1_path).unwrap();
+    let r2 = StoreHandle::open(&v2_path).unwrap();
+    for name in r1.tensor_names() {
+        assert_eq!(
+            r1.get_tensor(name).unwrap(),
+            r2.get_tensor(name).unwrap(),
+            "{name}: v1 and v2 stores must decode identically"
+        );
+    }
+    println!(
+        "cross-version footprint: v1 {} B, v2 {} B ({:+} B for lane directories)",
+        v1.file_bytes,
+        v2.file_bytes,
+        v2.file_bytes as i64 - v1.file_bytes as i64
+    );
+
+    // Lane-directory overhead, computed from the index: each v2 chunk
+    // body spends a 12-byte header plus 12 bytes per lane on framing.
+    let mut dir_bytes = 0u64;
+    let mut body_bytes = 0u64;
+    for t in r2.tensor_metas().iter().filter(|t| t.bits == 8 && !t.chunks.is_empty()) {
+        assert_eq!((t.body_version, t.lanes), (2, DEFAULT_LANES), "{}", t.name);
+        for c in &t.chunks {
+            dir_bytes += 12 + 12 * lane_count(c.n_values as usize, DEFAULT_LANES) as u64;
+            body_bytes += c.len;
+        }
+    }
+    assert!(body_bytes > 0, "the subset must contain 8-bit tensors");
+    let overhead = dir_bytes as f64 / body_bytes as f64;
+    println!(
+        "lane-directory overhead on 8-bit tensors: {dir_bytes} B over {body_bytes} B \
+         ({:.3}%)",
+        100.0 * overhead
+    );
+    assert!(
+        overhead < 0.01,
+        "lane-directory overhead {:.3}% exceeds the 1% budget",
+        100.0 * overhead
+    );
+
+    std::fs::remove_file(&v1_path).ok();
+    std::fs::remove_file(&v2_path).ok();
+}
+
 /// Store-level verify passes on a clean store and the footprint numbers
 /// in the index are consistent with the file.
 #[test]
