@@ -166,11 +166,20 @@ impl BodyConfig {
     }
 
     /// Effective lane request normalized per body version (v1 is always
-    /// exactly one lane).
+    /// exactly one lane). v2 requests are clamped to
+    /// `1..=MAX_LANES` and rounded *down* to a power of two — the footer
+    /// only admits power-of-two lane counts, so a raw request like 12
+    /// must become 8 here rather than produce a store that can never be
+    /// reopened.
     pub fn effective_lanes(self) -> u8 {
         match self.version {
             BodyVersion::V1 => 1,
-            BodyVersion::V2 => self.lanes.clamp(1, crate::apack::MAX_LANES),
+            BodyVersion::V2 => {
+                let capped = self.lanes.clamp(1, crate::apack::MAX_LANES);
+                // Largest power of two <= capped (capped >= 1, so the
+                // shift never exceeds the width).
+                1u8 << (7 - capped.leading_zeros())
+            }
         }
     }
 }
@@ -539,6 +548,31 @@ mod tests {
         assert_eq!(crc32(b""), 0);
         assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
         assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn effective_lanes_rounds_to_power_of_two() {
+        // Non-power-of-two requests must round down: the footer rejects
+        // anything else, so emitting the raw value would write stores
+        // that can never be reopened.
+        for (req, want) in [
+            (0u8, 1u8),
+            (1, 1),
+            (2, 2),
+            (3, 2),
+            (5, 4),
+            (12, 8),
+            (16, 16),
+            (33, 32),
+            (crate::apack::MAX_LANES, crate::apack::MAX_LANES),
+            (crate::apack::MAX_LANES + 1, crate::apack::MAX_LANES),
+            (255, crate::apack::MAX_LANES),
+        ] {
+            let got = BodyConfig::v2(req).effective_lanes();
+            assert_eq!(got, want, "request {req}");
+            assert!(got.is_power_of_two());
+        }
+        assert_eq!(BodyConfig::v1().effective_lanes(), 1);
     }
 
     #[test]

@@ -663,6 +663,24 @@ mod tests {
     }
 
     #[test]
+    fn non_power_of_two_lane_request_packs_and_reopens() {
+        // `--lanes 12` (any non-power-of-two) must round down to 8 at
+        // encode time; previously the raw value reached the footer and
+        // the store could never be reopened.
+        let path = temp_path("lanes12");
+        let policy = PartitionPolicy { substreams: 1, min_per_stream: 1 << 20 };
+        let mut w = StoreWriter::create_with(&path, policy, BodyConfig::v2(12)).unwrap();
+        let a = tensor(40_000, 11);
+        w.add_tensor("a", 8, &a, TensorKind::Activations).unwrap();
+        w.finish().unwrap();
+        let r = StoreReader::open(&path).unwrap();
+        let m = r.meta("a").unwrap();
+        assert_eq!((m.body_version, m.lanes), (2, 8));
+        assert_eq!(r.get_tensor("a").unwrap(), a);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
     fn v1_file_rejects_v2_encoded_tensor() {
         let path = temp_path("v1rej");
         let policy = PartitionPolicy::default();
