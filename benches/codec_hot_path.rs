@@ -73,6 +73,7 @@ fn main() {
     println!("{}", s.report(None));
 
     tracing_overhead_gate(quick);
+    attribution_overhead_gate(quick);
 }
 
 /// Observability overhead gate (ISSUE 6): the span site inside the block
@@ -129,6 +130,78 @@ fn tracing_overhead_gate(quick: bool) {
     assert!(
         best_on as f64 <= best_off as f64 * 1.03 + 100_000.0,
         "tracing-enabled block decode ({best_on} ns) exceeds the 3% overhead \
+         budget over disabled ({best_off} ns)"
+    );
+}
+
+/// Attribution-layer overhead gate (ISSUE 8): the same block-Lut decode
+/// measured through the **store reader** — every read is a cache-disabled
+/// demand decode that updates the per-chunk heatmap counters and, when
+/// tracing is on, records the full span path the profile folds. The whole
+/// attribution stack (heatmap shards + spans) must stay within the same
+/// 3% budget as the bare tracer gate above, interleaved best-of-N with
+/// the same absolute epsilon against shared-runner jitter.
+fn attribution_overhead_gate(quick: bool) {
+    use apack_repro::coordinator::PartitionPolicy;
+    use apack_repro::store::{BodyConfig, StoreHandle, StoreWriter};
+
+    let n = 1_000_000usize;
+    let values = ValueProfile::ReluActivation { sparsity: 0.5, q: 0.93, noise_floor: 0.01 }
+        .sample(8, n, 7);
+    let path = std::env::temp_dir()
+        .join(format!("apack_attr_gate_{}.apackstore", std::process::id()));
+    // One v1 single-stream chunk: the store-body counterpart of the
+    // block-Lut decode the tracer gate times.
+    let policy = PartitionPolicy { substreams: 1, min_per_stream: n };
+    let mut w = StoreWriter::create_with(&path, policy, BodyConfig::v1())
+        .expect("create gate store");
+    w.add_tensor("t", 8, &values, TensorKind::Activations).expect("pack gate tensor");
+    w.finish().expect("finish gate store");
+    // Cache budget 0: every get_chunk is a demand miss straight through
+    // decode + heatmap accounting.
+    let store = StoreHandle::open_with(&path, Default::default(), 0).expect("open gate store");
+    let decode_once = || {
+        let got = store.get_chunk("t", 0).expect("gate chunk decode");
+        assert_eq!(got.len(), n);
+    };
+
+    obs::disable();
+    obs::drain();
+    decode_once(); // warmup; also checks the path works at all
+
+    let rounds: usize = if quick { 7 } else { 15 };
+    let (mut best_off, mut best_on) = (u64::MAX, u64::MAX);
+    for _ in 0..rounds {
+        obs::disable();
+        let t = Instant::now();
+        decode_once();
+        best_off = best_off.min(t.elapsed().as_nanos() as u64);
+
+        obs::enable();
+        let t = Instant::now();
+        decode_once();
+        best_on = best_on.min(t.elapsed().as_nanos() as u64);
+    }
+    obs::disable();
+    let spans = obs::drain().len();
+    assert!(spans >= rounds, "enabled rounds recorded {spans} spans, expected >= {rounds}");
+
+    // The heatmap saw every read (warmup + both sides of every round).
+    let heat = store.heatmap();
+    assert_eq!(heat.len(), 1, "gate store has one chunk");
+    assert_eq!(heat[0].demand_misses, (1 + 2 * rounds) as u64);
+    drop(store);
+    std::fs::remove_file(&path).ok();
+
+    let overhead = best_on as f64 / best_off.max(1) as f64 - 1.0;
+    println!(
+        "attribution overhead gate: store chunk decode {:+.2}% enabled vs disabled \
+         (best of {rounds}: {best_on} ns vs {best_off} ns, {spans} spans recorded)",
+        100.0 * overhead
+    );
+    assert!(
+        best_on as f64 <= best_off as f64 * 1.03 + 100_000.0,
+        "attribution-enabled store decode ({best_on} ns) exceeds the 3% overhead \
          budget over disabled ({best_off} ns)"
     );
 }

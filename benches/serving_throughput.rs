@@ -171,6 +171,7 @@ fn main() {
                         coalescing,
                         deadline: None,
                         prefetch: None,
+                        slo: None,
                     },
                 )
                 .expect("start engine");
@@ -212,6 +213,7 @@ fn main() {
                 coalescing,
                 deadline: None,
                 prefetch: None,
+                slo: None,
             },
         )
         .expect("start engine");
@@ -266,6 +268,7 @@ fn main() {
             coalescing: true,
             deadline: None,
             prefetch: None,
+            slo: None,
         },
     )
     .expect("start engine");
@@ -312,6 +315,7 @@ fn main() {
             coalescing: true,
             deadline: Some(Duration::ZERO),
             prefetch: None,
+            slo: None,
         },
     )
     .expect("start engine");

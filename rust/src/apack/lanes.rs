@@ -399,8 +399,10 @@ impl<'a> BodyV2View<'a> {
     /// (`threads == 0` uses the machine's parallelism). Bit-identical to
     /// [`Self::decode_into`]; on corruption the first failing lane *in
     /// lane order* is reported, its position rebased to the lane's start.
-    /// Opens the `DecodeLanes` span on the calling thread; the per-lane
-    /// `Decode` spans come from each worker's block decode.
+    /// Opens the `DecodeLanes` span on the calling thread and threads its
+    /// id to the workers ([`obs::with_parent`]), so each lane's block
+    /// `Decode` span lands as a child of `DecodeLanes` instead of
+    /// rooting at 0 — span-forest coverage holds on the lane path.
     pub fn decode_into_threaded(
         &self,
         table: &SymbolTable,
@@ -414,7 +416,10 @@ impl<'a> BodyV2View<'a> {
                 self.n_values
             )));
         }
-        let _fan = obs::span_n(Stage::DecodeLanes, self.lanes as u64);
+        // Cross-thread fan-out span: begun here, finished after the
+        // workers join; its id parents every worker-lane Decode span.
+        let fan = obs::ManualSpan::begin(Stage::DecodeLanes);
+        let fan_id = fan.as_ref().map(|s| s.id()).unwrap_or(0);
         let n = out.len();
         let threads = if threads == 0 {
             std::thread::available_parallelism().map(|t| t.get()).unwrap_or(4)
@@ -432,22 +437,28 @@ impl<'a> BodyV2View<'a> {
         }
         debug_assert!(rest.is_empty());
 
-        par_map_owned_with(jobs, threads, |(l, slice)| -> Result<()> {
-            let e = &self.entries[l];
-            let (sym, ofs) = self.lane_streams(l);
-            let mut dec = ApackDecoder::new(table, BitReader::new(sym, e.sym_bits as usize))?;
-            let mut ofs_r = BitReader::new(ofs, e.ofs_bits as usize);
-            let lane_base = lane_range(n, self.lanes, l).start;
-            dec.decode_into(slice, &mut ofs_r).map_err(|err| match err {
-                Error::CorruptStream { position } => {
-                    Error::CorruptStream { position: lane_base + position }
-                }
-                other => other,
+        let result = par_map_owned_with(jobs, threads, |(l, slice)| -> Result<()> {
+            obs::with_parent(fan_id, || {
+                let e = &self.entries[l];
+                let (sym, ofs) = self.lane_streams(l);
+                let mut dec =
+                    ApackDecoder::new(table, BitReader::new(sym, e.sym_bits as usize))?;
+                let mut ofs_r = BitReader::new(ofs, e.ofs_bits as usize);
+                let lane_base = lane_range(n, self.lanes, l).start;
+                dec.decode_into(slice, &mut ofs_r).map_err(|err| match err {
+                    Error::CorruptStream { position } => {
+                        Error::CorruptStream { position: lane_base + position }
+                    }
+                    other => other,
+                })
             })
         })
         .into_iter()
-        .collect::<Result<Vec<()>>>()?;
-        Ok(())
+        .collect::<Result<Vec<()>>>();
+        if let Some(f) = fan {
+            f.finish_with(self.lanes as u64);
+        }
+        result.map(|_| ())
     }
 }
 

@@ -32,8 +32,10 @@ USAGE:
   apack-repro store pack <output> [--models a,b|all] [--sample-cap N] [--substreams N] [--min-per-stream N] [--shards N]
                          [--body v1|v2] [--lanes N] [--pipeline on|off] [--pack-workers N] [--trace <file.json>]
   apack-repro store get <store> --tensor NAME [--chunk I | --range LO..HI] [--output <file>] [--backend mmap|file]
-                        [--trace <file.json>] [--prom <file.prom>]
-  apack-repro store stats <store> [--backend mmap|file] [--prom <file.prom>]
+                        [--trace <file.json>] [--profile-out <file.folded>] [--prom <file.prom>]
+  apack-repro store stats <store> [--backend mmap|file] [--prom <file.prom>] [--json <file|->]
+  apack-repro store heatmap <store> [--requests N] [--hot-fraction F] [--prefetch on|off] [--top K]
+                            [--backend mmap|file] [--json <file|->] [--prom <file.prom>]
   apack-repro store verify <store> [--backend mmap|file]
   apack-repro store report [--sample-cap N]
   apack-repro serve-bench [--models a,b|all] [--workers N] [--queue-depth N] [--clients N]
@@ -41,6 +43,8 @@ USAGE:
                           [--deadline-ms N] [--hot-fraction F] [--shards N] [--sample-cap N]
                           [--trace <file.json>] [--prom <file.prom>]
                           [--snapshot-jsonl <file.jsonl>] [--snapshot-ms N]
+                          [--profile-out <file.folded>] [--exemplars <file.json>]
+                          [--slo-ms N] [--slo-objective F] [--slo-availability F]
   apack-repro table [--model NAME] [--layer N] [--kind weights|activations]
   apack-repro fig --id <2|5a|5b|6|7|8>
   apack-repro area-power
@@ -305,6 +309,40 @@ fn prom_flag(args: &Args, snap: &obs::RegistrySnapshot) -> Result<(), Box<dyn Er
     Ok(())
 }
 
+/// Fold a drained span forest into the per-stage attribution table
+/// (ISSUE 8; printed whenever spans were captured) and write the
+/// collapsed-stack profile when `--profile-out <file>` was given
+/// (flamegraph.pl / speedscope input format).
+fn attribution_flag(args: &Args, events: &[obs::SpanEvent]) -> Result<(), Box<dyn Error>> {
+    let profile = obs::Profile::from_events(events);
+    if profile.is_empty() {
+        return Ok(());
+    }
+    println!("{}", profile.render());
+    if let Some(out) = args.flag("profile-out") {
+        profile.write_collapsed(Path::new(out))?;
+        println!(
+            "profile: {} stage paths as collapsed stacks -> {out}",
+            profile.iter().count()
+        );
+    }
+    Ok(())
+}
+
+/// Write `doc` to `--json <file|->`: a path writes the file, `-` prints
+/// the document to stdout.
+fn json_out_flag(args: &Args, what: &str, doc: String) -> Result<(), Box<dyn Error>> {
+    if let Some(out) = args.flag("json") {
+        if out == "-" {
+            println!("{doc}");
+        } else {
+            std::fs::write(out, doc + "\n")?;
+            println!("{what}: JSON -> {out}");
+        }
+    }
+    Ok(())
+}
+
 /// `store pack | get | stats | verify | report` — the APackStore CLI.
 fn run_store(args: &Args) -> Result<(), Box<dyn Error>> {
     let action = args.positional.first().map(String::as_str).unwrap_or("");
@@ -431,7 +469,8 @@ fn run_store(args: &Args) -> Result<(), Box<dyn Error>> {
             }
             prom_flag(args, &store.registry_snapshot())?;
             if let Some(p) = trace {
-                finish_trace(&p)?;
+                let events = finish_trace(&p)?;
+                attribution_flag(args, &events)?;
             }
         }
         "stats" => {
@@ -472,6 +511,103 @@ fn run_store(args: &Args) -> Result<(), Box<dyn Error>> {
             );
             println!("{}", read_stats_line(&store.stats()));
             prom_flag(args, &store.registry_snapshot())?;
+            if args.flag("json").is_some() {
+                use apack_repro::util::json::Json;
+                let tensors: Vec<Json> = store
+                    .tensor_metas()
+                    .iter()
+                    .map(|t| {
+                        let mut o = std::collections::BTreeMap::new();
+                        o.insert("name".to_string(), Json::Str(t.name.clone()));
+                        o.insert("bits".to_string(), Json::Num(t.bits as f64));
+                        o.insert("kind".to_string(), Json::Str(format!("{:?}", t.kind)));
+                        o.insert("values".to_string(), Json::Num(t.n_values as f64));
+                        o.insert("chunks".to_string(), Json::Num(t.chunks.len() as f64));
+                        o.insert("body_version".to_string(), Json::Num(t.body_version as f64));
+                        o.insert("lanes".to_string(), Json::Num(t.lanes as f64));
+                        o.insert(
+                            "compressed_bytes".to_string(),
+                            Json::Num(t.compressed_bytes() as f64),
+                        );
+                        o.insert(
+                            "ratio".to_string(),
+                            Json::Num(
+                                t.raw_bits() as f64 / (t.compressed_bytes().max(1) * 8) as f64,
+                            ),
+                        );
+                        Json::Obj(o)
+                    })
+                    .collect();
+                let mut root = std::collections::BTreeMap::new();
+                root.insert("store".to_string(), Json::Str(input.display().to_string()));
+                root.insert("shards".to_string(), Json::Num(store.shard_count() as f64));
+                root.insert("tensor_count".to_string(), Json::Num(store.tensor_count() as f64));
+                root.insert("tensors".to_string(), Json::Arr(tensors));
+                json_out_flag(args, "stats", Json::Obj(root).to_string())?;
+            }
+        }
+        "heatmap" => {
+            let input = Path::new(args.positional.get(1).ok_or("missing <store> path")?);
+            let store = StoreHandle::open_with(input, backend, DEFAULT_CACHE_VALUES)?;
+            let requests: usize = args.flag_or("requests", "2000").parse()?;
+            let hot_fraction: f64 = args.flag_or("hot-fraction", "0.8").parse()?;
+            let prefetch_on = !args.flag_or("prefetch", "on").eq_ignore_ascii_case("off");
+            let top: usize = args.flag_or("top", "12").parse()?;
+            let tensors: Vec<(String, usize)> = store
+                .tensor_metas()
+                .iter()
+                .filter(|t| !t.chunks.is_empty())
+                .map(|t| (t.name.clone(), t.chunks.len()))
+                .collect();
+            if tensors.is_empty() {
+                return Err("store holds no non-empty tensors".into());
+            }
+            // Self-generated traffic, same shape as serve-bench: a small
+            // hot pool takes `hot_fraction` of the reads, the rest scatter
+            // uniformly. Prefetch warms the hot pool first so the heatmap
+            // shows prefetch efficacy, not just demand traffic.
+            let hot_pool: Vec<(usize, usize)> = tensors
+                .iter()
+                .enumerate()
+                .flat_map(|(ti, (_, chunks))| [(ti, 0usize), (ti, chunks / 2)])
+                .take(8)
+                .collect();
+            if prefetch_on {
+                for &(ti, ci) in &hot_pool {
+                    store.prefetch_chunk(&tensors[ti].0, ci)?;
+                }
+            }
+            let mut rng = Rng64::new(0x41EA7);
+            for _ in 0..requests {
+                let (ti, ci) = if rng.f64() < hot_fraction {
+                    hot_pool[rng.below(hot_pool.len() as u64) as usize]
+                } else {
+                    let ti = rng.below(tensors.len() as u64) as usize;
+                    (ti, rng.below(tensors[ti].1 as u64) as usize)
+                };
+                store.get_chunk(&tensors[ti].0, ci)?;
+            }
+            let entries = store.heatmap();
+            use apack_repro::store::heat;
+            println!(
+                "{} — {} requests ({:.0}% hot-set, prefetch {})",
+                input.display(),
+                requests,
+                100.0 * hot_fraction,
+                if prefetch_on { "on" } else { "off" }
+            );
+            println!("{}", heat::render_top_chunks(&entries, top));
+            println!("{}", heat::render_tensor_summary(&heat::summarize(&entries)));
+            println!("{}", read_stats_line(&store.stats()));
+            json_out_flag(
+                args,
+                "heatmap",
+                heat::heatmap_json(&input.display().to_string(), &entries).to_string(),
+            )?;
+            if let Some(out) = args.flag("prom") {
+                std::fs::write(out, heat::heatmap_prometheus_text(&entries))?;
+                println!("heatmap: per-chunk Prometheus text -> {out}");
+            }
         }
         "verify" => {
             let input = Path::new(args.positional.get(1).ok_or("missing <store> path")?);
@@ -507,10 +643,10 @@ fn run_store(args: &Args) -> Result<(), Box<dyn Error>> {
             println!("{}", eval::store_report::render(sample_cap)?);
         }
         other => {
-            return Err(
-                format!("unknown store action {other:?} (try pack, get, stats, verify, report)")
-                    .into(),
+            return Err(format!(
+                "unknown store action {other:?} (try pack, get, stats, heatmap, verify, report)"
             )
+            .into())
         }
     }
     Ok(())
@@ -539,6 +675,9 @@ fn run_serve_bench(args: &Args) -> Result<(), Box<dyn Error>> {
     let hot_fraction: f64 = args.flag_or("hot-fraction", "0.8").parse()?;
     let shards: usize = args.flag_or("shards", "1").parse()?;
     let sample_cap: usize = args.flag_or("sample-cap", "8192").parse()?;
+    let slo_ms: u64 = args.flag_or("slo-ms", "0").parse()?; // 0 = no SLO tracking
+    let slo_objective: f64 = args.flag_or("slo-objective", "0.99").parse()?;
+    let slo_availability: f64 = args.flag_or("slo-availability", "0.99").parse()?;
 
     let path = std::env::temp_dir()
         .join(format!("apack_serve_bench_{}.apackstore", std::process::id()));
@@ -576,6 +715,12 @@ fn run_serve_bench(args: &Args) -> Result<(), Box<dyn Error>> {
         coalescing,
         deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms)),
         prefetch: prefetch_on.then(PrefetchConfig::default),
+        slo: (slo_ms > 0).then(|| obs::SloConfig {
+            latency_target: Duration::from_millis(slo_ms),
+            latency_objective: slo_objective,
+            availability_objective: slo_availability,
+            ..obs::SloConfig::default()
+        }),
     };
     println!(
         "serve-bench: {} tensors over {} shard(s), {} workers, queue depth {}, \
@@ -685,7 +830,26 @@ fn run_serve_bench(args: &Args) -> Result<(), Box<dyn Error>> {
             ),
             None => println!("trace coverage: no request spans captured"),
         }
+        attribution_flag(args, &events)?;
+        // Tail sampler: join span trees with the engine's outcome ring
+        // and keep the slowest-decile / errored / shed requests.
+        let ring = obs::collect_exemplars(&events, &engine.request_outcomes(), 32);
+        if !ring.is_empty() {
+            println!("{}", ring.render());
+        }
+        if let Some(out) = args.flag("exemplars") {
+            ring.write_chrome_trace(Path::new(out))?;
+            let text = std::fs::read_to_string(out)?;
+            apack_repro::util::json::Json::parse(&text)
+                .map_err(|e| format!("exemplar trace self-validation failed: {e}"))?;
+            println!(
+                "exemplars: {} tail span trees -> {out} (chrome trace-event JSON, \
+                 parse-checked)",
+                ring.exemplars().len()
+            );
+        }
     }
+    let slo_breach = engine.slo_status().filter(|s| s.breaching());
     drop(engine);
     drop(store);
     if path.is_dir() {
@@ -695,6 +859,18 @@ fn run_serve_bench(args: &Args) -> Result<(), Box<dyn Error>> {
     }
     if failed > 0 {
         return Err(format!("{failed} requests failed with non-overload errors").into());
+    }
+    if let Some(status) = slo_breach {
+        return Err(format!(
+            "SLO breach: latency burn {:.2}/{:.2} (fast/slow), availability burn \
+             {:.2}/{:.2}, threshold {:.2} — see the serving report above",
+            status.latency.fast_burn,
+            status.latency.slow_burn,
+            status.availability.fast_burn,
+            status.availability.slow_burn,
+            status.burn_threshold
+        )
+        .into());
     }
     Ok(())
 }

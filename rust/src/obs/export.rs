@@ -59,12 +59,42 @@ pub fn write_chrome_trace(path: &Path, events: &[SpanEvent]) -> crate::Result<()
     Ok(())
 }
 
-/// Prometheus metric names allow `[a-zA-Z0-9_:]`; our dotted registry
-/// names (`store.cache_hits`) map dots (and anything else) to `_`.
-fn prom_name(name: &str) -> String {
-    name.chars()
+/// Prometheus metric names allow `[a-zA-Z0-9_:]` (and must not start
+/// with a digit); our dotted registry names (`store.cache_hits`) map
+/// dots (and anything else) to `_`. Public because the store heatmap
+/// exposition (`store::heat`) builds labelled series from tensor names.
+pub fn prom_metric_name(name: &str) -> String {
+    let mut out: String = name
+        .chars()
         .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == ':' { c } else { '_' })
-        .collect()
+        .collect();
+    if out.chars().next().is_none_or(|c| c.is_ascii_digit()) {
+        out.insert(0, '_');
+    }
+    out
+}
+
+/// Escape one Prometheus label **value** per the exposition format:
+/// `\` → `\\`, `"` → `\"`, newline → `\n`. Other control characters are
+/// not escapable in the format at all, so they sanitize to `_` — a
+/// hostile tensor name (`foo{bar="baz\n"}`) must never break the dump
+/// into unparseable lines.
+pub fn prom_label_value(value: &str) -> String {
+    let mut out = String::with_capacity(value.len());
+    for c in value.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c if c.is_control() => out.push('_'),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn prom_name(name: &str) -> String {
+    prom_metric_name(name)
 }
 
 /// Prometheus exposition-format text dump of a registry snapshot.
@@ -226,6 +256,22 @@ mod tests {
             arr[1].get("args").unwrap().get("parent").unwrap().as_usize().unwrap(),
             1
         );
+    }
+
+    #[test]
+    fn hostile_names_stay_parseable() {
+        // Metric names: everything outside [a-zA-Z0-9_:] sanitizes to
+        // `_`, and a leading digit gets a `_` prefix.
+        assert_eq!(prom_metric_name("foo{bar=\"baz\n\"}"), "foo_bar__baz___");
+        assert_eq!(prom_metric_name("9lives"), "_9lives");
+        // Label values: the three escapable characters escape, other
+        // control characters sanitize — the output must be single-line
+        // with balanced quoting.
+        let v = prom_label_value("foo{bar=\"baz\n\"}\\tail\rend");
+        assert_eq!(v, "foo{bar=\\\"baz\\n\\\"}\\\\tail_end");
+        assert!(!v.contains('\n'));
+        let line = format!("store_chunk_demand_hits{{tensor=\"{v}\"}} 3");
+        assert_eq!(line.lines().count(), 1, "exposition line must not split");
     }
 
     #[test]

@@ -17,6 +17,13 @@
 //! 3. [`export`] — Chrome trace-event JSON (`--trace`, loadable in
 //!    `chrome://tracing` / Perfetto), Prometheus exposition text
 //!    (`--prom`), periodic JSONL snapshots (`--snapshot-jsonl`).
+//! 4. The **attribution layer** (ISSUE 8; DESIGN.md §12), which
+//!    interprets the above: [`profile`] folds drained span forests into
+//!    per-stage-path self/total-time profiles (attribution tables,
+//!    collapsed-stack flamegraph text); [`sampler`] retains a bounded
+//!    ring of tail exemplars (slowest-decile / errored / shed request
+//!    span trees); [`slo`] tracks latency + availability objectives
+//!    with SRE-style fast/slow rolling burn-rate windows.
 //!
 //! # Overhead budget
 //!
@@ -27,17 +34,23 @@
 
 pub mod export;
 pub mod hist;
+pub mod profile;
 pub mod rates;
 pub mod registry;
+pub mod sampler;
+pub mod slo;
 pub mod trace;
 
 pub use export::{
-    chrome_trace, jsonl_line, prometheus_text, request_coverage, write_chrome_trace,
-    SnapshotStream,
+    chrome_trace, jsonl_line, prom_label_value, prom_metric_name, prometheus_text,
+    request_coverage, write_chrome_trace, SnapshotStream,
 };
 pub use hist::{LatencyHistogram, LatencySnapshot};
+pub use profile::{PathStats, Profile};
 pub use registry::{Counter, Gauge, MetricsRegistry, RegistrySnapshot};
+pub use sampler::{collect_exemplars, Exemplar, ExemplarRing, RequestOutcome, RequestRecord};
+pub use slo::{ObjectiveStatus, SloConfig, SloStatus, SloTracker};
 pub use trace::{
     clear, disable, drain, dropped, enable, enabled, record, span, span_n, span_under,
-    ManualSpan, SpanEvent, SpanGuard, Stage,
+    with_parent, ManualSpan, SpanEvent, SpanGuard, Stage,
 };

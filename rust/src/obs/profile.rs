@@ -1,0 +1,256 @@
+//! **Span-forest attribution profiles** — fold drained [`SpanEvent`]s
+//! into a weighted per-stage-path profile (DESIGN.md §12).
+//!
+//! The tracer answers "what happened"; this module answers "which stage
+//! owns the time". Each completed span contributes its wall-clock
+//! duration to the *stage path* leading to it (`request;execute;decode`),
+//! and its **self time** — duration minus the summed durations of its
+//! direct children — to the same path. Self time is what a flamegraph
+//! renders, so [`Profile::collapsed_stack`] emits the standard
+//! collapsed-stack text (`path self_nanos` per line) that
+//! `flamegraph.pl` / speedscope / inferno all consume.
+//!
+//! Folding rules (tested in this file):
+//!
+//! - A span's path is the stage names from its root ancestor down to
+//!   itself, `;`-joined. Spans whose parent id is unknown (parent 0, or
+//!   a parent dropped by the ring) are roots of their own path.
+//! - `total_ns` sums durations per path; `self_ns` subtracts direct
+//!   children only (grandchildren are already inside the children).
+//! - Children that ran *in parallel* on worker threads (the v2 lane
+//!   fan-out) can sum to more than the parent's wall clock; self time
+//!   saturates at zero rather than going negative.
+//! - p50/p99 are per-path nearest-rank percentiles over span durations.
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::Path;
+
+use super::trace::SpanEvent;
+
+/// Aggregated timing for one stage path (e.g. `request;execute;decode`).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PathStats {
+    /// Number of spans folded into this path.
+    pub count: u64,
+    /// Summed wall-clock duration of those spans.
+    pub total_ns: u64,
+    /// Summed duration minus direct-children durations (saturating).
+    pub self_ns: u64,
+    /// Summed `count` payloads (values/bytes, per the stage's convention).
+    pub units: u64,
+    /// Nearest-rank p50 of span durations on this path.
+    pub p50_ns: u64,
+    /// Nearest-rank p99 of span durations on this path.
+    pub p99_ns: u64,
+}
+
+/// A folded span forest: stage path → [`PathStats`].
+#[derive(Debug, Clone, Default)]
+pub struct Profile {
+    paths: BTreeMap<String, PathStats>,
+    /// Spans folded (events with `end >= start`; all of them, in practice).
+    pub span_count: usize,
+}
+
+/// Walking a parent chain deeper than this aborts to a root path —
+/// a cycle can only come from ring corruption, never from the RAII API.
+const MAX_DEPTH: usize = 64;
+
+fn percentile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+impl Profile {
+    /// Fold a drained span forest into per-path aggregates.
+    pub fn from_events(events: &[SpanEvent]) -> Profile {
+        let index: HashMap<u64, usize> =
+            events.iter().enumerate().map(|(i, e)| (e.id, i)).collect();
+        // Direct-children duration per parent index, for self time.
+        let mut child_ns = vec![0u64; events.len()];
+        for e in events {
+            if let Some(&pi) = index.get(&e.parent) {
+                child_ns[pi] = child_ns[pi].saturating_add(e.duration_ns());
+            }
+        }
+        let mut durations: BTreeMap<String, Vec<u64>> = BTreeMap::new();
+        let mut paths: BTreeMap<String, PathStats> = BTreeMap::new();
+        for (i, e) in events.iter().enumerate() {
+            let mut names = vec![e.stage.name()];
+            let mut cur = e.parent;
+            for _ in 0..MAX_DEPTH {
+                let Some(&pi) = index.get(&cur) else { break };
+                names.push(events[pi].stage.name());
+                cur = events[pi].parent;
+            }
+            names.reverse();
+            let path = names.join(";");
+            let dur = e.duration_ns();
+            let s = paths.entry(path.clone()).or_default();
+            s.count += 1;
+            s.total_ns = s.total_ns.saturating_add(dur);
+            s.self_ns = s.self_ns.saturating_add(dur.saturating_sub(child_ns[i]));
+            s.units = s.units.saturating_add(e.count);
+            durations.entry(path).or_default().push(dur);
+        }
+        for (path, ds) in &mut durations {
+            ds.sort_unstable();
+            let s = paths.get_mut(path).expect("path recorded");
+            s.p50_ns = percentile(ds, 0.50);
+            s.p99_ns = percentile(ds, 0.99);
+        }
+        Profile { paths, span_count: events.len() }
+    }
+
+    /// True when no spans were folded.
+    pub fn is_empty(&self) -> bool {
+        self.paths.is_empty()
+    }
+
+    /// Stats for one exact stage path (`"request;execute"`).
+    pub fn get(&self, path: &str) -> Option<&PathStats> {
+        self.paths.get(path)
+    }
+
+    /// All `(path, stats)` rows in lexicographic path order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &PathStats)> {
+        self.paths.iter().map(|(p, s)| (p.as_str(), s))
+    }
+
+    /// Summed self time across every path — the profile's total weight,
+    /// equal to the summed duration of root spans (no double counting).
+    pub fn total_self_ns(&self) -> u64 {
+        self.paths.values().map(|s| s.self_ns).sum()
+    }
+
+    /// The attribution table: one row per stage path, heaviest self
+    /// time first, printed under `serve-bench` / `store get` footers.
+    pub fn render(&self) -> String {
+        let total = self.total_self_ns().max(1) as f64;
+        let mut rows: Vec<(&str, &PathStats)> = self.iter().collect();
+        rows.sort_by(|a, b| b.1.self_ns.cmp(&a.1.self_ns).then(a.0.cmp(b.0)));
+        let body: Vec<Vec<String>> = rows
+            .iter()
+            .map(|(path, s)| {
+                vec![
+                    path.to_string(),
+                    s.count.to_string(),
+                    format!("{:.3}", s.total_ns as f64 / 1e6),
+                    format!("{:.3}", s.self_ns as f64 / 1e6),
+                    format!("{:.1}", 100.0 * s.self_ns as f64 / total),
+                    format!("{:.1}", s.p50_ns as f64 / 1e3),
+                    format!("{:.1}", s.p99_ns as f64 / 1e3),
+                ]
+            })
+            .collect();
+        crate::eval::render_table(
+            "stage attribution (self time)",
+            &["stage path", "count", "total ms", "self ms", "self %", "p50 us", "p99 us"],
+            &body,
+        )
+    }
+
+    /// Collapsed-stack text (`path self_nanos` per line, `;`-separated
+    /// frames) — the input format of every flamegraph renderer.
+    pub fn collapsed_stack(&self) -> String {
+        let mut out = String::new();
+        for (path, s) in self.iter() {
+            if s.self_ns > 0 {
+                out.push_str(&format!("{path} {}\n", s.self_ns));
+            }
+        }
+        out
+    }
+
+    /// Write [`Self::collapsed_stack`] to `path` (`--profile-out`).
+    pub fn write_collapsed(&self, path: &Path) -> crate::Result<()> {
+        std::fs::write(path, self.collapsed_stack())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::Stage;
+
+    fn ev(id: u64, parent: u64, stage: Stage, start_ns: u64, end_ns: u64) -> SpanEvent {
+        SpanEvent { id, parent, stage, start_ns, end_ns, tid: 1, count: 0 }
+    }
+
+    /// Hand-built forest with known self/total nanos:
+    ///
+    /// ```text
+    /// request [0..100]
+    /// ├── queue_wait [0..30]
+    /// └── execute [30..90]
+    ///     └── decode [40..80]
+    /// ```
+    fn forest() -> Vec<SpanEvent> {
+        vec![
+            ev(1, 0, Stage::Request, 0, 100),
+            ev(2, 1, Stage::QueueWait, 0, 30),
+            ev(3, 1, Stage::Execute, 30, 90),
+            ev(4, 3, Stage::Decode, 40, 80),
+        ]
+    }
+
+    #[test]
+    fn folding_is_exact_on_hand_built_forest() {
+        let p = Profile::from_events(&forest());
+        assert_eq!(p.span_count, 4);
+        let req = p.get("request").unwrap();
+        assert_eq!((req.count, req.total_ns, req.self_ns), (1, 100, 10));
+        assert_eq!((req.p50_ns, req.p99_ns), (100, 100));
+        let qw = p.get("request;queue_wait").unwrap();
+        assert_eq!((qw.total_ns, qw.self_ns), (30, 30));
+        let ex = p.get("request;execute").unwrap();
+        assert_eq!((ex.total_ns, ex.self_ns), (60, 20));
+        let de = p.get("request;execute;decode").unwrap();
+        assert_eq!((de.total_ns, de.self_ns), (40, 40));
+        // Self times partition the root's wall clock exactly.
+        assert_eq!(p.total_self_ns(), 100);
+    }
+
+    #[test]
+    fn orphans_root_their_own_path_and_parallel_children_saturate() {
+        let events = vec![
+            // Parent whose two children overlap in time (threaded lanes):
+            // children sum to 120 > parent's 100 — self saturates at 0.
+            ev(1, 0, Stage::DecodeLanes, 0, 100),
+            ev(2, 1, Stage::Decode, 0, 60),
+            ev(3, 1, Stage::Decode, 0, 60),
+            // Orphan: parent id never drained — becomes its own root.
+            ev(4, 999, Stage::ChunkIo, 0, 7),
+        ];
+        let p = Profile::from_events(&events);
+        assert_eq!(p.get("decode_lanes").unwrap().self_ns, 0);
+        let lanes = p.get("decode_lanes;decode").unwrap();
+        assert_eq!((lanes.count, lanes.total_ns), (2, 120));
+        assert_eq!(p.get("chunk_io").unwrap().total_ns, 7);
+    }
+
+    #[test]
+    fn collapsed_stack_and_table_render() {
+        let p = Profile::from_events(&forest());
+        let stacks = p.collapsed_stack();
+        assert!(stacks.contains("request;execute;decode 40\n"));
+        assert!(stacks.contains("request 10\n"));
+        let table = p.render();
+        assert!(table.contains("stage path"));
+        assert!(table.contains("request;execute;decode"));
+    }
+
+    #[test]
+    fn percentiles_use_nearest_rank() {
+        let events: Vec<SpanEvent> =
+            (0..100).map(|i| ev(i + 1, 0, Stage::Decode, 0, (i + 1) * 10)).collect();
+        let p = Profile::from_events(&events);
+        let d = p.get("decode").unwrap();
+        assert_eq!(d.p50_ns, 510); // round(99 * 0.5) = rank 50 → 51st sample
+        assert_eq!(d.p99_ns, 990);
+    }
+}

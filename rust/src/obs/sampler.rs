@@ -1,0 +1,326 @@
+//! **Tail-based exemplar sampling** — keep the span trees worth keeping
+//! (DESIGN.md §12).
+//!
+//! Tracing every request is cheap to record but expensive to retain; a
+//! production store wants a bounded set of *exemplars* — full span trees
+//! for the requests that explain the tail. The [`ExemplarRing`] holds at
+//! most `capacity` request trees and admits only the interesting ones:
+//!
+//! - any request that **errored** or was **shed** (queue-full or
+//!   deadline-expired) is always interesting;
+//! - an OK request is interesting only if its latency sits in the
+//!   **slowest decile** of OK latencies observed so far (nearest-rank
+//!   p90 over a bounded reservoir of recent latencies);
+//! - when the ring is full, the least interesting resident (fastest OK
+//!   first, then fastest non-OK) is evicted iff the newcomer outranks it.
+//!
+//! The serving engine records one [`RequestRecord`] per completed or
+//! shed request while tracing is on; [`collect_exemplars`] joins those
+//! records against a drained span forest (grouping spans under their
+//! root `Request` span) and replays them through the ring. Retained
+//! exemplars dump as Chrome trace JSON (`serve-bench --exemplars`), so
+//! a "why was this request slow" trace survives without keeping the
+//! whole run's telemetry.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use super::export;
+use super::trace::SpanEvent;
+use crate::util::json::Json;
+
+/// How one request left the serving engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestOutcome {
+    /// Served successfully.
+    Ok,
+    /// Failed with a store/codec error.
+    Error,
+    /// Shed at admission: queue already full.
+    ShedQueueFull,
+    /// Shed at pop: deadline expired before a worker picked it up.
+    ShedDeadline,
+}
+
+impl RequestOutcome {
+    /// Snake-case label for tables and JSON.
+    pub fn name(self) -> &'static str {
+        match self {
+            RequestOutcome::Ok => "ok",
+            RequestOutcome::Error => "error",
+            RequestOutcome::ShedQueueFull => "shed_queue_full",
+            RequestOutcome::ShedDeadline => "shed_deadline",
+        }
+    }
+
+    /// Retention rank: non-OK outcomes always outrank OK ones.
+    fn rank(self) -> u8 {
+        match self {
+            RequestOutcome::Ok => 0,
+            _ => 1,
+        }
+    }
+}
+
+/// One per-request outcome record, fed by the serving engine.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestRecord {
+    /// The request's root `Request` span id (0 when tracing was off).
+    pub span_id: u64,
+    /// Submit-to-outcome latency.
+    pub latency_ns: u64,
+    /// How the request ended.
+    pub outcome: RequestOutcome,
+}
+
+/// A retained request: its outcome plus the full span subtree.
+#[derive(Debug, Clone)]
+pub struct Exemplar {
+    /// Root `Request` span id.
+    pub span_id: u64,
+    /// Submit-to-outcome latency.
+    pub latency_ns: u64,
+    /// How the request ended.
+    pub outcome: RequestOutcome,
+    /// Every drained span whose root ancestor is `span_id`.
+    pub events: Vec<SpanEvent>,
+}
+
+/// Bounded reservoir of recent OK latencies backing the decile estimate.
+const LATENCY_RESERVOIR: usize = 1024;
+
+/// Bounded, tail-biased ring of request exemplars.
+#[derive(Debug)]
+pub struct ExemplarRing {
+    capacity: usize,
+    entries: Vec<Exemplar>,
+    ok_latencies: Vec<u64>,
+    reservoir_pos: usize,
+    observed: u64,
+    evicted: u64,
+}
+
+fn percentile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+impl ExemplarRing {
+    /// A ring retaining at most `capacity` exemplars (min 1).
+    pub fn new(capacity: usize) -> ExemplarRing {
+        ExemplarRing {
+            capacity: capacity.max(1),
+            entries: Vec::new(),
+            ok_latencies: Vec::new(),
+            reservoir_pos: 0,
+            observed: 0,
+            evicted: 0,
+        }
+    }
+
+    /// Current slowest-decile admission threshold for OK requests.
+    pub fn decile_threshold_ns(&self) -> u64 {
+        let mut sorted = self.ok_latencies.clone();
+        sorted.sort_unstable();
+        percentile(&sorted, 0.90)
+    }
+
+    /// Offer one completed request. Returns true when it was retained.
+    pub fn observe(
+        &mut self,
+        span_id: u64,
+        outcome: RequestOutcome,
+        latency_ns: u64,
+        events: Vec<SpanEvent>,
+    ) -> bool {
+        self.observed += 1;
+        if outcome == RequestOutcome::Ok {
+            if self.ok_latencies.len() < LATENCY_RESERVOIR {
+                self.ok_latencies.push(latency_ns);
+            } else {
+                self.ok_latencies[self.reservoir_pos] = latency_ns;
+                self.reservoir_pos = (self.reservoir_pos + 1) % LATENCY_RESERVOIR;
+            }
+            if latency_ns < self.decile_threshold_ns() {
+                return false; // not in the slowest decile
+            }
+        }
+        let exemplar = Exemplar { span_id, latency_ns, outcome, events };
+        if self.entries.len() < self.capacity {
+            self.entries.push(exemplar);
+            return true;
+        }
+        // Full: evict the least interesting resident iff outranked.
+        let key = |e: &Exemplar| (e.outcome.rank(), e.latency_ns);
+        let victim = self
+            .entries
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, e)| key(e))
+            .map(|(i, _)| i)
+            .expect("ring non-empty at capacity");
+        if key(&exemplar) > key(&self.entries[victim]) {
+            self.entries[victim] = exemplar;
+            self.evicted += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Retained exemplars, slowest / most severe first.
+    pub fn exemplars(&self) -> Vec<&Exemplar> {
+        let mut out: Vec<&Exemplar> = self.entries.iter().collect();
+        out.sort_by(|a, b| {
+            (b.outcome.rank(), b.latency_ns).cmp(&(a.outcome.rank(), a.latency_ns))
+        });
+        out
+    }
+
+    /// Requests offered to the ring so far.
+    pub fn observed(&self) -> u64 {
+        self.observed
+    }
+
+    /// Residents displaced by more interesting newcomers.
+    pub fn evicted(&self) -> u64 {
+        self.evicted
+    }
+
+    /// True when nothing has been retained.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// One-line summary for bench footers.
+    pub fn render(&self) -> String {
+        let ex = self.exemplars();
+        let bad = ex.iter().filter(|e| e.outcome != RequestOutcome::Ok).count();
+        let slowest = ex.first().map(|e| e.latency_ns).unwrap_or(0);
+        format!(
+            "exemplars: retained {} of {} observed ({} errored/shed, slowest {:.3} ms, \
+             decile >= {:.3} ms)",
+            ex.len(),
+            self.observed,
+            bad,
+            slowest as f64 / 1e6,
+            self.decile_threshold_ns() as f64 / 1e6,
+        )
+    }
+
+    /// All retained span trees as one Chrome trace document. Each
+    /// exemplar's outcome and latency ride along in a metadata counter
+    /// via the span `args`, so the trace stands alone.
+    pub fn chrome_trace(&self) -> Json {
+        let events: Vec<SpanEvent> =
+            self.exemplars().iter().flat_map(|e| e.events.iter().copied()).collect();
+        export::chrome_trace(&events)
+    }
+
+    /// Write [`Self::chrome_trace`] to `path` (`serve-bench --exemplars`).
+    pub fn write_chrome_trace(&self, path: &Path) -> crate::Result<()> {
+        std::fs::write(path, self.chrome_trace().to_string() + "\n")?;
+        Ok(())
+    }
+}
+
+/// Join engine outcome records against a drained span forest and replay
+/// them through a fresh ring: each record's span subtree is every event
+/// whose root ancestor is the record's `span_id`.
+pub fn collect_exemplars(
+    events: &[SpanEvent],
+    records: &[RequestRecord],
+    capacity: usize,
+) -> ExemplarRing {
+    let index: HashMap<u64, u64> = events.iter().map(|e| (e.id, e.parent)).collect();
+    let root_of = |mut id: u64| -> u64 {
+        for _ in 0..64 {
+            match index.get(&id) {
+                Some(&parent) if parent != 0 && index.contains_key(&parent) => id = parent,
+                _ => break,
+            }
+        }
+        id
+    };
+    let mut groups: HashMap<u64, Vec<SpanEvent>> = HashMap::new();
+    for e in events {
+        groups.entry(root_of(e.id)).or_default().push(*e);
+    }
+    let mut ring = ExemplarRing::new(capacity);
+    for r in records {
+        let tree = groups.get(&r.span_id).cloned().unwrap_or_default();
+        ring.observe(r.span_id, r.outcome, r.latency_ns, tree);
+    }
+    ring
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::Stage;
+
+    fn ev(id: u64, parent: u64, start_ns: u64, end_ns: u64) -> SpanEvent {
+        SpanEvent { id, parent, stage: Stage::Request, start_ns, end_ns, tid: 1, count: 0 }
+    }
+
+    #[test]
+    fn slowest_kept_fast_evicted() {
+        let mut ring = ExemplarRing::new(4);
+        for lat in 1..=100u64 {
+            ring.observe(lat, RequestOutcome::Ok, lat * 1000, Vec::new());
+        }
+        let kept: Vec<u64> = ring.exemplars().iter().map(|e| e.latency_ns).collect();
+        assert_eq!(kept, vec![100_000, 99_000, 98_000, 97_000]);
+        assert_eq!(ring.observed(), 100);
+        assert!(ring.evicted() > 0);
+    }
+
+    #[test]
+    fn errored_and_shed_always_outrank_ok() {
+        let mut ring = ExemplarRing::new(2);
+        for lat in 1..=50u64 {
+            ring.observe(lat, RequestOutcome::Ok, lat * 1000, Vec::new());
+        }
+        // A fast errored request must displace a slow OK resident.
+        assert!(ring.observe(900, RequestOutcome::Error, 10, Vec::new()));
+        assert!(ring.observe(901, RequestOutcome::ShedDeadline, 5, Vec::new()));
+        let outcomes: Vec<RequestOutcome> =
+            ring.exemplars().iter().map(|e| e.outcome).collect();
+        assert!(outcomes.iter().all(|o| *o != RequestOutcome::Ok));
+    }
+
+    #[test]
+    fn fast_ok_requests_are_rejected_once_decile_is_known() {
+        let mut ring = ExemplarRing::new(8);
+        for lat in 1..=100u64 {
+            ring.observe(lat, RequestOutcome::Ok, lat * 1_000_000, Vec::new());
+        }
+        // Decile threshold now ~90 ms; a 1 ms request is boring.
+        assert!(!ring.observe(500, RequestOutcome::Ok, 1_000_000, Vec::new()));
+    }
+
+    #[test]
+    fn collect_joins_subtrees_under_request_roots() {
+        let events = vec![
+            ev(1, 0, 0, 100),
+            ev(2, 1, 10, 60),
+            ev(3, 2, 20, 40),
+            ev(10, 0, 0, 10),
+        ];
+        let records = vec![
+            RequestRecord { span_id: 1, latency_ns: 100, outcome: RequestOutcome::Ok },
+            RequestRecord { span_id: 10, latency_ns: 10, outcome: RequestOutcome::Error },
+        ];
+        let ring = collect_exemplars(&events, &records, 8);
+        let ex = ring.exemplars();
+        assert_eq!(ex.len(), 2);
+        let slow = ex.iter().find(|e| e.span_id == 1).unwrap();
+        assert_eq!(slow.events.len(), 3, "grandchild joins via root ancestor");
+        let doc = ring.chrome_trace().to_string();
+        let parsed = Json::parse(&doc).expect("chrome trace parses");
+        assert!(parsed.get("traceEvents").is_some());
+    }
+}

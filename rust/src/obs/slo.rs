@@ -1,0 +1,401 @@
+//! **SLO burn-rate tracking** — multi-window error-budget monitoring for
+//! the serving engine (DESIGN.md §12).
+//!
+//! Two objectives, both fractions of requests over a rolling window:
+//!
+//! - **availability** — the fraction of requests that are served at all
+//!   (not shed by admission control, not errored);
+//! - **latency** — the fraction of *served* requests that finish under
+//!   the target latency. Shed requests count against availability only,
+//!   so one overload doesn't burn both budgets twice.
+//!
+//! Each objective keeps a **fast** and a **slow** rolling window (the
+//! SRE multi-window pattern): the burn rate is the window's bad-request
+//! ratio divided by the error budget (`1 - objective`), i.e. `1.0`
+//! means the budget is being spent exactly as fast as it accrues. An
+//! objective is **breaching** only when *both* windows burn above the
+//! threshold — the fast window makes the alarm responsive, the slow
+//! window keeps one blip from tripping it.
+//!
+//! Windows are bucketed rings ([`BUCKETS`] buckets per window) indexed
+//! by absolute bucket number, so recording and querying are O(1) and
+//! O(BUCKETS); time is injectable (`record_at` / `status_at`) so the
+//! window arithmetic is testable against synthetic outcome streams.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use super::registry::RegistrySnapshot;
+use super::sampler::RequestOutcome;
+
+/// Buckets per rolling window: granularity is `window / BUCKETS`.
+pub const BUCKETS: usize = 30;
+
+/// SLO objectives and window shape for one serving engine.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloConfig {
+    /// A served request is "fast" when it finishes within this.
+    pub latency_target: Duration,
+    /// Fraction of served requests that must be fast (e.g. `0.99`).
+    pub latency_objective: f64,
+    /// Fraction of all requests that must be served (e.g. `0.999`).
+    pub availability_objective: f64,
+    /// Responsive window (SRE "fast"), e.g. 10 s.
+    pub fast_window: Duration,
+    /// Confirming window (SRE "slow"), e.g. 60 s.
+    pub slow_window: Duration,
+    /// Both windows must burn above this to breach (1.0 = budget spent
+    /// exactly as fast as it accrues).
+    pub burn_threshold: f64,
+}
+
+impl Default for SloConfig {
+    fn default() -> SloConfig {
+        SloConfig {
+            latency_target: Duration::from_millis(50),
+            latency_objective: 0.99,
+            availability_objective: 0.99,
+            fast_window: Duration::from_secs(10),
+            slow_window: Duration::from_secs(60),
+            burn_threshold: 1.0,
+        }
+    }
+}
+
+/// One rolling window: a ring of per-bucket (good, bad) counts indexed
+/// by absolute bucket number, expired buckets zeroed on advance.
+#[derive(Debug)]
+struct BurnWindow {
+    bucket_ns: u64,
+    head: u64,
+    good: [u64; BUCKETS],
+    bad: [u64; BUCKETS],
+}
+
+impl BurnWindow {
+    fn new(window: Duration) -> BurnWindow {
+        BurnWindow {
+            bucket_ns: (window.as_nanos() as u64 / BUCKETS as u64).max(1),
+            head: 0,
+            good: [0; BUCKETS],
+            bad: [0; BUCKETS],
+        }
+    }
+
+    fn advance(&mut self, abs: u64) {
+        if abs <= self.head {
+            return;
+        }
+        let steps = (abs - self.head).min(BUCKETS as u64);
+        for i in 1..=steps {
+            let slot = ((self.head + i) % BUCKETS as u64) as usize;
+            self.good[slot] = 0;
+            self.bad[slot] = 0;
+        }
+        self.head = abs;
+    }
+
+    fn record(&mut self, now_ns: u64, good: bool) {
+        let abs = now_ns / self.bucket_ns;
+        self.advance(abs);
+        if abs < self.head.saturating_sub(BUCKETS as u64 - 1) {
+            return; // older than the whole window (out-of-order record)
+        }
+        let slot = (abs % BUCKETS as u64) as usize;
+        if good {
+            self.good[slot] += 1;
+        } else {
+            self.bad[slot] += 1;
+        }
+    }
+
+    fn bad_ratio_at(&mut self, now_ns: u64) -> f64 {
+        self.advance(now_ns / self.bucket_ns);
+        let good: u64 = self.good.iter().sum();
+        let bad: u64 = self.bad.iter().sum();
+        if good + bad == 0 {
+            0.0
+        } else {
+            bad as f64 / (good + bad) as f64
+        }
+    }
+}
+
+#[derive(Debug)]
+struct ObjectiveWindows {
+    objective: f64,
+    good: u64,
+    total: u64,
+    fast: BurnWindow,
+    slow: BurnWindow,
+}
+
+impl ObjectiveWindows {
+    fn new(objective: f64, cfg: &SloConfig) -> ObjectiveWindows {
+        ObjectiveWindows {
+            objective,
+            good: 0,
+            total: 0,
+            fast: BurnWindow::new(cfg.fast_window),
+            slow: BurnWindow::new(cfg.slow_window),
+        }
+    }
+
+    fn record(&mut self, now_ns: u64, good: bool) {
+        self.good += good as u64;
+        self.total += 1;
+        self.fast.record(now_ns, good);
+        self.slow.record(now_ns, good);
+    }
+
+    fn status_at(&mut self, now_ns: u64, threshold: f64) -> ObjectiveStatus {
+        let budget = (1.0 - self.objective).max(1e-9);
+        let fast_burn = self.fast.bad_ratio_at(now_ns) / budget;
+        let slow_burn = self.slow.bad_ratio_at(now_ns) / budget;
+        ObjectiveStatus {
+            objective: self.objective,
+            good: self.good,
+            total: self.total,
+            fast_burn,
+            slow_burn,
+            breaching: fast_burn > threshold && slow_burn > threshold,
+        }
+    }
+}
+
+/// Point-in-time view of one objective.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ObjectiveStatus {
+    /// The configured objective fraction.
+    pub objective: f64,
+    /// Lifetime good-request count.
+    pub good: u64,
+    /// Lifetime request count.
+    pub total: u64,
+    /// Fast-window bad ratio / error budget.
+    pub fast_burn: f64,
+    /// Slow-window bad ratio / error budget.
+    pub slow_burn: f64,
+    /// True when both windows burn above the threshold.
+    pub breaching: bool,
+}
+
+/// Point-in-time view of both objectives — surfaced in
+/// [`crate::serving::MetricsSnapshot`] and as Prometheus gauges.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloStatus {
+    /// The latency target served requests are judged against.
+    pub target_latency: Duration,
+    /// The configured burn threshold.
+    pub burn_threshold: f64,
+    /// Latency objective status.
+    pub latency: ObjectiveStatus,
+    /// Availability objective status.
+    pub availability: ObjectiveStatus,
+}
+
+impl SloStatus {
+    /// True when either objective is breaching.
+    pub fn breaching(&self) -> bool {
+        self.latency.breaching || self.availability.breaching
+    }
+
+    /// Multi-line breach report for `serve-bench`.
+    pub fn render(&self) -> String {
+        let row = |name: &str, o: &ObjectiveStatus| {
+            format!(
+                "  {name:<13} objective {:.3}  good {}/{}  burn fast {:.2}x slow {:.2}x  {}",
+                o.objective,
+                o.good,
+                o.total,
+                o.fast_burn,
+                o.slow_burn,
+                if o.breaching { "BREACHING" } else { "ok" },
+            )
+        };
+        format!(
+            "slo: latency target {:.1} ms, burn threshold {:.1}x\n{}\n{}",
+            self.target_latency.as_secs_f64() * 1e3,
+            self.burn_threshold,
+            row("latency", &self.latency),
+            row("availability", &self.availability),
+        )
+    }
+
+    /// Overlay the status onto a registry snapshot as gauges (burn rates
+    /// in thousandths, since gauges are integral), for the Prometheus
+    /// and JSONL exporters.
+    pub fn overlay_gauges(&self, snap: &mut RegistrySnapshot) {
+        let milli = |x: f64| (x * 1000.0) as u64;
+        let g = &mut snap.gauges;
+        g.insert("serving.slo_latency_burn_fast_x1000".into(), milli(self.latency.fast_burn));
+        g.insert("serving.slo_latency_burn_slow_x1000".into(), milli(self.latency.slow_burn));
+        g.insert(
+            "serving.slo_availability_burn_fast_x1000".into(),
+            milli(self.availability.fast_burn),
+        );
+        g.insert(
+            "serving.slo_availability_burn_slow_x1000".into(),
+            milli(self.availability.slow_burn),
+        );
+        g.insert("serving.slo_breaching".into(), self.breaching() as u64);
+    }
+}
+
+/// Thread-safe SLO tracker fed by per-request outcomes.
+#[derive(Debug)]
+pub struct SloTracker {
+    cfg: SloConfig,
+    epoch: Instant,
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug)]
+struct Inner {
+    latency: ObjectiveWindows,
+    availability: ObjectiveWindows,
+}
+
+impl SloTracker {
+    /// A tracker with its epoch at construction time.
+    pub fn new(cfg: SloConfig) -> SloTracker {
+        SloTracker {
+            cfg,
+            epoch: Instant::now(),
+            inner: Mutex::new(Inner {
+                latency: ObjectiveWindows::new(cfg.latency_objective, &cfg),
+                availability: ObjectiveWindows::new(cfg.availability_objective, &cfg),
+            }),
+        }
+    }
+
+    /// The configured objectives.
+    pub fn config(&self) -> &SloConfig {
+        &self.cfg
+    }
+
+    /// Record one request outcome at wall-clock "now".
+    pub fn record(&self, outcome: RequestOutcome, latency: Duration) {
+        let now_ns = self.epoch.elapsed().as_nanos() as u64;
+        self.record_at(now_ns, outcome, latency.as_nanos() as u64);
+    }
+
+    /// Record with an injected timestamp (nanos since the tracker's
+    /// epoch) — the test seam for synthetic outcome streams.
+    pub fn record_at(&self, now_ns: u64, outcome: RequestOutcome, latency_ns: u64) {
+        let mut inner = self.inner.lock().expect("slo lock");
+        inner.availability.record(now_ns, outcome == RequestOutcome::Ok);
+        if outcome == RequestOutcome::Ok {
+            let fast = latency_ns <= self.cfg.latency_target.as_nanos() as u64;
+            inner.latency.record(now_ns, fast);
+        }
+    }
+
+    /// Status at wall-clock "now".
+    pub fn status(&self) -> SloStatus {
+        let now_ns = self.epoch.elapsed().as_nanos() as u64;
+        self.status_at(now_ns)
+    }
+
+    /// Status with an injected timestamp (test seam).
+    pub fn status_at(&self, now_ns: u64) -> SloStatus {
+        let mut inner = self.inner.lock().expect("slo lock");
+        SloStatus {
+            target_latency: self.cfg.latency_target,
+            burn_threshold: self.cfg.burn_threshold,
+            latency: inner.latency.status_at(now_ns, self.cfg.burn_threshold),
+            availability: inner.availability.status_at(now_ns, self.cfg.burn_threshold),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MS: u64 = 1_000_000;
+    const S: u64 = 1_000_000_000;
+
+    fn cfg(availability: f64) -> SloConfig {
+        SloConfig {
+            latency_target: Duration::from_millis(10),
+            latency_objective: 0.5,
+            availability_objective: availability,
+            fast_window: Duration::from_secs(10),
+            slow_window: Duration::from_secs(60),
+            burn_threshold: 1.0,
+        }
+    }
+
+    #[test]
+    fn availability_breaches_exactly_past_the_budget() {
+        // Budget 0.1: 1 bad in 10 burns at exactly 1.0x (not breaching,
+        // threshold is strict); a second bad tips both windows over.
+        let t = SloTracker::new(cfg(0.9));
+        for i in 0..9 {
+            t.record_at(S + i * MS, RequestOutcome::Ok, MS);
+        }
+        t.record_at(S + 9 * MS, RequestOutcome::ShedQueueFull, 0);
+        let st = t.status_at(S + 10 * MS);
+        assert!((st.availability.fast_burn - 1.0).abs() < 1e-9);
+        assert!(!st.availability.breaching);
+        t.record_at(S + 10 * MS, RequestOutcome::ShedDeadline, 0);
+        let st = t.status_at(S + 11 * MS);
+        assert!(st.availability.fast_burn > 1.0 && st.availability.slow_burn > 1.0);
+        assert!(st.availability.breaching);
+        assert!(st.breaching());
+        assert_eq!(st.availability.good, 9);
+        assert_eq!(st.availability.total, 11);
+    }
+
+    #[test]
+    fn fast_window_forgets_and_clears_the_breach() {
+        let t = SloTracker::new(cfg(0.9));
+        for _ in 0..10 {
+            t.record_at(0, RequestOutcome::Error, 0);
+        }
+        // Inside both windows: breaching.
+        assert!(t.status_at(5 * S).availability.breaching);
+        // Past the 10 s fast window: fast burn drops to zero, and the
+        // multi-window AND clears the breach even though the slow
+        // window still remembers.
+        let st = t.status_at(15 * S);
+        assert_eq!(st.availability.fast_burn, 0.0);
+        assert!(st.availability.slow_burn > 1.0);
+        assert!(!st.availability.breaching);
+        // Past the 60 s slow window too: fully forgotten.
+        let st = t.status_at(70 * S);
+        assert_eq!(st.availability.slow_burn, 0.0);
+    }
+
+    #[test]
+    fn latency_counts_served_requests_only() {
+        // Objective 0.5 → budget 0.5. 3 fast + 3 slow: ratio 0.5,
+        // burn exactly 1.0 — not breaching. Two more slow: 5/8 slow,
+        // burn 1.25 — breaching. Sheds never touch the latency SLI.
+        let t = SloTracker::new(cfg(0.9));
+        for i in 0..3u64 {
+            t.record_at(S + i, RequestOutcome::Ok, 5 * MS);
+            t.record_at(S + i, RequestOutcome::Ok, 15 * MS);
+        }
+        assert!(!t.status_at(2 * S).latency.breaching);
+        t.record_at(S + 10, RequestOutcome::Ok, 15 * MS);
+        t.record_at(S + 11, RequestOutcome::Ok, 15 * MS);
+        let st = t.status_at(2 * S);
+        assert!((st.latency.fast_burn - 1.25).abs() < 1e-9);
+        assert!(st.latency.breaching);
+        t.record_at(S + 12, RequestOutcome::ShedDeadline, 999 * MS);
+        assert_eq!(t.status_at(2 * S).latency.total, 8, "sheds don't count");
+    }
+
+    #[test]
+    fn gauges_overlay_in_milli_units() {
+        let t = SloTracker::new(cfg(0.9));
+        t.record_at(0, RequestOutcome::Error, 0);
+        let st = t.status_at(MS);
+        let mut snap = RegistrySnapshot::default();
+        st.overlay_gauges(&mut snap);
+        assert_eq!(snap.gauges["serving.slo_availability_burn_fast_x1000"], 10_000);
+        assert_eq!(snap.gauges["serving.slo_breaching"], 1);
+    }
+}

@@ -409,6 +409,32 @@ pub fn record(stage: Stage, parent: u64, start: Instant, end: Instant, count: u6
     });
 }
 
+/// Run `f` with `parent` installed as this thread's innermost span id:
+/// any spans `f` opens via [`span`] / [`span_n`] (and their children)
+/// attach under `parent` instead of rooting at 0. This is the seam that
+/// lets a worker thread parent its spans under a fan-out span held by
+/// the dispatching thread (the v2 threaded lane decode, DESIGN.md §11),
+/// without opening a redundant wrapper span on the worker.
+pub fn with_parent<T>(parent: u64, f: impl FnOnce() -> T) -> T {
+    if !enabled() || parent == 0 {
+        return f();
+    }
+    struct PopOnDrop(u64);
+    impl Drop for PopOnDrop {
+        fn drop(&mut self) {
+            LOCAL.with(|l| {
+                let mut l = l.borrow_mut();
+                if let Some(pos) = l.stack.iter().rposition(|&id| id == self.0) {
+                    l.stack.remove(pos);
+                }
+            });
+        }
+    }
+    LOCAL.with(|l| l.borrow_mut().stack.push(parent));
+    let _pop = PopOnDrop(parent);
+    f()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

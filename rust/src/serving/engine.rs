@@ -26,7 +26,7 @@ use std::time::{Duration, Instant};
 use crate::error::{Error, Result};
 use crate::obs::{
     self, Counter, Gauge, LatencyHistogram, ManualSpan, MetricsRegistry, RegistrySnapshot,
-    Stage,
+    RequestOutcome, RequestRecord, SloConfig, SloStatus, SloTracker, Stage,
 };
 use crate::store::StoreHandle;
 
@@ -73,6 +73,9 @@ pub struct ServingConfig {
     pub deadline: Option<Duration>,
     /// Hot-set prefetcher; `None` disables the prefetch thread.
     pub prefetch: Option<PrefetchConfig>,
+    /// SLO objectives (latency + availability burn-rate windows,
+    /// [`crate::obs::slo`]); `None` disables tracking.
+    pub slo: Option<SloConfig>,
 }
 
 impl Default for ServingConfig {
@@ -83,6 +86,7 @@ impl Default for ServingConfig {
             coalescing: true,
             deadline: None,
             prefetch: None,
+            slo: None,
         }
     }
 }
@@ -163,16 +167,50 @@ struct Shared {
     queue_depth: Arc<Gauge>,
     queue_depth_max: Arc<Gauge>,
     latency: Arc<LatencyHistogram>,
+    /// SLO burn-rate tracker ([`crate::obs::slo`]); present iff
+    /// configured.
+    slo: Option<SloTracker>,
+    /// Per-request outcome records for the tail exemplar sampler
+    /// ([`crate::obs::sampler`]), bounded at [`OUTCOME_RING`]. Only fed
+    /// while span tracing is on — an outcome is useless to the sampler
+    /// without its span tree.
+    outcomes: Mutex<VecDeque<RequestRecord>>,
 }
+
+/// Outcome records kept for exemplar sampling (oldest dropped first).
+const OUTCOME_RING: usize = 1 << 16;
 
 impl Shared {
     /// Refresh the live-queue gauge, then snapshot `serving.*` and fold
-    /// in the store's `store.*` registry view.
+    /// in the store's `store.*` registry view plus the SLO gauges.
     fn registry_snapshot(&self) -> RegistrySnapshot {
         self.queue_depth.set(self.queue.lock().expect("serving queue lock").len() as u64);
         let mut snap = self.registry.snapshot();
         snap.merge(&self.store.registry_snapshot());
+        if let Some(slo) = &self.slo {
+            slo.status().overlay_gauges(&mut snap);
+        }
         snap
+    }
+
+    /// Record one request outcome: into the SLO tracker (always, when
+    /// configured) and into the exemplar outcome ring (only when the
+    /// request had a span id, i.e. tracing was on at submit).
+    fn record_outcome(&self, span_id: u64, outcome: RequestOutcome, latency: Duration) {
+        if let Some(slo) = &self.slo {
+            slo.record(outcome, latency);
+        }
+        if span_id != 0 {
+            let mut ring = self.outcomes.lock().expect("serving outcome lock");
+            if ring.len() >= OUTCOME_RING {
+                ring.pop_front();
+            }
+            ring.push_back(RequestRecord {
+                span_id,
+                latency_ns: latency.as_nanos() as u64,
+                outcome,
+            });
+        }
     }
 }
 
@@ -197,6 +235,7 @@ impl ServingEngine {
             ));
         }
         let prefetch_cfg = config.prefetch.clone();
+        let slo = config.slo.map(SloTracker::new);
         let registry = MetricsRegistry::new();
         let shared = Arc::new(Shared {
             store,
@@ -216,6 +255,8 @@ impl ServingEngine {
             queue_depth_max: registry.gauge("serving.queue_depth_max"),
             latency: registry.histogram("serving.latency_ns"),
             registry,
+            slo,
+            outcomes: Mutex::new(VecDeque::new()),
         });
         let workers = (0..shared.config.workers)
             .map(|i| {
@@ -263,6 +304,7 @@ impl ServingEngine {
             if queue.len() >= shared.config.queue_depth {
                 drop(queue);
                 shared.shed_queue_full.inc();
+                shared.record_outcome(req_id, RequestOutcome::ShedQueueFull, Duration::ZERO);
                 drop(admit);
                 if let Some(span) = trace_span {
                     span.finish();
@@ -323,7 +365,21 @@ impl ServingEngine {
         self.shared.queue_depth.set(
             self.shared.queue.lock().expect("serving queue lock").len() as u64,
         );
-        MetricsSnapshot::from_snapshot(&self.shared.registry.snapshot())
+        let mut snap = MetricsSnapshot::from_snapshot(&self.shared.registry.snapshot());
+        snap.slo = self.slo_status();
+        snap
+    }
+
+    /// Point-in-time SLO status (`None` when no SLO is configured).
+    pub fn slo_status(&self) -> Option<SloStatus> {
+        self.shared.slo.as_ref().map(|t| t.status())
+    }
+
+    /// Copy of the per-request outcome records accumulated while span
+    /// tracing was on — join against [`crate::obs::drain`]ed events with
+    /// [`crate::obs::collect_exemplars`] to build tail exemplars.
+    pub fn request_outcomes(&self) -> Vec<RequestRecord> {
+        self.shared.outcomes.lock().expect("serving outcome lock").iter().copied().collect()
     }
 
     /// The full registry snapshot: this engine's `serving.*` metrics
@@ -401,6 +457,11 @@ fn worker_loop(shared: &Shared) {
         if let Some(deadline) = item.deadline {
             if item.enqueued.elapsed() >= deadline {
                 shared.shed_deadline.inc();
+                shared.record_outcome(
+                    req_id,
+                    RequestOutcome::ShedDeadline,
+                    item.enqueued.elapsed(),
+                );
                 item.slot.fill(Err(Error::Overloaded {
                     queue_depth: shared.config.queue_depth,
                     deadline_expired: true,
@@ -415,8 +476,12 @@ fn worker_loop(shared: &Shared) {
             let _exec = obs::span_under(Stage::Execute, req_id, 0);
             execute(shared, &item.request)
         };
-        shared.latency.record(item.enqueued.elapsed());
+        let latency = item.enqueued.elapsed();
+        shared.latency.record(latency);
         shared.completed.inc();
+        let outcome =
+            if result.is_ok() { RequestOutcome::Ok } else { RequestOutcome::Error };
+        shared.record_outcome(req_id, outcome, latency);
         let served = result.as_ref().map(|v| v.len() as u64).unwrap_or(0);
         item.slot.fill(result);
         if let Some(span) = item.trace_span {
@@ -637,6 +702,58 @@ mod tests {
             let lo = i * 1000;
             assert_eq!(got.as_slice(), &values[lo..lo + 500], "request {i}");
         }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn slo_flips_to_breaching_under_saturation() {
+        let (path, _) = build_store("slo", 4_000);
+        let store = Arc::new(StoreHandle::open(&path).unwrap());
+        let slo = SloConfig {
+            latency_target: Duration::from_secs(1),
+            ..SloConfig::default()
+        };
+
+        // Healthy run: generous latency target, no sheds — no burn.
+        let engine = ServingEngine::start(
+            Arc::clone(&store),
+            ServingConfig { workers: 2, slo: Some(slo), ..ServingConfig::default() },
+        )
+        .unwrap();
+        for _ in 0..20 {
+            engine.get_chunk("t", 0).unwrap();
+        }
+        let status = engine.metrics().slo.expect("slo configured");
+        assert!(!status.breaching());
+        assert_eq!(status.availability.total, 20);
+        assert_eq!(status.availability.good, 20);
+        drop(engine);
+
+        // Saturation: a zero deadline sheds every request at pop time, so
+        // the availability budget burns far past the threshold in both
+        // windows and the status flips to breaching.
+        let engine = ServingEngine::start(
+            store,
+            ServingConfig {
+                workers: 1,
+                deadline: Some(Duration::ZERO),
+                slo: Some(slo),
+                ..ServingConfig::default()
+            },
+        )
+        .unwrap();
+        for _ in 0..20 {
+            let err = engine.get_chunk("t", 0).unwrap_err();
+            assert!(matches!(err, Error::Overloaded { deadline_expired: true, .. }));
+        }
+        let status = engine.slo_status().expect("slo configured");
+        assert!(status.availability.breaching, "all-shed traffic must breach");
+        assert!(status.breaching());
+        assert_eq!(status.latency.total, 0, "sheds never feed the latency SLI");
+        // The breach also lands in the exporter-facing gauges.
+        let snap = engine.registry_snapshot();
+        assert_eq!(snap.gauge("serving.slo_breaching"), 1);
+        drop(engine);
         std::fs::remove_file(&path).ok();
     }
 }

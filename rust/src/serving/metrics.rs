@@ -9,7 +9,7 @@
 //! glossary.
 
 pub use crate::obs::hist::{LatencyHistogram, LatencySnapshot};
-use crate::obs::RegistrySnapshot;
+use crate::obs::{RegistrySnapshot, SloStatus};
 
 /// Point-in-time view of a [`crate::serving::ServingEngine`]'s counters.
 #[derive(Debug, Clone, Default)]
@@ -31,6 +31,9 @@ pub struct MetricsSnapshot {
     pub queue_depth_max: usize,
     /// Submit-to-response latency of completed requests.
     pub latency: LatencySnapshot,
+    /// SLO burn-rate status, present when the engine was started with
+    /// [`crate::serving::ServingConfig::slo`] configured (ISSUE 8).
+    pub slo: Option<SloStatus>,
 }
 
 impl MetricsSnapshot {
@@ -47,6 +50,7 @@ impl MetricsSnapshot {
             queue_depth: snap.gauge("serving.queue_depth") as usize,
             queue_depth_max: snap.gauge("serving.queue_depth_max") as usize,
             latency: snap.hist("serving.latency_ns"),
+            slo: None,
         }
     }
 
@@ -57,7 +61,7 @@ impl MetricsSnapshot {
 
     /// Multi-line rendering for bench/CLI output.
     pub fn render(&self) -> String {
-        format!(
+        let mut out = format!(
             "serving: {} submitted, {} completed, {} shed ({} queue-full, {} deadline)\n\
              coalesced decodes: {}  queue depth: {} now / {} peak\n\
              latency: {}",
@@ -70,7 +74,12 @@ impl MetricsSnapshot {
             self.queue_depth,
             self.queue_depth_max,
             self.latency.render()
-        )
+        );
+        if let Some(slo) = &self.slo {
+            out.push('\n');
+            out.push_str(&slo.render());
+        }
+        out
     }
 }
 

@@ -67,6 +67,15 @@
 //! admit → queue-wait → execute → single-flight → chunk-IO → decode →
 //! copy-out span tree ([`crate::obs::span`]).
 //!
+//! The attribution layer (ISSUE 8, DESIGN.md §12) builds on those spans:
+//! when [`ServingConfig::slo`] is set the engine feeds every request
+//! outcome (ok / error / shed) into a [`crate::obs::SloTracker`] whose
+//! burn-rate [`crate::obs::SloStatus`] surfaces in [`MetricsSnapshot`]
+//! and as `serving.slo_*` gauges, and a bounded outcome ring
+//! ([`ServingEngine::request_outcomes`]) lets the tail sampler
+//! ([`crate::obs::collect_exemplars`]) join drained span trees with
+//! per-request latencies after a run.
+//!
 //! # Submodules
 //!
 //! - [`engine`] — [`ServingEngine`], [`ServingConfig`], [`Request`],

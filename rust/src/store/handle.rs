@@ -147,6 +147,15 @@ impl StoreHandle {
         }
     }
 
+    /// Per-chunk access heat (sharded: concatenated across shards),
+    /// sorted `(tensor, chunk)` — see [`super::heat`].
+    pub fn heatmap(&self) -> Vec<super::heat::ChunkHeatEntry> {
+        match self {
+            StoreHandle::Single(r) => r.heatmap(),
+            StoreHandle::Sharded(r) => r.heatmap(),
+        }
+    }
+
     /// Zero the read counters.
     pub fn reset_stats(&self) {
         match self {

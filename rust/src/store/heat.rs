@@ -1,0 +1,473 @@
+//! **Chunk-access heatmaps** — per-tensor / per-chunk demand, prefetch
+//! and decode-cost counters behind every [`super::StoreReader`]
+//! (DESIGN.md §12).
+//!
+//! The reader's aggregate counters (`store.cache_hits`, …) say *how
+//! much* traffic the store saw; the heatmap says *where*: which chunks
+//! are hot, which tensors the prefetcher actually helps, where decode
+//! nanos concentrate. The [`HeatMap`] is a sharded counter map —
+//! [`HEAT_SHARDS`] mutexed `HashMap<(tensor, chunk), Cell>` shards,
+//! key-hashed so concurrent readers on different chunks rarely contend
+//! — updated on paths that already hold or just released the chunk-cache
+//! lock, so the marginal cost is one short-critical-section hash update
+//! per chunk access (measured by the attribution overhead gate,
+//! EXPERIMENTS.md).
+//!
+//! Attribution rules:
+//!
+//! - `demand_hits` / `demand_misses` — `get_*` traffic through the LRU,
+//!   mirroring the reader's hit/miss counters per chunk.
+//! - `prefetches` — decodes issued by [`super::StoreReader::prefetch_chunk`]
+//!   (already-resident no-ops are not counted).
+//! - `decode_nanos` — wall time of **every** decode of the chunk
+//!   (demand miss, prefetch, or verify sweep), since decode cost is a
+//!   property of the chunk, not of who asked.
+//! - A prefetched chunk that later takes a demand **hit** counts as an
+//!   effective prefetch; [`TensorHeatSummary::prefetch_efficacy`] is the
+//!   per-tensor fraction of prefetched chunks that were ever hit.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::{BTreeMap, HashMap};
+use std::hash::{Hash, Hasher};
+use std::sync::Mutex;
+
+use crate::obs::export::{prom_label_value, prom_metric_name};
+use crate::util::json::Json;
+
+/// Mutex shards in one [`HeatMap`].
+pub const HEAT_SHARDS: usize = 16;
+
+#[derive(Debug, Default, Clone, Copy)]
+struct Cell {
+    demand_hits: u64,
+    demand_misses: u64,
+    prefetches: u64,
+    decode_nanos: u64,
+}
+
+/// Sharded `(tensor index, chunk index) → counters` map.
+#[derive(Debug)]
+pub struct HeatMap {
+    shards: Vec<Mutex<HashMap<(u32, u32), Cell>>>,
+}
+
+impl Default for HeatMap {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HeatMap {
+    /// An empty map with [`HEAT_SHARDS`] shards.
+    pub fn new() -> HeatMap {
+        HeatMap { shards: (0..HEAT_SHARDS).map(|_| Mutex::new(HashMap::new())).collect() }
+    }
+
+    fn with_cell(&self, ti: u32, ci: u32, f: impl FnOnce(&mut Cell)) {
+        let mut h = DefaultHasher::new();
+        (ti, ci).hash(&mut h);
+        let shard = (h.finish() as usize) % self.shards.len();
+        let mut map = self.shards[shard].lock().expect("heat shard lock");
+        f(map.entry((ti, ci)).or_default());
+    }
+
+    /// Count a demand read served from the chunk cache.
+    pub fn demand_hit(&self, ti: u32, ci: u32) {
+        self.with_cell(ti, ci, |c| c.demand_hits += 1);
+    }
+
+    /// Count a demand read that had to decode.
+    pub fn demand_miss(&self, ti: u32, ci: u32) {
+        self.with_cell(ti, ci, |c| c.demand_misses += 1);
+    }
+
+    /// Count a prefetch-issued decode.
+    pub fn prefetch(&self, ti: u32, ci: u32) {
+        self.with_cell(ti, ci, |c| c.prefetches += 1);
+    }
+
+    /// Accumulate decode wall time for one chunk.
+    pub fn add_decode_nanos(&self, ti: u32, ci: u32, nanos: u64) {
+        self.with_cell(ti, ci, |c| c.decode_nanos += nanos);
+    }
+
+    fn snapshot(&self) -> Vec<((u32, u32), Cell)> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            let map = shard.lock().expect("heat shard lock");
+            out.extend(map.iter().map(|(k, v)| (*k, *v)));
+        }
+        out
+    }
+
+    /// Join the raw cells against tensor metadata into presentable
+    /// entries, sorted `(tensor, chunk)`.
+    pub fn entries(
+        &self,
+        resolve: impl Fn(u32) -> Option<(String, u8, u8)>,
+    ) -> Vec<ChunkHeatEntry> {
+        let mut out: Vec<ChunkHeatEntry> = self
+            .snapshot()
+            .into_iter()
+            .filter_map(|((ti, ci), c)| {
+                let (tensor, body_version, lanes) = resolve(ti)?;
+                Some(ChunkHeatEntry {
+                    tensor,
+                    chunk: ci,
+                    body_version,
+                    lanes,
+                    demand_hits: c.demand_hits,
+                    demand_misses: c.demand_misses,
+                    prefetches: c.prefetches,
+                    decode_nanos: c.decode_nanos,
+                })
+            })
+            .collect();
+        out.sort_by(|a, b| (&a.tensor, a.chunk).cmp(&(&b.tensor, b.chunk)));
+        out
+    }
+}
+
+/// One chunk's heat, joined with tensor identity.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChunkHeatEntry {
+    /// Owning tensor name.
+    pub tensor: String,
+    /// Chunk index within the tensor.
+    pub chunk: u32,
+    /// The tensor's chunk-body framing version (1 or 2).
+    pub body_version: u8,
+    /// Requested lanes per chunk (1 for v1 bodies).
+    pub lanes: u8,
+    /// Demand reads served from the chunk cache.
+    pub demand_hits: u64,
+    /// Demand reads that decoded.
+    pub demand_misses: u64,
+    /// Prefetch-issued decodes.
+    pub prefetches: u64,
+    /// Summed decode wall time (all decode paths).
+    pub decode_nanos: u64,
+}
+
+impl ChunkHeatEntry {
+    /// Total accesses of any kind — the table's heat ordering key.
+    pub fn touches(&self) -> u64 {
+        self.demand_hits + self.demand_misses + self.prefetches
+    }
+}
+
+/// Per-tensor rollup of chunk heat, including prefetch efficacy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorHeatSummary {
+    /// Tensor name.
+    pub tensor: String,
+    /// Chunk-body framing version.
+    pub body_version: u8,
+    /// Requested lanes per chunk.
+    pub lanes: u8,
+    /// Chunks with any recorded access.
+    pub chunks_touched: usize,
+    /// Summed demand hits.
+    pub demand_hits: u64,
+    /// Summed demand misses.
+    pub demand_misses: u64,
+    /// Summed prefetch decodes.
+    pub prefetches: u64,
+    /// Summed decode wall time.
+    pub decode_nanos: u64,
+    /// Chunks that were prefetched at least once.
+    pub prefetched_chunks: usize,
+    /// Prefetched chunks that later (or ever) took a demand hit.
+    pub prefetched_then_hit: usize,
+}
+
+impl TensorHeatSummary {
+    /// Fraction of prefetched chunks that were ever demand-hit; `None`
+    /// when nothing was prefetched.
+    pub fn prefetch_efficacy(&self) -> Option<f64> {
+        if self.prefetched_chunks == 0 {
+            None
+        } else {
+            Some(self.prefetched_then_hit as f64 / self.prefetched_chunks as f64)
+        }
+    }
+}
+
+/// Roll chunk entries up per tensor, hottest (most demand traffic) first.
+pub fn summarize(entries: &[ChunkHeatEntry]) -> Vec<TensorHeatSummary> {
+    let mut by_tensor: BTreeMap<&str, TensorHeatSummary> = BTreeMap::new();
+    for e in entries {
+        let s = by_tensor.entry(&e.tensor).or_insert_with(|| TensorHeatSummary {
+            tensor: e.tensor.clone(),
+            body_version: e.body_version,
+            lanes: e.lanes,
+            chunks_touched: 0,
+            demand_hits: 0,
+            demand_misses: 0,
+            prefetches: 0,
+            decode_nanos: 0,
+            prefetched_chunks: 0,
+            prefetched_then_hit: 0,
+        });
+        s.chunks_touched += 1;
+        s.demand_hits += e.demand_hits;
+        s.demand_misses += e.demand_misses;
+        s.prefetches += e.prefetches;
+        s.decode_nanos += e.decode_nanos;
+        if e.prefetches > 0 {
+            s.prefetched_chunks += 1;
+            if e.demand_hits > 0 {
+                s.prefetched_then_hit += 1;
+            }
+        }
+    }
+    let mut out: Vec<TensorHeatSummary> = by_tensor.into_values().collect();
+    out.sort_by(|a, b| {
+        (b.demand_hits + b.demand_misses, &a.tensor)
+            .cmp(&(a.demand_hits + a.demand_misses, &b.tensor))
+    });
+    out
+}
+
+/// The top-K hottest chunks as an aligned table.
+pub fn render_top_chunks(entries: &[ChunkHeatEntry], k: usize) -> String {
+    let mut hottest: Vec<&ChunkHeatEntry> = entries.iter().collect();
+    hottest.sort_by(|a, b| {
+        (b.touches(), &a.tensor, a.chunk).cmp(&(a.touches(), &b.tensor, b.chunk))
+    });
+    let rows: Vec<Vec<String>> = hottest
+        .iter()
+        .take(k)
+        .map(|e| {
+            vec![
+                e.tensor.clone(),
+                e.chunk.to_string(),
+                format!("v{}", e.body_version),
+                e.lanes.to_string(),
+                e.demand_hits.to_string(),
+                e.demand_misses.to_string(),
+                e.prefetches.to_string(),
+                format!("{:.3}", e.decode_nanos as f64 / 1e6),
+            ]
+        })
+        .collect();
+    crate::eval::render_table(
+        &format!("hottest chunks (top {})", rows.len()),
+        &["tensor", "chunk", "body", "lanes", "hits", "misses", "prefetches", "decode ms"],
+        &rows,
+    )
+}
+
+/// Per-tensor rollup (with prefetch efficacy) as an aligned table.
+pub fn render_tensor_summary(summaries: &[TensorHeatSummary]) -> String {
+    let rows: Vec<Vec<String>> = summaries
+        .iter()
+        .map(|s| {
+            vec![
+                s.tensor.clone(),
+                format!("v{}", s.body_version),
+                s.lanes.to_string(),
+                s.chunks_touched.to_string(),
+                s.demand_hits.to_string(),
+                s.demand_misses.to_string(),
+                s.prefetches.to_string(),
+                match s.prefetch_efficacy() {
+                    Some(e) => format!("{:.0}%", e * 100.0),
+                    None => "-".to_string(),
+                },
+                format!("{:.3}", s.decode_nanos as f64 / 1e6),
+            ]
+        })
+        .collect();
+    crate::eval::render_table(
+        "tensor heat (prefetch efficacy = prefetched chunks later hit)",
+        &[
+            "tensor",
+            "body",
+            "lanes",
+            "chunks",
+            "hits",
+            "misses",
+            "prefetches",
+            "efficacy",
+            "decode ms",
+        ],
+        &rows,
+    )
+}
+
+/// The full heatmap as one JSON document (`store heatmap --json`).
+pub fn heatmap_json(store: &str, entries: &[ChunkHeatEntry]) -> Json {
+    let summaries = summarize(entries);
+    let chunk_json = |e: &ChunkHeatEntry| {
+        let mut m = BTreeMap::new();
+        m.insert("chunk".to_string(), Json::Num(e.chunk as f64));
+        m.insert("demand_hits".to_string(), Json::Num(e.demand_hits as f64));
+        m.insert("demand_misses".to_string(), Json::Num(e.demand_misses as f64));
+        m.insert("prefetches".to_string(), Json::Num(e.prefetches as f64));
+        m.insert("decode_nanos".to_string(), Json::Num(e.decode_nanos as f64));
+        Json::Obj(m)
+    };
+    let tensors = summaries
+        .iter()
+        .map(|s| {
+            let mut m = BTreeMap::new();
+            m.insert("tensor".to_string(), Json::Str(s.tensor.clone()));
+            m.insert("body_version".to_string(), Json::Num(s.body_version as f64));
+            m.insert("lanes".to_string(), Json::Num(s.lanes as f64));
+            m.insert("chunks_touched".to_string(), Json::Num(s.chunks_touched as f64));
+            m.insert("demand_hits".to_string(), Json::Num(s.demand_hits as f64));
+            m.insert("demand_misses".to_string(), Json::Num(s.demand_misses as f64));
+            m.insert("prefetches".to_string(), Json::Num(s.prefetches as f64));
+            m.insert(
+                "prefetch_efficacy".to_string(),
+                match s.prefetch_efficacy() {
+                    Some(e) => Json::Num(e),
+                    None => Json::Null,
+                },
+            );
+            m.insert("decode_nanos".to_string(), Json::Num(s.decode_nanos as f64));
+            m.insert(
+                "chunks".to_string(),
+                Json::Arr(
+                    entries
+                        .iter()
+                        .filter(|e| e.tensor == s.tensor)
+                        .map(chunk_json)
+                        .collect(),
+                ),
+            );
+            Json::Obj(m)
+        })
+        .collect();
+    let mut root = BTreeMap::new();
+    root.insert("store".to_string(), Json::Str(store.to_string()));
+    root.insert("tensors".to_string(), Json::Arr(tensors));
+    Json::Obj(root)
+}
+
+/// Prometheus exposition text for the heatmap: per-chunk counters with
+/// `tensor`/`chunk` labels. Tensor names are arbitrary strings, so label
+/// values go through [`prom_label_value`] — the hostile-name test in
+/// `obs::export` pins the escaping.
+pub fn heatmap_prometheus_text(entries: &[ChunkHeatEntry]) -> String {
+    let mut out = String::new();
+    let series = [
+        ("store_chunk_demand_hits", |e: &ChunkHeatEntry| e.demand_hits),
+        ("store_chunk_demand_misses", |e: &ChunkHeatEntry| e.demand_misses),
+        ("store_chunk_prefetches", |e: &ChunkHeatEntry| e.prefetches),
+        ("store_chunk_decode_nanos", |e: &ChunkHeatEntry| e.decode_nanos),
+    ];
+    for (name, value) in series {
+        let n = prom_metric_name(name);
+        out.push_str(&format!("# TYPE {n} counter\n"));
+        for e in entries {
+            out.push_str(&format!(
+                "{n}{{tensor=\"{}\",chunk=\"{}\"}} {}\n",
+                prom_label_value(&e.tensor),
+                e.chunk,
+                value(e),
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resolve(ti: u32) -> Option<(String, u8, u8)> {
+        match ti {
+            0 => Some(("alpha".to_string(), 2, 16)),
+            1 => Some(("beta".to_string(), 1, 1)),
+            _ => None,
+        }
+    }
+
+    #[test]
+    fn counters_accumulate_per_chunk() {
+        let heat = HeatMap::new();
+        heat.demand_miss(0, 0);
+        heat.add_decode_nanos(0, 0, 500);
+        heat.demand_hit(0, 0);
+        heat.demand_hit(0, 0);
+        heat.prefetch(0, 3);
+        heat.add_decode_nanos(0, 3, 700);
+        heat.demand_hit(1, 0);
+        let entries = heat.entries(resolve);
+        assert_eq!(entries.len(), 3);
+        let e00 = &entries[0];
+        assert_eq!((e00.tensor.as_str(), e00.chunk), ("alpha", 0));
+        assert_eq!((e00.demand_hits, e00.demand_misses, e00.decode_nanos), (2, 1, 500));
+        let e03 = &entries[1];
+        assert_eq!((e03.prefetches, e03.decode_nanos), (1, 700));
+        assert_eq!(entries[2].tensor, "beta");
+    }
+
+    #[test]
+    fn unknown_tensor_indices_are_dropped() {
+        let heat = HeatMap::new();
+        heat.demand_hit(7, 0);
+        assert!(heat.entries(resolve).is_empty());
+    }
+
+    #[test]
+    fn summary_computes_prefetch_efficacy() {
+        let heat = HeatMap::new();
+        // alpha: chunk 0 prefetched then hit, chunk 1 prefetched never
+        // hit, chunk 2 demand-only.
+        heat.prefetch(0, 0);
+        heat.demand_hit(0, 0);
+        heat.prefetch(0, 1);
+        heat.demand_miss(0, 2);
+        heat.demand_hit(1, 0);
+        let sums = summarize(&heat.entries(resolve));
+        let alpha = sums.iter().find(|s| s.tensor == "alpha").unwrap();
+        assert_eq!(alpha.chunks_touched, 3);
+        assert_eq!((alpha.prefetched_chunks, alpha.prefetched_then_hit), (2, 1));
+        assert_eq!(alpha.prefetch_efficacy(), Some(0.5));
+        let beta = sums.iter().find(|s| s.tensor == "beta").unwrap();
+        assert_eq!(beta.prefetch_efficacy(), None);
+    }
+
+    #[test]
+    fn hostile_tensor_name_exposition_stays_parseable() {
+        let heat = HeatMap::new();
+        heat.demand_hit(0, 0);
+        heat.prefetch(0, 1);
+        let entries = heat.entries(|_| Some(("foo{bar=\"baz\n\"}".to_string(), 2, 16)));
+        let text = heatmap_prometheus_text(&entries);
+        for line in text.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            // Exposition shape: `name{labels} value` on one line with a
+            // terminal numeric value — a raw newline in the tensor name
+            // would break this split.
+            let (head, value) = line.rsplit_once(' ').expect("value after space");
+            assert!(value.parse::<f64>().is_ok(), "bad value in {line:?}");
+            assert!(head.starts_with("store_chunk_"), "bad series in {line:?}");
+            assert!(head.ends_with('}'), "unterminated labels in {line:?}");
+        }
+        assert!(text.contains("tensor=\"foo{bar=\\\"baz\\n\\\"}\""));
+    }
+
+    #[test]
+    fn renders_and_json_round_trip() {
+        let heat = HeatMap::new();
+        heat.demand_miss(0, 0);
+        heat.prefetch(0, 1);
+        let entries = heat.entries(resolve);
+        let table = render_top_chunks(&entries, 10);
+        assert!(table.contains("alpha"));
+        let summary = render_tensor_summary(&summarize(&entries));
+        assert!(summary.contains("efficacy"));
+        let doc = heatmap_json("zoo.apackstore", &entries).to_string();
+        let parsed = Json::parse(&doc).expect("heatmap json parses");
+        assert_eq!(
+            parsed.get("tensors").and_then(|t| t.as_arr()).map(|a| a.len()),
+            Some(1)
+        );
+    }
+}

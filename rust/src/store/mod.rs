@@ -92,6 +92,7 @@
 pub mod cache;
 pub mod format;
 pub mod handle;
+pub mod heat;
 pub mod io;
 pub mod pipeline;
 pub mod reader;
@@ -103,6 +104,7 @@ pub use format::{
     crc32, BodyConfig, BodyVersion, ChunkMeta, StoreFormat, StoreIndex, TensorMeta,
 };
 pub use handle::StoreHandle;
+pub use heat::{ChunkHeatEntry, HeatMap, TensorHeatSummary};
 pub use io::{Backend, ChunkSource, FileSource, MmapSource};
 pub use pipeline::PackOptions;
 pub use reader::{ReadStats, StoreReader, VerifyReport, DEFAULT_CACHE_VALUES};

@@ -30,6 +30,7 @@ use super::cache::{ChunkCache, ChunkKey, ScratchPool};
 use super::format::{
     crc32, parse_trailer, StoreFormat, StoreIndex, TensorMeta, STORE_MAGIC, TRAILER_BYTES,
 };
+use super::heat::{ChunkHeatEntry, HeatMap};
 use super::io::{Backend, ChunkSource};
 
 /// Default cache budget: 4M values (16 MiB of decoded u32s).
@@ -191,6 +192,9 @@ pub struct StoreReader {
     prefetched_chunks: Arc<Counter>,
     values_decoded: Arc<Counter>,
     decode_nanos: Arc<Counter>,
+    /// Per-(tensor, chunk) access heat (DESIGN.md §12): the where-did-it-
+    /// go companion to the aggregate counters above.
+    heat: HeatMap,
 }
 
 impl StoreReader {
@@ -283,6 +287,7 @@ impl StoreReader {
             values_decoded: registry.counter("store.values_decoded"),
             decode_nanos: registry.counter("store.decode_nanos"),
             registry,
+            heat: HeatMap::new(),
         })
     }
 
@@ -348,10 +353,11 @@ impl StoreReader {
     /// deliberately off the demand/prefetch hot path).
     fn decode_chunk_scratch(
         &self,
-        t: &TensorMeta,
+        ti: usize,
         ci: usize,
         check_lanes: bool,
     ) -> Result<Vec<u32>> {
+        let t = &self.index.tensors[ti];
         let blob = self.read_chunk_bytes(t, ci)?;
         let n_expected = t.chunks[ci].n_values;
         let count_err = |got: u64| {
@@ -386,7 +392,9 @@ impl StoreReader {
                 t.name
             ))),
         };
-        self.decode_nanos.add(t0.elapsed().as_nanos() as u64);
+        let spent = t0.elapsed().as_nanos() as u64;
+        self.decode_nanos.add(spent);
+        self.heat.add_decode_nanos(ti as u32, ci as u32, spent);
         if let Err(e) = decoded {
             self.scratch.release(buf);
             return Err(e);
@@ -410,11 +418,12 @@ impl StoreReader {
         let key: ChunkKey = (ti as u32, ci as u32);
         if let Some(hit) = self.cache.lock().expect("store cache lock").get(key) {
             self.cache_hits.inc();
+            self.heat.demand_hit(ti as u32, ci as u32);
             return Ok(hit);
         }
         self.cache_misses.inc();
-        let t = &self.index.tensors[ti];
-        let values = Arc::new(self.decode_chunk_scratch(t, ci, false)?);
+        self.heat.demand_miss(ti as u32, ci as u32);
+        let values = Arc::new(self.decode_chunk_scratch(ti, ci, false)?);
         self.cache_insert(key, &values);
         Ok(values)
     }
@@ -446,8 +455,9 @@ impl StoreReader {
                 return Ok(false);
             }
         }
-        let values = Arc::new(self.decode_chunk_scratch(t, ci, false)?);
+        let values = Arc::new(self.decode_chunk_scratch(ti, ci, false)?);
         self.prefetched_chunks.inc();
+        self.heat.prefetch(ti as u32, ci as u32);
         self.cache_insert(key, &values);
         Ok(true)
     }
@@ -525,13 +535,12 @@ impl StoreReader {
             .flat_map(|(ti, t)| (0..t.chunks.len()).map(move |ci| (ti, ci)))
             .collect();
         let checks: Result<Vec<u64>> = par_map(&jobs, |&(ti, ci)| {
-            let t = &self.index.tensors[ti];
             // Scratch decode: the blob is CRC-checked and the decoded
             // count validated against the index inside; the buffer goes
             // straight back to the pool (verify keeps nothing).
-            let values = self.decode_chunk_scratch(t, ci, true)?;
+            let values = self.decode_chunk_scratch(ti, ci, true)?;
             self.scratch.release(values);
-            Ok(t.chunks[ci].len)
+            Ok(self.index.tensors[ti].chunks[ci].len)
         })
         .into_iter()
         .collect();
@@ -560,6 +569,18 @@ impl StoreReader {
     /// [`StoreReader::registry_snapshot`]).
     pub fn stats(&self) -> ReadStats {
         ReadStats::from_snapshot(self.source.backend(), &self.registry_snapshot())
+    }
+
+    /// Per-chunk access heat joined with tensor identity, sorted
+    /// `(tensor, chunk)` — see [`super::heat`] for the attribution rules
+    /// and the rollup/render helpers.
+    pub fn heatmap(&self) -> Vec<ChunkHeatEntry> {
+        self.heat.entries(|ti| {
+            self.index
+                .tensors
+                .get(ti as usize)
+                .map(|t| (t.name.clone(), t.body_version, t.lanes))
+        })
     }
 
     /// Zero the read counters (does not touch the cache; pooled scratch

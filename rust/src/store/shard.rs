@@ -454,6 +454,16 @@ impl ShardedStoreReader {
         agg
     }
 
+    /// Concatenated per-chunk access heat across shards (tensor names are
+    /// globally unique — each lives on exactly one shard — so entries
+    /// never collide), re-sorted `(tensor, chunk)`.
+    pub fn heatmap(&self) -> Vec<super::heat::ChunkHeatEntry> {
+        let mut out: Vec<super::heat::ChunkHeatEntry> =
+            self.readers.iter().flat_map(|r| r.heatmap()).collect();
+        out.sort_by(|a, b| (&a.tensor, a.chunk).cmp(&(&b.tensor, b.chunk)));
+        out
+    }
+
     /// Zero every shard's read counters.
     pub fn reset_stats(&self) {
         for r in &self.readers {

@@ -2,7 +2,10 @@
 //! monotonic, quantiles ordered), the disabled tracer recording nothing,
 //! span-tree well-formedness under a concurrent serving run, request
 //! coverage, and the exporters (Chrome trace JSON parses, Prometheus
-//! text, JSONL snapshot stream).
+//! text, JSONL snapshot stream). The attribution layer (ISSUE 8) adds:
+//! cross-thread lane-span parenting on the threaded decode, profile
+//! folding consistent with the request histogram, and tail exemplars
+//! exporting as valid Chrome trace JSON.
 //!
 //! The span tracer is process-global, and libtest runs `#[test]` fns on
 //! parallel threads — every test that enables/drains the tracer holds
@@ -14,7 +17,8 @@ use std::path::PathBuf;
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Duration;
 
-use apack_repro::apack::tablegen::TensorKind;
+use apack_repro::apack::tablegen::{table_for_tensor, TensorKind};
+use apack_repro::apack::{encode_body_v2, BodyV2View};
 use apack_repro::coordinator::PartitionPolicy;
 use apack_repro::models::distributions::ValueProfile;
 use apack_repro::obs::{self, rates, LatencyHistogram, MetricsRegistry, SnapshotStream, Stage};
@@ -164,6 +168,7 @@ fn concurrent_serve_span_tree_is_well_formed() {
             coalescing: true,
             deadline: None,
             prefetch: None,
+            slo: None,
         },
     )
     .unwrap();
@@ -239,8 +244,144 @@ fn concurrent_serve_span_tree_is_well_formed() {
         }
     }
 
+    // The store defaults to v2 chunk bodies (16 lanes), so the serial
+    // lane decode fans out: every DecodeLanes span hangs under a Decode
+    // span (ISSUE 8 extends this forest test to the v2 lane path).
+    assert!(n_stage(Stage::DecodeLanes) > 0, "v2 lane fan-out must be traced");
+    for e in events.iter().filter(|e| e.stage == Stage::DecodeLanes) {
+        assert_eq!(stage_of[&e.parent], Stage::Decode, "DecodeLanes not under Decode");
+    }
+
     let cov = obs::request_coverage(&events).expect("request spans present");
     assert!(cov >= 0.90, "median request coverage {cov:.3} below the 0.90 test floor");
+
+    // Attribution profile (ISSUE 8) stays consistent with the request
+    // histogram: the folded `request` root path counts exactly the
+    // histogram's requests, and the request-rooted self times tile the
+    // requests' wall-clock (no stage is attributed more than once).
+    let profile = obs::Profile::from_events(&events);
+    let req = profile.get("request").expect("request path folded");
+    assert_eq!(req.count, total, "attribution request count != histogram count");
+    let request_wall: u64 = events
+        .iter()
+        .filter(|e| e.stage == Stage::Request)
+        .map(|e| e.duration_ns())
+        .sum();
+    let folded: u64 = profile
+        .iter()
+        .filter(|(p, _)| *p == "request" || p.starts_with("request;"))
+        .map(|(_, s)| s.self_ns)
+        .sum();
+    assert!(
+        folded <= request_wall,
+        "request-rooted self times ({folded} ns) exceed request wall-clock \
+         ({request_wall} ns)"
+    );
+    assert!(
+        folded * 10 >= request_wall * 8,
+        "request-rooted self times attribute only {folded} of {request_wall} ns"
+    );
+}
+
+/// The threaded lane decode begins its fan-out span on the calling thread
+/// and threads the id to the workers ([`obs::with_parent`]), so every
+/// worker-lane `Decode` span parents under `DecodeLanes` instead of
+/// rooting at 0 (the ISSUE 8 cross-thread parenting fix).
+#[test]
+fn threaded_lane_decode_parents_worker_spans_under_fanout() {
+    let _g = tracer_lock();
+    let values = tensor_values(40_000, 77);
+    let table = table_for_tensor(8, &values, TensorKind::Activations).unwrap();
+    let body = encode_body_v2(&table, &values, 16).unwrap();
+    let view = BodyV2View::parse(&body).unwrap();
+
+    obs::enable();
+    let mut out = vec![0u32; values.len()];
+    view.decode_into_threaded(&table, &mut out, 4).unwrap();
+    obs::disable();
+    let events = obs::drain();
+    assert_eq!(out, values);
+
+    let fans: Vec<_> = events.iter().filter(|e| e.stage == Stage::DecodeLanes).collect();
+    assert_eq!(fans.len(), 1, "one fan-out span per threaded decode");
+    let fan = fans[0];
+    assert_eq!(fan.count, 16, "fan-out span carries the lane count");
+    let lanes: Vec<_> = events.iter().filter(|e| e.stage == Stage::Decode).collect();
+    assert_eq!(lanes.len(), 16, "one Decode span per lane");
+    let tids: std::collections::BTreeSet<u64> = lanes.iter().map(|e| e.tid).collect();
+    assert!(tids.len() > 1, "lane decodes must come from several worker threads");
+    for lane in &lanes {
+        assert_eq!(lane.parent, fan.id, "worker-lane Decode must hang under DecodeLanes");
+        assert_ne!(lane.tid, fan.tid, "worker spans record on worker threads");
+    }
+    // The folded profile sees the full path, so lane time attributes
+    // under the fan-out instead of an orphan `decode` root.
+    let profile = obs::Profile::from_events(&events);
+    assert!(profile.get("decode_lanes;decode").is_some(), "lane path must fold");
+    assert!(profile.get("decode").is_none(), "no orphan lane roots remain");
+}
+
+/// End-to-end tail sampling (ISSUE 8): a traced serving run joined with
+/// the engine's outcome ring retains slow-tail exemplars whose span trees
+/// export as valid Chrome trace JSON.
+#[test]
+fn tail_exemplars_export_valid_chrome_trace() {
+    let _g = tracer_lock();
+    let (path, reference) = build_store("exemplar", 2, 10_000);
+    let store = Arc::new(StoreHandle::open(&path).unwrap());
+    let engine = ServingEngine::start(
+        Arc::clone(&store),
+        ServingConfig { workers: 2, ..ServingConfig::default() },
+    )
+    .unwrap();
+    let names: Vec<String> = reference.keys().cloned().collect();
+
+    obs::enable();
+    let mut rng = Rng64::new(0xE4E);
+    let requests = 60usize;
+    for i in 0..requests {
+        let name = &names[i % names.len()];
+        let n = reference[name].len() as u64;
+        if i % 10 == 0 {
+            // Induced slow requests: full-tensor reads decode every chunk,
+            // so the tail has real structure to retain.
+            assert_eq!(&*engine.get_tensor(name).unwrap(), &reference[name]);
+        } else {
+            let lo = rng.below(n - 64);
+            engine.get_range(name, lo..lo + 64).unwrap();
+        }
+    }
+    let records = engine.request_outcomes();
+    drop(engine);
+    drop(store);
+    cleanup(&path);
+    obs::disable();
+    let events = obs::drain();
+
+    assert_eq!(records.len(), requests, "every traced request lands in the outcome ring");
+    let ring = obs::collect_exemplars(&events, &records, 8);
+    assert!(!ring.is_empty(), "a tail exemplar must be retained");
+    let exemplars = ring.exemplars();
+    assert!(exemplars.len() <= 8);
+    for e in &exemplars {
+        assert!(!e.events.is_empty(), "exemplar without a span tree");
+        assert!(
+            e.events.iter().any(|ev| ev.id == e.span_id),
+            "exemplar tree must contain its request root"
+        );
+    }
+    // Slowest-first ordering (all outcomes are Ok here).
+    for w in exemplars.windows(2) {
+        assert!(w[0].latency_ns >= w[1].latency_ns);
+    }
+
+    let out = std::env::temp_dir()
+        .join(format!("apack_obs_exemplars_{}.json", std::process::id()));
+    ring.write_chrome_trace(&out).unwrap();
+    let doc = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+    let arr = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!arr.is_empty(), "exemplar Chrome trace holds events");
+    std::fs::remove_file(&out).ok();
 }
 
 // ---------------------------------------------------------------------------

@@ -84,6 +84,7 @@ fn stress_concurrent_clients_bit_exact() {
                     interval: Duration::from_millis(1),
                     ..PrefetchConfig::default()
                 }),
+                slo: None,
             },
         )
         .unwrap();
@@ -169,6 +170,7 @@ fn admission_control_sheds_instead_of_hanging() {
             coalescing: true,
             deadline: None,
             prefetch: None,
+            slo: None,
         },
     )
     .unwrap();
@@ -219,6 +221,7 @@ fn expired_deadlines_shed_at_pop() {
             coalescing: true,
             deadline: Some(Duration::ZERO),
             prefetch: None,
+            slo: None,
         },
     )
     .unwrap();
@@ -265,6 +268,7 @@ fn coalescing_cuts_duplicate_decodes() {
                 coalescing,
                 deadline: None,
                 prefetch: None,
+                slo: None,
             },
         )
         .unwrap();
@@ -320,6 +324,7 @@ fn prefetcher_warms_cleared_cache() {
                 top_k: 8,
                 min_touches: 1,
             }),
+            slo: None,
         },
     )
     .unwrap();
@@ -363,6 +368,7 @@ fn request_errors_do_not_poison_the_engine() {
             coalescing: true,
             deadline: None,
             prefetch: None,
+            slo: None,
         },
     )
     .unwrap();
