@@ -36,32 +36,40 @@
 //!
 //! # Decode paths
 //!
-//! - [`BodyV2View::decode_into`] — single-thread struct-of-arrays decode:
-//!   `HI`/`LO`/`CODE` live in arrays indexed by lane and the block loop
-//!   runs round-major (one value per lane per round), so the per-lane
-//!   update is the same straight-line LUT-resolve + renormalize as
-//!   [`ApackDecoder`]'s block path, repeated across independent lanes
-//!   with no cross-lane data dependence.
-//! - [`BodyV2View::decode_into_threaded`] — splits the caller's output
-//!   buffer into disjoint per-lane sub-slices and decodes each lane with
-//!   its own [`ApackDecoder`] on [`crate::util::par_map_owned_with`]
-//!   worker threads.
+//! Both paths run the round-major kernel driver
+//! [`decode_jobs`](super::simd::decode_jobs) (DESIGN.md §13), which
+//! advances every lane one value per round and dispatches per block of
+//! lanes to a scalar loop or a runtime-detected SIMD tier — selectable
+//! via [`DecodeKernel`] (`APACK_DECODE_KERNEL=scalar|simd`):
+//!
+//! - [`BodyV2View::decode_into`] / [`BodyV2View::decode_into_with`] —
+//!   single-thread decode over all lanes at once: `HI`/`LO`/`CODE` live
+//!   in struct-of-arrays lane state, so the kernel advances up to a full
+//!   vector width of lanes per iteration.
+//! - [`BodyV2View::decode_into_threaded`] /
+//!   [`BodyV2View::decode_into_threaded_with`] — partitions the lanes
+//!   into contiguous groups (one per worker) on
+//!   [`crate::util::par_map_owned_with`] threads; **each worker runs the
+//!   same kernel** over its lane group, so SIMD and threading compose.
+//!   Returns the summed per-worker decode nanos so callers (the store
+//!   reader's heatmap) can attribute actual decode cost rather than
+//!   caller wall time.
 //!
 //! Both are bit-exact with per-lane sequential decode, including
 //! `CorruptStream` positions: a lane-`l` corruption at within-lane value
 //! `p` surfaces at global position `lane_range(..).start + p`.
 
 use super::bitstream::BitReader;
-use super::decoder::ApackDecoder;
 use super::encoder::ApackEncoder;
-use super::table::{SymbolTable, PROB_BITS};
-use super::NUM_ROWS;
+use super::simd::{decode_jobs, DecodeKernel, LaneJob};
+use super::table::SymbolTable;
 use crate::error::{Error, Result};
 use crate::obs::{self, Stage};
 use crate::store::format::crc32;
 use crate::util::par_map_owned_with;
 
 use std::ops::Range;
+use std::time::Instant;
 
 /// Default lane count for new v2 bodies (the paper's hardware deploys 16
 /// decoder lanes per engine cluster; the hot-path bench sweeps 1..64).
@@ -86,12 +94,6 @@ pub const HEADER_BYTES: usize = 12;
 
 /// One directory entry: `sym_bits u32 | ofs_bits u32 | crc32 u32`.
 pub const DIR_ENTRY_BYTES: usize = 12;
-
-// Renormalization constants, same values as the (file-private) ones in
-// `decoder.rs` — the SoA loop below must stay in lockstep with
-// `ApackDecoder::decode_block`.
-const TOP_BIT: u16 = 0x8000;
-const SECOND_BIT: u16 = 0x4000;
 
 /// Effective lane count for `n` values at a requested lane count: the
 /// request rounds *down* to a power of two clamped to `1..=`[`MAX_LANES`],
@@ -301,15 +303,53 @@ impl<'a> BodyV2View<'a> {
         Ok(())
     }
 
-    /// Single-thread lane-parallel decode: struct-of-arrays lane state
-    /// (`HI`/`LO`/`CODE` plus one bit reader pair per lane), round-major
-    /// block loop — `n / lanes` full rounds of one value per lane, then
-    /// one tail round for the `n % lanes` lanes holding an extra value.
-    /// LUT symbol resolution per lane (bit-identical to every
-    /// [`super::decoder::ResolveMode`], DESIGN.md invariant 3). Emits one
-    /// `Decode` span with a `DecodeLanes` child carrying the lane count,
-    /// so Chrome traces show the fan-out.
+    /// Build one [`LaneJob`] per lane over disjoint sub-slices of `out`
+    /// (the [`lane_range`] split), each with fresh bit cursors. The jobs
+    /// carry non-increasing output lengths — the active-prefix invariant
+    /// [`decode_jobs`] relies on — and that also holds for any contiguous
+    /// subsequence, which is what lets the threaded path hand contiguous
+    /// lane groups to workers.
+    fn lane_jobs<'o>(&self, out: &'o mut [u32]) -> Vec<LaneJob<'a, 'o>> {
+        let n = out.len();
+        let mut jobs = Vec::with_capacity(self.lanes);
+        let mut rest = out;
+        for l in 0..self.lanes {
+            let e = &self.entries[l];
+            let (sym, ofs) = self.lane_streams(l);
+            let r = lane_range(n, self.lanes, l);
+            let (head, tail) = rest.split_at_mut(r.len());
+            jobs.push(LaneJob {
+                sym: BitReader::new(sym, e.sym_bits as usize),
+                ofs: BitReader::new(ofs, e.ofs_bits as usize),
+                out: head,
+                base: r.start,
+            });
+            rest = tail;
+        }
+        debug_assert!(rest.is_empty());
+        jobs
+    }
+
+    /// Single-thread lane-parallel decode with the process-default kernel
+    /// ([`DecodeKernel::auto`]). See [`Self::decode_into_with`].
     pub fn decode_into(&self, table: &SymbolTable, out: &mut [u32]) -> Result<()> {
+        self.decode_into_with(table, out, DecodeKernel::auto())
+    }
+
+    /// Single-thread lane-parallel decode: struct-of-arrays lane state,
+    /// round-major [`decode_jobs`] driver advancing every lane one value
+    /// per round with the chosen kernel (scalar loop or runtime-detected
+    /// SIMD tier), bit-identical either way and to every
+    /// [`super::decoder::ResolveMode`] (DESIGN.md invariant 3). Emits one
+    /// `Decode` span with a `DecodeLanes` child carrying the lane count
+    /// and tagged with the active kernel label, so traces and profiles
+    /// attribute the fan-out to the loop that actually ran.
+    pub fn decode_into_with(
+        &self,
+        table: &SymbolTable,
+        out: &mut [u32],
+        kernel: DecodeKernel,
+    ) -> Result<()> {
         if out.len() as u64 != self.n_values {
             return Err(Error::BadContainer(format!(
                 "decode_into slice holds {} values, v2 body has {}",
@@ -318,97 +358,43 @@ impl<'a> BodyV2View<'a> {
             )));
         }
         let _span = obs::span_n(Stage::Decode, out.len() as u64);
-        let _fan = obs::span_n(Stage::DecodeLanes, self.lanes as u64);
-
-        let n = out.len();
-        let lanes = self.lanes;
-        let mut cum = [0u16; NUM_ROWS + 1];
-        for i in 0..NUM_ROWS {
-            cum[i + 1] = table.rows()[i].hi_cnt;
-        }
-
-        // Lane state, struct-of-arrays: fixed-size arrays indexed by lane
-        // (only the first `lanes` entries are live).
-        let mut hi = [0xFFFFu16; MAX_LANES as usize];
-        let mut lo = [0u16; MAX_LANES as usize];
-        let mut code = [0u16; MAX_LANES as usize];
-        let mut base = [0usize; MAX_LANES as usize];
-        let mut sym_in: Vec<BitReader<'a>> = Vec::with_capacity(lanes);
-        let mut ofs_in: Vec<BitReader<'a>> = Vec::with_capacity(lanes);
-        for l in 0..lanes {
-            let e = &self.entries[l];
-            let (sym, ofs) = self.lane_streams(l);
-            let mut s = BitReader::new(sym, e.sym_bits as usize);
-            // Prime CODE exactly as `ApackDecoder::new` does (zero-latch
-            // past a short stream is legal for the symbol stream).
-            code[l] = s.read_bits(16) as u16;
-            sym_in.push(s);
-            ofs_in.push(BitReader::new(ofs, e.ofs_bits as usize));
-            base[l] = lane_range(n, lanes, l).start;
-        }
-
-        let q = n / lanes;
-        let r = n % lanes;
-        // First corruption in round-major order; within one lane the
-        // position matches sequential per-lane decode exactly (lanes are
-        // independent, so lane l's p-th step is schedule-invariant).
-        let mut corrupt: Option<(usize, usize)> = None;
-        'rounds: for round in 0..q {
-            for l in 0..lanes {
-                if !lane_step(
-                    table,
-                    &cum,
-                    &mut hi[l],
-                    &mut lo[l],
-                    &mut code[l],
-                    &mut sym_in[l],
-                    &mut ofs_in[l],
-                    &mut out[base[l] + round],
-                ) {
-                    corrupt = Some((l, round));
-                    break 'rounds;
-                }
-            }
-        }
-        if corrupt.is_none() {
-            for l in 0..r {
-                if !lane_step(
-                    table,
-                    &cum,
-                    &mut hi[l],
-                    &mut lo[l],
-                    &mut code[l],
-                    &mut sym_in[l],
-                    &mut ofs_in[l],
-                    &mut out[base[l] + q],
-                ) {
-                    corrupt = Some((l, q));
-                    break;
-                }
-            }
-        }
-        if let Some((l, p)) = corrupt {
-            return Err(Error::CorruptStream { position: base[l] + p });
-        }
-        Ok(())
+        let _fan =
+            obs::span_n_tagged(Stage::DecodeLanes, self.lanes as u64, kernel.active_label());
+        let mut jobs = self.lane_jobs(out);
+        decode_jobs(kernel, table, &mut jobs)
     }
 
-    /// Threaded lane decode: the output buffer splits into disjoint
-    /// per-lane sub-slices ([`lane_range`]) and each lane runs its own
-    /// [`ApackDecoder::decode_into`] on a scoped worker thread
-    /// (`threads == 0` uses the machine's parallelism). Bit-identical to
-    /// [`Self::decode_into`]; on corruption the first failing lane *in
-    /// lane order* is reported, its position rebased to the lane's start.
-    /// Opens the `DecodeLanes` span on the calling thread and threads its
-    /// id to the workers ([`obs::with_parent`]), so each lane's block
-    /// `Decode` span lands as a child of `DecodeLanes` instead of
-    /// rooting at 0 — span-forest coverage holds on the lane path.
+    /// Threaded lane decode with the process-default kernel. See
+    /// [`Self::decode_into_threaded_with`].
     pub fn decode_into_threaded(
         &self,
         table: &SymbolTable,
         out: &mut [u32],
         threads: usize,
-    ) -> Result<()> {
+    ) -> Result<u64> {
+        self.decode_into_threaded_with(table, out, threads, DecodeKernel::auto())
+    }
+
+    /// Threaded lane decode: the lanes split into contiguous groups (one
+    /// per worker, `threads == 0` uses the machine's parallelism, capped
+    /// at the lane count) and each worker runs the same [`decode_jobs`]
+    /// kernel over its group's disjoint output sub-slices — SIMD inside
+    /// each worker, workers in parallel. Bit-identical to
+    /// [`Self::decode_into_with`]; on corruption the first failing lane
+    /// *in group order* is reported, its position rebased to the lane's
+    /// start. Opens the `DecodeLanes` span (tagged with the kernel label)
+    /// on the calling thread and threads its id to the workers
+    /// ([`obs::with_parent`]), so each group's `Decode` span lands as a
+    /// child of `DecodeLanes` — span-forest coverage holds on the lane
+    /// path. Returns the **summed worker decode nanos** (actual lane
+    /// work, not caller wall time) for heatmap attribution.
+    pub fn decode_into_threaded_with(
+        &self,
+        table: &SymbolTable,
+        out: &mut [u32],
+        threads: usize,
+        kernel: DecodeKernel,
+    ) -> Result<u64> {
         if out.len() as u64 != self.n_values {
             return Err(Error::BadContainer(format!(
                 "decode_into_threaded slice holds {} values, v2 body has {}",
@@ -417,114 +403,42 @@ impl<'a> BodyV2View<'a> {
             )));
         }
         // Cross-thread fan-out span: begun here, finished after the
-        // workers join; its id parents every worker-lane Decode span.
-        let fan = obs::ManualSpan::begin(Stage::DecodeLanes);
+        // workers join; its id parents every worker-group Decode span.
+        let fan = obs::ManualSpan::begin_tagged(Stage::DecodeLanes, kernel.active_label());
         let fan_id = fan.as_ref().map(|s| s.id()).unwrap_or(0);
-        let n = out.len();
         let threads = if threads == 0 {
             std::thread::available_parallelism().map(|t| t.get()).unwrap_or(4)
         } else {
             threads
         };
+        let threads = threads.min(self.lanes).max(1);
 
-        let mut jobs: Vec<(usize, &mut [u32])> = Vec::with_capacity(self.lanes);
-        let mut rest = out;
-        for l in 0..self.lanes {
-            let len = lane_range(n, self.lanes, l).len();
-            let (head, tail) = rest.split_at_mut(len);
-            jobs.push((l, head));
-            rest = tail;
+        let mut jobs = self.lane_jobs(out);
+        let group_size = self.lanes.div_ceil(threads);
+        let mut groups: Vec<Vec<LaneJob<'_, '_>>> = Vec::with_capacity(threads);
+        while jobs.len() > group_size {
+            let tail = jobs.split_off(group_size);
+            groups.push(std::mem::replace(&mut jobs, tail));
         }
-        debug_assert!(rest.is_empty());
+        groups.push(jobs);
 
-        let result = par_map_owned_with(jobs, threads, |(l, slice)| -> Result<()> {
+        let result = par_map_owned_with(groups, threads, |mut group| -> Result<u64> {
             obs::with_parent(fan_id, || {
-                let e = &self.entries[l];
-                let (sym, ofs) = self.lane_streams(l);
-                let mut dec =
-                    ApackDecoder::new(table, BitReader::new(sym, e.sym_bits as usize))?;
-                let mut ofs_r = BitReader::new(ofs, e.ofs_bits as usize);
-                let lane_base = lane_range(n, self.lanes, l).start;
-                dec.decode_into(slice, &mut ofs_r).map_err(|err| match err {
-                    Error::CorruptStream { position } => {
-                        Error::CorruptStream { position: lane_base + position }
-                    }
-                    other => other,
-                })
+                let vals: u64 = group.iter().map(|j| j.out.len() as u64).sum();
+                let _span = obs::span_n_tagged(Stage::Decode, vals, kernel.active_label());
+                let t0 = Instant::now();
+                decode_jobs(kernel, table, &mut group)?;
+                Ok(t0.elapsed().as_nanos() as u64)
             })
         })
         .into_iter()
-        .collect::<Result<Vec<()>>>();
+        .collect::<Result<Vec<u64>>>()
+        .map(|nanos| nanos.iter().sum());
         if let Some(f) = fan {
             f.finish_with(self.lanes as u64);
         }
-        result.map(|_| ())
+        result
     }
-}
-
-/// Decode one value for one lane: LUT symbol resolution, SYMBOL Gen with
-/// offset-exhaustion detection, then the batched HI/LO/CODE
-/// renormalization — the exact per-value body of
-/// `ApackDecoder::decode_block::<2>` on one lane's registers. Returns
-/// `false` on corruption (the caller owns position accounting).
-#[inline(always)]
-#[allow(clippy::too_many_arguments)]
-fn lane_step(
-    table: &SymbolTable,
-    cum: &[u16; NUM_ROWS + 1],
-    hi: &mut u16,
-    lo: &mut u16,
-    code: &mut u16,
-    sym_in: &mut BitReader<'_>,
-    ofs_in: &mut BitReader<'_>,
-    slot: &mut u32,
-) -> bool {
-    let range = (*hi - *lo) as u32 + 1;
-    let d = code.wrapping_sub(*lo) as u32;
-    let k = (((d + 1) << PROB_BITS) - 1) / range;
-    if k >= cum[NUM_ROWS] as u32 {
-        return false;
-    }
-    let idx = table.row_for_count(k as u16);
-    let s_lo = (range * cum[idx] as u32) >> PROB_BITS;
-    let s_hi = (range * cum[idx + 1] as u32) >> PROB_BITS;
-
-    let row = &table.rows()[idx];
-    let value = if row.ol > 0 {
-        if ofs_in.bits_remaining() < row.ol as usize {
-            return false;
-        }
-        row.v_min + ofs_in.read_bits(row.ol) as u32
-    } else {
-        row.v_min
-    };
-    if value > row.v_max {
-        return false;
-    }
-    *slot = value;
-
-    let mut nh = (*lo as u32 + s_hi - 1) as u16;
-    let mut nl = (*lo as u32 + s_lo) as u16;
-    let mut nc = *code;
-    loop {
-        let diff = nh ^ nl;
-        if diff & TOP_BIT == 0 {
-            let k = (diff as u32 | 1).leading_zeros() - 16;
-            nl <<= k;
-            nh = (nh << k) | ((1u32 << k) as u16).wrapping_sub(1);
-            nc = (nc << k) | sym_in.read_bits(k) as u16;
-        } else if nl & SECOND_BIT != 0 && nh & SECOND_BIT == 0 {
-            nc = ((nc ^ SECOND_BIT) << 1) | sym_in.read_bit() as u16;
-            nl = (nl & (SECOND_BIT - 1)) << 1;
-            nh = ((nh | SECOND_BIT) << 1) | 1;
-        } else {
-            break;
-        }
-    }
-    *hi = nh;
-    *lo = nl;
-    *code = nc;
-    true
 }
 
 #[cfg(test)]
@@ -694,6 +608,23 @@ mod tests {
         assert_eq!(p_soa, p_thr);
         let lane3 = lane_range(values.len(), 4, 3);
         assert!(lane3.contains(p_soa), "position {p_soa} outside lane 3 {lane3:?}");
+    }
+
+    #[test]
+    fn kernel_knob_is_bit_exact_across_paths() {
+        let values = tensor(30_000, 33);
+        let table = table_for(&values);
+        let body = encode_body_v2(&table, &values, 8).unwrap();
+        let view = BodyV2View::parse(&body).unwrap();
+        for kernel in [DecodeKernel::Scalar, DecodeKernel::Simd] {
+            let mut soa = vec![0u32; values.len()];
+            view.decode_into_with(&table, &mut soa, kernel).unwrap();
+            assert_eq!(soa, values, "kernel {kernel:?} single-thread");
+            let mut thr = vec![0u32; values.len()];
+            let nanos = view.decode_into_threaded_with(&table, &mut thr, 3, kernel).unwrap();
+            assert_eq!(thr, values, "kernel {kernel:?} threaded");
+            assert!(nanos > 0, "threaded decode must report worker nanos");
+        }
     }
 
     #[test]

@@ -14,6 +14,10 @@
 //! - [`lanes`] — chunk body **v2**: N independent per-chunk substreams
 //!   sharing one table, with struct-of-arrays and threaded lane-parallel
 //!   decode (DESIGN.md §11).
+//! - [`simd`] — the SIMD lane-parallel decode kernel behind both v2
+//!   decode paths: runtime-dispatched AVX2/SSE2/NEON tiers over a shared
+//!   round-major driver, scalar fallback pinned bit-identical
+//!   (DESIGN.md §13).
 
 pub mod bitserial;
 pub mod bitstream;
@@ -22,6 +26,7 @@ pub mod decoder;
 pub mod encoder;
 pub mod histogram;
 pub mod lanes;
+pub mod simd;
 pub mod table;
 pub mod tablegen;
 
@@ -32,6 +37,7 @@ pub use lanes::{
 };
 pub use decoder::{ApackDecoder, ResolveMode};
 pub use encoder::ApackEncoder;
+pub use simd::{decode_jobs, DecodeKernel, LaneJob};
 pub use histogram::Histogram;
 pub use table::{SymbolTable, TableRow, PROB_BITS, PROB_MAX};
 pub use tablegen::{generate_table, generate_table_seed, TableGenConfig, TensorKind};

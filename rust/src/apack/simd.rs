@@ -1,0 +1,680 @@
+//! SIMD lane-parallel decode kernel for chunk body v2 (DESIGN.md §13).
+//!
+//! Body v2 (see [`super::lanes`]) splits a chunk into N independent arithmetic-coded
+//! substreams. The SoA decoder retires one lane-step per scalar iteration; this module
+//! packs K lanes' decoder state (HI/LO/CODE as u16 registers widened to u32 vector
+//! lanes) and advances all K per iteration.
+//!
+//! ## Structure
+//!
+//! [`decode_jobs`] is the one round-major driver shared by every kernel tier: each
+//! round advances every still-active lane by one value. Per round, a *classify* step
+//! computes the count `k = ((d + 1) << PROB_BITS - 1) / range` for a block of lanes at
+//! once (this is the expensive part: a 32-bit division per lane), and a *completion*
+//! step runs per lane **in lane order**: corrupt-count check, LUT row resolution,
+//! range narrowing, offset-bit splice, value-range check, and the renormalization
+//! loop that shifts fresh bits into CODE. Completion is the only step that touches the
+//! per-lane bit cursors, so its strict lane ordering makes every tier consume bits in
+//! exactly the same sequence as the scalar loop.
+//!
+//! ## Divergence handling
+//!
+//! Lanes diverge two ways inside a round: a lane's count can exceed `PROB_MAX`
+//! (corrupt stream), and a lane may or may not need renormalization. Both are resolved
+//! movemask-style: the wide classify step emits per-lane bitmasks (`_mm256_movemask_ps`
+//! over the comparison results) and the completion loop branches per lane on its mask
+//! bit. Corrupt counts are clamped to `PROB_MAX` before the LUT gather (the LUT's last
+//! slot is a valid sentinel row), so the gather itself never reads out of bounds; the
+//! corrupt lane then fails in lane order, yielding the same `CorruptStream` position as
+//! the scalar loop.
+//!
+//! ## Bit-exactness
+//!
+//! The only vectorized arithmetic that could diverge from the scalar loop is the count
+//! division, computed here in f64. It is exact: `num = ((d + 1) << 10) - 1 < 2^26` and
+//! `range ∈ (2^14, 2^16]` are both exactly representable, the true quotient is at
+//! distance ≥ 1/range ≥ 2^-16 from the nearest wrong integer, and the f64 rounding
+//! error of one division of such operands is < 2^-27 — so truncating the f64 quotient
+//! equals the integer division for every reachable operand pair, including corrupt
+//! streams (pinned by an exhaustive-grid test below). Everything else is u16/u32
+//! arithmetic identical to the scalar loop, and bit consumption order is fixed by the
+//! lane-ordered completion step. The `range > 2^14` lower bound holds on *all* inputs
+//! (even corrupt ones) because the renorm loop only exits with `hi - lo + 1 > 2^14`.
+//!
+//! ## Dispatch
+//!
+//! [`DecodeKernel::auto`] honors `APACK_DECODE_KERNEL=scalar|simd` (default `simd`);
+//! the SIMD path then picks an ISA tier at runtime: AVX2 (8-wide classify with LUT
+//! gathers) via `is_x86_feature_detected!`, else SSE2 (4 lanes, paired f64 divisions —
+//! baseline on x86_64), NEON on aarch64 (4 lanes, paired f64 divisions), and the
+//! scalar loop everywhere else and for trailing lanes. The scalar fallback is pinned
+//! bit-identical by property tests and a forced-scalar CI leg.
+
+use std::sync::OnceLock;
+
+use super::bitstream::BitReader;
+use super::lanes::MAX_LANES;
+#[cfg(target_arch = "x86_64")]
+use super::table::COUNT_LUT_LEN;
+use super::table::{SymbolTable, PROB_BITS, PROB_MAX};
+use super::NUM_ROWS;
+use crate::error::{Error, Result};
+
+const LANE_SLOTS: usize = MAX_LANES as usize;
+#[cfg(target_arch = "x86_64")]
+const LANES_AVX2: usize = 8;
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+const LANES_PAIR: usize = 4;
+const TOP_BIT: u16 = 0x8000;
+const SECOND_BIT: u16 = 0x4000;
+
+/// Which decode kernel family to run. `Scalar` is the SoA reference loop; `Simd`
+/// dispatches to the best ISA tier detected at runtime (and degrades to the scalar
+/// loop on architectures without a tier).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodeKernel {
+    Scalar,
+    Simd,
+}
+
+impl DecodeKernel {
+    /// Process-wide default: `APACK_DECODE_KERNEL=scalar` forces the scalar loop,
+    /// anything else (including unset) selects SIMD with runtime detection.
+    pub fn auto() -> Self {
+        static CHOICE: OnceLock<DecodeKernel> = OnceLock::new();
+        *CHOICE.get_or_init(|| match std::env::var("APACK_DECODE_KERNEL") {
+            Ok(v) if v.eq_ignore_ascii_case("scalar") => DecodeKernel::Scalar,
+            _ => DecodeKernel::Simd,
+        })
+    }
+
+    pub fn from_name(name: &str) -> Option<Self> {
+        if name.eq_ignore_ascii_case("scalar") {
+            Some(DecodeKernel::Scalar)
+        } else if name.eq_ignore_ascii_case("simd") {
+            Some(DecodeKernel::Simd)
+        } else {
+            None
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DecodeKernel::Scalar => "scalar",
+            DecodeKernel::Simd => "simd",
+        }
+    }
+
+    /// The label of the loop that will actually run: `scalar`, or the detected ISA
+    /// tier (`avx2`/`sse2`/`neon`, degrading to `scalar` off x86_64/aarch64).
+    pub fn active_label(self) -> &'static str {
+        match self {
+            DecodeKernel::Scalar => "scalar",
+            DecodeKernel::Simd => active_isa().label(),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Isa {
+    Scalar,
+    #[cfg(target_arch = "x86_64")]
+    Sse2,
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+impl Isa {
+    fn label(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            #[cfg(target_arch = "x86_64")]
+            Isa::Sse2 => "sse2",
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => "avx2",
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => "neon",
+        }
+    }
+}
+
+fn active_isa() -> Isa {
+    static ISA: OnceLock<Isa> = OnceLock::new();
+    *ISA.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                Isa::Avx2
+            } else {
+                Isa::Sse2
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            Isa::Neon
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            Isa::Scalar
+        }
+    })
+}
+
+/// One lane's decode work: its symbol and offset bit cursors, the output sub-slice it
+/// fills, and the absolute index of its first value (for `CorruptStream` positions).
+pub struct LaneJob<'d, 'o> {
+    pub sym: BitReader<'d>,
+    pub ofs: BitReader<'d>,
+    pub out: &'o mut [u32],
+    pub base: usize,
+}
+
+/// u32-widened LUTs for the AVX2 gather path: `row_of_k32[k]` is the row index for
+/// count `k` (last slot is the row-15 sentinel reached only by clamped corrupt
+/// counts), `cum32[i]` the cumulative count below row `i`.
+#[cfg(target_arch = "x86_64")]
+struct SimdLuts {
+    row_of_k32: [u32; COUNT_LUT_LEN],
+    cum32: [u32; NUM_ROWS + 1],
+}
+
+#[cfg(target_arch = "x86_64")]
+impl SimdLuts {
+    fn build(table: &SymbolTable) -> Self {
+        let mut row_of_k32 = [0u32; COUNT_LUT_LEN];
+        for (k, slot) in row_of_k32.iter_mut().enumerate() {
+            *slot = table.row_for_count(k as u16) as u32;
+        }
+        let mut cum32 = [0u32; NUM_ROWS + 1];
+        for i in 0..NUM_ROWS {
+            cum32[i + 1] = table.rows()[i].hi_cnt as u32;
+        }
+        Self { row_of_k32, cum32 }
+    }
+}
+
+/// Decode every job to completion, round-major: each round advances every lane whose
+/// output still has a value to fill. Jobs must be ordered by non-increasing output
+/// length (true for `lane_range` partitions and any contiguous subset of them), so the
+/// active set each round is a prefix.
+///
+/// All kernel tiers consume each lane's bit streams in the same order and report the
+/// same `CorruptStream { position: base + round }` for the first failing lane in
+/// (round, lane) order.
+pub fn decode_jobs(
+    kernel: DecodeKernel,
+    table: &SymbolTable,
+    jobs: &mut [LaneJob<'_, '_>],
+) -> Result<()> {
+    let lanes = jobs.len();
+    if lanes == 0 {
+        return Ok(());
+    }
+    debug_assert!(lanes <= LANE_SLOTS);
+    debug_assert!(jobs.windows(2).all(|w| w[0].out.len() >= w[1].out.len()));
+
+    let mut cum = [0u16; NUM_ROWS + 1];
+    for i in 0..NUM_ROWS {
+        cum[i + 1] = table.rows()[i].hi_cnt;
+    }
+    debug_assert_eq!(cum[NUM_ROWS], PROB_MAX);
+
+    let mut hi = [0xFFFFu16; LANE_SLOTS];
+    let mut lo = [0u16; LANE_SLOTS];
+    let mut code = [0u16; LANE_SLOTS];
+    for (l, j) in jobs.iter_mut().enumerate() {
+        code[l] = j.sym.read_bits(16) as u16;
+    }
+
+    let isa = match kernel {
+        DecodeKernel::Scalar => Isa::Scalar,
+        DecodeKernel::Simd => active_isa(),
+    };
+    #[cfg(target_arch = "x86_64")]
+    let luts = if isa == Isa::Avx2 {
+        Some(SimdLuts::build(table))
+    } else {
+        None
+    };
+
+    let max_len = jobs.iter().map(|j| j.out.len()).max().unwrap_or(0);
+    for round in 0..max_len {
+        let active = jobs.iter().take_while(|j| j.out.len() > round).count();
+        let mut l = 0usize;
+        #[cfg(target_arch = "x86_64")]
+        {
+            if isa == Isa::Avx2 {
+                let luts = luts.as_ref().expect("AVX2 LUTs built at dispatch");
+                while l + LANES_AVX2 <= active {
+                    // SAFETY: Isa::Avx2 is only selected when
+                    // is_x86_feature_detected!("avx2") held.
+                    let fail = unsafe {
+                        step8_avx2(table, luts, jobs, l, round, &mut hi, &mut lo, &mut code)
+                    };
+                    if let Some(bad) = fail {
+                        return Err(Error::CorruptStream {
+                            position: jobs[bad].base + round,
+                        });
+                    }
+                    l += LANES_AVX2;
+                }
+            } else if isa == Isa::Sse2 {
+                while l + LANES_PAIR <= active {
+                    // SAFETY: SSE2 is part of the x86_64 baseline.
+                    let fail = unsafe {
+                        step4_sse2(table, &cum, jobs, l, round, &mut hi, &mut lo, &mut code)
+                    };
+                    if let Some(bad) = fail {
+                        return Err(Error::CorruptStream {
+                            position: jobs[bad].base + round,
+                        });
+                    }
+                    l += LANES_PAIR;
+                }
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if isa == Isa::Neon {
+                while l + LANES_PAIR <= active {
+                    // SAFETY: NEON is part of the aarch64 baseline.
+                    let fail = unsafe {
+                        step4_neon(table, &cum, jobs, l, round, &mut hi, &mut lo, &mut code)
+                    };
+                    if let Some(bad) = fail {
+                        return Err(Error::CorruptStream {
+                            position: jobs[bad].base + round,
+                        });
+                    }
+                    l += LANES_PAIR;
+                }
+            }
+        }
+        while l < active {
+            let j = &mut jobs[l];
+            let ok = lane_step(
+                table,
+                &cum,
+                &mut hi[l],
+                &mut lo[l],
+                &mut code[l],
+                &mut j.sym,
+                &mut j.ofs,
+                &mut j.out[round],
+            );
+            if !ok {
+                return Err(Error::CorruptStream {
+                    position: jobs[l].base + round,
+                });
+            }
+            l += 1;
+        }
+    }
+    Ok(())
+}
+
+/// One scalar lane-step: classify (count division) + completion. Bit-identical to the
+/// pre-SIMD SoA loop; the SIMD tiers replace only the classify half.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn lane_step(
+    table: &SymbolTable,
+    cum: &[u16; NUM_ROWS + 1],
+    hi: &mut u16,
+    lo: &mut u16,
+    code: &mut u16,
+    sym_in: &mut BitReader<'_>,
+    ofs_in: &mut BitReader<'_>,
+    slot: &mut u32,
+) -> bool {
+    let range = (*hi - *lo) as u32 + 1;
+    let d = code.wrapping_sub(*lo) as u32;
+    let k = (((d + 1) << PROB_BITS) - 1) / range;
+    finish_from_k(table, cum, k, hi, lo, code, sym_in, ofs_in, slot)
+}
+
+/// Completion from a precomputed count `k`: corrupt check, LUT row, range narrowing,
+/// then [`complete_lane`]. Shared by the scalar loop and the pair-division tiers.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn finish_from_k(
+    table: &SymbolTable,
+    cum: &[u16; NUM_ROWS + 1],
+    k: u32,
+    hi: &mut u16,
+    lo: &mut u16,
+    code: &mut u16,
+    sym_in: &mut BitReader<'_>,
+    ofs_in: &mut BitReader<'_>,
+    slot: &mut u32,
+) -> bool {
+    if k >= cum[NUM_ROWS] as u32 {
+        return false;
+    }
+    let idx = table.row_for_count(k as u16);
+    let range = (*hi - *lo) as u32 + 1;
+    let s_lo = (range * cum[idx] as u32) >> PROB_BITS;
+    let s_hi = (range * cum[idx + 1] as u32) >> PROB_BITS;
+    let nh0 = (*lo as u32 + s_hi - 1) as u16;
+    let nl0 = (*lo as u32 + s_lo) as u16;
+    complete_lane(table, idx, nh0, nl0, true, hi, lo, code, sym_in, ofs_in, slot)
+}
+
+/// Offset splice, value-range check, and the renormalization loop; writes the lane's
+/// new HI/LO/CODE back. `needs_renorm` lets the AVX2 tier skip the loop entry for
+/// lanes its movemask proved converged (the loop would exit immediately anyway —
+/// skipping it is a pure branch elision, not an arithmetic change).
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn complete_lane(
+    table: &SymbolTable,
+    idx: usize,
+    nh0: u16,
+    nl0: u16,
+    needs_renorm: bool,
+    hi: &mut u16,
+    lo: &mut u16,
+    code: &mut u16,
+    sym_in: &mut BitReader<'_>,
+    ofs_in: &mut BitReader<'_>,
+    slot: &mut u32,
+) -> bool {
+    let row = &table.rows()[idx];
+    let value = if row.ol > 0 {
+        if ofs_in.bits_remaining() < row.ol as usize {
+            return false;
+        }
+        row.v_min + ofs_in.read_bits(row.ol) as u32
+    } else {
+        row.v_min
+    };
+    if value > row.v_max {
+        return false;
+    }
+    *slot = value;
+    let mut nh = nh0;
+    let mut nl = nl0;
+    let mut nc = *code;
+    if needs_renorm {
+        loop {
+            let diff = nh ^ nl;
+            if diff & TOP_BIT == 0 {
+                let k = (diff as u32 | 1).leading_zeros() - 16;
+                nl <<= k;
+                nh = (nh << k) | ((1u32 << k) as u16).wrapping_sub(1);
+                nc = (nc << k) | sym_in.read_bits(k) as u16;
+            } else if nl & SECOND_BIT != 0 && nh & SECOND_BIT == 0 {
+                nc = ((nc ^ SECOND_BIT) << 1) | sym_in.read_bit() as u16;
+                nl = (nl & (SECOND_BIT - 1)) << 1;
+                nh = ((nh | SECOND_BIT) << 1) | 1;
+            } else {
+                break;
+            }
+        }
+    }
+    *hi = nh;
+    *lo = nl;
+    *code = nc;
+    true
+}
+
+/// AVX2 tier: classify 8 lanes at once — widen HI/LO/CODE to 32-bit vector lanes,
+/// compute the count division in two f64 halves, gather row indices and cumulative
+/// counts, narrow the ranges, and derive corrupt/renorm movemasks — then complete the
+/// 8 lanes in lane order with the slim scalar tail.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn step8_avx2(
+    table: &SymbolTable,
+    luts: &SimdLuts,
+    jobs: &mut [LaneJob<'_, '_>],
+    l0: usize,
+    round: usize,
+    hi: &mut [u16; LANE_SLOTS],
+    lo: &mut [u16; LANE_SLOTS],
+    code: &mut [u16; LANE_SLOTS],
+) -> Option<usize> {
+    use std::arch::x86_64::*;
+
+    let hi_v = _mm256_cvtepu16_epi32(_mm_loadu_si128(hi[l0..].as_ptr() as *const __m128i));
+    let lo_v = _mm256_cvtepu16_epi32(_mm_loadu_si128(lo[l0..].as_ptr() as *const __m128i));
+    let code_v = _mm256_cvtepu16_epi32(_mm_loadu_si128(code[l0..].as_ptr() as *const __m128i));
+
+    let one = _mm256_set1_epi32(1);
+    let m16 = _mm256_set1_epi32(0xFFFF);
+    let range = _mm256_add_epi32(_mm256_sub_epi32(hi_v, lo_v), one);
+    let d = _mm256_and_si256(_mm256_sub_epi32(code_v, lo_v), m16);
+    let dp1 = _mm256_add_epi32(d, one);
+    let num = _mm256_sub_epi32(_mm256_slli_epi32::<{ PROB_BITS as i32 }>(dp1), one);
+
+    // Exact f64 division per the module-level proof; truncation == integer division.
+    let num_lo = _mm256_cvtepi32_pd(_mm256_castsi256_si128(num));
+    let num_hi = _mm256_cvtepi32_pd(_mm256_extracti128_si256::<1>(num));
+    let range_lo = _mm256_cvtepi32_pd(_mm256_castsi256_si128(range));
+    let range_hi = _mm256_cvtepi32_pd(_mm256_extracti128_si256::<1>(range));
+    let k_lo = _mm256_cvttpd_epi32(_mm256_div_pd(num_lo, range_lo));
+    let k_hi = _mm256_cvttpd_epi32(_mm256_div_pd(num_hi, range_hi));
+    let k = _mm256_inserti128_si256::<1>(_mm256_castsi128_si256(k_lo), k_hi);
+
+    let prob_max = _mm256_set1_epi32(PROB_MAX as i32);
+    let corrupt = _mm256_cmpgt_epi32(k, _mm256_sub_epi32(prob_max, one));
+    let corrupt_mask = _mm256_movemask_ps(_mm256_castsi256_ps(corrupt)) as u32;
+    // Clamp before the gather so corrupt counts read the valid sentinel slot.
+    let kc = _mm256_min_epi32(k, prob_max);
+    let idx = _mm256_i32gather_epi32::<4>(luts.row_of_k32.as_ptr() as *const i32, kc);
+    let cum_lo = _mm256_i32gather_epi32::<4>(luts.cum32.as_ptr() as *const i32, idx);
+    let cum_hi =
+        _mm256_i32gather_epi32::<4>(luts.cum32.as_ptr() as *const i32, _mm256_add_epi32(idx, one));
+    let s_lo = _mm256_srli_epi32::<{ PROB_BITS as i32 }>(_mm256_mullo_epi32(range, cum_lo));
+    let s_hi = _mm256_srli_epi32::<{ PROB_BITS as i32 }>(_mm256_mullo_epi32(range, cum_hi));
+    let nh = _mm256_and_si256(_mm256_sub_epi32(_mm256_add_epi32(lo_v, s_hi), one), m16);
+    let nl = _mm256_and_si256(_mm256_add_epi32(lo_v, s_lo), m16);
+
+    let top = _mm256_set1_epi32(TOP_BIT as i32);
+    let second = _mm256_set1_epi32(SECOND_BIT as i32);
+    let zero = _mm256_setzero_si256();
+    let diff_top = _mm256_and_si256(_mm256_xor_si256(nh, nl), top);
+    let shift_needed = _mm256_cmpeq_epi32(diff_top, zero);
+    let nl_second = _mm256_cmpeq_epi32(_mm256_and_si256(nl, second), second);
+    let nh_second = _mm256_cmpeq_epi32(_mm256_and_si256(nh, second), zero);
+    let renorm = _mm256_or_si256(shift_needed, _mm256_and_si256(nl_second, nh_second));
+    let renorm_mask = _mm256_movemask_ps(_mm256_castsi256_ps(renorm)) as u32;
+
+    let mut idx_a = [0u32; LANES_AVX2];
+    let mut nh_a = [0u32; LANES_AVX2];
+    let mut nl_a = [0u32; LANES_AVX2];
+    _mm256_storeu_si256(idx_a.as_mut_ptr() as *mut __m256i, idx);
+    _mm256_storeu_si256(nh_a.as_mut_ptr() as *mut __m256i, nh);
+    _mm256_storeu_si256(nl_a.as_mut_ptr() as *mut __m256i, nl);
+
+    for i in 0..LANES_AVX2 {
+        let l = l0 + i;
+        if corrupt_mask & (1 << i) != 0 {
+            return Some(l);
+        }
+        let j = &mut jobs[l];
+        let ok = complete_lane(
+            table,
+            idx_a[i] as usize,
+            nh_a[i] as u16,
+            nl_a[i] as u16,
+            renorm_mask & (1 << i) != 0,
+            &mut hi[l],
+            &mut lo[l],
+            &mut code[l],
+            &mut j.sym,
+            &mut j.ofs,
+            &mut j.out[round],
+        );
+        if !ok {
+            return Some(l);
+        }
+    }
+    None
+}
+
+/// SSE2 tier: vectorize only the count division (two `_mm_div_pd` pairs for 4 lanes);
+/// everything else runs through [`finish_from_k`]. SSE2 lacks the 32-bit gather and
+/// multiply primitives the AVX2 tier leans on, so the division — the long-latency op —
+/// is the only profitable vector piece.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn step4_sse2(
+    table: &SymbolTable,
+    cum: &[u16; NUM_ROWS + 1],
+    jobs: &mut [LaneJob<'_, '_>],
+    l0: usize,
+    round: usize,
+    hi: &mut [u16; LANE_SLOTS],
+    lo: &mut [u16; LANE_SLOTS],
+    code: &mut [u16; LANE_SLOTS],
+) -> Option<usize> {
+    use std::arch::x86_64::*;
+
+    let mut k = [0u32; LANES_PAIR];
+    for p in 0..2 {
+        let a = l0 + p * 2;
+        let b = a + 1;
+        let r0 = (hi[a] - lo[a]) as u32 + 1;
+        let r1 = (hi[b] - lo[b]) as u32 + 1;
+        let n0 = ((code[a].wrapping_sub(lo[a]) as u32 + 1) << PROB_BITS) - 1;
+        let n1 = ((code[b].wrapping_sub(lo[b]) as u32 + 1) << PROB_BITS) - 1;
+        let q = _mm_div_pd(_mm_set_pd(n1 as f64, n0 as f64), _mm_set_pd(r1 as f64, r0 as f64));
+        let ki = _mm_cvttpd_epi32(q);
+        k[p * 2] = _mm_cvtsi128_si32(ki) as u32;
+        k[p * 2 + 1] = _mm_cvtsi128_si32(_mm_shuffle_epi32::<0x55>(ki)) as u32;
+    }
+    for (i, ki) in k.iter().enumerate() {
+        let l = l0 + i;
+        let j = &mut jobs[l];
+        let ok = finish_from_k(
+            table,
+            cum,
+            *ki,
+            &mut hi[l],
+            &mut lo[l],
+            &mut code[l],
+            &mut j.sym,
+            &mut j.ofs,
+            &mut j.out[round],
+        );
+        if !ok {
+            return Some(l);
+        }
+    }
+    None
+}
+
+/// NEON tier: same shape as [`step4_sse2`] — paired f64 divisions (FCVTZU truncates,
+/// matching integer division per the exactness proof), scalar completion.
+#[cfg(target_arch = "aarch64")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn step4_neon(
+    table: &SymbolTable,
+    cum: &[u16; NUM_ROWS + 1],
+    jobs: &mut [LaneJob<'_, '_>],
+    l0: usize,
+    round: usize,
+    hi: &mut [u16; LANE_SLOTS],
+    lo: &mut [u16; LANE_SLOTS],
+    code: &mut [u16; LANE_SLOTS],
+) -> Option<usize> {
+    use std::arch::aarch64::*;
+
+    let mut k = [0u32; LANES_PAIR];
+    for p in 0..2 {
+        let a = l0 + p * 2;
+        let b = a + 1;
+        let r = [
+            ((hi[a] - lo[a]) as u32 + 1) as f64,
+            ((hi[b] - lo[b]) as u32 + 1) as f64,
+        ];
+        let n = [
+            ((((code[a].wrapping_sub(lo[a]) as u32) + 1) << PROB_BITS) - 1) as f64,
+            ((((code[b].wrapping_sub(lo[b]) as u32) + 1) << PROB_BITS) - 1) as f64,
+        ];
+        let q = vdivq_f64(vld1q_f64(n.as_ptr()), vld1q_f64(r.as_ptr()));
+        let ki = vcvtq_u64_f64(q);
+        k[p * 2] = vgetq_lane_u64::<0>(ki) as u32;
+        k[p * 2 + 1] = vgetq_lane_u64::<1>(ki) as u32;
+    }
+    for (i, ki) in k.iter().enumerate() {
+        let l = l0 + i;
+        let j = &mut jobs[l];
+        let ok = finish_from_k(
+            table,
+            cum,
+            *ki,
+            &mut hi[l],
+            &mut lo[l],
+            &mut code[l],
+            &mut j.sym,
+            &mut j.ofs,
+            &mut j.out[round],
+        );
+        if !ok {
+            return Some(l);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apack::lanes::{encode_body_v2, BodyV2View};
+    use crate::apack::tablegen::{table_for_tensor, TensorKind};
+    use crate::models::distributions::ValueProfile;
+
+    #[test]
+    fn kernel_parsing_and_labels() {
+        assert_eq!(DecodeKernel::from_name("scalar"), Some(DecodeKernel::Scalar));
+        assert_eq!(DecodeKernel::from_name("SIMD"), Some(DecodeKernel::Simd));
+        assert_eq!(DecodeKernel::from_name("gpu"), None);
+        assert_eq!(DecodeKernel::Scalar.name(), "scalar");
+        assert_eq!(DecodeKernel::Simd.name(), "simd");
+        assert_eq!(DecodeKernel::Scalar.active_label(), "scalar");
+        let simd = DecodeKernel::Simd.active_label();
+        assert!(
+            ["scalar", "sse2", "avx2", "neon"].contains(&simd),
+            "unexpected ISA label {simd}"
+        );
+    }
+
+    /// Pins the module-level exactness claim: truncated f64 division equals integer
+    /// division for every reachable (num, range) shape, sweeping a dense grid plus
+    /// the edge rows of each range.
+    #[test]
+    fn f64_division_is_exact_for_all_reachable_operands() {
+        let mut checked = 0u64;
+        let mut range = (1u32 << 14) + 1;
+        while range <= 1 << 16 {
+            let edge = [0u32, 1, (range - 1) & 0xFFFF, 0xFFFE, 0xFFFF];
+            for d in (0..=0xFFFFu32).step_by(131).chain(edge) {
+                let num = ((d + 1) << PROB_BITS) - 1;
+                let f = (num as f64 / range as f64) as u32;
+                assert_eq!(f, num / range, "num={num} range={range}");
+                checked += 1;
+            }
+            range += 7;
+        }
+        assert!(checked > 1_000_000);
+    }
+
+    #[test]
+    fn simd_and_scalar_kernels_agree_on_a_smoke_tensor() {
+        let values = ValueProfile::ReluActivation { sparsity: 0.5, q: 0.93, noise_floor: 0.01 }
+            .sample(8, 40_000, 77);
+        let table = table_for_tensor(8, &values, TensorKind::Activations).unwrap();
+        let body = encode_body_v2(&table, &values, 16).unwrap();
+        let view = BodyV2View::parse(&body).unwrap();
+        for kernel in [DecodeKernel::Scalar, DecodeKernel::Simd] {
+            let mut out = vec![0u32; values.len()];
+            view.decode_into_with(&table, &mut out, kernel).unwrap();
+            assert_eq!(out, values, "kernel {:?}", kernel);
+        }
+    }
+}

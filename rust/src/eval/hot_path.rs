@@ -2,10 +2,10 @@
 //! encode/decode throughput across every [`ResolveMode`] and both decode
 //! granularities (per-value reference vs. block `decode_into`), plus the
 //! store chunk-body paths — v1 single-stream bodies against v2
-//! interleaved lane bodies over the [`LANE_SWEEP`] (SoA and threaded
-//! decoders) — with machine-readable JSON output so decode throughput is
-//! a tracked, regression-guarded number PR over PR (ISSUE 4, ISSUE 7;
-//! DESIGN.md §8, §11).
+//! interleaved lane bodies over the [`LANE_SWEEP`] (scalar SoA, SIMD
+//! lane-kernel, and threaded decoders) — with machine-readable JSON
+//! output so decode throughput is a tracked, regression-guarded number
+//! PR over PR (ISSUE 4, ISSUE 7, ISSUE 9; DESIGN.md §8, §11, §13).
 //!
 //! Shared by `benches/codec_hot_path.rs` (release-build numbers, uploaded
 //! as a CI artifact) and the tier-1 `hot_path_report` integration test
@@ -23,6 +23,7 @@ use crate::apack::container::{encode_body, BodyView};
 use crate::apack::decoder::{ApackDecoder, ResolveMode};
 use crate::apack::encoder::ApackEncoder;
 use crate::apack::lanes::{encode_body_v2, BodyV2View};
+use crate::apack::simd::DecodeKernel;
 use crate::apack::tablegen::{table_for_tensor, TensorKind};
 use crate::coordinator::{Coordinator, PartitionPolicy};
 use crate::models::distributions::ValueProfile;
@@ -89,6 +90,11 @@ pub struct HotPathReport {
     /// single-stream body decode (the ISSUE 7 CI gate — lane fan-out must
     /// beat the sequential store-body path it replaces).
     pub speedup_body_v2_threaded16_vs_v1: f64,
+    /// SIMD kernel ratio: 16-lane v2 body decode with the lane-parallel
+    /// SIMD kernel over the same body through the scalar SoA loop (the
+    /// ISSUE 9 CI gate on x86_64 — vectorized lane stepping must beat
+    /// the scalar loop it specializes).
+    pub speedup_body_v2_simd16_vs_soa16: f64,
 }
 
 impl HotPathReport {
@@ -115,6 +121,10 @@ impl HotPathReport {
         root.insert(
             "speedup_body_v2_threaded16_vs_v1".to_string(),
             Json::Num(self.speedup_body_v2_threaded16_vs_v1),
+        );
+        root.insert(
+            "speedup_body_v2_simd16_vs_soa16".to_string(),
+            Json::Num(self.speedup_body_v2_simd16_vs_soa16),
         );
         let entries: Vec<Json> = self
             .entries
@@ -157,6 +167,11 @@ impl HotPathReport {
         s.push_str(&format!(
             "body v2 threaded 16-lane vs v1 single-stream body: {:.2}x\n",
             self.speedup_body_v2_threaded16_vs_v1
+        ));
+        s.push_str(&format!(
+            "body v2 SIMD 16-lane vs scalar SoA 16-lane: {:.2}x ({} kernel)\n",
+            self.speedup_body_v2_simd16_vs_soa16,
+            DecodeKernel::Simd.active_label()
         ));
         s
     }
@@ -262,9 +277,23 @@ pub fn run(cfg: &HotPathConfig) -> HotPathReport {
 
     for lanes in LANE_SWEEP {
         let body = encode_body_v2(&table, &values, lanes).unwrap();
+        // `v2-soa` is pinned to the scalar kernel so it stays the fixed
+        // baseline the SIMD gate divides against, independent of the
+        // `APACK_DECODE_KERNEL` environment the harness runs under.
         let decode_soa = || {
             let mut out = vec![0u32; n];
-            BodyV2View::parse(&body).unwrap().decode_into(&table, &mut out).unwrap();
+            BodyV2View::parse(&body)
+                .unwrap()
+                .decode_into_with(&table, &mut out, DecodeKernel::Scalar)
+                .unwrap();
+            out
+        };
+        let decode_simd = || {
+            let mut out = vec![0u32; n];
+            BodyV2View::parse(&body)
+                .unwrap()
+                .decode_into_with(&table, &mut out, DecodeKernel::Simd)
+                .unwrap();
             out
         };
         let decode_threaded = || {
@@ -276,10 +305,19 @@ pub fn run(cfg: &HotPathConfig) -> HotPathReport {
             out
         };
         assert_eq!(decode_soa(), values, "store-body v2 SoA {lanes}-lane diverged");
+        assert_eq!(
+            decode_simd(),
+            values,
+            "store-body v2 SIMD {lanes}-lane diverged from the scalar loop"
+        );
         assert_eq!(decode_threaded(), values, "store-body v2 threaded {lanes}-lane diverged");
 
         let name = format!("store-body/decode/v2-soa/{lanes}-lane");
         let s = bench.run(&name, decode_soa);
+        entries.push(entry(&name, s.median.as_nanos() as u64, n));
+
+        let name = format!("store-body/decode/v2-simd/{lanes}-lane");
+        let s = bench.run(&name, decode_simd);
         entries.push(entry(&name, s.median.as_nanos() as u64, n));
 
         let name = format!("store-body/decode/v2-threaded/{lanes}-lane");
@@ -307,6 +345,16 @@ pub fn run(cfg: &HotPathConfig) -> HotPathReport {
         .find(|e| e.name == "store-body/decode/v2-threaded/16-lane")
         .map(|e| e.values_per_s)
         .unwrap_or(0.0);
+    let soa16_rate = entries
+        .iter()
+        .find(|e| e.name == "store-body/decode/v2-soa/16-lane")
+        .map(|e| e.values_per_s)
+        .unwrap_or(f64::INFINITY);
+    let simd16_rate = entries
+        .iter()
+        .find(|e| e.name == "store-body/decode/v2-simd/16-lane")
+        .map(|e| e.values_per_s)
+        .unwrap_or(0.0);
     HotPathReport {
         n_values: n,
         substreams: cfg.substreams,
@@ -314,5 +362,6 @@ pub fn run(cfg: &HotPathConfig) -> HotPathReport {
         entries,
         speedup_block_lut_vs_per_value_rowscan: fast / baseline,
         speedup_body_v2_threaded16_vs_v1: body_v2_rate / body_v1_rate,
+        speedup_body_v2_simd16_vs_soa16: simd16_rate / soa16_rate,
     }
 }

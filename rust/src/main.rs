@@ -12,6 +12,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use apack_repro::apack::tablegen::TensorKind;
+use apack_repro::apack::DecodeKernel;
 use apack_repro::coordinator::{Coordinator, PartitionPolicy, ShardedContainer};
 use apack_repro::eval::{self, CompressionStudy};
 use apack_repro::models::zoo::{all_models, model_by_name};
@@ -32,6 +33,7 @@ USAGE:
   apack-repro store pack <output> [--models a,b|all] [--sample-cap N] [--substreams N] [--min-per-stream N] [--shards N]
                          [--body v1|v2] [--lanes N] [--pipeline on|off] [--pack-workers N] [--trace <file.json>]
   apack-repro store get <store> --tensor NAME [--chunk I | --range LO..HI] [--output <file>] [--backend mmap|file]
+                        [--kernel scalar|simd] [--lane-threads N]
                         [--trace <file.json>] [--profile-out <file.folded>] [--prom <file.prom>]
   apack-repro store stats <store> [--backend mmap|file] [--prom <file.prom>] [--json <file|->]
   apack-repro store heatmap <store> [--requests N] [--hot-fraction F] [--prefetch on|off] [--top K]
@@ -40,6 +42,7 @@ USAGE:
   apack-repro store report [--sample-cap N]
   apack-repro serve-bench [--models a,b|all] [--workers N] [--queue-depth N] [--clients N]
                           [--requests N] [--coalescing on|off] [--prefetch on|off]
+                          [--kernel scalar|simd] [--lane-threads N]
                           [--deadline-ms N] [--hot-fraction F] [--shards N] [--sample-cap N]
                           [--trace <file.json>] [--prom <file.prom>]
                           [--snapshot-jsonl <file.jsonl>] [--snapshot-ms N]
@@ -269,6 +272,26 @@ fn body_tag(body: BodyConfig) -> String {
     }
 }
 
+/// `--kernel scalar|simd` → the decode kernel to pin on a store handle
+/// (default: [`DecodeKernel::auto`], i.e. the `APACK_DECODE_KERNEL` env
+/// override or SIMD with runtime ISA detection).
+fn parse_kernel_flag(args: &Args) -> Result<DecodeKernel, Box<dyn Error>> {
+    match args.flag("kernel") {
+        None => Ok(DecodeKernel::auto()),
+        Some(name) => DecodeKernel::from_name(name)
+            .ok_or_else(|| format!("unknown --kernel {name:?} (try scalar or simd)").into()),
+    }
+}
+
+/// Apply `--kernel` / `--lane-threads` to an opened store and return the
+/// footer label of the decode loop that will actually run.
+fn apply_decode_flags(args: &Args, store: &StoreHandle) -> Result<&'static str, Box<dyn Error>> {
+    store.set_decode_kernel(parse_kernel_flag(args)?);
+    let lane_threads: usize = args.flag_or("lane-threads", "0").parse()?;
+    store.set_lane_threads(lane_threads);
+    Ok(store.decode_kernel().active_label())
+}
+
 /// Turn the span tracer on when `--trace <file>` was given, returning the
 /// output path (tracing stays off — one relaxed atomic load per span
 /// site — otherwise).
@@ -402,10 +425,11 @@ fn run_store(args: &Args) -> Result<(), Box<dyn Error>> {
                     );
                 }
                 println!(
-                    "{} ({}, {})",
+                    "{} ({}, {}, decode kernel {})",
                     summary.pack.render(),
                     pipeline_tag(pipelined),
-                    body_tag(body)
+                    body_tag(body),
+                    DecodeKernel::auto().active_label()
                 );
             } else {
                 let summary =
@@ -420,10 +444,11 @@ fn run_store(args: &Args) -> Result<(), Box<dyn Error>> {
                     summary.compression_ratio()
                 );
                 println!(
-                    "{} ({}, {})",
+                    "{} ({}, {}, decode kernel {})",
                     summary.pack.render(),
                     pipeline_tag(pipelined),
-                    body_tag(body)
+                    body_tag(body),
+                    DecodeKernel::auto().active_label()
                 );
             }
             if let Some(p) = trace {
@@ -434,6 +459,7 @@ fn run_store(args: &Args) -> Result<(), Box<dyn Error>> {
             let trace = trace_flag(args);
             let input = Path::new(args.positional.get(1).ok_or("missing <store> path")?);
             let store = StoreHandle::open_with(input, backend, DEFAULT_CACHE_VALUES)?;
+            let kernel_label = apply_decode_flags(args, &store)?;
             let name = args.flag("tensor").ok_or("--tensor required")?;
             let values = if let Some(ci) = args.flag("chunk") {
                 store.get_chunk(name, ci.parse()?)?.to_vec()
@@ -450,7 +476,8 @@ fn run_store(args: &Args) -> Result<(), Box<dyn Error>> {
                 (meta.body_version, meta.lanes)
             };
             println!(
-                "{name}: {} values decoded (chunk body v{bv}, {lanes} lane(s))",
+                "{name}: {} values decoded (chunk body v{bv}, {lanes} lane(s), \
+                 {kernel_label} kernel)",
                 values.len()
             );
             println!("{}", read_stats_line(&store.stats()));
@@ -688,6 +715,7 @@ fn run_serve_bench(args: &Args) -> Result<(), Box<dyn Error>> {
         pack_model_zoo(&path, &models, sample_cap, policy)?;
     }
     let store = Arc::new(StoreHandle::open(&path)?);
+    let kernel_label = apply_decode_flags(args, &store)?;
 
     // Owned tensor directory so client threads need no store borrows.
     let tensors: Vec<(String, u64, usize)> = store
@@ -724,7 +752,8 @@ fn run_serve_bench(args: &Args) -> Result<(), Box<dyn Error>> {
     };
     println!(
         "serve-bench: {} tensors over {} shard(s), {} workers, queue depth {}, \
-         coalescing {}, prefetch {}, {} clients × {} requests ({:.0}% hot-set)",
+         coalescing {}, prefetch {}, {kernel_label} kernel, {} clients × {} requests \
+         ({:.0}% hot-set)",
         tensors.len(),
         store.shard_count(),
         config.workers,

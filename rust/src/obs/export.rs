@@ -36,6 +36,12 @@ pub fn chrome_trace(events: &[SpanEvent]) -> Json {
             args.insert("id".to_string(), Json::Num(e.id as f64));
             args.insert("parent".to_string(), Json::Num(e.parent as f64));
             args.insert("count".to_string(), Json::Num(e.count as f64));
+            if !e.tag.is_empty() {
+                // Attribution tag (e.g. the decode kernel label) rides in
+                // `args` so event names stay stable for tooling that
+                // matches on stage names.
+                args.insert("tag".to_string(), Json::Str(e.tag.to_string()));
+            }
             let mut m = BTreeMap::new();
             m.insert("name".to_string(), Json::Str(e.stage.name().to_string()));
             m.insert("ph".to_string(), Json::Str("X".to_string()));
@@ -93,8 +99,24 @@ pub fn prom_label_value(value: &str) -> String {
     out
 }
 
-fn prom_name(name: &str) -> String {
-    prom_metric_name(name)
+/// Registry keys may carry an inline label set (`store.decode_kernel
+/// {kernel="avx2"}` — written without the space): sanitize only the
+/// metric-name part, keep the `{...}` label block verbatim (label values
+/// are escaped by whoever built the key, via [`prom_label_value`]).
+/// Returns `(bare_name, full_series_name)` — `# TYPE` lines take the
+/// bare name, sample lines the full series.
+fn prom_series(name: &str) -> (String, String) {
+    match name.split_once('{') {
+        Some((base, labels)) => {
+            let bare = prom_metric_name(base);
+            let series = format!("{bare}{{{labels}");
+            (bare, series)
+        }
+        None => {
+            let bare = prom_metric_name(name);
+            (bare.clone(), bare)
+        }
+    }
 }
 
 /// Prometheus exposition-format text dump of a registry snapshot.
@@ -104,15 +126,15 @@ fn prom_name(name: &str) -> String {
 pub fn prometheus_text(snap: &RegistrySnapshot) -> String {
     let mut out = String::new();
     for (name, v) in &snap.counters {
-        let n = prom_name(name);
-        out.push_str(&format!("# TYPE {n} counter\n{n} {v}\n"));
+        let (bare, series) = prom_series(name);
+        out.push_str(&format!("# TYPE {bare} counter\n{series} {v}\n"));
     }
     for (name, v) in &snap.gauges {
-        let n = prom_name(name);
-        out.push_str(&format!("# TYPE {n} gauge\n{n} {v}\n"));
+        let (bare, series) = prom_series(name);
+        out.push_str(&format!("# TYPE {bare} gauge\n{series} {v}\n"));
     }
     for (name, h) in &snap.hists {
-        let n = prom_name(name);
+        let (n, _) = prom_series(name);
         out.push_str(&format!("# TYPE {n} summary\n"));
         for (q, d) in [(0.5, h.p50), (0.95, h.p95), (0.99, h.p99)] {
             out.push_str(&format!("{n}{{quantile=\"{q}\"}} {}\n", d.as_secs_f64()));
@@ -238,7 +260,7 @@ mod tests {
     use super::*;
 
     fn ev(id: u64, parent: u64, stage: Stage, start_ns: u64, end_ns: u64) -> SpanEvent {
-        SpanEvent { id, parent, stage, start_ns, end_ns, tid: 1, count: 0 }
+        SpanEvent { id, parent, stage, start_ns, end_ns, tid: 1, count: 0, tag: "" }
     }
 
     #[test]
@@ -287,6 +309,30 @@ mod tests {
         assert!(text.contains("# TYPE serving_latency_ns summary"));
         assert!(text.contains("serving_latency_ns_count 0"));
         assert!(!text.contains("store.cache_hits"), "dots must be sanitized");
+    }
+
+    #[test]
+    fn labeled_gauge_keys_keep_their_label_block() {
+        let mut snap = RegistrySnapshot::default();
+        snap.gauges.insert("store.decode_kernel{kernel=\"avx2\"}".to_string(), 1);
+        let text = prometheus_text(&snap);
+        assert!(text.contains("# TYPE store_decode_kernel gauge"), "{text}");
+        assert!(text.contains("store_decode_kernel{kernel=\"avx2\"} 1"), "{text}");
+        assert!(!text.contains("store_decode_kernel_kernel"), "labels must not sanitize");
+    }
+
+    #[test]
+    fn tagged_spans_carry_the_tag_in_chrome_args() {
+        let mut tagged = ev(3, 0, Stage::DecodeLanes, 0, 500);
+        tagged.tag = "avx2";
+        let doc = chrome_trace(&[tagged, ev(4, 3, Stage::Decode, 0, 400)]).to_string();
+        let parsed = Json::parse(&doc).unwrap();
+        let arr = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // Name stays the bare stage (tooling matches on it); the tag
+        // rides in args, and untagged events omit the key entirely.
+        assert_eq!(arr[0].get("name").unwrap().as_str().unwrap(), "decode_lanes");
+        assert_eq!(arr[0].get("args").unwrap().get("tag").unwrap().as_str().unwrap(), "avx2");
+        assert!(arr[1].get("args").unwrap().get("tag").is_none());
     }
 
     #[test]

@@ -51,6 +51,6 @@ pub use registry::{Counter, Gauge, MetricsRegistry, RegistrySnapshot};
 pub use sampler::{collect_exemplars, Exemplar, ExemplarRing, RequestOutcome, RequestRecord};
 pub use slo::{ObjectiveStatus, SloConfig, SloStatus, SloTracker};
 pub use trace::{
-    clear, disable, drain, dropped, enable, enabled, record, span, span_n, span_under,
-    with_parent, ManualSpan, SpanEvent, SpanGuard, Stage,
+    clear, disable, drain, dropped, enable, enabled, record, span, span_n, span_n_tagged,
+    span_under, with_parent, ManualSpan, SpanEvent, SpanGuard, Stage,
 };

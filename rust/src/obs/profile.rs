@@ -56,6 +56,17 @@ pub struct Profile {
 /// a cycle can only come from ring corruption, never from the RAII API.
 const MAX_DEPTH: usize = 64;
 
+/// One path frame for a span: the stage name, suffixed `[tag]` when the
+/// span carries an attribution tag — `decode_lanes[avx2]` — so profiles
+/// split e.g. kernel variants into distinct rows.
+fn frame(e: &SpanEvent) -> String {
+    if e.tag.is_empty() {
+        e.stage.name().to_string()
+    } else {
+        format!("{}[{}]", e.stage.name(), e.tag)
+    }
+}
+
 fn percentile(sorted: &[u64], q: f64) -> u64 {
     if sorted.is_empty() {
         return 0;
@@ -79,11 +90,11 @@ impl Profile {
         let mut durations: BTreeMap<String, Vec<u64>> = BTreeMap::new();
         let mut paths: BTreeMap<String, PathStats> = BTreeMap::new();
         for (i, e) in events.iter().enumerate() {
-            let mut names = vec![e.stage.name()];
+            let mut names = vec![frame(e)];
             let mut cur = e.parent;
             for _ in 0..MAX_DEPTH {
                 let Some(&pi) = index.get(&cur) else { break };
-                names.push(events[pi].stage.name());
+                names.push(frame(&events[pi]));
                 cur = events[pi].parent;
             }
             names.reverse();
@@ -178,7 +189,7 @@ mod tests {
     use crate::obs::trace::Stage;
 
     fn ev(id: u64, parent: u64, stage: Stage, start_ns: u64, end_ns: u64) -> SpanEvent {
-        SpanEvent { id, parent, stage, start_ns, end_ns, tid: 1, count: 0 }
+        SpanEvent { id, parent, stage, start_ns, end_ns, tid: 1, count: 0, tag: "" }
     }
 
     /// Hand-built forest with known self/total nanos:
@@ -231,6 +242,17 @@ mod tests {
         let lanes = p.get("decode_lanes;decode").unwrap();
         assert_eq!((lanes.count, lanes.total_ns), (2, 120));
         assert_eq!(p.get("chunk_io").unwrap().total_ns, 7);
+    }
+
+    #[test]
+    fn tagged_spans_fold_into_suffixed_frames() {
+        let mut fan = ev(1, 0, Stage::DecodeLanes, 0, 100);
+        fan.tag = "avx2";
+        let events = vec![fan, ev(2, 1, Stage::Decode, 0, 80)];
+        let p = Profile::from_events(&events);
+        assert_eq!(p.get("decode_lanes[avx2]").unwrap().self_ns, 20);
+        assert_eq!(p.get("decode_lanes[avx2];decode").unwrap().total_ns, 80);
+        assert!(p.get("decode_lanes").is_none(), "tagged frame must not alias untagged");
     }
 
     #[test]

@@ -263,7 +263,7 @@ mod tests {
     use crate::obs::trace::Stage;
 
     fn ev(id: u64, parent: u64, start_ns: u64, end_ns: u64) -> SpanEvent {
-        SpanEvent { id, parent, stage: Stage::Request, start_ns, end_ns, tid: 1, count: 0 }
+        SpanEvent { id, parent, stage: Stage::Request, start_ns, end_ns, tid: 1, count: 0, tag: "" }
     }
 
     #[test]

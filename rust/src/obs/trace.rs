@@ -33,8 +33,8 @@ use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
 /// Per-thread event cap: past this, new events are dropped (and counted)
-/// rather than growing the buffer without bound. 64K events × 56 B ≈
-/// 3.5 MiB per recording thread, worst case.
+/// rather than growing the buffer without bound. 64K events × 72 B ≈
+/// 4.5 MiB per recording thread, worst case.
 const MAX_EVENTS_PER_THREAD: usize = 1 << 16;
 
 /// Pipeline stage a span measures — the full request path (serving admit
@@ -150,6 +150,11 @@ pub struct SpanEvent {
     /// Stage-specific payload size: values decoded/encoded, bytes read
     /// or written, chunks prefetched. 0 when not meaningful.
     pub count: u64,
+    /// Free-form static attribution tag (`""` = untagged). Used by the
+    /// lane decode path to carry the active kernel label
+    /// (`scalar`/`sse2`/`avx2`/`neon`), so profiles and traces attribute
+    /// `decode_lanes` time to the loop that actually ran.
+    pub tag: &'static str,
 }
 
 impl SpanEvent {
@@ -267,6 +272,7 @@ struct ActiveSpan {
     stage: Stage,
     start: Instant,
     count: u64,
+    tag: &'static str,
 }
 
 /// RAII span: records a [`SpanEvent`] on drop. `None` inside = tracing
@@ -306,6 +312,7 @@ impl Drop for SpanGuard {
                 end_ns: ns_since_epoch(end),
                 tid: 0,
                 count: s.count,
+                tag: s.tag,
             });
         }
     }
@@ -320,6 +327,12 @@ pub fn span(stage: Stage) -> SpanGuard {
 /// [`span`] with a payload count known up front.
 #[inline]
 pub fn span_n(stage: Stage, count: u64) -> SpanGuard {
+    span_n_tagged(stage, count, "")
+}
+
+/// [`span_n`] with an attribution tag (see [`SpanEvent::tag`]).
+#[inline]
+pub fn span_n_tagged(stage: Stage, count: u64, tag: &'static str) -> SpanGuard {
     if !enabled() {
         return SpanGuard(None);
     }
@@ -330,7 +343,7 @@ pub fn span_n(stage: Stage, count: u64) -> SpanGuard {
         l.stack.push(id);
         parent
     });
-    SpanGuard(Some(ActiveSpan { id, parent, stage, start: Instant::now(), count }))
+    SpanGuard(Some(ActiveSpan { id, parent, stage, start: Instant::now(), count, tag }))
 }
 
 /// Open a span under an **explicit** parent id (from a [`ManualSpan`] on
@@ -342,7 +355,7 @@ pub fn span_under(stage: Stage, parent: u64, count: u64) -> SpanGuard {
     }
     let id = next_id();
     LOCAL.with(|l| l.borrow_mut().stack.push(id));
-    SpanGuard(Some(ActiveSpan { id, parent, stage, start: Instant::now(), count }))
+    SpanGuard(Some(ActiveSpan { id, parent, stage, start: Instant::now(), count, tag: "" }))
 }
 
 /// A cross-thread span: begun on one thread, finished on another (e.g. a
@@ -355,16 +368,22 @@ pub struct ManualSpan {
     parent: u64,
     stage: Stage,
     start: Instant,
+    tag: &'static str,
 }
 
 impl ManualSpan {
     /// `None` when tracing is disabled (one relaxed load).
     pub fn begin(stage: Stage) -> Option<ManualSpan> {
+        Self::begin_tagged(stage, "")
+    }
+
+    /// [`Self::begin`] with an attribution tag (see [`SpanEvent::tag`]).
+    pub fn begin_tagged(stage: Stage, tag: &'static str) -> Option<ManualSpan> {
         if !enabled() {
             return None;
         }
         let parent = LOCAL.with(|l| l.borrow().stack.last().copied().unwrap_or(0));
-        Some(ManualSpan { id: next_id(), parent, stage, start: Instant::now() })
+        Some(ManualSpan { id: next_id(), parent, stage, start: Instant::now(), tag })
     }
 
     pub fn id(&self) -> u64 {
@@ -387,6 +406,7 @@ impl ManualSpan {
             end_ns: ns_since_epoch(end),
             tid: 0,
             count,
+            tag: self.tag,
         });
     }
 }
@@ -406,6 +426,7 @@ pub fn record(stage: Stage, parent: u64, start: Instant, end: Instant, count: u6
         end_ns: ns_since_epoch(end),
         tid: 0,
         count,
+        tag: "",
     });
 }
 

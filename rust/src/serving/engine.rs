@@ -365,7 +365,7 @@ impl ServingEngine {
         self.shared.queue_depth.set(
             self.shared.queue.lock().expect("serving queue lock").len() as u64,
         );
-        let mut snap = MetricsSnapshot::from_snapshot(&self.shared.registry.snapshot());
+        let mut snap = MetricsSnapshot::from_snapshot(&self.shared.registry_snapshot());
         snap.slo = self.slo_status();
         snap
     }

@@ -34,6 +34,10 @@ pub struct MetricsSnapshot {
     /// SLO burn-rate status, present when the engine was started with
     /// [`crate::serving::ServingConfig::slo`] configured (ISSUE 8).
     pub slo: Option<SloStatus>,
+    /// Active arithmetic-decode kernel label (`scalar` / `sse2` / `avx2`
+    /// / `neon`), read from the store's `store.decode_kernel{kernel=...}`
+    /// info gauge; empty when the snapshot holds no store metrics.
+    pub decode_kernel: String,
 }
 
 impl MetricsSnapshot {
@@ -51,6 +55,7 @@ impl MetricsSnapshot {
             queue_depth_max: snap.gauge("serving.queue_depth_max") as usize,
             latency: snap.hist("serving.latency_ns"),
             slo: None,
+            decode_kernel: decode_kernel_label(snap),
         }
     }
 
@@ -75,12 +80,27 @@ impl MetricsSnapshot {
             self.queue_depth_max,
             self.latency.render()
         );
+        if !self.decode_kernel.is_empty() {
+            out.push_str(&format!("\ndecode kernel: {}", self.decode_kernel));
+        }
         if let Some(slo) = &self.slo {
             out.push('\n');
             out.push_str(&slo.render());
         }
         out
     }
+}
+
+/// Extract the kernel label from the `store.decode_kernel{kernel="..."}`
+/// info gauge a [`crate::store::StoreReader`] publishes in its registry
+/// view; empty string when the snapshot carries no store metrics.
+fn decode_kernel_label(snap: &RegistrySnapshot) -> String {
+    const PREFIX: &str = "store.decode_kernel{kernel=\"";
+    snap.gauges
+        .keys()
+        .find_map(|k| k.strip_prefix(PREFIX)?.strip_suffix("\"}"))
+        .unwrap_or("")
+        .to_string()
 }
 
 #[cfg(test)]
@@ -104,5 +124,20 @@ mod tests {
         assert_eq!(m.queue_depth_max, 5);
         assert_eq!(m.latency.count, 1);
         assert!(m.render().contains("9 submitted"));
+        assert!(m.decode_kernel.is_empty(), "no store metrics in this snapshot");
+    }
+
+    #[test]
+    fn decode_kernel_gauge_round_trips_through_snapshot_and_export() {
+        let r = MetricsRegistry::new();
+        r.counter("serving.completed").add(3);
+        r.gauge("store.decode_kernel{kernel=\"avx2\"}").set(1);
+        let snap = r.snapshot();
+        let m = MetricsSnapshot::from_snapshot(&snap);
+        assert_eq!(m.decode_kernel, "avx2");
+        assert!(m.render().contains("decode kernel: avx2"));
+        let text = crate::obs::prometheus_text(&snap);
+        assert!(text.contains("# TYPE store_decode_kernel gauge"));
+        assert!(text.contains("store_decode_kernel{kernel=\"avx2\"} 1"));
     }
 }

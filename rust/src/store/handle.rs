@@ -156,6 +156,31 @@ impl StoreHandle {
         }
     }
 
+    /// Pin the arithmetic-decode kernel (sharded: every shard).
+    pub fn set_decode_kernel(&self, kernel: crate::apack::simd::DecodeKernel) {
+        match self {
+            StoreHandle::Single(r) => r.set_decode_kernel(kernel),
+            StoreHandle::Sharded(r) => r.set_decode_kernel(kernel),
+        }
+    }
+
+    /// The decode kernel chunk decodes run with.
+    pub fn decode_kernel(&self) -> crate::apack::simd::DecodeKernel {
+        match self {
+            StoreHandle::Single(r) => r.decode_kernel(),
+            StoreHandle::Sharded(r) => r.decode_kernel(),
+        }
+    }
+
+    /// Worker-thread count for lane-parallel chunk-body-v2 decodes
+    /// (0/1 = single-threaded; sharded: every shard).
+    pub fn set_lane_threads(&self, threads: usize) {
+        match self {
+            StoreHandle::Single(r) => r.set_lane_threads(threads),
+            StoreHandle::Sharded(r) => r.set_lane_threads(threads),
+        }
+    }
+
     /// Zero the read counters.
     pub fn reset_stats(&self) {
         match self {

@@ -19,9 +19,12 @@
 //!   mirroring the reader's hit/miss counters per chunk.
 //! - `prefetches` — decodes issued by [`super::StoreReader::prefetch_chunk`]
 //!   (already-resident no-ops are not counted).
-//! - `decode_nanos` — wall time of **every** decode of the chunk
+//! - `decode_nanos` — decode time of **every** decode of the chunk
 //!   (demand miss, prefetch, or verify sweep), since decode cost is a
-//!   property of the chunk, not of who asked.
+//!   property of the chunk, not of who asked. Single-thread decodes
+//!   contribute wall time; threaded lane decodes contribute the summed
+//!   per-worker lane nanos (actual decode work), not the caller's wall
+//!   clock — so the heatmap never under-reports a threaded decode.
 //! - A prefetched chunk that later takes a demand **hit** counts as an
 //!   effective prefetch; [`TensorHeatSummary::prefetch_efficacy`] is the
 //!   per-tensor fraction of prefetched chunks that were ever hit.

@@ -17,11 +17,13 @@
 use std::borrow::Cow;
 use std::ops::Range;
 use std::path::Path;
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::apack::container::BodyView;
 use crate::apack::lanes::BodyV2View;
+use crate::apack::simd::DecodeKernel;
 use crate::error::{Error, Result};
 use crate::obs::{self, Counter, MetricsRegistry, RegistrySnapshot, Stage};
 use crate::util::par_map;
@@ -172,6 +174,14 @@ impl VerifyReport {
     }
 }
 
+/// Atomic encoding of [`DecodeKernel`] for the reader's runtime knob.
+fn kernel_code(kernel: DecodeKernel) -> u8 {
+    match kernel {
+        DecodeKernel::Scalar => 0,
+        DecodeKernel::Simd => 1,
+    }
+}
+
 /// A read-only handle on one APackStore file.
 pub struct StoreReader {
     source: Box<dyn ChunkSource>,
@@ -195,6 +205,15 @@ pub struct StoreReader {
     /// Per-(tensor, chunk) access heat (DESIGN.md §12): the where-did-it-
     /// go companion to the aggregate counters above.
     heat: HeatMap,
+    /// Decode kernel for v2 lane bodies (0 = scalar, 1 = simd; DESIGN.md
+    /// §13). Defaults to [`DecodeKernel::auto`]; `--kernel` overrides
+    /// per reader.
+    kernel: AtomicU8,
+    /// Worker threads for v2 lane decode (`> 1` switches the v2 path to
+    /// `decode_into_threaded_with`; 0/1 = single-thread SoA, the
+    /// default — chunk-level `par_map` already parallelizes demand
+    /// reads, so lane threads are for huge-chunk / low-concurrency use).
+    lane_threads: AtomicUsize,
 }
 
 impl StoreReader {
@@ -288,7 +307,32 @@ impl StoreReader {
             decode_nanos: registry.counter("store.decode_nanos"),
             registry,
             heat: HeatMap::new(),
+            kernel: AtomicU8::new(kernel_code(DecodeKernel::auto())),
+            lane_threads: AtomicUsize::new(0),
         })
+    }
+
+    /// Select the decode kernel for v2 lane bodies (see
+    /// [`DecodeKernel`]; the process default honors
+    /// `APACK_DECODE_KERNEL`).
+    pub fn set_decode_kernel(&self, kernel: DecodeKernel) {
+        self.kernel.store(kernel_code(kernel), Ordering::Relaxed);
+    }
+
+    /// The decode kernel v2 lane bodies currently use.
+    pub fn decode_kernel(&self) -> DecodeKernel {
+        if self.kernel.load(Ordering::Relaxed) == 0 {
+            DecodeKernel::Scalar
+        } else {
+            DecodeKernel::Simd
+        }
+    }
+
+    /// Set worker threads for v2 lane decode (`> 1` decodes each chunk's
+    /// lanes on that many threads, each running the active kernel; 0/1 =
+    /// single-thread).
+    pub fn set_lane_threads(&self, threads: usize) {
+        self.lane_threads.store(threads, Ordering::Relaxed);
     }
 
     /// The IO backend serving this reader.
@@ -368,7 +412,14 @@ impl StoreReader {
         };
         let n = n_expected as usize;
         let mut buf = self.scratch.acquire(n);
+        let kernel = self.decode_kernel();
+        let lane_threads = self.lane_threads.load(Ordering::Relaxed);
         let t0 = Instant::now();
+        // Threaded lane decode reports summed worker nanos; every other
+        // path is single-thread, where wall time *is* decode time. Using
+        // worker nanos keeps `decode_nanos` (and the heatmap's per-chunk
+        // counter) a measure of decode work, not caller wall clock.
+        let mut worker_nanos: Option<u64> = None;
         let decoded = match t.body_version {
             1 => match BodyView::parse(&blob) {
                 Ok(view) if view.n_values != n_expected => Err(count_err(view.n_values)),
@@ -378,12 +429,21 @@ impl StoreReader {
             2 => match BodyV2View::parse(&blob) {
                 Ok(view) if view.n_values != n_expected => Err(count_err(view.n_values)),
                 Ok(view) => {
-                    if check_lanes {
-                        view.verify_lanes()
-                            .and_then(|()| view.decode_into(&t.table, &mut buf))
-                    } else {
-                        view.decode_into(&t.table, &mut buf)
-                    }
+                    let lanes_ok =
+                        if check_lanes { view.verify_lanes() } else { Ok(()) };
+                    lanes_ok.and_then(|()| {
+                        if lane_threads > 1 && view.lanes() > 1 {
+                            view.decode_into_threaded_with(
+                                &t.table,
+                                &mut buf,
+                                lane_threads,
+                                kernel,
+                            )
+                            .map(|nanos| worker_nanos = Some(nanos))
+                        } else {
+                            view.decode_into_with(&t.table, &mut buf, kernel)
+                        }
+                    })
                 }
                 Err(e) => Err(e),
             },
@@ -392,7 +452,7 @@ impl StoreReader {
                 t.name
             ))),
         };
-        let spent = t0.elapsed().as_nanos() as u64;
+        let spent = worker_nanos.unwrap_or_else(|| t0.elapsed().as_nanos() as u64);
         self.decode_nanos.add(spent);
         self.heat.add_decode_nanos(ti as u32, ci as u32, spent);
         if let Err(e) = decoded {
@@ -562,6 +622,16 @@ impl StoreReader {
         snap.counters.insert("store.bytes_read".to_string(), self.source.bytes_read());
         snap.counters.insert("store.scratch_acquired".to_string(), self.scratch.acquired());
         snap.counters.insert("store.scratch_reused".to_string(), self.scratch.reused());
+        // Info gauge: which kernel loop serves v2 decodes, as a label
+        // (Prometheus `*_info` idiom). Sharded stores merge by gauge max,
+        // so identical per-shard series collapse to one.
+        snap.gauges.insert(
+            format!(
+                "store.decode_kernel{{kernel=\"{}\"}}",
+                self.decode_kernel().active_label()
+            ),
+            1,
+        );
         snap
     }
 
@@ -807,6 +877,42 @@ mod tests {
             }
             std::fs::remove_file(&path).ok();
         }
+    }
+
+    #[test]
+    fn kernel_knob_and_lane_threads_roundtrip_through_reader() {
+        // One big v2 chunk so lanes actually fan out; every kernel ×
+        // threading combination must decode bit-exactly, attribute
+        // nonzero decode nanos, and expose the kernel info gauge.
+        let path = temp_path("kernelknob");
+        let policy = PartitionPolicy { substreams: 1, min_per_stream: 1 << 20 };
+        let values = ValueProfile::ReluActivation { sparsity: 0.5, q: 0.93, noise_floor: 0.01 }
+            .sample(8, 40_000, 93);
+        let mut w = StoreWriter::create_with(&path, policy, BodyConfig::default()).unwrap();
+        w.add_tensor("t", 8, &values, TensorKind::Activations).unwrap();
+        w.finish().unwrap();
+        let r = StoreReader::open_with(&path, Backend::Mmap, 0).unwrap();
+        for kernel in [DecodeKernel::Scalar, DecodeKernel::Simd] {
+            r.set_decode_kernel(kernel);
+            assert_eq!(r.decode_kernel(), kernel);
+            for threads in [0usize, 3] {
+                r.set_lane_threads(threads);
+                r.reset_stats();
+                assert_eq!(r.get_tensor("t").unwrap(), values, "{kernel:?} x{threads}");
+                let s = r.stats();
+                assert_eq!(s.chunks_decoded, 1);
+                assert!(s.decode_nanos > 0, "{kernel:?} x{threads} must attribute nanos");
+            }
+            let snap = r.registry_snapshot();
+            let key =
+                format!("store.decode_kernel{{kernel=\"{}\"}}", kernel.active_label());
+            assert_eq!(snap.gauges.get(&key), Some(&1), "{kernel:?} gauge missing");
+            // Heatmap decode nanos must track the counter (threaded path
+            // included — worker nanos, not caller wall time).
+            let heat = r.heatmap();
+            assert!(heat.iter().any(|e| e.decode_nanos > 0), "{kernel:?}");
+        }
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -464,6 +464,26 @@ impl ShardedStoreReader {
         out
     }
 
+    /// Select the v2 decode kernel on every shard reader.
+    pub fn set_decode_kernel(&self, kernel: crate::apack::simd::DecodeKernel) {
+        for r in &self.readers {
+            r.set_decode_kernel(kernel);
+        }
+    }
+
+    /// The v2 decode kernel in use (uniform across shards — the setters
+    /// only ever apply to all of them).
+    pub fn decode_kernel(&self) -> crate::apack::simd::DecodeKernel {
+        self.readers[0].decode_kernel()
+    }
+
+    /// Set v2 lane-decode worker threads on every shard reader.
+    pub fn set_lane_threads(&self, threads: usize) {
+        for r in &self.readers {
+            r.set_lane_threads(threads);
+        }
+    }
+
     /// Zero every shard's read counters.
     pub fn reset_stats(&self) {
         for r in &self.readers {

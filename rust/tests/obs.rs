@@ -285,10 +285,14 @@ fn concurrent_serve_span_tree_is_well_formed() {
 
 /// The threaded lane decode begins its fan-out span on the calling thread
 /// and threads the id to the workers ([`obs::with_parent`]), so every
-/// worker-lane `Decode` span parents under `DecodeLanes` instead of
-/// rooting at 0 (the ISSUE 8 cross-thread parenting fix).
+/// worker-group `Decode` span parents under `DecodeLanes` instead of
+/// rooting at 0 (the ISSUE 8 cross-thread parenting fix). Since ISSUE 9
+/// workers own contiguous lane *groups* (one span per group, lanes
+/// decoded round-major inside the SIMD/scalar kernel) and the fan-out
+/// span carries the active kernel as an attribution tag.
 #[test]
 fn threaded_lane_decode_parents_worker_spans_under_fanout() {
+    use apack_repro::apack::DecodeKernel;
     let _g = tracer_lock();
     let values = tensor_values(40_000, 77);
     let table = table_for_tensor(8, &values, TensorKind::Activations).unwrap();
@@ -306,18 +310,29 @@ fn threaded_lane_decode_parents_worker_spans_under_fanout() {
     assert_eq!(fans.len(), 1, "one fan-out span per threaded decode");
     let fan = fans[0];
     assert_eq!(fan.count, 16, "fan-out span carries the lane count");
-    let lanes: Vec<_> = events.iter().filter(|e| e.stage == Stage::Decode).collect();
-    assert_eq!(lanes.len(), 16, "one Decode span per lane");
-    let tids: std::collections::BTreeSet<u64> = lanes.iter().map(|e| e.tid).collect();
-    assert!(tids.len() > 1, "lane decodes must come from several worker threads");
-    for lane in &lanes {
-        assert_eq!(lane.parent, fan.id, "worker-lane Decode must hang under DecodeLanes");
-        assert_ne!(lane.tid, fan.tid, "worker spans record on worker threads");
+    let label = DecodeKernel::auto().active_label();
+    assert_eq!(fan.tag, label, "fan-out span carries the active kernel tag");
+    // 16 lanes over 4 worker threads → 4 contiguous groups of 4 lanes,
+    // one Decode span per group covering that group's values.
+    let groups: Vec<_> = events.iter().filter(|e| e.stage == Stage::Decode).collect();
+    assert_eq!(groups.len(), 4, "one Decode span per worker lane-group");
+    assert_eq!(
+        groups.iter().map(|e| e.count).sum::<u64>(),
+        values.len() as u64,
+        "group spans cover every value exactly once"
+    );
+    let tids: std::collections::BTreeSet<u64> = groups.iter().map(|e| e.tid).collect();
+    assert!(tids.len() > 1, "group decodes must come from several worker threads");
+    for g in &groups {
+        assert_eq!(g.parent, fan.id, "worker-group Decode must hang under DecodeLanes");
+        assert_ne!(g.tid, fan.tid, "worker spans record on worker threads");
     }
-    // The folded profile sees the full path, so lane time attributes
-    // under the fan-out instead of an orphan `decode` root.
+    // The folded profile sees the full tagged path, so lane time
+    // attributes under the fan-out (split by kernel) instead of an
+    // orphan `decode` root.
     let profile = obs::Profile::from_events(&events);
-    assert!(profile.get("decode_lanes;decode").is_some(), "lane path must fold");
+    let path = format!("decode_lanes[{label}];decode[{label}]");
+    assert!(profile.get(&path).is_some(), "tagged lane path {path:?} must fold");
     assert!(profile.get("decode").is_none(), "no orphan lane roots remain");
 }
 

@@ -422,6 +422,147 @@ fn prop_body_v2_bit_exact_across_profiles_and_widths() {
     }
 }
 
+/// SIMD kernel invariant (DESIGN.md §13): the lane-parallel SIMD decode
+/// kernel is bit-identical to the scalar SoA loop on clean bodies across
+/// every `ValueProfile` × 4/8/16-bit widths × the lane sweep up to 64
+/// lanes (the workload is sized so 64 requested lanes stay effective),
+/// through both the single-threaded and the threaded decode paths.
+#[test]
+fn prop_simd_kernel_bit_identical_to_scalar_across_profiles_widths_lanes() {
+    use apack_repro::apack::lanes::{encode_body_v2, lane_count, BodyV2View};
+    use apack_repro::apack::DecodeKernel;
+    use apack_repro::models::distributions::ValueProfile;
+    let profiles = [
+        ValueProfile::TwoSidedGeometric { q: 0.9, noise_floor: 0.01 },
+        ValueProfile::Sparse { sparsity: 0.6, q: 0.85 },
+        ValueProfile::ReluActivation { sparsity: 0.5, q: 0.93, noise_floor: 0.01 },
+        ValueProfile::Uniform,
+    ];
+    // 64 lanes need >= 64 * MIN_VALUES_PER_LANE (65536) values to avoid
+    // degrading to a smaller power of two.
+    let n = 66_000usize;
+    for bits in [4u32, 8, 16] {
+        for (pi, profile) in profiles.iter().enumerate() {
+            let values = profile.sample(bits, n, 0x51D_0 + pi as u64 + bits as u64);
+            let hist = Histogram::from_values(bits, &values);
+            let table =
+                generate_table(&hist, TensorKind::Activations, &TableGenConfig::for_bits(bits))
+                    .unwrap();
+            for req in [1u8, 4, 16, 64] {
+                let body = encode_body_v2(&table, &values, req).unwrap();
+                let view = BodyV2View::parse(&body).unwrap();
+                assert_eq!(view.lanes(), lane_count(n, req) as usize);
+
+                let mut scalar = vec![0u32; n];
+                view.decode_into_with(&table, &mut scalar, DecodeKernel::Scalar).unwrap();
+                assert_eq!(scalar, values, "bits {bits} profile {pi} lanes {req}: scalar");
+                let mut simd = vec![0u32; n];
+                view.decode_into_with(&table, &mut simd, DecodeKernel::Simd).unwrap();
+                assert_eq!(simd, scalar, "bits {bits} profile {pi} lanes {req}: SIMD");
+                let mut thr = vec![0u32; n];
+                view.decode_into_threaded_with(&table, &mut thr, 3, DecodeKernel::Simd)
+                    .unwrap();
+                assert_eq!(thr, scalar, "bits {bits} profile {pi} lanes {req}: threaded SIMD");
+            }
+        }
+    }
+}
+
+/// SIMD kernel invariant continued: on corrupted v2 bodies every kernel ×
+/// decode-path combination reports the *identical* outcome — the same
+/// decoded buffer when a bit flip slips through the arithmetic coder, the
+/// same `CorruptStream` position when it does not — for a flipped payload
+/// byte in every lane, and for a truncated final-lane offset stream
+/// (which is guaranteed to fail).
+#[test]
+fn prop_simd_kernel_matches_scalar_on_corrupt_lane_payloads() {
+    use apack_repro::apack::lanes::{
+        encode_body_v2, BodyV2View, DIR_ENTRY_BYTES, HEADER_BYTES,
+    };
+    use apack_repro::apack::DecodeKernel;
+    use apack_repro::models::distributions::ValueProfile;
+
+    // All four kernel × path outcomes for one body; Ok carries the full
+    // decoded buffer, Err the CorruptStream position.
+    fn outcomes(body: &[u8], table: &SymbolTable, n: usize) -> Vec<Result<Vec<u32>, usize>> {
+        let view = BodyV2View::parse(body).unwrap();
+        let mut all = Vec::new();
+        for kernel in [DecodeKernel::Scalar, DecodeKernel::Simd] {
+            for threads in [1usize, 3] {
+                let mut out = vec![0u32; n];
+                let r = if threads > 1 {
+                    view.decode_into_threaded_with(table, &mut out, threads, kernel).map(|_| ())
+                } else {
+                    view.decode_into_with(table, &mut out, kernel)
+                };
+                all.push(match r {
+                    Ok(()) => Ok(out),
+                    Err(apack_repro::Error::CorruptStream { position }) => Err(position),
+                    Err(e) => panic!("unexpected error {e}"),
+                });
+            }
+        }
+        all
+    }
+
+    let values = ValueProfile::ReluActivation { sparsity: 0.5, q: 0.93, noise_floor: 0.01 }
+        .sample(8, 20_000, 0xC0_22);
+    let n = values.len();
+    let hist = Histogram::from_values(8, &values);
+    let table =
+        generate_table(&hist, TensorKind::Activations, &TableGenConfig::default()).unwrap();
+    let body = encode_body_v2(&table, &values, 8).unwrap();
+    let lanes = BodyV2View::parse(&body).unwrap().lanes();
+    assert_eq!(lanes, 8);
+
+    // Per-lane payload extents, recomputed from the directory bytes the
+    // same way parse does (sym then ofs, cumulatively packed).
+    let dir_end = HEADER_BYTES + lanes * DIR_ENTRY_BYTES;
+    let mut extents = Vec::with_capacity(lanes);
+    let mut off = 0usize;
+    for l in 0..lanes {
+        let at = HEADER_BYTES + l * DIR_ENTRY_BYTES;
+        let sym_bits = u32::from_le_bytes(body[at..at + 4].try_into().unwrap()) as usize;
+        let ofs_bits = u32::from_le_bytes(body[at + 4..at + 8].try_into().unwrap()) as usize;
+        let len = sym_bits.div_ceil(8) + ofs_bits.div_ceil(8);
+        extents.push((off, len));
+        off += len;
+    }
+
+    // A flipped byte mid-payload in each lane: only that lane's stream
+    // changes, and all four decode combinations must agree exactly.
+    let mut rng = Rng64::new(0x51D_C0);
+    for (l, &(start, len)) in extents.iter().enumerate() {
+        let mut bad = body.clone();
+        bad[dir_end + start + rng.below(len as u64) as usize] ^= 1 << rng.below(8);
+        let all = outcomes(&bad, &table, n);
+        for (i, o) in all.iter().enumerate() {
+            assert_eq!(o, &all[0], "lane {l} flip: combination {i} diverged");
+        }
+        if let Err(position) = &all[0] {
+            let lane = apack_repro::apack::lanes::lane_range(n, lanes, l);
+            assert!(lane.contains(position), "lane {l} flip: position {position} escaped");
+        }
+    }
+
+    // Truncated final-lane offset stream (ofs_bits zeroed, bytes dropped
+    // from the tail): the first offset read in that lane must fail at the
+    // same position through every combination.
+    let at = HEADER_BYTES + (lanes - 1) * DIR_ENTRY_BYTES;
+    let mut cut = body.clone();
+    let ofs_bits = u32::from_le_bytes(cut[at + 4..at + 8].try_into().unwrap()) as usize;
+    assert!(ofs_bits > 0, "ReLU lanes always carry offsets");
+    cut[at + 4..at + 8].copy_from_slice(&0u32.to_le_bytes());
+    cut.truncate(cut.len() - ofs_bits.div_ceil(8));
+    let all = outcomes(&cut, &table, n);
+    let Err(position) = &all[0] else { panic!("truncation must surface as CorruptStream") };
+    let last = apack_repro::apack::lanes::lane_range(n, lanes, lanes - 1);
+    assert!(last.contains(position), "truncation position {position} outside the last lane");
+    for (i, o) in all.iter().enumerate() {
+        assert_eq!(o, &all[0], "truncation: combination {i} diverged");
+    }
+}
+
 /// Chunk-body v2 tiny-chunk invariant: every chunk size from 1 to 4096
 /// values round-trips exactly, and the lane directory always records the
 /// deterministic degraded lane count (`lane_count`) — small chunks fall
