@@ -53,8 +53,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     );
 
     let store = Arc::new(StoreHandle::open(&path)?);
-    let names: Vec<String> =
-        store.tensor_names().into_iter().map(str::to_string).collect();
+    let names: Vec<String> = store.tensor_names();
 
     // Reference decode of every tensor (fresh handle: warms nothing).
     let reference: HashMap<String, Vec<u32>> = {

@@ -39,6 +39,12 @@ pub enum Error {
     Overloaded { queue_depth: usize, deadline_expired: bool },
     /// Underlying I/O failure, stringified (keeps the error type `Eq`).
     Io(String),
+    /// A *transient* I/O failure (interrupted read, injected flake,
+    /// timeout) that is expected to succeed on retry. Retried with
+    /// bounded jittered backoff by the store/serving layers and — unlike
+    /// permanent corruption — never shared with coalesced single-flight
+    /// followers (DESIGN.md §14).
+    Transient(String),
     /// Configuration error (coordinator / simulator parameters).
     Config(String),
     /// Runtime (PJRT / artifact) error, stringified.
@@ -83,9 +89,18 @@ impl fmt::Display for Error {
                 }
             }
             Error::Io(s) => write!(f, "i/o error: {s}"),
+            Error::Transient(s) => write!(f, "transient i/o error: {s}"),
             Error::Config(s) => write!(f, "configuration error: {s}"),
             Error::Runtime(s) => write!(f, "runtime error: {s}"),
         }
+    }
+}
+
+impl Error {
+    /// True for errors worth retrying (the failure is not expected to
+    /// repeat deterministically).
+    pub fn is_transient(&self) -> bool {
+        matches!(self, Error::Transient(_))
     }
 }
 
@@ -93,7 +108,12 @@ impl std::error::Error for Error {}
 
 impl From<std::io::Error> for Error {
     fn from(e: std::io::Error) -> Self {
-        Error::Io(e.to_string())
+        match e.kind() {
+            std::io::ErrorKind::Interrupted
+            | std::io::ErrorKind::WouldBlock
+            | std::io::ErrorKind::TimedOut => Error::Transient(e.to_string()),
+            _ => Error::Io(e.to_string()),
+        }
     }
 }
 

@@ -15,12 +15,14 @@ use apack_repro::apack::tablegen::TensorKind;
 use apack_repro::apack::DecodeKernel;
 use apack_repro::coordinator::{Coordinator, PartitionPolicy, ShardedContainer};
 use apack_repro::eval::{self, CompressionStudy};
-use apack_repro::models::zoo::{all_models, model_by_name};
+use apack_repro::models::zoo::{all_models, model_by_name, ModelConfig};
 use apack_repro::obs;
 use apack_repro::serving::{PrefetchConfig, ServingConfig, ServingEngine};
 use apack_repro::store::{
-    pack_model_zoo, pack_model_zoo_sharded, pack_model_zoo_sharded_with, pack_model_zoo_with,
-    Backend, BodyConfig, BodyVersion, PackOptions, ReadStats, StoreHandle, DEFAULT_CACHE_VALUES,
+    append_models, compact_sharded_store, compact_store, pack_model_zoo, pack_model_zoo_sharded,
+    pack_model_zoo_sharded_with, pack_model_zoo_with, store_versions, verify_report_json,
+    verify_store, Backend, BodyConfig, BodyVersion, FaultConfig, FaultPlan, PackOptions,
+    ReadStats, StoreHandle, DEFAULT_CACHE_VALUES,
 };
 use apack_repro::util::Rng64;
 
@@ -38,7 +40,14 @@ USAGE:
   apack-repro store stats <store> [--backend mmap|file] [--prom <file.prom>] [--json <file|->]
   apack-repro store heatmap <store> [--requests N] [--hot-fraction F] [--prefetch on|off] [--top K]
                             [--backend mmap|file] [--json <file|->] [--prom <file.prom>]
-  apack-repro store verify <store> [--backend mmap|file]
+  apack-repro store verify <store> [--backend mmap|file] [--json <file|->]
+                           (exit codes: 0 clean, 10 footer, 11 manifest, 12 chunk CRC,
+                            13 lane CRC, 14 generation pointer)
+  apack-repro store append <store> [--models a,b|all] [--tombstone NAME[,NAME…]]
+                           [--sample-cap N] [--substreams N] [--min-per-stream N]
+                           [--body v1|v2] [--lanes N] [--pipeline on|off] [--pack-workers N]
+  apack-repro store compact <store>
+  apack-repro store versions <store>
   apack-repro store report [--sample-cap N]
   apack-repro serve-bench [--models a,b|all] [--workers N] [--queue-depth N] [--clients N]
                           [--requests N] [--coalescing on|off] [--prefetch on|off]
@@ -48,6 +57,8 @@ USAGE:
                           [--snapshot-jsonl <file.jsonl>] [--snapshot-ms N]
                           [--profile-out <file.folded>] [--exemplars <file.json>]
                           [--slo-ms N] [--slo-objective F] [--slo-availability F]
+                          [--inject on] [--inject-rate F] [--inject-seed N] [--inject-budget N]
+                          [--compact-mid-run on]
   apack-repro table [--model NAME] [--layer N] [--kind weights|activations]
   apack-repro fig --id <2|5a|5b|6|7|8>
   apack-repro area-power
@@ -97,11 +108,30 @@ fn parse_kind(s: &str) -> TensorKind {
     }
 }
 
-fn run() -> Result<(), Box<dyn Error>> {
+/// `--models a,b|all` → zoo configs (`default` when the flag is absent).
+fn parse_models(args: &Args, default: &str) -> Result<Vec<ModelConfig>, Box<dyn Error>> {
+    Ok(match args.flag("models").unwrap_or(default) {
+        "all" => all_models(),
+        list => list
+            .split(',')
+            .map(|n| {
+                model_by_name(n.trim()).ok_or_else(|| format!("unknown model {}", n.trim()))
+            })
+            .collect::<Result<Vec<_>, _>>()?,
+    })
+}
+
+/// An `--flag on`-style switch: on when the flag was given with an empty
+/// value (trailing position) or anything other than `off`.
+fn switch_flag(args: &Args, key: &str) -> bool {
+    args.flag(key).is_some_and(|v| !v.eq_ignore_ascii_case("off"))
+}
+
+fn run() -> Result<ExitCode, Box<dyn Error>> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first().cloned() else {
         print!("{USAGE}");
-        return Ok(());
+        return Ok(ExitCode::SUCCESS);
     };
     let args = Args::parse(&argv[1..]);
 
@@ -152,7 +182,7 @@ fn run() -> Result<(), Box<dyn Error>> {
                 None => println!("no such model/layer or tensor not studied"),
             }
         }
-        "store" => run_store(&args)?,
+        "store" => return run_store(&args),
         "serve-bench" => run_serve_bench(&args)?,
         "fig" => {
             let id = args.flag("id").ok_or("--id required")?;
@@ -206,7 +236,7 @@ fn run() -> Result<(), Box<dyn Error>> {
         "help" | "--help" | "-h" => print!("{USAGE}"),
         other => return Err(format!("unknown command {other}\n{USAGE}").into()),
     }
-    Ok(())
+    Ok(ExitCode::SUCCESS)
 }
 
 /// Render the session read counters (`store get`/`stats`/`serve-bench`
@@ -218,7 +248,8 @@ fn read_stats_line(stats: &ReadStats) -> String {
         "session reads: {} compressed bytes via {} backend, {} chunks decoded \
          ({} prefetched), cache hit rate {:.1}%, {} coalesced, {} shed\n\
          decode path: {:.1} MB/s per thread over {} values, scratch-pool reuse {:.1}% \
-         ({} of {} buffers)",
+         ({} of {} buffers)\n\
+         durability: generation {}, {} transient retries, {} quarantined chunks",
         stats.bytes_read,
         stats.backend.name(),
         stats.chunks_decoded,
@@ -230,7 +261,10 @@ fn read_stats_line(stats: &ReadStats) -> String {
         stats.values_decoded,
         100.0 * stats.scratch_reuse_rate(),
         stats.scratch_reused,
-        stats.scratch_acquired
+        stats.scratch_acquired,
+        stats.generation,
+        stats.transient_retries,
+        stats.quarantined_chunks
     )
 }
 
@@ -366,24 +400,19 @@ fn json_out_flag(args: &Args, what: &str, doc: String) -> Result<(), Box<dyn Err
     Ok(())
 }
 
-/// `store pack | get | stats | verify | report` — the APackStore CLI.
-fn run_store(args: &Args) -> Result<(), Box<dyn Error>> {
+/// `store pack | get | stats | heatmap | verify | append | compact |
+/// versions | report` — the APackStore CLI. Returns the process exit
+/// code: `verify` maps the worst corruption class found to a distinct
+/// code (see [`apack_repro::store::CorruptionClass::exit_code`]);
+/// everything else exits 0 on success.
+fn run_store(args: &Args) -> Result<ExitCode, Box<dyn Error>> {
     let action = args.positional.first().map(String::as_str).unwrap_or("");
     let backend = Backend::parse(&args.flag_or("backend", "mmap"))?;
     match action {
         "pack" => {
             let trace = trace_flag(args);
             let out = args.positional.get(1).ok_or("missing <output> store path")?;
-            let models = match args.flag("models").unwrap_or("all") {
-                "all" => all_models(),
-                list => list
-                    .split(',')
-                    .map(|n| {
-                        model_by_name(n.trim())
-                            .ok_or_else(|| format!("unknown model {}", n.trim()))
-                    })
-                    .collect::<Result<Vec<_>, _>>()?,
-            };
+            let models = parse_models(args, "all")?;
             let sample_cap: usize = args.flag_or("sample-cap", "16384").parse()?;
             let substreams: u32 = args.flag_or("substreams", "64").parse()?;
             let min_per_stream: usize = args.flag_or("min-per-stream", "1024").parse()?;
@@ -568,6 +597,7 @@ fn run_store(args: &Args) -> Result<(), Box<dyn Error>> {
                 let mut root = std::collections::BTreeMap::new();
                 root.insert("store".to_string(), Json::Str(input.display().to_string()));
                 root.insert("shards".to_string(), Json::Num(store.shard_count() as f64));
+                root.insert("generation".to_string(), Json::Num(store.generation() as f64));
                 root.insert("tensor_count".to_string(), Json::Num(store.tensor_count() as f64));
                 root.insert("tensors".to_string(), Json::Arr(tensors));
                 json_out_flag(args, "stats", Json::Obj(root).to_string())?;
@@ -638,32 +668,158 @@ fn run_store(args: &Args) -> Result<(), Box<dyn Error>> {
         }
         "verify" => {
             let input = Path::new(args.positional.get(1).ok_or("missing <store> path")?);
-            let store = StoreHandle::open_with(input, backend, DEFAULT_CACHE_VALUES)?;
-            let report = store.verify()?;
+            let report = verify_store(input, backend);
+            json_out_flag(
+                args,
+                "verify",
+                verify_report_json(&input.display().to_string(), &report).to_string(),
+            )?;
+            if report.is_clean() {
+                println!(
+                    "{}: OK — {} shard file(s), {} tensors, {} chunks, {} compressed bytes \
+                     all pass CRC + decode (generation {})",
+                    input.display(),
+                    report.shards,
+                    report.tensors,
+                    report.chunks,
+                    report.bytes,
+                    report.generation
+                );
+                // Body-version census: v2 tensors additionally had every
+                // lane CRC swept during the verify above.
+                let store = StoreHandle::open_with(input, backend, 0)?;
+                let mut groups: std::collections::BTreeMap<(u8, u8), usize> =
+                    std::collections::BTreeMap::new();
+                for t in store.tensor_metas() {
+                    *groups.entry((t.body_version, t.lanes)).or_default() += 1;
+                }
+                let census: Vec<String> = groups
+                    .iter()
+                    .map(|(&(bv, lanes), &n)| match bv {
+                        1 => format!("{n} × body v1"),
+                        _ => format!("{n} × body v{bv} ({lanes} lanes, per-lane CRCs swept)"),
+                    })
+                    .collect();
+                println!("chunk bodies: {}", census.join(", "));
+                return Ok(ExitCode::SUCCESS);
+            }
             println!(
-                "{}: OK — {} shard file(s), {} tensors, {} chunks, {} compressed bytes \
-                 all pass CRC + decode",
+                "{}: {} issue(s) — {} shard file(s), {} tensors, {} chunks swept, \
+                 {} clean bytes (generation {})",
                 input.display(),
+                report.issues.len(),
                 report.shards,
                 report.tensors,
                 report.chunks,
-                report.bytes
+                report.bytes,
+                report.generation
             );
-            // Body-version census: v2 tensors additionally had every lane
-            // CRC swept during the verify above.
-            let mut groups: std::collections::BTreeMap<(u8, u8), usize> =
+            let mut by_class: std::collections::BTreeMap<&str, usize> =
                 std::collections::BTreeMap::new();
-            for t in store.tensor_metas() {
-                *groups.entry((t.body_version, t.lanes)).or_default() += 1;
+            for issue in &report.issues {
+                println!("  {}", issue.render());
+                *by_class.entry(issue.class.label()).or_default() += 1;
             }
-            let census: Vec<String> = groups
+            let census: Vec<String> =
+                by_class.iter().map(|(label, n)| format!("{n} × {label}")).collect();
+            let worst = report.worst_class().expect("unclean report has a worst class");
+            println!(
+                "by class: {} — worst {} (exit code {})",
+                census.join(", "),
+                worst.label(),
+                worst.exit_code()
+            );
+            return Ok(ExitCode::from(worst.exit_code()));
+        }
+        "append" => {
+            let out = Path::new(args.positional.get(1).ok_or("missing <store> path")?);
+            let models = match args.flag("models") {
+                Some(_) => parse_models(args, "all")?,
+                None => Vec::new(),
+            };
+            let tombstones: Vec<String> = args
+                .flag("tombstone")
+                .map(|s| {
+                    s.split(',')
+                        .map(|t| t.trim().to_string())
+                        .filter(|t| !t.is_empty())
+                        .collect()
+                })
+                .unwrap_or_default();
+            if models.is_empty() && tombstones.is_empty() {
+                return Err("store append needs --models and/or --tombstone".into());
+            }
+            let sample_cap: usize = args.flag_or("sample-cap", "16384").parse()?;
+            let substreams: u32 = args.flag_or("substreams", "64").parse()?;
+            let min_per_stream: usize = args.flag_or("min-per-stream", "1024").parse()?;
+            let policy = PartitionPolicy { substreams, min_per_stream };
+            let pipelined = !args.flag_or("pipeline", "on").eq_ignore_ascii_case("off");
+            let opts = PackOptions {
+                pipelined,
+                workers: args.flag_or("pack-workers", "0").parse()?,
+                body: parse_body_config(args)?,
+                ..PackOptions::default()
+            };
+            let summary = append_models(out, &models, sample_cap, &policy, &opts, &tombstones)?;
+            println!(
+                "committed generation {} to {}: {} live tensors ({} added, {} replaced, \
+                 {} tombstoned), {:.1} KiB appended, {:.1} KiB committed",
+                summary.generation,
+                out.display(),
+                summary.tensors,
+                summary.tensors_added,
+                summary.tensors_replaced,
+                summary.tombstoned,
+                summary.bytes_written as f64 / 1024.0,
+                summary.file_bytes as f64 / 1024.0
+            );
+        }
+        "compact" => {
+            let input = Path::new(args.positional.get(1).ok_or("missing <store> path")?);
+            let summary = if input.is_dir() {
+                compact_sharded_store(input, None)?
+            } else {
+                compact_store(input, None)?
+            };
+            println!(
+                "compacted {} to generation {}: {} tensors, {} chunks, {:.1} KiB -> \
+                 {:.1} KiB ({:.1} KiB reclaimed)",
+                input.display(),
+                summary.generation,
+                summary.tensors,
+                summary.chunks,
+                summary.bytes_before as f64 / 1024.0,
+                summary.bytes_after as f64 / 1024.0,
+                summary.reclaimed() as f64 / 1024.0
+            );
+        }
+        "versions" => {
+            let input = Path::new(args.positional.get(1).ok_or("missing <store> path")?);
+            let versions = store_versions(input)?;
+            let rows: Vec<Vec<String>> = versions
                 .iter()
-                .map(|(&(bv, lanes), &n)| match bv {
-                    1 => format!("{n} × body v1"),
-                    _ => format!("{n} × body v{bv} ({lanes} lanes, per-lane CRCs swept)"),
+                .map(|v| {
+                    vec![
+                        v.shard.map_or("-".to_string(), |s| s.to_string()),
+                        v.generation.to_string(),
+                        v.tensors.to_string(),
+                        v.trailer_offset.to_string(),
+                        v.committed_len.to_string(),
+                    ]
                 })
                 .collect();
-            println!("chunk bodies: {}", census.join(", "));
+            println!(
+                "{}",
+                eval::render_table(
+                    &format!(
+                        "{} — {} committed generation(s)",
+                        input.display(),
+                        versions.len()
+                    ),
+                    &["shard", "gen", "tensors", "trailer@", "bytes"],
+                    &rows
+                )
+            );
         }
         "report" => {
             let sample_cap: usize = args.flag_or("sample-cap", "8192").parse()?;
@@ -671,12 +827,13 @@ fn run_store(args: &Args) -> Result<(), Box<dyn Error>> {
         }
         other => {
             return Err(format!(
-                "unknown store action {other:?} (try pack, get, stats, heatmap, verify, report)"
+                "unknown store action {other:?} (try pack, get, stats, heatmap, verify, \
+                 append, compact, versions, report)"
             )
             .into())
         }
     }
-    Ok(())
+    Ok(ExitCode::SUCCESS)
 }
 
 /// `serve-bench` — closed-loop clients through a [`ServingEngine`] over a
@@ -705,6 +862,19 @@ fn run_serve_bench(args: &Args) -> Result<(), Box<dyn Error>> {
     let slo_ms: u64 = args.flag_or("slo-ms", "0").parse()?; // 0 = no SLO tracking
     let slo_objective: f64 = args.flag_or("slo-objective", "0.99").parse()?;
     let slo_availability: f64 = args.flag_or("slo-availability", "0.99").parse()?;
+    // Fault injection (`--inject on` picks a default rate; an explicit
+    // `--inject-rate` implies injection on its own).
+    let inject_rate: f64 = match args.flag("inject-rate") {
+        Some(v) => v.parse()?,
+        None if switch_flag(args, "inject") => 0.02,
+        None => 0.0,
+    };
+    let inject_seed: u64 = args.flag_or("inject-seed", "64023").parse()?;
+    let inject_budget: u64 = match args.flag("inject-budget") {
+        Some(v) => v.parse()?,
+        None => u64::MAX,
+    };
+    let compact_mid_run = switch_flag(args, "compact-mid-run");
 
     let path = std::env::temp_dir()
         .join(format!("apack_serve_bench_{}.apackstore", std::process::id()));
@@ -714,7 +884,22 @@ fn run_serve_bench(args: &Args) -> Result<(), Box<dyn Error>> {
     } else {
         pack_model_zoo(&path, &models, sample_cap, policy)?;
     }
-    let store = Arc::new(StoreHandle::open(&path)?);
+    let plan = (inject_rate > 0.0).then(|| {
+        FaultPlan::new(FaultConfig {
+            seed: inject_seed,
+            read_error_rate: inject_rate,
+            short_read_rate: inject_rate / 2.0,
+            latency_spike_rate: inject_rate,
+            max_injected_errors: inject_budget,
+            ..FaultConfig::default()
+        })
+    });
+    let store = Arc::new(StoreHandle::open_with_plan(
+        &path,
+        Backend::default(),
+        DEFAULT_CACHE_VALUES,
+        plan.as_ref(),
+    )?);
     let kernel_label = apply_decode_flags(args, &store)?;
 
     // Owned tensor directory so client threads need no store borrows.
@@ -764,6 +949,16 @@ fn run_serve_bench(args: &Args) -> Result<(), Box<dyn Error>> {
         requests,
         100.0 * hot_fraction
     );
+    if inject_rate > 0.0 {
+        println!(
+            "fault injection armed: rate {inject_rate}, seed {inject_seed}, budget {}",
+            if inject_budget == u64::MAX {
+                "unbounded".to_string()
+            } else {
+                inject_budget.to_string()
+            }
+        );
+    }
     let trace = trace_flag(args);
     let engine = ServingEngine::start(Arc::clone(&store), config)?;
     let snapshots = match args.flag("snapshot-jsonl") {
@@ -788,6 +983,23 @@ fn run_serve_bench(args: &Args) -> Result<(), Box<dyn Error>> {
     let mut served_values = 0u64;
     std::thread::scope(|scope| {
         let mut handles = Vec::new();
+        if compact_mid_run {
+            let store = Arc::clone(&store);
+            scope.spawn(move || {
+                // Let some traffic build up, then compact while serving:
+                // in-flight requests keep their pinned generation, new
+                // requests land on the compacted one.
+                std::thread::sleep(Duration::from_millis(50));
+                match store.compact_live() {
+                    Ok(s) => println!(
+                        "mid-run compaction: generation {} ({:.1} KiB reclaimed) while serving",
+                        s.generation,
+                        s.reclaimed() as f64 / 1024.0
+                    ),
+                    Err(e) => eprintln!("mid-run compaction failed: {e}"),
+                }
+            });
+        }
         for tid in 0..clients {
             let engine = &engine;
             let tensors = &tensors;
@@ -844,6 +1056,13 @@ fn run_serve_bench(args: &Args) -> Result<(), Box<dyn Error>> {
     );
     println!("{}", engine.metrics().render());
     println!("{}", read_stats_line(&engine.stats()));
+    if let Some(plan) = &plan {
+        println!(
+            "fault injection: {} transient faults injected over {} reads",
+            plan.injected_errors(),
+            plan.reads()
+        );
+    }
     if let Some((out, stream)) = snapshots {
         drop(stream); // flush the final snapshot line before reporting
         println!("metrics: periodic JSONL snapshots -> {out}");
@@ -906,7 +1125,7 @@ fn run_serve_bench(args: &Args) -> Result<(), Box<dyn Error>> {
 
 fn main() -> ExitCode {
     match run() {
-        Ok(()) => ExitCode::SUCCESS,
+        Ok(code) => code,
         Err(e) => {
             eprintln!("error: {e:#}");
             ExitCode::FAILURE

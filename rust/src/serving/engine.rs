@@ -28,7 +28,8 @@ use crate::obs::{
     self, Counter, Gauge, LatencyHistogram, ManualSpan, MetricsRegistry, RegistrySnapshot,
     RequestOutcome, RequestRecord, SloConfig, SloStatus, SloTracker, Stage,
 };
-use crate::store::StoreHandle;
+use crate::store::{StoreHandle, StoreVariant};
+use crate::util::Rng64;
 
 use super::metrics::MetricsSnapshot;
 use super::prefetch::{HotSet, PrefetchConfig};
@@ -164,6 +165,7 @@ struct Shared {
     shed_queue_full: Arc<Counter>,
     shed_deadline: Arc<Counter>,
     coalesced: Arc<Counter>,
+    retries: Arc<Counter>,
     queue_depth: Arc<Gauge>,
     queue_depth_max: Arc<Gauge>,
     latency: Arc<LatencyHistogram>,
@@ -251,6 +253,7 @@ impl ServingEngine {
             shed_queue_full: registry.counter("serving.shed_queue_full"),
             shed_deadline: registry.counter("serving.shed_deadline"),
             coalesced: registry.counter("serving.coalesced_decodes"),
+            retries: registry.counter("serving.retries"),
             queue_depth: registry.gauge("serving.queue_depth"),
             queue_depth_max: registry.gauge("serving.queue_depth_max"),
             latency: registry.histogram("serving.latency_ns"),
@@ -490,21 +493,37 @@ fn worker_loop(shared: &Shared) {
     }
 }
 
+/// Bounded re-issues of a chunk decode after the store layer reports a
+/// transient failure (its own per-read retries already exhausted).
+const SERVING_TRANSIENT_RETRIES: usize = 2;
+
 /// Decode one request against the store.
+///
+/// The generation snapshot is pinned once per request: a concurrent
+/// `reload` or online compaction swaps the handle under us, but every
+/// chunk of this response decodes from the same generation.
 fn execute(shared: &Shared, request: &Request) -> Result<Arc<Vec<u32>>> {
+    let store = shared.store.pin();
     match request {
-        Request::Chunk { tensor, chunk } => decode_chunk(shared, tensor, *chunk),
-        Request::Range { tensor, range } => assemble_range(shared, tensor, range.clone()),
+        Request::Chunk { tensor, chunk } => decode_chunk(shared, &store, tensor, *chunk),
+        Request::Range { tensor, range } => {
+            assemble_range(shared, &store, tensor, range.clone())
+        }
         Request::Tensor { tensor } => {
-            let n_values = shared.store.meta(tensor)?.n_values;
-            assemble_range(shared, tensor, 0..n_values)
+            let n_values = store.meta(tensor)?.n_values;
+            assemble_range(shared, &store, tensor, 0..n_values)
         }
     }
 }
 
 /// One chunk through hot-set tracking and (when enabled) the
-/// single-flight table.
-fn decode_chunk(shared: &Shared, tensor: &str, chunk: usize) -> Result<Arc<Vec<u32>>> {
+/// single-flight table, with bounded retries for transient IO errors.
+fn decode_chunk(
+    shared: &Shared,
+    store: &StoreVariant,
+    tensor: &str,
+    chunk: usize,
+) -> Result<Arc<Vec<u32>>> {
     if shared.config.prefetch.is_some() {
         shared.hotset.touch(tensor, chunk);
     }
@@ -512,15 +531,31 @@ fn decode_chunk(shared: &Shared, tensor: &str, chunk: usize) -> Result<Arc<Vec<u
     // follower's wait. The store's ChunkIo/Decode spans nest under it on
     // the leader's thread.
     let _sf = obs::span(Stage::SingleFlight);
-    if shared.config.coalescing {
-        let (result, coalesced) =
-            shared.flight.run(tensor, chunk, || shared.store.get_chunk(tensor, chunk));
-        if coalesced {
-            shared.coalesced.inc();
+    let mut attempt = 0;
+    loop {
+        let result = if shared.config.coalescing {
+            let (result, coalesced) =
+                shared.flight.run(tensor, chunk, || store.get_chunk(tensor, chunk));
+            if coalesced {
+                shared.coalesced.inc();
+            }
+            result
+        } else {
+            store.get_chunk(tensor, chunk)
+        };
+        match result {
+            Err(err) if err.is_transient() && attempt < SERVING_TRANSIENT_RETRIES => {
+                attempt += 1;
+                shared.retries.inc();
+                // Jittered backoff so coalesced retriers don't stampede
+                // the same chunk in lockstep.
+                let mut rng = Rng64::new(0x5E7A_11ED ^ ((chunk as u64) << 8) ^ attempt as u64);
+                std::thread::sleep(Duration::from_micros(
+                    (50 + rng.below(200)) * attempt as u64,
+                ));
+            }
+            other => return other,
         }
-        result
-    } else {
-        shared.store.get_chunk(tensor, chunk)
     }
 }
 
@@ -528,8 +563,13 @@ fn decode_chunk(shared: &Shared, tensor: &str, chunk: usize) -> Result<Arc<Vec<u
 /// [`decode_chunk`] so duplicate-heavy range traffic coalesces too.
 /// Chunks decode sequentially within one request — parallelism comes from
 /// the worker pool, not from fan-out inside a request.
-fn assemble_range(shared: &Shared, tensor: &str, range: Range<u64>) -> Result<Arc<Vec<u32>>> {
-    let meta = shared.store.meta(tensor)?;
+fn assemble_range(
+    shared: &Shared,
+    store: &StoreVariant,
+    tensor: &str,
+    range: Range<u64>,
+) -> Result<Arc<Vec<u32>>> {
+    let meta = store.meta(tensor)?;
     if range.start > range.end || range.end > meta.n_values {
         return Err(Error::Store(format!(
             "tensor {tensor}: range {}..{} out of bounds (n_values {})",
@@ -547,13 +587,13 @@ fn assemble_range(shared: &Shared, tensor: &str, range: Range<u64>) -> Result<Ar
             // Whole-chunk range (single-chunk tensors take this path too):
             // the response IS the cached chunk — share the Arc, copy
             // nothing.
-            return decode_chunk(shared, tensor, first);
+            return decode_chunk(shared, store, tensor, first);
         }
     }
     let mut copy_out = obs::span(Stage::CopyOut);
     let mut out = Vec::with_capacity((range.end - range.start) as usize);
     for ci in first..=last {
-        let part = decode_chunk(shared, tensor, ci)?;
+        let part = decode_chunk(shared, store, tensor, ci)?;
         let covered = meta.chunk_value_range(ci);
         let lo = range.start.max(covered.start) - covered.start;
         let hi = range.end.min(covered.end) - covered.start;

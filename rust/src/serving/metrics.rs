@@ -25,6 +25,9 @@ pub struct MetricsSnapshot {
     /// Chunk decodes that joined another request's flight instead of
     /// decoding again (single-flight coalescing).
     pub coalesced_decodes: u64,
+    /// Chunk decodes re-issued after a transient IO failure (the store's
+    /// own per-read retries already exhausted).
+    pub retries: u64,
     /// Requests waiting in the queue right now.
     pub queue_depth: usize,
     /// High-water mark of the queue depth.
@@ -51,6 +54,7 @@ impl MetricsSnapshot {
             shed_queue_full: snap.counter("serving.shed_queue_full"),
             shed_deadline: snap.counter("serving.shed_deadline"),
             coalesced_decodes: snap.counter("serving.coalesced_decodes"),
+            retries: snap.counter("serving.retries"),
             queue_depth: snap.gauge("serving.queue_depth") as usize,
             queue_depth_max: snap.gauge("serving.queue_depth_max") as usize,
             latency: snap.hist("serving.latency_ns"),
@@ -68,7 +72,7 @@ impl MetricsSnapshot {
     pub fn render(&self) -> String {
         let mut out = format!(
             "serving: {} submitted, {} completed, {} shed ({} queue-full, {} deadline)\n\
-             coalesced decodes: {}  queue depth: {} now / {} peak\n\
+             coalesced decodes: {}  transient retries: {}  queue depth: {} now / {} peak\n\
              latency: {}",
             self.submitted,
             self.completed,
@@ -76,6 +80,7 @@ impl MetricsSnapshot {
             self.shed_queue_full,
             self.shed_deadline,
             self.coalesced_decodes,
+            self.retries,
             self.queue_depth,
             self.queue_depth_max,
             self.latency.render()

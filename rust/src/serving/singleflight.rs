@@ -14,14 +14,28 @@
 //! owns temporal reuse).
 //!
 //! The leader publishes its result (success or error) before unlisting
-//! the key, so followers can never block on a completed flight; errors
-//! are `Clone` and shared like values, so one corrupt chunk fails every
-//! coalesced request identically.
+//! the key, so followers can never block on a completed flight.
+//!
+//! Error sharing is deliberately asymmetric. *Permanent* errors (corrupt
+//! chunk, missing tensor) are `Clone` and shared like values — one bad
+//! chunk fails every coalesced request identically, and re-decoding it
+//! would only reproduce the failure. *Transient* errors
+//! ([`crate::error::Error::is_transient`]) are **not** adopted by
+//! followers: the leader's IO hiccup says nothing about whether a fresh
+//! attempt would succeed, so a follower that observes one re-enters the
+//! table and retries independently (becoming the next leader, or
+//! following a newer flight), up to [`MAX_TRANSIENT_REJOINS`] times.
+//! The leader itself always returns its own result verbatim — its
+//! retry policy lives in the serving engine, not here.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::error::Result;
+
+/// How many times a follower re-enters the table after observing another
+/// leader's transient failure before giving up and returning it.
+const MAX_TRANSIENT_REJOINS: usize = 4;
 
 /// Decoded chunk shared between coalesced requests.
 pub type ChunkResult = Result<Arc<Vec<u32>>>;
@@ -63,35 +77,52 @@ impl SingleFlight {
         decode: impl FnOnce() -> ChunkResult,
     ) -> (ChunkResult, bool) {
         let key = (tensor.to_string(), chunk as u32);
-        let (flight, leader) = {
-            let mut map = self.inflight.lock().expect("single-flight table lock");
-            match map.get(&key) {
-                Some(f) => (Arc::clone(f), false),
-                None => {
-                    let f = Arc::new(Flight {
-                        result: Mutex::new(None),
-                        done: Condvar::new(),
-                    });
-                    map.insert(key.clone(), Arc::clone(&f));
-                    (f, true)
+        // Held in an Option so a follower that re-enters after a transient
+        // failure can still lead a fresh flight with it.
+        let mut decode = Some(decode);
+        let mut rejoins = 0;
+        loop {
+            let (flight, leader) = {
+                let mut map = self.inflight.lock().expect("single-flight table lock");
+                match map.get(&key) {
+                    Some(f) => (Arc::clone(f), false),
+                    None => {
+                        let f = Arc::new(Flight {
+                            result: Mutex::new(None),
+                            done: Condvar::new(),
+                        });
+                        map.insert(key.clone(), Arc::clone(&f));
+                        (f, true)
+                    }
                 }
+            };
+            if leader {
+                let run = decode.take().expect("each caller leads at most once");
+                let result = run();
+                *flight.result.lock().expect("single-flight result lock") =
+                    Some(result.clone());
+                flight.done.notify_all();
+                // Publish before unlisting: a caller holding the flight Arc
+                // reads the stored result; a caller arriving after the remove
+                // starts a fresh flight.
+                self.inflight.lock().expect("single-flight table lock").remove(&key);
+                return (result, false);
             }
-        };
-        if leader {
-            let result = decode();
-            *flight.result.lock().expect("single-flight result lock") = Some(result.clone());
-            flight.done.notify_all();
-            // Publish before unlisting: a caller holding the flight Arc
-            // reads the stored result; a caller arriving after the remove
-            // starts a fresh flight.
-            self.inflight.lock().expect("single-flight table lock").remove(&key);
-            (result, false)
-        } else {
-            let mut slot = flight.result.lock().expect("single-flight result lock");
-            while slot.is_none() {
-                slot = flight.done.wait(slot).expect("single-flight result lock");
+            let result = {
+                let mut slot = flight.result.lock().expect("single-flight result lock");
+                while slot.is_none() {
+                    slot = flight.done.wait(slot).expect("single-flight result lock");
+                }
+                slot.as_ref().expect("loop exits on Some").clone()
+            };
+            match result {
+                // Another leader's transient IO failure is not ours to
+                // adopt — re-enter the table and try independently.
+                Err(err) if err.is_transient() && rejoins < MAX_TRANSIENT_REJOINS => {
+                    rejoins += 1;
+                }
+                shared => return (shared, true),
             }
-            (slot.as_ref().expect("loop exits on Some").clone(), true)
         }
     }
 
@@ -172,6 +203,50 @@ mod tests {
         let (res, joined) = flight.run("t", 0, || Ok(Arc::new(vec![5u32])));
         assert_eq!(res.unwrap()[0], 5);
         assert!(!joined);
+    }
+
+    #[test]
+    fn transient_errors_are_not_adopted_by_followers() {
+        let flight = SingleFlight::new();
+        let attempts = AtomicU64::new(0);
+        let transient_failures = AtomicU64::new(0);
+        let oks = AtomicU64::new(0);
+        let barrier = Barrier::new(4);
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    barrier.wait();
+                    let (res, _) = flight.run("t", 0, || {
+                        if attempts.fetch_add(1, Ordering::Relaxed) == 0 {
+                            // First leader: hold the flight long enough
+                            // that every peer coalesces onto it, then fail
+                            // transiently.
+                            std::thread::sleep(Duration::from_millis(100));
+                            Err(crate::error::Error::Transient("injected".into()))
+                        } else {
+                            Ok(Arc::new(vec![9u32]))
+                        }
+                    });
+                    match res {
+                        Err(e) => {
+                            assert!(e.is_transient());
+                            transient_failures.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Ok(v) => {
+                            assert_eq!(v[0], 9);
+                            oks.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                });
+            }
+        });
+        // The first leader keeps its own transient error (engine-level
+        // retry is its caller's job); every follower re-enters instead of
+        // adopting it and succeeds on a fresh decode.
+        assert_eq!(transient_failures.load(Ordering::Relaxed), 1, "only the first leader fails");
+        assert_eq!(oks.load(Ordering::Relaxed), 3, "followers retried independently");
+        assert!(attempts.load(Ordering::Relaxed) >= 2, "at least one fresh decode ran");
+        assert_eq!(flight.inflight_len(), 0, "table drains");
     }
 
     #[test]

@@ -43,7 +43,12 @@
 //!   checked on read; the footer carries its own CRC checked on open; all
 //!   offsets are bounds-checked against the chunk region before any I/O.
 //! - **Appendable.** The index lives at the tail, so writers stream chunk
-//!   blobs and seal the file with footer + trailer in one pass.
+//!   blobs and seal the file with footer + trailer in one pass. Live
+//!   stores (DESIGN.md §14) extend this: further *generations* — new
+//!   chunk blobs, a [`GenRecord`], a complete fresh footer and trailer —
+//!   are appended past the committed tail and committed by atomically
+//!   flipping the sidecar [`GenPointer`] file; a torn tail past the
+//!   pointer is ignored on open, so the last sealed generation wins.
 //! - **Versioned, backward-compatible.** The leading magic names the file
 //!   format ([`StoreFormat`]); per-tensor `body_version`/`lanes` footer
 //!   fields exist only in `APACKST2` files, so every v1 file written by
@@ -538,6 +543,145 @@ pub fn parse_trailer(data: &[u8]) -> Result<Trailer> {
     })
 }
 
+// ---------------------------------------------------------------------------
+// Generations (live stores, DESIGN.md §14).
+//
+// A *generation* is one committed footer+trailer. Classic write-once stores
+// have exactly one, abutting EOF. A live store gains further generations by
+// appending chunk blobs + a generation record + a fresh footer + trailer past
+// the committed tail, then atomically flipping the sidecar *generation
+// pointer* (`<store>.gen`, written tmp + fsync + rename) to the new trailer
+// offset. Open order: a valid pointer wins; a missing or invalid pointer
+// falls back to the classic exact-EOF trailer. A torn append tail past the
+// pointed-to trailer is therefore ignored — the previous sealed generation
+// wins.
+// ---------------------------------------------------------------------------
+
+/// Magic leading the sidecar generation-pointer file.
+pub const GEN_POINTER_MAGIC: [u8; 8] = *b"APGN1\0\0\0";
+
+/// Fixed size of the generation-pointer file: magic (8) | generation u32 |
+/// trailer_offset u64 | committed_len u64 | crc32 u32.
+pub const GEN_POINTER_BYTES: usize = 8 + 4 + 8 + 8 + 4;
+
+/// Magic leading the in-file generation record ("APGR", little-endian).
+pub const GEN_RECORD_MAGIC: u32 = 0x5247_5041;
+
+/// Fixed size of the in-file generation record, written immediately before
+/// each generation's footer: magic u32 | generation u32 |
+/// parent_trailer_offset u64 | reserved u32 | crc32 u32.
+pub const GEN_RECORD_BYTES: usize = 4 + 4 + 8 + 4 + 4;
+
+/// The sidecar pointer naming the committed generation of a live store.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GenPointer {
+    /// Committed generation number (0 = the original sealed store).
+    pub generation: u32,
+    /// Absolute offset of the committed trailer record.
+    pub trailer_offset: u64,
+    /// Committed file length (`trailer_offset + TRAILER_BYTES`); redundant
+    /// with `trailer_offset` and cross-checked on parse.
+    pub committed_len: u64,
+}
+
+impl GenPointer {
+    /// Serialize (magic + fields + CRC over all preceding bytes).
+    pub fn to_bytes(&self) -> [u8; GEN_POINTER_BYTES] {
+        let mut out = [0u8; GEN_POINTER_BYTES];
+        out[0..8].copy_from_slice(&GEN_POINTER_MAGIC);
+        out[8..12].copy_from_slice(&self.generation.to_le_bytes());
+        out[12..20].copy_from_slice(&self.trailer_offset.to_le_bytes());
+        out[20..28].copy_from_slice(&self.committed_len.to_le_bytes());
+        let crc = crc32(&out[..28]);
+        out[28..32].copy_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    /// Parse and validate [`Self::to_bytes`] output. Any deviation —
+    /// size, magic, CRC, or a `committed_len` that disagrees with
+    /// `trailer_offset` — is an error; the caller falls back to the
+    /// classic exact-EOF open.
+    pub fn from_bytes(data: &[u8]) -> Result<Self> {
+        let bad = |m: &str| Error::Store(format!("generation pointer: {m}"));
+        if data.len() != GEN_POINTER_BYTES {
+            return Err(bad(&format!(
+                "must be {GEN_POINTER_BYTES} bytes, got {}",
+                data.len()
+            )));
+        }
+        if data[0..8] != GEN_POINTER_MAGIC {
+            return Err(bad("bad magic"));
+        }
+        let stored_crc = u32::from_le_bytes(data[28..32].try_into().unwrap());
+        if crc32(&data[..28]) != stored_crc {
+            return Err(bad("CRC mismatch"));
+        }
+        let p = Self {
+            generation: u32::from_le_bytes(data[8..12].try_into().unwrap()),
+            trailer_offset: u64::from_le_bytes(data[12..20].try_into().unwrap()),
+            committed_len: u64::from_le_bytes(data[20..28].try_into().unwrap()),
+        };
+        if p.committed_len != p.trailer_offset + TRAILER_BYTES as u64 {
+            return Err(bad("committed_len disagrees with trailer_offset"));
+        }
+        Ok(p)
+    }
+}
+
+/// The in-file record stamped immediately before a generation's footer,
+/// chaining it to its parent for `store versions` history walks. Absent
+/// (or unparseable) in classic write-once stores, which read as
+/// generation 0.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GenRecord {
+    /// This generation's number (1-based for appended generations).
+    pub generation: u32,
+    /// Trailer offset of the parent generation; 0 when there is no
+    /// in-file parent (generation 0, or a compacted store).
+    pub parent_trailer_offset: u64,
+}
+
+impl GenRecord {
+    /// Serialize (magic + fields + reserved + CRC over all preceding).
+    pub fn to_bytes(&self) -> [u8; GEN_RECORD_BYTES] {
+        let mut out = [0u8; GEN_RECORD_BYTES];
+        out[0..4].copy_from_slice(&GEN_RECORD_MAGIC.to_le_bytes());
+        out[4..8].copy_from_slice(&self.generation.to_le_bytes());
+        out[8..16].copy_from_slice(&self.parent_trailer_offset.to_le_bytes());
+        // out[16..20] reserved, zero.
+        let crc = crc32(&out[..20]);
+        out[20..24].copy_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    /// Parse [`Self::to_bytes`] output; `None` when the bytes are not a
+    /// generation record (the caller treats the store as generation 0 —
+    /// classic stores have arbitrary footer-adjacent bytes here).
+    pub fn from_bytes(data: &[u8]) -> Option<Self> {
+        if data.len() != GEN_RECORD_BYTES {
+            return None;
+        }
+        if u32::from_le_bytes(data[0..4].try_into().unwrap()) != GEN_RECORD_MAGIC {
+            return None;
+        }
+        let stored_crc = u32::from_le_bytes(data[20..24].try_into().unwrap());
+        if crc32(&data[..20]) != stored_crc {
+            return None;
+        }
+        Some(Self {
+            generation: u32::from_le_bytes(data[4..8].try_into().unwrap()),
+            parent_trailer_offset: u64::from_le_bytes(data[8..16].try_into().unwrap()),
+        })
+    }
+}
+
+/// Path of the sidecar generation-pointer file for a single-file store.
+pub fn gen_pointer_path(path: &std::path::Path) -> std::path::PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".gen");
+    std::path::PathBuf::from(os)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -743,5 +887,51 @@ mod tests {
         bad[27] ^= 0xFF;
         assert!(parse_trailer(&bad).is_err());
         assert!(parse_trailer(&t[..20]).is_err());
+    }
+
+    #[test]
+    fn gen_pointer_roundtrip_and_rejection() {
+        let p = GenPointer {
+            generation: 7,
+            trailer_offset: 9000,
+            committed_len: 9000 + TRAILER_BYTES as u64,
+        };
+        let bytes = p.to_bytes();
+        assert_eq!(bytes.len(), GEN_POINTER_BYTES);
+        assert_eq!(GenPointer::from_bytes(&bytes).unwrap(), p);
+        // Any single-byte flip is caught (magic, fields or CRC).
+        for i in 0..bytes.len() {
+            let mut bad = bytes;
+            bad[i] ^= 0x10;
+            assert!(GenPointer::from_bytes(&bad).is_err(), "flip at {i}");
+        }
+        assert!(GenPointer::from_bytes(&bytes[..GEN_POINTER_BYTES - 1]).is_err());
+        // committed_len must agree with trailer_offset even under a valid
+        // CRC (a pointer hand-forged with inconsistent fields).
+        let forged = GenPointer { committed_len: 9001 + TRAILER_BYTES as u64, ..p };
+        assert!(GenPointer::from_bytes(&forged.to_bytes()).is_err());
+    }
+
+    #[test]
+    fn gen_record_roundtrip_and_rejection() {
+        let r = GenRecord { generation: 3, parent_trailer_offset: 4242 };
+        let bytes = r.to_bytes();
+        assert_eq!(bytes.len(), GEN_RECORD_BYTES);
+        assert_eq!(GenRecord::from_bytes(&bytes), Some(r));
+        // A non-record (arbitrary footer-adjacent bytes in a classic
+        // store) parses as None, never as a bogus generation.
+        for i in 0..bytes.len() {
+            let mut bad = bytes;
+            bad[i] ^= 0x04;
+            assert_eq!(GenRecord::from_bytes(&bad), None, "flip at {i}");
+        }
+        assert_eq!(GenRecord::from_bytes(&bytes[..GEN_RECORD_BYTES - 1]), None);
+        assert_eq!(GenRecord::from_bytes(&[0u8; GEN_RECORD_BYTES]), None);
+    }
+
+    #[test]
+    fn gen_pointer_path_appends_suffix() {
+        let p = gen_pointer_path(std::path::Path::new("/tmp/z.apackstore"));
+        assert_eq!(p, std::path::PathBuf::from("/tmp/z.apackstore.gen"));
     }
 }

@@ -6,24 +6,231 @@
 //! [`StoreReader`] and [`ShardedStoreReader`] behind one surface
 //! (`get_tensor` / `get_chunk` / `get_range` / `stats` / `verify` / …),
 //! auto-detected from the path: a directory opens as a sharded store, a
-//! file as a single-file store. This is the seam later work (async
-//! serving, delta updates) plugs into without touching the callers again.
+//! file as a single-file store.
+//!
+//! Since live stores (DESIGN.md §14) can gain generations while being
+//! served, the handle is a **swappable snapshot**: it holds an
+//! `Arc<StoreVariant>` behind an `RwLock`. Every call uses the current
+//! snapshot; [`Self::pin`] hands a caller its own `Arc` so a multi-step
+//! request (the serving engine's decode + range assembly) sees one
+//! consistent generation even if [`Self::reload`] or
+//! [`Self::compact_live`] swaps the snapshot mid-flight. The swap is a
+//! single pointer flip; the superseded reader (and, after compaction, the
+//! replaced inode) lives until the last pinned `Arc` drops. Decode-kernel
+//! and lane-thread settings are remembered and re-applied across swaps;
+//! read counters, cache contents and heat restart with the new snapshot.
 
 use std::ops::Range;
-use std::path::Path;
-use std::sync::Arc;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, RwLock};
 
 use crate::error::Result;
 
 use super::format::TensorMeta;
-use super::io::Backend;
+use super::io::{Backend, FaultPlan};
+use super::live::{compact_sharded_store, compact_store, CompactSummary};
 use super::reader::{ReadStats, StoreReader, VerifyReport, DEFAULT_CACHE_VALUES};
 use super::shard::ShardedStoreReader;
 
-/// A read-only handle on an APackStore: single file or sharded directory.
-pub enum StoreHandle {
+/// One opened generation snapshot: a single-file or sharded reader.
+/// Borrow-returning accessors live here; [`StoreHandle`] adds the
+/// swap/reload machinery and owned-return conveniences on top.
+pub enum StoreVariant {
     Single(StoreReader),
     Sharded(ShardedStoreReader),
+}
+
+impl StoreVariant {
+    /// The IO backend serving this store.
+    pub fn backend(&self) -> Backend {
+        match self {
+            StoreVariant::Single(r) => r.backend(),
+            StoreVariant::Sharded(r) => r.backend(),
+        }
+    }
+
+    /// Number of shard files (1 for a single-file store).
+    pub fn shard_count(&self) -> usize {
+        match self {
+            StoreVariant::Single(_) => 1,
+            StoreVariant::Sharded(r) => r.shard_count(),
+        }
+    }
+
+    /// All tensor names (write order; sharded: shard order first).
+    pub fn tensor_names(&self) -> Vec<&str> {
+        match self {
+            StoreVariant::Single(r) => r.tensor_names(),
+            StoreVariant::Sharded(r) => r.tensor_names(),
+        }
+    }
+
+    /// Number of tensors in the store.
+    pub fn tensor_count(&self) -> usize {
+        match self {
+            StoreVariant::Single(r) => r.tensor_count(),
+            StoreVariant::Sharded(r) => r.tensor_count(),
+        }
+    }
+
+    /// Every tensor's footer entry (same order as [`Self::tensor_names`]).
+    pub fn tensor_metas(&self) -> Vec<&TensorMeta> {
+        match self {
+            StoreVariant::Single(r) => r.index().tensors.iter().collect(),
+            StoreVariant::Sharded(r) => r.tensor_metas(),
+        }
+    }
+
+    /// Metadata for one tensor.
+    pub fn meta(&self, name: &str) -> Result<&TensorMeta> {
+        match self {
+            StoreVariant::Single(r) => r.meta(name),
+            StoreVariant::Sharded(r) => r.meta(name),
+        }
+    }
+
+    /// Decode one chunk (CRC-checked; cache-assisted).
+    pub fn get_chunk(&self, name: &str, ci: usize) -> Result<Arc<Vec<u32>>> {
+        match self {
+            StoreVariant::Single(r) => r.get_chunk(name, ci),
+            StoreVariant::Sharded(r) => r.get_chunk(name, ci),
+        }
+    }
+
+    /// Decode a full tensor, chunks in parallel.
+    pub fn get_tensor(&self, name: &str) -> Result<Vec<u32>> {
+        match self {
+            StoreVariant::Single(r) => r.get_tensor(name),
+            StoreVariant::Sharded(r) => r.get_tensor(name),
+        }
+    }
+
+    /// Decode a value range, touching only the covering chunks.
+    pub fn get_range(&self, name: &str, range: Range<u64>) -> Result<Vec<u32>> {
+        match self {
+            StoreVariant::Single(r) => r.get_range(name, range),
+            StoreVariant::Sharded(r) => r.get_range(name, range),
+        }
+    }
+
+    /// Warm the chunk cache with one chunk ahead of demand (the serving
+    /// layer's hot-set prefetcher drives this; see
+    /// [`StoreReader::prefetch_chunk`]). Returns whether a decode happened.
+    pub fn prefetch_chunk(&self, name: &str, ci: usize) -> Result<bool> {
+        match self {
+            StoreVariant::Single(r) => r.prefetch_chunk(name, ci),
+            StoreVariant::Sharded(r) => r.prefetch_chunk(name, ci),
+        }
+    }
+
+    /// Snapshot the cumulative read counters (sharded: aggregated).
+    pub fn stats(&self) -> ReadStats {
+        match self {
+            StoreVariant::Single(r) => r.stats(),
+            StoreVariant::Sharded(r) => r.stats(),
+        }
+    }
+
+    /// `store.*` metrics snapshot (sharded: merged across shards).
+    pub fn registry_snapshot(&self) -> crate::obs::RegistrySnapshot {
+        match self {
+            StoreVariant::Single(r) => r.registry_snapshot(),
+            StoreVariant::Sharded(r) => r.registry_snapshot(),
+        }
+    }
+
+    /// Per-chunk access heat (sharded: concatenated across shards),
+    /// sorted `(tensor, chunk)` — see [`super::heat`].
+    pub fn heatmap(&self) -> Vec<super::heat::ChunkHeatEntry> {
+        match self {
+            StoreVariant::Single(r) => r.heatmap(),
+            StoreVariant::Sharded(r) => r.heatmap(),
+        }
+    }
+
+    /// Pin the arithmetic-decode kernel (sharded: every shard).
+    pub fn set_decode_kernel(&self, kernel: crate::apack::simd::DecodeKernel) {
+        match self {
+            StoreVariant::Single(r) => r.set_decode_kernel(kernel),
+            StoreVariant::Sharded(r) => r.set_decode_kernel(kernel),
+        }
+    }
+
+    /// The decode kernel chunk decodes run with.
+    pub fn decode_kernel(&self) -> crate::apack::simd::DecodeKernel {
+        match self {
+            StoreVariant::Single(r) => r.decode_kernel(),
+            StoreVariant::Sharded(r) => r.decode_kernel(),
+        }
+    }
+
+    /// Worker-thread count for lane-parallel chunk-body-v2 decodes
+    /// (0/1 = single-threaded; sharded: every shard).
+    pub fn set_lane_threads(&self, threads: usize) {
+        match self {
+            StoreVariant::Single(r) => r.set_lane_threads(threads),
+            StoreVariant::Sharded(r) => r.set_lane_threads(threads),
+        }
+    }
+
+    /// Zero the read counters.
+    pub fn reset_stats(&self) {
+        match self {
+            StoreVariant::Single(r) => r.reset_stats(),
+            StoreVariant::Sharded(r) => r.reset_stats(),
+        }
+    }
+
+    /// Drop all cached chunks.
+    pub fn clear_cache(&self) {
+        match self {
+            StoreVariant::Single(r) => r.clear_cache(),
+            StoreVariant::Sharded(r) => r.clear_cache(),
+        }
+    }
+
+    /// Integrity pass, bail-on-first (see [`Self::verify_report`] for the
+    /// classified non-bailing sweep).
+    pub fn verify(&self) -> Result<VerifyReport> {
+        match self {
+            StoreVariant::Single(r) => r.verify(),
+            StoreVariant::Sharded(r) => r.verify(),
+        }
+    }
+
+    /// Classified, non-bailing integrity sweep (DESIGN.md §14): every
+    /// chunk is re-read, CRC-checked and decoded; each failure becomes a
+    /// [`super::verify::VerifyIssue`] and the sweep continues.
+    pub fn verify_report(&self) -> VerifyReport {
+        match self {
+            StoreVariant::Single(r) => r.verify_report(),
+            StoreVariant::Sharded(r) => r.verify_report(),
+        }
+    }
+
+    /// The committed generation (sharded: the max across shards).
+    pub fn generation(&self) -> u32 {
+        match self {
+            StoreVariant::Single(r) => r.generation(),
+            StoreVariant::Sharded(r) => {
+                r.shard_readers().iter().map(|s| s.generation()).max().unwrap_or(0)
+            }
+        }
+    }
+}
+
+/// A read handle on an APackStore: single file or sharded directory,
+/// swappable to a newer generation while being served (module doc).
+pub struct StoreHandle {
+    path: PathBuf,
+    backend: Backend,
+    cache_values: usize,
+    plan: Option<FaultPlan>,
+    inner: RwLock<Arc<StoreVariant>>,
+    /// Explicitly-set decode kernel / lane threads, re-applied to every
+    /// snapshot [`Self::reload`] opens.
+    kernel: Mutex<Option<crate::apack::simd::DecodeKernel>>,
+    lane_threads: Mutex<Option<usize>>,
 }
 
 impl StoreHandle {
@@ -36,174 +243,209 @@ impl StoreHandle {
     /// Open with an explicit backend and cache budget (in values; a
     /// sharded store splits the budget across shards).
     pub fn open_with(path: &Path, backend: Backend, cache_values: usize) -> Result<Self> {
+        Self::open_with_plan(path, backend, cache_values, None)
+    }
+
+    /// [`Self::open_with`] with a [`FaultPlan`] wrapping all chunk IO —
+    /// the fault-injection entry point ([`super::io`]). The plan carries
+    /// over reloads and online compactions.
+    pub fn open_with_plan(
+        path: &Path,
+        backend: Backend,
+        cache_values: usize,
+        plan: Option<&FaultPlan>,
+    ) -> Result<Self> {
+        let variant = Self::open_variant(path, backend, cache_values, plan)?;
+        Ok(Self {
+            path: path.to_path_buf(),
+            backend,
+            cache_values,
+            plan: plan.cloned(),
+            inner: RwLock::new(Arc::new(variant)),
+            kernel: Mutex::new(None),
+            lane_threads: Mutex::new(None),
+        })
+    }
+
+    fn open_variant(
+        path: &Path,
+        backend: Backend,
+        cache_values: usize,
+        plan: Option<&FaultPlan>,
+    ) -> Result<StoreVariant> {
         if path.is_dir() {
-            Ok(StoreHandle::Sharded(ShardedStoreReader::open_with(
+            Ok(StoreVariant::Sharded(ShardedStoreReader::open_opts(
                 path,
                 backend,
                 cache_values,
+                plan,
             )?))
         } else {
-            Ok(StoreHandle::Single(StoreReader::open_with(path, backend, cache_values)?))
+            Ok(StoreVariant::Single(StoreReader::open_opts(
+                path,
+                backend,
+                cache_values,
+                plan,
+            )?))
         }
+    }
+
+    /// Pin the current generation snapshot. The returned `Arc` keeps this
+    /// exact generation (reader, cache, mmap/fd) alive and consistent no
+    /// matter how many [`Self::reload`]/[`Self::compact_live`] swaps
+    /// happen; drop it to release the superseded generation.
+    pub fn pin(&self) -> Arc<StoreVariant> {
+        self.inner.read().unwrap().clone()
+    }
+
+    /// Whether the store is a sharded directory.
+    pub fn is_sharded(&self) -> bool {
+        matches!(*self.pin(), StoreVariant::Sharded(_))
+    }
+
+    /// Re-open the store from disk and swap the snapshot to the newest
+    /// committed generation (after an external append committed). In-flight
+    /// pinned readers are undisturbed; new calls see the new generation.
+    pub fn reload(&self) -> Result<()> {
+        let variant =
+            Self::open_variant(&self.path, self.backend, self.cache_values, self.plan.as_ref())?;
+        if let Some(k) = *self.kernel.lock().unwrap() {
+            variant.set_decode_kernel(k);
+        }
+        if let Some(t) = *self.lane_threads.lock().unwrap() {
+            variant.set_lane_threads(t);
+        }
+        *self.inner.write().unwrap() = Arc::new(variant);
+        Ok(())
+    }
+
+    /// Compact the store **while serving**: rewrite the committed
+    /// generation on disk ([`compact_store`] / [`compact_sharded_store`] —
+    /// crash-safe at every boundary), then swap the snapshot. Readers
+    /// pinned before the swap keep decoding the old inode bit-exactly
+    /// until they drop; the swap itself is one pointer flip.
+    pub fn compact_live(&self) -> Result<CompactSummary> {
+        let summary = if self.path.is_dir() {
+            compact_sharded_store(&self.path, self.plan.as_ref())?
+        } else {
+            compact_store(&self.path, self.plan.as_ref())?
+        };
+        self.reload()?;
+        Ok(summary)
     }
 
     /// The IO backend serving this store.
     pub fn backend(&self) -> Backend {
-        match self {
-            StoreHandle::Single(r) => r.backend(),
-            StoreHandle::Sharded(r) => r.backend(),
-        }
+        self.pin().backend()
     }
 
     /// Number of shard files (1 for a single-file store).
     pub fn shard_count(&self) -> usize {
-        match self {
-            StoreHandle::Single(_) => 1,
-            StoreHandle::Sharded(r) => r.shard_count(),
-        }
+        self.pin().shard_count()
     }
 
     /// All tensor names (write order; sharded: shard order first).
-    pub fn tensor_names(&self) -> Vec<&str> {
-        match self {
-            StoreHandle::Single(r) => r.tensor_names(),
-            StoreHandle::Sharded(r) => r.tensor_names(),
-        }
+    pub fn tensor_names(&self) -> Vec<String> {
+        self.pin().tensor_names().into_iter().map(str::to_string).collect()
     }
 
     /// Number of tensors in the store.
     pub fn tensor_count(&self) -> usize {
-        match self {
-            StoreHandle::Single(r) => r.tensor_count(),
-            StoreHandle::Sharded(r) => r.tensor_count(),
-        }
+        self.pin().tensor_count()
     }
 
     /// Every tensor's footer entry (same order as [`Self::tensor_names`]).
-    pub fn tensor_metas(&self) -> Vec<&TensorMeta> {
-        match self {
-            StoreHandle::Single(r) => r.index().tensors.iter().collect(),
-            StoreHandle::Sharded(r) => r.tensor_metas(),
-        }
+    pub fn tensor_metas(&self) -> Vec<TensorMeta> {
+        self.pin().tensor_metas().into_iter().cloned().collect()
     }
 
-    /// Metadata for one tensor.
-    pub fn meta(&self, name: &str) -> Result<&TensorMeta> {
-        match self {
-            StoreHandle::Single(r) => r.meta(name),
-            StoreHandle::Sharded(r) => r.meta(name),
-        }
+    /// Metadata for one tensor (owned — for borrowed access across one
+    /// consistent generation, use [`Self::pin`]).
+    pub fn meta(&self, name: &str) -> Result<TensorMeta> {
+        self.pin().meta(name).cloned()
+    }
+
+    /// The committed generation (sharded: the max across shards).
+    pub fn generation(&self) -> u32 {
+        self.pin().generation()
     }
 
     /// Decode one chunk (CRC-checked; cache-assisted).
     pub fn get_chunk(&self, name: &str, ci: usize) -> Result<Arc<Vec<u32>>> {
-        match self {
-            StoreHandle::Single(r) => r.get_chunk(name, ci),
-            StoreHandle::Sharded(r) => r.get_chunk(name, ci),
-        }
+        self.pin().get_chunk(name, ci)
     }
 
     /// Decode a full tensor, chunks in parallel.
     pub fn get_tensor(&self, name: &str) -> Result<Vec<u32>> {
-        match self {
-            StoreHandle::Single(r) => r.get_tensor(name),
-            StoreHandle::Sharded(r) => r.get_tensor(name),
-        }
+        self.pin().get_tensor(name)
     }
 
     /// Decode a value range, touching only the covering chunks.
     pub fn get_range(&self, name: &str, range: Range<u64>) -> Result<Vec<u32>> {
-        match self {
-            StoreHandle::Single(r) => r.get_range(name, range),
-            StoreHandle::Sharded(r) => r.get_range(name, range),
-        }
+        self.pin().get_range(name, range)
     }
 
-    /// Warm the chunk cache with one chunk ahead of demand (the serving
-    /// layer's hot-set prefetcher drives this; see
-    /// [`StoreReader::prefetch_chunk`]). Returns whether a decode happened.
+    /// Warm the chunk cache with one chunk ahead of demand.
     pub fn prefetch_chunk(&self, name: &str, ci: usize) -> Result<bool> {
-        match self {
-            StoreHandle::Single(r) => r.prefetch_chunk(name, ci),
-            StoreHandle::Sharded(r) => r.prefetch_chunk(name, ci),
-        }
+        self.pin().prefetch_chunk(name, ci)
     }
 
     /// Snapshot the cumulative read counters (sharded: aggregated).
     pub fn stats(&self) -> ReadStats {
-        match self {
-            StoreHandle::Single(r) => r.stats(),
-            StoreHandle::Sharded(r) => r.stats(),
-        }
+        self.pin().stats()
     }
 
     /// `store.*` metrics snapshot (sharded: merged across shards). The
     /// serving engine folds this into its own `serving.*` snapshot so
     /// exporters see one namespace.
     pub fn registry_snapshot(&self) -> crate::obs::RegistrySnapshot {
-        match self {
-            StoreHandle::Single(r) => r.registry_snapshot(),
-            StoreHandle::Sharded(r) => r.registry_snapshot(),
-        }
+        self.pin().registry_snapshot()
     }
 
-    /// Per-chunk access heat (sharded: concatenated across shards),
-    /// sorted `(tensor, chunk)` — see [`super::heat`].
+    /// Per-chunk access heat (sharded: concatenated across shards).
     pub fn heatmap(&self) -> Vec<super::heat::ChunkHeatEntry> {
-        match self {
-            StoreHandle::Single(r) => r.heatmap(),
-            StoreHandle::Sharded(r) => r.heatmap(),
-        }
+        self.pin().heatmap()
     }
 
-    /// Pin the arithmetic-decode kernel (sharded: every shard).
+    /// Pin the arithmetic-decode kernel (sharded: every shard);
+    /// remembered across [`Self::reload`] swaps.
     pub fn set_decode_kernel(&self, kernel: crate::apack::simd::DecodeKernel) {
-        match self {
-            StoreHandle::Single(r) => r.set_decode_kernel(kernel),
-            StoreHandle::Sharded(r) => r.set_decode_kernel(kernel),
-        }
+        *self.kernel.lock().unwrap() = Some(kernel);
+        self.pin().set_decode_kernel(kernel);
     }
 
     /// The decode kernel chunk decodes run with.
     pub fn decode_kernel(&self) -> crate::apack::simd::DecodeKernel {
-        match self {
-            StoreHandle::Single(r) => r.decode_kernel(),
-            StoreHandle::Sharded(r) => r.decode_kernel(),
-        }
+        self.pin().decode_kernel()
     }
 
-    /// Worker-thread count for lane-parallel chunk-body-v2 decodes
-    /// (0/1 = single-threaded; sharded: every shard).
+    /// Worker-thread count for lane-parallel chunk-body-v2 decodes;
+    /// remembered across [`Self::reload`] swaps.
     pub fn set_lane_threads(&self, threads: usize) {
-        match self {
-            StoreHandle::Single(r) => r.set_lane_threads(threads),
-            StoreHandle::Sharded(r) => r.set_lane_threads(threads),
-        }
+        *self.lane_threads.lock().unwrap() = Some(threads);
+        self.pin().set_lane_threads(threads);
     }
 
     /// Zero the read counters.
     pub fn reset_stats(&self) {
-        match self {
-            StoreHandle::Single(r) => r.reset_stats(),
-            StoreHandle::Sharded(r) => r.reset_stats(),
-        }
+        self.pin().reset_stats()
     }
 
     /// Drop all cached chunks.
     pub fn clear_cache(&self) {
-        match self {
-            StoreHandle::Single(r) => r.clear_cache(),
-            StoreHandle::Sharded(r) => r.clear_cache(),
-        }
+        self.pin().clear_cache()
     }
 
     /// Integrity pass: re-read, CRC-check and decode every chunk (sharded:
-    /// shards verify in parallel, chunks fan out within each).
+    /// shards verify in parallel, chunks fan out within each). Bails on
+    /// the first failure; [`Self::verify_report`] classifies them all.
     pub fn verify(&self) -> Result<VerifyReport> {
-        match self {
-            StoreHandle::Single(r) => r.verify(),
-            StoreHandle::Sharded(r) => r.verify(),
-        }
+        self.pin().verify()
+    }
+
+    /// Classified, non-bailing integrity sweep (DESIGN.md §14).
+    pub fn verify_report(&self) -> VerifyReport {
+        self.pin().verify_report()
     }
 }
 
@@ -213,7 +455,9 @@ mod tests {
     use crate::apack::tablegen::TensorKind;
     use crate::coordinator::PartitionPolicy;
     use crate::models::distributions::ValueProfile;
-    use crate::store::{ShardedStoreWriter, StoreWriter};
+    use crate::store::live::StoreAppender;
+    use crate::store::writer::encode_tensor_with;
+    use crate::store::{BodyConfig, ShardedStoreWriter, StoreWriter};
 
     fn tensor(n: usize, seed: u64) -> Vec<u32> {
         ValueProfile::ReluActivation { sparsity: 0.5, q: 0.93, noise_floor: 0.01 }
@@ -238,8 +482,8 @@ mod tests {
 
         let single = StoreHandle::open(&file_path).unwrap();
         let sharded = StoreHandle::open(&dir_path).unwrap();
-        assert!(matches!(single, StoreHandle::Single(_)));
-        assert!(matches!(sharded, StoreHandle::Sharded(_)));
+        assert!(!single.is_sharded());
+        assert!(sharded.is_sharded());
         assert_eq!(single.shard_count(), 1);
         assert_eq!(sharded.shard_count(), 2);
         assert_eq!(single.tensor_count(), 1);
@@ -260,5 +504,57 @@ mod tests {
 
         std::fs::remove_file(&file_path).ok();
         std::fs::remove_dir_all(&dir_path).ok();
+    }
+
+    #[test]
+    fn pinned_snapshot_survives_reload_and_live_compaction() {
+        let path = std::env::temp_dir()
+            .join(format!("apack_handle_live_{}.apackstore", std::process::id()));
+        let policy = PartitionPolicy { substreams: 4, min_per_stream: 128 };
+        let v0 = tensor(4000, 6);
+        let v1 = tensor(4000, 7);
+        let mut w = StoreWriter::create(&path, policy).unwrap();
+        w.add_tensor("t", 8, &v0, TensorKind::Weights).unwrap();
+        w.finish().unwrap();
+
+        let handle = StoreHandle::open(&path).unwrap();
+        assert_eq!(handle.generation(), 0);
+        let pinned = handle.pin();
+
+        // Commit a replacement externally; the handle serves the pinned
+        // generation until reload.
+        let t = encode_tensor_with(
+            &policy,
+            BodyConfig::default(),
+            "t",
+            8,
+            &v1,
+            TensorKind::Weights,
+            None,
+            0,
+        )
+        .unwrap();
+        let mut app = StoreAppender::open(&path).unwrap();
+        app.append_encoded(t).unwrap();
+        app.commit().unwrap();
+        assert_eq!(handle.get_tensor("t").unwrap(), v0);
+
+        handle.reload().unwrap();
+        assert_eq!(handle.generation(), 1);
+        assert_eq!(handle.get_tensor("t").unwrap(), v1);
+        // The pinned snapshot still decodes the old generation bit-exactly.
+        assert_eq!(pinned.get_tensor("t").unwrap(), v0);
+
+        // Online compaction: swap to the rewritten file; the pin still
+        // reads the replaced inode.
+        let summary = handle.compact_live().unwrap();
+        assert!(summary.reclaimed() > 0);
+        assert_eq!(handle.generation(), 2);
+        assert_eq!(handle.get_tensor("t").unwrap(), v1);
+        assert_eq!(pinned.get_tensor("t").unwrap(), v0);
+        handle.verify().unwrap();
+
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(crate::store::format::gen_pointer_path(&path)).ok();
     }
 }

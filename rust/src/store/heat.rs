@@ -46,6 +46,10 @@ struct Cell {
     demand_misses: u64,
     prefetches: u64,
     decode_nanos: u64,
+    /// Set when the chunk failed a non-transient read/decode (DESIGN.md
+    /// §14): the error still propagated, but the heatmap remembers
+    /// *which* chunk is damaged.
+    quarantined: bool,
 }
 
 /// Sharded `(tensor index, chunk index) → counters` map.
@@ -94,6 +98,12 @@ impl HeatMap {
         self.with_cell(ti, ci, |c| c.decode_nanos += nanos);
     }
 
+    /// Flag a chunk as quarantined after a non-transient read/decode
+    /// failure (sticky — corruption does not heal on its own).
+    pub fn quarantine(&self, ti: u32, ci: u32) {
+        self.with_cell(ti, ci, |c| c.quarantined = true);
+    }
+
     fn snapshot(&self) -> Vec<((u32, u32), Cell)> {
         let mut out = Vec::new();
         for shard in &self.shards {
@@ -123,6 +133,7 @@ impl HeatMap {
                     demand_misses: c.demand_misses,
                     prefetches: c.prefetches,
                     decode_nanos: c.decode_nanos,
+                    quarantined: c.quarantined,
                 })
             })
             .collect();
@@ -150,6 +161,8 @@ pub struct ChunkHeatEntry {
     pub prefetches: u64,
     /// Summed decode wall time (all decode paths).
     pub decode_nanos: u64,
+    /// The chunk failed a non-transient read/decode at least once.
+    pub quarantined: bool,
 }
 
 impl ChunkHeatEntry {
@@ -251,12 +264,23 @@ pub fn render_top_chunks(entries: &[ChunkHeatEntry], k: usize) -> String {
                 e.demand_misses.to_string(),
                 e.prefetches.to_string(),
                 format!("{:.3}", e.decode_nanos as f64 / 1e6),
+                if e.quarantined { "yes".to_string() } else { "-".to_string() },
             ]
         })
         .collect();
     crate::eval::render_table(
         &format!("hottest chunks (top {})", rows.len()),
-        &["tensor", "chunk", "body", "lanes", "hits", "misses", "prefetches", "decode ms"],
+        &[
+            "tensor",
+            "chunk",
+            "body",
+            "lanes",
+            "hits",
+            "misses",
+            "prefetches",
+            "decode ms",
+            "quarantined",
+        ],
         &rows,
     )
 }
@@ -309,6 +333,7 @@ pub fn heatmap_json(store: &str, entries: &[ChunkHeatEntry]) -> Json {
         m.insert("demand_misses".to_string(), Json::Num(e.demand_misses as f64));
         m.insert("prefetches".to_string(), Json::Num(e.prefetches as f64));
         m.insert("decode_nanos".to_string(), Json::Num(e.decode_nanos as f64));
+        m.insert("quarantined".to_string(), Json::Bool(e.quarantined));
         Json::Obj(m)
     };
     let tensors = summaries
@@ -372,6 +397,18 @@ pub fn heatmap_prometheus_text(entries: &[ChunkHeatEntry]) -> String {
                 value(e),
             ));
         }
+    }
+    // Quarantine flag (0/1) — a gauge, not a counter: it marks current
+    // damage, it does not accumulate.
+    let n = prom_metric_name("store_chunk_quarantined");
+    out.push_str(&format!("# TYPE {n} gauge\n"));
+    for e in entries {
+        out.push_str(&format!(
+            "{n}{{tensor=\"{}\",chunk=\"{}\"}} {}\n",
+            prom_label_value(&e.tensor),
+            e.chunk,
+            u64::from(e.quarantined),
+        ));
     }
     out
 }
@@ -454,6 +491,27 @@ mod tests {
             assert!(head.ends_with('}'), "unterminated labels in {line:?}");
         }
         assert!(text.contains("tensor=\"foo{bar=\\\"baz\\n\\\"}\""));
+    }
+
+    #[test]
+    fn quarantine_flag_is_sticky_and_exported() {
+        let heat = HeatMap::new();
+        heat.demand_miss(0, 2);
+        heat.quarantine(0, 2);
+        heat.quarantine(0, 2); // idempotent
+        heat.demand_hit(0, 0);
+        let entries = heat.entries(resolve);
+        let bad = entries.iter().find(|e| e.chunk == 2).unwrap();
+        assert!(bad.quarantined);
+        let ok = entries.iter().find(|e| e.chunk == 0).unwrap();
+        assert!(!ok.quarantined);
+        let table = render_top_chunks(&entries, 10);
+        assert!(table.contains("quarantined"));
+        let prom = heatmap_prometheus_text(&entries);
+        assert!(prom.contains("store_chunk_quarantined{tensor=\"alpha\",chunk=\"2\"} 1"));
+        assert!(prom.contains("store_chunk_quarantined{tensor=\"alpha\",chunk=\"0\"} 0"));
+        let doc = heatmap_json("zoo.apackstore", &entries).to_string();
+        assert!(doc.contains("\"quarantined\":true"));
     }
 
     #[test]

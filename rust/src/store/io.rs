@@ -20,6 +20,13 @@
 //! Both backends count the bytes they serve in a per-backend
 //! [`ChunkSource::bytes_read`] counter, which the reader folds into
 //! [`super::ReadStats`] so mmap and file paths are directly comparable.
+//!
+//! For robustness testing, [`FaultPlan`] wraps any source with seeded,
+//! deterministic fault injection — transient read errors, short reads,
+//! latency spikes — and exposes a write/fsync *kill-point lattice*
+//! ([`FaultPlan::write_boundary`]) that the live-store appender and
+//! compactor thread their commit protocols through, so crash-matrix
+//! tests can sweep every interleaving (DESIGN.md §14).
 
 use std::fs::File;
 use std::path::Path;
@@ -365,6 +372,236 @@ impl ChunkSource for MmapSource {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Deterministic fault injection (DESIGN.md §14).
+// ---------------------------------------------------------------------------
+
+/// Seeded fault-injection parameters. Rates are per *operation* (each
+/// `read_at`, independently); the injector is fully deterministic given the
+/// seed, so a failing sweep replays exactly.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultConfig {
+    /// Seed for the injection RNG (xorshift64*).
+    pub seed: u64,
+    /// Probability an individual `read_at` fails with a transient error.
+    pub read_error_rate: f64,
+    /// Probability an individual `read_at` fails as a *short read* (some
+    /// bytes arrived, then the source gave up) — also transient.
+    pub short_read_rate: f64,
+    /// Probability an individual `read_at` sleeps [`Self::latency_spike_us`]
+    /// before succeeding (tail-latency injection; never an error).
+    pub latency_spike_rate: f64,
+    /// Injected latency-spike duration, microseconds.
+    pub latency_spike_us: u64,
+    /// Total error budget: once this many errors have been injected the
+    /// wrapper passes everything through (`u64::MAX` = unbounded). Lets
+    /// tests pin "fails exactly N times, then succeeds".
+    pub max_injected_errors: u64,
+    /// Kill-point: the index (0-based) of the write/fsync boundary at
+    /// which [`FaultPlan::write_boundary`] simulates a crash. `None`
+    /// disables the kill lattice.
+    pub kill_at: Option<u64>,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self {
+            seed: 0xFA_17,
+            read_error_rate: 0.0,
+            short_read_rate: 0.0,
+            latency_spike_rate: 0.0,
+            latency_spike_us: 200,
+            max_injected_errors: u64::MAX,
+            kill_at: None,
+        }
+    }
+}
+
+struct FaultState {
+    config: FaultConfig,
+    rng: AtomicU64,
+    injected: AtomicU64,
+    reads: AtomicU64,
+    boundaries: AtomicU64,
+    killed: std::sync::atomic::AtomicBool,
+}
+
+/// A shared, deterministic fault plan driving both the read path (wrap a
+/// [`ChunkSource`] with [`FaultPlan::wrap`]) and the write path (the live
+/// appender / compactor calls [`FaultPlan::write_boundary`] before every
+/// write/fsync/rename so a kill-point lattice can sweep *every* crash
+/// interleaving). Clones share one state, so a single plan can meter a
+/// whole sharded store.
+#[derive(Clone)]
+pub struct FaultPlan {
+    inner: std::sync::Arc<FaultState>,
+}
+
+impl FaultPlan {
+    pub fn new(config: FaultConfig) -> Self {
+        Self {
+            inner: std::sync::Arc::new(FaultState {
+                config,
+                // xorshift64* cannot leave state 0.
+                rng: AtomicU64::new(config.seed | 1),
+                injected: AtomicU64::new(0),
+                reads: AtomicU64::new(0),
+                boundaries: AtomicU64::new(0),
+                killed: std::sync::atomic::AtomicBool::new(false),
+            }),
+        }
+    }
+
+    /// Wrap a source so its reads flow through this plan.
+    pub fn wrap(&self, inner: Box<dyn ChunkSource>) -> Box<dyn ChunkSource> {
+        Box::new(FaultyChunkSource { inner, plan: self.clone() })
+    }
+
+    /// Deterministic uniform draw in [0, 1).
+    fn draw(&self) -> f64 {
+        let mut x = self.inner.rng.load(Ordering::Relaxed);
+        loop {
+            let mut y = x;
+            y ^= y << 13;
+            y ^= y >> 7;
+            y ^= y << 17;
+            match self.inner.rng.compare_exchange_weak(
+                x,
+                y,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    return (y.wrapping_mul(0x2545_F491_4F6C_DD1D) >> 11) as f64
+                        / (1u64 << 53) as f64
+                }
+                Err(now) => x = now,
+            }
+        }
+    }
+
+    /// Deterministic Bernoulli draw with probability `rate` (no budget).
+    fn should_fire(&self, rate: f64) -> bool {
+        rate > 0.0 && self.draw() < rate
+    }
+
+    /// Should an error fire for an event with probability `rate`? Counts
+    /// against the error budget when it does.
+    fn should_inject(&self, rate: f64) -> bool {
+        if !self.should_fire(rate) {
+            return false;
+        }
+        let budget = self.inner.config.max_injected_errors;
+        // Reserve a slot in the budget; back off if it is exhausted.
+        let prev = self.inner.injected.fetch_add(1, Ordering::Relaxed);
+        if prev >= budget {
+            self.inner.injected.fetch_sub(1, Ordering::Relaxed);
+            return false;
+        }
+        true
+    }
+
+    /// Errors injected so far.
+    pub fn injected_errors(&self) -> u64 {
+        self.inner.injected.load(Ordering::Relaxed)
+    }
+
+    /// `read_at` calls observed so far.
+    pub fn reads(&self) -> u64 {
+        self.inner.reads.load(Ordering::Relaxed)
+    }
+
+    /// Announce a write/fsync/rename boundary named `op` (e.g.
+    /// `"commit.footer"`). Returns an error — simulating the process dying
+    /// *before* the operation — iff the boundary counter has reached the
+    /// configured kill-point; every later boundary also fails, so a killed
+    /// writer cannot keep mutating the store.
+    pub fn write_boundary(&self, op: &str) -> Result<()> {
+        if self.inner.killed.load(Ordering::Relaxed) {
+            return Err(Error::Io(format!("injected crash (already killed) at {op}")));
+        }
+        let idx = self.inner.boundaries.fetch_add(1, Ordering::Relaxed);
+        if Some(idx) == self.inner.config.kill_at {
+            self.inner.killed.store(true, Ordering::Relaxed);
+            return Err(Error::Io(format!("injected crash at boundary {idx} ({op})")));
+        }
+        Ok(())
+    }
+
+    /// True once the kill-point fired (the lattice sweep's termination
+    /// test: a run whose kill-point was never reached is the final one).
+    pub fn kill_fired(&self) -> bool {
+        self.inner.killed.load(Ordering::Relaxed)
+    }
+
+    /// Write/fsync boundaries announced so far.
+    pub fn boundaries_seen(&self) -> u64 {
+        self.inner.boundaries.load(Ordering::Relaxed)
+    }
+}
+
+impl std::fmt::Debug for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FaultPlan")
+            .field("config", &self.inner.config)
+            .field("injected", &self.injected_errors())
+            .field("reads", &self.reads())
+            .field("boundaries", &self.boundaries_seen())
+            .finish()
+    }
+}
+
+/// A [`ChunkSource`] wrapper injecting the plan's read faults. Serves no
+/// zero-copy slices — every read goes through the fallible `read_at`, so
+/// mmap-backed stores see injected faults too.
+struct FaultyChunkSource {
+    inner: Box<dyn ChunkSource>,
+    plan: FaultPlan,
+}
+
+impl ChunkSource for FaultyChunkSource {
+    fn len(&self) -> u64 {
+        self.inner.len()
+    }
+
+    fn backend(&self) -> Backend {
+        self.inner.backend()
+    }
+
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<()> {
+        let cfg = &self.plan.inner.config;
+        self.plan.inner.reads.fetch_add(1, Ordering::Relaxed);
+        if cfg.latency_spike_us > 0 && self.plan.should_fire(cfg.latency_spike_rate) {
+            std::thread::sleep(std::time::Duration::from_micros(cfg.latency_spike_us));
+        }
+        if self.plan.should_inject(cfg.read_error_rate) {
+            return Err(Error::Transient(format!(
+                "injected read error at offset {offset}"
+            )));
+        }
+        if self.plan.should_inject(cfg.short_read_rate) {
+            let got = buf.len() / 2;
+            return Err(Error::Transient(format!(
+                "injected short read: {got} of {} bytes at offset {offset}",
+                buf.len()
+            )));
+        }
+        self.inner.read_at(offset, buf)
+    }
+
+    fn slice_at(&self, _offset: u64, _len: usize) -> Option<&[u8]> {
+        None
+    }
+
+    fn bytes_read(&self) -> u64 {
+        self.inner.bytes_read()
+    }
+
+    fn reset_bytes_read(&self) {
+        self.inner.reset_bytes_read();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -485,6 +722,78 @@ mod tests {
             assert_eq!(src.bytes_read(), 8 * 200 * 32);
         }
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn fault_plan_injects_deterministically_and_respects_budget() {
+        let data = payload();
+        let path = temp_file("faulty", &data);
+        for backend in [Backend::Mmap, Backend::File] {
+            // rate 1.0 with a budget of 3: exactly three transient
+            // failures, then clean pass-through.
+            let plan = FaultPlan::new(FaultConfig {
+                seed: 42,
+                read_error_rate: 1.0,
+                max_injected_errors: 3,
+                ..FaultConfig::default()
+            });
+            let src = plan.wrap(backend.open(&path).unwrap());
+            let mut buf = [0u8; 16];
+            for i in 0..3 {
+                let err = src.read_at(0, &mut buf).unwrap_err();
+                assert!(err.is_transient(), "{backend:?} attempt {i}: {err}");
+            }
+            src.read_at(0, &mut buf).unwrap();
+            assert_eq!(&buf[..], &data[..16], "{backend:?}");
+            assert_eq!(plan.injected_errors(), 3);
+            assert_eq!(plan.reads(), 4);
+            // The wrapper must force even mmap through fallible reads.
+            assert!(src.slice_at(0, 16).is_none(), "{backend:?}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn fault_plan_short_reads_are_transient() {
+        let data = payload();
+        let path = temp_file("short", &data);
+        let plan = FaultPlan::new(FaultConfig {
+            short_read_rate: 1.0,
+            max_injected_errors: 1,
+            ..FaultConfig::default()
+        });
+        let src = plan.wrap(Backend::File.open(&path).unwrap());
+        let mut buf = [0u8; 32];
+        match src.read_at(0, &mut buf) {
+            Err(Error::Transient(msg)) => {
+                assert!(msg.contains("short read"), "{msg}")
+            }
+            other => panic!("expected transient short read, got {other:?}"),
+        }
+        src.read_at(0, &mut buf).unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn kill_point_lattice_fires_once_and_stays_dead() {
+        let plan = FaultPlan::new(FaultConfig { kill_at: Some(2), ..FaultConfig::default() });
+        assert!(plan.write_boundary("a").is_ok());
+        assert!(plan.write_boundary("b").is_ok());
+        assert!(!plan.kill_fired());
+        assert!(plan.write_boundary("c").is_err(), "boundary 2 is the kill-point");
+        assert!(plan.kill_fired());
+        // Every boundary after the kill also fails: a dead process
+        // cannot keep writing.
+        assert!(plan.write_boundary("d").is_err());
+        assert_eq!(plan.boundaries_seen(), 3);
+
+        // No kill-point: everything passes, the counter still counts.
+        let free = FaultPlan::new(FaultConfig::default());
+        for op in ["w", "x", "y"] {
+            free.write_boundary(op).unwrap();
+        }
+        assert_eq!(free.boundaries_seen(), 3);
+        assert!(!free.kill_fired());
     }
 
     #[test]

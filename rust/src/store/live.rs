@@ -1,0 +1,1050 @@
+//! Live stores: crash-safe mutation of sealed stores (DESIGN.md §14).
+//!
+//! A classic store is write-once: [`super::writer::StoreWriter`] seals it
+//! and nothing ever changes. This module makes the store *mutable without
+//! ever being unopenable*: new tensor versions and tombstones are
+//! committed as atomically-flipped footer **generations**, and
+//! [`compact_store`] / [`compact_sharded_store`] rewrite only the live
+//! generation to reclaim superseded bytes.
+//!
+//! # Commit protocol (single file)
+//!
+//! ```text
+//! 1. ensure pointer   <store>.gen names the committed generation
+//!                     (written tmp + fsync + rename BEFORE any data
+//!                     write, so a mid-append classic EOF open is never
+//!                     needed — the pointer always wins)
+//! 2. append bytes     chunk blobs past the committed tail (positioned
+//!                     writes; a torn tail here is invisible: the pointer
+//!                     still names the old trailer)
+//! 3. seal             GenRecord | footer | trailer, truncate to the new
+//!                     committed length, fsync the data file
+//! 4. flip             <store>.gen.tmp (write + fsync) renamed over
+//!                     <store>.gen — THE commit point
+//! ```
+//!
+//! A crash at *any* boundary leaves the previous committed generation the
+//! winner on reopen; every boundary is enumerated through
+//! [`FaultPlan::write_boundary`] so the crash-matrix tests can kill each
+//! one in turn. Sharded stores use the MANIFEST as the pointer: each
+//! dirty shard seals (steps 2–3), then one atomic v2 MANIFEST write
+//! commits them all.
+//!
+//! # Compaction
+//!
+//! Compaction rewrites the committed generation's chunk bytes *verbatim*
+//! (same CRCs, re-based offsets — never a re-encode) into
+//! `<store>.compact.tmp`, seals it as a fresh generation with no in-file
+//! parent, then: truncates the source to its committed length (so the
+//! classic EOF open agrees with the pointer), removes the pointer, and
+//! renames the compacted file into place. Each step preserves
+//! openability: before the rename the old file opens (pointer or classic
+//! EOF, same generation); after it the compacted file opens classic.
+//! [`super::handle::StoreHandle::compact_live`] runs this while serving —
+//! pinned readers keep the old inode alive until they drop.
+
+use std::fs::File;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::PartitionPolicy;
+use crate::error::{Error, Result};
+use crate::models::zoo::ModelConfig;
+
+use super::format::{
+    crc32, gen_pointer_path, trailer_bytes, ChunkMeta, GenPointer, GenRecord, StoreFormat,
+    StoreIndex, TensorMeta, GEN_RECORD_BYTES, STORE_MAGIC, TRAILER_BYTES,
+};
+use super::io::{Backend, FaultPlan};
+use super::pipeline::{pack_zoo_into, PackOptions, TensorSink};
+use super::reader::StoreReader;
+use super::shard::{
+    shard_file_name, shard_for_name, write_manifest_atomic, ShardEntry, ShardManifest,
+    MANIFEST_FILE,
+};
+use super::writer::EncodedTensor;
+
+/// Positioned write (pwrite on unix); the appender never moves a shared
+/// file cursor, mirroring [`super::io::FileSource`]'s positioned reads.
+fn write_all_at(file: &File, offset: u64, buf: &[u8]) -> Result<()> {
+    #[cfg(unix)]
+    {
+        use std::os::unix::fs::FileExt;
+        file.write_all_at(buf, offset)?;
+    }
+    #[cfg(not(unix))]
+    {
+        use std::io::{Seek, SeekFrom, Write};
+        let mut f = file;
+        f.seek(SeekFrom::Start(offset))?;
+        f.write_all(buf)?;
+    }
+    Ok(())
+}
+
+/// Positioned read (pread on unix).
+fn read_exact_at(file: &File, offset: u64, buf: &mut [u8]) -> Result<()> {
+    #[cfg(unix)]
+    {
+        use std::os::unix::fs::FileExt;
+        file.read_exact_at(buf, offset)?;
+    }
+    #[cfg(not(unix))]
+    {
+        use std::io::{Read, Seek, SeekFrom};
+        let mut f = file;
+        f.seek(SeekFrom::Start(offset))?;
+        f.read_exact(buf)?;
+    }
+    Ok(())
+}
+
+fn boundary(plan: &Option<FaultPlan>, op: &str) -> Result<()> {
+    match plan {
+        Some(p) => p.write_boundary(op),
+        None => Ok(()),
+    }
+}
+
+/// What one committed append changed.
+#[derive(Debug, Clone, Copy)]
+pub struct AppendSummary {
+    /// The newly committed generation (max across shards for sharded
+    /// stores).
+    pub generation: u32,
+    /// Live tensors after the commit.
+    pub tensors: usize,
+    /// Tensors appended under a fresh name.
+    pub tensors_added: usize,
+    /// Tensors appended over an existing name (the old version stays
+    /// readable through its generation until compaction).
+    pub tensors_replaced: usize,
+    /// Tensors tombstoned out of the live index.
+    pub tombstoned: usize,
+    /// Chunk-blob bytes written by this append.
+    pub bytes_written: u64,
+    /// Committed store size after the flip (shard files + manifest for
+    /// sharded stores).
+    pub file_bytes: u64,
+}
+
+/// What one compaction reclaimed.
+#[derive(Debug, Clone, Copy)]
+pub struct CompactSummary {
+    /// Generation of the compacted store (parentless — the history chain
+    /// restarts here).
+    pub generation: u32,
+    pub tensors: usize,
+    pub chunks: usize,
+    /// Committed bytes before / after the rewrite.
+    pub bytes_before: u64,
+    pub bytes_after: u64,
+}
+
+impl CompactSummary {
+    /// Bytes the rewrite reclaimed.
+    pub fn reclaimed(&self) -> u64 {
+        self.bytes_before.saturating_sub(self.bytes_after)
+    }
+}
+
+/// One generation in a store's history chain (`store versions`).
+#[derive(Debug, Clone, Copy)]
+pub struct GenerationInfo {
+    /// Shard index for sharded stores; `None` for single files.
+    pub shard: Option<usize>,
+    pub generation: u32,
+    /// Absolute offset of this generation's trailer record.
+    pub trailer_offset: u64,
+    /// Live tensors in this generation.
+    pub tensors: u32,
+    /// File length when this generation was committed.
+    pub committed_len: u64,
+}
+
+/// Result of sealing one new generation into a data file (before the
+/// pointer/manifest flip that commits it).
+#[derive(Debug, Clone, Copy)]
+struct SealInfo {
+    generation: u32,
+    trailer_offset: u64,
+    committed_len: u64,
+    tensors: usize,
+}
+
+/// Appends a new footer generation to a sealed single-file store.
+///
+/// Opening takes a snapshot of the committed index; [`Self::append_encoded`]
+/// and [`Self::tombstone`] mutate the snapshot and stream chunk bytes past
+/// the committed tail; [`Self::commit`] seals the new generation and flips
+/// the `<store>.gen` pointer. Dropping without committing leaves the store
+/// exactly as opened — the torn tail is invisible behind the pointer.
+pub struct StoreAppender {
+    path: PathBuf,
+    file: File,
+    format: StoreFormat,
+    /// Committed generation this append builds on.
+    generation: u32,
+    /// Committed trailer offset (becomes the new generation's parent).
+    parent_trailer_offset: u64,
+    /// Next byte to write (starts at the committed file length).
+    write_pos: u64,
+    /// The live index this append is building.
+    tensors: Vec<TensorMeta>,
+    plan: Option<FaultPlan>,
+    added: usize,
+    replaced: usize,
+    tombstoned: usize,
+    bytes_written: u64,
+}
+
+impl StoreAppender {
+    /// Open a single-file store for appending.
+    pub fn open(path: &Path) -> Result<Self> {
+        Self::open_opts(path, None)
+    }
+
+    /// [`Self::open`] with a [`FaultPlan`] whose kill-point lattice covers
+    /// every write/fsync/rename boundary of the append path.
+    pub fn open_opts(path: &Path, plan: Option<&FaultPlan>) -> Result<Self> {
+        let mut a = Self::open_shard(path, None, plan)?;
+        // Make sure the pointer exists and is valid BEFORE any byte is
+        // appended: once data grows past the committed trailer, the
+        // classic exact-EOF open stops working, so the pointer must
+        // already name the committed generation.
+        let ptr_path = gen_pointer_path(path);
+        let have_valid = std::fs::read(&ptr_path)
+            .ok()
+            .is_some_and(|b| GenPointer::from_bytes(&b).is_ok());
+        if !have_valid {
+            let ptr = GenPointer {
+                generation: a.generation,
+                trailer_offset: a.parent_trailer_offset,
+                committed_len: a.parent_trailer_offset + TRAILER_BYTES as u64,
+            };
+            a.write_pointer(&ptr, "append.ptr_init_write", "append.ptr_init_sync",
+                "append.ptr_init_rename")?;
+        }
+        Ok(a)
+    }
+
+    /// Open one file of a store for appending *without* sidecar-pointer
+    /// management — the sharded appender's path, where the MANIFEST is the
+    /// pointer. `committed` forces the trailer offset (from the manifest);
+    /// `None` resolves it like [`StoreReader::open_with`].
+    fn open_shard(
+        path: &Path,
+        committed: Option<u64>,
+        plan: Option<&FaultPlan>,
+    ) -> Result<Self> {
+        let reader = match committed {
+            Some(at) => StoreReader::open_at(path, Backend::File, 0, at, plan)?,
+            None => StoreReader::open_opts(path, Backend::File, 0, plan)?,
+        };
+        let generation = reader.generation();
+        let parent_trailer_offset = reader.trailer_offset();
+        let tensors = reader.index().tensors.clone();
+        drop(reader);
+        let file = std::fs::OpenOptions::new().read(true).write(true).open(path)?;
+        let mut magic = [0u8; 8];
+        read_exact_at(&file, 0, &mut magic)?;
+        let format = StoreFormat::from_magic(&magic)?;
+        Ok(Self {
+            path: path.to_path_buf(),
+            file,
+            format,
+            generation,
+            parent_trailer_offset,
+            write_pos: parent_trailer_offset + TRAILER_BYTES as u64,
+            tensors,
+            plan: plan.cloned(),
+            added: 0,
+            replaced: 0,
+            tombstoned: 0,
+            bytes_written: 0,
+        })
+    }
+
+    /// The committed generation this append builds on.
+    pub fn generation(&self) -> u32 {
+        self.generation
+    }
+
+    /// Live tensors in the uncommitted index.
+    pub fn tensor_count(&self) -> usize {
+        self.tensors.len()
+    }
+
+    fn boundary(&self, op: &str) -> Result<()> {
+        boundary(&self.plan, op)
+    }
+
+    /// Append a pre-encoded tensor as the live version of its name. A
+    /// fresh name is an add; an existing name is a **replace** (the old
+    /// version stays readable through its own generation until
+    /// compaction). Bytes land past the committed tail via positioned
+    /// writes — nothing committed is ever touched.
+    pub fn append_encoded(&mut self, t: EncodedTensor) -> Result<()> {
+        if t.name.is_empty() || t.name.len() > u16::MAX as usize {
+            return Err(Error::Store(format!(
+                "tensor name length {} invalid",
+                t.name.len()
+            )));
+        }
+        if self.format == StoreFormat::V1 && t.body_version != 1 {
+            return Err(Error::Store(format!(
+                "tensor {:?} uses body v{}, but this APACKST1 file can only \
+                 describe v1 bodies",
+                t.name, t.body_version
+            )));
+        }
+        let mut metas = Vec::with_capacity(t.chunks.len());
+        for chunk in &t.chunks {
+            self.boundary("append.chunk")?;
+            write_all_at(&self.file, self.write_pos, &chunk.body)?;
+            metas.push(ChunkMeta {
+                offset: self.write_pos,
+                len: chunk.body.len() as u64,
+                n_values: chunk.n_values,
+                crc32: crc32(&chunk.body),
+            });
+            self.write_pos += chunk.body.len() as u64;
+            self.bytes_written += chunk.body.len() as u64;
+        }
+        if let Some(i) = self.tensors.iter().position(|m| m.name == t.name) {
+            self.tensors.remove(i);
+            self.replaced += 1;
+        } else {
+            self.added += 1;
+        }
+        self.tensors.push(TensorMeta {
+            name: t.name,
+            bits: t.table.bits(),
+            kind: t.kind,
+            n_values: t.n_values,
+            values_per_chunk: t.values_per_chunk,
+            body_version: t.body_version,
+            lanes: t.lanes,
+            table: t.table,
+            chunks: metas,
+        });
+        Ok(())
+    }
+
+    /// Remove a tensor from the live index. Returns whether the name was
+    /// present; its bytes are reclaimed by the next compaction.
+    pub fn tombstone(&mut self, name: &str) -> bool {
+        match self.tensors.iter().position(|m| m.name == name) {
+            Some(i) => {
+                self.tensors.remove(i);
+                self.tombstoned += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Seal the new generation into the data file: GenRecord | footer |
+    /// trailer, truncate to the committed length, fsync. The generation is
+    /// *not yet committed* — that is the pointer (or manifest) flip.
+    fn seal(&mut self) -> Result<SealInfo> {
+        let generation = self.generation + 1;
+        let record = GenRecord {
+            generation,
+            parent_trailer_offset: self.parent_trailer_offset,
+        };
+        self.boundary("commit.record")?;
+        write_all_at(&self.file, self.write_pos, &record.to_bytes())?;
+        let footer_offset = self.write_pos + GEN_RECORD_BYTES as u64;
+        let index = StoreIndex::new(std::mem::take(&mut self.tensors));
+        let footer = index.to_bytes(self.format);
+        self.boundary("commit.footer")?;
+        write_all_at(&self.file, footer_offset, &footer)?;
+        let trailer_offset = footer_offset + footer.len() as u64;
+        let trailer = trailer_bytes(
+            footer_offset,
+            footer.len() as u64,
+            crc32(&footer),
+            index.tensors.len() as u32,
+        );
+        self.boundary("commit.trailer")?;
+        write_all_at(&self.file, trailer_offset, &trailer)?;
+        let committed_len = trailer_offset + TRAILER_BYTES as u64;
+        // Cut any torn garbage a previous crashed append left past the new
+        // trailer, so the committed trailer abuts EOF again.
+        self.boundary("commit.truncate")?;
+        self.file.set_len(committed_len)?;
+        self.boundary("commit.sync")?;
+        self.file.sync_data()?;
+        let tensors = index.tensors.len();
+        self.tensors = index.tensors;
+        Ok(SealInfo { generation, trailer_offset, committed_len, tensors })
+    }
+
+    /// Write the sidecar pointer atomically: tmp + fsync + rename, then a
+    /// best-effort directory fsync.
+    fn write_pointer(
+        &self,
+        ptr: &GenPointer,
+        op_write: &str,
+        op_sync: &str,
+        op_rename: &str,
+    ) -> Result<()> {
+        let final_path = gen_pointer_path(&self.path);
+        let mut os = final_path.as_os_str().to_os_string();
+        os.push(".tmp");
+        let tmp = PathBuf::from(os);
+        self.boundary(op_write)?;
+        let mut f = File::create(&tmp)?;
+        f.write_all(&ptr.to_bytes())?;
+        self.boundary(op_sync)?;
+        f.sync_data()?;
+        drop(f);
+        self.boundary(op_rename)?;
+        std::fs::rename(&tmp, &final_path)?;
+        if let Some(dir) = final_path.parent() {
+            if let Ok(d) = File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+        Ok(())
+    }
+
+    /// Seal the new generation and atomically flip the `<store>.gen`
+    /// pointer to it — the commit point. A crash anywhere before the
+    /// rename leaves the previous generation committed.
+    pub fn commit(mut self) -> Result<AppendSummary> {
+        let sealed = self.seal()?;
+        let ptr = GenPointer {
+            generation: sealed.generation,
+            trailer_offset: sealed.trailer_offset,
+            committed_len: sealed.committed_len,
+        };
+        self.write_pointer(&ptr, "commit.ptr_write", "commit.ptr_sync", "commit.ptr_rename")?;
+        Ok(AppendSummary {
+            generation: sealed.generation,
+            tensors: sealed.tensors,
+            tensors_added: self.added,
+            tensors_replaced: self.replaced,
+            tombstoned: self.tombstoned,
+            bytes_written: self.bytes_written,
+            file_bytes: sealed.committed_len,
+        })
+    }
+}
+
+impl TensorSink for StoreAppender {
+    fn append(&mut self, t: EncodedTensor) -> Result<()> {
+        self.append_encoded(t)
+    }
+}
+
+/// Appends new footer generations across a sharded store. Per-shard
+/// appends/seals follow [`StoreAppender`] (without sidecar pointers);
+/// the single atomic v2 MANIFEST write is the commit point for all
+/// shards at once.
+pub struct ShardedStoreAppender {
+    dir: PathBuf,
+    shards: Vec<StoreAppender>,
+    entries: Vec<ShardEntry>,
+    dirty: Vec<bool>,
+    plan: Option<FaultPlan>,
+}
+
+impl ShardedStoreAppender {
+    /// Open a sharded store directory for appending.
+    pub fn open(dir: &Path) -> Result<Self> {
+        Self::open_opts(dir, None)
+    }
+
+    /// [`Self::open`] with a [`FaultPlan`] shared by every shard's write
+    /// boundaries (one global kill-point lattice across the whole commit).
+    pub fn open_opts(dir: &Path, plan: Option<&FaultPlan>) -> Result<Self> {
+        let bytes = std::fs::read(dir.join(MANIFEST_FILE)).map_err(|e| {
+            Error::ManifestCorrupt(format!("cannot read MANIFEST in {}: {e}", dir.display()))
+        })?;
+        let manifest = ShardManifest::from_bytes(&bytes)?;
+        let mut shards = Vec::with_capacity(manifest.entries.len());
+        for (i, e) in manifest.entries.iter().enumerate() {
+            let path = dir.join(shard_file_name(i));
+            if !path.exists() {
+                return Err(Error::ShardMissing { shard: shard_file_name(i) });
+            }
+            shards.push(StoreAppender::open_shard(&path, Some(e.trailer_offset), plan)?);
+        }
+        let dirty = vec![false; shards.len()];
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            shards,
+            entries: manifest.entries,
+            dirty,
+            plan: plan.cloned(),
+        })
+    }
+
+    /// Live tensors across all shards' uncommitted indexes.
+    pub fn tensor_count(&self) -> usize {
+        self.shards.iter().map(|s| s.tensor_count()).sum()
+    }
+
+    /// Append to the tensor's home shard (same FNV-1a routing as the
+    /// writer, so replaces always land on the shard holding the old
+    /// version).
+    pub fn append_encoded(&mut self, t: EncodedTensor) -> Result<()> {
+        let s = shard_for_name(&t.name, self.shards.len());
+        self.dirty[s] = true;
+        self.shards[s].append_encoded(t)
+    }
+
+    /// Tombstone a tensor out of its home shard's live index.
+    pub fn tombstone(&mut self, name: &str) -> bool {
+        let s = shard_for_name(name, self.shards.len());
+        let hit = self.shards[s].tombstone(name);
+        if hit {
+            self.dirty[s] = true;
+        }
+        hit
+    }
+
+    /// Seal every dirty shard, then atomically write the v2 MANIFEST
+    /// naming the new generations — the commit point for all shards at
+    /// once. Clean shards keep their old manifest entries (and write
+    /// nothing).
+    pub fn commit(mut self) -> Result<AppendSummary> {
+        let mut entries = self.entries.clone();
+        for (i, shard) in self.shards.iter_mut().enumerate() {
+            if !self.dirty[i] {
+                continue;
+            }
+            let sealed = shard.seal()?;
+            entries[i] = ShardEntry {
+                tensors: sealed.tensors as u32,
+                file_bytes: sealed.committed_len,
+                generation: sealed.generation,
+                trailer_offset: sealed.trailer_offset,
+            };
+        }
+        boundary(&self.plan, "commit.manifest")?;
+        let manifest_len =
+            write_manifest_atomic(&self.dir, &ShardManifest { entries: entries.clone() })?;
+        Ok(AppendSummary {
+            generation: entries.iter().map(|e| e.generation).max().unwrap_or(0),
+            tensors: entries.iter().map(|e| e.tensors as usize).sum(),
+            tensors_added: self.shards.iter().map(|s| s.added).sum(),
+            tensors_replaced: self.shards.iter().map(|s| s.replaced).sum(),
+            tombstoned: self.shards.iter().map(|s| s.tombstoned).sum(),
+            bytes_written: self.shards.iter().map(|s| s.bytes_written).sum(),
+            file_bytes: entries.iter().map(|e| e.file_bytes).sum::<u64>() + manifest_len,
+        })
+    }
+}
+
+impl TensorSink for ShardedStoreAppender {
+    fn append(&mut self, t: EncodedTensor) -> Result<()> {
+        self.append_encoded(t)
+    }
+}
+
+/// Delta-ingest: encode `models` through the PR 5 pipelined packer and
+/// commit them (plus `tombstones`) onto the store at `path` as one new
+/// generation. Auto-detects single-file vs. sharded layout like
+/// [`super::handle::StoreHandle::open`]. Existing names are replaced;
+/// tombstones are applied before the appends, so a model re-shipping a
+/// tombstoned name counts as an add.
+pub fn append_models(
+    path: &Path,
+    models: &[ModelConfig],
+    sample_cap: usize,
+    policy: &PartitionPolicy,
+    opts: &PackOptions,
+    tombstones: &[String],
+) -> Result<AppendSummary> {
+    if path.is_dir() {
+        let mut a = ShardedStoreAppender::open(path)?;
+        for name in tombstones {
+            a.tombstone(name);
+        }
+        pack_zoo_into(&mut a, models, sample_cap, policy, opts)?;
+        a.commit()
+    } else {
+        let mut a = StoreAppender::open(path)?;
+        for name in tombstones {
+            a.tombstone(name);
+        }
+        pack_zoo_into(&mut a, models, sample_cap, policy, opts)?;
+        a.commit()
+    }
+}
+
+/// Rewrite the committed generation of a single-file store, dropping all
+/// superseded generations. Chunk bytes are copied **verbatim** (and
+/// CRC-checked in flight — compaction refuses to seal corrupt bytes);
+/// only their offsets move. Every step keeps the store openable:
+///
+/// 1. write + fsync `<path>.compact.tmp` (a parentless generation);
+/// 2. truncate the source to its committed length + fsync (the classic
+///    EOF open now agrees with the pointer);
+/// 3. remove the `<path>.gen` pointer (classic EOF still opens the same
+///    generation);
+/// 4. rename the compacted file into place (classic EOF opens the
+///    compacted generation).
+pub fn compact_store(path: &Path, plan: Option<&FaultPlan>) -> Result<CompactSummary> {
+    let reader = StoreReader::open_with(path, Backend::File, 0)?;
+    let generation = reader.generation();
+    let committed_len = reader.trailer_offset() + TRAILER_BYTES as u64;
+    let tensors: Vec<TensorMeta> = reader.index().tensors.clone();
+    drop(reader);
+    let plan = plan.cloned();
+
+    let src = File::open(path)?;
+    let bytes_before = src.metadata()?.len();
+    let mut magic = [0u8; 8];
+    read_exact_at(&src, 0, &mut magic)?;
+    let format = StoreFormat::from_magic(&magic)?;
+
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".compact.tmp");
+    let tmp_path = PathBuf::from(os);
+    let mut out = std::io::BufWriter::new(File::create(&tmp_path)?);
+    out.write_all(&magic)?;
+    let mut offset = STORE_MAGIC.len() as u64;
+    let mut new_tensors = Vec::with_capacity(tensors.len());
+    let mut chunk_count = 0usize;
+    for t in &tensors {
+        let mut chunks = Vec::with_capacity(t.chunks.len());
+        for (ci, c) in t.chunks.iter().enumerate() {
+            boundary(&plan, "compact.write")?;
+            let mut buf = vec![0u8; c.len as usize];
+            read_exact_at(&src, c.offset, &mut buf)?;
+            if crc32(&buf) != c.crc32 {
+                return Err(Error::Store(format!(
+                    "tensor {}: chunk {ci} failed its CRC during compaction — \
+                     refusing to seal corrupt bytes",
+                    t.name
+                )));
+            }
+            out.write_all(&buf)?;
+            chunks.push(ChunkMeta { offset, len: c.len, n_values: c.n_values, crc32: c.crc32 });
+            offset += c.len;
+            chunk_count += 1;
+        }
+        new_tensors.push(TensorMeta { chunks, ..t.clone() });
+    }
+    let next_gen = generation + 1;
+    boundary(&plan, "compact.record")?;
+    out.write_all(&GenRecord { generation: next_gen, parent_trailer_offset: 0 }.to_bytes())?;
+    let footer_offset = offset + GEN_RECORD_BYTES as u64;
+    let index = StoreIndex::new(new_tensors);
+    let footer = index.to_bytes(format);
+    boundary(&plan, "compact.footer")?;
+    out.write_all(&footer)?;
+    let trailer_offset = footer_offset + footer.len() as u64;
+    boundary(&plan, "compact.trailer")?;
+    out.write_all(&trailer_bytes(
+        footer_offset,
+        footer.len() as u64,
+        crc32(&footer),
+        index.tensors.len() as u32,
+    ))?;
+    out.flush()?;
+    boundary(&plan, "compact.sync")?;
+    out.get_ref().sync_data()?;
+    drop(out);
+
+    // Steps 2–4: see the function doc. Order matters — each step leaves
+    // the store openable at the same (or the compacted) generation.
+    boundary(&plan, "compact.truncate")?;
+    let fixup = std::fs::OpenOptions::new().write(true).open(path)?;
+    fixup.set_len(committed_len)?;
+    fixup.sync_data()?;
+    drop(fixup);
+    boundary(&plan, "compact.ptr_remove")?;
+    match std::fs::remove_file(gen_pointer_path(path)) {
+        Err(e) if e.kind() != std::io::ErrorKind::NotFound => return Err(e.into()),
+        _ => {}
+    }
+    boundary(&plan, "compact.rename")?;
+    std::fs::rename(&tmp_path, path)?;
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(CompactSummary {
+        generation: next_gen,
+        tensors: index.tensors.len(),
+        chunks: chunk_count,
+        bytes_before,
+        bytes_after: trailer_offset + TRAILER_BYTES as u64,
+    })
+}
+
+/// [`compact_store`] across a sharded directory: every shard is rewritten
+/// (tmp + fsync + rename — shards have no sidecar pointers), then one
+/// atomic v2 MANIFEST write commits the new generations. A crash between
+/// shard renames is harmless: the stale manifest entries fail their
+/// strict opens and fall back to the classic EOF open of the compacted
+/// shard, whose *content* is identical by construction.
+pub fn compact_sharded_store(dir: &Path, plan: Option<&FaultPlan>) -> Result<CompactSummary> {
+    let manifest_path = dir.join(MANIFEST_FILE);
+    let bytes = std::fs::read(&manifest_path).map_err(|e| {
+        Error::ManifestCorrupt(format!("cannot read MANIFEST in {}: {e}", dir.display()))
+    })?;
+    let manifest = ShardManifest::from_bytes(&bytes)?;
+    let bytes_before = manifest.entries.iter().map(|e| e.file_bytes).sum::<u64>()
+        + bytes.len() as u64;
+    let mut entries = Vec::with_capacity(manifest.entries.len());
+    let mut tensors = 0usize;
+    let mut chunks = 0usize;
+    let mut generation = 0u32;
+    for i in 0..manifest.entries.len() {
+        let shard_path = dir.join(shard_file_name(i));
+        let s = compact_store(&shard_path, plan)?;
+        tensors += s.tensors;
+        chunks += s.chunks;
+        generation = generation.max(s.generation);
+        entries.push(ShardEntry {
+            tensors: s.tensors as u32,
+            file_bytes: s.bytes_after,
+            generation: s.generation,
+            trailer_offset: s.bytes_after - TRAILER_BYTES as u64,
+        });
+    }
+    let plan = plan.cloned();
+    boundary(&plan, "compact.manifest")?;
+    let manifest_len = write_manifest_atomic(dir, &ShardManifest { entries: entries.clone() })?;
+    Ok(CompactSummary {
+        generation,
+        tensors,
+        chunks,
+        bytes_before,
+        bytes_after: entries.iter().map(|e| e.file_bytes).sum::<u64>() + manifest_len,
+    })
+}
+
+/// Walk the generation chain of the store at `path`, newest first
+/// (single file: the committed generation back through each
+/// [`GenRecord`]'s parent; sharded: every shard's chain, stamped with its
+/// shard index). Classic write-once stores report one generation-0 entry.
+pub fn store_versions(path: &Path) -> Result<Vec<GenerationInfo>> {
+    if path.is_dir() {
+        let bytes = std::fs::read(path.join(MANIFEST_FILE)).map_err(|e| {
+            Error::ManifestCorrupt(format!(
+                "cannot read MANIFEST in {}: {e}",
+                path.display()
+            ))
+        })?;
+        let manifest = ShardManifest::from_bytes(&bytes)?;
+        let mut out = Vec::new();
+        for (i, e) in manifest.entries.iter().enumerate() {
+            let mut chain = versions_chain(&path.join(shard_file_name(i)), Some(e.trailer_offset))?;
+            for g in &mut chain {
+                g.shard = Some(i);
+            }
+            out.extend(chain);
+        }
+        Ok(out)
+    } else {
+        versions_chain(path, None)
+    }
+}
+
+/// Walk one file's generation chain from its committed trailer (the
+/// sidecar pointer, or EOF when there is none) back through the
+/// [`GenRecord`] parent offsets.
+fn versions_chain(path: &Path, committed: Option<u64>) -> Result<Vec<GenerationInfo>> {
+    let file = File::open(path)?;
+    let file_len = file.metadata()?.len();
+    let mut at = match committed {
+        Some(at) => at,
+        None => {
+            let ptr = std::fs::read(gen_pointer_path(path))
+                .ok()
+                .and_then(|b| GenPointer::from_bytes(&b).ok());
+            match ptr {
+                Some(p) => p.trailer_offset,
+                None => file_len.checked_sub(TRAILER_BYTES as u64).ok_or_else(|| {
+                    Error::Store(format!("file is {file_len} bytes, smaller than a trailer"))
+                })?,
+            }
+        }
+    };
+    let mut out = Vec::new();
+    loop {
+        let mut buf = [0u8; TRAILER_BYTES];
+        read_exact_at(&file, at, &mut buf)?;
+        let trailer = super::format::parse_trailer(&buf)?;
+        let record = trailer
+            .footer_offset
+            .checked_sub(GEN_RECORD_BYTES as u64)
+            .filter(|&r| r >= STORE_MAGIC.len() as u64)
+            .and_then(|r| {
+                let mut rb = [0u8; GEN_RECORD_BYTES];
+                read_exact_at(&file, r, &mut rb).ok()?;
+                GenRecord::from_bytes(&rb)
+            });
+        let (generation, parent) = record
+            .map(|r| (r.generation, r.parent_trailer_offset))
+            .unwrap_or((0, 0));
+        out.push(GenerationInfo {
+            shard: None,
+            generation,
+            trailer_offset: at,
+            tensors: trailer.tensor_count,
+            committed_len: at + TRAILER_BYTES as u64,
+        });
+        if parent == 0 {
+            break;
+        }
+        if parent >= at {
+            return Err(Error::Store(format!(
+                "generation chain does not descend: parent trailer {parent} >= {at}"
+            )));
+        }
+        at = parent;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apack::tablegen::TensorKind;
+    use crate::store::format::BodyConfig;
+    use crate::store::io::FaultConfig;
+    use crate::store::shard::ShardedStoreReader;
+    use crate::store::writer::{encode_tensor_with, StoreWriter};
+
+    fn policy() -> PartitionPolicy {
+        PartitionPolicy { substreams: 4, min_per_stream: 256 }
+    }
+
+    fn tensor(n: usize, seed: u32) -> Vec<u32> {
+        (0..n as u32)
+            .map(|i| i.wrapping_mul(2_654_435_761).wrapping_add(seed) % 251)
+            .collect()
+    }
+
+    fn encoded(name: &str, values: &[u32]) -> EncodedTensor {
+        encode_tensor_with(
+            &policy(),
+            BodyConfig::default(),
+            name,
+            8,
+            values,
+            TensorKind::Weights,
+            None,
+            0,
+        )
+        .unwrap()
+    }
+
+    fn store_temp(tag: &str) -> PathBuf {
+        std::env::temp_dir()
+            .join(format!("apack_live_{tag}_{}.apackstore", std::process::id()))
+    }
+
+    fn build_store(tag: &str) -> (PathBuf, Vec<u32>, Vec<u32>) {
+        let path = store_temp(tag);
+        let a = tensor(6_000, 1);
+        let b = tensor(900, 2);
+        let mut w = StoreWriter::create(&path, policy()).unwrap();
+        w.add_tensor("a", 8, &a, TensorKind::Weights).unwrap();
+        w.add_tensor("b", 8, &b, TensorKind::Weights).unwrap();
+        w.finish().unwrap();
+        (path, a, b)
+    }
+
+    fn cleanup(path: &Path) {
+        if path.is_dir() {
+            std::fs::remove_dir_all(path).ok();
+        } else {
+            std::fs::remove_file(path).ok();
+        }
+        std::fs::remove_file(gen_pointer_path(path)).ok();
+        let mut os = gen_pointer_path(path).into_os_string();
+        os.push(".tmp");
+        std::fs::remove_file(PathBuf::from(os)).ok();
+    }
+
+    #[test]
+    fn append_replace_tombstone_commit_roundtrip() {
+        let (path, _a, b) = build_store("roundtrip");
+        let a2 = tensor(6_000, 40);
+        let c = tensor(3_000, 41);
+        let mut app = StoreAppender::open(&path).unwrap();
+        assert_eq!(app.generation(), 0);
+        app.append_encoded(encoded("a", &a2)).unwrap();
+        app.append_encoded(encoded("c", &c)).unwrap();
+        assert!(app.tombstone("b"));
+        assert!(!app.tombstone("nonexistent"));
+        let summary = app.commit().unwrap();
+        assert_eq!(summary.generation, 1);
+        assert_eq!(summary.tensors, 2);
+        assert_eq!(summary.tensors_added, 1);
+        assert_eq!(summary.tensors_replaced, 1);
+        assert_eq!(summary.tombstoned, 1);
+        assert!(summary.bytes_written > 0);
+
+        let r = StoreReader::open(&path).unwrap();
+        assert_eq!(r.generation(), 1);
+        assert_eq!(r.get_tensor("a").unwrap(), a2);
+        assert_eq!(r.get_tensor("c").unwrap(), c);
+        assert!(r.meta("b").is_err());
+        r.verify().unwrap();
+
+        // The parent generation stays pinned and readable at its trailer.
+        let versions = store_versions(&path).unwrap();
+        assert_eq!(versions.len(), 2);
+        assert_eq!((versions[0].generation, versions[1].generation), (1, 0));
+        let old = StoreReader::open_at(
+            &path,
+            Backend::File,
+            0,
+            versions[1].trailer_offset,
+            None,
+        )
+        .unwrap();
+        assert_eq!(old.get_tensor("b").unwrap(), b);
+        cleanup(&path);
+    }
+
+    #[test]
+    fn crash_before_pointer_flip_keeps_previous_generation() {
+        // Learn the boundary count from a clean run, then kill the very
+        // last boundary (the pointer rename) on a fresh copy.
+        let (path, a, b) = build_store("crash_learn");
+        let probe = FaultPlan::new(FaultConfig::default());
+        let mut app = StoreAppender::open_opts(&path, Some(&probe)).unwrap();
+        app.append_encoded(encoded("c", &tensor(3_000, 50))).unwrap();
+        app.commit().unwrap();
+        let boundaries = probe.boundaries_seen();
+        assert!(boundaries > 5, "expected a real lattice, saw {boundaries}");
+        cleanup(&path);
+
+        let (path, _, _) = build_store("crash_kill");
+        let committed = std::fs::metadata(&path).unwrap().len();
+        let plan = FaultPlan::new(FaultConfig {
+            kill_at: Some(boundaries - 1),
+            ..FaultConfig::default()
+        });
+        let mut app = StoreAppender::open_opts(&path, Some(&plan)).unwrap();
+        app.append_encoded(encoded("c", &tensor(3_000, 50))).unwrap();
+        let err = app.commit().unwrap_err();
+        assert!(err.to_string().contains("injected crash"), "{err}");
+        assert!(plan.kill_fired());
+
+        // The sealed-but-uncommitted generation is a torn tail: bigger
+        // file, same committed content.
+        assert!(std::fs::metadata(&path).unwrap().len() > committed);
+        let r = StoreReader::open(&path).unwrap();
+        assert_eq!(r.generation(), 0);
+        assert_eq!(r.get_tensor("a").unwrap(), a);
+        assert_eq!(r.get_tensor("b").unwrap(), b);
+        r.verify().unwrap();
+        drop(r);
+
+        // Recovery: a fresh append overwrites the torn tail and commits.
+        let c = tensor(3_000, 50);
+        let mut app = StoreAppender::open(&path).unwrap();
+        app.append_encoded(encoded("c", &c)).unwrap();
+        let summary = app.commit().unwrap();
+        assert_eq!(summary.generation, 1);
+        let r = StoreReader::open(&path).unwrap();
+        assert_eq!(r.get_tensor("c").unwrap(), c);
+        assert_eq!(r.get_tensor("a").unwrap(), a);
+        cleanup(&path);
+    }
+
+    #[test]
+    fn compact_reclaims_superseded_generations() {
+        let (path, _a, b) = build_store("compact");
+        let a2 = tensor(6_000, 60);
+        let mut app = StoreAppender::open(&path).unwrap();
+        app.append_encoded(encoded("a", &a2)).unwrap();
+        app.commit().unwrap();
+
+        let summary = compact_store(&path, None).unwrap();
+        assert_eq!(summary.generation, 2);
+        assert_eq!(summary.tensors, 2);
+        assert!(summary.reclaimed() > 0, "{summary:?}");
+        assert!(
+            !gen_pointer_path(&path).exists(),
+            "compaction must drop the stale pointer"
+        );
+
+        let r = StoreReader::open(&path).unwrap();
+        assert_eq!(r.generation(), 2);
+        assert_eq!(r.get_tensor("a").unwrap(), a2);
+        assert_eq!(r.get_tensor("b").unwrap(), b);
+        r.verify().unwrap();
+        drop(r);
+
+        // The chain restarts: one parentless generation.
+        let versions = store_versions(&path).unwrap();
+        assert_eq!(versions.len(), 1);
+        assert_eq!(versions[0].generation, 2);
+        cleanup(&path);
+    }
+
+    #[test]
+    fn sharded_append_and_compact_roundtrip() {
+        use crate::store::shard::ShardedStoreWriter;
+        let dir = store_temp("sharded_live").with_extension("d");
+        std::fs::remove_dir_all(&dir).ok();
+        let names: Vec<String> = (0..6).map(|i| format!("s{i}")).collect();
+        let mut w = ShardedStoreWriter::create(&dir, 3, policy()).unwrap();
+        for (i, name) in names.iter().enumerate() {
+            w.add_tensor(name, 8, &tensor(2_000, 70 + i as u32), TensorKind::Weights)
+                .unwrap();
+        }
+        w.finish().unwrap();
+
+        let s0v2 = tensor(2_000, 90);
+        let extra = tensor(1_500, 91);
+        let mut app = ShardedStoreAppender::open(&dir).unwrap();
+        app.append_encoded(encoded("s0", &s0v2)).unwrap();
+        app.append_encoded(encoded("extra", &extra)).unwrap();
+        assert!(app.tombstone("s1"));
+        let summary = app.commit().unwrap();
+        assert!(summary.generation >= 1);
+        assert_eq!(summary.tensors, 6);
+        assert_eq!(summary.tensors_replaced, 1);
+        assert_eq!(summary.tensors_added, 1);
+        assert_eq!(summary.tombstoned, 1);
+
+        let r = ShardedStoreReader::open(&dir).unwrap();
+        assert_eq!(r.get_tensor("s0").unwrap(), s0v2);
+        assert_eq!(r.get_tensor("extra").unwrap(), extra);
+        assert!(r.meta("s1").is_err());
+        assert_eq!(r.get_tensor("s5").unwrap(), tensor(2_000, 75));
+        r.verify().unwrap();
+        drop(r);
+
+        let compacted = compact_sharded_store(&dir, None).unwrap();
+        assert!(compacted.bytes_after <= compacted.bytes_before);
+        let r = ShardedStoreReader::open(&dir).unwrap();
+        assert_eq!(r.get_tensor("s0").unwrap(), s0v2);
+        assert_eq!(r.get_tensor("extra").unwrap(), extra);
+        assert!(r.meta("s1").is_err());
+        r.verify().unwrap();
+        drop(r);
+
+        let versions = store_versions(&dir).unwrap();
+        assert_eq!(versions.len(), 3, "one parentless generation per shard");
+        assert!(versions.iter().all(|g| g.shard.is_some()));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v1_files_reject_v2_append_bodies() {
+        let path = store_temp("v1_guard");
+        let mut w = StoreWriter::create_with(&path, policy(), BodyConfig::v1()).unwrap();
+        w.add_tensor("a", 8, &tensor(2_000, 3), TensorKind::Weights).unwrap();
+        w.finish().unwrap();
+        let mut app = StoreAppender::open(&path).unwrap();
+        let err = app.append_encoded(encoded("c", &tensor(1_000, 4))).unwrap_err();
+        assert!(err.to_string().contains("APACKST1"), "{err}");
+        cleanup(&path);
+    }
+}

@@ -88,26 +88,52 @@
 //! - [`cache`] — [`ChunkCache`], the bounded LRU of decoded chunks behind
 //!   the readers' hot path, and [`ScratchPool`], the recycled decode
 //!   buffers every read path draws from (DESIGN.md §8).
+//! - [`live`] — crash-safe mutation: [`StoreAppender`] /
+//!   [`ShardedStoreAppender`] commit new tensor versions and tombstones
+//!   as atomically-flipped footer generations, and
+//!   [`compact_store`]/[`compact_sharded_store`] reclaim superseded
+//!   generations (online via `StoreHandle::compact_live`).
+//! - [`verify`] — classified, non-bailing corruption sweeps
+//!   ([`CorruptionClass`], [`VerifyIssue`], [`verify_store`]).
+//!
+//! # Durability
+//!
+//! Mutation follows the commit protocol in **DESIGN.md §14**: body bytes
+//! → fsync → new footer generation + trailer → fsync → atomic pointer
+//! flip (the `<store>.gen` sidecar for single files, the MANIFEST for
+//! sharded directories). A crash at *any* boundary leaves the previous
+//! sealed generation the winner on reopen; the kill-point lattice in
+//! [`io::FaultPlan`] sweeps every such boundary in the tests. Transient
+//! read errors are retried with bounded jittered backoff; permanent
+//! chunk corruption is quarantined in the heatmap and classified by
+//! [`verify::verify_store`].
 
 pub mod cache;
 pub mod format;
 pub mod handle;
 pub mod heat;
 pub mod io;
+pub mod live;
 pub mod pipeline;
 pub mod reader;
 pub mod shard;
+pub mod verify;
 pub mod writer;
 
 pub use cache::{ChunkCache, ScratchPool};
 pub use format::{
     crc32, BodyConfig, BodyVersion, ChunkMeta, StoreFormat, StoreIndex, TensorMeta,
 };
-pub use handle::StoreHandle;
+pub use handle::{StoreHandle, StoreVariant};
 pub use heat::{ChunkHeatEntry, HeatMap, TensorHeatSummary};
-pub use io::{Backend, ChunkSource, FileSource, MmapSource};
+pub use io::{Backend, ChunkSource, FaultConfig, FaultPlan, FileSource, MmapSource};
+pub use live::{
+    append_models, compact_sharded_store, compact_store, store_versions, AppendSummary,
+    CompactSummary, GenerationInfo, ShardedStoreAppender, StoreAppender,
+};
 pub use pipeline::PackOptions;
 pub use reader::{ReadStats, StoreReader, VerifyReport, DEFAULT_CACHE_VALUES};
+pub use verify::{verify_report_json, verify_store, CorruptionClass, VerifyIssue};
 pub use shard::{
     pack_model_zoo_sharded, pack_model_zoo_sharded_with, shard_file_name, shard_for_name,
     ShardEntry, ShardManifest, ShardedStoreReader, ShardedStoreSummary, ShardedStoreWriter,

@@ -22,9 +22,11 @@
 //! # Manifest format
 //!
 //! ```text
-//! offset 0   magic, 8 bytes: "APSHMAN1"
+//! offset 0   magic, 8 bytes: "APSHMAN2" (v1: "APSHMAN1")
 //! offset 8   shard_count u32
-//! then       shard_count × (tensors u32 | file_bytes u64)
+//! then       shard_count × (tensors u32 | file_bytes u64
+//!                           | generation u32 | trailer_offset u64)
+//!            (v1 records are 12 bytes: tensors u32 | file_bytes u64)
 //! EOF - 4    crc32 of all preceding bytes
 //! ```
 //!
@@ -34,6 +36,18 @@
 //! count disagrees with the manifest is [`Error::ShardCountMismatch`], and
 //! an expected shard file that is absent is [`Error::ShardMissing`] — a
 //! torn or mixed-up store directory can never masquerade as a healthy one.
+//!
+//! # Durability (DESIGN.md §14)
+//!
+//! For a sharded store the MANIFEST **is** the generation pointer: each
+//! v2 record names its shard's committed generation and trailer offset,
+//! and the manifest itself is written atomically (tmp + fsync + rename).
+//! On open, a shard whose on-disk size disagrees with its record is
+//! re-resolved — first at the recorded trailer offset (a torn append
+//! tail: the previous sealed generation wins), then at exact EOF (a
+//! compaction-replaced shard) — before the mismatch is reported as
+//! corruption. v1 manifests (write-once stores packed by earlier
+//! versions) read as generation 0 with the trailer abutting EOF.
 
 use std::path::{Path, PathBuf};
 
@@ -44,8 +58,8 @@ use crate::error::{Error, Result};
 use crate::models::zoo::ModelConfig;
 use crate::util::par_map;
 
-use super::format::{crc32, BodyConfig, TensorMeta};
-use super::io::Backend;
+use super::format::{crc32, BodyConfig, TensorMeta, TRAILER_BYTES};
+use super::io::{Backend, FaultPlan};
 use super::pipeline::{pack_zoo_into, PackOptions};
 use super::reader::{ReadStats, StoreReader, VerifyReport, DEFAULT_CACHE_VALUES};
 use super::writer::{
@@ -55,8 +69,13 @@ use super::writer::{
 /// Manifest file name inside a sharded-store directory.
 pub const MANIFEST_FILE: &str = "MANIFEST";
 
-/// Manifest leading magic ("APSHMAN" + format version digit).
+/// v1 manifest magic ("APSHMAN" + format version digit): 12-byte records
+/// without generation/trailer fields. Still read; no longer written.
 pub const MANIFEST_MAGIC: [u8; 8] = *b"APSHMAN1";
+
+/// v2 manifest magic: 24-byte records carrying each shard's committed
+/// generation and trailer offset (the sharded store's commit pointer).
+pub const MANIFEST_MAGIC_V2: [u8; 8] = *b"APSHMAN2";
 
 /// Derived file name of shard `i`.
 pub fn shard_file_name(i: usize) -> String {
@@ -87,6 +106,12 @@ pub struct ShardEntry {
     pub tensors: u32,
     /// Shard file size in bytes at seal time.
     pub file_bytes: u64,
+    /// Committed footer generation of the shard (0 for write-once shards
+    /// and v1 manifests).
+    pub generation: u32,
+    /// Absolute offset of the shard's committed trailer record (for v1
+    /// manifests: derived as `file_bytes - TRAILER_BYTES`).
+    pub trailer_offset: u64,
 }
 
 /// The parsed MANIFEST of a sharded store.
@@ -96,29 +121,36 @@ pub struct ShardManifest {
 }
 
 impl ShardManifest {
-    /// Serialize (magic + records + CRC).
+    /// Serialize (v2 magic + 24-byte records + CRC).
     pub fn to_bytes(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(8 + 4 + self.entries.len() * 12 + 4);
-        out.extend_from_slice(&MANIFEST_MAGIC);
+        let mut out = Vec::with_capacity(8 + 4 + self.entries.len() * 24 + 4);
+        out.extend_from_slice(&MANIFEST_MAGIC_V2);
         out.extend_from_slice(&(self.entries.len() as u32).to_le_bytes());
         for e in &self.entries {
             out.extend_from_slice(&e.tensors.to_le_bytes());
             out.extend_from_slice(&e.file_bytes.to_le_bytes());
+            out.extend_from_slice(&e.generation.to_le_bytes());
+            out.extend_from_slice(&e.trailer_offset.to_le_bytes());
         }
         let crc = crc32(&out);
         out.extend_from_slice(&crc.to_le_bytes());
         out
     }
 
-    /// Parse and validate [`Self::to_bytes`] output.
+    /// Parse and validate a manifest, either version. v1 records read as
+    /// generation 0 with the trailer abutting EOF.
     pub fn from_bytes(data: &[u8]) -> Result<Self> {
         let bad = |m: String| Error::ManifestCorrupt(m);
         if data.len() < 8 + 4 + 4 {
             return Err(bad(format!("{} bytes is too short for a manifest", data.len())));
         }
-        if data[0..8] != MANIFEST_MAGIC {
+        let record_bytes = if data[0..8] == MANIFEST_MAGIC {
+            12
+        } else if data[0..8] == MANIFEST_MAGIC_V2 {
+            24
+        } else {
             return Err(bad("bad manifest magic".into()));
-        }
+        };
         let count = u32::from_le_bytes(data[8..12].try_into().unwrap()) as usize;
         if count == 0 {
             return Err(bad("manifest declares zero shards".into()));
@@ -126,7 +158,7 @@ impl ShardManifest {
         if count > 1 << 16 {
             return Err(bad(format!("manifest declares {count} shards (absurd)")));
         }
-        let expect = 8 + 4 + count * 12 + 4;
+        let expect = 8 + 4 + count * record_bytes + 4;
         if data.len() != expect {
             return Err(bad(format!(
                 "manifest is {} bytes, {count} shards need {expect}",
@@ -141,14 +173,54 @@ impl ShardManifest {
         }
         let mut entries = Vec::with_capacity(count);
         for i in 0..count {
-            let pos = 12 + i * 12;
-            entries.push(ShardEntry {
-                tensors: u32::from_le_bytes(data[pos..pos + 4].try_into().unwrap()),
-                file_bytes: u64::from_le_bytes(data[pos + 4..pos + 12].try_into().unwrap()),
-            });
+            let pos = 12 + i * record_bytes;
+            let tensors = u32::from_le_bytes(data[pos..pos + 4].try_into().unwrap());
+            let file_bytes =
+                u64::from_le_bytes(data[pos + 4..pos + 12].try_into().unwrap());
+            let (generation, trailer_offset) = if record_bytes == 24 {
+                (
+                    u32::from_le_bytes(data[pos + 12..pos + 16].try_into().unwrap()),
+                    u64::from_le_bytes(data[pos + 16..pos + 24].try_into().unwrap()),
+                )
+            } else {
+                let at = file_bytes.checked_sub(TRAILER_BYTES as u64).ok_or_else(|| {
+                    bad(format!(
+                        "shard {i}: {file_bytes} file bytes cannot hold a trailer"
+                    ))
+                })?;
+                (0, at)
+            };
+            if trailer_offset.checked_add(TRAILER_BYTES as u64).is_none_or(|end| end > file_bytes)
+            {
+                return Err(bad(format!(
+                    "shard {i}: trailer offset {trailer_offset} outside \
+                     {file_bytes}-byte file"
+                )));
+            }
+            entries.push(ShardEntry { tensors, file_bytes, generation, trailer_offset });
         }
         Ok(Self { entries })
     }
+}
+
+/// Write the MANIFEST atomically: tmp file + fsync + rename, then a
+/// best-effort directory fsync so the rename itself is durable. Returns
+/// the manifest's byte length. This is the sharded store's commit point
+/// (DESIGN.md §14) — a crash before the rename leaves the previous
+/// manifest (and thus the previous generations) in force.
+pub(crate) fn write_manifest_atomic(dir: &Path, manifest: &ShardManifest) -> Result<u64> {
+    let bytes = manifest.to_bytes();
+    let tmp = dir.join(format!("{MANIFEST_FILE}.tmp"));
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        std::io::Write::write_all(&mut f, &bytes)?;
+        f.sync_data()?;
+    }
+    std::fs::rename(&tmp, dir.join(MANIFEST_FILE))?;
+    if let Ok(d) = std::fs::File::open(dir) {
+        let _ = d.sync_all();
+    }
+    Ok(bytes.len() as u64)
 }
 
 /// Summary returned by [`ShardedStoreWriter::finish`].
@@ -266,8 +338,8 @@ impl ShardedStoreWriter {
         self.writers[s].append_encoded(t)
     }
 
-    /// Seal every shard file, then write the MANIFEST. The store is only
-    /// openable as a sharded store after this returns.
+    /// Seal every shard file, then write the MANIFEST atomically. The
+    /// store is only openable as a sharded store after this returns.
     pub fn finish(self) -> Result<ShardedStoreSummary> {
         let mut per_shard = Vec::with_capacity(self.writers.len());
         for w in self.writers {
@@ -276,11 +348,15 @@ impl ShardedStoreWriter {
         let manifest = ShardManifest {
             entries: per_shard
                 .iter()
-                .map(|s| ShardEntry { tensors: s.tensors as u32, file_bytes: s.file_bytes })
+                .map(|s| ShardEntry {
+                    tensors: s.tensors as u32,
+                    file_bytes: s.file_bytes,
+                    generation: 0,
+                    trailer_offset: s.file_bytes - TRAILER_BYTES as u64,
+                })
                 .collect(),
         };
-        let manifest_bytes = manifest.to_bytes();
-        std::fs::write(self.dir.join(MANIFEST_FILE), &manifest_bytes)?;
+        let manifest_len = write_manifest_atomic(&self.dir, &manifest)?;
         let mut pack = PackStats::default();
         for s in &per_shard {
             pack.merge(&s.pack);
@@ -290,7 +366,7 @@ impl ShardedStoreWriter {
             tensors: per_shard.iter().map(|s| s.tensors).sum(),
             chunks: per_shard.iter().map(|s| s.chunks).sum(),
             file_bytes: per_shard.iter().map(|s| s.file_bytes).sum::<u64>()
-                + manifest_bytes.len() as u64,
+                + manifest_len,
             raw_bits: per_shard.iter().map(|s| s.raw_bits).sum(),
             pack,
             per_shard,
@@ -316,6 +392,17 @@ impl ShardedStoreReader {
     /// Open and cross-validate manifest vs. directory vs. shard footers.
     /// The cache budget is split evenly across shards.
     pub fn open_with(dir: &Path, backend: Backend, cache_values: usize) -> Result<Self> {
+        Self::open_opts(dir, backend, cache_values, None)
+    }
+
+    /// [`Self::open_with`] with an optional [`FaultPlan`] wrapping every
+    /// shard's IO source (one shared plan meters the whole store).
+    pub fn open_opts(
+        dir: &Path,
+        backend: Backend,
+        cache_values: usize,
+        plan: Option<&FaultPlan>,
+    ) -> Result<Self> {
         let manifest_path = dir.join(MANIFEST_FILE);
         let manifest_bytes = std::fs::read(&manifest_path).map_err(|e| {
             Error::ManifestCorrupt(format!("cannot read {}: {e}", manifest_path.display()))
@@ -346,13 +433,26 @@ impl ShardedStoreReader {
         for (i, entry) in manifest.entries.iter().enumerate() {
             let path = dir.join(shard_file_name(i));
             let disk = std::fs::metadata(&path)?.len();
-            if disk != entry.file_bytes {
-                return Err(Error::ManifestCorrupt(format!(
-                    "shard {i} is {disk} bytes on disk, manifest says {}",
-                    entry.file_bytes
-                )));
-            }
-            let reader = StoreReader::open_with(&path, backend, per_shard_cache)?;
+            let reader = if disk == entry.file_bytes {
+                // Sizes agree: the manifest's commit point is
+                // authoritative; any failure there is real corruption.
+                StoreReader::open_at(&path, backend, per_shard_cache, entry.trailer_offset, plan)?
+            } else {
+                // Sizes disagree. Two recoverable shapes (DESIGN.md §14):
+                // a torn append tail (the file grew past the committed
+                // generation before a crash — the recorded trailer still
+                // resolves) or a compaction-replaced shard (the file was
+                // atomically swapped — its own trailer abuts EOF). Only
+                // when neither resolves is the mismatch corruption.
+                StoreReader::open_at(&path, backend, per_shard_cache, entry.trailer_offset, plan)
+                    .or_else(|_| StoreReader::open_opts(&path, backend, per_shard_cache, plan))
+                    .map_err(|_| {
+                        Error::ManifestCorrupt(format!(
+                            "shard {i} is {disk} bytes on disk, manifest says {}",
+                            entry.file_bytes
+                        ))
+                    })?
+            };
             if reader.tensor_count() != entry.tensors as usize {
                 return Err(Error::ManifestCorrupt(format!(
                     "shard {i} holds {} tensors, manifest says {}",
@@ -500,14 +600,27 @@ impl ShardedStoreReader {
 
     /// Integrity pass over every shard **in parallel** (each shard further
     /// fans its chunks out): re-read, CRC-check and decode everything.
+    /// First-error-bail compatibility shim over [`Self::verify_report`].
     pub fn verify(&self) -> Result<VerifyReport> {
-        let reports: Result<Vec<VerifyReport>> =
-            par_map(&self.readers, |r| r.verify()).into_iter().collect();
+        let report = self.verify_report();
+        match report.issues.first() {
+            Some(issue) => Err(issue.error.clone()),
+            None => Ok(report),
+        }
+    }
+
+    /// Full classified sweep across every shard (never bails); each
+    /// issue is stamped with its shard index.
+    pub fn verify_report(&self) -> VerifyReport {
+        let reports: Vec<VerifyReport> = par_map(&self.readers, |r| r.verify_report());
         let mut agg = VerifyReport::default();
-        for rep in reports? {
+        for (i, mut rep) in reports.into_iter().enumerate() {
+            for issue in &mut rep.issues {
+                issue.shard = Some(i);
+            }
             agg.merge(&rep);
         }
-        Ok(agg)
+        agg
     }
 }
 
@@ -568,8 +681,13 @@ mod tests {
     fn manifest_roundtrip_and_rejection() {
         let m = ShardManifest {
             entries: vec![
-                ShardEntry { tensors: 3, file_bytes: 1234 },
-                ShardEntry { tensors: 0, file_bytes: 40 },
+                ShardEntry {
+                    tensors: 3,
+                    file_bytes: 1234,
+                    generation: 7,
+                    trailer_offset: 1206,
+                },
+                ShardEntry { tensors: 0, file_bytes: 40, generation: 0, trailer_offset: 12 },
             ],
         };
         let bytes = m.to_bytes();
@@ -591,6 +709,40 @@ mod tests {
                 Err(Error::ManifestCorrupt(_))
             ));
         }
+    }
+
+    #[test]
+    fn v1_manifest_still_parses_as_generation_zero() {
+        // Hand-build a v1 manifest (12-byte records, "APSHMAN1" magic):
+        // pre-live-store packs must stay openable, reading as generation 0
+        // with the trailer abutting EOF.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MANIFEST_MAGIC);
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        for (tensors, file_bytes) in [(3u32, 1234u64), (0, 40)] {
+            bytes.extend_from_slice(&tensors.to_le_bytes());
+            bytes.extend_from_slice(&file_bytes.to_le_bytes());
+        }
+        let crc = crc32(&bytes);
+        bytes.extend_from_slice(&crc.to_le_bytes());
+        let m = ShardManifest::from_bytes(&bytes).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        assert_eq!(m.entries[0].generation, 0);
+        assert_eq!(m.entries[0].trailer_offset, 1234 - TRAILER_BYTES as u64);
+        assert_eq!(m.entries[1].trailer_offset, 40 - TRAILER_BYTES as u64);
+        // A v1 record whose file cannot even hold a trailer is typed
+        // corruption, not an underflow.
+        let mut tiny = Vec::new();
+        tiny.extend_from_slice(&MANIFEST_MAGIC);
+        tiny.extend_from_slice(&1u32.to_le_bytes());
+        tiny.extend_from_slice(&1u32.to_le_bytes());
+        tiny.extend_from_slice(&10u64.to_le_bytes());
+        let crc = crc32(&tiny);
+        tiny.extend_from_slice(&crc.to_le_bytes());
+        assert!(matches!(
+            ShardManifest::from_bytes(&tiny),
+            Err(Error::ManifestCorrupt(_))
+        ));
     }
 
     #[test]

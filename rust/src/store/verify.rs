@@ -1,0 +1,311 @@
+//! Classified store verification (DESIGN.md §14).
+//!
+//! `store verify` historically bailed on the first broken byte it met,
+//! which tells an operator *that* a store is damaged but not *what kind*
+//! of damage it is or how much of it there is. This module adds the
+//! classified, non-bailing sweep: every corruption found is recorded as a
+//! [`VerifyIssue`] tagged with a [`CorruptionClass`], the sweep continues
+//! past it, and the CLI maps the worst class present to a distinct exit
+//! code (plus a `--json` machine-readable report) so scripts can branch
+//! on footer-vs-chunk-vs-lane damage without parsing prose.
+//!
+//! Classes, from most to least structural:
+//!
+//! | class                 | exit code | meaning                                     |
+//! |-----------------------|-----------|---------------------------------------------|
+//! | `Footer`              | 10        | a store/shard footer, trailer or index is unreadable |
+//! | `Manifest`            | 11        | the sharded MANIFEST is corrupt/inconsistent |
+//! | `GenerationPointer`   | 14        | the `<store>.gen` sidecar fails validation  |
+//! | `ChunkCrc`            | 12        | a chunk failed its whole-chunk CRC or decode |
+//! | `LaneCrc`             | 13        | a v2 lane CRC failed behind a valid chunk CRC |
+
+use std::path::Path;
+
+use crate::error::Error;
+use crate::store::handle::StoreHandle;
+use crate::store::io::Backend;
+use crate::store::reader::VerifyReport;
+use crate::util::json::Json;
+
+/// What kind of corruption a [`VerifyIssue`] describes. Ordered by
+/// structural severity: footer damage makes a whole file unreadable,
+/// manifest damage a whole directory, a bad generation pointer loses the
+/// commit point (but the classic fallback may still open), and chunk/lane
+/// CRC failures are localized to one chunk (lane CRC even to one lane).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CorruptionClass {
+    /// A store (or shard) footer, trailer, magic or index failed
+    /// validation — the file cannot be opened at all.
+    Footer,
+    /// The sharded store's MANIFEST is unreadable, fails its CRC, or
+    /// disagrees with the directory contents.
+    Manifest,
+    /// A chunk failed its whole-chunk CRC, or decoded inconsistently.
+    ChunkCrc,
+    /// A v2 lane body failed a per-lane CRC behind a *valid* whole-chunk
+    /// CRC (PR 7 localization: the damage is pinned to one lane).
+    LaneCrc,
+    /// The `<store>.gen` generation-pointer sidecar exists but fails
+    /// validation (the classic exact-EOF fallback may still open the
+    /// store).
+    GenerationPointer,
+}
+
+impl CorruptionClass {
+    /// The CLI exit code for a verify run whose *worst* issue is this
+    /// class (0 stays "clean"; 1 stays the generic usage/IO failure).
+    pub fn exit_code(self) -> u8 {
+        match self {
+            CorruptionClass::Footer => 10,
+            CorruptionClass::Manifest => 11,
+            CorruptionClass::ChunkCrc => 12,
+            CorruptionClass::LaneCrc => 13,
+            CorruptionClass::GenerationPointer => 14,
+        }
+    }
+
+    /// Severity order (0 = most severe). Drives
+    /// [`VerifyReport::worst_class`].
+    pub fn severity_rank(self) -> u8 {
+        match self {
+            CorruptionClass::Footer => 0,
+            CorruptionClass::Manifest => 1,
+            CorruptionClass::GenerationPointer => 2,
+            CorruptionClass::ChunkCrc => 3,
+            CorruptionClass::LaneCrc => 4,
+        }
+    }
+
+    /// Stable machine-readable label (JSON report, Prometheus labels).
+    pub fn label(self) -> &'static str {
+        match self {
+            CorruptionClass::Footer => "footer",
+            CorruptionClass::Manifest => "manifest",
+            CorruptionClass::ChunkCrc => "chunk-crc",
+            CorruptionClass::LaneCrc => "lane-crc",
+            CorruptionClass::GenerationPointer => "generation-pointer",
+        }
+    }
+}
+
+impl std::fmt::Display for CorruptionClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// One classified corruption found by a verify sweep. Location fields are
+/// filled as precisely as the class allows: a footer issue has no tensor,
+/// a lane-CRC issue names tensor + chunk (the lane is in the error text).
+#[derive(Debug, Clone)]
+pub struct VerifyIssue {
+    pub class: CorruptionClass,
+    /// Shard index for sharded stores (None for single-file stores and
+    /// directory-level issues).
+    pub shard: Option<usize>,
+    /// Tensor name, when the damage is localized to one tensor.
+    pub tensor: Option<String>,
+    /// Chunk index within the tensor, when localized to one chunk.
+    pub chunk: Option<u32>,
+    /// Human-readable summary of what check failed.
+    pub detail: String,
+    /// The underlying typed error (kept so `verify`'s bail-on-first
+    /// compatibility shim surfaces exactly what it always did).
+    pub error: Error,
+}
+
+impl VerifyIssue {
+    /// One-line rendering for the CLI's human report.
+    pub fn render(&self) -> String {
+        let mut loc = String::new();
+        if let Some(s) = self.shard {
+            loc.push_str(&format!("shard {s} "));
+        }
+        if let Some(t) = &self.tensor {
+            loc.push_str(&format!("tensor {t} "));
+        }
+        if let Some(c) = self.chunk {
+            loc.push_str(&format!("chunk {c} "));
+        }
+        format!("[{}] {}{} — {}", self.class, loc, self.detail, self.error)
+    }
+}
+
+/// Map an open-level error to the corruption class it evidences.
+pub fn classify_open_error(e: &Error) -> CorruptionClass {
+    match e {
+        Error::ManifestCorrupt(_)
+        | Error::ShardMissing { .. }
+        | Error::ShardCountMismatch { .. } => CorruptionClass::Manifest,
+        _ => CorruptionClass::Footer,
+    }
+}
+
+/// Full classified verify of the store at `path` (single file or sharded
+/// directory — auto-detected like [`StoreHandle::open`]). Never errors:
+/// a store too broken to open becomes a report whose issues carry the
+/// open failure, classified. An invalid generation-pointer sidecar is
+/// reported even when the classic exact-EOF fallback opens the store
+/// fine (the commit point is lost; the data is not).
+pub fn verify_store(path: &Path, backend: Backend) -> VerifyReport {
+    use crate::store::format::{gen_pointer_path, GenPointer};
+
+    let mut pointer_issue = None;
+    if !path.is_dir() {
+        let ptr_path = gen_pointer_path(path);
+        if let Ok(bytes) = std::fs::read(&ptr_path) {
+            if let Err(pe) = GenPointer::from_bytes(&bytes) {
+                pointer_issue = Some(VerifyIssue {
+                    class: CorruptionClass::GenerationPointer,
+                    shard: None,
+                    tensor: None,
+                    chunk: None,
+                    detail: format!("generation pointer {} fails validation", ptr_path.display()),
+                    error: pe,
+                });
+            }
+        }
+    }
+    let mut report = match StoreHandle::open_with(path, backend, 0) {
+        Ok(store) => store.verify_report(),
+        Err(e) => {
+            let mut rep = VerifyReport::default();
+            rep.issues.push(VerifyIssue {
+                class: classify_open_error(&e),
+                shard: None,
+                tensor: None,
+                chunk: None,
+                detail: "store failed to open".into(),
+                error: e,
+            });
+            rep
+        }
+    };
+    if let Some(issue) = pointer_issue {
+        report.issues.push(issue);
+    }
+    report
+}
+
+/// Machine-readable verify report (`store verify --json`).
+pub fn verify_report_json(store: &str, report: &VerifyReport) -> Json {
+    let issues: Vec<Json> = report
+        .issues
+        .iter()
+        .map(|i| {
+            let mut m = std::collections::BTreeMap::new();
+            m.insert("class".to_string(), Json::Str(i.class.label().to_string()));
+            m.insert("exit_code".to_string(), Json::Num(i.class.exit_code() as f64));
+            m.insert(
+                "shard".to_string(),
+                i.shard.map_or(Json::Null, |s| Json::Num(s as f64)),
+            );
+            m.insert(
+                "tensor".to_string(),
+                i.tensor.as_ref().map_or(Json::Null, |t| Json::Str(t.clone())),
+            );
+            m.insert(
+                "chunk".to_string(),
+                i.chunk.map_or(Json::Null, |c| Json::Num(c as f64)),
+            );
+            m.insert("detail".to_string(), Json::Str(i.detail.clone()));
+            m.insert("error".to_string(), Json::Str(i.error.to_string()));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("store".to_string(), Json::Str(store.to_string()));
+    m.insert("clean".to_string(), Json::Bool(report.is_clean()));
+    m.insert("shards".to_string(), Json::Num(report.shards as f64));
+    m.insert("tensors".to_string(), Json::Num(report.tensors as f64));
+    m.insert("chunks".to_string(), Json::Num(report.chunks as f64));
+    m.insert("clean_bytes".to_string(), Json::Num(report.bytes as f64));
+    m.insert("generation".to_string(), Json::Num(report.generation as f64));
+    m.insert(
+        "worst_class".to_string(),
+        report.worst_class().map_or(Json::Null, |c| Json::Str(c.label().to_string())),
+    );
+    m.insert(
+        "exit_code".to_string(),
+        Json::Num(report.worst_class().map_or(0, |c| c.exit_code()) as f64),
+    );
+    m.insert("issues".to_string(), Json::Arr(issues));
+    Json::Obj(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exit_codes_and_ranks_are_distinct() {
+        let all = [
+            CorruptionClass::Footer,
+            CorruptionClass::Manifest,
+            CorruptionClass::ChunkCrc,
+            CorruptionClass::LaneCrc,
+            CorruptionClass::GenerationPointer,
+        ];
+        let mut codes: Vec<u8> = all.iter().map(|c| c.exit_code()).collect();
+        codes.sort_unstable();
+        codes.dedup();
+        assert_eq!(codes.len(), all.len(), "exit codes must be distinct");
+        assert!(codes.iter().all(|&c| c >= 10), "codes 0/1 are reserved");
+        let mut ranks: Vec<u8> = all.iter().map(|c| c.severity_rank()).collect();
+        ranks.sort_unstable();
+        ranks.dedup();
+        assert_eq!(ranks.len(), all.len(), "severity ranks must be distinct");
+    }
+
+    #[test]
+    fn open_errors_classify_by_layer() {
+        assert_eq!(
+            classify_open_error(&Error::ManifestCorrupt("x".into())),
+            CorruptionClass::Manifest
+        );
+        assert_eq!(
+            classify_open_error(&Error::ShardMissing { shard: "s".into() }),
+            CorruptionClass::Manifest
+        );
+        assert_eq!(
+            classify_open_error(&Error::ShardCountMismatch { manifest: 2, found: 1 }),
+            CorruptionClass::Manifest
+        );
+        assert_eq!(
+            classify_open_error(&Error::Store("footer CRC mismatch".into())),
+            CorruptionClass::Footer
+        );
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let mut rep = VerifyReport {
+            shards: 1,
+            tensors: 2,
+            chunks: 9,
+            bytes: 1234,
+            generation: 3,
+            issues: Vec::new(),
+        };
+        let clean = verify_report_json("m.apackstore", &rep).to_string();
+        assert!(clean.contains("\"clean\":true"));
+        assert!(clean.contains("\"exit_code\":0"));
+        rep.issues.push(VerifyIssue {
+            class: CorruptionClass::LaneCrc,
+            shard: Some(1),
+            tensor: Some("t".into()),
+            chunk: Some(4),
+            detail: "per-lane CRC sweep failed".into(),
+            error: Error::CorruptStream { position: 7 },
+        });
+        let j = verify_report_json("m.apackstore", &rep);
+        let s = j.to_string();
+        assert!(s.contains("\"clean\":false"));
+        assert!(s.contains("\"worst_class\":\"lane-crc\""));
+        assert!(s.contains("\"exit_code\":13"));
+        // The document round-trips through the parser.
+        let parsed = Json::parse(&s).unwrap();
+        assert_eq!(parsed.get("generation").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(parsed.get("issues").unwrap().as_arr().unwrap().len(), 1);
+    }
+}

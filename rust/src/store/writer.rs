@@ -466,8 +466,11 @@ impl StoreWriter {
         self.registry.snapshot()
     }
 
-    /// Write footer + trailer and flush. The file is only readable after
-    /// this returns.
+    /// Write footer + trailer, flush, and fsync. The file is only
+    /// readable after this returns, and — because the seal is synced to
+    /// disk before we report success — a store `finish` claimed durable
+    /// really is (the live-store commit protocol of DESIGN.md §14 builds
+    /// on this invariant).
     pub fn finish(mut self) -> Result<StoreSummary> {
         let index = StoreIndex::new(std::mem::take(&mut self.tensors));
         let footer = index.to_bytes(self.body.store_format());
@@ -483,6 +486,7 @@ impl StoreWriter {
                 index.tensors.len() as u32,
             ))?;
             self.out.flush()?;
+            self.out.get_ref().sync_data()?;
         }
         self.write_nanos.add(t0.elapsed().as_nanos() as u64);
         let mut pack = PackStats::from_snapshot(&self.registry.snapshot());

@@ -9,10 +9,14 @@ use apack_repro::apack::tablegen::{table_for_tensor, TensorKind};
 use apack_repro::apack::{Container, SymbolTable};
 use apack_repro::coordinator::PartitionPolicy;
 use apack_repro::runtime::ArtifactManifest;
-use apack_repro::store::format::{crc32, trailer_bytes, StoreFormat, StoreIndex, TRAILER_BYTES};
+use apack_repro::store::format::{
+    crc32, gen_pointer_path, trailer_bytes, StoreFormat, StoreIndex, TRAILER_BYTES,
+};
 use apack_repro::store::{
-    shard_file_name, shard_for_name, ShardedStoreReader, ShardedStoreWriter, StoreHandle,
-    StoreReader, StoreWriter, MANIFEST_FILE,
+    compact_store, encode_tensor_with, shard_file_name, shard_for_name, verify_store, Backend,
+    BodyConfig, CorruptionClass, FaultConfig, FaultPlan, ShardedStoreAppender,
+    ShardedStoreReader, ShardedStoreWriter, StoreAppender, StoreHandle, StoreReader,
+    StoreWriter, MANIFEST_FILE,
 };
 use apack_repro::util::Rng64;
 use apack_repro::Error;
@@ -412,6 +416,278 @@ fn sharded_shard_corruption_caught() {
     assert!(reader.get_tensor(&name).is_err(), "corrupt chunk must fail CRC");
     assert!(reader.verify().is_err(), "verify must report the corruption");
     std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Crash-matrix sweeps (DESIGN.md §14): a deterministic FaultPlan kills the
+// writer at every write/fsync/rename boundary of append, seal and compact;
+// reopening after any injected crash must land on the last fully-committed
+// generation, bit-exactly, on both IO backends.
+// ---------------------------------------------------------------------------
+
+fn crash_cleanup(path: &std::path::Path) {
+    std::fs::remove_file(path).ok();
+    std::fs::remove_file(gen_pointer_path(path)).ok();
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".gen.tmp");
+    std::fs::remove_file(std::path::PathBuf::from(os)).ok();
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".compact.tmp");
+    std::fs::remove_file(std::path::PathBuf::from(os)).ok();
+}
+
+/// One live update against the store `build_store` made: replace tensor
+/// `t` with fresh values and add tensor `u`, as one committed generation.
+fn append_update(path: &std::path::Path, plan: Option<&FaultPlan>) -> Result<(), Error> {
+    let policy = PartitionPolicy { substreams: 8, min_per_stream: 128 };
+    let t = encode_tensor_with(
+        &policy,
+        BodyConfig::default(),
+        "t",
+        8,
+        &sample_tensor(12_000, 0xD00D),
+        TensorKind::Activations,
+        None,
+        0,
+    )?;
+    let u = encode_tensor_with(
+        &policy,
+        BodyConfig::default(),
+        "u",
+        8,
+        &sample_tensor(4_000, 0xCAFE),
+        TensorKind::Weights,
+        None,
+        0,
+    )?;
+    let mut a = StoreAppender::open_opts(path, plan)?;
+    a.append_encoded(t)?;
+    a.append_encoded(u)?;
+    a.commit()?;
+    Ok(())
+}
+
+/// Kill the appender at every boundary in turn: reopen must always land on
+/// exactly the pre-append generation or the fully-committed new one.
+#[test]
+fn crash_matrix_append_lands_on_a_committed_generation() {
+    let pre_t = sample_tensor(20_000, 0xF00D);
+    let post_t = sample_tensor(12_000, 0xD00D);
+    let post_u = sample_tensor(4_000, 0xCAFE);
+    let mut kill_at = 0u64;
+    loop {
+        let (path, _) = build_store(&format!("killappend{kill_at}"));
+        let plan = FaultPlan::new(FaultConfig {
+            kill_at: Some(kill_at),
+            ..FaultConfig::default()
+        });
+        let result = append_update(&path, Some(&plan));
+        let killed = plan.kill_fired();
+        if killed {
+            assert!(result.is_err(), "kill at boundary {kill_at} must surface an error");
+        } else {
+            result.unwrap_or_else(|e| panic!("clean run past boundary {kill_at}: {e}"));
+        }
+        for backend in [Backend::Mmap, Backend::File] {
+            let r = StoreHandle::open_with(&path, backend, 0)
+                .unwrap_or_else(|e| panic!("kill {kill_at}: store must stay openable: {e}"));
+            match r.generation() {
+                0 => {
+                    assert!(killed, "only a killed run may stay on generation 0");
+                    assert_eq!(r.get_tensor("t").unwrap(), pre_t, "kill {kill_at}");
+                    assert!(r.meta("u").is_err(), "kill {kill_at}: u must not exist yet");
+                }
+                1 => {
+                    assert_eq!(r.get_tensor("t").unwrap(), post_t, "kill {kill_at}");
+                    assert_eq!(r.get_tensor("u").unwrap(), post_u, "kill {kill_at}");
+                }
+                g => panic!("kill {kill_at}: unexpected generation {g}"),
+            }
+            if !killed {
+                assert_eq!(r.generation(), 1, "a clean append must commit generation 1");
+            }
+        }
+        crash_cleanup(&path);
+        if !killed {
+            break;
+        }
+        kill_at += 1;
+    }
+    assert!(kill_at > 5, "lattice must cover several boundaries, saw {kill_at}");
+}
+
+/// Kill compaction at every boundary: the store stays openable at every
+/// crash point and always serves the same live content (compaction never
+/// changes what is live, only where it sits).
+#[test]
+fn crash_matrix_compact_preserves_live_content() {
+    let post_t = sample_tensor(12_000, 0xD00D);
+    let post_u = sample_tensor(4_000, 0xCAFE);
+    let mut kill_at = 0u64;
+    loop {
+        let (path, _) = build_store(&format!("killcompact{kill_at}"));
+        append_update(&path, None).unwrap();
+        let plan = FaultPlan::new(FaultConfig {
+            kill_at: Some(kill_at),
+            ..FaultConfig::default()
+        });
+        let result = compact_store(&path, Some(&plan));
+        let killed = plan.kill_fired();
+        if !killed {
+            let summary =
+                result.unwrap_or_else(|e| panic!("clean run past boundary {kill_at}: {e}"));
+            assert_eq!(summary.generation, 2);
+        }
+        for backend in [Backend::Mmap, Backend::File] {
+            let r = StoreHandle::open_with(&path, backend, 0).unwrap_or_else(|e| {
+                panic!("kill {kill_at}: compaction crash must leave the store openable: {e}")
+            });
+            assert_eq!(r.get_tensor("t").unwrap(), post_t, "kill {kill_at}");
+            assert_eq!(r.get_tensor("u").unwrap(), post_u, "kill {kill_at}");
+            assert!(
+                r.generation() == 1 || r.generation() == 2,
+                "kill {kill_at}: generation {} is neither source nor compacted",
+                r.generation()
+            );
+        }
+        crash_cleanup(&path);
+        if !killed {
+            break;
+        }
+        kill_at += 1;
+    }
+    assert!(kill_at > 4, "lattice must cover several boundaries, saw {kill_at}");
+}
+
+/// Sharded crash matrix: the MANIFEST flip is the commit point — a crash
+/// anywhere in a multi-shard append (replace one tensor, tombstone
+/// another) leaves either the complete old state or the complete new one,
+/// never a mix.
+#[test]
+fn crash_matrix_sharded_append_commits_atomically() {
+    let old_l0 = sample_tensor(3000, 0xBAD0);
+    let new_l0 = sample_tensor(5_000, 0xD1CE);
+    let policy = PartitionPolicy { substreams: 4, min_per_stream: 128 };
+    let mut kill_at = 0u64;
+    loop {
+        let dir = build_sharded(&format!("killshard{kill_at}"));
+        let plan = FaultPlan::new(FaultConfig {
+            kill_at: Some(kill_at),
+            ..FaultConfig::default()
+        });
+        let result = (|| -> Result<(), Error> {
+            let t = encode_tensor_with(
+                &policy,
+                BodyConfig::default(),
+                "m/layer000/weights",
+                8,
+                &new_l0,
+                TensorKind::Weights,
+                None,
+                0,
+            )?;
+            let mut a = ShardedStoreAppender::open_opts(&dir, Some(&plan))?;
+            a.append_encoded(t)?;
+            assert!(a.tombstone("m/layer001/weights"));
+            a.commit()?;
+            Ok(())
+        })();
+        let killed = plan.kill_fired();
+        if !killed {
+            result.unwrap_or_else(|e| panic!("clean run past boundary {kill_at}: {e}"));
+        }
+        let r = StoreHandle::open(&dir)
+            .unwrap_or_else(|e| panic!("kill {kill_at}: sharded store must reopen: {e}"));
+        if r.generation() == 0 {
+            assert!(killed, "only a killed run may stay on generation 0");
+            assert_eq!(r.get_tensor("m/layer000/weights").unwrap(), old_l0, "kill {kill_at}");
+            assert!(
+                r.meta("m/layer001/weights").is_ok(),
+                "kill {kill_at}: old state must keep the tombstoned tensor"
+            );
+        } else {
+            assert_eq!(r.get_tensor("m/layer000/weights").unwrap(), new_l0, "kill {kill_at}");
+            assert!(
+                r.meta("m/layer001/weights").is_err(),
+                "kill {kill_at}: new state must have dropped the tombstoned tensor"
+            );
+        }
+        // Untouched shards serve their tensors in either state.
+        assert_eq!(
+            r.get_tensor("m/layer002/weights").unwrap(),
+            sample_tensor(3000 + 700 * 2, 0xBAD2),
+            "kill {kill_at}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+        if !killed {
+            break;
+        }
+        kill_at += 1;
+    }
+    assert!(kill_at > 4, "lattice must cover several boundaries, saw {kill_at}");
+}
+
+/// Injected read faults surface as *transient* errors: within the budget
+/// the store-level retry loop absorbs them (both backends), and with an
+/// unbounded fault rate the typed `Transient` error reaches the caller.
+#[test]
+fn injected_read_faults_are_transient_and_bounded() {
+    let (path, _) = build_store("injreads");
+    let expect = sample_tensor(20_000, 0xF00D);
+    for backend in [Backend::Mmap, Backend::File] {
+        // Budget below the per-read retry allowance: every read eventually
+        // succeeds and the retries are visible in the stats.
+        let plan = FaultPlan::new(FaultConfig {
+            read_error_rate: 1.0,
+            max_injected_errors: 3,
+            ..FaultConfig::default()
+        });
+        let r = StoreHandle::open_with_plan(&path, backend, 0, Some(&plan)).unwrap();
+        assert_eq!(r.get_tensor("t").unwrap(), expect);
+        assert!(plan.injected_errors() >= 1, "{backend:?}: no faults injected");
+        assert!(
+            r.stats().transient_retries >= 1,
+            "{backend:?}: retries must show in the stats"
+        );
+    }
+    // Unbounded rate-1.0 injection exhausts the retry loop.
+    let plan = FaultPlan::new(FaultConfig { read_error_rate: 1.0, ..FaultConfig::default() });
+    let r = StoreHandle::open_with_plan(&path, Backend::File, 0, Some(&plan)).unwrap();
+    let err = r.get_chunk("t", 0).unwrap_err();
+    assert!(err.is_transient(), "expected a transient error, got {err}");
+    crash_cleanup(&path);
+}
+
+/// A corrupted generation-pointer sidecar falls back to the classic
+/// exact-EOF open (which still lands on the committed generation, because
+/// seal truncates the file to the committed length) and `verify`
+/// classifies the damage with its own exit code instead of bailing.
+#[test]
+fn corrupt_generation_pointer_falls_back_and_classifies() {
+    let (path, _) = build_store("badptr");
+    append_update(&path, None).unwrap();
+    let ptr = gen_pointer_path(&path);
+    let good = std::fs::read(&ptr).unwrap();
+    let mut bad = good.clone();
+    bad[4] ^= 0xFF;
+    std::fs::write(&ptr, &bad).unwrap();
+
+    let r = StoreHandle::open(&path).unwrap();
+    assert_eq!(r.generation(), 1, "classic fallback still lands on the committed gen");
+    assert_eq!(r.get_tensor("u").unwrap(), sample_tensor(4_000, 0xCAFE));
+
+    let report = verify_store(&path, Backend::Mmap);
+    assert!(!report.is_clean());
+    assert!(report
+        .issues
+        .iter()
+        .any(|i| i.class == CorruptionClass::GenerationPointer));
+    assert_eq!(report.worst_class().unwrap().exit_code(), 14);
+
+    // Restoring the pointer restores a clean report.
+    std::fs::write(&ptr, &good).unwrap();
+    assert!(verify_store(&path, Backend::Mmap).is_clean());
+    crash_cleanup(&path);
 }
 
 /// Encoding a value outside the table's coverage errors cleanly.

@@ -11,8 +11,12 @@ use std::time::Duration;
 use apack_repro::apack::tablegen::TensorKind;
 use apack_repro::coordinator::PartitionPolicy;
 use apack_repro::models::distributions::ValueProfile;
-use apack_repro::serving::{PrefetchConfig, Request, ServingConfig, ServingEngine, Ticket};
-use apack_repro::store::{Backend, ShardedStoreWriter, StoreHandle, StoreWriter};
+use apack_repro::serving::{
+    PrefetchConfig, Request, ServingConfig, ServingEngine, SingleFlight, Ticket,
+};
+use apack_repro::store::{
+    Backend, FaultConfig, FaultPlan, ShardedStoreWriter, StoreHandle, StoreWriter,
+};
 use apack_repro::util::Rng64;
 use apack_repro::Error;
 
@@ -352,6 +356,188 @@ fn prefetcher_warms_cleared_cache() {
     assert!(warmed, "prefetcher never warmed the cache in 400 rounds");
     drop(engine);
     cleanup(&path);
+}
+
+/// Regression (ISSUE 10): a leader's *transient* failure must not be
+/// shared with coalesced followers the way permanent corruption is —
+/// followers re-enter the flight table and retry independently, so one
+/// IO flake never fans out across a duplicate storm.
+#[test]
+fn transient_singleflight_failures_are_not_shared_with_followers() {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Barrier;
+    let flight = SingleFlight::new();
+    let attempts = AtomicU64::new(0);
+    let transient_failures = AtomicU64::new(0);
+    let oks = AtomicU64::new(0);
+    let barrier = Barrier::new(6);
+    std::thread::scope(|scope| {
+        for _ in 0..6 {
+            scope.spawn(|| {
+                barrier.wait();
+                let (res, _) = flight.run("t", 0, || {
+                    if attempts.fetch_add(1, Ordering::Relaxed) == 0 {
+                        // First leader: hold the flight until every peer
+                        // has coalesced onto it, then fail transiently.
+                        std::thread::sleep(Duration::from_millis(100));
+                        Err(Error::Transient("injected flake".into()))
+                    } else {
+                        Ok(Arc::new(vec![42u32]))
+                    }
+                });
+                match res {
+                    Err(e) => {
+                        assert!(e.is_transient(), "only the injected flake may surface");
+                        transient_failures.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Ok(v) => {
+                        assert_eq!(v[0], 42);
+                        oks.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+    assert_eq!(
+        transient_failures.load(Ordering::Relaxed),
+        1,
+        "the failing leader keeps its own error (its caller retries); nobody adopts it"
+    );
+    assert_eq!(oks.load(Ordering::Relaxed), 5, "every follower retried independently");
+    assert!(attempts.load(Ordering::Relaxed) >= 2, "a fresh decode must have run");
+}
+
+/// Injected transient IO faults first exhaust the store's own per-read
+/// retry budget; the serving engine's bounded retry loop then re-issues
+/// the decode and the request still answers bit-exactly. Transient
+/// failures surface as typed retries in the metrics, never as a final
+/// answer shared with coalesced followers.
+#[test]
+fn engine_retries_through_transient_store_faults() {
+    let (path, reference) = build_store("transient", 1, 20_000, 1);
+    let expect = &reference["t0"];
+    // Every payload read fails until the 6-fault budget runs dry: the
+    // store-level retry loop (1 try + 4 retries) exhausts on the first
+    // decode attempt and surfaces Error::Transient; the engine's own
+    // retry then drains the budget and succeeds.
+    let plan = FaultPlan::new(FaultConfig {
+        read_error_rate: 1.0,
+        max_injected_errors: 6,
+        ..FaultConfig::default()
+    });
+    let store = Arc::new(
+        StoreHandle::open_with_plan(&path, Backend::File, 0, Some(&plan)).unwrap(),
+    );
+    let engine = ServingEngine::start(
+        Arc::clone(&store),
+        ServingConfig {
+            workers: 2,
+            queue_depth: 32,
+            coalescing: true,
+            deadline: None,
+            prefetch: None,
+            slo: None,
+        },
+    )
+    .unwrap();
+    let covered = store.meta("t0").unwrap().chunk_value_range(0);
+    let got = engine.get_chunk("t0", 0).unwrap();
+    assert_eq!(got.as_slice(), &expect[covered.start as usize..covered.end as usize]);
+    let m = engine.metrics();
+    assert!(m.retries >= 1, "the engine must have re-issued the decode");
+    let stats = engine.stats();
+    assert!(stats.transient_retries >= 1, "store-level retries must surface in stats");
+    assert!(plan.injected_errors() >= 6, "the whole fault budget was consumed");
+    drop(engine);
+    cleanup(&path);
+}
+
+/// Online compaction mid-traffic: clients hammer the engine while the
+/// store compacts to a new generation underneath them. Every response
+/// stays bit-exact (requests pin a generation snapshot; the swap is a
+/// pointer flip), nothing is shed, and the handle lands on the advanced
+/// generation. Covers both store layouts.
+#[test]
+fn online_compaction_under_traffic_stays_bit_exact() {
+    for shards in [1usize, 3] {
+        let (path, reference) = build_store("livecompact", 2, 24_000, shards);
+        let store = Arc::new(StoreHandle::open(&path).unwrap());
+        let engine = ServingEngine::start(
+            Arc::clone(&store),
+            ServingConfig {
+                workers: 4,
+                queue_depth: 256,
+                coalescing: true,
+                deadline: None,
+                prefetch: None,
+                slo: None,
+            },
+        )
+        .unwrap();
+        let names: Vec<String> = reference.keys().cloned().collect();
+        let clients = 4usize;
+        let requests = 150usize;
+        std::thread::scope(|scope| {
+            for tid in 0..clients {
+                let engine = &engine;
+                let reference = &reference;
+                let names = &names;
+                scope.spawn(move || {
+                    let mut rng = Rng64::new(0xC0 + tid as u64);
+                    for i in 0..requests {
+                        let name = &names[rng.below(names.len() as u64) as usize];
+                        let expect = &reference[name];
+                        let meta = engine.store().meta(name).unwrap();
+                        if i % 2 == 0 {
+                            let ci = rng.below(meta.chunks.len() as u64) as usize;
+                            let covered = meta.chunk_value_range(ci);
+                            let got = engine.get_chunk(name, ci).unwrap();
+                            assert_eq!(
+                                got.as_slice(),
+                                &expect[covered.start as usize..covered.end as usize]
+                            );
+                        } else {
+                            let n = meta.n_values;
+                            let lo = rng.below(n);
+                            let span = 1 + rng.below((n - lo).min(4000));
+                            let got = engine.get_range(name, lo..lo + span).unwrap();
+                            assert_eq!(
+                                got.as_slice(),
+                                &expect[lo as usize..(lo + span) as usize]
+                            );
+                        }
+                    }
+                });
+            }
+            // Compact mid-storm: in-flight requests keep serving from
+            // their pinned generation while the rewrite lands.
+            let store = Arc::clone(&store);
+            scope.spawn(move || {
+                std::thread::sleep(Duration::from_millis(10));
+                let summary = store.compact_live().unwrap();
+                assert!(summary.generation >= 1, "compaction must advance the generation");
+            });
+        });
+        let m = engine.metrics();
+        let total = (clients * requests) as u64;
+        assert_eq!(m.submitted, total, "{shards} shard(s)");
+        assert_eq!(m.completed, total, "zero non-shed errors under live compaction");
+        assert_eq!(m.shed_total(), 0);
+        assert!(store.generation() >= 1, "handle reloaded onto the compacted generation");
+        // Post-compaction reads come from the new generation, still
+        // bit-exact.
+        for name in &names {
+            let expect = &reference[name];
+            let covered = store.meta(name).unwrap().chunk_value_range(0);
+            let got = engine.get_chunk(name, 0).unwrap();
+            assert_eq!(
+                got.as_slice(),
+                &expect[covered.start as usize..covered.end as usize]
+            );
+        }
+        drop(engine);
+        cleanup(&path);
+    }
 }
 
 /// Errors inside requests surface through tickets; the engine keeps

@@ -12,8 +12,9 @@ use apack_repro::eval::{EVAL_SEED, PROFILE_SAMPLES};
 use apack_repro::models::trace::ModelTrace;
 use apack_repro::models::zoo::all_models;
 use apack_repro::store::{
-    pack_model_zoo, pack_model_zoo_sharded, Backend, ShardedStoreWriter, StoreHandle,
-    StoreReader, StoreWriter,
+    compact_store, encode_tensor_with, pack_model_zoo, pack_model_zoo_sharded,
+    store_versions, verify_store, Backend, BodyConfig, ShardedStoreWriter, StoreAppender,
+    StoreHandle, StoreReader, StoreWriter,
 };
 use apack_repro::util::Rng64;
 
@@ -199,9 +200,9 @@ fn sharded_store_matches_single_file_bit_exact() {
             let sharded = StoreHandle::open_with(&dir, backend, 1 << 20).unwrap();
             assert_eq!(sharded.shard_count(), shards);
             assert_eq!(sharded.tensor_count(), single.tensor_count());
-            let mut names: Vec<&str> = sharded.tensor_names();
+            let mut names: Vec<String> = sharded.tensor_names();
             names.sort_unstable();
-            let mut expect_names: Vec<&str> = single.tensor_names();
+            let mut expect_names: Vec<String> = single.tensor_names();
             expect_names.sort_unstable();
             assert_eq!(names, expect_names, "N={shards}");
 
@@ -276,8 +277,8 @@ fn zoo_sharded_pack_matches_single_file() {
     assert_eq!(sharded.tensor_count(), single.tensor_count());
     for name in single.tensor_names() {
         assert_eq!(
-            sharded.get_tensor(name).unwrap(),
-            single.get_tensor(name).unwrap(),
+            sharded.get_tensor(&name).unwrap(),
+            single.get_tensor(&name).unwrap(),
             "{name}"
         );
     }
@@ -325,8 +326,8 @@ fn cross_version_zoo_matrix_bit_exact_and_overhead_bounded() {
     let r2 = StoreHandle::open(&v2_path).unwrap();
     for name in r1.tensor_names() {
         assert_eq!(
-            r1.get_tensor(name).unwrap(),
-            r2.get_tensor(name).unwrap(),
+            r1.get_tensor(&name).unwrap(),
+            r2.get_tensor(&name).unwrap(),
             "{name}: v1 and v2 stores must decode identically"
         );
     }
@@ -389,4 +390,91 @@ fn verify_and_footprint_consistency() {
     assert!(disk > meta.compressed_bytes());
     assert!(disk < meta.compressed_bytes() + 4096, "framing overhead is bounded");
     std::fs::remove_file(&path).ok();
+}
+
+/// Live mutation end-to-end through the public API: replace one tensor,
+/// add one, tombstone one — committed as a single new generation — read
+/// everything back bit-exactly, then compact and check the history
+/// collapses to one parentless generation with identical live content.
+#[test]
+fn live_append_and_compact_roundtrip() {
+    let path = temp_path("live");
+    let policy = PartitionPolicy { substreams: 8, min_per_stream: 128 };
+    let mut rng = Rng64::new(0x11FE);
+    let mut mk = |n: usize| -> Vec<u32> {
+        (0..n).map(|_| if rng.chance(0.5) { 0 } else { rng.below(256) as u32 }).collect()
+    };
+    let a0 = mk(12_000);
+    let b0 = mk(9_000);
+    let mut w = StoreWriter::create(&path, policy).unwrap();
+    w.add_tensor("a", 8, &a0, TensorKind::Weights).unwrap();
+    w.add_tensor("b", 8, &b0, TensorKind::Weights).unwrap();
+    w.finish().unwrap();
+
+    // Generation 1: replace "a", add "c", drop "b".
+    let a1 = mk(12_000);
+    let c1 = mk(6_000);
+    let encode = |name: &str, values: &[u32]| {
+        encode_tensor_with(
+            &policy,
+            BodyConfig::default(),
+            name,
+            8,
+            values,
+            TensorKind::Weights,
+            None,
+            0,
+        )
+        .unwrap()
+    };
+    let mut appender = StoreAppender::open(&path).unwrap();
+    assert_eq!(appender.generation(), 0);
+    appender.append_encoded(encode("a", &a1)).unwrap();
+    appender.append_encoded(encode("c", &c1)).unwrap();
+    assert!(appender.tombstone("b"), "b is live and must tombstone");
+    assert!(!appender.tombstone("b"), "double tombstone is a no-op");
+    let summary = appender.commit().unwrap();
+    assert_eq!(summary.generation, 1);
+    assert_eq!(summary.tensors, 2);
+    assert_eq!((summary.tensors_added, summary.tensors_replaced, summary.tombstoned), (1, 1, 1));
+
+    let check_live = |reader: &StoreReader| {
+        assert_eq!(reader.get_tensor("a").unwrap(), a1, "replacement version wins");
+        assert_eq!(reader.get_tensor("c").unwrap(), c1, "appended tensor readable");
+        assert!(reader.meta("b").is_err(), "tombstoned tensor gone from the index");
+    };
+    for backend in [Backend::Mmap, Backend::File] {
+        let reader = StoreReader::open_with(&path, backend, 0).unwrap();
+        assert_eq!(reader.generation(), 1, "{backend:?}");
+        check_live(&reader);
+    }
+    let chain = store_versions(&path).unwrap();
+    assert_eq!(chain.len(), 2, "both generations on disk before compaction");
+    assert!(verify_store(&path, Backend::Mmap).is_clean());
+
+    // Compaction drops the superseded "a" and the tombstoned "b" bytes
+    // and restarts the chain at a parentless generation.
+    let before = std::fs::metadata(&path).unwrap().len();
+    let compacted = compact_store(&path, None).unwrap();
+    assert_eq!(compacted.generation, 2);
+    assert_eq!(compacted.tensors, 2);
+    assert!(compacted.reclaimed() > 0, "dead versions must free bytes");
+    let after = std::fs::metadata(&path).unwrap().len();
+    assert!(after < before, "compaction must shrink the file: {after} vs {before}");
+    for backend in [Backend::Mmap, Backend::File] {
+        let reader = StoreReader::open_with(&path, backend, 0).unwrap();
+        assert_eq!(reader.generation(), 2, "{backend:?}");
+        check_live(&reader);
+    }
+    let chain = store_versions(&path).unwrap();
+    assert_eq!(chain.len(), 1, "compaction collapses the history");
+    assert_eq!(chain[0].generation, 2);
+    assert!(verify_store(&path, Backend::Mmap).is_clean());
+
+    // A handle compacts live and lands on the same content.
+    let handle = StoreHandle::open(&path).unwrap();
+    assert_eq!(handle.generation(), 2);
+    assert_eq!(handle.get_tensor("a").unwrap().as_slice(), &a1[..]);
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(format!("{}.gen", path.display())).ok();
 }
